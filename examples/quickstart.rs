@@ -1,0 +1,22 @@
+//! Quickstart: one edge draft server + the verification target on a single
+//! prompt — speculative decoding vs plain autoregressive decoding.
+//!
+//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart -- --engine mock
+//!
+//! Prints both generations (identical distribution by the lossless
+//! property) and the measured speedup.
+
+use goodspeed::cli::Args;
+use goodspeed::experiments::quickstart;
+
+fn main() {
+    goodspeed::util::logger::init();
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.insert(0, "quickstart".into());
+    let args = Args::parse(argv);
+    if let Err(e) = quickstart::main(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

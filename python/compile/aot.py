@@ -1,0 +1,162 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every graph takes the model parameters as *leading runtime inputs* (flat,
+in ``Config.param_names()`` order) so the Rust runtime uploads the trained
+weights once as PJRT device buffers and reuses them across calls —
+``artifacts/manifest.json`` records the exact parameter/input ordering,
+shapes, and file layout the Rust loader consumes.
+
+Run from ``python/``:  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import train
+from .model import (FAMILIES, MODELS, VERIFY_BUCKETS, VERIFY_K, VOCAB,
+                    Config, decode_step, prefill, unflatten_params,
+                    verify_graph)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _weight_specs(cfg: Config):
+    shapes = cfg.param_shapes()
+    return [jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+            for n in cfg.param_names()]
+
+
+def _cache_shape(cfg: Config):
+    return (cfg.n_layers, 2, cfg.max_seq, cfg.n_heads, cfg.d_head)
+
+
+def lower_prefill(cfg: Config):
+    def fn(*args):
+        params = unflatten_params(args[:-1], cfg)
+        tokens = args[-1]
+        return prefill(params, tokens, cfg)
+
+    specs = _weight_specs(cfg) + [
+        jax.ShapeDtypeStruct((1, cfg.max_seq), jnp.int32)]
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_step(cfg: Config):
+    def fn(*args):
+        params = unflatten_params(args[:-3], cfg)
+        tok, pos, cache = args[-3:]
+        return decode_step(params, tok, pos, cache, cfg)
+
+    specs = _weight_specs(cfg) + [
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct(_cache_shape(cfg), jnp.float32),
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_verify(cfg: Config, b: int, s: int):
+    """One (batch, seq) bucket of the verification graph."""
+    def fn(*args):
+        params = unflatten_params(args[:-4], cfg)
+        tokens, draft_tok, q_probs, pos0 = args[-4:]
+        return verify_graph(params, tokens, draft_tok, q_probs, pos0, cfg)
+
+    specs = _weight_specs(cfg) + [
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((b, VERIFY_K), jnp.int32),
+        jax.ShapeDtypeStruct((b, VERIFY_K, VOCAB), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def _write(out_dir, rel, text):
+    path = os.path.join(out_dir, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {rel} ({len(text) // 1024} KiB)")
+    return rel
+
+
+def model_entry(name, out_dir, hlo_dir="hlo"):
+    cfg = MODELS[name]
+    entry = {
+        **cfg.as_dict(),
+        "weights_npz": f"weights/{name}.npz",
+        "param_names": cfg.param_names(),
+        "param_shapes": {n: list(s) for n, s in cfg.param_shapes().items()},
+        "param_count": cfg.param_count(),
+        "cache_shape": list(_cache_shape(cfg)),
+        "prefill_hlo": _write(out_dir, f"{hlo_dir}/prefill_{name}.hlo.txt",
+                              to_hlo_text(lower_prefill(cfg))),
+        "step_hlo": _write(out_dir, f"{hlo_dir}/step_{name}.hlo.txt",
+                           to_hlo_text(lower_step(cfg))),
+    }
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--families", nargs="*", default=list(FAMILIES))
+    ap.add_argument("--skip-train", action="store_true",
+                    help="fail instead of training when weights are missing")
+    args = ap.parse_args()
+    out_dir = args.out
+    weights_dir = os.path.join(out_dir, "weights")
+
+    manifest = {
+        "max_seq": 256, "vocab": VOCAB,
+        "verify_b": max(b for b, _ in VERIFY_BUCKETS),
+        "verify_k": VERIFY_K,
+        "models": {}, "families": {},
+    }
+    wanted = set()
+    for fam in args.families:
+        wanted.add(FAMILIES[fam]["target"])
+        wanted.update(FAMILIES[fam]["drafts"])
+
+    for name in sorted(wanted):
+        if not args.skip_train:
+            train.train_model(name, weights_dir)
+        manifest["models"][name] = model_entry(name, out_dir)
+
+    for fam in args.families:
+        target = FAMILIES[fam]["target"]
+        cfg = MODELS[target]
+        buckets = []
+        for b, s in VERIFY_BUCKETS:
+            rel = _write(out_dir, f"hlo/verify_{fam}_b{b}_s{s}.hlo.txt",
+                         to_hlo_text(lower_verify(cfg, b, s)))
+            buckets.append({"batch": b, "seq": s, "k": VERIFY_K, "hlo": rel})
+        manifest["families"][fam] = {
+            "target": target,
+            "drafts": list(FAMILIES[fam]["drafts"]),
+            "verify_buckets": buckets,
+        }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] manifest -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

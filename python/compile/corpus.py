@@ -1,0 +1,114 @@
+"""Synthetic multi-domain corpus: the dataset substitution (DESIGN.md §2).
+
+The paper distributes eight public datasets (Alpaca, Awesome-ChatGPT-Prompts,
+CNN/DailyMail, OpenOrca, Chatbot Arena, GSM8K, SPIDER, HLE) across draft
+servers to induce heterogeneous, non-stationary acceptance rates. We replace
+them with eight seeded template generators whose *predictability* varies —
+highly regular templates (alpaca, spider) are easy for a small draft model to
+imitate (high α), while the long-tail domain (hle) is nearly incompressible
+(low α). The Rust workload module mirrors the same pools/templates so serving
+prompts are in-distribution for the build-time-trained models.
+"""
+
+import random
+
+VERBS = ["describe", "explain", "list", "sort", "count", "compare", "find",
+         "name"]
+NOUNS = ["river", "planet", "engine", "garden", "market", "signal", "bridge",
+         "forest"]
+ROLES = ["teacher", "pilot", "doctor", "coach", "writer", "farmer", "guide",
+         "judge"]
+PLACES = ["paris", "tokyo", "cairo", "lima", "oslo", "delhi", "rome", "quito"]
+DAYS = ["monday", "tuesday", "wednesday", "thursday", "friday", "saturday",
+        "sunday"]
+NAMES = ["tom", "ana", "raj", "mia", "leo", "zoe", "sam", "eva"]
+FIELDS = ["age", "price", "score", "size", "rank", "count", "level", "speed"]
+LIKES = ["music", "books", "games", "sports", "travel", "movies", "coding",
+         "art"]
+RARE = ["zyx", "qov", "vex", "juf", "wib", "kah", "pyx", "gud", "nix", "fiz",
+        "yam", "ojo", "ulu", "ebb", "awn", "irk"]
+
+DOMAINS = ["alpaca", "prompts", "cnn", "orca", "arena", "gsm8k", "spider",
+           "hle"]
+
+
+def _alpaca(r):
+    v, n = r.choice(VERBS), r.choice(NOUNS)
+    prompt = f"### Instruction: {v} the {n}. ### Response:"
+    completion = f" i will {v} the {n} now. the {n} is ready."
+    return prompt, completion
+
+
+def _prompts(r):
+    role, v = r.choice(ROLES), r.choice(VERBS)
+    prompt = f"act as a {role}."
+    completion = f" you are a {role} and you {v} things well every day."
+    return prompt, completion
+
+
+def _cnn(r):
+    n, p, d = r.choice(NOUNS), r.choice(PLACES), r.choice(DAYS)
+    prompt = f"breaking news: the {n} in {p} opened on {d}. summary:"
+    completion = f" the {n} in {p} opened {d}."
+    return prompt, completion
+
+
+def _orca(r):
+    a, b = r.choice(NOUNS), r.choice(NOUNS)
+    ans = "yes" if VERBS.index(r.choice(VERBS)) % 2 == 0 else "no"
+    prompt = f"question: is a {a} larger than a {b}? think step by step."
+    completion = f" a {a} and a {b} differ in size. the answer is {ans}."
+    return prompt, completion
+
+
+def _arena(r):
+    like = r.choice(LIKES)
+    prompt = "hello how are you today?"
+    completion = f" i am fine thank you. i like {like} very much. and you?"
+    return prompt, completion
+
+
+def _gsm8k(r):
+    name = r.choice(NAMES)
+    a, b = r.randint(1, 9), r.randint(1, 9)
+    prompt = f"q: {name} has {a} apples and buys {b} more. how many apples?"
+    completion = f" a: {name} has {a} plus {b} so {a + b} apples."
+    return prompt, completion
+
+
+def _spider(r):
+    n, f = r.choice(NOUNS), r.choice(FIELDS)
+    num = r.randint(10, 99)
+    prompt = f"q: list all {n}s with {f} above {num} | sql:"
+    completion = f" select * from {n}s where {f} > {num};"
+    return prompt, completion
+
+
+def _hle(r):
+    words = [r.choice(RARE) for _ in range(r.randint(6, 12))]
+    prompt = f"decode: {' '.join(words[:3])}"
+    completion = " " + " ".join(words[3:])
+    return prompt, completion
+
+
+GENERATORS = {
+    "alpaca": _alpaca, "prompts": _prompts, "cnn": _cnn, "orca": _orca,
+    "arena": _arena, "gsm8k": _gsm8k, "spider": _spider, "hle": _hle,
+}
+
+
+def sample(domain, rng):
+    """(prompt, completion) pair for one domain."""
+    return GENERATORS[domain](rng)
+
+
+def build_corpus(seed=0, docs_per_domain=600):
+    """Interleaved training text across all domains (ASCII bytes)."""
+    rng = random.Random(seed)
+    docs = []
+    for _ in range(docs_per_domain):
+        for d in DOMAINS:
+            p, c = sample(d, rng)
+            docs.append(p + c + "\n")
+    rng.shuffle(docs)
+    return "".join(docs).encode("ascii")

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for GoodSpeed (build-time only).
+
+Kernels are always lowered with ``interpret=True`` so they become plain HLO
+ops executable on the CPU PJRT client used by the Rust coordinator. Real-TPU
+performance is analyzed from the BlockSpec VMEM footprint in DESIGN.md.
+"""
+
+from .attention import flash_attention
+from .verify import verify_ratios
+from . import ref
+
+__all__ = ["flash_attention", "verify_ratios", "ref"]

@@ -1,0 +1,115 @@
+"""Tiled causal flash-attention Pallas kernel.
+
+This is the verification-server hot-spot: one batched forward over all
+clients' (prefix + draft) sequences per round. The kernel tiles the query
+rows into ``block_q`` chunks (the Pallas grid) and streams key/value tiles of
+``block_k`` rows through VMEM with an online-softmax accumulator — the TPU
+re-expression of the GPU threadblock schedule the paper's testbed relies on
+(see DESIGN.md §Hardware-Adaptation).
+
+VMEM footprint per grid step (f32):
+    (block_q·d  +  2·block_k·d  +  block_q·block_k  +  2·block_q·d) · 4 B
+which for the default (64, 64, d=32) is ~82 KiB — far under the ~16 MiB VMEM
+budget, leaving room to scale block_q/block_k up on real hardware.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, causal, scale):
+    """One grid step: all key/value tiles for one (batch, head, q-tile)."""
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [block_q, d]
+    seq_len = k_ref.shape[2]
+    d = q.shape[-1]
+
+    if causal:
+        # Tiles strictly above the diagonal contribute nothing; skip them.
+        num_k_tiles = jnp.minimum(
+            (qi * block_q + block_q + block_k - 1) // block_k,
+            seq_len // block_k,
+        )
+    else:
+        num_k_tiles = seq_len // block_k
+
+    q_ids = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(kt, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0, 0], (kt * block_k, 0), (block_k, d)
+        ).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0, 0], (kt * block_k, 0), (block_k, d)
+        ).astype(jnp.float32)
+        s = q @ k.T  # [block_q, block_k]
+        if causal:
+            k_ids = kt * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_ids[:, None] >= k_ids[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_k_tiles, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=64, block_k=64,
+                    interpret=True):
+    """Tiled attention over ``q, k, v`` of shape ``[B, H, S, D]``.
+
+    ``S`` must be divisible by both block sizes (pad upstream; padding rows
+    are harmless under the causal mask). Always lowered with
+    ``interpret=True`` so the CPU PJRT client can execute the resulting HLO.
+    """
+    b, h, s, d = q.shape
+    if k.shape != (b, h, s, d) or v.shape != (b, h, s, d):
+        raise ValueError(f"shape mismatch: {q.shape} {k.shape} {v.shape}")
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q != 0 or s % block_k != 0:
+        raise ValueError(f"seq len {s} not divisible by blocks {block_q},{block_k}")
+    scale = 1.0 / math.sqrt(d)
+    grid = (b, h, s // block_q)
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(block_q: int, block_k: int, d: int, itemsize: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (see module docstring)."""
+    return itemsize * (
+        block_q * d      # q tile
+        + 2 * block_k * d  # k, v tiles
+        + block_q * block_k  # score tile
+        + 2 * block_q * d  # accumulator + output
+        + 2 * block_q      # m, l vectors
+    )

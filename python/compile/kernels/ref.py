@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas outputs match
+these to tight tolerances. They are also used by the L2 model at *training*
+time (training never needs the tiled kernels; only exported inference graphs
+do).
+"""
+
+import math
+
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """Naive softmax attention over ``[B, H, S, D]``."""
+    b, h, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        ids = jnp.arange(s)
+        mask = ids[:, None] >= ids[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def verify_ref(tok, p, q):
+    """Oracle for the fused verify kernel (ratio + residual distribution)."""
+    p = p.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    pt = jnp.take_along_axis(p, tok[..., None], axis=-1)[..., 0]
+    qt = jnp.take_along_axis(q, tok[..., None], axis=-1)[..., 0]
+    ratio = jnp.minimum(1.0, pt / jnp.maximum(qt, EPS))
+    diff = jnp.maximum(p - q, 0.0)
+    s = jnp.sum(diff, axis=-1, keepdims=True)
+    resid = jnp.where(s > EPS, diff / jnp.maximum(s, EPS), p)
+    return ratio, resid

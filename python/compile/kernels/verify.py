@@ -1,0 +1,73 @@
+"""Fused speculative-verification Pallas kernel.
+
+Given the target model's probabilities ``p[B, K, V]`` at each client's draft
+positions, the draft models' proposal probabilities ``q[B, K, V]`` (shipped
+over the network, as the paper notes when accounting transmission cost), and
+the drafted token ids ``tok[B, K]``, one VMEM pass per (client, position)
+computes everything the Rust rejection sampler needs:
+
+* ``ratio[B, K]   = min(1, p[tok] / q[tok])``  — the acceptance ratio the
+  coordinator compares against ``r ~ U(0,1)`` and feeds into the
+  acceptance-rate estimator (paper eq. 3);
+* ``resid[B, K, V] = max(0, p - q) / Σ max(0, p - q)`` — the normalized
+  residual distribution the correction token is sampled from on rejection
+  (falls back to ``p`` when p ≤ q pointwise, i.e. the residual is empty).
+
+Fusing avoids materializing two extra [B, K, V] temporaries in HBM between
+ops — on the H100 testbed this is the paper's "verification" slice of wall
+time; on TPU the whole thing is one elementwise VMEM pass per grid cell.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-9
+
+
+def _verify_kernel(tok_ref, p_ref, q_ref, ratio_ref, resid_ref):
+    tok = tok_ref[0, 0]
+    p = p_ref[0, 0].astype(jnp.float32)  # [V]
+    q = q_ref[0, 0].astype(jnp.float32)  # [V]
+    pt = jnp.take(p, tok, axis=0)
+    qt = jnp.take(q, tok, axis=0)
+    ratio = jnp.minimum(1.0, pt / jnp.maximum(qt, EPS))
+    diff = jnp.maximum(p - q, 0.0)
+    s = jnp.sum(diff)
+    resid = jnp.where(s > EPS, diff / jnp.maximum(s, EPS), p)
+    ratio_ref[0, 0] = ratio.astype(ratio_ref.dtype)
+    resid_ref[0, 0] = resid.astype(resid_ref.dtype)
+
+
+def verify_ratios(tok, p, q, *, interpret=True):
+    """Fused acceptance ratios + residual distributions.
+
+    Args:
+      tok: int32 ``[B, K]`` drafted token ids.
+      p:   float   ``[B, K, V]`` target probabilities at the draft positions.
+      q:   float   ``[B, K, V]`` draft proposal probabilities.
+
+    Returns:
+      ``(ratio[B, K] f32, resid[B, K, V] f32)``.
+    """
+    b, k, v = p.shape
+    if q.shape != (b, k, v) or tok.shape != (b, k):
+        raise ValueError(f"shape mismatch: tok{tok.shape} p{p.shape} q{q.shape}")
+    return pl.pallas_call(
+        _verify_kernel,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, ki: (bi, ki)),
+            pl.BlockSpec((1, 1, v), lambda bi, ki: (bi, ki, 0)),
+            pl.BlockSpec((1, 1, v), lambda bi, ki: (bi, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda bi, ki: (bi, ki)),
+            pl.BlockSpec((1, 1, v), lambda bi, ki: (bi, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, v), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tok, p, q)

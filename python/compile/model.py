@@ -1,0 +1,285 @@
+"""Layer-2: the GoodSpeed model family as JAX graphs.
+
+Byte-level (V = 256) pre-norm transformer — RMSNorm, causal attention (the
+L1 Pallas flash kernel in exported graphs, the jnp oracle during training),
+SwiGLU MLP, learned positions, weight-tied LM head. All exported graphs have
+*static* shapes (MAX_SEQ padding; right-padding is harmless under the causal
+mask) and take the parameters as runtime inputs, so the Rust side uploads
+the trained weights once as PJRT device buffers and reuses them every call.
+
+Exported graph zoo (lowered by ``aot.py``):
+
+* ``verify``      — the verification server's per-round batched forward +
+                    fused ratio/residual kernel (paper steps ③–④).
+* ``prefill``     — prompt ingest on a draft (or target) server: one forward
+                    that also emits the KV cache.
+* ``decode_step`` — KV-cached single-token autoregressive step (drafting).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, verify_ratios
+from .kernels.ref import attention_ref
+
+VOCAB = 256
+MAX_SEQ = 256
+
+
+# --------------------------------------------------------------------------
+# Config and parameters
+# --------------------------------------------------------------------------
+
+class Config:
+    """Hyperparameters of one model (a "family member" in Table I terms)."""
+
+    def __init__(self, name, n_layers, d_model, n_heads, d_ff,
+                 vocab=VOCAB, max_seq=MAX_SEQ):
+        if d_model % n_heads != 0:
+            raise ValueError(f"{name}: d_model {d_model} % heads {n_heads}")
+        self.name = name
+        self.n_layers = n_layers
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.d_head = d_model // n_heads
+        self.d_ff = d_ff
+        self.vocab = vocab
+        self.max_seq = max_seq
+
+    def param_names(self):
+        """Stable flattening order shared with the Rust loader."""
+        names = ["emb", "pos"]
+        for l in range(self.n_layers):
+            names += [
+                f"l{l}.ln1", f"l{l}.wq", f"l{l}.wk", f"l{l}.wv", f"l{l}.wo",
+                f"l{l}.ln2", f"l{l}.w1", f"l{l}.w3", f"l{l}.w2",
+            ]
+        names.append("ln_f")
+        return names
+
+    def param_shapes(self):
+        d, f, v, s = self.d_model, self.d_ff, self.vocab, self.max_seq
+        shapes = {"emb": (v, d), "pos": (s, d), "ln_f": (d,)}
+        for l in range(self.n_layers):
+            shapes[f"l{l}.ln1"] = (d,)
+            shapes[f"l{l}.ln2"] = (d,)
+            for w in ("wq", "wk", "wv", "wo"):
+                shapes[f"l{l}.{w}"] = (d, d)
+            shapes[f"l{l}.w1"] = (d, f)
+            shapes[f"l{l}.w3"] = (d, f)
+            shapes[f"l{l}.w2"] = (f, d)
+        return shapes
+
+    def param_count(self):
+        return sum(int(math.prod(s)) for s in self.param_shapes().values())
+
+    def as_dict(self):
+        return {
+            "name": self.name, "n_layers": self.n_layers,
+            "d_model": self.d_model, "n_heads": self.n_heads,
+            "d_ff": self.d_ff, "vocab": self.vocab, "max_seq": self.max_seq,
+        }
+
+
+def init_params(rng, cfg: Config):
+    """He-style init, dict keyed by ``cfg.param_names()``."""
+    params = {}
+    for name, shape in cfg.param_shapes().items():
+        rng, sub = jax.random.split(rng)
+        if len(shape) == 1:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            scale = 1.0 / math.sqrt(shape[0])
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * scale
+    return params
+
+
+def flatten_params(params, cfg: Config):
+    return [params[n] for n in cfg.param_names()]
+
+
+def unflatten_params(flat, cfg: Config):
+    return dict(zip(cfg.param_names(), flat))
+
+
+# --------------------------------------------------------------------------
+# Forward graphs
+# --------------------------------------------------------------------------
+
+def _rmsnorm(x, w, eps=1e-6):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def _split_heads(x, cfg):
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def forward(params, tokens, cfg: Config, *, use_pallas=True,
+            return_cache=False, return_hidden=False, interpret=True):
+    """Full causal forward: ``tokens [B, S] i32 -> logits [B, S, V]``.
+
+    ``use_pallas=False`` switches to the jnp oracle attention (training
+    path). With ``return_cache=True`` also returns the stacked KV cache
+    ``[L, 2, B, S, H, dh]`` for prefill export. With ``return_hidden=True``
+    returns the final-norm hidden states ``[B, S, d]`` *instead of* logits —
+    the verify graph gathers its K+1 rows first and projects only those
+    through the (tied) vocabulary head, skipping ~(S−K)/S of the head
+    matmul + softmax (EXPERIMENTS.md §Perf).
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["emb"], tokens, axis=0) + params["pos"][None, :s]
+    cache = []
+    for l in range(cfg.n_layers):
+        h = _rmsnorm(x, params[f"l{l}.ln1"])
+        q = _split_heads(h @ params[f"l{l}.wq"], cfg)
+        k = _split_heads(h @ params[f"l{l}.wk"], cfg)
+        v = _split_heads(h @ params[f"l{l}.wv"], cfg)
+        if return_cache:
+            cache.append(jnp.stack([k, v]))  # [2, B, H, S, dh]
+        if use_pallas:
+            att = flash_attention(q, k, v, causal=True, interpret=interpret)
+        else:
+            att = attention_ref(q, k, v, causal=True)
+        x = x + _merge_heads(att) @ params[f"l{l}.wo"]
+        hm = _rmsnorm(x, params[f"l{l}.ln2"])
+        gate = jax.nn.silu(hm @ params[f"l{l}.w1"])
+        x = x + (gate * (hm @ params[f"l{l}.w3"])) @ params[f"l{l}.w2"]
+    x = _rmsnorm(x, params["ln_f"])
+    if return_hidden:
+        return x
+    logits = x @ params["emb"].T
+    if return_cache:
+        # -> [L, 2, B, S, H, dh] (B squeezed by prefill wrapper)
+        return logits, jnp.stack(cache).transpose(0, 1, 2, 4, 3, 5)
+    return logits
+
+
+def probs_from_logits(logits, temperature=1.0):
+    return jax.nn.softmax(logits / temperature, axis=-1)
+
+
+def prefill(params, tokens, cfg: Config, *, use_pallas=True, interpret=True):
+    """Prompt ingest: ``tokens [1, S] -> (cache [L, 2, S, H, dh], probs [S, V])``."""
+    logits, cache = forward(params, tokens, cfg, use_pallas=use_pallas,
+                            return_cache=True, interpret=interpret)
+    return cache[:, :, 0], probs_from_logits(logits[0])
+
+
+def decode_step(params, tok, pos, cache, cfg: Config):
+    """KV-cached single-token step.
+
+    Args:
+      tok:   ``[] i32`` token at sequence index ``pos``.
+      pos:   ``[] i32`` current index (< max_seq).
+      cache: ``[L, 2, S, H, dh] f32`` KV cache, valid rows ``< pos``.
+
+    Returns ``(probs [V], cache')`` where ``cache'`` has row ``pos`` filled.
+    """
+    s = cfg.max_seq
+    x = jnp.take(params["emb"], tok, axis=0) + jnp.take(params["pos"], pos, axis=0)
+    pos_ids = jnp.arange(s)
+    for l in range(cfg.n_layers):
+        h = _rmsnorm(x, params[f"l{l}.ln1"])
+        q = (h @ params[f"l{l}.wq"]).reshape(cfg.n_heads, cfg.d_head)
+        k = (h @ params[f"l{l}.wk"]).reshape(cfg.n_heads, cfg.d_head)
+        v = (h @ params[f"l{l}.wv"]).reshape(cfg.n_heads, cfg.d_head)
+        cache = jax.lax.dynamic_update_slice(
+            cache, k[None, None, None], (l, 0, pos, 0, 0))
+        cache = jax.lax.dynamic_update_slice(
+            cache, v[None, None, None], (l, 1, pos, 0, 0))
+        ks = cache[l, 0]  # [S, H, dh]
+        vs = cache[l, 1]
+        scores = jnp.einsum("hd,shd->hs", q, ks) / math.sqrt(cfg.d_head)
+        scores = jnp.where(pos_ids[None, :] <= pos, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("hs,shd->hd", w, vs).reshape(cfg.d_model)
+        x = x + att @ params[f"l{l}.wo"]
+        hm = _rmsnorm(x, params[f"l{l}.ln2"])
+        gate = jax.nn.silu(hm @ params[f"l{l}.w1"])
+        x = x + (gate * (hm @ params[f"l{l}.w3"])) @ params[f"l{l}.w2"]
+    x = _rmsnorm(x, params["ln_f"])
+    logits = x @ params["emb"].T
+    return probs_from_logits(logits), cache
+
+
+def verify_graph(params, tokens, draft_tok, q_probs, pos0, cfg: Config, *,
+                 use_pallas=True, interpret=True):
+    """The verification server's whole per-round compute, one fused graph.
+
+    Args:
+      tokens:    ``[B, S] i32`` per-client (prefix ++ draft) right-padded rows.
+      draft_tok: ``[B, K] i32`` the drafted token ids (row j = draft pos j).
+      q_probs:   ``[B, K, V] f32`` draft proposal distributions.
+      pos0:      ``[B] i32`` prefix length of each client (draft row j sits
+                 at sequence index ``pos0 + j``).
+
+    Returns:
+      ratio ``[B, K]``  — min(1, p/q) at each draft token,
+      resid ``[B, K, V]`` — normalized residual distributions,
+      bonus ``[B, V]``  — the target's distribution after all K drafts
+                          (sampled when every draft is accepted).
+    """
+    b, s = tokens.shape
+    k = draft_tok.shape[1]
+    hidden = forward(params, tokens, cfg, use_pallas=use_pallas,
+                     return_hidden=True, interpret=interpret)   # [B, S, d]
+    # Perf: gather the K+1 needed rows *before* the vocab head — row j
+    # (j < K) is the target prob for draft j (sequence index pos0+j, whose
+    # distribution lives at pos0+j−1); row K is the bonus distribution.
+    rows = pos0[:, None] + jnp.arange(k + 1)[None, :] - 1       # [B, K+1]
+    rows = jnp.clip(rows, 0, s - 1)
+    hid = jnp.take_along_axis(hidden, rows[:, :, None], axis=1)  # [B, K+1, d]
+    logits = hid @ params["emb"].T                               # [B, K+1, V]
+    probs = probs_from_logits(logits)
+    p_draft = probs[:, :k]                                       # [B, K, V]
+    bonus = probs[:, k]                                          # [B, V]
+    if use_pallas:
+        ratio, resid = verify_ratios(draft_tok, p_draft, q_probs,
+                                     interpret=interpret)
+    else:
+        from .kernels.ref import verify_ref
+        ratio, resid = verify_ref(draft_tok, p_draft, q_probs)
+    return ratio, resid, bonus
+
+
+# --------------------------------------------------------------------------
+# Model registry (the Table I substitution — see DESIGN.md §2)
+# --------------------------------------------------------------------------
+
+MODELS = {
+    # "Qwen3" family stand-ins
+    "qwen-target":    Config("qwen-target", n_layers=4, d_model=128, n_heads=4, d_ff=256),
+    "qwen-draft-06b": Config("qwen-draft-06b", n_layers=1, d_model=64, n_heads=2, d_ff=128),
+    "qwen-draft-17b": Config("qwen-draft-17b", n_layers=2, d_model=96, n_heads=3, d_ff=192),
+    # "Llama-3" family stand-ins
+    "llama-target":    Config("llama-target", n_layers=5, d_model=160, n_heads=5, d_ff=320),
+    "llama-draft-1b":  Config("llama-draft-1b", n_layers=2, d_model=64, n_heads=2, d_ff=128),
+    "llama-draft-3b":  Config("llama-draft-3b", n_layers=3, d_model=96, n_heads=3, d_ff=192),
+}
+
+FAMILIES = {
+    "qwen": {"target": "qwen-target",
+             "drafts": ["qwen-draft-06b", "qwen-draft-17b"]},
+    "llama": {"target": "llama-target",
+              "drafts": ["llama-draft-1b", "llama-draft-3b"]},
+}
+
+# Verification batch capacity (max clients per round) and max draft length
+# (covers every Table I budget C ≤ 28) baked into the verify artifact.
+VERIFY_B = 8
+VERIFY_K = 32
+
+# Shape buckets for the verify artifact: the coordinator picks the smallest
+# (batch, seq) bucket that fits the round — the classic serving-system
+# bucketing trick (vLLM/SGLang style) that roughly halves verification time
+# for short-prefix rounds on this testbed (EXPERIMENTS.md §Perf).
+VERIFY_BUCKETS = [(4, 128), (4, 256), (8, 128), (8, 256)]

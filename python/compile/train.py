@@ -1,0 +1,172 @@
+"""Build-time training of the tiny model zoo (DESIGN.md §2 substitution).
+
+Next-byte cross-entropy on the synthetic multi-domain corpus. Targets train
+longer than drafts, so drafts are genuinely *weaker but aligned* — exactly
+the statistical relationship (heterogeneous, domain-dependent acceptance
+rates α_i ∈ (0,1)) that GoodSpeed's scheduler exploits.
+
+Weights are cached in ``artifacts/weights/<model>.npz`` and training is
+skipped when the cache exists (``make artifacts`` stays incremental).
+Hand-rolled AdamW (no optax dependency in the image's jax install path).
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import MODELS, Config, forward, init_params
+
+SEQ = 128
+BATCH = 8
+# (ce_steps, distill_steps, lr). Targets use pure next-byte CE; drafts add
+# a distillation phase against their family target (KL(p_target‖q_draft)
+# on corpus windows) — the alignment that makes real draft models (e.g.
+# Qwen3-0.6B vs 14B) useful proposals. Bigger drafts distill longer →
+# higher acceptance rate, giving the heterogeneity the scheduler exploits.
+TRAIN_PLAN = {
+    "qwen-target": (500, 0, 3e-3),
+    "qwen-draft-06b": (200, 250, 3e-3),
+    "qwen-draft-17b": (250, 420, 3e-3),
+    "llama-target": (450, 0, 3e-3),
+    "llama-draft-1b": (200, 250, 3e-3),
+    "llama-draft-3b": (250, 420, 3e-3),
+}
+
+# Draft model → family target (distillation teacher).
+TEACHERS = {
+    "qwen-draft-06b": "qwen-target",
+    "qwen-draft-17b": "qwen-target",
+    "llama-draft-1b": "llama-target",
+    "llama-draft-3b": "llama-target",
+}
+
+
+def _batches(data, rng, batch, seq):
+    """Random contiguous windows of the corpus byte array."""
+    n = len(data) - seq - 1
+    while True:
+        idx = rng.integers(0, n, size=(batch,))
+        x = np.stack([data[i:i + seq] for i in idx])
+        y = np.stack([data[i + 1:i + seq + 1] for i in idx])
+        yield jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32)
+
+
+def loss_fn(params, x, y, cfg: Config):
+    logits = forward(params, x, cfg, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8,
+                 wd=1e-4):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"],
+                     grads)
+    mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+    new = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / (jnp.sqrt(v_) + eps) + wd * p),
+        params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def train_step(params, opt, x, y, cfg: Config, lr: float):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y, cfg)
+    params, opt = adamw_update(params, grads, opt, lr)
+    return params, opt, loss
+
+
+def distill_loss_fn(params, x, teacher_probs, cfg: Config):
+    """Cross-entropy against the teacher's full distributions."""
+    logq = jax.nn.log_softmax(forward(params, x, cfg, use_pallas=False), -1)
+    return -jnp.mean(jnp.sum(teacher_probs * logq, axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def distill_step(params, opt, x, teacher_probs, cfg: Config, lr: float):
+    loss, grads = jax.value_and_grad(distill_loss_fn)(params, x, teacher_probs, cfg)
+    params, opt = adamw_update(params, grads, opt, lr)
+    return params, opt, loss
+
+
+def train_model(name, out_dir, *, seed=0, verbose=True, force=False):
+    cfg = MODELS[name]
+    path = os.path.join(out_dir, f"{name}.npz")
+    if os.path.exists(path) and not force:
+        if verbose:
+            print(f"[train] {name}: cached at {path}")
+        return path
+    steps, distill_steps, lr = TRAIN_PLAN[name]
+    data = np.frombuffer(corpus.build_corpus(seed=seed), dtype=np.uint8)
+    rng = np.random.default_rng(seed + hash(name) % 2**31)
+    params = init_params(jax.random.PRNGKey(seed + 1), cfg)
+    opt = adamw_init(params)
+    gen = _batches(data, rng, BATCH, SEQ)
+    t0 = time.time()
+    loss = None
+    for step in range(steps):
+        x, y = next(gen)
+        params, opt, loss = train_step(params, opt, x, y, cfg, lr)
+        if verbose and (step % 100 == 0 or step == steps - 1):
+            print(f"[train] {name} step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    if distill_steps > 0:
+        teacher_name = TEACHERS[name]
+        # Teacher must already be trained (aot.py orders targets first).
+        teacher_path = train_model(teacher_name, out_dir, seed=seed,
+                                   verbose=verbose)
+        del teacher_path
+        tparams = load_params(teacher_name, out_dir)
+        tcfg = MODELS[teacher_name]
+        teacher_fwd = jax.jit(
+            lambda p, x: jax.nn.softmax(forward(p, x, tcfg, use_pallas=False),
+                                        -1))
+        opt = adamw_init(params)
+        for step in range(distill_steps):
+            x, _ = next(gen)
+            tp = teacher_fwd(tparams, x)
+            params, opt, loss = distill_step(params, opt, x, tp, cfg, lr)
+            if verbose and (step % 100 == 0 or step == distill_steps - 1):
+                print(f"[distill] {name} step {step:4d} "
+                      f"xent {float(loss):.4f} ({time.time() - t0:.1f}s)")
+    os.makedirs(out_dir, exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+    if verbose:
+        print(f"[train] {name}: {cfg.param_count()} params, "
+              f"final loss {float(loss):.4f} -> {path}")
+    return path
+
+
+def load_params(name, out_dir):
+    cfg = MODELS[name]
+    with np.load(os.path.join(out_dir, f"{name}.npz")) as z:
+        return {k: jnp.asarray(z[k]) for k in cfg.param_names()}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/weights")
+    ap.add_argument("--models", nargs="*", default=list(MODELS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    for name in args.models:
+        train_model(name, args.out, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""AOT lowering sanity: HLO text well-formed, parameter ordering stable."""
+
+import re
+
+from compile.aot import lower_prefill, lower_step, lower_verify, to_hlo_text
+from compile.model import MODELS, VERIFY_K
+
+CFG = MODELS["qwen-draft-06b"]
+
+
+def _entry_params(hlo: str):
+    """Ordered entry parameter types from the entry_computation_layout."""
+    assert "ENTRY" in hlo, "no ENTRY computation in HLO text"
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)->", hlo, re.S)
+    assert m, "no entry_computation_layout in HLO text"
+    sig = re.sub(r"/\*.*?\*/", "", m.group(1))
+    return re.findall(r"(?:f32|f16|bf16|s32|u32|s8|u8|pred)\[[0-9,]*\]", sig)
+
+
+def test_step_hlo_text():
+    hlo = to_hlo_text(lower_step(CFG))
+    assert "ENTRY" in hlo
+    params = _entry_params(hlo)
+    # weights + tok + pos + cache
+    assert len(params) == len(CFG.param_names()) + 3
+    # KV cache param present with the documented shape
+    l, s, h, dh = CFG.n_layers, CFG.max_seq, CFG.n_heads, CFG.d_head
+    assert f"f32[{l},2,{s},{h},{dh}]" in hlo
+
+
+def test_prefill_hlo_text():
+    hlo = to_hlo_text(lower_prefill(CFG))
+    params = _entry_params(hlo)
+    assert len(params) == len(CFG.param_names()) + 1
+    assert f"s32[1,{CFG.max_seq}]" in hlo
+
+
+def test_verify_hlo_buckets():
+    hlo = to_hlo_text(lower_verify(CFG, 4, 128))
+    params = _entry_params(hlo)
+    assert len(params) == len(CFG.param_names()) + 4
+    assert "s32[4,128]" in hlo
+    assert f"f32[4,{VERIFY_K},{CFG.vocab}]" in hlo
+
+
+def test_param_order_is_weights_then_inputs():
+    """The manifest contract: HLO params follow param_names() then inputs."""
+    hlo = to_hlo_text(lower_step(CFG))
+    params = _entry_params(hlo)
+    shapes = CFG.param_shapes()
+    for i, name in enumerate(CFG.param_names()):
+        dims = ",".join(str(d) for d in shapes[name])
+        assert f"f32[{dims}]" in params[i], (i, name, params[i])
+    assert "s32[]" in params[len(CFG.param_names())]

@@ -1,0 +1,53 @@
+"""Corpus/domain-generator invariants (the dataset substitution)."""
+
+import random
+
+import pytest
+
+from compile import corpus
+
+
+def test_domains_complete():
+    assert len(corpus.DOMAINS) == 8  # paper uses eight datasets
+    assert set(corpus.GENERATORS) == set(corpus.DOMAINS)
+
+
+def test_deterministic():
+    a = corpus.build_corpus(seed=7, docs_per_domain=5)
+    b = corpus.build_corpus(seed=7, docs_per_domain=5)
+    assert a == b
+    c = corpus.build_corpus(seed=8, docs_per_domain=5)
+    assert a != c
+
+
+def test_ascii_only():
+    data = corpus.build_corpus(seed=0, docs_per_domain=20)
+    assert all(b < 128 for b in data)
+
+
+@pytest.mark.parametrize("domain", corpus.DOMAINS)
+def test_samples_well_formed(domain):
+    rng = random.Random(0)
+    for _ in range(50):
+        prompt, completion = corpus.sample(domain, rng)
+        assert 5 <= len(prompt) <= 120
+        assert 1 <= len(completion) <= 120
+        assert prompt.isascii() and completion.isascii()
+
+
+def test_gsm8k_answers_correct():
+    rng = random.Random(3)
+    for _ in range(100):
+        prompt, completion = corpus.sample("gsm8k", rng)
+        # "q: NAME has A apples and buys B more..." -> " a: ... so A+B apples."
+        words = prompt.split()
+        a, b = int(words[3]), int(words[7])
+        assert f"so {a + b} apples" in completion
+
+
+def test_spider_sql_matches_prompt():
+    rng = random.Random(4)
+    for _ in range(50):
+        prompt, completion = corpus.sample("spider", rng)
+        noun = prompt.split()[3].rstrip("s")
+        assert f"from {noun}s" in completion

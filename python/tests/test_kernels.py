@@ -1,0 +1,149 @@
+"""L1 kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes/dtypes; every Pallas output must match ``ref.py``
+within tight tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, ref, verify_ratios
+from compile.kernels.attention import vmem_bytes
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(rng, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, s_blocks, d, causal, seed):
+    s = 64 * s_blocks
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, (b, h, s, d)) for _ in range(3))
+    out = flash_attention(q, k, v, causal=causal)
+    exp = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    block_q=st.sampled_from([16, 32, 64, 128]),
+    block_k=st.sampled_from([16, 32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_block_shape_invariance(block_q, block_k, seed):
+    """Output must not depend on the tiling schedule."""
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, (1, 2, 128, 16)) for _ in range(3))
+    out = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+    exp = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_bf16_tolerance():
+    rng = np.random.default_rng(0)
+    q, k, v = (_rand(rng, (1, 2, 64, 32), jnp.bfloat16) for _ in range(3))
+    out = flash_attention(q, k, v).astype(jnp.float32)
+    exp = ref.attention_ref(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(out, exp, atol=3e-2, rtol=3e-2)
+
+
+def test_attention_causality():
+    """Future keys must not influence earlier query rows."""
+    rng = np.random.default_rng(1)
+    q, k, v = (_rand(rng, (1, 1, 128, 16)) for _ in range(3))
+    out1 = flash_attention(q, k, v, causal=True)
+    k2 = k.at[:, :, 64:].set(999.0)
+    v2 = v.at[:, :, 64:].set(-999.0)
+    out2 = flash_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(out1[:, :, :64], out2[:, :, :64],
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_attention_extreme_logits_stable():
+    """Online softmax must survive large score magnitudes."""
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (1, 1, 64, 32), scale=30.0)
+    k = _rand(rng, (1, 1, 64, 32), scale=30.0)
+    v = _rand(rng, (1, 1, 64, 32))
+    out = flash_attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    exp = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, exp, atol=1e-4, rtol=1e-4)
+
+
+def test_attention_rejects_bad_shapes():
+    q = jnp.zeros((1, 1, 100, 16))  # 100 not divisible by 64
+    with pytest.raises(ValueError):
+        flash_attention(q, q, q)
+    with pytest.raises(ValueError):
+        flash_attention(jnp.zeros((1, 1, 64, 16)), jnp.zeros((1, 2, 64, 16)),
+                        jnp.zeros((1, 1, 64, 16)))
+
+
+def test_vmem_budget_default_blocks():
+    """Default tiling must fit TPU VMEM with large headroom (DESIGN.md §8)."""
+    assert vmem_bytes(64, 64, 64) < 16 * 1024 * 1024 // 8
+
+
+# ------------------------------------------------------------------- verify
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 8),
+    k=st.integers(1, 32),
+    v=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_verify_matches_ref(b, k, v, seed):
+    rng = np.random.default_rng(seed)
+    p = jax.nn.softmax(_rand(rng, (b, k, v), scale=2.0), axis=-1)
+    q = jax.nn.softmax(_rand(rng, (b, k, v), scale=2.0), axis=-1)
+    tok = jnp.asarray(rng.integers(0, v, (b, k)), jnp.int32)
+    r1, res1 = verify_ratios(tok, p, q)
+    r2, res2 = ref.verify_ref(tok, p, q)
+    np.testing.assert_allclose(r1, r2, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(res1, res2, atol=1e-6, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_verify_invariants(seed):
+    """Ratios in [0,1]; residuals are distributions; p==q => ratio 1."""
+    rng = np.random.default_rng(seed)
+    p = jax.nn.softmax(_rand(rng, (2, 4, 64), scale=3.0), axis=-1)
+    q = jax.nn.softmax(_rand(rng, (2, 4, 64), scale=3.0), axis=-1)
+    tok = jnp.asarray(rng.integers(0, 64, (2, 4)), jnp.int32)
+    ratio, resid = verify_ratios(tok, p, q)
+    assert bool(jnp.all((ratio >= 0.0) & (ratio <= 1.0)))
+    np.testing.assert_allclose(jnp.sum(resid, -1), 1.0, atol=1e-5)
+    assert bool(jnp.all(resid >= 0.0))
+    r_eq, res_eq = verify_ratios(tok, p, p)
+    np.testing.assert_allclose(r_eq, 1.0, atol=1e-6)
+    # Empty residual (p == q) falls back to p.
+    np.testing.assert_allclose(res_eq, p, atol=1e-6)
+
+
+def test_verify_residual_zeroes_draft_support():
+    """Residual mass only where p > q (rejection-sampling correctness)."""
+    p = jnp.asarray([[[0.7, 0.2, 0.1]]], jnp.float32)
+    q = jnp.asarray([[[0.1, 0.6, 0.3]]], jnp.float32)
+    tok = jnp.asarray([[1]], jnp.int32)
+    ratio, resid = verify_ratios(tok, p, q)
+    np.testing.assert_allclose(ratio[0, 0], 0.2 / 0.6, atol=1e-6)
+    np.testing.assert_allclose(resid[0, 0], [1.0, 0.0, 0.0], atol=1e-6)

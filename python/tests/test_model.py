@@ -1,0 +1,144 @@
+"""L2 model graph invariants: causality, prefill/step/verify consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (FAMILIES, MODELS, VERIFY_K, Config, decode_step,
+                           forward, init_params, prefill, probs_from_logits,
+                           unflatten_params, flatten_params, verify_graph)
+
+CFG = MODELS["qwen-draft-06b"]  # smallest: fastest to test
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _tokens(rng, b, n, s=None):
+    s = s or CFG.max_seq
+    t = np.zeros((b, s), np.int32)
+    for i in range(b):
+        t[i, :n] = rng.integers(32, 120, n)
+    return jnp.asarray(t)
+
+
+def test_param_flattening_roundtrip():
+    flat = flatten_params(PARAMS, CFG)
+    back = unflatten_params(flat, CFG)
+    assert set(back) == set(PARAMS)
+    for k in PARAMS:
+        assert back[k] is PARAMS[k]
+
+
+def test_param_shapes_consistent():
+    for name, cfg in MODELS.items():
+        shapes = cfg.param_shapes()
+        assert list(shapes) == cfg.param_names() or set(shapes) == set(
+            cfg.param_names())
+        assert cfg.param_count() == sum(
+            int(np.prod(s)) for s in shapes.values())
+
+
+def test_forward_shapes():
+    rng = np.random.default_rng(0)
+    logits = forward(PARAMS, _tokens(rng, 2, 10), CFG, use_pallas=False)
+    assert logits.shape == (2, CFG.max_seq, CFG.vocab)
+
+
+def test_forward_pallas_matches_ref_attention():
+    """The exported (pallas) graph equals the training (jnp) graph."""
+    rng = np.random.default_rng(1)
+    toks = _tokens(rng, 2, 40)
+    a = forward(PARAMS, toks, CFG, use_pallas=True)
+    b = forward(PARAMS, toks, CFG, use_pallas=False)
+    np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-4)
+
+
+def test_causality():
+    """Changing token t must not change logits at positions < t."""
+    rng = np.random.default_rng(2)
+    toks = _tokens(rng, 1, 50)
+    base = forward(PARAMS, toks, CFG, use_pallas=False)
+    mut = toks.at[0, 30].set(77)
+    out = forward(PARAMS, mut, CFG, use_pallas=False)
+    np.testing.assert_allclose(base[0, :29], out[0, :29], atol=1e-5)
+    assert float(jnp.max(jnp.abs(base[0, 30:50] - out[0, 30:50]))) > 1e-6
+
+
+@settings(max_examples=5, deadline=None)
+@given(plen=st.integers(2, 60), nsteps=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_prefill_then_steps_equals_full_forward(plen, nsteps, seed):
+    """KV-cached decode must reproduce the full-forward distribution."""
+    rng = np.random.default_rng(seed)
+    toks = np.asarray(_tokens(rng, 1, plen))
+    cache, probs = prefill(PARAMS, jnp.asarray(toks), CFG, use_pallas=False)
+    nxt = int(jnp.argmax(probs[plen - 1]))
+    pos = plen
+    seq = toks.copy()
+    pr = None
+    for _ in range(nsteps):
+        seq[0, pos] = nxt
+        pr, cache = decode_step(PARAMS, jnp.int32(nxt), jnp.int32(pos),
+                                cache, CFG)
+        pos += 1
+        nxt = int(jnp.argmax(pr))
+    full = probs_from_logits(
+        forward(PARAMS, jnp.asarray(seq), CFG, use_pallas=False))
+    np.testing.assert_allclose(pr, full[0, pos - 1], atol=1e-4, rtol=1e-3)
+
+
+def test_verify_graph_matches_manual_pipeline():
+    tcfg = MODELS["qwen-target"]
+    tparams = init_params(jax.random.PRNGKey(3), tcfg)
+    rng = np.random.default_rng(3)
+    B, K, V, S = 4, VERIFY_K, tcfg.vocab, 128
+    toks = np.zeros((B, S), np.int32)
+    pos0 = np.zeros(B, np.int32)
+    dtok = np.zeros((B, K), np.int32)
+    qp = np.asarray(jax.nn.softmax(
+        jnp.asarray(rng.standard_normal((B, K, V)), jnp.float32), -1))
+    for b in range(B):
+        n = rng.integers(5, 40)
+        pos0[b] = n
+        toks[b, :n + K] = rng.integers(32, 120, n + K)
+        dtok[b] = toks[b, n:n + K]
+    ratio, resid, bonus = verify_graph(
+        tparams, jnp.asarray(toks), jnp.asarray(dtok), jnp.asarray(qp),
+        jnp.asarray(pos0), tcfg, use_pallas=True)
+    # manual: full forward, gather, ratio
+    probs = probs_from_logits(
+        forward(tparams, jnp.asarray(toks), tcfg, use_pallas=False))
+    for b in [0, B - 1]:
+        n = int(pos0[b])
+        for j in [0, K - 1]:
+            pt = float(probs[b, n + j - 1, dtok[b, j]])
+            qt = float(qp[b, j, dtok[b, j]])
+            exp = min(1.0, pt / max(qt, 1e-9))
+            np.testing.assert_allclose(float(ratio[b, j]), exp, atol=5e-4,
+                                       rtol=5e-3)
+        np.testing.assert_allclose(bonus[b], probs[b, n + K - 1], atol=5e-4)
+    np.testing.assert_allclose(jnp.sum(resid, -1), 1.0, atol=1e-4)
+
+
+def test_verify_graph_bucket_shapes():
+    """Verify graph works at every (B, S) bucket the manifest exports."""
+    from compile.model import VERIFY_BUCKETS
+    tcfg = MODELS["qwen-draft-06b"]  # cheap stand-in, same graph code
+    tparams = PARAMS
+    rng = np.random.default_rng(4)
+    for b, s in VERIFY_BUCKETS:
+        toks = _tokens(rng, b, 20, s)
+        dtok = jnp.asarray(rng.integers(32, 120, (b, VERIFY_K)), jnp.int32)
+        qp = jnp.full((b, VERIFY_K, tcfg.vocab), 1.0 / tcfg.vocab, jnp.float32)
+        pos0 = jnp.full((b,), 10, jnp.int32)
+        ratio, resid, bonus = verify_graph(tparams, toks, dtok, qp, pos0,
+                                           tcfg, use_pallas=False)
+        assert ratio.shape == (b, VERIFY_K)
+        assert resid.shape == (b, VERIFY_K, tcfg.vocab)
+        assert bonus.shape == (b, tcfg.vocab)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        Config("bad", n_layers=1, d_model=100, n_heads=3, d_ff=64)

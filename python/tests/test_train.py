@@ -1,0 +1,81 @@
+"""Training-loop smoke tests (build-time substrate)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus
+from compile.model import MODELS, init_params
+from compile.train import (TRAIN_PLAN, adamw_init, adamw_update, loss_fn,
+                           train_step)
+
+CFG = MODELS["qwen-draft-06b"]
+
+
+def test_plan_covers_all_models():
+    assert set(TRAIN_PLAN) == set(MODELS)
+    for name, (steps, distill_steps, lr) in TRAIN_PLAN.items():
+        assert steps > 0 and 0 < lr < 1
+        assert distill_steps >= 0
+    # drafts must CE-train strictly less than their family target…
+    assert TRAIN_PLAN["qwen-draft-06b"][0] < TRAIN_PLAN["qwen-target"][0]
+    assert TRAIN_PLAN["llama-draft-1b"][0] < TRAIN_PLAN["llama-target"][0]
+    # …targets never distill, drafts always do
+    from compile.train import TEACHERS
+    for name, (_, distill_steps, _) in TRAIN_PLAN.items():
+        if "target" in name:
+            assert distill_steps == 0
+        else:
+            assert distill_steps > 0
+            assert TEACHERS[name] in MODELS
+    # bigger drafts distill longer (higher α by construction)
+    assert TRAIN_PLAN["qwen-draft-17b"][1] > TRAIN_PLAN["qwen-draft-06b"][1]
+
+
+def test_distill_step_reduces_teacher_xent():
+    import jax.numpy as jnp
+    from compile.train import distill_step, distill_loss_fn
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(32, 120, (4, 64)), jnp.int32)
+    # synthetic "teacher": peaked distributions
+    t = jax.nn.softmax(
+        jnp.asarray(rng.standard_normal((4, 64, 256)) * 4.0, jnp.float32), -1)
+    params = init_params(jax.random.PRNGKey(2), CFG)
+    opt = adamw_init(params)
+    first = float(distill_loss_fn(params, x, t, CFG))
+    loss = None
+    for _ in range(25):
+        params, opt, loss = distill_step(params, opt, x, t, CFG, 3e-3)
+    assert float(loss) < first - 0.3, (first, float(loss))
+
+
+def test_loss_decreases_on_fixed_batch():
+    data = np.frombuffer(corpus.build_corpus(seed=0, docs_per_domain=10),
+                         dtype=np.uint8)
+    x = jnp.asarray(data[:4 * 64].reshape(4, 64), jnp.int32)
+    y = jnp.asarray(data[1:4 * 64 + 1].reshape(4, 64), jnp.int32)
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    opt = adamw_init(params)
+    first = float(loss_fn(params, x, y, CFG))
+    loss = None
+    for _ in range(30):
+        params, opt, loss = train_step(params, opt, x, y, CFG, 3e-3)
+    assert float(loss) < first - 0.5, (first, float(loss))
+
+
+def test_adamw_moves_toward_gradient():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.asarray([1.0, -1.0, 0.0, 2.0])}
+    state = adamw_init(params)
+    new, state = adamw_update(params, grads, state, lr=0.1, wd=0.0)
+    step = np.asarray(new["w"] - params["w"])
+    assert step[0] < 0 and step[1] > 0 and abs(step[2]) < 1e-6 and step[3] < 0
+
+
+def test_initial_loss_near_uniform():
+    params = init_params(jax.random.PRNGKey(1), CFG)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 255, (2, 32)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 255, (2, 32)), jnp.int32)
+    loss = float(loss_fn(params, x, y, CFG))
+    assert abs(loss - np.log(256)) < 1.5

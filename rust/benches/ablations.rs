@@ -1,0 +1,21 @@
+//! Ablation benches: η/β sensitivity, capacity sweep, greedy-vs-DP
+//! scheduler timing, and the log-vs-linear utility contrast. Writes
+//! `results/ablation_*.csv`.
+
+use goodspeed::cli::Args;
+use goodspeed::experiments::ablation;
+
+fn main() {
+    goodspeed::util::logger::init();
+    let args = Args::parse(vec![
+        "ablation".to_string(),
+        "--rounds".into(),
+        "600".into(),
+        "--out".into(),
+        "results".into(),
+    ]);
+    if let Err(e) = ablation::main(&args) {
+        eprintln!("ablation bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,45 @@
+//! End-to-end round benchmark: full Algorithm 1 rounds through the
+//! coordinator + draft actors on the mock engine (isolates L3 coordination
+//! cost from XLA compute) over both transports.
+
+use std::time::Instant;
+
+use goodspeed::configsys::{Policy, Scenario};
+use goodspeed::coordinator::{run_serving, RunConfig, Transport};
+use goodspeed::experiments::mock_engine;
+
+fn run(transport: Transport, clients: usize, rounds: u64, network: bool) -> (f64, f64) {
+    let mut s = Scenario::preset("qwen-8c-150").unwrap();
+    s.num_clients = clients;
+    s.rounds = rounds;
+    s.links = Scenario::default_links(clients, s.seed);
+    let cfg = RunConfig {
+        scenario: s,
+        policy: Policy::GoodSpeed,
+        transport,
+        simulate_network: network,
+    };
+    let t0 = Instant::now();
+    let out = run_serving(&cfg, mock_engine()).expect("run");
+    let wall = t0.elapsed().as_secs_f64();
+    (wall / rounds as f64 * 1e3, out.summary.total_tokens / wall)
+}
+
+fn main() {
+    println!("== e2e round bench (mock engine: pure L3 coordination) ==");
+    println!(
+        "{:<9} {:>8} {:>8} {:>12} {:>12}",
+        "transport", "clients", "netsim", "ms/round", "tok/s"
+    );
+    for (transport, name) in [(Transport::Channel, "channel"), (Transport::Tcp, "tcp")] {
+        for clients in [2usize, 8] {
+            for network in [false, true] {
+                let (ms, tps) = run(transport, clients, 150, network);
+                println!(
+                    "{name:<9} {clients:>8} {:>8} {ms:>12.3} {tps:>12.0}",
+                    if network { "on" } else { "off" }
+                );
+            }
+        }
+    }
+}

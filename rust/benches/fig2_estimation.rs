@@ -1,0 +1,26 @@
+//! Fig 2 regeneration bench: goodput-estimation fidelity over the full
+//! stack. Writes `results/fig2_*.csv` + `.svg` and prints the alignment
+//! metrics (mean |est − real| and ±1σ band coverage).
+//!
+//! Engine: XLA when artifacts exist, mock otherwise. Override rounds with
+//! GOODSPEED_BENCH_ROUNDS.
+
+use goodspeed::cli::Args;
+use goodspeed::experiments::fig2;
+
+fn main() {
+    goodspeed::util::logger::init();
+    let rounds =
+        std::env::var("GOODSPEED_BENCH_ROUNDS").ok().unwrap_or_else(|| "100".into());
+    let args = Args::parse(vec![
+        "fig2".to_string(),
+        "--rounds".into(),
+        rounds,
+        "--out".into(),
+        "results".into(),
+    ]);
+    if let Err(e) = fig2::main(&args) {
+        eprintln!("fig2 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,23 @@
+//! Fig 3 regeneration bench: receive/verify/send wall-time decomposition
+//! for GoodSpeed vs Fixed-S vs Random-S on both families, with the
+//! simulated edge network on. Writes `results/fig3_time_distribution.csv`.
+
+use goodspeed::cli::Args;
+use goodspeed::experiments::fig3;
+
+fn main() {
+    goodspeed::util::logger::init();
+    let rounds =
+        std::env::var("GOODSPEED_BENCH_ROUNDS").ok().unwrap_or_else(|| "50".into());
+    let args = Args::parse(vec![
+        "fig3".to_string(),
+        "--rounds".into(),
+        rounds,
+        "--out".into(),
+        "results".into(),
+    ]);
+    if let Err(e) = fig3::main(&args) {
+        eprintln!("fig3 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

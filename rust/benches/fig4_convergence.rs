@@ -1,0 +1,22 @@
+//! Fig 4 regeneration bench: U(x̄(T)) convergence over 600 iterations for
+//! all policies × families × client counts (analytic simulator — the same
+//! estimators/scheduler code as the real stack). Writes
+//! `results/fig4_convergence.csv` and per-panel SVGs.
+
+use goodspeed::cli::Args;
+use goodspeed::experiments::fig4;
+
+fn main() {
+    goodspeed::util::logger::init();
+    let args = Args::parse(vec![
+        "fig4".to_string(),
+        "--rounds".into(),
+        "600".into(),
+        "--out".into(),
+        "results".into(),
+    ]);
+    if let Err(e) = fig4::main(&args) {
+        eprintln!("fig4 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,21 @@
+//! Theorem 1 validation bench: β-sweep of the stationary distance
+//! ‖X^β − x*‖ (must shrink as β → 0) plus fluid-path attraction checks.
+//! Writes `results/fluid_beta_sweep.csv`.
+
+use goodspeed::cli::Args;
+use goodspeed::experiments::fluid_exp;
+
+fn main() {
+    goodspeed::util::logger::init();
+    let args = Args::parse(vec![
+        "fluid".to_string(),
+        "--rounds".into(),
+        "4000".into(),
+        "--out".into(),
+        "results".into(),
+    ]);
+    if let Err(e) = fluid_exp::main(&args) {
+        eprintln!("fluid bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,83 @@
+//! Runtime-layer benchmark: PJRT artifact compile time and per-call
+//! latency of every exported graph — draft prefill, KV-cached draft step,
+//! and the bucketed verification forward. This is the layer the paper's
+//! "verification time" (Fig 3) lives in; the bucket rows quantify the
+//! shape-bucketing optimization (EXPERIMENTS.md §Perf).
+//!
+//! Skips cleanly when artifacts are absent.
+
+use std::time::Instant;
+
+use goodspeed::runtime::engine::{EngineFactory, VerifyRequest};
+use goodspeed::runtime::{default_artifacts_dir, Manifest, XlaEngineFactory};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("runtime_xla: artifacts missing (run `make artifacts`) — skipping");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir)?;
+    let f = XlaEngineFactory::new(manifest);
+    println!("== XLA runtime bench (CPU PJRT) ==");
+
+    for model in ["qwen-draft-06b", "qwen-draft-17b", "qwen-target"] {
+        let t0 = Instant::now();
+        let mut d = f.make_drafter(model)?;
+        let setup = t0.elapsed().as_secs_f64();
+        let prompt = goodspeed::tokenizer::encode(
+            "### Instruction: describe the garden. ### Response:",
+        );
+        let t1 = Instant::now();
+        let _ = d.prefill(&prompt)?;
+        let mut dist;
+        let prefill_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let reps = 40;
+        let t2 = Instant::now();
+        let mut tok = b' ';
+        for _ in 0..reps {
+            dist = d.step(tok)?;
+            tok = dist
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u8;
+        }
+        let step_ms = t2.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!(
+            "{model:<16} setup {setup:>6.2}s  prefill {prefill_ms:>7.2}ms  step {step_ms:>6.2}ms/tok"
+        );
+    }
+
+    println!("\n-- verify buckets (batch fwd + fused ratio/residual kernel) --");
+    let mut ver = f.make_verifier("qwen")?;
+    let k = f.verify_k();
+    let v = f.vocab();
+    for (b, s) in ver.buckets() {
+        let req = VerifyRequest {
+            tokens: vec![65i32; b * s],
+            batch: b,
+            seq: s,
+            draft_tok: vec![65i32; b * k],
+            q_probs: vec![1.0 / v as f32; b * k * v],
+            pos0: vec![40i32; b],
+            k,
+            vocab: v,
+        };
+        let t0 = Instant::now();
+        ver.verify(&req)?; // includes lazy compile
+        let first_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let reps = 6;
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            ver.verify(&req)?;
+        }
+        let ms = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!(
+            "verify qwen b={b} s={s:<4} compile+first {first_ms:>8.1}ms  steady {ms:>8.1}ms  ({:.1} tok verified/s)",
+            (b * k) as f64 / (ms / 1e3)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Microbenchmark: the gradient scheduler hot path (GOODSPEED-SCHED is
+//! solved once per round on the verification server — it must be invisible
+//! next to the verification forward).
+//!
+//! Reports greedy-solver ns/op across (N, C) sizes, the exact-DP oracle
+//! for contrast, and estimator-update ns/op.
+
+use std::time::Instant;
+
+use goodspeed::configsys::Smoothing;
+use goodspeed::sched::gradient::{objective, solve_dp, solve_greedy, AllocInput};
+use goodspeed::sched::Estimators;
+use goodspeed::util::Rng;
+
+fn bench<F: FnMut()>(label: &str, iters: u64, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{label:<44} {ns:>12.0} ns/op");
+    ns
+}
+
+fn main() {
+    println!("== scheduler microbench ==");
+    let mut rng = Rng::new(1);
+    for (n, c) in [(4usize, 24usize), (8, 20), (8, 28), (64, 256), (256, 1024), (1024, 4096)] {
+        let weights: Vec<f64> = (0..n).map(|_| rng.f64() + 0.05).collect();
+        let alphas: Vec<f64> = (0..n).map(|_| rng.f64() * 0.95).collect();
+        let caps = vec![32usize; n];
+        let input =
+            AllocInput { weights: &weights, alphas: &alphas, capacity: c, max_per_client: &caps };
+        let mut sink = 0usize;
+        bench(&format!("greedy  N={n:<5} C={c}"), 20_000.min(2_000_000 / c as u64), || {
+            sink += solve_greedy(&input).iter().sum::<usize>();
+        });
+        if n <= 64 {
+            bench(&format!("dp      N={n:<5} C={c}"), 200, || {
+                sink += solve_dp(&input).iter().sum::<usize>();
+            });
+            let g = objective(&input, &solve_greedy(&input));
+            let d = objective(&input, &solve_dp(&input));
+            assert!((g - d).abs() < 1e-7 * (1.0 + d.abs()), "greedy suboptimal!");
+        }
+        std::hint::black_box(sink);
+    }
+
+    println!("\n== estimator update (eq. 3–4) ==");
+    for n in [8usize, 64, 1024] {
+        let mut est = Estimators::new(n, Smoothing::Fixed(0.3), Smoothing::Fixed(0.5));
+        let obs: Vec<Option<(f64, f64)>> = (0..n).map(|i| Some((0.5, i as f64))).collect();
+        bench(&format!("estimators.update_round N={n}"), 100_000, || {
+            est.update_round(&obs);
+        });
+    }
+}

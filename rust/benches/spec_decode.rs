@@ -1,0 +1,44 @@
+//! Microbenchmark: rejection-sampling verification (per-client verdict
+//! computation on the coordinator hot path) and categorical sampling.
+
+use std::time::Instant;
+
+use goodspeed::spec::rejection::verify_client;
+use goodspeed::util::Rng;
+
+fn bench<F: FnMut()>(label: &str, iters: u64, mut f: F) -> f64 {
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{label:<44} {ns:>12.0} ns/op");
+    ns
+}
+
+fn main() {
+    println!("== speculative-decoding core microbench ==");
+    let mut rng = Rng::new(2);
+    for (s, vocab) in [(4usize, 256usize), (16, 256), (32, 256)] {
+        let ratios: Vec<f32> = (0..s).map(|_| rng.f32() * 0.8 + 0.1).collect();
+        let resid: Vec<f32> = (0..(s + 1) * vocab).map(|_| rng.f32()).collect();
+        let bonus: Vec<f32> = (0..vocab).map(|_| rng.f32()).collect();
+        let mut out = 0usize;
+        bench(&format!("verify_client S={s:<3} V={vocab}"), 200_000, || {
+            out += verify_client(&ratios, &resid, &bonus, vocab, &mut rng).goodput;
+        });
+        std::hint::black_box(out);
+    }
+    println!("\n== categorical sampling ==");
+    for vocab in [64usize, 256, 1024] {
+        let w: Vec<f32> = (0..vocab).map(|_| rng.f32()).collect();
+        let mut acc = 0usize;
+        bench(&format!("categorical V={vocab}"), 500_000, || {
+            acc += rng.categorical(&w);
+        });
+        std::hint::black_box(acc);
+    }
+}

@@ -1,0 +1,23 @@
+//! Table I regeneration bench: the full scenario matrix (3 rows × 2
+//! C-variants) end-to-end, reporting goodput / throughput / fairness /
+//! latency per policy. Writes `results/table1_scenarios.csv`.
+
+use goodspeed::cli::Args;
+use goodspeed::experiments::table1;
+
+fn main() {
+    goodspeed::util::logger::init();
+    let rounds =
+        std::env::var("GOODSPEED_BENCH_ROUNDS").ok().unwrap_or_else(|| "50".into());
+    let args = Args::parse(vec![
+        "table1".to_string(),
+        "--rounds".into(),
+        rounds,
+        "--out".into(),
+        "results".into(),
+    ]);
+    if let Err(e) = table1::main(&args) {
+        eprintln!("table1 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Grammar: `goodspeed <subcommand> [--key value]... [--flag]...`.
+//! Unknown keys are collected and reported by `finish()` so typos fail
+//! loudly instead of silently using defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(item) = it.next() {
+            if let Some(key) = item.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        args.opts.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => args.flags.push(key.to_string()),
+                }
+            }
+            // bare positional after flags: ignore (we have no use for them)
+        }
+        args
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any unconsumed option/flag (call after all `get`s).
+    pub fn finish(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown arguments: --{}", unknown.join(", --")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --scenario qwen-8c-150 --rounds 100 --tcp");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("scenario"), Some("qwen-8c-150"));
+        assert_eq!(a.get_parse::<u64>("rounds"), Some(100));
+        assert!(a.flag("tcp"));
+        assert!(!a.flag("other"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--rounds 5");
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get_parse::<u64>("rounds"), Some(5));
+    }
+
+    #[test]
+    fn unknown_args_reported() {
+        let a = parse("run --real-flag --oops 3");
+        assert!(a.flag("real-flag"));
+        let err = a.finish().unwrap_err();
+        assert!(err.contains("oops"), "{err}");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("policy", "goodspeed"), "goodspeed");
+        assert_eq!(a.get_parse::<u64>("rounds"), None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

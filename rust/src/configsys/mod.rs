@@ -1,0 +1,7 @@
+//! Configuration system: hand-rolled JSON + typed scenarios (Table I).
+
+pub mod json;
+pub mod scenario;
+
+pub use json::Value;
+pub use scenario::{LinkConfig, Policy, Scenario, Smoothing};

@@ -1,0 +1,340 @@
+//! Experiment scenarios — the code form of the paper's Table I.
+//!
+//! A [`Scenario`] fully determines an experiment: model family, client
+//! count, verification budget `C`, per-client draft models and primary
+//! domains, smoothing parameters, network model, seed, and round count.
+//! Presets `qwen-4c-50`, `qwen-8c-150`, and `llama-8c-150` correspond to the
+//! three rows of Table I; every field can be overridden from the CLI or a
+//! JSON scenario file.
+
+use super::json::Value;
+use crate::workload::domains::DOMAINS;
+
+/// Scheduling policy under test (§IV-B2 baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's gradient scheduling algorithm (GOODSPEED-SCHED).
+    GoodSpeed,
+    /// `S_i = C / N` every round.
+    FixedS,
+    /// Random split of the budget across clients.
+    RandomS,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "goodspeed" | "gs" => Some(Policy::GoodSpeed),
+            "fixed" | "fixed-s" | "fixeds" => Some(Policy::FixedS),
+            "random" | "random-s" | "randoms" => Some(Policy::RandomS),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::GoodSpeed => "goodspeed",
+            Policy::FixedS => "fixed-s",
+            Policy::RandomS => "random-s",
+        }
+    }
+
+    pub fn all() -> [Policy; 3] {
+        [Policy::GoodSpeed, Policy::FixedS, Policy::RandomS]
+    }
+}
+
+/// Per-client network link (edge → verification server).
+#[derive(Clone, Debug)]
+pub struct LinkConfig {
+    /// One-way propagation latency, seconds.
+    pub latency_s: f64,
+    /// Bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Multiplicative jitter stddev (0.1 = ±10%).
+    pub jitter: f64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        LinkConfig { latency_s: 1e-3, bandwidth_bps: 12.5e6, jitter: 0.1 }
+    }
+}
+
+/// Smoothing-parameter schedule (Assumption 3 allows decaying steps).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Smoothing {
+    /// Constant η or β (the paper's experiments use fixed values).
+    Fixed(f64),
+    /// `c / t^p` with `p ∈ (0.5, 1]` (the convergence-theory schedule).
+    Decay { c: f64, p: f64 },
+}
+
+impl Smoothing {
+    pub fn at(&self, t: u64) -> f64 {
+        match *self {
+            Smoothing::Fixed(v) => v,
+            Smoothing::Decay { c, p } => (c / ((t.max(1)) as f64).powf(p)).clamp(1e-4, 1.0),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub id: String,
+    /// Model family ("qwen" | "llama") — selects verify + draft artifacts.
+    pub family: String,
+    pub num_clients: usize,
+    /// Verification budget C: max total draft tokens per round (Table I).
+    pub capacity: usize,
+    /// Request length target (50 or 150 in the paper).
+    pub max_new_tokens: usize,
+    /// Draft model name per client (cycled when shorter than num_clients).
+    pub draft_models: Vec<String>,
+    /// Primary workload domain per client (cycled).
+    pub domains: Vec<String>,
+    /// Probability of staying in the primary domain each request
+    /// (non-stationarity knob; 1.0 = stationary).
+    pub domain_stickiness: f64,
+    /// Acceptance-rate smoothing η (paper eq. 3).
+    pub eta: Smoothing,
+    /// Goodput smoothing β (paper eq. 4).
+    pub beta: Smoothing,
+    /// Max draft length per client per round (artifact K limit).
+    pub max_draft: usize,
+    pub rounds: u64,
+    pub seed: u64,
+    pub links: Vec<LinkConfig>,
+}
+
+impl Scenario {
+    /// Draft model for client `i`.
+    pub fn draft_model(&self, i: usize) -> &str {
+        &self.draft_models[i % self.draft_models.len()]
+    }
+
+    /// Primary domain for client `i`.
+    pub fn domain(&self, i: usize) -> &str {
+        &self.domains[i % self.domains.len()]
+    }
+
+    pub fn link(&self, i: usize) -> LinkConfig {
+        self.links.get(i % self.links.len().max(1)).cloned().unwrap_or_default()
+    }
+
+    /// Sanity-check invariants shared by every consumer.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_clients == 0 {
+            return Err("num_clients must be > 0".into());
+        }
+        if self.capacity == 0 {
+            return Err("capacity C must be > 0".into());
+        }
+        if self.max_draft == 0 || self.max_draft > 32 {
+            return Err("max_draft must be in 1..=32 (verify artifact K)".into());
+        }
+        if self.draft_models.is_empty() || self.domains.is_empty() {
+            return Err("draft_models and domains must be non-empty".into());
+        }
+        if !(0.0..=1.0).contains(&self.domain_stickiness) {
+            return Err("domain_stickiness must be in [0,1]".into());
+        }
+        Ok(())
+    }
+
+    /// Default heterogeneous links: seeded spread of latency/bandwidth so
+    /// draft servers are genuinely unequal (edge heterogeneity).
+    pub fn default_links(n: usize, seed: u64) -> Vec<LinkConfig> {
+        let mut rng = crate::util::Rng::new(seed ^ 0x6c696e6b);
+        (0..n)
+            .map(|_| LinkConfig {
+                latency_s: 0.5e-3 + 1.5e-3 * rng.f64(),
+                bandwidth_bps: (25.0 + 175.0 * rng.f64()) * 1e6 / 8.0,
+                jitter: 0.05 + 0.1 * rng.f64(),
+            })
+            .collect()
+    }
+
+    /// The Table I presets (plus a tiny smoke preset for tests).
+    pub fn preset(id: &str) -> Option<Scenario> {
+        let seed = 2025;
+        let base_domains: Vec<String> = DOMAINS.iter().map(|d| d.to_string()).collect();
+        let mut s = match id {
+            // Table I row 1: Qwen3-14B / Qwen3-0.6B, C ∈ {24,28}, 4 clients, 50 tok
+            "qwen-4c-50" => Scenario {
+                id: id.into(),
+                family: "qwen".into(),
+                num_clients: 4,
+                capacity: 24,
+                max_new_tokens: 50,
+                draft_models: vec!["qwen-draft-06b".into()],
+                domains: base_domains[..4].to_vec(),
+                domain_stickiness: 0.85,
+                eta: Smoothing::Fixed(0.3),
+                beta: Smoothing::Fixed(0.5),
+                max_draft: 32,
+                rounds: 600,
+                seed,
+                links: Scenario::default_links(4, seed),
+            },
+            // Table I row 2: Qwen3-14B / 0.6B+1.7B, C ∈ {16,20}, 8 clients, 150 tok
+            "qwen-8c-150" => Scenario {
+                id: id.into(),
+                family: "qwen".into(),
+                num_clients: 8,
+                capacity: 20,
+                max_new_tokens: 150,
+                draft_models: vec!["qwen-draft-06b".into(), "qwen-draft-17b".into()],
+                domains: base_domains.clone(),
+                domain_stickiness: 0.85,
+                eta: Smoothing::Fixed(0.3),
+                beta: Smoothing::Fixed(0.5),
+                max_draft: 32,
+                rounds: 600,
+                seed,
+                links: Scenario::default_links(8, seed),
+            },
+            // Table I row 3: Llama-70B / 1B+3B, C ∈ {16,20}, 8 clients, 150 tok
+            "llama-8c-150" => Scenario {
+                id: id.into(),
+                family: "llama".into(),
+                num_clients: 8,
+                capacity: 20,
+                max_new_tokens: 150,
+                draft_models: vec!["llama-draft-1b".into(), "llama-draft-3b".into()],
+                domains: base_domains,
+                domain_stickiness: 0.85,
+                eta: Smoothing::Fixed(0.3),
+                beta: Smoothing::Fixed(0.5),
+                max_draft: 32,
+                rounds: 600,
+                seed,
+                links: Scenario::default_links(8, seed),
+            },
+            // Fast preset for tests and smoke runs.
+            "smoke" => Scenario {
+                id: id.into(),
+                family: "qwen".into(),
+                num_clients: 2,
+                capacity: 8,
+                max_new_tokens: 20,
+                draft_models: vec!["qwen-draft-06b".into()],
+                domains: vec!["alpaca".into(), "gsm8k".into()],
+                domain_stickiness: 0.9,
+                eta: Smoothing::Fixed(0.3),
+                beta: Smoothing::Fixed(0.5),
+                max_draft: 16,
+                rounds: 30,
+                seed,
+                links: Scenario::default_links(2, seed),
+            },
+            _ => return None,
+        };
+        s.validate().expect("preset must validate");
+        s.links = Scenario::default_links(s.num_clients, s.seed);
+        Some(s)
+    }
+
+    pub fn preset_ids() -> [&'static str; 4] {
+        ["qwen-4c-50", "qwen-8c-150", "llama-8c-150", "smoke"]
+    }
+
+    /// Serialize for results provenance.
+    pub fn to_json(&self) -> Value {
+        Value::from_pairs(vec![
+            ("id", Value::Str(self.id.clone())),
+            ("family", Value::Str(self.family.clone())),
+            ("num_clients", Value::Num(self.num_clients as f64)),
+            ("capacity", Value::Num(self.capacity as f64)),
+            ("max_new_tokens", Value::Num(self.max_new_tokens as f64)),
+            (
+                "draft_models",
+                Value::Array(self.draft_models.iter().cloned().map(Value::Str).collect()),
+            ),
+            ("domains", Value::Array(self.domains.iter().cloned().map(Value::Str).collect())),
+            ("rounds", Value::Num(self.rounds as f64)),
+            ("seed", Value::Num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for id in Scenario::preset_ids() {
+            let s = Scenario::preset(id).unwrap();
+            assert!(s.validate().is_ok(), "{id}");
+            assert_eq!(s.links.len(), s.num_clients);
+        }
+        assert!(Scenario::preset("nope").is_none());
+    }
+
+    #[test]
+    fn table1_rows_match_paper() {
+        let q4 = Scenario::preset("qwen-4c-50").unwrap();
+        assert_eq!((q4.num_clients, q4.max_new_tokens), (4, 50));
+        assert!([24, 28].contains(&q4.capacity));
+        let q8 = Scenario::preset("qwen-8c-150").unwrap();
+        assert_eq!((q8.num_clients, q8.max_new_tokens), (8, 150));
+        assert!([16, 20].contains(&q8.capacity));
+        assert_eq!(q8.draft_models.len(), 2); // 0.6B + 1.7B mix
+        let l8 = Scenario::preset("llama-8c-150").unwrap();
+        assert_eq!(l8.family, "llama");
+        assert_eq!(l8.num_clients, 8);
+    }
+
+    #[test]
+    fn cycling_accessors() {
+        let s = Scenario::preset("qwen-8c-150").unwrap();
+        assert_eq!(s.draft_model(0), "qwen-draft-06b");
+        assert_eq!(s.draft_model(1), "qwen-draft-17b");
+        assert_eq!(s.draft_model(2), "qwen-draft-06b");
+        assert_eq!(s.domain(0), "alpaca");
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut s = Scenario::preset("smoke").unwrap();
+        s.capacity = 0;
+        assert!(s.validate().is_err());
+        let mut s = Scenario::preset("smoke").unwrap();
+        s.max_draft = 40;
+        assert!(s.validate().is_err());
+        let mut s = Scenario::preset("smoke").unwrap();
+        s.domain_stickiness = 1.5;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn smoothing_schedules() {
+        let f = Smoothing::Fixed(0.5);
+        assert_eq!(f.at(1), 0.5);
+        assert_eq!(f.at(1000), 0.5);
+        let d = Smoothing::Decay { c: 1.0, p: 0.6 };
+        assert!(d.at(1) > d.at(10));
+        assert!(d.at(10) > d.at(1000));
+        assert!(d.at(u64::MAX) >= 1e-4);
+    }
+
+    #[test]
+    fn links_are_heterogeneous_and_deterministic() {
+        let a = Scenario::default_links(8, 1);
+        let b = Scenario::default_links(8, 1);
+        let c = Scenario::default_links(8, 2);
+        assert_eq!(a.len(), 8);
+        assert!((a[0].latency_s - b[0].latency_s).abs() < 1e-15);
+        assert!((a[0].latency_s - c[0].latency_s).abs() > 1e-9);
+        assert!(a.iter().any(|l| (l.latency_s - a[0].latency_s).abs() > 1e-6));
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(Policy::parse("GoodSpeed"), Some(Policy::GoodSpeed));
+        assert_eq!(Policy::parse("fixed-s"), Some(Policy::FixedS));
+        assert_eq!(Policy::parse("random"), Some(Policy::RandomS));
+        assert_eq!(Policy::parse("zzz"), None);
+    }
+}

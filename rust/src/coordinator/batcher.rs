@@ -1,0 +1,180 @@
+//! Round batcher: assembles all clients' draft messages into one batched
+//! [`VerifyRequest`] (paper step ③).
+//!
+//! Layout contract with `python/compile/model.py::verify_graph`:
+//! * row b = client b (fixed order); `tokens[b] = prefix ++ draft`, padded;
+//! * `draft_tok[b, j]` = j-th drafted token, `q_probs[b, j]` its proposal
+//!   distribution;
+//! * **variable-length trick**: for `j ≥ S_b` the q rows are all-zero, so
+//!   the graph's residual `max(0, p − q)/Σ` reduces to exactly `p` — the
+//!   row at `j = S_b` therefore *is* the bonus/correction distribution for
+//!   a fully-accepted draft of length `S_b < K`. This is what lets one
+//!   static-shape artifact serve heterogeneous draft lengths (the
+//!   limitation of uniform-length SD batching called out in §II-C).
+
+use anyhow::{anyhow, Result};
+
+use crate::net::wire::DraftMsg;
+use crate::runtime::{pick_bucket, VerifyRequest};
+
+/// Per-client view the leader keeps for the round.
+#[derive(Clone, Debug)]
+pub struct ClientRound {
+    pub client_id: usize,
+    pub prefix_len: usize,
+    pub draft_len: usize,
+    pub new_request: bool,
+    pub draft_wall_ns: u64,
+}
+
+/// Build the batched request. `msgs` must hold exactly one message per
+/// client, indexed by client id.
+pub fn build_verify_request(
+    msgs: &[DraftMsg],
+    buckets: &[(usize, usize)],
+    k: usize,
+    vocab: usize,
+) -> Result<(VerifyRequest, Vec<ClientRound>)> {
+    let n = msgs.len();
+    if n == 0 {
+        return Err(anyhow!("empty round"));
+    }
+    let mut need_seq = 0usize;
+    for (i, m) in msgs.iter().enumerate() {
+        if m.client_id as usize != i {
+            return Err(anyhow!("messages must be ordered by client id"));
+        }
+        if m.draft.len() > k {
+            return Err(anyhow!("client {i}: draft {} > K {k}", m.draft.len()));
+        }
+        if m.q_probs.len() != m.draft.len() * vocab {
+            return Err(anyhow!("client {i}: q_probs len mismatch"));
+        }
+        if m.prefix.is_empty() {
+            return Err(anyhow!("client {i}: empty prefix"));
+        }
+        // Row must hold prefix + draft; the graph gathers up to
+        // pos0 + S_i − 1 (bonus-trick row S_i gathers pos0 + S_i − 1).
+        need_seq = need_seq.max(m.prefix.len() + m.draft.len().max(1));
+    }
+    let (bb, bs) = pick_bucket(buckets, n, need_seq);
+    if n > bb || need_seq > bs {
+        return Err(anyhow!("round (n={n}, seq={need_seq}) exceeds largest bucket ({bb},{bs})"));
+    }
+
+    let mut tokens = vec![0i32; n * bs];
+    let mut draft_tok = vec![0i32; n * k];
+    // All-zero q rows by default — the variable-length/bonus trick.
+    let mut q_probs = vec![0.0f32; n * k * vocab];
+    let mut pos0 = vec![0i32; n];
+    let mut views = Vec::with_capacity(n);
+    for (b, m) in msgs.iter().enumerate() {
+        let p = m.prefix.len();
+        for (i, &t) in m.prefix.iter().enumerate() {
+            tokens[b * bs + i] = t as i32;
+        }
+        for (j, &t) in m.draft.iter().enumerate() {
+            tokens[b * bs + p + j] = t as i32;
+            draft_tok[b * k + j] = t as i32;
+        }
+        q_probs[(b * k) * vocab..(b * k + m.draft.len()) * vocab].copy_from_slice(&m.q_probs);
+        pos0[b] = p as i32;
+        views.push(ClientRound {
+            client_id: b,
+            prefix_len: p,
+            draft_len: m.draft.len(),
+            new_request: m.new_request,
+            draft_wall_ns: m.draft_wall_ns,
+        });
+    }
+    Ok((
+        VerifyRequest { tokens, batch: n, seq: bs, draft_tok, q_probs, pos0, k, vocab },
+        views,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(id: u32, prefix: &[u8], draft: &[u8], vocab: usize) -> DraftMsg {
+        DraftMsg {
+            client_id: id,
+            round: 0,
+            prefix: prefix.to_vec(),
+            prompt_len: prefix.len() as u32,
+            draft: draft.to_vec(),
+            q_probs: vec![1.0 / vocab as f32; draft.len() * vocab],
+            new_request: false,
+            draft_wall_ns: 0,
+        }
+    }
+
+    const BUCKETS: &[(usize, usize)] = &[(4, 128), (4, 256), (8, 128), (8, 256)];
+
+    #[test]
+    fn layout_matches_contract() {
+        let v = 16;
+        let msgs =
+            vec![msg(0, &[1, 2, 3], &[10, 11], v), msg(1, &[4, 5], &[20, 21, 22], v)];
+        let (req, views) = build_verify_request(&msgs, BUCKETS, 8, v).unwrap();
+        assert_eq!(req.batch, 2);
+        assert_eq!(req.seq, 128);
+        assert_eq!(req.pos0, vec![3, 2]);
+        // tokens row 0: prefix then draft then zero padding
+        assert_eq!(&req.tokens[0..6], &[1, 2, 3, 10, 11, 0]);
+        assert_eq!(&req.tokens[128..133], &[4, 5, 20, 21, 22]);
+        assert_eq!(req.draft_tok[0..3], [10, 11, 0]);
+        assert_eq!(req.draft_tok[8..12], [20, 21, 22, 0]);
+        // q rows beyond S are zero (bonus trick)
+        let row2 = &req.q_probs[(0 * 8 + 2) * v..(0 * 8 + 3) * v];
+        assert!(row2.iter().all(|&x| x == 0.0));
+        let row1 = &req.q_probs[(0 * 8 + 1) * v..(0 * 8 + 2) * v];
+        assert!((row1.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert_eq!(views[1].draft_len, 3);
+    }
+
+    #[test]
+    fn picks_small_bucket_for_short_rounds() {
+        let v = 16;
+        let msgs = vec![msg(0, &[1; 50], &[2; 4], v)];
+        let (req, _) = build_verify_request(&msgs, BUCKETS, 8, v).unwrap();
+        assert_eq!(req.seq, 128);
+        let msgs = vec![msg(0, &[1; 200], &[2; 4], v)];
+        let (req, _) = build_verify_request(&msgs, BUCKETS, 8, v).unwrap();
+        assert_eq!(req.seq, 256);
+    }
+
+    #[test]
+    fn zero_draft_client_ok() {
+        let v = 16;
+        let msgs = vec![msg(0, &[1, 2], &[], v)];
+        let (req, views) = build_verify_request(&msgs, BUCKETS, 8, v).unwrap();
+        assert_eq!(views[0].draft_len, 0);
+        // q row 0 all zero → residual = p → correction sampled from target.
+        assert!(req.q_probs[..v].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn rejects_malformed_rounds() {
+        let v = 16;
+        assert!(build_verify_request(&[], BUCKETS, 8, v).is_err());
+        // wrong order
+        let mut m = msg(0, &[1], &[], v);
+        m.client_id = 1;
+        assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+        // draft longer than K
+        let m = msg(0, &[1], &[9; 9], v);
+        assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+        // q length mismatch
+        let mut m = msg(0, &[1], &[9, 9], v);
+        m.q_probs.pop();
+        assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+        // empty prefix
+        let m = msg(0, &[], &[], v);
+        assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+        // overflow largest bucket
+        let m = msg(0, &[1; 255], &[2; 8], v);
+        assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The verification-server coordinator — the paper's L3 contribution:
+//! FIFO batching, batched verification, rejection sampling, estimator
+//! updates, gradient scheduling, and verdict fan-out.
+
+pub mod batcher;
+pub mod leader;
+
+pub use batcher::build_verify_request;
+pub use leader::{run_serving, Leader, RunConfig, RunOutcome, Transport};

@@ -1,0 +1,5 @@
+//! Draft-server actor (the paper's edge SLM node).
+
+pub mod server;
+
+pub use server::{spawn_draft_server, DraftServerConfig, DraftStats};

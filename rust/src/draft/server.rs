@@ -1,0 +1,397 @@
+//! Draft-server actor: one thread per edge server.
+//!
+//! Loop (paper Algorithm 1, lines 3–11): pull the next prompt from the
+//! client's domain stream, prefill the SLM, then each round autoregressively
+//! draft `S_i(t)` tokens (sampling from the model's distribution and keeping
+//! every per-token distribution `q_{i,j}` — the verification server needs
+//! them for rejection sampling), simulate the uplink delay, ship the batch,
+//! wait for the verdict, and reconcile the KV cache:
+//!
+//! * rejection at position m  → rewind to `pos0 + m`, ingest the correction;
+//! * all S accepted           → ingest the last draft token (it never went
+//!   through the model) and then the bonus token.
+//!
+//! The engine is built *inside* the thread (PJRT handles are not `Send`).
+
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::configsys::LinkConfig;
+use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
+use crate::net::transport::ClientPort;
+use crate::net::wire::{DraftMsg, Message};
+use crate::runtime::{Drafter, EngineFactory};
+use crate::util::Rng;
+use crate::workload::DomainStream;
+
+/// Static configuration for one draft server.
+pub struct DraftServerConfig {
+    pub client_id: usize,
+    pub model: String,
+    /// Initial allocation S_i(0) (the coordinator takes over from t=1).
+    pub initial_alloc: usize,
+    pub link: LinkConfig,
+    /// Apply real sleeps for simulated network delays (off in unit tests).
+    pub simulate_network: bool,
+    /// Sampling temperature is fixed at 1 (matches verification math).
+    pub seed: u64,
+    /// Hard cap on rounds (safety net; coordinator normally shuts down).
+    pub max_rounds: u64,
+}
+
+/// Outcome summary returned when the actor exits.
+#[derive(Clone, Debug, Default)]
+pub struct DraftStats {
+    pub rounds: u64,
+    pub requests_completed: u64,
+    pub tokens_drafted: u64,
+    pub tokens_accepted: u64,
+    pub draft_compute: Duration,
+    /// Per-request latency (rounds from first draft to completion).
+    pub request_latency_rounds: Vec<u64>,
+}
+
+struct Actor {
+    cfg: DraftServerConfig,
+    drafter: Box<dyn Drafter>,
+    stream: DomainStream,
+    port: Box<dyn ClientPort>,
+    link: Link,
+    rng: Rng,
+    stats: DraftStats,
+    // Request state.
+    prefix: Vec<u8>,
+    prompt_len: usize,
+    max_new_tokens: usize,
+    generated: usize,
+    request_start_round: u64,
+    /// Distribution for the token at index `drafter.position()`.
+    pending_dist: Vec<f32>,
+    new_request: bool,
+}
+
+impl Actor {
+    fn start_request(&mut self, round: u64) -> Result<()> {
+        let req = self.stream.next_request();
+        let prompt = crate::tokenizer::encode(&req.prompt);
+        self.prefix = prompt.clone();
+        self.prompt_len = prompt.len();
+        self.max_new_tokens = req.max_new_tokens;
+        self.generated = 0;
+        self.request_start_round = round;
+        self.pending_dist = self.drafter.prefill(&prompt)?;
+        self.new_request = true;
+        Ok(())
+    }
+
+    /// Max context room for drafting (prefix + S + 1 must fit max_seq).
+    fn context_room(&self) -> usize {
+        self.drafter.max_seq().saturating_sub(self.prefix.len() + 2)
+    }
+
+    fn draft_round(&mut self, round: u64, alloc: usize) -> Result<DraftMsg> {
+        let t0 = Instant::now();
+        let s = alloc.min(self.context_room());
+        let vocab = self.drafter.vocab();
+        let mut draft = Vec::with_capacity(s);
+        let mut q_probs = Vec::with_capacity(s * vocab);
+        for j in 0..s {
+            // Sample token at index position() from the pending distribution.
+            let tok = self.rng.categorical(&self.pending_dist) as u8;
+            q_probs.extend_from_slice(&self.pending_dist);
+            draft.push(tok);
+            if j + 1 < s {
+                self.pending_dist = self.drafter.step(tok)?;
+            }
+        }
+        let wall = t0.elapsed();
+        self.stats.draft_compute += wall;
+        self.stats.tokens_drafted += s as u64;
+        Ok(DraftMsg {
+            client_id: self.cfg.client_id as u32,
+            round,
+            prefix: self.prefix.clone(),
+            prompt_len: self.prompt_len as u32,
+            draft,
+            q_probs,
+            new_request: std::mem::take(&mut self.new_request),
+            draft_wall_ns: wall.as_nanos() as u64,
+        })
+    }
+
+    fn apply_verdict(
+        &mut self,
+        round: u64,
+        draft: &[u8],
+        accepted: usize,
+        correction: u8,
+    ) -> Result<()> {
+        let s = draft.len();
+        let m = accepted.min(s);
+        let pos0 = self.prefix.len();
+        self.prefix.extend_from_slice(&draft[..m]);
+        self.prefix.push(correction);
+        self.stats.tokens_accepted += m as u64;
+        self.generated += m + 1;
+
+        if m == s && s > 0 {
+            // Bonus path: the last draft token was sampled but never
+            // stepped through the model; ingest it before the bonus token.
+            debug_assert_eq!(self.drafter.position(), pos0 + s - 1);
+            self.drafter.step(draft[s - 1])?;
+        } else {
+            // Rejection (or S=0): discard stale cache rows.
+            self.drafter.rewind(pos0 + m);
+        }
+        debug_assert_eq!(self.drafter.position(), pos0 + m);
+
+        let done = self.generated >= self.max_new_tokens
+            || self.prefix.len() + 2 >= self.drafter.max_seq();
+        if done {
+            self.stats.requests_completed += 1;
+            self.stats
+                .request_latency_rounds
+                .push(round + 1 - self.request_start_round);
+            self.start_request(round + 1)?;
+        } else {
+            // Ingest the correction/bonus token; its successor distribution
+            // seeds the next round's first draft sample.
+            self.pending_dist = self.drafter.step(correction)?;
+        }
+        Ok(())
+    }
+
+    fn run(&mut self) -> Result<DraftStats> {
+        let vocab = self.drafter.vocab();
+        self.start_request(0)?;
+        let mut alloc = self.cfg.initial_alloc;
+        for round in 0..self.cfg.max_rounds {
+            let msg = self.draft_round(round, alloc)?;
+            let draft = msg.draft.clone();
+            if self.cfg.simulate_network {
+                let bytes = draft_msg_bytes(msg.prefix.len(), msg.draft.len(), vocab);
+                std::thread::sleep(self.link.delay(bytes, &mut self.rng));
+            }
+            self.port.send(&Message::Draft(msg))?;
+            match self.port.recv() {
+                Ok(Message::Verdict(v)) => {
+                    if self.cfg.simulate_network {
+                        std::thread::sleep(self.link.delay(verdict_msg_bytes(), &mut self.rng));
+                    }
+                    debug_assert_eq!(v.round, round);
+                    self.apply_verdict(round, &draft, v.accepted as usize, v.correction)?;
+                    alloc = v.next_alloc as usize;
+                }
+                Ok(Message::Shutdown) | Err(_) => break,
+                Ok(other) => return Err(anyhow!("unexpected message {other:?}")),
+            }
+            self.stats.rounds = round + 1;
+        }
+        Ok(std::mem::take(&mut self.stats))
+    }
+}
+
+/// Spawn a draft-server thread. The engine factory runs inside the thread.
+pub fn spawn_draft_server(
+    cfg: DraftServerConfig,
+    factory: std::sync::Arc<dyn EngineFactory>,
+    stream: DomainStream,
+    port: Box<dyn ClientPort>,
+) -> JoinHandle<Result<DraftStats>> {
+    std::thread::Builder::new()
+        .name(format!("draft-{}", cfg.client_id))
+        .spawn(move || {
+            let drafter = factory.make_drafter(&cfg.model)?;
+            let link = Link::new(cfg.link.clone());
+            let rng = Rng::new(cfg.seed);
+            let mut actor = Actor {
+                drafter,
+                stream,
+                port,
+                link,
+                rng,
+                stats: DraftStats::default(),
+                prefix: Vec::new(),
+                prompt_len: 0,
+                max_new_tokens: 0,
+                generated: 0,
+                request_start_round: 0,
+                pending_dist: Vec::new(),
+                new_request: false,
+                cfg,
+            };
+            actor.run()
+        })
+        .expect("spawn draft server")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::channel_transport;
+    use crate::net::wire::VerdictMsg;
+    use crate::runtime::{MockEngineFactory, MockWorld};
+    use std::sync::Arc;
+
+    fn factory() -> Arc<dyn EngineFactory> {
+        Arc::new(MockEngineFactory::new(MockWorld {
+            vocab: 32,
+            max_seq: 128,
+            sharpness: 3.0,
+            seed: 5,
+        }))
+    }
+
+    fn cfg(id: usize, rounds: u64) -> DraftServerConfig {
+        DraftServerConfig {
+            client_id: id,
+            model: "qwen-draft-06b".into(),
+            initial_alloc: 4,
+            link: LinkConfig::default(),
+            simulate_network: false,
+            seed: 42 + id as u64,
+            max_rounds: rounds,
+        }
+    }
+
+    /// Drive one actor manually from the coordinator side.
+    #[test]
+    fn actor_round_trip_with_manual_coordinator() {
+        let (mut server, mut ports) = channel_transport(1);
+        let stream = DomainStream::new("alpaca", 1.0, 10, Rng::new(1));
+        let h = spawn_draft_server(cfg(0, 5), factory(), stream, ports.remove(0));
+        for round in 0..5u64 {
+            let (id, msg) = server.rx.recv().unwrap();
+            assert_eq!(id, 0);
+            let d = match msg {
+                Message::Draft(d) => d,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(d.round, round);
+            assert!(d.draft.len() <= 4);
+            assert_eq!(d.q_probs.len(), d.draft.len() * 32);
+            // Every q row must be a distribution.
+            for j in 0..d.draft.len() {
+                let s: f32 = d.q_probs[j * 32..(j + 1) * 32].iter().sum();
+                assert!((s - 1.0).abs() < 1e-4);
+            }
+            // Accept the first half, reject the rest.
+            let acc = (d.draft.len() / 2) as u32;
+            (server.txs[0])(&Message::Verdict(VerdictMsg {
+                client_id: 0,
+                round,
+                accepted: acc,
+                correction: 7,
+                next_alloc: 4,
+            }))
+            .unwrap();
+        }
+        let stats = h.join().unwrap().unwrap();
+        assert_eq!(stats.rounds, 5);
+        assert!(stats.tokens_drafted > 0);
+    }
+
+    #[test]
+    fn prefix_grows_by_accepted_plus_one() {
+        let (mut server, mut ports) = channel_transport(1);
+        let stream = DomainStream::new("gsm8k", 1.0, 100, Rng::new(2));
+        let h = spawn_draft_server(cfg(0, 3), factory(), stream, ports.remove(0));
+        let mut last_len = None;
+        let mut last_accept = 0usize;
+        for round in 0..3u64 {
+            let (_, msg) = server.rx.recv().unwrap();
+            let d = match msg {
+                Message::Draft(d) => d,
+                _ => panic!(),
+            };
+            if let Some(l) = last_len {
+                assert_eq!(d.prefix.len(), l + last_accept + 1, "prefix growth");
+            }
+            last_len = Some(d.prefix.len());
+            last_accept = d.draft.len(); // accept all
+            (server.txs[0])(&Message::Verdict(VerdictMsg {
+                client_id: 0,
+                round,
+                accepted: d.draft.len() as u32,
+                correction: 3,
+                next_alloc: 4,
+            }))
+            .unwrap();
+        }
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn completes_requests_and_starts_new_ones() {
+        let (mut server, mut ports) = channel_transport(1);
+        // max_new_tokens = 5 → finishes a request every ~1–2 rounds
+        let stream = DomainStream::new("arena", 1.0, 5, Rng::new(3));
+        let h = spawn_draft_server(cfg(0, 12), factory(), stream, ports.remove(0));
+        let mut new_request_count = 0;
+        for round in 0..12u64 {
+            let (_, msg) = server.rx.recv().unwrap();
+            let d = match msg {
+                Message::Draft(d) => d,
+                _ => panic!(),
+            };
+            if d.new_request {
+                new_request_count += 1;
+            }
+            (server.txs[0])(&Message::Verdict(VerdictMsg {
+                client_id: 0,
+                round,
+                accepted: d.draft.len() as u32,
+                correction: 5,
+                next_alloc: 4,
+            }))
+            .unwrap();
+        }
+        let stats = h.join().unwrap().unwrap();
+        assert!(stats.requests_completed >= 2, "{stats:?}");
+        assert!(new_request_count >= 3); // first + completions
+        assert_eq!(stats.requests_completed as usize, stats.request_latency_rounds.len());
+    }
+
+    #[test]
+    fn zero_allocation_rounds_still_progress() {
+        let (mut server, mut ports) = channel_transport(1);
+        let stream = DomainStream::new("hle", 1.0, 50, Rng::new(4));
+        let mut c = cfg(0, 4);
+        c.initial_alloc = 0;
+        let h = spawn_draft_server(c, factory(), stream, ports.remove(0));
+        for round in 0..4u64 {
+            let (_, msg) = server.rx.recv().unwrap();
+            let d = match msg {
+                Message::Draft(d) => d,
+                _ => panic!(),
+            };
+            assert!(d.draft.is_empty());
+            assert!(d.q_probs.is_empty());
+            (server.txs[0])(&Message::Verdict(VerdictMsg {
+                client_id: 0,
+                round,
+                accepted: 0,
+                correction: 9,
+                next_alloc: 0,
+            }))
+            .unwrap();
+        }
+        let stats = h.join().unwrap().unwrap();
+        // Still generates one (correction) token per round.
+        assert_eq!(stats.tokens_drafted, 0);
+        assert_eq!(stats.rounds, 4);
+    }
+
+    #[test]
+    fn shutdown_exits_cleanly() {
+        let (mut server, mut ports) = channel_transport(1);
+        let stream = DomainStream::new("cnn", 1.0, 50, Rng::new(5));
+        let h = spawn_draft_server(cfg(0, 100), factory(), stream, ports.remove(0));
+        let (_, _msg) = server.rx.recv().unwrap();
+        (server.txs[0])(&Message::Shutdown).unwrap();
+        let stats = h.join().unwrap().unwrap();
+        assert_eq!(stats.rounds, 0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//! * smoothing parameters η, β (estimation speed vs stability),
+//! * verification budget C (goodput saturation curve),
+//! * greedy vs exact-DP scheduler (identical objective, speed gap),
+//! * utility choice (log vs linear — fairness collapse without concavity).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cli::Args;
+use crate::configsys::{Policy, Scenario, Smoothing};
+use crate::metrics::csv::write_csv;
+use crate::sched::gradient::{objective, solve_dp, solve_greedy, AllocInput};
+use crate::sched::utility::{system_utility, LinearUtility, LogUtility};
+use crate::simulate::AnalyticSim;
+use crate::util::{jain_index, Rng};
+
+pub fn main(args: &Args) -> Result<()> {
+    let out_dir = args.get_or("out", "results");
+    let rounds = args.get_parse::<u64>("rounds").unwrap_or(800);
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    eta_beta_sweep(&out_dir, rounds)?;
+    capacity_sweep(&out_dir, rounds)?;
+    greedy_vs_dp(&out_dir)?;
+    utility_ablation(&out_dir, rounds)?;
+    Ok(())
+}
+
+fn base_scenario(rounds: u64) -> Scenario {
+    let mut s = Scenario::preset("qwen-8c-150").unwrap();
+    s.rounds = rounds;
+    s
+}
+
+/// η/β grid → final utility + estimator tracking error.
+fn eta_beta_sweep(out_dir: &str, rounds: u64) -> Result<()> {
+    let grid = [0.05, 0.1, 0.3, 0.5, 0.8];
+    let mut rows = Vec::new();
+    for &eta in &grid {
+        for &beta in &grid {
+            let mut s = base_scenario(rounds);
+            s.eta = Smoothing::Fixed(eta);
+            s.beta = Smoothing::Fixed(beta);
+            let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+            sim.run();
+            let u = sim.recorder.utility_of_avg(&LogUtility);
+            // Tracking error: |α̂ − α_true| at the end.
+            let err: f64 = sim
+                .true_alphas()
+                .iter()
+                .zip(&sim.estimators.alpha_hat)
+                .map(|(t, e)| (t - e).abs())
+                .sum::<f64>()
+                / sim.clients.len() as f64;
+            rows.push(vec![
+                format!("{eta}"),
+                format!("{beta}"),
+                format!("{u:.4}"),
+                format!("{err:.4}"),
+            ]);
+        }
+    }
+    let path = format!("{out_dir}/ablation_eta_beta.csv");
+    write_csv(&path, &["eta", "beta", "utility", "alpha_tracking_err"], rows)?;
+    println!("ablation: eta/beta sweep -> {path}");
+    Ok(())
+}
+
+/// C sweep: goodput saturates once C exceeds the useful draft budget.
+fn capacity_sweep(out_dir: &str, rounds: u64) -> Result<()> {
+    let mut rows = Vec::new();
+    println!("\nablation: capacity sweep (8 clients):");
+    println!("{:>4} {:>12} {:>8}", "C", "tok/round", "jain");
+    for c in [4usize, 8, 12, 16, 20, 24, 32, 48, 64] {
+        let mut s = base_scenario(rounds);
+        s.capacity = c;
+        let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        sim.run();
+        let avg = sim.recorder.avg_goodput();
+        let total: f64 = avg.iter().sum();
+        let jain = jain_index(&avg);
+        println!("{c:>4} {total:>12.2} {jain:>8.4}");
+        rows.push(vec![c.to_string(), format!("{total:.3}"), format!("{jain:.4}")]);
+    }
+    let path = format!("{out_dir}/ablation_capacity.csv");
+    write_csv(&path, &["C", "goodput_per_round", "jain"], rows)?;
+    println!("-> {path}");
+    Ok(())
+}
+
+/// Greedy vs exact DP: identical objective, orders-of-magnitude speed gap.
+fn greedy_vs_dp(out_dir: &str) -> Result<()> {
+    let mut rng = Rng::new(123);
+    let mut rows = Vec::new();
+    println!("\nablation: greedy vs DP scheduler:");
+    println!("{:>4} {:>5} {:>12} {:>12} {:>9}", "N", "C", "greedy(µs)", "dp(µs)", "obj gap");
+    for (n, c) in [(8usize, 20usize), (16, 64), (64, 256), (256, 1024)] {
+        let weights: Vec<f64> = (0..n).map(|_| rng.f64() + 0.05).collect();
+        let alphas: Vec<f64> = (0..n).map(|_| rng.f64() * 0.95).collect();
+        let caps = vec![32usize; n];
+        let input =
+            AllocInput { weights: &weights, alphas: &alphas, capacity: c, max_per_client: &caps };
+        let reps = 100;
+        let t0 = Instant::now();
+        let mut g = Vec::new();
+        for _ in 0..reps {
+            g = solve_greedy(&input);
+        }
+        let greedy_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+        let t1 = Instant::now();
+        let d = solve_dp(&input);
+        let dp_us = t1.elapsed().as_secs_f64() * 1e6;
+        let gap = objective(&input, &d) - objective(&input, &g);
+        println!("{n:>4} {c:>5} {greedy_us:>12.2} {dp_us:>12.2} {gap:>9.2e}");
+        rows.push(vec![
+            n.to_string(),
+            c.to_string(),
+            format!("{greedy_us:.2}"),
+            format!("{dp_us:.2}"),
+            format!("{gap:.3e}"),
+        ]);
+    }
+    let path = format!("{out_dir}/ablation_greedy_dp.csv");
+    write_csv(&path, &["N", "C", "greedy_us", "dp_us", "objective_gap"], rows)?;
+    println!("-> {path}");
+    Ok(())
+}
+
+/// Log vs linear utility: linear maximizes throughput but collapses
+/// fairness (the starved-client pathology §III-B motivates log for).
+fn utility_ablation(out_dir: &str, rounds: u64) -> Result<()> {
+    use crate::sched::baselines::{Allocator, GoodSpeedAlloc};
+    use std::sync::Arc;
+    let mut rows = Vec::new();
+    println!("\nablation: utility function:");
+    println!("{:<8} {:>12} {:>8} {:>12}", "utility", "tok/round", "jain", "U_log(x̄)");
+    for (name, utility) in [
+        ("log", Arc::new(LogUtility) as Arc<dyn crate::sched::utility::Utility>),
+        ("linear", Arc::new(LinearUtility) as Arc<dyn crate::sched::utility::Utility>),
+    ] {
+        let s = base_scenario(rounds);
+        let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        // Swap the allocator's utility.
+        let alloc: Box<dyn Allocator> = Box::new(GoodSpeedAlloc { utility });
+        sim_set_allocator(&mut sim, alloc);
+        sim.run();
+        let avg = sim.recorder.avg_goodput();
+        let total: f64 = avg.iter().sum();
+        let jain = jain_index(&avg);
+        let ulog = system_utility(&LogUtility, &avg);
+        println!("{name:<8} {total:>12.2} {jain:>8.4} {ulog:>12.4}");
+        rows.push(vec![
+            name.to_string(),
+            format!("{total:.3}"),
+            format!("{jain:.4}"),
+            format!("{ulog:.4}"),
+        ]);
+    }
+    let path = format!("{out_dir}/ablation_utility.csv");
+    write_csv(&path, &["utility", "goodput_per_round", "jain", "log_utility"], rows)?;
+    println!("-> {path}");
+    Ok(())
+}
+
+fn sim_set_allocator(sim: &mut AnalyticSim, alloc: Box<dyn crate::sched::baselines::Allocator>) {
+    sim.set_allocator(alloc);
+}

@@ -1,0 +1,122 @@
+//! Fig 3 — wall-time decomposition (receive / verify / send) for
+//! GoodSpeed vs Fixed-S vs Random-S, both model families.
+//!
+//! Paper findings to reproduce in *shape*: receiving + verification
+//! dominate; sending < 0.1 %; Random-S adds 5–25 % total wall time from
+//! scheduling inefficiency (straggler variance); GoodSpeed ≈ Fixed-S total
+//! with ~5 % lower verification time.
+
+use anyhow::{anyhow, Result};
+
+use super::engine_from_args;
+use crate::cli::Args;
+use crate::configsys::{Policy, Scenario};
+use crate::coordinator::{run_serving, RunConfig, Transport};
+use crate::metrics::csv::write_csv;
+
+pub struct Fig3Row {
+    pub family: String,
+    pub policy: &'static str,
+    pub recv_secs: f64,
+    pub verify_secs: f64,
+    pub send_secs: f64,
+    pub total_secs: f64,
+    pub tokens: f64,
+}
+
+pub fn run_grid(
+    factory: std::sync::Arc<dyn crate::runtime::EngineFactory>,
+    families: &[&str],
+    rounds: u64,
+    transport: Transport,
+) -> Result<Vec<Fig3Row>> {
+    let mut rows = Vec::new();
+    for fam in families {
+        for policy in Policy::all() {
+            let preset = if *fam == "qwen" { "qwen-8c-150" } else { "llama-8c-150" };
+            let mut scenario = Scenario::preset(preset).unwrap();
+            scenario.rounds = rounds;
+            log::info!("fig3: {fam}/{} ({rounds} rounds)", policy.name());
+            let cfg = RunConfig {
+                scenario,
+                policy,
+                transport,
+                simulate_network: true, // the decomposition needs real delays
+            };
+            let out = run_serving(&cfg, factory.clone())?;
+            let s = out.summary;
+            rows.push(Fig3Row {
+                family: fam.to_string(),
+                policy: policy.name(),
+                recv_secs: s.recv_secs,
+                verify_secs: s.verify_secs,
+                send_secs: s.send_secs,
+                total_secs: s.recv_secs + s.verify_secs + s.send_secs,
+                tokens: s.total_tokens,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn main(args: &Args) -> Result<()> {
+    let out_dir = args.get_or("out", "results");
+    let rounds = args.get_parse::<u64>("rounds").unwrap_or(120);
+    let families: Vec<String> =
+        args.get_or("families", "qwen,llama").split(',').map(String::from).collect();
+    let transport = Transport::parse(&args.get_or("transport", "channel"))
+        .ok_or_else(|| anyhow!("bad --transport"))?;
+    let factory = engine_from_args(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let fams: Vec<&str> = families.iter().map(String::as_str).collect();
+    let rows = run_grid(factory, &fams, rounds, transport)?;
+    let csv_path = format!("{out_dir}/fig3_time_distribution.csv");
+    write_csv(
+        &csv_path,
+        &["family", "policy", "recv_s", "verify_s", "send_s", "total_s", "tokens"],
+        rows.iter().map(|r| {
+            vec![
+                r.family.clone(),
+                r.policy.to_string(),
+                format!("{:.4}", r.recv_secs),
+                format!("{:.4}", r.verify_secs),
+                format!("{:.4}", r.send_secs),
+                format!("{:.4}", r.total_secs),
+                format!("{:.0}", r.tokens),
+            ]
+        }),
+    )?;
+    println!("\nFig 3 — wall-time decomposition ({rounds} rounds):");
+    println!(
+        "{:<7} {:<10} {:>9} {:>9} {:>9} {:>9} {:>8}",
+        "family", "policy", "recv(s)", "verify(s)", "send(s)", "total(s)", "send%"
+    );
+    for r in &rows {
+        println!(
+            "{:<7} {:<10} {:>9.3} {:>9.3} {:>9.5} {:>9.3} {:>7.3}%",
+            r.family,
+            r.policy,
+            r.recv_secs,
+            r.verify_secs,
+            r.send_secs,
+            r.total_secs,
+            100.0 * r.send_secs / r.total_secs.max(1e-12)
+        );
+    }
+    // Paper-shape checks printed for EXPERIMENTS.md.
+    for fam in &fams {
+        let get = |p: &str| rows.iter().find(|r| r.family == *fam && r.policy == p).unwrap();
+        let gs = get("goodspeed");
+        let fx = get("fixed-s");
+        let rd = get("random-s");
+        println!(
+            "{fam}: random-s total {:+.1}% vs fixed-s; goodspeed verify {:+.1}% vs fixed-s; send share {:.4}%",
+            100.0 * (rd.total_secs / fx.total_secs - 1.0),
+            100.0 * (gs.verify_secs / fx.verify_secs - 1.0),
+            100.0 * gs.send_secs / gs.total_secs
+        );
+    }
+    println!("csv -> {csv_path}");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §4).
+//!
+//! Each harness is callable from the CLI (`goodspeed fig2 …`) and from the
+//! bench targets (`cargo bench`), writes `results/*.csv` (+ `.svg`), and
+//! prints the paper-comparable rows.
+
+pub mod ablation;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fluid_exp;
+pub mod quickstart;
+pub mod run_cmd;
+pub mod table1;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::cli::Args;
+use crate::runtime::{
+    default_artifacts_dir, EngineFactory, Manifest, MockEngineFactory, MockWorld,
+    XlaEngineFactory,
+};
+
+/// Engine selection: `--engine xla|mock` (default: xla when artifacts are
+/// present, mock otherwise).
+pub fn engine_from_args(args: &Args) -> Result<Arc<dyn EngineFactory>> {
+    let choice = args.get_or("engine", "auto");
+    let artifacts = default_artifacts_dir();
+    let have = artifacts.join("manifest.json").exists();
+    match choice.as_str() {
+        "xla" => {
+            let manifest = Manifest::load(&artifacts)?;
+            manifest.validate_files()?;
+            Ok(Arc::new(XlaEngineFactory::new(manifest)))
+        }
+        "mock" => Ok(mock_engine()),
+        "auto" => {
+            if have {
+                let manifest = Manifest::load(&artifacts)?;
+                manifest.validate_files()?;
+                Ok(Arc::new(XlaEngineFactory::new(manifest)))
+            } else {
+                log::warn!("artifacts missing; using mock engine");
+                Ok(mock_engine())
+            }
+        }
+        other => Err(anyhow!("unknown engine '{other}' (xla|mock|auto)")),
+    }
+}
+
+/// The standard mock world used by tests/benches (vocab matches artifacts).
+pub fn mock_engine() -> Arc<dyn EngineFactory> {
+    Arc::new(MockEngineFactory::new(MockWorld {
+        vocab: 256,
+        max_seq: 256,
+        sharpness: 3.0,
+        seed: 7,
+    }))
+}
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("run") => run_cmd::main(args),
+        Some("quickstart") => quickstart::main(args),
+        Some("fig2") => fig2::main(args),
+        Some("fig3") => fig3::main(args),
+        Some("fig4") => fig4::main(args),
+        Some("table1") => table1::main(args),
+        Some("fluid") => fluid_exp::main(args),
+        Some("ablation") => ablation::main(args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' (try `goodspeed help`)")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "goodspeed — fair-goodput speculative-decoding coordinator (paper reproduction)
+
+USAGE: goodspeed <command> [options]
+
+COMMANDS
+  run        one serving run        --scenario <id> --policy <p> --rounds <n>
+                                    --transport channel|tcp --engine xla|mock
+                                    --capacity <C> --clients <n> --no-network
+  quickstart single client speculative vs autoregressive speedup
+  fig2       goodput estimation fidelity (paper Fig 2)   --out results
+  fig3       wall-time decomposition   (paper Fig 3)     --out results
+  fig4       utility convergence       (paper Fig 4)     --out results [--real]
+  table1     Table I scenario matrix                     --out results
+  fluid      fluid-limit / Theorem 1 validation          --out results
+  ablation   eta/beta/C sweeps, greedy-vs-DP, buckets    --out results
+
+Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke."
+    );
+}

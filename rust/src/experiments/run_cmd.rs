@@ -1,0 +1,70 @@
+//! `goodspeed run` — one configurable serving run with a full report.
+
+use anyhow::{anyhow, Result};
+
+use super::engine_from_args;
+use crate::cli::Args;
+use crate::configsys::{Policy, Scenario};
+use crate::coordinator::{run_serving, RunConfig, Transport};
+use crate::metrics::csv::write_rounds;
+
+/// Build a scenario from CLI overrides.
+pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
+    let id = args.get_or("scenario", "qwen-8c-150");
+    let mut s = Scenario::preset(&id)
+        .ok_or_else(|| anyhow!("unknown scenario '{id}' ({:?})", Scenario::preset_ids()))?;
+    if let Some(c) = args.get_parse::<usize>("capacity") {
+        s.capacity = c;
+    }
+    if let Some(n) = args.get_parse::<usize>("clients") {
+        s.num_clients = n;
+        s.links = Scenario::default_links(n, s.seed);
+    }
+    if let Some(r) = args.get_parse::<u64>("rounds") {
+        s.rounds = r;
+    }
+    if let Some(seed) = args.get_parse::<u64>("seed") {
+        s.seed = seed;
+        s.links = Scenario::default_links(s.num_clients, seed);
+    }
+    if let Some(m) = args.get_parse::<usize>("max-new-tokens") {
+        s.max_new_tokens = m;
+    }
+    if let Some(e) = args.get_parse::<f64>("eta") {
+        s.eta = crate::configsys::Smoothing::Fixed(e);
+    }
+    if let Some(b) = args.get_parse::<f64>("beta") {
+        s.beta = crate::configsys::Smoothing::Fixed(b);
+    }
+    if let Some(st) = args.get_parse::<f64>("stickiness") {
+        s.domain_stickiness = st;
+    }
+    s.validate().map_err(|e| anyhow!("scenario: {e}"))?;
+    Ok(s)
+}
+
+pub fn main(args: &Args) -> Result<()> {
+    let scenario = scenario_from_args(args)?;
+    let policy = Policy::parse(&args.get_or("policy", "goodspeed"))
+        .ok_or_else(|| anyhow!("bad --policy"))?;
+    let transport = Transport::parse(&args.get_or("transport", "channel"))
+        .ok_or_else(|| anyhow!("bad --transport"))?;
+    let simulate_network = !args.flag("no-network");
+    let out_dir = args.get_or("out", "results");
+    let factory = engine_from_args(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    log::info!(
+        "run: scenario={} policy={} transport={transport:?} rounds={}",
+        scenario.id,
+        policy.name(),
+        scenario.rounds
+    );
+    let cfg = RunConfig { scenario: scenario.clone(), policy, transport, simulate_network };
+    let out = run_serving(&cfg, factory)?;
+    out.summary.print(&format!("{} / {}", scenario.id, policy.name()));
+    let path = format!("{out_dir}/run_{}_{}.csv", scenario.id, policy.name());
+    write_rounds(&path, &out.recorder)?;
+    println!("per-round CSV -> {path}");
+    Ok(())
+}

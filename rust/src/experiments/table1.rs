@@ -1,0 +1,98 @@
+//! Table I — the scenario matrix: every configuration row run end-to-end,
+//! reporting goodput / throughput / fairness per (row, C-variant, policy).
+
+use anyhow::{anyhow, Result};
+
+use super::engine_from_args;
+use crate::cli::Args;
+use crate::configsys::{Policy, Scenario};
+use crate::coordinator::{run_serving, RunConfig, Transport};
+use crate::metrics::csv::write_csv;
+
+pub struct Table1Row {
+    pub scenario: String,
+    pub capacity: usize,
+    pub policy: &'static str,
+    pub goodput_per_round: f64,
+    pub tokens_per_sec: f64,
+    pub jain: f64,
+    pub mean_latency_rounds: f64,
+}
+
+/// The (preset, C variants) grid exactly as Table I lists it.
+pub fn grid() -> Vec<(&'static str, Vec<usize>)> {
+    vec![
+        ("qwen-4c-50", vec![24, 28]),
+        ("qwen-8c-150", vec![16, 20]),
+        ("llama-8c-150", vec![16, 20]),
+    ]
+}
+
+pub fn main(args: &Args) -> Result<()> {
+    let out_dir = args.get_or("out", "results");
+    let rounds = args.get_parse::<u64>("rounds").unwrap_or(150);
+    let policies = args.get_or("policies", "goodspeed,fixed-s");
+    let factory = engine_from_args(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let mut rows = Vec::new();
+    for (preset, capacities) in grid() {
+        for &c in &capacities {
+            for policy in Policy::all() {
+                if !policies.contains(policy.name()) {
+                    continue;
+                }
+                let mut s = Scenario::preset(preset).unwrap();
+                s.capacity = c;
+                s.rounds = rounds;
+                log::info!("table1: {preset} C={c} {}", policy.name());
+                let cfg = RunConfig {
+                    scenario: s,
+                    policy,
+                    transport: Transport::Channel,
+                    simulate_network: false,
+                };
+                let out = run_serving(&cfg, factory.clone())?;
+                rows.push(Table1Row {
+                    scenario: preset.to_string(),
+                    capacity: c,
+                    policy: policy.name(),
+                    goodput_per_round: out.summary.total_tokens / out.summary.rounds as f64,
+                    tokens_per_sec: out.summary.tokens_per_sec,
+                    jain: out.summary.jain,
+                    mean_latency_rounds: out.summary.mean_request_latency_rounds,
+                });
+            }
+        }
+    }
+    let csv_path = format!("{out_dir}/table1_scenarios.csv");
+    write_csv(
+        &csv_path,
+        &["scenario", "C", "policy", "goodput_per_round", "tokens_per_sec", "jain", "latency_rounds"],
+        rows.iter().map(|r| {
+            vec![
+                r.scenario.clone(),
+                r.capacity.to_string(),
+                r.policy.to_string(),
+                format!("{:.3}", r.goodput_per_round),
+                format!("{:.1}", r.tokens_per_sec),
+                format!("{:.4}", r.jain),
+                format!("{:.2}", r.mean_latency_rounds),
+            ]
+        }),
+    )?;
+    println!("\nTable I scenario matrix ({rounds} rounds each):");
+    println!(
+        "{:<13} {:>3} {:<10} {:>9} {:>9} {:>7} {:>9}",
+        "scenario", "C", "policy", "tok/round", "tok/s", "jain", "lat(rnds)"
+    );
+    for r in &rows {
+        println!(
+            "{:<13} {:>3} {:<10} {:>9.2} {:>9.1} {:>7.4} {:>9.2}",
+            r.scenario, r.capacity, r.policy, r.goodput_per_round, r.tokens_per_sec, r.jain,
+            r.mean_latency_rounds
+        );
+    }
+    println!("csv -> {csv_path}");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! # GoodSpeed
+//!
+//! Reproduction of *"GoodSpeed: Optimizing Fair Goodput with Adaptive
+//! Speculative Decoding in Distributed Edge Inference"* (CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: draft-server
+//!   actors, verification server, FIFO batching, rejection-sampling
+//!   verification, smoothed estimators (paper eqs. 3–4), and the gradient
+//!   scheduler (GOODSPEED-SCHED, eq. 5) with Fixed-S / Random-S baselines.
+//! * **Layer 2** — `python/compile/model.py`: the tiny-transformer model
+//!   zoo AOT-lowered to HLO text at build time.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas flash-attention and
+//!   fused verification kernels inside those graphs.
+//!
+//! Python never runs at serving time: `runtime::XlaEngine` loads the HLO
+//! artifacts via PJRT (CPU) and executes them from the Rust hot path.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cli;
+pub mod configsys;
+pub mod coordinator;
+pub mod draft;
+pub mod experiments;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sched;
+pub mod simulate;
+pub mod spec;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

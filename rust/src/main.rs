@@ -1,0 +1,12 @@
+//! GoodSpeed launcher — see `goodspeed help`.
+
+use goodspeed::experiments;
+
+fn main() {
+    goodspeed::util::logger::init();
+    let args = goodspeed::cli::Args::parse_env();
+    if let Err(e) = experiments::dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,102 @@
+//! CSV export for figure regeneration (`results/*.csv`).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::recorder::Recorder;
+
+/// Escape a CSV field (we only emit simple fields, but be correct anyway).
+fn esc(s: &str) -> String {
+    if s.contains([',', '"', '\n']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Generic writer: header + row iterator.
+pub fn write_csv<P: AsRef<Path>>(
+    path: P,
+    header: &[&str],
+    rows: impl IntoIterator<Item = Vec<String>>,
+) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {:?}", path.as_ref()))?,
+    );
+    writeln!(f, "{}", header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","))?;
+    }
+    Ok(())
+}
+
+/// Full per-round, per-client dump of a run.
+pub fn write_rounds<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
+    let header = [
+        "round", "client", "s_used", "accepted", "goodput", "mean_ratio", "alpha_hat", "x_beta",
+        "next_alloc", "recv_ns", "verify_ns", "send_ns",
+    ];
+    let rows = rec.rounds.iter().flat_map(|r| {
+        r.clients.iter().enumerate().map(move |(i, c)| {
+            vec![
+                r.round.to_string(),
+                i.to_string(),
+                c.s_used.to_string(),
+                c.accepted.to_string(),
+                c.goodput.to_string(),
+                format!("{:.6}", c.mean_ratio),
+                format!("{:.6}", c.alpha_hat),
+                format!("{:.6}", c.x_beta),
+                c.next_alloc.to_string(),
+                r.recv_ns.to_string(),
+                r.verify_ns.to_string(),
+                r.send_ns.to_string(),
+            ]
+        })
+    });
+    write_csv(path, &header, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::recorder::{ClientRoundMetrics, RoundRecord};
+
+    #[test]
+    fn escapes_fields() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a,b"), "\"a,b\"");
+        assert_eq!(esc("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn writes_rounds_csv() {
+        let dir = std::env::temp_dir().join("goodspeed_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rounds.csv");
+        let mut rec = Recorder::new(2);
+        rec.push(RoundRecord {
+            round: 0,
+            recv_ns: 10,
+            verify_ns: 20,
+            send_ns: 1,
+            clients: vec![
+                ClientRoundMetrics { goodput: 2, ..Default::default() },
+                ClientRoundMetrics { goodput: 3, ..Default::default() },
+            ],
+        });
+        write_rounds(&path, &rec).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3); // header + 2 clients
+        assert!(lines[0].starts_with("round,client"));
+        assert!(lines[1].starts_with("0,0,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

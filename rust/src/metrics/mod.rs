@@ -1,0 +1,7 @@
+//! Metrics: per-round records, CSV export, SVG charts, report tables.
+
+pub mod csv;
+pub mod recorder;
+pub mod svg;
+
+pub use recorder::{ClientRoundMetrics, Recorder, RoundRecord, RunSummary};

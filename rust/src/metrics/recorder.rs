@@ -1,0 +1,206 @@
+//! Per-round experiment records — everything Figs 2–4 and Table I need.
+
+use crate::sched::utility::{system_utility, Utility};
+use crate::util::stats::jain_index;
+
+/// One client's slice of one round.
+#[derive(Clone, Debug, Default)]
+pub struct ClientRoundMetrics {
+    /// Draft length actually used this round.
+    pub s_used: usize,
+    /// Accepted draft tokens m.
+    pub accepted: usize,
+    /// Realized goodput x_i(t) = m + 1.
+    pub goodput: usize,
+    /// Mean acceptance ratio (eq. 3 empirical term).
+    pub mean_ratio: f64,
+    /// Estimates α̂_i(t), X_i^β(t) *after* the round's update.
+    pub alpha_hat: f64,
+    pub x_beta: f64,
+    /// Allocation for the next round.
+    pub next_alloc: usize,
+}
+
+/// One coordinator round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// Wall-time decomposition (paper Fig 3): waiting for draft batches,
+    /// verification (+ scheduling), sending verdicts.
+    pub recv_ns: u64,
+    pub verify_ns: u64,
+    pub send_ns: u64,
+    pub clients: Vec<ClientRoundMetrics>,
+}
+
+impl RoundRecord {
+    pub fn total_goodput(&self) -> usize {
+        self.clients.iter().map(|c| c.goodput).sum()
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.recv_ns + self.verify_ns + self.send_ns
+    }
+}
+
+/// Accumulates rounds and derives the report quantities.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub rounds: Vec<RoundRecord>,
+    /// Per-request latency in rounds, as requests complete.
+    pub request_latency_rounds: Vec<u64>,
+    /// Cumulative realized goodput per client (for x̄(T) and Fig 4).
+    cum_goodput: Vec<f64>,
+}
+
+impl Recorder {
+    pub fn new(n_clients: usize) -> Self {
+        Recorder {
+            rounds: Vec::new(),
+            request_latency_rounds: Vec::new(),
+            cum_goodput: vec![0.0; n_clients],
+        }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        for (i, c) in rec.clients.iter().enumerate() {
+            self.cum_goodput[i] += c.goodput as f64;
+        }
+        self.rounds.push(rec);
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.cum_goodput.len()
+    }
+
+    /// Empirical average goodput x̄_i(T) = (1/T) Σ_t x_i(t).
+    pub fn avg_goodput(&self) -> Vec<f64> {
+        let t = self.rounds.len().max(1) as f64;
+        self.cum_goodput.iter().map(|&g| g / t).collect()
+    }
+
+    /// U(x̄(T)) — the Fig 4 curve evaluated at the current T.
+    pub fn utility_of_avg(&self, u: &dyn Utility) -> f64 {
+        system_utility(u, &self.avg_goodput())
+    }
+
+    pub fn summary(&self, wall_secs: f64) -> RunSummary {
+        let t = self.rounds.len();
+        let avg = self.avg_goodput();
+        let total_tokens: f64 = self.cum_goodput.iter().sum();
+        let mean_latency = if self.request_latency_rounds.is_empty() {
+            0.0
+        } else {
+            self.request_latency_rounds.iter().sum::<u64>() as f64
+                / self.request_latency_rounds.len() as f64
+        };
+        let (mut recv, mut verify, mut send) = (0u64, 0u64, 0u64);
+        for r in &self.rounds {
+            recv += r.recv_ns;
+            verify += r.verify_ns;
+            send += r.send_ns;
+        }
+        RunSummary {
+            rounds: t as u64,
+            per_client_goodput: avg.clone(),
+            total_tokens,
+            tokens_per_sec: if wall_secs > 0.0 { total_tokens / wall_secs } else { 0.0 },
+            jain: jain_index(&avg),
+            mean_request_latency_rounds: mean_latency,
+            requests_completed: self.request_latency_rounds.len() as u64,
+            recv_secs: recv as f64 * 1e-9,
+            verify_secs: verify as f64 * 1e-9,
+            send_secs: send as f64 * 1e-9,
+            wall_secs,
+        }
+    }
+}
+
+/// End-of-run report row (Table I scenarios, Fig 3 decomposition…).
+#[derive(Clone, Debug, Default)]
+pub struct RunSummary {
+    pub rounds: u64,
+    pub per_client_goodput: Vec<f64>,
+    pub total_tokens: f64,
+    pub tokens_per_sec: f64,
+    pub jain: f64,
+    pub mean_request_latency_rounds: f64,
+    pub requests_completed: u64,
+    pub recv_secs: f64,
+    pub verify_secs: f64,
+    pub send_secs: f64,
+    pub wall_secs: f64,
+}
+
+impl RunSummary {
+    pub fn print(&self, label: &str) {
+        println!("== {label} ==");
+        println!(
+            "rounds {:>5}  tokens {:>8.0}  throughput {:>8.1} tok/s  jain {:.4}",
+            self.rounds, self.total_tokens, self.tokens_per_sec, self.jain
+        );
+        println!(
+            "requests {:>4}  mean latency {:.2} rounds  wall {:.2}s (recv {:.2} / verify {:.2} / send {:.4})",
+            self.requests_completed,
+            self.mean_request_latency_rounds,
+            self.wall_secs,
+            self.recv_secs,
+            self.verify_secs,
+            self.send_secs
+        );
+        let gp: Vec<String> =
+            self.per_client_goodput.iter().map(|g| format!("{g:.2}")).collect();
+        println!("per-client goodput [{}]", gp.join(", "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::utility::LogUtility;
+
+    fn round(goodputs: &[usize]) -> RoundRecord {
+        RoundRecord {
+            round: 0,
+            recv_ns: 1000,
+            verify_ns: 2000,
+            send_ns: 10,
+            clients: goodputs
+                .iter()
+                .map(|&g| ClientRoundMetrics { goodput: g, ..Default::default() })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn averages_accumulate() {
+        let mut r = Recorder::new(2);
+        r.push(round(&[2, 4]));
+        r.push(round(&[4, 4]));
+        assert_eq!(r.avg_goodput(), vec![3.0, 4.0]);
+        let u = r.utility_of_avg(&LogUtility);
+        assert!((u - (3.0f64.ln() + 4.0f64.ln())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_decomposition_sums() {
+        let mut r = Recorder::new(1);
+        r.push(round(&[3]));
+        r.push(round(&[5]));
+        r.request_latency_rounds.push(4);
+        let s = r.summary(2.0);
+        assert_eq!(s.rounds, 2);
+        assert!((s.total_tokens - 8.0).abs() < 1e-12);
+        assert!((s.tokens_per_sec - 4.0).abs() < 1e-12);
+        assert!((s.recv_secs - 2e-6).abs() < 1e-15);
+        assert_eq!(s.requests_completed, 1);
+        assert!((s.mean_request_latency_rounds - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_record_totals() {
+        let r = round(&[1, 2, 3]);
+        assert_eq!(r.total_goodput(), 6);
+        assert_eq!(r.total_ns(), 3010);
+    }
+}

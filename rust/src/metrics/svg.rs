@@ -1,0 +1,235 @@
+//! Minimal SVG line-chart writer — figures render with zero external
+//! tooling (`results/*.svg` open in any browser).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+const PALETTE: [&str; 8] =
+    ["#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b", "#e377c2", "#7f7f7f"];
+
+/// One polyline.
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+    /// Optional ±band half-width per point (confidence shading, Fig 2).
+    pub band: Option<Vec<f64>>,
+}
+
+pub struct Chart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+    pub width: u32,
+    pub height: u32,
+}
+
+impl Chart {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        Chart {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+            width: 860,
+            height: 480,
+        }
+    }
+
+    pub fn add(&mut self, label: &str, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push(Series { label: label.into(), points, band: None });
+        self
+    }
+
+    pub fn add_with_band(&mut self, label: &str, points: Vec<(f64, f64)>, band: Vec<f64>) {
+        assert_eq!(points.len(), band.len());
+        self.series.push(Series { label: label.into(), points, band: Some(band) });
+    }
+
+    fn bounds(&self) -> (f64, f64, f64, f64) {
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for s in &self.series {
+            for (i, &(x, y)) in s.points.iter().enumerate() {
+                let b = s.band.as_ref().map(|b| b[i]).unwrap_or(0.0);
+                x0 = x0.min(x);
+                x1 = x1.max(x);
+                y0 = y0.min(y - b);
+                y1 = y1.max(y + b);
+            }
+        }
+        if !x0.is_finite() {
+            return (0.0, 1.0, 0.0, 1.0);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let pad = (y1 - y0) * 0.05;
+        (x0, x1, y0 - pad, y1 + pad)
+    }
+
+    pub fn render(&self) -> String {
+        let (w, h) = (self.width as f64, self.height as f64);
+        let (ml, mr, mt, mb) = (70.0, 20.0, 40.0, 55.0);
+        let (x0, x1, y0, y1) = self.bounds();
+        let sx = |x: f64| ml + (x - x0) / (x1 - x0) * (w - ml - mr);
+        let sy = |y: f64| h - mb - (y - y0) / (y1 - y0) * (h - mt - mb);
+        let mut out = String::with_capacity(16 << 10);
+        out.push_str(&format!(
+            "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{}\" height=\"{}\" \
+             font-family=\"sans-serif\" font-size=\"12\">\n",
+            self.width, self.height
+        ));
+        out.push_str(&format!(
+            "<rect width=\"{}\" height=\"{}\" fill=\"white\"/>\n",
+            self.width, self.height
+        ));
+        out.push_str(&format!(
+            "<text x=\"{}\" y=\"22\" text-anchor=\"middle\" font-size=\"15\">{}</text>\n",
+            w / 2.0,
+            xml(&self.title)
+        ));
+        // Axes + gridlines with tick labels.
+        for i in 0..=4 {
+            let fy = y0 + (y1 - y0) * i as f64 / 4.0;
+            let py = sy(fy);
+            out.push_str(&format!(
+                "<line x1=\"{ml}\" y1=\"{py:.1}\" x2=\"{:.1}\" y2=\"{py:.1}\" stroke=\"#ddd\"/>\n",
+                w - mr
+            ));
+            out.push_str(&format!(
+                "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"end\">{}</text>\n",
+                ml - 6.0,
+                py + 4.0,
+                fmt_tick(fy)
+            ));
+            let fx = x0 + (x1 - x0) * i as f64 / 4.0;
+            let px = sx(fx);
+            out.push_str(&format!(
+                "<text x=\"{px:.1}\" y=\"{:.1}\" text-anchor=\"middle\">{}</text>\n",
+                h - mb + 18.0,
+                fmt_tick(fx)
+            ));
+        }
+        out.push_str(&format!(
+            "<line x1=\"{ml}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\" stroke=\"black\"/>\n",
+            h - mb,
+            w - mr,
+            h - mb
+        ));
+        out.push_str(&format!(
+            "<line x1=\"{ml}\" y1=\"{mt}\" x2=\"{ml}\" y2=\"{:.1}\" stroke=\"black\"/>\n",
+            h - mb
+        ));
+        out.push_str(&format!(
+            "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"middle\">{}</text>\n",
+            w / 2.0,
+            h - 12.0,
+            xml(&self.x_label)
+        ));
+        out.push_str(&format!(
+            "<text x=\"16\" y=\"{:.1}\" text-anchor=\"middle\" transform=\"rotate(-90 16 {:.1})\">{}</text>\n",
+            h / 2.0,
+            h / 2.0,
+            xml(&self.y_label)
+        ));
+        // Bands first (under the lines).
+        for (si, s) in self.series.iter().enumerate() {
+            let color = PALETTE[si % PALETTE.len()];
+            if let Some(band) = &s.band {
+                let mut d = String::from("M");
+                for (i, &(x, y)) in s.points.iter().enumerate() {
+                    d.push_str(&format!(" {:.1} {:.1}", sx(x), sy(y + band[i])));
+                }
+                for (i, &(x, y)) in s.points.iter().enumerate().rev() {
+                    d.push_str(&format!(" L {:.1} {:.1}", sx(x), sy(y - band[i])));
+                }
+                d.push('Z');
+                out.push_str(&format!(
+                    "<path d=\"{d}\" fill=\"{color}\" opacity=\"0.15\" stroke=\"none\"/>\n"
+                ));
+            }
+        }
+        for (si, s) in self.series.iter().enumerate() {
+            let color = PALETTE[si % PALETTE.len()];
+            let pts: Vec<String> =
+                s.points.iter().map(|&(x, y)| format!("{:.1},{:.1}", sx(x), sy(y))).collect();
+            out.push_str(&format!(
+                "<polyline points=\"{}\" fill=\"none\" stroke=\"{color}\" stroke-width=\"1.6\"/>\n",
+                pts.join(" ")
+            ));
+            let ly = mt + 16.0 * si as f64 + 8.0;
+            out.push_str(&format!(
+                "<rect x=\"{:.1}\" y=\"{:.1}\" width=\"12\" height=\"3\" fill=\"{color}\"/>\n",
+                ml + 10.0,
+                ly - 4.0
+            ));
+            out.push_str(&format!(
+                "<text x=\"{:.1}\" y=\"{:.1}\">{}</text>\n",
+                ml + 26.0,
+                ly,
+                xml(&s.label)
+            ));
+        }
+        out.push_str("</svg>\n");
+        out
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path.as_ref(), self.render())
+            .with_context(|| format!("writing {:?}", path.as_ref()))
+    }
+}
+
+fn xml(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_valid_svg_with_band() {
+        let mut c = Chart::new("t", "x", "y");
+        c.add("a", vec![(0.0, 1.0), (1.0, 2.0), (2.0, 1.5)]);
+        c.add_with_band("b", vec![(0.0, 0.5), (1.0, 0.7), (2.0, 0.9)], vec![0.1, 0.1, 0.2]);
+        let svg = c.render();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert_eq!(svg.matches("opacity=\"0.15\"").count(), 1);
+        assert!(svg.contains(">t<"));
+    }
+
+    #[test]
+    fn empty_chart_does_not_panic() {
+        let c = Chart::new("empty", "x", "y");
+        let svg = c.render();
+        assert!(svg.contains("</svg>"));
+    }
+
+    #[test]
+    fn xml_escaping() {
+        let mut c = Chart::new("a<b & c", "x", "y");
+        c.add("s", vec![(0.0, 0.0)]);
+        assert!(c.render().contains("a&lt;b &amp; c"));
+    }
+}

@@ -1,0 +1,93 @@
+//! Edge-link model: per-client latency + bandwidth + jitter.
+//!
+//! The paper's Fig 3 attributes most wall time to *receiving* (waiting for
+//! the slowest draft server's upload — which carries the full per-token
+//! proposal distributions, S·V·4 bytes) and *verification*; the model here
+//! reproduces exactly that byte-accounting. Delays are applied as real
+//! sleeps on the draft-server side so coordinator wall-clock measurements
+//! decompose the same way the paper's do.
+
+use std::time::Duration;
+
+use crate::configsys::LinkConfig;
+use crate::util::Rng;
+
+/// Simulated one-way link.
+#[derive(Clone, Debug)]
+pub struct Link {
+    cfg: LinkConfig,
+}
+
+impl Link {
+    pub fn new(cfg: LinkConfig) -> Self {
+        Link { cfg }
+    }
+
+    /// One-way delay for a message of `bytes` with multiplicative jitter.
+    pub fn delay(&self, bytes: usize, rng: &mut Rng) -> Duration {
+        let jitter = 1.0 + self.cfg.jitter * rng.normal();
+        let secs = (self.cfg.latency_s + bytes as f64 / self.cfg.bandwidth_bps.max(1.0))
+            * jitter.clamp(0.25, 4.0);
+        Duration::from_secs_f64(secs.max(0.0))
+    }
+
+    /// Deterministic mean delay (no jitter) — used by the analytic
+    /// simulator where real sleeping would waste wall-clock.
+    pub fn mean_delay(&self, bytes: usize) -> Duration {
+        Duration::from_secs_f64(self.cfg.latency_s + bytes as f64 / self.cfg.bandwidth_bps.max(1.0))
+    }
+
+    pub fn config(&self) -> &LinkConfig {
+        &self.cfg
+    }
+}
+
+/// Uplink payload size of a draft message: prefix tokens + draft tokens +
+/// the full q distributions (the dominant term the paper highlights).
+pub fn draft_msg_bytes(prefix_len: usize, draft_len: usize, vocab: usize) -> usize {
+    let header = 32;
+    header + prefix_len + draft_len + draft_len * vocab * 4
+}
+
+/// Downlink payload of a verdict: accept count + correction + allocation.
+pub fn verdict_msg_bytes() -> usize {
+    24
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link(lat: f64, bw: f64) -> Link {
+        Link::new(LinkConfig { latency_s: lat, bandwidth_bps: bw, jitter: 0.0 })
+    }
+
+    #[test]
+    fn delay_scales_with_bytes() {
+        let l = link(1e-3, 1e6);
+        let d_small = l.mean_delay(1_000);
+        let d_big = l.mean_delay(100_000);
+        assert!((d_small.as_secs_f64() - 2e-3).abs() < 1e-9);
+        assert!((d_big.as_secs_f64() - 0.101).abs() < 1e-9);
+        assert!(d_big > d_small);
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let l = Link::new(LinkConfig { latency_s: 1e-3, bandwidth_bps: 1e9, jitter: 0.5 });
+        let mut rng = Rng::new(0);
+        for _ in 0..1000 {
+            let d = l.delay(100, &mut rng).as_secs_f64();
+            assert!(d >= 0.25e-3 * 0.9 && d <= 4.0e-3 * 1.1, "{d}");
+        }
+    }
+
+    #[test]
+    fn q_distributions_dominate_uplink() {
+        // S=20 drafts over V=256 → q payload ≈ 20 KiB ≫ tokens.
+        let bytes = draft_msg_bytes(100, 20, 256);
+        assert!(bytes > 20_000);
+        assert!(bytes < 21_000);
+        assert!(verdict_msg_bytes() < 100); // paper: sending < 0.1 % of wall
+    }
+}

@@ -1,0 +1,9 @@
+//! Networking substrate: link simulation, wire format, transports.
+
+pub mod link;
+pub mod transport;
+pub mod wire;
+
+pub use link::{draft_msg_bytes, verdict_msg_bytes, Link};
+pub use transport::{channel_transport, ClientPort, ServerSide, TcpTransport};
+pub use wire::{DraftMsg, Message, VerdictMsg};

@@ -1,0 +1,264 @@
+//! Transports between draft servers and the coordinator.
+//!
+//! The coordinator owns one fan-in receiver (true FIFO arrival order — the
+//! paper's verification-server queue) and one sender per client. Two
+//! implementations:
+//! * **channel** — in-process `std::sync::mpsc` (fast, used by tests,
+//!   simulations, and single-machine experiments);
+//! * **tcp** — localhost TCP with the length-prefixed wire format (real
+//!   sockets + serialization; the Fig 3 "distributed" configuration).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::wire::Message;
+
+/// Client-side endpoint held by one draft server.
+pub trait ClientPort: Send {
+    fn send(&mut self, msg: &Message) -> Result<()>;
+    /// Blocking receive.
+    fn recv(&mut self) -> Result<Message>;
+}
+
+/// Coordinator-side endpoints.
+pub struct ServerSide {
+    /// Fan-in of all client messages in arrival order (FIFO queue).
+    pub rx: Receiver<(usize, Message)>,
+    /// Per-client verdict senders.
+    pub txs: Vec<Box<dyn FnMut(&Message) -> Result<()> + Send>>,
+}
+
+// ---------------------------------------------------------------- channel
+
+/// Build an in-process transport for `n` clients.
+pub fn channel_transport(n: usize) -> (ServerSide, Vec<Box<dyn ClientPort>>) {
+    let (fan_tx, fan_rx) = channel::<(usize, Message)>();
+    let mut txs: Vec<Box<dyn FnMut(&Message) -> Result<()> + Send>> = Vec::new();
+    let mut ports: Vec<Box<dyn ClientPort>> = Vec::new();
+    for i in 0..n {
+        let (v_tx, v_rx) = channel::<Message>();
+        let fan = fan_tx.clone();
+        txs.push(Box::new(move |m: &Message| {
+            v_tx.send(m.clone()).map_err(|_| anyhow!("client {i} gone"))
+        }));
+        ports.push(Box::new(ChannelPort { id: i, tx: fan, rx: v_rx }));
+    }
+    (ServerSide { rx: fan_rx, txs }, ports)
+}
+
+struct ChannelPort {
+    id: usize,
+    tx: Sender<(usize, Message)>,
+    rx: Receiver<Message>,
+}
+
+impl ClientPort for ChannelPort {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.tx.send((self.id, msg.clone())).map_err(|_| anyhow!("coordinator gone"))
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.rx.recv().map_err(|_| anyhow!("coordinator closed"))
+    }
+}
+
+// -------------------------------------------------------------------- tcp
+
+fn write_frame(stream: &mut TcpStream, msg: &Message) -> Result<()> {
+    let frame = msg.encode();
+    stream.write_all(&frame).context("tcp write")?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<Message> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf).context("tcp read len")?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > 64 << 20 {
+        return Err(anyhow!("tcp frame too large: {len}"));
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload).context("tcp read payload")?;
+    Message::decode(&payload)
+}
+
+struct TcpPort {
+    stream: TcpStream,
+}
+
+impl ClientPort for TcpPort {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        write_frame(&mut self.stream, msg)
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        read_frame(&mut self.stream)
+    }
+}
+
+/// TCP transport on an ephemeral localhost port. The coordinator side
+/// spawns one reader thread per connection, all feeding the fan-in channel
+/// (arrival order = socket readiness order).
+pub struct TcpTransport {
+    pub server: ServerSide,
+    pub ports: Vec<Box<dyn ClientPort>>,
+    reader_handles: Vec<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    pub fn new(n: usize) -> Result<TcpTransport> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
+        let addr = listener.local_addr()?;
+        // Client connections (same process, different threads in prod use).
+        let mut client_streams = Vec::with_capacity(n);
+        let mut server_streams = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = TcpStream::connect(addr).with_context(|| format!("connect {i}"))?;
+            let (s, _) = listener.accept().context("accept")?;
+            c.set_nodelay(true).ok();
+            s.set_nodelay(true).ok();
+            client_streams.push(c);
+            server_streams.push(s);
+        }
+        let (fan_tx, fan_rx) = channel::<(usize, Message)>();
+        let mut txs: Vec<Box<dyn FnMut(&Message) -> Result<()> + Send>> = Vec::new();
+        let mut reader_handles = Vec::new();
+        for (i, s) in server_streams.into_iter().enumerate() {
+            let mut writer = s.try_clone().context("clone stream")?;
+            txs.push(Box::new(move |m: &Message| write_frame(&mut writer, m)));
+            let fan = fan_tx.clone();
+            let mut reader = s;
+            reader_handles.push(std::thread::spawn(move || loop {
+                match read_frame(&mut reader) {
+                    Ok(Message::Shutdown) => {
+                        let _ = fan.send((i, Message::Shutdown));
+                        break;
+                    }
+                    Ok(m) => {
+                        if fan.send((i, m)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break, // peer closed
+                }
+            }));
+        }
+        let ports = client_streams
+            .into_iter()
+            .map(|s| Box::new(TcpPort { stream: s }) as Box<dyn ClientPort>)
+            .collect();
+        Ok(TcpTransport { server: ServerSide { rx: fan_rx, txs }, ports, reader_handles })
+    }
+
+    pub fn join(self) {
+        for h in self.reader_handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::{DraftMsg, VerdictMsg};
+
+    fn draft(id: u32, round: u64) -> Message {
+        Message::Draft(DraftMsg {
+            client_id: id,
+            round,
+            prefix: vec![1, 2, 3],
+            prompt_len: 3,
+            draft: vec![7],
+            q_probs: vec![0.25; 4],
+            new_request: round == 0,
+            draft_wall_ns: 5,
+        })
+    }
+
+    #[test]
+    fn channel_roundtrip_preserves_fifo() {
+        let (server, mut ports) = channel_transport(3);
+        for (i, p) in ports.iter_mut().enumerate() {
+            p.send(&draft(i as u32, 0)).unwrap();
+        }
+        for expect in 0..3usize {
+            let (id, msg) = server.rx.recv().unwrap();
+            assert_eq!(id, expect); // sent sequentially → FIFO order
+            match msg {
+                Message::Draft(d) => assert_eq!(d.client_id as usize, expect),
+                _ => panic!("wrong type"),
+            }
+        }
+    }
+
+    #[test]
+    fn channel_verdicts_routed_per_client() {
+        let (mut server, mut ports) = channel_transport(2);
+        let v = Message::Verdict(VerdictMsg {
+            client_id: 1,
+            round: 0,
+            accepted: 2,
+            correction: 9,
+            next_alloc: 4,
+        });
+        (server.txs[1])(&v).unwrap();
+        let got = ports[1].recv().unwrap();
+        assert_eq!(got, v);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let mut t = TcpTransport::new(2).unwrap();
+        // client -> server
+        t.ports[1].send(&draft(1, 3)).unwrap();
+        let (id, msg) = t.server.rx.recv().unwrap();
+        assert_eq!(id, 1);
+        assert!(matches!(msg, Message::Draft(ref d) if d.round == 3));
+        // server -> client
+        let v = Message::Verdict(VerdictMsg {
+            client_id: 0,
+            round: 3,
+            accepted: 1,
+            correction: 2,
+            next_alloc: 8,
+        });
+        (t.server.txs[0])(&v).unwrap();
+        assert_eq!(t.ports[0].recv().unwrap(), v);
+        // shutdown both clients, reader threads exit
+        for p in t.ports.iter_mut() {
+            p.send(&Message::Shutdown).unwrap();
+        }
+        let mut shutdowns = 0;
+        while let Ok((_, m)) = t.server.rx.recv() {
+            if m == Message::Shutdown {
+                shutdowns += 1;
+                if shutdowns == 2 {
+                    break;
+                }
+            }
+        }
+        drop(t.ports);
+    }
+
+    #[test]
+    fn tcp_large_payload() {
+        let mut t = TcpTransport::new(1).unwrap();
+        let big = Message::Draft(DraftMsg {
+            client_id: 0,
+            round: 1,
+            prefix: vec![5; 200],
+            prompt_len: 10,
+            draft: vec![1; 32],
+            q_probs: vec![0.1; 32 * 256], // 32 KiB — the paper's q payload
+            new_request: false,
+            draft_wall_ns: 0,
+        });
+        t.ports[0].send(&big).unwrap();
+        let (_, got) = t.server.rx.recv().unwrap();
+        assert_eq!(got, big);
+    }
+}

@@ -1,0 +1,279 @@
+//! Binary wire format (hand-rolled; no serde in the offline crate set).
+//!
+//! Length-prefixed frames: `u32 LE total-length | u8 tag | payload`.
+//! Numbers are little-endian; vectors are `u32 LE count` + raw elements.
+//! Used verbatim by the TCP transport and for exact byte accounting by the
+//! in-process transport.
+
+use anyhow::{anyhow, Result};
+
+/// Coordinator ⇄ draft-server protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Draft server → coordinator: one round's speculative batch.
+    Draft(DraftMsg),
+    /// Coordinator → draft server: verdict + next-round allocation.
+    Verdict(VerdictMsg),
+    /// Orderly end of stream.
+    Shutdown,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DraftMsg {
+    pub client_id: u32,
+    pub round: u64,
+    /// Full current prefix (prompt + accepted output so far).
+    pub prefix: Vec<u8>,
+    /// Length of the prompt within `prefix`.
+    pub prompt_len: u32,
+    /// Drafted tokens (length = this round's allocation, may be 0).
+    pub draft: Vec<u8>,
+    /// Proposal distributions, row-major `[draft.len() * vocab]` — the
+    /// dominant payload (the paper's transmission-cost observation).
+    pub q_probs: Vec<f32>,
+    /// True when `prefix` starts a fresh request.
+    pub new_request: bool,
+    /// Draft-side compute time for this batch (ns), for metrics.
+    pub draft_wall_ns: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerdictMsg {
+    pub client_id: u32,
+    pub round: u64,
+    /// Accepted draft prefix length m.
+    pub accepted: u32,
+    /// Correction (m < S) or bonus (m == S) token.
+    pub correction: u8,
+    /// Next-round draft allocation S_i(t+1).
+    pub next_alloc: u32,
+}
+
+const TAG_DRAFT: u8 = 1;
+const TAG_VERDICT: u8 = 2;
+const TAG_SHUTDOWN: u8 = 3;
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Writer { buf: Vec::with_capacity(256) }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u8(&mut self) -> Result<u8> {
+        let v = *self.buf.get(self.pos).ok_or_else(|| anyhow!("wire: eof"))?;
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(anyhow!("wire: eof (want {n} at {})", self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+impl Message {
+    /// Encode to a length-prefixed frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(0); // frame length placeholder
+        match self {
+            Message::Draft(d) => {
+                w.u8(TAG_DRAFT);
+                w.u32(d.client_id);
+                w.u64(d.round);
+                w.bytes(&d.prefix);
+                w.u32(d.prompt_len);
+                w.bytes(&d.draft);
+                w.f32s(&d.q_probs);
+                w.u8(d.new_request as u8);
+                w.u64(d.draft_wall_ns);
+            }
+            Message::Verdict(v) => {
+                w.u8(TAG_VERDICT);
+                w.u32(v.client_id);
+                w.u64(v.round);
+                w.u32(v.accepted);
+                w.u8(v.correction);
+                w.u32(v.next_alloc);
+            }
+            Message::Shutdown => w.u8(TAG_SHUTDOWN),
+        }
+        let total = (w.buf.len() - 4) as u32;
+        w.buf[..4].copy_from_slice(&total.to_le_bytes());
+        w.buf
+    }
+
+    /// Decode the payload of one frame (without the 4-byte length prefix).
+    pub fn decode(payload: &[u8]) -> Result<Message> {
+        let mut r = Reader { buf: payload, pos: 0 };
+        let msg = match r.u8()? {
+            TAG_DRAFT => Message::Draft(DraftMsg {
+                client_id: r.u32()?,
+                round: r.u64()?,
+                prefix: r.bytes()?,
+                prompt_len: r.u32()?,
+                draft: r.bytes()?,
+                q_probs: r.f32s()?,
+                new_request: r.u8()? != 0,
+                draft_wall_ns: r.u64()?,
+            }),
+            TAG_VERDICT => Message::Verdict(VerdictMsg {
+                client_id: r.u32()?,
+                round: r.u64()?,
+                accepted: r.u32()?,
+                correction: r.u8()?,
+                next_alloc: r.u32()?,
+            }),
+            TAG_SHUTDOWN => Message::Shutdown,
+            t => return Err(anyhow!("wire: unknown tag {t}")),
+        };
+        if !r.done() {
+            return Err(anyhow!("wire: trailing bytes"));
+        }
+        Ok(msg)
+    }
+
+    /// Encoded size (for network-delay accounting without encoding).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Message::Draft(d) => {
+                4 + 1 + 4 + 8 + (4 + d.prefix.len()) + 4 + (4 + d.draft.len())
+                    + (4 + d.q_probs.len() * 4) + 1 + 8
+            }
+            Message::Verdict(_) => 4 + 1 + 4 + 8 + 4 + 1 + 4,
+            Message::Shutdown => 4 + 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn sample_draft(rng: &mut crate::util::Rng) -> DraftMsg {
+        let s = rng.below(6) as usize;
+        let v = 16usize;
+        DraftMsg {
+            client_id: rng.below(8) as u32,
+            round: rng.next_u64() % 1000,
+            prefix: (0..rng.below(40)).map(|_| rng.below(256) as u8).collect(),
+            prompt_len: rng.below(20) as u32,
+            draft: (0..s).map(|_| rng.below(256) as u8).collect(),
+            q_probs: (0..s * v).map(|_| rng.f32()).collect(),
+            new_request: rng.bool(0.5),
+            draft_wall_ns: rng.next_u64() % 1_000_000,
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        proptest::check("wire_roundtrip", proptest::default_cases(), |rng| {
+            let msgs = [
+                Message::Draft(sample_draft(rng)),
+                Message::Verdict(VerdictMsg {
+                    client_id: rng.below(8) as u32,
+                    round: rng.next_u64() % 1000,
+                    accepted: rng.below(33) as u32,
+                    correction: rng.below(256) as u8,
+                    next_alloc: rng.below(33) as u32,
+                }),
+                Message::Shutdown,
+            ];
+            for m in msgs {
+                let frame = m.encode();
+                let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+                assert_eq!(len, frame.len() - 4);
+                assert_eq!(len + 4, m.wire_bytes(), "wire_bytes must match encode");
+                let back = Message::decode(&frame[4..]).unwrap();
+                assert_eq!(m, back);
+            }
+        });
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let frame = Message::Shutdown.encode();
+        assert!(Message::decode(&frame[4..]).is_ok());
+        assert!(Message::decode(&[99]).is_err());
+        assert!(Message::decode(&[]).is_err());
+        // truncated draft
+        let d = Message::Draft(DraftMsg {
+            client_id: 0,
+            round: 0,
+            prefix: vec![1, 2, 3],
+            prompt_len: 3,
+            draft: vec![4],
+            q_probs: vec![0.5; 16],
+            new_request: false,
+            draft_wall_ns: 0,
+        });
+        let frame = d.encode();
+        assert!(Message::decode(&frame[4..frame.len() - 2]).is_err());
+        // trailing garbage
+        let mut long = frame[4..].to_vec();
+        long.push(0);
+        assert!(Message::decode(&long).is_err());
+    }
+}

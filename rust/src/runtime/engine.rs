@@ -1,0 +1,147 @@
+//! Engine abstractions: the seam between the Rust coordinator (L3) and the
+//! AOT-compiled model graphs (L2/L1).
+//!
+//! Two implementations:
+//! * [`crate::runtime::XlaEngineFactory`] — loads `artifacts/*.hlo.txt` via
+//!   PJRT (the production path; python never runs at serving time);
+//! * [`crate::runtime::MockEngineFactory`] — a deterministic synthetic
+//!   "world model" with controllable draft/target divergence so every test
+//!   and benchmark runs without artifacts.
+//!
+//! PJRT objects are `Rc`-based (not `Send`), so factories hand out engines
+//! *inside* the thread that will use them: `EngineFactory` is `Send + Sync`,
+//! the engines it builds are not required to be.
+
+use anyhow::Result;
+
+/// Draft-side engine: owns the KV cache for one request stream.
+///
+/// Position semantics: after `prefill(prompt)` the cache holds rows
+/// `0..prompt.len()` and `position() == prompt.len()`; the returned
+/// distribution predicts the token at index `position()`. Each
+/// `step(tok)` writes `tok` at row `position()`, advances by one, and
+/// returns the distribution for the next index. `rewind(p)` discards rows
+/// `>= p` (used when verification rejects a draft suffix — stale rows are
+/// harmless because causal masking never looks past `position()`).
+pub trait Drafter {
+    fn prefill(&mut self, prompt: &[u8]) -> Result<Vec<f32>>;
+    fn step(&mut self, tok: u8) -> Result<Vec<f32>>;
+    fn position(&self) -> usize;
+    fn rewind(&mut self, position: usize);
+    fn max_seq(&self) -> usize;
+    fn vocab(&self) -> usize;
+}
+
+/// One verification round over a batch of clients (the bucketed shapes are
+/// chosen by the implementation from `batch`/`seq`).
+#[derive(Clone, Debug)]
+pub struct VerifyRequest {
+    /// Row-major `[batch, seq]` token ids (prefix ++ draft, right-padded).
+    pub tokens: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+    /// Row-major `[batch, k]` drafted token ids (right-padded).
+    pub draft_tok: Vec<i32>,
+    /// Row-major `[batch, k, vocab]` draft proposal distributions.
+    pub q_probs: Vec<f32>,
+    /// Prefix length per client (draft j sits at sequence index pos0+j).
+    pub pos0: Vec<i32>,
+    pub k: usize,
+    pub vocab: usize,
+}
+
+/// Verification outputs (see `python/compile/model.py::verify_graph`).
+#[derive(Clone, Debug)]
+pub struct VerifyOutput {
+    /// `[batch, k]` min(1, p/q) at each draft position.
+    pub ratio: Vec<f32>,
+    /// `[batch, k, vocab]` normalized residual distributions.
+    pub resid: Vec<f32>,
+    /// `[batch, vocab]` target distribution after the full draft.
+    pub bonus: Vec<f32>,
+}
+
+impl VerifyOutput {
+    pub fn ratio_row(&self, b: usize, k: usize) -> &[f32] {
+        &self.ratio[b * k..(b + 1) * k]
+    }
+
+    pub fn resid_rows(&self, b: usize, k: usize, vocab: usize) -> &[f32] {
+        &self.resid[b * k * vocab..(b + 1) * k * vocab]
+    }
+
+    pub fn bonus_row(&self, b: usize, vocab: usize) -> &[f32] {
+        &self.bonus[b * vocab..(b + 1) * vocab]
+    }
+}
+
+/// Target-side verification engine.
+pub trait Verifier {
+    fn verify(&mut self, req: &VerifyRequest) -> Result<VerifyOutput>;
+    /// Available (batch, seq) shape buckets, ascending.
+    fn buckets(&self) -> Vec<(usize, usize)>;
+}
+
+/// Builds engines inside consumer threads.
+pub trait EngineFactory: Send + Sync {
+    fn make_drafter(&self, model: &str) -> Result<Box<dyn Drafter>>;
+    fn make_verifier(&self, family: &str) -> Result<Box<dyn Verifier>>;
+    /// Optional autoregressive *target* stepper for baseline comparisons
+    /// (quickstart's "plain decoding" lane).
+    fn make_target_stepper(&self, family: &str) -> Result<Box<dyn Drafter>>;
+    fn vocab(&self) -> usize;
+    fn max_seq(&self) -> usize;
+    fn verify_k(&self) -> usize;
+}
+
+/// Pick the smallest bucket covering (need_batch, need_seq); falls back to
+/// the largest available (callers must then clamp).
+pub fn pick_bucket(buckets: &[(usize, usize)], need_batch: usize, need_seq: usize) -> (usize, usize) {
+    let mut best: Option<(usize, usize)> = None;
+    for &(b, s) in buckets {
+        if b >= need_batch && s >= need_seq {
+            let better = match best {
+                None => true,
+                Some((bb, bs)) => (b, s) < (bb, bs) || (b * s) < (bb * bs),
+            };
+            if better {
+                best = Some((b, s));
+            }
+        }
+    }
+    best.unwrap_or_else(|| *buckets.iter().max_by_key(|(b, s)| b * s).expect("no buckets"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_picks_smallest_fit() {
+        let buckets = vec![(4, 128), (4, 256), (8, 128), (8, 256)];
+        assert_eq!(pick_bucket(&buckets, 3, 100), (4, 128));
+        assert_eq!(pick_bucket(&buckets, 4, 129), (4, 256));
+        assert_eq!(pick_bucket(&buckets, 5, 50), (8, 128));
+        assert_eq!(pick_bucket(&buckets, 8, 256), (8, 256));
+    }
+
+    #[test]
+    fn bucket_falls_back_to_largest() {
+        let buckets = vec![(4, 128), (8, 256)];
+        assert_eq!(pick_bucket(&buckets, 16, 512), (8, 256));
+    }
+
+    #[test]
+    fn verify_output_row_views() {
+        let k = 2;
+        let v = 3;
+        let out = VerifyOutput {
+            ratio: vec![0.1, 0.2, 0.3, 0.4],
+            resid: (0..12).map(|x| x as f32).collect(),
+            bonus: vec![0.0, 1.0, 0.0, 0.5, 0.25, 0.25],
+        };
+        assert_eq!(out.ratio_row(1, k), &[0.3, 0.4]);
+        assert_eq!(out.resid_rows(1, k, v), &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(out.bonus_row(1, v), &[0.5, 0.25, 0.25]);
+    }
+}

@@ -1,0 +1,246 @@
+//! Typed view of `artifacts/manifest.json` (written by `python -m
+//! compile.aot`): the contract between the build-time python compiler and
+//! the serving-time Rust loader — model configs, parameter ordering, HLO
+//! file layout, and verify shape buckets.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::configsys::Value;
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub param_count: usize,
+    /// `[L, 2, S, H, dh]`.
+    pub cache_shape: Vec<usize>,
+    /// Flat parameter order (matches HLO entry parameters 0..n).
+    pub param_names: Vec<String>,
+    pub weights_npz: String,
+    pub prefill_hlo: String,
+    pub step_hlo: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct VerifyBucket {
+    pub batch: usize,
+    pub seq: usize,
+    pub k: usize,
+    pub hlo: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct FamilyEntry {
+    pub target: String,
+    pub drafts: Vec<String>,
+    pub verify_buckets: Vec<VerifyBucket>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub verify_k: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub families: BTreeMap<String, FamilyEntry>,
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    v.get(key).and_then(Value::as_usize).ok_or_else(|| anyhow!("manifest missing '{key}'"))
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    Ok(v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("manifest missing '{key}'"))?
+        .to_string())
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+        Self::from_value(&v, root)
+    }
+
+    pub fn from_value(v: &Value, root: PathBuf) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        for (name, m) in v.get("models").and_then(Value::as_object).into_iter().flatten() {
+            let param_names = m
+                .get("param_names")
+                .and_then(Value::as_array)
+                .ok_or_else(|| anyhow!("model {name}: missing param_names"))?
+                .iter()
+                .map(|x| x.as_str().unwrap_or_default().to_string())
+                .collect();
+            let cache_shape = m
+                .get("cache_shape")
+                .and_then(Value::as_array)
+                .ok_or_else(|| anyhow!("model {name}: missing cache_shape"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    n_layers: req_usize(m, "n_layers")?,
+                    d_model: req_usize(m, "d_model")?,
+                    n_heads: req_usize(m, "n_heads")?,
+                    d_ff: req_usize(m, "d_ff")?,
+                    param_count: req_usize(m, "param_count")?,
+                    cache_shape,
+                    param_names,
+                    weights_npz: req_str(m, "weights_npz")?,
+                    prefill_hlo: req_str(m, "prefill_hlo")?,
+                    step_hlo: req_str(m, "step_hlo")?,
+                },
+            );
+        }
+        let mut families = BTreeMap::new();
+        for (name, f) in v.get("families").and_then(Value::as_object).into_iter().flatten() {
+            let verify_buckets = f
+                .get("verify_buckets")
+                .and_then(Value::as_array)
+                .ok_or_else(|| anyhow!("family {name}: missing verify_buckets"))?
+                .iter()
+                .map(|b| {
+                    Ok(VerifyBucket {
+                        batch: req_usize(b, "batch")?,
+                        seq: req_usize(b, "seq")?,
+                        k: req_usize(b, "k")?,
+                        hlo: req_str(b, "hlo")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let drafts = f
+                .get("drafts")
+                .and_then(Value::as_array)
+                .unwrap_or(&[])
+                .iter()
+                .map(|x| x.as_str().unwrap_or_default().to_string())
+                .collect();
+            families.insert(
+                name.clone(),
+                FamilyEntry { target: req_str(f, "target")?, drafts, verify_buckets },
+            );
+        }
+        Ok(Manifest {
+            root,
+            max_seq: req_usize(v, "max_seq")?,
+            vocab: req_usize(v, "vocab")?,
+            verify_k: req_usize(v, "verify_k")?,
+            models,
+            families,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
+    }
+
+    pub fn family(&self, name: &str) -> Result<&FamilyEntry> {
+        self.families.get(name).ok_or_else(|| anyhow!("unknown family '{name}'"))
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Every referenced file exists on disk.
+    pub fn validate_files(&self) -> Result<()> {
+        for m in self.models.values() {
+            for rel in [&m.weights_npz, &m.prefill_hlo, &m.step_hlo] {
+                let p = self.path(rel);
+                if !p.exists() {
+                    return Err(anyhow!("missing artifact {p:?}"));
+                }
+            }
+        }
+        for f in self.families.values() {
+            for b in &f.verify_buckets {
+                let p = self.path(&b.hlo);
+                if !p.exists() {
+                    return Err(anyhow!("missing artifact {p:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts dir: `$GOODSPEED_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("GOODSPEED_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest_json() -> String {
+        r#"{
+          "max_seq": 256, "vocab": 256, "verify_b": 8, "verify_k": 32,
+          "models": {
+            "m1": {
+              "n_layers": 1, "d_model": 64, "n_heads": 2, "d_ff": 128,
+              "param_count": 100, "cache_shape": [1,2,256,2,32],
+              "param_names": ["emb","pos"],
+              "weights_npz": "weights/m1.npz",
+              "prefill_hlo": "hlo/prefill_m1.hlo.txt",
+              "step_hlo": "hlo/step_m1.hlo.txt"
+            }
+          },
+          "families": {
+            "fam": {
+              "target": "m1", "drafts": ["m1"],
+              "verify_buckets": [
+                {"batch": 4, "seq": 128, "k": 32, "hlo": "hlo/v1.hlo.txt"},
+                {"batch": 8, "seq": 256, "k": 32, "hlo": "hlo/v2.hlo.txt"}
+              ]
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let v = Value::parse(&toy_manifest_json()).unwrap();
+        let m = Manifest::from_value(&v, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.model("m1").unwrap().n_layers, 1);
+        assert_eq!(m.family("fam").unwrap().verify_buckets.len(), 2);
+        assert!(m.model("nope").is_err());
+        assert!(m.family("nope").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.vocab, 256);
+            assert!(m.families.contains_key("qwen"));
+            assert!(m.families.contains_key("llama"));
+            m.validate_files().unwrap();
+            // param ordering contract: emb first, ln_f last
+            let t = m.model("qwen-target").unwrap();
+            assert_eq!(t.param_names.first().map(String::as_str), Some("emb"));
+            assert_eq!(t.param_names.last().map(String::as_str), Some("ln_f"));
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: AOT-artifact loading and execution (PJRT) plus the
+//! synthetic mock engines used by tests and fast simulations.
+
+pub mod engine;
+pub mod manifest;
+pub mod mock;
+pub mod xla_engine;
+
+pub use engine::{pick_bucket, Drafter, EngineFactory, Verifier, VerifyOutput, VerifyRequest};
+pub use manifest::{default_artifacts_dir, Manifest};
+pub use mock::{MockEngineFactory, MockWorld};
+pub use xla_engine::{XlaDrafter, XlaEngineFactory, XlaVerifier};

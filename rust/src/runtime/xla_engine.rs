@@ -1,0 +1,484 @@
+//! PJRT-backed engines: load HLO-text artifacts, compile once per process,
+//! execute from the Rust hot path. Python never runs here.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute_b`. Model weights are uploaded once per
+//! engine as device buffers (read straight from the training `.npz` via the
+//! crate's npy reader) and reused every call; only the small per-call
+//! inputs (tokens, positions, KV cache) move per invocation.
+//!
+//! PJRT handles here are `Rc`-based (not `Send`): the factory is cheap,
+//! `Send + Sync` metadata; each consumer thread builds its own engines.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::engine::{
+    pick_bucket, Drafter, EngineFactory, Verifier, VerifyOutput, VerifyRequest,
+};
+use super::manifest::{Manifest, ModelEntry};
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("loading HLO text {path:?}: {e}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e}"))
+}
+
+fn upload_weights(client: &PjRtClient, manifest: &Manifest, model: &ModelEntry) -> Result<Vec<PjRtBuffer>> {
+    let path = manifest.path(&model.weights_npz);
+    let names: Vec<&str> = model.param_names.iter().map(String::as_str).collect();
+    // NOTE: go through Literal (not PjRtBuffer::read_npz_by_name): the
+    // vendored crate's raw-bytes upload passes `ElementType as i32` where
+    // the C API expects a PrimitiveType, silently reinterpreting f32 as
+    // f16. The Literal path converts element types correctly.
+    let literals = Literal::read_npz_by_name(&path, &(), &names)
+        .map_err(|e| anyhow!("loading weights {path:?}: {e}"))?;
+    literals
+        .iter()
+        .map(|lit| {
+            client
+                .buffer_from_host_literal(None, lit)
+                .map_err(|e| anyhow!("uploading weights {path:?}: {e}"))
+        })
+        .collect()
+}
+
+fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape i32{dims:?}: {e}"))
+}
+
+fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape f32{dims:?}: {e}"))
+}
+
+/// KV-cached autoregressive drafter over `step_*.hlo.txt` /
+/// `prefill_*.hlo.txt`. Results are untupled (see the third_party/xla-rs
+/// patch), so the KV cache stays **device-resident** between steps — the
+/// per-token hot path uploads two scalars and downloads one `[V]` row.
+pub struct XlaDrafter {
+    client: PjRtClient,
+    prefill_exe: PjRtLoadedExecutable,
+    step_exe: PjRtLoadedExecutable,
+    weights: Vec<PjRtBuffer>,
+    cache: Option<PjRtBuffer>,
+    position: usize,
+    max_seq: usize,
+    vocab: usize,
+}
+
+impl XlaDrafter {
+    pub fn new(manifest: &Manifest, model_name: &str) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let model = manifest.model(model_name)?;
+        let prefill_exe = compile(&client, &manifest.path(&model.prefill_hlo))?;
+        let step_exe = compile(&client, &manifest.path(&model.step_hlo))?;
+        let weights = upload_weights(&client, manifest, model)?;
+        Ok(XlaDrafter {
+            client,
+            prefill_exe,
+            step_exe,
+            weights,
+            cache: None,
+            position: 0,
+            max_seq: manifest.max_seq,
+            vocab: manifest.vocab,
+        })
+    }
+
+    /// Execute with the resident weights plus per-call inputs (small host
+    /// literals and/or device buffers); returns the untupled output leaves.
+    fn run(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        literals: &[&Literal],
+        extra_buffers: &[&PjRtBuffer],
+    ) -> Result<Vec<PjRtBuffer>> {
+        let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(literals.len());
+        let mut refs: Vec<&PjRtBuffer> =
+            Vec::with_capacity(self.weights.len() + literals.len() + extra_buffers.len());
+        refs.extend(self.weights.iter());
+        for lit in literals {
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("upload input: {e}"))?,
+            );
+        }
+        refs.extend(bufs.iter());
+        refs.extend(extra_buffers.iter().copied());
+        let mut out = exe.execute_b(&refs).map_err(|e| anyhow!("execute: {e}"))?;
+        Ok(std::mem::take(&mut out[0]))
+    }
+}
+
+impl Drafter for XlaDrafter {
+    fn prefill(&mut self, prompt: &[u8]) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        if prompt.len() >= self.max_seq {
+            return Err(anyhow!("prompt ({}) ≥ max_seq ({})", prompt.len(), self.max_seq));
+        }
+        let mut tokens = vec![0i32; self.max_seq];
+        for (i, &b) in prompt.iter().enumerate() {
+            tokens[i] = b as i32;
+        }
+        let lit = literal_i32(&tokens, &[1, self.max_seq as i64])?;
+        let mut outs = self.run(&self.prefill_exe, &[&lit], &[])?;
+        if outs.len() != 2 {
+            return Err(anyhow!("prefill returned {} outputs, want 2", outs.len()));
+        }
+        // Output order: (cache, probs[S, V]); keep the cache on device.
+        let probs = outs.pop().unwrap().to_literal_sync()?;
+        self.cache = Some(outs.pop().unwrap());
+        let flat = probs.to_vec::<f32>()?;
+        let v = self.vocab;
+        let row = prompt.len() - 1;
+        self.position = prompt.len();
+        Ok(flat[row * v..(row + 1) * v].to_vec())
+    }
+
+    fn step(&mut self, tok: u8) -> Result<Vec<f32>> {
+        if self.position >= self.max_seq {
+            return Err(anyhow!("context overflow at {}", self.position));
+        }
+        let cache = self.cache.take().ok_or_else(|| anyhow!("step before prefill"))?;
+        let tok_lit = Literal::scalar(tok as i32);
+        let pos_lit = Literal::scalar(self.position as i32);
+        let mut outs = self.run(&self.step_exe, &[&tok_lit, &pos_lit], &[&cache])?;
+        if outs.len() != 2 {
+            return Err(anyhow!("step returned {} outputs, want 2", outs.len()));
+        }
+        // Output order: (probs[V], cache'); keep the cache on device.
+        self.cache = Some(outs.pop().unwrap());
+        let probs = outs.pop().unwrap().to_literal_sync()?;
+        self.position += 1;
+        probs.to_vec::<f32>().map_err(|e| anyhow!("download probs: {e}"))
+    }
+
+    fn position(&self) -> usize {
+        self.position
+    }
+
+    fn rewind(&mut self, position: usize) {
+        assert!(position <= self.position, "rewind must move backwards");
+        // Stale cache rows beyond `position` are never attended to: the
+        // step graph masks to `pos_ids <= pos`.
+        self.position = position;
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+}
+
+/// Batched verification over the bucketed `verify_*.hlo.txt` graphs.
+pub struct XlaVerifier {
+    client: PjRtClient,
+    /// (batch, seq) → compiled executable (lazy per bucket).
+    compiled: Vec<((usize, usize), PjRtLoadedExecutable)>,
+    bucket_files: Vec<((usize, usize), std::path::PathBuf)>,
+    weights: Vec<PjRtBuffer>,
+    k: usize,
+    vocab: usize,
+}
+
+impl XlaVerifier {
+    pub fn new(manifest: &Manifest, family: &str) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let fam = manifest.family(family)?;
+        let target = manifest.model(&fam.target)?;
+        let weights = upload_weights(&client, manifest, target)?;
+        let bucket_files = fam
+            .verify_buckets
+            .iter()
+            .map(|b| ((b.batch, b.seq), manifest.path(&b.hlo)))
+            .collect();
+        Ok(XlaVerifier {
+            client,
+            compiled: Vec::new(),
+            bucket_files,
+            weights,
+            k: manifest.verify_k,
+            vocab: manifest.vocab,
+        })
+    }
+
+    fn exe_for(&mut self, bucket: (usize, usize)) -> Result<usize> {
+        if let Some(i) = self.compiled.iter().position(|(b, _)| *b == bucket) {
+            return Ok(i);
+        }
+        let path = self
+            .bucket_files
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, p)| p.clone())
+            .ok_or_else(|| anyhow!("no verify bucket {bucket:?}"))?;
+        let exe = compile(&self.client, &path)?;
+        self.compiled.push((bucket, exe));
+        Ok(self.compiled.len() - 1)
+    }
+}
+
+impl Verifier for XlaVerifier {
+    fn verify(&mut self, req: &VerifyRequest) -> Result<VerifyOutput> {
+        // GOODSPEED_FORCE_MAX_BUCKET=1 disables shape bucketing (always the
+        // largest bucket) — the ablation lane for EXPERIMENTS.md §Perf.
+        let bucket = if std::env::var("GOODSPEED_FORCE_MAX_BUCKET").is_ok() {
+            *self
+                .bucket_files
+                .iter()
+                .map(|(b, _)| b)
+                .max_by_key(|(b, s)| b * s)
+                .expect("no buckets")
+        } else {
+            pick_bucket(&self.buckets(), req.batch, req.seq)
+        };
+        let (bb, bs) = bucket;
+        if req.batch > bb || req.seq > bs {
+            return Err(anyhow!("request ({}, {}) exceeds largest bucket {bucket:?}", req.batch, req.seq));
+        }
+        if req.k != self.k {
+            return Err(anyhow!("k mismatch: req {} vs artifact {}", req.k, self.k));
+        }
+        let v = self.vocab;
+        // Pad the request into the bucket shape.
+        let mut tokens = vec![0i32; bb * bs];
+        for row in 0..req.batch {
+            tokens[row * bs..row * bs + req.seq]
+                .copy_from_slice(&req.tokens[row * req.seq..(row + 1) * req.seq]);
+        }
+        let mut draft_tok = vec![0i32; bb * self.k];
+        draft_tok[..req.batch * self.k].copy_from_slice(&req.draft_tok);
+        let mut q_probs = vec![1.0f32 / v as f32; bb * self.k * v];
+        q_probs[..req.batch * self.k * v].copy_from_slice(&req.q_probs);
+        let mut pos0 = vec![1i32; bb];
+        pos0[..req.batch].copy_from_slice(&req.pos0);
+
+        let idx = self.exe_for(bucket)?;
+        let inputs = vec![
+            literal_i32(&tokens, &[bb as i64, bs as i64])?,
+            literal_i32(&draft_tok, &[bb as i64, self.k as i64])?,
+            literal_f32(&q_probs, &[bb as i64, self.k as i64, v as i64])?,
+            literal_i32(&pos0, &[bb as i64])?,
+        ];
+        let mut refs: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for lit in &inputs {
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("upload verify input: {e}"))?,
+            );
+        }
+        refs.extend(bufs.iter());
+        let exe = &self.compiled[idx].1;
+        let out = exe.execute_b(&refs).map_err(|e| anyhow!("verify execute: {e}"))?;
+        // Untupled outputs: (ratio, resid, bonus).
+        if out[0].len() != 3 {
+            return Err(anyhow!("verify returned {} outputs, want 3", out[0].len()));
+        }
+        let ratio_full = out[0][0].to_literal_sync()?.to_vec::<f32>()?;
+        let resid_full = out[0][1].to_literal_sync()?.to_vec::<f32>()?;
+        let bonus_full = out[0][2].to_literal_sync()?.to_vec::<f32>()?;
+        // Un-pad back to the request batch.
+        Ok(VerifyOutput {
+            ratio: ratio_full[..req.batch * self.k].to_vec(),
+            resid: resid_full[..req.batch * self.k * v].to_vec(),
+            bonus: bonus_full[..req.batch * v].to_vec(),
+        })
+    }
+
+    fn buckets(&self) -> Vec<(usize, usize)> {
+        self.bucket_files.iter().map(|(b, _)| *b).collect()
+    }
+}
+
+/// `Send + Sync` factory: holds only the manifest; engines (and their PJRT
+/// clients) are constructed inside the consuming thread.
+pub struct XlaEngineFactory {
+    pub manifest: Manifest,
+}
+
+impl XlaEngineFactory {
+    pub fn new(manifest: Manifest) -> Self {
+        XlaEngineFactory { manifest }
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        let dir = super::manifest::default_artifacts_dir();
+        let manifest = Manifest::load(&dir)?;
+        manifest.validate_files().context("artifacts incomplete — run `make artifacts`")?;
+        Ok(XlaEngineFactory { manifest })
+    }
+}
+
+impl EngineFactory for XlaEngineFactory {
+    fn make_drafter(&self, model: &str) -> Result<Box<dyn Drafter>> {
+        Ok(Box::new(XlaDrafter::new(&self.manifest, model)?))
+    }
+
+    fn make_verifier(&self, family: &str) -> Result<Box<dyn Verifier>> {
+        Ok(Box::new(XlaVerifier::new(&self.manifest, family)?))
+    }
+
+    fn make_target_stepper(&self, family: &str) -> Result<Box<dyn Drafter>> {
+        let fam = self.manifest.family(family)?;
+        let target = fam.target.clone();
+        Ok(Box::new(XlaDrafter::new(&self.manifest, &target)?))
+    }
+
+    fn vocab(&self) -> usize {
+        self.manifest.vocab
+    }
+
+    fn max_seq(&self) -> usize {
+        self.manifest.max_seq
+    }
+
+    fn verify_k(&self) -> usize {
+        self.manifest.verify_k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Gated on artifacts being present (Makefile runs `make artifacts`
+    //! before `cargo test`); each test skips cleanly otherwise.
+    use super::*;
+    use crate::runtime::manifest::default_artifacts_dir;
+
+    fn factory() -> Option<XlaEngineFactory> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(XlaEngineFactory::new(Manifest::load(&dir).unwrap()))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn drafter_prefill_and_step_shapes() {
+        let Some(f) = factory() else { return };
+        let mut d = f.make_drafter("qwen-draft-06b").unwrap();
+        let prompt = crate::tokenizer::encode("### Instruction: list the river.");
+        let probs = d.prefill(&prompt).unwrap();
+        assert_eq!(probs.len(), 256);
+        let s: f32 = probs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "prefill probs sum {s}");
+        assert_eq!(d.position(), prompt.len());
+        let probs2 = d.step(b' ').unwrap();
+        assert_eq!(probs2.len(), 256);
+        let s2: f32 = probs2.iter().sum();
+        assert!((s2 - 1.0).abs() < 1e-3);
+        assert_eq!(d.position(), prompt.len() + 1);
+    }
+
+    #[test]
+    fn trained_model_is_peaked_on_template() {
+        // After "### Instruction: " the trained draft should be far from
+        // uniform (it has seen thousands of these).
+        let Some(f) = factory() else { return };
+        let mut d = f.make_drafter("qwen-draft-06b").unwrap();
+        let probs = d.prefill(crate::tokenizer::encode("### Instruction:").as_slice()).unwrap();
+        let max = probs.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max > 0.5, "expected peaked distribution, max={max}");
+    }
+
+    #[test]
+    fn verifier_runs_and_normalizes() {
+        let Some(f) = factory() else { return };
+        let mut ver = f.make_verifier("qwen").unwrap();
+        let (b, s, k, v) = (2usize, 128usize, 32usize, 256usize);
+        let prompt = crate::tokenizer::encode("q: tom has 3 apples and buys 4 more.");
+        let mut tokens = vec![0i32; b * s];
+        for row in 0..b {
+            for (i, &t) in prompt.iter().enumerate() {
+                tokens[row * s + i] = t as i32;
+            }
+            for j in 0..k {
+                tokens[row * s + prompt.len() + j] = b' ' as i32;
+            }
+        }
+        let req = VerifyRequest {
+            tokens,
+            batch: b,
+            seq: s,
+            draft_tok: vec![b' ' as i32; b * k],
+            q_probs: vec![1.0 / v as f32; b * k * v],
+            pos0: vec![prompt.len() as i32; b],
+            k,
+            vocab: v,
+        };
+        let out = ver.verify(&req).unwrap();
+        assert_eq!(out.ratio.len(), b * k);
+        assert!(out.ratio.iter().all(|&r| (0.0..=1.0 + 1e-5).contains(&r)));
+        for row in 0..b * k {
+            let sum: f32 = out.resid[row * v..(row + 1) * v].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "resid row {row} sums {sum}");
+        }
+        for row in 0..b {
+            let sum: f32 = out.bonus[row * v..(row + 1) * v].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn prefill_step_consistency_with_verify() {
+        // The drafter's own q at a position, when passed to the verifier
+        // with the *target's* family == draft model, must yield ratio ≈ 1
+        // (p == q when target and draft are the same model).
+        let Some(f) = factory() else { return };
+        // Build a "family" on the fly: verify graph uses the qwen target,
+        // so instead use the target stepper both sides.
+        let mut tgt = f.make_target_stepper("qwen").unwrap();
+        let prompt = crate::tokenizer::encode("act as a pilot.");
+        let q0 = tgt.prefill(&prompt).unwrap();
+        // greedy token from target
+        let tok = q0
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u8;
+        let (b, s, k, v) = (1usize, 128usize, 32usize, 256usize);
+        let mut tokens = vec![0i32; b * s];
+        for (i, &t) in prompt.iter().enumerate() {
+            tokens[i] = t as i32;
+        }
+        tokens[prompt.len()] = tok as i32;
+        let mut q_probs = vec![1.0 / v as f32; b * k * v];
+        q_probs[..v].copy_from_slice(&q0);
+        let mut draft_tok = vec![0i32; b * k];
+        draft_tok[0] = tok as i32;
+        let mut ver = f.make_verifier("qwen").unwrap();
+        let req = VerifyRequest {
+            tokens,
+            batch: b,
+            seq: s,
+            draft_tok,
+            q_probs,
+            pos0: vec![prompt.len() as i32],
+            k,
+            vocab: v,
+        };
+        let out = ver.verify(&req).unwrap();
+        assert!(
+            (out.ratio[0] - 1.0).abs() < 5e-2,
+            "p==q should give ratio ≈ 1, got {}",
+            out.ratio[0]
+        );
+    }
+}

@@ -1,0 +1,188 @@
+//! Allocation policies: GoodSpeed's gradient scheduler plus the two
+//! baselines the paper evaluates against (§IV-B2).
+
+use std::sync::Arc;
+
+use super::estimator::Estimators;
+use super::gradient::{solve_greedy, AllocInput};
+use super::utility::Utility;
+use crate::configsys::Policy;
+use crate::util::Rng;
+
+/// Per-round allocation caps (budget + per-client context room).
+#[derive(Clone, Debug)]
+pub struct AllocCaps {
+    /// Verification budget C.
+    pub capacity: usize,
+    /// Per-client max draft length (min of artifact K and context room).
+    pub max_per_client: Vec<usize>,
+}
+
+/// A per-round draft-length allocator. Implementations must be
+/// deterministic given their own state (Random-S carries its PRNG).
+pub trait Allocator: Send {
+    fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's gradient scheduling algorithm (Algorithm 1, line 15).
+pub struct GoodSpeedAlloc {
+    pub utility: Arc<dyn Utility>,
+}
+
+impl GoodSpeedAlloc {
+    pub fn log() -> Self {
+        GoodSpeedAlloc { utility: Arc::new(super::utility::LogUtility) }
+    }
+}
+
+impl Allocator for GoodSpeedAlloc {
+    fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
+        let weights: Vec<f64> = est.x_beta.iter().map(|&x| self.utility.grad(x)).collect();
+        let input = AllocInput {
+            weights: &weights,
+            alphas: &est.alpha_hat,
+            capacity: caps.capacity,
+            max_per_client: &caps.max_per_client,
+        };
+        solve_greedy(&input)
+    }
+
+    fn name(&self) -> &'static str {
+        "goodspeed"
+    }
+}
+
+/// Fixed-S: `S_i = C / N` every round (uniform static split).
+pub struct FixedSAlloc;
+
+impl Allocator for FixedSAlloc {
+    fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
+        let n = est.len().max(1);
+        let share = caps.capacity / n;
+        (0..est.len()).map(|i| share.min(caps.max_per_client[i])).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed-s"
+    }
+}
+
+/// Random-S: each budget unit lands on a uniformly random client with
+/// remaining room, so Σ S_i ≤ C always holds (paper's constraint).
+pub struct RandomSAlloc {
+    pub rng: Rng,
+}
+
+impl RandomSAlloc {
+    pub fn new(seed: u64) -> Self {
+        RandomSAlloc { rng: Rng::new(seed) }
+    }
+}
+
+impl Allocator for RandomSAlloc {
+    fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
+        let n = est.len();
+        let mut alloc = vec![0usize; n];
+        if n == 0 {
+            return alloc;
+        }
+        for _ in 0..caps.capacity {
+            // Rejection-sample a client with room (bounded retries keep the
+            // loop O(C) in expectation even when most clients are full).
+            for _ in 0..8 {
+                let i = self.rng.below(n as u64) as usize;
+                if alloc[i] < caps.max_per_client[i] {
+                    alloc[i] += 1;
+                    break;
+                }
+            }
+        }
+        alloc
+    }
+
+    fn name(&self) -> &'static str {
+        "random-s"
+    }
+}
+
+/// Build the allocator for a scenario policy.
+pub fn make_allocator(policy: Policy, seed: u64) -> Box<dyn Allocator> {
+    match policy {
+        Policy::GoodSpeed => Box::new(GoodSpeedAlloc::log()),
+        Policy::FixedS => Box::new(FixedSAlloc),
+        Policy::RandomS => Box::new(RandomSAlloc::new(seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configsys::Smoothing;
+
+    fn est(n: usize) -> Estimators {
+        Estimators::new(n, Smoothing::Fixed(0.3), Smoothing::Fixed(0.5))
+    }
+
+    fn caps(n: usize, c: usize) -> AllocCaps {
+        AllocCaps { capacity: c, max_per_client: vec![32; n] }
+    }
+
+    #[test]
+    fn fixed_s_is_uniform_floor() {
+        let mut f = FixedSAlloc;
+        let alloc = f.allocate(&est(4), &caps(4, 22));
+        assert_eq!(alloc, vec![5, 5, 5, 5]); // floor(22/4)
+    }
+
+    #[test]
+    fn fixed_s_respects_context_room() {
+        let mut f = FixedSAlloc;
+        let mut cap = caps(4, 20);
+        cap.max_per_client[2] = 2;
+        let alloc = f.allocate(&est(4), &cap);
+        assert_eq!(alloc, vec![5, 5, 2, 5]);
+    }
+
+    #[test]
+    fn random_s_within_budget_every_time() {
+        let mut r = RandomSAlloc::new(7);
+        for _ in 0..200 {
+            let alloc = r.allocate(&est(5), &caps(5, 17));
+            assert!(alloc.iter().sum::<usize>() <= 17);
+        }
+    }
+
+    #[test]
+    fn random_s_covers_all_clients_eventually() {
+        let mut r = RandomSAlloc::new(8);
+        let mut seen = vec![false; 4];
+        for _ in 0..50 {
+            for (i, &s) in r.allocate(&est(4), &caps(4, 8)).iter().enumerate() {
+                if s > 0 {
+                    seen[i] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
+    fn goodspeed_prefers_starved_clients() {
+        let mut e = est(2);
+        // Client 1 has been getting everything: X^β large.
+        for _ in 0..50 {
+            e.update_round(&[Some((0.6, 1.0)), Some((0.6, 8.0))]);
+        }
+        let mut gs = GoodSpeedAlloc::log();
+        let alloc = gs.allocate(&e, &caps(2, 10));
+        assert!(alloc[0] > alloc[1], "starved client must get more: {alloc:?}");
+    }
+
+    #[test]
+    fn make_allocator_names() {
+        assert_eq!(make_allocator(Policy::GoodSpeed, 0).name(), "goodspeed");
+        assert_eq!(make_allocator(Policy::FixedS, 0).name(), "fixed-s");
+        assert_eq!(make_allocator(Policy::RandomS, 0).name(), "random-s");
+    }
+}

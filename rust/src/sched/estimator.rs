@@ -1,0 +1,192 @@
+//! Exponential-smoothing estimators — paper equations (3) and (4).
+//!
+//! The verification server maintains, per draft server i:
+//! * `α̂_i(t) = (1−η)·α̂_i(t−1) + η·(1/S_i)Σ_j min(1, p_j/q_{i,j})`   (3)
+//! * `X_i^β(t) = (1−β)·X_i^β(t−1) + β·x_i(t)`                        (4)
+//!
+//! η and β may be fixed (the experiments) or decaying `O(1/t^p)` with
+//! `p ∈ (0.5, 1]` (Assumption 3, under which η/β → 0 and the fluid-limit
+//! theory applies).
+
+use crate::configsys::Smoothing;
+
+#[derive(Clone, Debug)]
+pub struct Estimators {
+    /// Smoothed acceptance-rate estimates α̂(t) ∈ (0,1)^N.
+    pub alpha_hat: Vec<f64>,
+    /// Smoothed goodput estimates X^β(t) ∈ R₊^N.
+    pub x_beta: Vec<f64>,
+    eta: Smoothing,
+    beta: Smoothing,
+    t: u64,
+}
+
+/// Clamp keeping α̂ inside (0, α_max] — Assumption 2's uniform bound.
+pub const ALPHA_MAX: f64 = 0.995;
+pub const ALPHA_MIN: f64 = 1e-3;
+
+impl Estimators {
+    pub fn new(n: usize, eta: Smoothing, beta: Smoothing) -> Self {
+        Estimators {
+            alpha_hat: vec![0.5; n],
+            x_beta: vec![1.0; n],
+            eta,
+            beta,
+            t: 0,
+        }
+    }
+
+    pub fn with_init(n: usize, eta: Smoothing, beta: Smoothing, alpha0: f64, x0: f64) -> Self {
+        Estimators {
+            alpha_hat: vec![alpha0.clamp(ALPHA_MIN, ALPHA_MAX); n],
+            x_beta: vec![x0.max(1e-6); n],
+            eta,
+            beta,
+            t: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.alpha_hat.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alpha_hat.is_empty()
+    }
+
+    pub fn round(&self) -> u64 {
+        self.t
+    }
+
+    /// One verification round's observations for every client: the mean
+    /// acceptance ratio (eq. 3's empirical term) and the realized goodput
+    /// x_i(t). Clients that did not participate this round pass `None`.
+    pub fn update_round(&mut self, obs: &[Option<(f64, f64)>]) {
+        assert_eq!(obs.len(), self.len());
+        self.t += 1;
+        let eta = self.eta.at(self.t);
+        let beta = self.beta.at(self.t);
+        for (i, o) in obs.iter().enumerate() {
+            if let Some((mean_ratio, goodput)) = *o {
+                let a = (1.0 - eta) * self.alpha_hat[i] + eta * mean_ratio.clamp(0.0, 1.0);
+                self.alpha_hat[i] = a.clamp(ALPHA_MIN, ALPHA_MAX);
+                self.x_beta[i] = ((1.0 - beta) * self.x_beta[i] + beta * goodput).max(1e-9);
+            }
+        }
+    }
+
+    /// Estimated next-round goodput x̂_i(t+1) for a hypothetical draft
+    /// length — the objective term of GOODSPEED-SCHED (eq. 5).
+    pub fn predicted_goodput(&self, i: usize, s: usize) -> f64 {
+        crate::spec::expected_goodput(self.alpha_hat[i], s)
+    }
+
+    pub fn current_eta(&self) -> f64 {
+        self.eta.at(self.t.max(1))
+    }
+
+    pub fn current_beta(&self) -> f64 {
+        self.beta.at(self.t.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::Rng;
+
+    fn fixed(n: usize, eta: f64, beta: f64) -> Estimators {
+        Estimators::new(n, Smoothing::Fixed(eta), Smoothing::Fixed(beta))
+    }
+
+    #[test]
+    fn converges_to_constant_signal() {
+        let mut e = fixed(1, 0.3, 0.5);
+        for _ in 0..200 {
+            e.update_round(&[Some((0.8, 4.0))]);
+        }
+        assert!((e.alpha_hat[0] - 0.8).abs() < 1e-6);
+        assert!((e.x_beta[0] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ewma_formula_exact_one_step() {
+        let mut e = fixed(2, 0.25, 0.5);
+        e.update_round(&[Some((1.0, 3.0)), None]);
+        // α̂ = 0.75*0.5 + 0.25*1.0 ; X = 0.5*1.0 + 0.5*3.0
+        assert!((e.alpha_hat[0] - 0.625).abs() < 1e-12);
+        assert!((e.x_beta[0] - 2.0).abs() < 1e-12);
+        // non-participating client untouched
+        assert!((e.alpha_hat[1] - 0.5).abs() < 1e-12);
+        assert!((e.x_beta[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn respects_alpha_bounds() {
+        let mut e = fixed(1, 0.9, 0.5);
+        for _ in 0..100 {
+            e.update_round(&[Some((1.0, 10.0))]);
+        }
+        assert!(e.alpha_hat[0] <= ALPHA_MAX);
+        for _ in 0..100 {
+            e.update_round(&[Some((0.0, 0.0))]);
+        }
+        assert!(e.alpha_hat[0] >= ALPHA_MIN);
+        assert!(e.x_beta[0] > 0.0); // strictly positive for log utility
+    }
+
+    #[test]
+    fn decay_schedule_lipschitz_shrinks() {
+        // Assumption 2: |α̂(t+1) − α̂(t)| ≤ L·η with L ≤ 1.
+        let mut e = Estimators::new(1, Smoothing::Decay { c: 1.0, p: 0.7 }, Smoothing::Fixed(0.5));
+        let mut rng = Rng::new(0);
+        let mut prev = e.alpha_hat[0];
+        for t in 1..500u64 {
+            let eta_t = e.eta.at(t + 1);
+            e.update_round(&[Some((rng.f64(), 1.0))]);
+            assert!(
+                (e.alpha_hat[0] - prev).abs() <= eta_t + 1e-12,
+                "step exceeded η at t={t}"
+            );
+            prev = e.alpha_hat[0];
+        }
+    }
+
+    #[test]
+    fn tracks_nonstationary_signal() {
+        let mut e = fixed(1, 0.3, 0.5);
+        for _ in 0..100 {
+            e.update_round(&[Some((0.2, 1.0))]);
+        }
+        assert!((e.alpha_hat[0] - 0.2).abs() < 0.01);
+        for _ in 0..100 {
+            e.update_round(&[Some((0.9, 1.0))]);
+        }
+        assert!((e.alpha_hat[0] - 0.9).abs() < 0.01, "must re-adapt after domain shift");
+    }
+
+    #[test]
+    fn prop_ewma_is_convex_combination() {
+        proptest::check("ewma_bounds", proptest::default_cases(), |rng| {
+            let mut e = fixed(1, rng.f64() * 0.9 + 0.05, rng.f64() * 0.9 + 0.05);
+            let mut lo = 0.5f64;
+            let mut hi = 0.5f64;
+            for _ in 0..50 {
+                let obs = rng.f64();
+                lo = lo.min(obs);
+                hi = hi.max(obs);
+                e.update_round(&[Some((obs, rng.f64() * 5.0))]);
+                assert!(e.alpha_hat[0] >= lo - 1e-9 && e.alpha_hat[0] <= hi + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn predicted_goodput_uses_alpha_hat() {
+        let mut e = fixed(1, 1.0, 0.5);
+        e.update_round(&[Some((0.5, 1.0))]);
+        let p = e.predicted_goodput(0, 2);
+        assert!((p - (1.0 + 0.5 + 0.25)).abs() < 1e-9);
+    }
+}

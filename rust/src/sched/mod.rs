@@ -1,0 +1,12 @@
+//! GoodSpeed scheduling: utilities, smoothed estimators (eqs. 3–4), the
+//! gradient scheduler (GOODSPEED-SCHED, eq. 5), and the §IV baselines.
+
+pub mod baselines;
+pub mod estimator;
+pub mod gradient;
+pub mod utility;
+
+pub use baselines::{Allocator, FixedSAlloc, GoodSpeedAlloc, RandomSAlloc};
+pub use estimator::Estimators;
+pub use gradient::{objective, solve_dp, solve_greedy, AllocInput};
+pub use utility::{AlphaFair, LinearUtility, LogUtility, Utility};

@@ -1,0 +1,137 @@
+//! Utility functions U_i for the fairness objective (paper eq. 1).
+//!
+//! The paper uses U_i(x) = log x (proportional fairness, Kelly). We also
+//! implement the α-fair family and a linear utility as ablations — the
+//! linear case degenerates the scheduler to pure throughput maximization
+//! (allocate everything to the highest-α client), which the fairness bench
+//! uses as a contrast.
+
+/// Continuously differentiable, strictly increasing, strictly concave
+/// utility (linear being the boundary case used only for ablation).
+pub trait Utility: Send + Sync {
+    fn value(&self, x: f64) -> f64;
+    /// ∇U(x); implementations must stay finite near x = 0 (clamped) so the
+    /// scheduler's weights never overflow — this mirrors the boundary-drift
+    /// argument in Lemma 2 (gradient → ∞ pushes allocation toward starved
+    /// clients).
+    fn grad(&self, x: f64) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+const X_MIN: f64 = 1e-6;
+
+/// U(x) = log x — proportional fairness (the paper's choice).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LogUtility;
+
+impl Utility for LogUtility {
+    fn value(&self, x: f64) -> f64 {
+        x.max(X_MIN).ln()
+    }
+
+    fn grad(&self, x: f64) -> f64 {
+        1.0 / x.max(X_MIN)
+    }
+
+    fn name(&self) -> &'static str {
+        "log"
+    }
+}
+
+/// α-fair utility: U(x) = x^{1−a}/(1−a) (a ≠ 1), → log as a → 1.
+#[derive(Clone, Copy, Debug)]
+pub struct AlphaFair {
+    pub a: f64,
+}
+
+impl Utility for AlphaFair {
+    fn value(&self, x: f64) -> f64 {
+        let x = x.max(X_MIN);
+        if (self.a - 1.0).abs() < 1e-9 {
+            x.ln()
+        } else {
+            x.powf(1.0 - self.a) / (1.0 - self.a)
+        }
+    }
+
+    fn grad(&self, x: f64) -> f64 {
+        x.max(X_MIN).powf(-self.a)
+    }
+
+    fn name(&self) -> &'static str {
+        "alpha-fair"
+    }
+}
+
+/// U(x) = x — pure throughput (no fairness), ablation only.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinearUtility;
+
+impl Utility for LinearUtility {
+    fn value(&self, x: f64) -> f64 {
+        x
+    }
+
+    fn grad(&self, _x: f64) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+}
+
+/// System utility U(x) = Σ U_i(x_i) (Fig 4's y-axis).
+pub fn system_utility(u: &dyn Utility, xs: &[f64]) -> f64 {
+    xs.iter().map(|&x| u.value(x)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn log_gradient_is_reciprocal() {
+        let u = LogUtility;
+        assert!((u.grad(2.0) - 0.5).abs() < 1e-12);
+        assert!(u.grad(0.0).is_finite()); // clamped near zero
+        assert!(u.grad(1e-12) > 1e5); // …but still huge (boundary drift)
+    }
+
+    #[test]
+    fn alpha_fair_approaches_log() {
+        let af = AlphaFair { a: 1.0 };
+        let lg = LogUtility;
+        for &x in &[0.5, 1.0, 3.0] {
+            assert!((af.value(x) - lg.value(x)).abs() < 1e-9);
+            assert!((af.grad(x) - lg.grad(x)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_concavity_and_monotonicity() {
+        proptest::check("utility_concave", proptest::default_cases(), |rng| {
+            let us: [&dyn Utility; 3] =
+                [&LogUtility, &AlphaFair { a: 0.5 }, &AlphaFair { a: 2.0 }];
+            let x = rng.f64() * 10.0 + 0.01;
+            let h = 0.01;
+            for u in us {
+                // increasing
+                assert!(u.value(x + h) > u.value(x), "{}", u.name());
+                // gradient decreasing (concavity)
+                assert!(u.grad(x) >= u.grad(x + h), "{}", u.name());
+                // grad matches finite difference
+                let fd = (u.value(x + h) - u.value(x - h)) / (2.0 * h);
+                assert!((u.grad(x) - fd).abs() < 0.05 * u.grad(x).abs() + 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn system_utility_sums() {
+        let u = LogUtility;
+        let xs = [1.0, std::f64::consts::E];
+        assert!((system_utility(&u, &xs) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Fast simulation substrate: the analytic round simulator (no model
+//! execution — 10⁴+ rounds/sec for long-horizon convergence studies) and
+//! the fluid-limit ODE integrator that validates Theorems 1 and 3.
+
+pub mod analytic;
+pub mod fluid;
+
+pub use analytic::{AnalyticSim, SimClient, SimConfig};
+pub use fluid::{optimal_allocation, FluidSim};

@@ -1,0 +1,102 @@
+//! Goodput formulas from the paper's §III-B.
+//!
+//! With per-token acceptance probability `α`, the number of accepted tokens
+//! from a draft of length `S` is a geometric variable capped at `S`, and the
+//! round's expected goodput (accepted + one correction/bonus token) is
+//!
+//! ```text
+//! μ(S, α) = (1 − α^{S+1}) / (1 − α) = 1 + α + α² + … + α^S .
+//! ```
+//!
+//! μ is strictly increasing and strictly concave in `S` with marginal gain
+//! Δ(S→S+1) = α^{S+1}; that concavity is what makes the greedy gradient
+//! scheduler exact (see `sched::gradient`).
+
+/// Expected goodput μ(S, α) — tokens produced per round for draft length S.
+pub fn expected_goodput(alpha: f64, s: usize) -> f64 {
+    let alpha = alpha.clamp(0.0, 1.0);
+    if (1.0 - alpha) < 1e-12 {
+        // lim α→1: 1 + α + … + α^S = S + 1
+        return (s + 1) as f64;
+    }
+    (1.0 - alpha.powi(s as i32 + 1)) / (1.0 - alpha)
+}
+
+/// Marginal goodput of extending the draft from `s` to `s+1`: α^{s+1}.
+pub fn marginal_gain(alpha: f64, s: usize) -> f64 {
+    alpha.clamp(0.0, 1.0).powi(s as i32 + 1)
+}
+
+/// Expected *speedup* of speculative decoding vs autoregressive decoding
+/// when verification costs one target forward: μ(S, α) target tokens per
+/// round (Leviathan et al. eq. 1; used in the quickstart example report).
+pub fn expected_speedup(alpha: f64, s: usize) -> f64 {
+    expected_goodput(alpha, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn closed_form_matches_series() {
+        for &alpha in &[0.0f64, 0.1, 0.5, 0.9, 0.99] {
+            for s in 0..20usize {
+                let series: f64 = (0..=s).map(|j| alpha.powi(j as i32)).sum();
+                assert!(
+                    (expected_goodput(alpha, s) - series).abs() < 1e-9,
+                    "alpha={alpha} s={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn limits() {
+        // α = 0: only the correction token.
+        assert!((expected_goodput(0.0, 10) - 1.0).abs() < 1e-12);
+        // α = 1: everything accepted + bonus.
+        assert!((expected_goodput(1.0, 10) - 11.0).abs() < 1e-9);
+        // S = 0: always exactly one token.
+        assert!((expected_goodput(0.7, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_monotone_and_concave_in_s() {
+        proptest::check("goodput_concave", proptest::default_cases(), |rng| {
+            let alpha = rng.f64() * 0.98 + 0.01;
+            for s in 0..31usize {
+                let a = expected_goodput(alpha, s);
+                let b = expected_goodput(alpha, s + 1);
+                let c = expected_goodput(alpha, s + 2);
+                // Strict monotonicity only while the marginal gain is
+                // representable next to μ ≈ 1/(1−α) in f64.
+                if marginal_gain(alpha, s) > 1e-12 {
+                    assert!(b > a, "monotone alpha={alpha} s={s}");
+                } else {
+                    assert!(b >= a, "monotone alpha={alpha} s={s}");
+                }
+                assert!(b - a >= c - b - 1e-12, "concave alpha={alpha} s={s}");
+                // marginal gain formula consistency
+                assert!((b - a - marginal_gain(alpha, s)).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_alpha() {
+        proptest::check("goodput_monotone_alpha", proptest::default_cases(), |rng| {
+            let s = rng.below(30) as usize + 1;
+            let a1 = rng.f64() * 0.5;
+            let a2 = a1 + rng.f64() * 0.4 + 0.01;
+            assert!(expected_goodput(a2, s) > expected_goodput(a1, s));
+        });
+    }
+
+    #[test]
+    fn clamps_out_of_range_alpha() {
+        assert!((expected_goodput(-0.5, 5) - 1.0).abs() < 1e-12);
+        assert!((expected_goodput(1.5, 5) - 6.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,7 @@
+//! Speculative-decoding core: goodput math and rejection sampling.
+
+pub mod math;
+pub mod rejection;
+
+pub use math::{expected_goodput, marginal_gain};
+pub use rejection::{verify_client, ClientVerdict};

@@ -1,0 +1,54 @@
+//! Byte-level tokenizer (V = 256), mirroring the python training side.
+//!
+//! The model zoo is trained on ASCII bytes; token id == byte value. Decoding
+//! is lossy-printable so logs stay readable even if the model emits
+//! non-printable bytes.
+
+pub const VOCAB: usize = 256;
+
+/// Encode text to token ids (non-ASCII chars become '?').
+pub fn encode(text: &str) -> Vec<u8> {
+    text.chars().map(|c| if c.is_ascii() { c as u8 } else { b'?' }).collect()
+}
+
+/// Decode token ids to printable text ('.' for non-printables).
+pub fn decode(tokens: &[u8]) -> String {
+    tokens
+        .iter()
+        .map(|&t| {
+            let c = t as char;
+            if c.is_ascii_graphic() || c == ' ' || c == '\n' {
+                c
+            } else {
+                '.'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "hello goodspeed 123!";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn non_ascii_replaced() {
+        assert_eq!(encode("aé"), vec![b'a', b'?']);
+    }
+
+    #[test]
+    fn non_printable_bytes_dotted() {
+        assert_eq!(decode(&[0u8, 7, b'x']), "..x");
+    }
+
+    #[test]
+    fn all_bytes_decode_without_panic() {
+        let all: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode(&all).chars().count(), 256);
+    }
+}

@@ -1,0 +1,71 @@
+//! Minimal `log` backend (level from `GOODSPEED_LOG`, default `info`).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::io::Write;
+use std::sync::Once;
+use std::time::Instant;
+
+static INIT: Once = Once::new();
+static mut START: Option<Instant> = None;
+
+struct Logger;
+
+impl log::Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        // Monotonic seconds since init; good enough for experiment traces.
+        let elapsed = unsafe {
+            let ptr = &raw const START;
+            (*ptr).map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+        };
+        let tag = match record.level() {
+            Level::Error => "E",
+            Level::Warn => "W",
+            Level::Info => "I",
+            Level::Debug => "D",
+            Level::Trace => "T",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{elapsed:9.3} {tag} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: Logger = Logger;
+
+/// Install the logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        unsafe {
+            let ptr = &raw mut START;
+            *ptr = Some(Instant::now());
+        }
+        let level = match std::env::var("GOODSPEED_LOG").as_deref() {
+            Ok("trace") => LevelFilter::Trace,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("error") => LevelFilter::Error,
+            Ok("off") => LevelFilter::Off,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

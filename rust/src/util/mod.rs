@@ -1,0 +1,13 @@
+//! Foundation substrates built from scratch (the offline crate set contains
+//! only the `xla` closure, so PRNG, stats, logging, timing, and the property
+//! test driver are all first-class local implementations).
+
+pub mod logger;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod timer;
+
+pub use prng::Rng;
+pub use stats::{jain_index, MovingAvg, RunningStat};
+pub use timer::Stopwatch;

@@ -1,0 +1,202 @@
+//! Streaming statistics used throughout metrics and experiments.
+
+/// Welford online mean/variance.
+#[derive(Clone, Debug, Default)]
+pub struct RunningStat {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStat {
+    pub fn new() -> Self {
+        RunningStat { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.mean * self.n as f64
+    }
+}
+
+/// Fixed-window moving average + variance (Fig 2 uses MA(10) with ±1 std
+/// confidence bands around both curves).
+#[derive(Clone, Debug)]
+pub struct MovingAvg {
+    window: usize,
+    buf: Vec<f64>,
+    head: usize,
+    filled: bool,
+}
+
+impl MovingAvg {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        MovingAvg { window, buf: Vec::with_capacity(window), head: 0, filled: false }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() < self.window {
+            self.buf.push(x);
+        } else {
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.window;
+            self.filled = true;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.buf.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.buf.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (self.buf.len() - 1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Jain fairness index: (Σx)² / (n·Σx²) ∈ [1/n, 1]; 1 = perfectly fair.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 <= 0.0 {
+        return 1.0;
+    }
+    s * s / (xs.len() as f64 * s2)
+}
+
+/// Exact quantile by sorting a copy (fine for per-experiment reporting).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_stat_matches_closed_form() {
+        let mut s = RunningStat::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn moving_avg_window_semantics() {
+        let mut ma = MovingAvg::new(3);
+        ma.push(1.0);
+        assert!((ma.mean() - 1.0).abs() < 1e-12);
+        ma.push(2.0);
+        ma.push(3.0);
+        assert!((ma.mean() - 2.0).abs() < 1e-12);
+        ma.push(10.0); // evicts 1.0
+        assert!((ma.mean() - 5.0).abs() < 1e-12);
+        ma.push(10.0);
+        ma.push(10.0);
+        assert!((ma.mean() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moving_avg_std_constant_is_zero() {
+        let mut ma = MovingAvg::new(5);
+        for _ in 0..10 {
+            ma.push(4.2);
+        }
+        assert!(ma.std() < 1e-12);
+    }
+
+    #[test]
+    fn jain_bounds() {
+        assert!((jain_index(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        let n = 4;
+        let skew = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((skew - 1.0 / n as f64).abs() < 1e-12);
+        let mid = jain_index(&[3.0, 1.0]);
+        assert!(mid > 0.5 && mid < 1.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,77 @@
+//! Wall-clock timing helpers for the Fig 3 time decomposition.
+
+use std::time::{Duration, Instant};
+
+/// Stopwatch with named laps; used by the coordinator to attribute each
+/// round's wall time to receive / verify / send (paper §IV-B2).
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now }
+    }
+
+    /// Time since the previous lap (or construction), resetting the lap.
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        d
+    }
+
+    /// Total time since construction.
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn reset(&mut self) {
+        let now = Instant::now();
+        self.start = now;
+        self.last = now;
+    }
+}
+
+/// Run `f` and return (result, elapsed).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate_to_total() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let a = sw.lap();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = sw.lap();
+        assert!(a >= Duration::from_millis(1));
+        assert!(b >= Duration::from_millis(1));
+        assert!(sw.total() >= a + b);
+    }
+
+    #[test]
+    fn timed_measures() {
+        let (v, d) = timed(|| {
+            std::thread::sleep(Duration::from_millis(2));
+            7
+        });
+        assert_eq!(v, 7);
+        assert!(d >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,119 @@
+//! The eight dataset analogs (paper §IV-A2), mirrored from
+//! `python/compile/corpus.py` so serving-time prompts are in-distribution
+//! for the build-time-trained models.
+//!
+//! Domain *predictability* varies deliberately: template-heavy domains
+//! (alpaca, spider) are easy for a weak draft model to imitate → high
+//! acceptance rate α; the long-tail domain (hle) is nearly incompressible →
+//! low α. That spread is what makes the fairness problem non-trivial.
+
+use crate::util::Rng;
+
+pub const VERBS: [&str; 8] =
+    ["describe", "explain", "list", "sort", "count", "compare", "find", "name"];
+pub const NOUNS: [&str; 8] =
+    ["river", "planet", "engine", "garden", "market", "signal", "bridge", "forest"];
+pub const ROLES: [&str; 8] =
+    ["teacher", "pilot", "doctor", "coach", "writer", "farmer", "guide", "judge"];
+pub const PLACES: [&str; 8] =
+    ["paris", "tokyo", "cairo", "lima", "oslo", "delhi", "rome", "quito"];
+pub const DAYS: [&str; 7] =
+    ["monday", "tuesday", "wednesday", "thursday", "friday", "saturday", "sunday"];
+pub const NAMES: [&str; 8] = ["tom", "ana", "raj", "mia", "leo", "zoe", "sam", "eva"];
+pub const FIELDS: [&str; 8] =
+    ["age", "price", "score", "size", "rank", "count", "level", "speed"];
+pub const RARE: [&str; 16] = [
+    "zyx", "qov", "vex", "juf", "wib", "kah", "pyx", "gud", "nix", "fiz", "yam", "ojo", "ulu",
+    "ebb", "awn", "irk",
+];
+
+/// Dataset analog names in paper order.
+pub const DOMAINS: [&str; 8] =
+    ["alpaca", "prompts", "cnn", "orca", "arena", "gsm8k", "spider", "hle"];
+
+/// Generate one prompt for a domain (the serving-side half of the
+/// templates; completions are what the models were trained to produce).
+pub fn prompt(domain: &str, rng: &mut Rng) -> String {
+    match domain {
+        "alpaca" => {
+            let v = rng.choose(&VERBS);
+            let n = rng.choose(&NOUNS);
+            format!("### Instruction: {v} the {n}. ### Response:")
+        }
+        "prompts" => {
+            let role = rng.choose(&ROLES);
+            format!("act as a {role}.")
+        }
+        "cnn" => {
+            let n = rng.choose(&NOUNS);
+            let p = rng.choose(&PLACES);
+            let d = rng.choose(&DAYS);
+            format!("breaking news: the {n} in {p} opened on {d}. summary:")
+        }
+        "orca" => {
+            let a = rng.choose(&NOUNS);
+            let b = rng.choose(&NOUNS);
+            format!("question: is a {a} larger than a {b}? think step by step.")
+        }
+        "arena" => "hello how are you today?".to_string(),
+        "gsm8k" => {
+            let name = rng.choose(&NAMES);
+            let a = rng.range_u(1, 9);
+            let b = rng.range_u(1, 9);
+            format!("q: {name} has {a} apples and buys {b} more. how many apples?")
+        }
+        "spider" => {
+            let n = rng.choose(&NOUNS);
+            let f = rng.choose(&FIELDS);
+            let num = rng.range_u(10, 99);
+            format!("q: list all {n}s with {f} above {num} | sql:")
+        }
+        "hle" => {
+            let words: Vec<&str> = (0..3).map(|_| *rng.choose(&RARE)).collect();
+            format!("decode: {}", words.join(" "))
+        }
+        other => panic!("unknown domain '{other}'"),
+    }
+}
+
+/// Is this a known domain?
+pub fn is_domain(name: &str) -> bool {
+    DOMAINS.contains(&name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_domains_like_the_paper() {
+        assert_eq!(DOMAINS.len(), 8);
+    }
+
+    #[test]
+    fn all_domains_generate() {
+        let mut rng = Rng::new(0);
+        for d in DOMAINS {
+            for _ in 0..20 {
+                let p = prompt(d, &mut rng);
+                assert!(p.is_ascii());
+                assert!((5..=120).contains(&p.len()), "{d}: '{p}'");
+            }
+        }
+    }
+
+    #[test]
+    fn prompts_deterministic_per_seed() {
+        let mut a = Rng::new(3);
+        let mut b = Rng::new(3);
+        for d in DOMAINS {
+            assert_eq!(prompt(d, &mut a), prompt(d, &mut b));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_domain_panics() {
+        prompt("nope", &mut Rng::new(0));
+    }
+}

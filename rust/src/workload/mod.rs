@@ -1,0 +1,8 @@
+//! Workload generation: the eight dataset analogs and non-stationary
+//! per-client prompt streams.
+
+pub mod domains;
+pub mod stream;
+
+pub use domains::DOMAINS;
+pub use stream::{DomainStream, Request};

@@ -1,0 +1,133 @@
+//! Non-stationary per-client prompt streams.
+//!
+//! Each draft server serves one end-user whose requests follow a Markov
+//! domain process: with probability `stickiness` the next request stays in
+//! the client's primary domain, otherwise it jumps to a uniformly random
+//! other domain. Domain shifts change the *true* acceptance rate mid-run —
+//! the non-stationarity that GoodSpeed's smoothed estimators must track
+//! (paper §III-B "dynamic evolution of client prompts").
+
+use super::domains::{self, DOMAINS};
+use crate::util::Rng;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub prompt: String,
+    pub domain: &'static str,
+    pub max_new_tokens: usize,
+    /// Sequence number within the client's stream.
+    pub seq: u64,
+}
+
+/// Markov-switching prompt stream for one client.
+#[derive(Clone, Debug)]
+pub struct DomainStream {
+    primary: &'static str,
+    current: &'static str,
+    stickiness: f64,
+    max_new_tokens: usize,
+    rng: Rng,
+    seq: u64,
+}
+
+impl DomainStream {
+    pub fn new(primary: &str, stickiness: f64, max_new_tokens: usize, rng: Rng) -> Self {
+        let primary_static = DOMAINS
+            .iter()
+            .find(|d| **d == primary)
+            .copied()
+            .unwrap_or_else(|| panic!("unknown domain '{primary}'"));
+        DomainStream {
+            primary: primary_static,
+            current: primary_static,
+            stickiness,
+            max_new_tokens,
+            rng,
+            seq: 0,
+        }
+    }
+
+    pub fn current_domain(&self) -> &'static str {
+        self.current
+    }
+
+    /// Force a domain (used by the domain-shift example to create abrupt
+    /// mid-run transitions).
+    pub fn set_primary(&mut self, domain: &str) {
+        self.primary = DOMAINS
+            .iter()
+            .find(|d| **d == domain)
+            .copied()
+            .unwrap_or_else(|| panic!("unknown domain '{domain}'"));
+    }
+
+    /// Next request in the stream.
+    pub fn next_request(&mut self) -> Request {
+        self.current = if self.rng.bool(self.stickiness) {
+            self.primary
+        } else {
+            // Jump to a uniformly random *other* domain.
+            loop {
+                let d = *self.rng.choose(&DOMAINS);
+                if d != self.primary {
+                    break d;
+                }
+            }
+        };
+        let prompt = domains::prompt(self.current, &mut self.rng);
+        self.seq += 1;
+        Request { prompt, domain: self.current, max_new_tokens: self.max_new_tokens, seq: self.seq }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sticky_stream_stays_mostly_primary() {
+        let mut s = DomainStream::new("gsm8k", 0.9, 50, Rng::new(0));
+        let mut primary_count = 0;
+        let n = 1000;
+        for _ in 0..n {
+            if s.next_request().domain == "gsm8k" {
+                primary_count += 1;
+            }
+        }
+        let frac = primary_count as f64 / n as f64;
+        assert!((frac - 0.9).abs() < 0.04, "frac {frac}");
+    }
+
+    #[test]
+    fn stationary_stream_never_leaves() {
+        let mut s = DomainStream::new("alpaca", 1.0, 50, Rng::new(1));
+        for _ in 0..100 {
+            assert_eq!(s.next_request().domain, "alpaca");
+        }
+    }
+
+    #[test]
+    fn requests_numbered_and_bounded() {
+        let mut s = DomainStream::new("spider", 0.8, 150, Rng::new(2));
+        let r1 = s.next_request();
+        let r2 = s.next_request();
+        assert_eq!(r1.seq, 1);
+        assert_eq!(r2.seq, 2);
+        assert_eq!(r1.max_new_tokens, 150);
+        assert!(r1.prompt.len() < 128);
+    }
+
+    #[test]
+    fn set_primary_redirects() {
+        let mut s = DomainStream::new("alpaca", 1.0, 50, Rng::new(3));
+        s.set_primary("hle");
+        assert_eq!(s.next_request().domain, "hle");
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_primary_panics() {
+        DomainStream::new("nope", 0.5, 50, Rng::new(0));
+    }
+}
