@@ -44,6 +44,38 @@ impl Policy {
     }
 }
 
+/// Coordinator batching discipline.
+///
+/// * `Sync` — the classic per-round barrier: the leader waits for *every*
+///   client's draft before verifying (Algorithm 1 exactly; reproduces all
+///   paper experiments bit-for-bit).
+/// * `Async` — the event-driven verification pipeline: the leader fires a
+///   batched verify as soon as `min_wave_fill` clients are ready or the
+///   `batch_window_us` deadline expires, whichever comes first; stragglers
+///   simply join a later wave (see DESIGN.md, "Wave lifecycle").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoordMode {
+    Sync,
+    Async,
+}
+
+impl CoordMode {
+    pub fn parse(s: &str) -> Option<CoordMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" | "barrier" => Some(CoordMode::Sync),
+            "async" | "wave" | "event" => Some(CoordMode::Async),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CoordMode::Sync => "sync",
+            CoordMode::Async => "async",
+        }
+    }
+}
+
 /// Per-client network link (edge → verification server).
 #[derive(Clone, Debug)]
 pub struct LinkConfig {
@@ -105,6 +137,15 @@ pub struct Scenario {
     pub rounds: u64,
     pub seed: u64,
     pub links: Vec<LinkConfig>,
+    /// Coordinator batching discipline (sync barrier vs async waves).
+    pub coord_mode: CoordMode,
+    /// Async only: max time the leader waits, after the first draft of a
+    /// wave arrives, for more drafts before firing the verify (µs).
+    pub batch_window_us: u64,
+    /// Async only: fire the wave as soon as this many clients are pending,
+    /// even before the window expires. `0` means "all clients" (the window
+    /// then bounds the straggler wait).
+    pub min_wave_fill: usize,
 }
 
 impl Scenario {
@@ -139,7 +180,22 @@ impl Scenario {
         if !(0.0..=1.0).contains(&self.domain_stickiness) {
             return Err("domain_stickiness must be in [0,1]".into());
         }
+        if self.min_wave_fill > self.num_clients {
+            return Err("min_wave_fill must be <= num_clients (0 = all)".into());
+        }
+        if self.coord_mode == CoordMode::Async && self.batch_window_us > 10_000_000 {
+            return Err("batch_window_us must be <= 10s".into());
+        }
         Ok(())
+    }
+
+    /// Wave-fill threshold with the `0 = all clients` convention resolved.
+    pub fn effective_wave_fill(&self) -> usize {
+        if self.min_wave_fill == 0 {
+            self.num_clients
+        } else {
+            self.min_wave_fill.min(self.num_clients)
+        }
     }
 
     /// Default heterogeneous links: seeded spread of latency/bandwidth so
@@ -176,6 +232,9 @@ impl Scenario {
                 rounds: 600,
                 seed,
                 links: Scenario::default_links(4, seed),
+                coord_mode: CoordMode::Sync,
+                batch_window_us: 500,
+                min_wave_fill: 0,
             },
             // Table I row 2: Qwen3-14B / 0.6B+1.7B, C ∈ {16,20}, 8 clients, 150 tok
             "qwen-8c-150" => Scenario {
@@ -193,6 +252,9 @@ impl Scenario {
                 rounds: 600,
                 seed,
                 links: Scenario::default_links(8, seed),
+                coord_mode: CoordMode::Sync,
+                batch_window_us: 500,
+                min_wave_fill: 0,
             },
             // Table I row 3: Llama-70B / 1B+3B, C ∈ {16,20}, 8 clients, 150 tok
             "llama-8c-150" => Scenario {
@@ -210,6 +272,9 @@ impl Scenario {
                 rounds: 600,
                 seed,
                 links: Scenario::default_links(8, seed),
+                coord_mode: CoordMode::Sync,
+                batch_window_us: 500,
+                min_wave_fill: 0,
             },
             // Fast preset for tests and smoke runs.
             "smoke" => Scenario {
@@ -227,16 +292,50 @@ impl Scenario {
                 rounds: 30,
                 seed,
                 links: Scenario::default_links(2, seed),
+                coord_mode: CoordMode::Sync,
+                batch_window_us: 500,
+                min_wave_fill: 0,
             },
+            // Straggler study: one client with a 10× slower uplink. In sync
+            // mode every round stalls on that link; async mode lets the
+            // three fast clients keep verifying (the Fig 3 motivation).
+            "straggler" => {
+                // Client 0: 10× the worst fast-link latency and a 10 Mbps
+                // uplink, so it dominates every seeded fast link.
+                let mut links = Scenario::default_links(4, seed);
+                links[0].latency_s = 20e-3;
+                links[0].bandwidth_bps = 10.0e6 / 8.0;
+                Scenario {
+                    id: id.into(),
+                    family: "qwen".into(),
+                    num_clients: 4,
+                    capacity: 16,
+                    max_new_tokens: 30,
+                    draft_models: vec!["qwen-draft-06b".into()],
+                    domains: base_domains[..4].to_vec(),
+                    domain_stickiness: 0.85,
+                    eta: Smoothing::Fixed(0.3),
+                    beta: Smoothing::Fixed(0.5),
+                    max_draft: 16,
+                    rounds: 120,
+                    seed,
+                    links,
+                    coord_mode: CoordMode::Sync,
+                    batch_window_us: 2_000,
+                    min_wave_fill: 2,
+                }
+            }
             _ => return None,
         };
         s.validate().expect("preset must validate");
-        s.links = Scenario::default_links(s.num_clients, s.seed);
+        if s.links.len() != s.num_clients {
+            s.links = Scenario::default_links(s.num_clients, s.seed);
+        }
         Some(s)
     }
 
-    pub fn preset_ids() -> [&'static str; 4] {
-        ["qwen-4c-50", "qwen-8c-150", "llama-8c-150", "smoke"]
+    pub fn preset_ids() -> [&'static str; 5] {
+        ["qwen-4c-50", "qwen-8c-150", "llama-8c-150", "smoke", "straggler"]
     }
 
     /// Serialize for results provenance.
@@ -254,6 +353,9 @@ impl Scenario {
             ("domains", Value::Array(self.domains.iter().cloned().map(Value::Str).collect())),
             ("rounds", Value::Num(self.rounds as f64)),
             ("seed", Value::Num(self.seed as f64)),
+            ("coord_mode", Value::Str(self.coord_mode.name().into())),
+            ("batch_window_us", Value::Num(self.batch_window_us as f64)),
+            ("min_wave_fill", Value::Num(self.min_wave_fill as f64)),
         ])
     }
 }
@@ -328,6 +430,44 @@ mod tests {
         assert!((a[0].latency_s - b[0].latency_s).abs() < 1e-15);
         assert!((a[0].latency_s - c[0].latency_s).abs() > 1e-9);
         assert!(a.iter().any(|l| (l.latency_s - a[0].latency_s).abs() > 1e-6));
+    }
+
+    #[test]
+    fn coord_mode_parse_and_defaults() {
+        assert_eq!(CoordMode::parse("sync"), Some(CoordMode::Sync));
+        assert_eq!(CoordMode::parse("Async"), Some(CoordMode::Async));
+        assert_eq!(CoordMode::parse("wave"), Some(CoordMode::Async));
+        assert_eq!(CoordMode::parse("nope"), None);
+        // Every preset defaults to the barrier so existing experiments
+        // reproduce bit-for-bit.
+        for id in Scenario::preset_ids() {
+            assert_eq!(Scenario::preset(id).unwrap().coord_mode, CoordMode::Sync, "{id}");
+        }
+    }
+
+    #[test]
+    fn straggler_preset_has_one_slow_link() {
+        let s = Scenario::preset("straggler").unwrap();
+        assert_eq!(s.num_clients, 4);
+        let slow = s.links[0].latency_s;
+        for l in &s.links[1..] {
+            assert!(slow > 5.0 * l.latency_s, "client 0 must dominate: {slow} vs {}", l.latency_s);
+        }
+        assert_eq!(s.effective_wave_fill(), 2);
+    }
+
+    #[test]
+    fn wave_fill_validation_and_resolution() {
+        let mut s = Scenario::preset("smoke").unwrap();
+        assert_eq!(s.effective_wave_fill(), s.num_clients); // 0 = all
+        s.min_wave_fill = s.num_clients + 1;
+        assert!(s.validate().is_err());
+        s.min_wave_fill = 1;
+        assert!(s.validate().is_ok());
+        assert_eq!(s.effective_wave_fill(), 1);
+        s.coord_mode = CoordMode::Async;
+        s.batch_window_us = 20_000_000;
+        assert!(s.validate().is_err());
     }
 
     #[test]

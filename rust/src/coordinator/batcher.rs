@@ -1,5 +1,9 @@
-//! Round batcher: assembles all clients' draft messages into one batched
-//! [`VerifyRequest`] (paper step ③).
+//! Wave batcher: assembles one wave's draft messages — any subset of
+//! clients — into one batched [`VerifyRequest`] (paper step ③).
+//!
+//! Sync mode passes all N clients every round; async mode passes whichever
+//! subset was ready when the wave fired. Row `b` of the request maps to
+//! `views[b].client_id` (the client-subset → row mapping).
 //!
 //! Layout contract with `python/compile/model.py::verify_graph`:
 //! * row b = client b (fixed order); `tokens[b] = prefix ++ draft`, padded;
@@ -17,7 +21,9 @@ use anyhow::{anyhow, Result};
 use crate::net::wire::DraftMsg;
 use crate::runtime::{pick_bucket, VerifyRequest};
 
-/// Per-client view the leader keeps for the round.
+/// Per-client view the leader keeps for the wave. Row `b` of the verify
+/// request corresponds to `views[b]`; `client_id` is the *actual* client,
+/// not the row index.
 #[derive(Clone, Debug)]
 pub struct ClientRound {
     pub client_id: usize,
@@ -27,8 +33,9 @@ pub struct ClientRound {
     pub draft_wall_ns: u64,
 }
 
-/// Build the batched request. `msgs` must hold exactly one message per
-/// client, indexed by client id.
+/// Build the batched request for one wave. `msgs` holds one message per
+/// *participating* client in strictly increasing client-id order (any
+/// subset; a full round is simply the subset of everyone).
 pub fn build_verify_request(
     msgs: &[DraftMsg],
     buckets: &[(usize, usize)],
@@ -37,12 +44,17 @@ pub fn build_verify_request(
 ) -> Result<(VerifyRequest, Vec<ClientRound>)> {
     let n = msgs.len();
     if n == 0 {
-        return Err(anyhow!("empty round"));
+        return Err(anyhow!("empty wave"));
     }
     let mut need_seq = 0usize;
-    for (i, m) in msgs.iter().enumerate() {
-        if m.client_id as usize != i {
-            return Err(anyhow!("messages must be ordered by client id"));
+    for (b, m) in msgs.iter().enumerate() {
+        let i = m.client_id as usize;
+        if b > 0 && msgs[b - 1].client_id >= m.client_id {
+            return Err(anyhow!(
+                "wave must be strictly increasing by client id ({} then {})",
+                msgs[b - 1].client_id,
+                m.client_id
+            ));
         }
         if m.draft.len() > k {
             return Err(anyhow!("client {i}: draft {} > K {k}", m.draft.len()));
@@ -80,7 +92,7 @@ pub fn build_verify_request(
         q_probs[(b * k) * vocab..(b * k + m.draft.len()) * vocab].copy_from_slice(&m.q_probs);
         pos0[b] = p as i32;
         views.push(ClientRound {
-            client_id: b,
+            client_id: m.client_id as usize,
             prefix_len: p,
             draft_len: m.draft.len(),
             new_request: m.new_request,
@@ -159,10 +171,13 @@ mod tests {
     fn rejects_malformed_rounds() {
         let v = 16;
         assert!(build_verify_request(&[], BUCKETS, 8, v).is_err());
-        // wrong order
-        let mut m = msg(0, &[1], &[], v);
-        m.client_id = 1;
-        assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+        // out-of-order client ids
+        let out_of_order = vec![msg(2, &[1], &[], v), msg(0, &[1], &[], v)];
+        let err = build_verify_request(&out_of_order, BUCKETS, 8, v).unwrap_err();
+        assert!(err.to_string().contains("strictly increasing"), "{err}");
+        // duplicate client ids
+        let dup = vec![msg(1, &[1], &[], v), msg(1, &[1], &[], v)];
+        assert!(build_verify_request(&dup, BUCKETS, 8, v).is_err());
         // draft longer than K
         let m = msg(0, &[1], &[9; 9], v);
         assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
@@ -176,5 +191,31 @@ mod tests {
         // overflow largest bucket
         let m = msg(0, &[1; 255], &[2; 8], v);
         assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+    }
+
+    #[test]
+    fn partial_wave_maps_rows_to_client_ids() {
+        // Wave of clients {1, 3} out of a larger cluster: rows are dense,
+        // views carry the real ids.
+        let v = 16;
+        let msgs = vec![msg(1, &[4, 5], &[20], v), msg(3, &[1, 2, 3], &[30, 31], v)];
+        let (req, views) = build_verify_request(&msgs, BUCKETS, 8, v).unwrap();
+        assert_eq!(req.batch, 2);
+        assert_eq!(views[0].client_id, 1);
+        assert_eq!(views[1].client_id, 3);
+        assert_eq!(req.pos0, vec![2, 3]);
+        assert_eq!(&req.tokens[0..3], &[4, 5, 20]);
+        assert_eq!(&req.tokens[128..133], &[1, 2, 3, 30, 31]);
+    }
+
+    #[test]
+    fn singleton_wave_from_nonzero_client() {
+        // A straggler verifying alone must be legal in async mode.
+        let v = 16;
+        let msgs = vec![msg(5, &[9, 8], &[7], v)];
+        let (req, views) = build_verify_request(&msgs, BUCKETS, 8, v).unwrap();
+        assert_eq!(req.batch, 1);
+        assert_eq!(views[0].client_id, 5);
+        assert_eq!(views[0].draft_len, 1);
     }
 }

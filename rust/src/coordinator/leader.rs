@@ -1,22 +1,33 @@
 //! The verification-server leader: Algorithm 1's server side.
 //!
-//! Per round t (paper steps ③–⑥):
-//! 1. **Receive** — drain the FIFO fan-in until every client's draft batch
-//!    for round t has arrived (wall time here = paper's "receiving time":
-//!    draft compute + uplink of the q distributions, dominated by the
-//!    slowest client — the straggler effect Fig 3 discusses).
-//! 2. **Verify** — one batched forward through the target model (the
-//!    bucketed AOT artifact), then per-client rejection sampling; update
-//!    α̂ (eq. 3) and X^β (eq. 4); solve GOODSPEED-SCHED (eq. 5) for S(t+1).
-//! 3. **Send** — verdicts + next allocations back to every client.
+//! Two coordination disciplines share one verification core
+//! ([`Leader::process_wave`]):
+//!
+//! * **Sync** (`CoordMode::Sync`) — the paper's per-round barrier: drain
+//!   the FIFO fan-in until *every* client's draft batch for round t has
+//!   arrived (wall time here = paper's "receiving time", dominated by the
+//!   slowest client — the straggler effect Fig 3 discusses), verify once,
+//!   send verdicts. Reproduces all paper experiments bit-for-bit.
+//! * **Async** (`CoordMode::Async`) — the event-driven pipeline: the
+//!   leader fires a batched verify as soon as (a) `min_wave_fill` clients
+//!   are pending or (b) the `batch_window_us` deadline after the wave's
+//!   first arrival expires — whichever comes first — verifying whatever
+//!   subset is ready and letting stragglers join a later wave. The run's
+//!   verification budget is the same total work as sync
+//!   (`num_clients × rounds` verdicts), distributed by arrival order.
+//!
+//! Per wave (paper steps ③–⑥): batched forward through the target model,
+//! per-client rejection sampling, α̂ (eq. 3) and X^β (eq. 4) sparse
+//! updates, GOODSPEED-SCHED (eq. 5) over the wave's live client set. See
+//! DESIGN.md, "Wave lifecycle", for the state machine.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::batcher::build_verify_request;
-use crate::configsys::{Policy, Scenario};
+use crate::configsys::{CoordMode, Policy, Scenario};
 use crate::draft::{spawn_draft_server, DraftServerConfig};
 use crate::metrics::recorder::{ClientRoundMetrics, Recorder, RoundRecord};
 use crate::net::transport::{channel_transport, ServerSide, TcpTransport};
@@ -54,7 +65,7 @@ pub struct RunConfig {
     pub simulate_network: bool,
 }
 
-/// The leader + its verdict RNG and estimators, reusable round to round.
+/// The leader + its verdict RNG and estimators, reusable wave to wave.
 pub struct Leader {
     verifier: Box<dyn Verifier>,
     estimators: Estimators,
@@ -65,6 +76,12 @@ pub struct Leader {
     max_seq: usize,
     verify_k: usize,
     vocab: usize,
+    /// Upper bound on each client's in-flight draft length (its last
+    /// granted allocation; clients only clamp downward). Invariant:
+    /// Σ outstanding ≤ capacity, so no wave's verify batch — which is a
+    /// subset of the outstanding drafts — can exceed the budget C even
+    /// when waves interleave asynchronously.
+    outstanding: Vec<usize>,
     pub recorder: Recorder,
 }
 
@@ -78,6 +95,10 @@ impl Leader {
         let estimators =
             Estimators::new(scenario.num_clients, scenario.eta, scenario.beta);
         let allocator = make_allocator(policy, scenario.seed ^ 0x5eed);
+        // Matches the drafters' S_i(0) in `run_serving` (they only clamp
+        // further down by context room).
+        let initial_alloc = (scenario.capacity / scenario.num_clients.max(1))
+            .min(scenario.max_draft);
         Ok(Leader {
             verifier,
             estimators,
@@ -88,24 +109,46 @@ impl Leader {
             max_seq: factory.max_seq(),
             verify_k: factory.verify_k(),
             vocab: factory.vocab(),
+            outstanding: vec![initial_alloc; scenario.num_clients],
             recorder: Recorder::new(scenario.num_clients),
         })
     }
 
-    /// Process one assembled round: verification + estimator update +
-    /// next-round allocation. Returns the verdicts to send.
-    pub fn process_round(&mut self, round: u64, msgs: &[DraftMsg]) -> Result<Vec<VerdictMsg>> {
-        let n = msgs.len();
+    /// Process one assembled wave: verification + sparse estimator update +
+    /// per-wave allocation over the participating client set. `msgs` holds
+    /// the wave's subset in strictly increasing client-id order; a sync
+    /// round is simply the wave of everyone. `recv_ns` is the measured
+    /// receive-phase wall time; the verify phase is measured here and both
+    /// are threaded into the pushed [`RoundRecord`] (the send phase is
+    /// filled in by [`Leader::note_send_ns`] after fan-out).
+    pub fn process_wave(
+        &mut self,
+        wave: u64,
+        msgs: &[DraftMsg],
+        recv_ns: u64,
+    ) -> Result<Vec<VerdictMsg>> {
+        let mut sw = Stopwatch::new();
+        let n_total = self.estimators.len();
+        for m in msgs {
+            if m.client_id as usize >= n_total {
+                return Err(anyhow!(
+                    "client id {} out of range (num_clients = {n_total})",
+                    m.client_id
+                ));
+            }
+        }
         let (req, views) =
             build_verify_request(msgs, &self.verifier.buckets(), self.verify_k, self.vocab)?;
         let out = self.verifier.verify(&req)?;
 
-        // Rejection sampling per client (paper step ④).
+        // Rejection sampling per client (paper step ④), in row order so the
+        // verdict RNG stream is identical to the pre-wave coordinator for
+        // dense (sync) waves.
         let v = self.vocab;
         let k = self.verify_k;
-        let mut obs: Vec<Option<(f64, f64)>> = Vec::with_capacity(n);
-        let mut verdicts = Vec::with_capacity(n);
-        let mut metrics = Vec::with_capacity(n);
+        let mut obs: Vec<Option<(f64, f64)>> = vec![None; n_total];
+        let mut verdicts = Vec::with_capacity(views.len());
+        let mut metrics = Vec::with_capacity(views.len());
         for (b, view) in views.iter().enumerate() {
             let s = view.draft_len;
             let ratios = &out.ratio_row(b, k)[..s];
@@ -120,64 +163,88 @@ impl Leader {
                 bonus_owned
             };
             let verdict = verify_client(ratios, resid, bonus, v, &mut self.rng);
-            obs.push(Some((verdict.mean_ratio, verdict.goodput as f64)));
+            obs[view.client_id] = Some((verdict.mean_ratio, verdict.goodput as f64));
             metrics.push((verdict.accepted, verdict.goodput, verdict.mean_ratio));
             verdicts.push(VerdictMsg {
-                client_id: b as u32,
-                round,
+                client_id: view.client_id as u32,
+                // Echo the client's own round (client-local matching; in
+                // sync mode this equals the coordinator round).
+                round: msgs[b].round,
                 accepted: verdict.accepted as u32,
                 correction: verdict.correction,
                 next_alloc: 0, // filled below
             });
         }
 
-        // Estimator updates (eqs. 3–4, Algorithm 1 line 14).
+        // Estimator updates (eqs. 3–4, Algorithm 1 line 14) — sparse over
+        // the wave's participants.
         self.estimators.update_round(&obs);
 
-        // GOODSPEED-SCHED (line 15): allocate S(t+1) under context room.
-        let max_per_client: Vec<usize> = views
+        // GOODSPEED-SCHED (line 15): allocate S(t+1) under context room,
+        // over the currently-live (participating) client set. Absent
+        // clients are capped at 0 — they get their allocation from their
+        // own wave's verdict — and their *outstanding* (in-flight) grants
+        // stay reserved out of the budget, so interleaved waves can never
+        // jointly exceed C (in sync mode everyone participates, so the
+        // reservation is 0 and this is exactly the pre-wave allocation).
+        let mut in_wave = vec![false; n_total];
+        for view in &views {
+            in_wave[view.client_id] = true;
+        }
+        let reserved: usize = self
+            .outstanding
             .iter()
-            .zip(&verdicts)
-            .map(|(view, vd)| {
-                let new_prefix = view.prefix_len + vd.accepted as usize + 1;
-                self.max_draft.min(self.max_seq.saturating_sub(new_prefix + 2))
-            })
-            .collect();
-        let caps = AllocCaps { capacity: self.capacity, max_per_client };
+            .zip(&in_wave)
+            .filter(|(_, &live)| !live)
+            .map(|(&o, _)| o)
+            .sum();
+        let mut max_per_client = vec![0usize; n_total];
+        for (view, vd) in views.iter().zip(&verdicts) {
+            let new_prefix = view.prefix_len + vd.accepted as usize + 1;
+            max_per_client[view.client_id] =
+                self.max_draft.min(self.max_seq.saturating_sub(new_prefix + 2));
+        }
+        let caps = AllocCaps {
+            capacity: self.capacity.saturating_sub(reserved),
+            max_per_client,
+            live: in_wave,
+        };
         let alloc = self.allocator.allocate(&self.estimators, &caps);
-        for (vd, &a) in verdicts.iter_mut().zip(&alloc) {
-            vd.next_alloc = a as u32;
+        for (vd, view) in verdicts.iter_mut().zip(&views) {
+            vd.next_alloc = alloc[view.client_id] as u32;
+            self.outstanding[view.client_id] = alloc[view.client_id];
         }
 
-        // Metrics.
+        // Wave-indexed metrics with the measured phase times threaded in.
         let clients = views
             .iter()
             .enumerate()
-            .map(|(i, view)| ClientRoundMetrics {
+            .map(|(b, view)| ClientRoundMetrics {
+                client_id: view.client_id,
                 s_used: view.draft_len,
-                accepted: metrics[i].0,
-                goodput: metrics[i].1,
-                mean_ratio: metrics[i].2,
-                alpha_hat: self.estimators.alpha_hat[i],
-                x_beta: self.estimators.x_beta[i],
-                next_alloc: alloc[i],
+                accepted: metrics[b].0,
+                goodput: metrics[b].1,
+                mean_ratio: metrics[b].2,
+                alpha_hat: self.estimators.alpha_hat[view.client_id],
+                x_beta: self.estimators.x_beta[view.client_id],
+                next_alloc: alloc[view.client_id],
             })
             .collect();
         self.recorder.push(RoundRecord {
-            round,
-            recv_ns: 0,
-            verify_ns: 0,
-            send_ns: 0,
+            round: wave,
+            recv_ns,
+            verify_ns: sw.lap().as_nanos() as u64,
+            send_ns: 0, // noted after the verdict fan-out
             clients,
         });
-        // Request-latency accounting from new_request transitions.
-        for view in &views {
-            if view.new_request && round > 0 {
-                // The request that just ended is recorded draft-side; the
-                // coordinator-side proxy counts rounds between flags.
-            }
-        }
         Ok(verdicts)
+    }
+
+    /// Record the measured send-phase time on the wave just processed.
+    pub fn note_send_ns(&mut self, send_ns: u64) {
+        if let Some(rec) = self.recorder.rounds.last_mut() {
+            rec.send_ns = send_ns;
+        }
     }
 
     pub fn estimators(&self) -> &Estimators {
@@ -192,8 +259,31 @@ pub struct RunOutcome {
     pub draft_stats: Vec<crate::draft::DraftStats>,
 }
 
-/// Full distributed run: spawn draft-server threads, drive the leader for
-/// `scenario.rounds` rounds, shut down, and collect everything.
+/// Per-client request-latency bookkeeping shared by both modes: latency is
+/// counted in *client-local* rounds between `new_request` flags.
+struct LatencyTracker {
+    start_round: Vec<u64>,
+}
+
+impl LatencyTracker {
+    fn new(n: usize) -> Self {
+        LatencyTracker { start_round: vec![0; n] }
+    }
+
+    fn observe(&mut self, recorder: &mut Recorder, client: usize, msg: &DraftMsg) {
+        if msg.new_request {
+            if msg.round > 0 {
+                recorder
+                    .request_latency_rounds
+                    .push(msg.round - self.start_round[client]);
+            }
+            self.start_round[client] = msg.round;
+        }
+    }
+}
+
+/// Full distributed run: spawn draft-server threads, drive the leader in
+/// the scenario's coordination mode, shut down, and collect everything.
 pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<RunOutcome> {
     let scenario = &cfg.scenario;
     scenario.validate().map_err(|e| anyhow!("invalid scenario: {e}"))?;
@@ -208,7 +298,12 @@ pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<R
         }
     };
 
-    // Draft servers.
+    // Draft servers. In async mode one fast client may absorb most of the
+    // total round budget, so the per-client safety cap is the full budget.
+    let max_rounds = match scenario.coord_mode {
+        CoordMode::Sync => scenario.rounds + 1,
+        CoordMode::Async => scenario.rounds.saturating_mul(n as u64) + 1,
+    };
     let initial_alloc = scenario.capacity / n.max(1);
     let mut handles = Vec::with_capacity(n);
     let mut root_rng = Rng::new(scenario.seed);
@@ -226,14 +321,44 @@ pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<R
             link: scenario.link(i),
             simulate_network: cfg.simulate_network,
             seed: scenario.seed ^ (0xD00D + i as u64),
-            max_rounds: scenario.rounds + 1,
+            max_rounds,
         };
         handles.push(spawn_draft_server(dcfg, factory.clone(), stream, port));
     }
 
     let mut leader = Leader::new(scenario, cfg.policy, factory.as_ref())?;
     let run_start = Instant::now();
-    let mut request_rounds: Vec<u64> = vec![0; n]; // round of current request start
+    let loop_result = match scenario.coord_mode {
+        CoordMode::Sync => run_sync_loop(scenario, &mut server, &mut leader),
+        CoordMode::Async => run_async_loop(scenario, &mut server, &mut leader),
+    };
+    // Shutdown (even on error, so draft threads can exit before join).
+    for tx in server.txs.iter_mut() {
+        let _ = tx(&Message::Shutdown);
+    }
+    loop_result?;
+    let wall = run_start.elapsed().as_secs_f64();
+
+    let mut draft_stats = Vec::with_capacity(n);
+    for h in handles {
+        match h.join() {
+            Ok(Ok(s)) => draft_stats.push(s),
+            Ok(Err(e)) => return Err(anyhow!("draft server failed: {e}")),
+            Err(_) => return Err(anyhow!("draft server panicked")),
+        }
+    }
+    let summary = leader.recorder.summary(wall);
+    Ok(RunOutcome { recorder: leader.recorder, summary, draft_stats })
+}
+
+/// The classic barrier: one dense wave per round, in lockstep.
+fn run_sync_loop(
+    scenario: &Scenario,
+    server: &mut ServerSide,
+    leader: &mut Leader,
+) -> Result<()> {
+    let n = scenario.num_clients;
+    let mut latency = LatencyTracker::new(n);
     for round in 0..scenario.rounds {
         let mut sw = Stopwatch::new();
         // 1. Receive (FIFO until all N batches for this round arrived).
@@ -241,7 +366,6 @@ pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<R
         let mut have = 0usize;
         while have < n {
             let (id, msg) = server
-                .rx
                 .recv()
                 .map_err(|_| anyhow!("draft servers disconnected at round {round}"))?;
             match msg {
@@ -265,49 +389,135 @@ pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<R
 
         // Request-latency bookkeeping (coordinator side).
         for (i, m) in msgs.iter().enumerate() {
-            if m.new_request {
-                if round > 0 {
-                    leader
-                        .recorder
-                        .request_latency_rounds
-                        .push(round - request_rounds[i]);
-                }
-                request_rounds[i] = round;
-            }
+            latency.observe(&mut leader.recorder, i, m);
         }
 
-        // 2. Verify + schedule.
-        let verdicts = leader.process_round(round, &msgs)?;
-        let verify_ns = sw.lap().as_nanos() as u64;
+        // 2. Verify + schedule (one dense wave; verify time is measured
+        // inside process_wave — absorb it from the outer lap so the send
+        // phase below is measured alone).
+        let verdicts = leader.process_wave(round, &msgs, recv_ns)?;
+        let _ = sw.lap();
 
         // 3. Send verdicts (tiny messages; paper: <0.1 % of wall time).
-        for (i, vd) in verdicts.iter().enumerate() {
-            (server.txs[i])(&Message::Verdict(vd.clone()))?;
+        for vd in &verdicts {
+            (server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
         }
-        let send_ns = sw.lap().as_nanos() as u64;
+        leader.note_send_ns(sw.lap().as_nanos() as u64);
+    }
+    Ok(())
+}
 
-        if let Some(rec) = leader.recorder.rounds.last_mut() {
-            rec.recv_ns = recv_ns;
-            rec.verify_ns = verify_ns;
-            rec.send_ns = send_ns;
+/// Admit one fan-in message into the pending set (at most one in-flight
+/// draft per client — the actor protocol strictly alternates send/recv).
+fn ingest_draft(
+    pending: &mut [Option<DraftMsg>],
+    pending_n: &mut usize,
+    latency: &mut LatencyTracker,
+    recorder: &mut Recorder,
+    id: usize,
+    msg: Message,
+) -> Result<()> {
+    match msg {
+        Message::Draft(d) => {
+            latency.observe(recorder, id, &d);
+            if pending[id].replace(d).is_some() {
+                return Err(anyhow!("client {id}: two drafts in flight"));
+            }
+            *pending_n += 1;
+            Ok(())
         }
+        Message::Shutdown => Err(anyhow!("client {id} shut down early")),
+        other => Err(anyhow!("unexpected {other:?}")),
     }
-    // Shutdown.
-    for tx in server.txs.iter_mut() {
-        let _ = tx(&Message::Shutdown);
-    }
-    let wall = run_start.elapsed().as_secs_f64();
+}
 
-    let mut draft_stats = Vec::with_capacity(n);
-    for h in handles {
-        match h.join() {
-            Ok(Ok(s)) => draft_stats.push(s),
-            Ok(Err(e)) => return Err(anyhow!("draft server failed: {e}")),
-            Err(_) => return Err(anyhow!("draft server panicked")),
+/// The event-driven pipeline: waves fire on fill or deadline, stragglers
+/// join later waves, and the run stops after the same total verification
+/// budget as sync (`num_clients × rounds` verdicts).
+fn run_async_loop(
+    scenario: &Scenario,
+    server: &mut ServerSide,
+    leader: &mut Leader,
+) -> Result<()> {
+    let n = scenario.num_clients;
+    let window = Duration::from_micros(scenario.batch_window_us);
+    let fill_target = scenario.effective_wave_fill();
+    let budget: u64 = scenario.rounds.saturating_mul(n as u64);
+    let mut delivered: u64 = 0;
+    // At most one in-flight draft per client (the actor protocol strictly
+    // alternates send/recv).
+    let mut pending: Vec<Option<DraftMsg>> = vec![None; n];
+    let mut pending_n = 0usize;
+    let mut latency = LatencyTracker::new(n);
+    let mut wave: u64 = 0;
+
+    while delivered < budget {
+        let mut sw = Stopwatch::new();
+        // Phase 1 — block for the wave's first draft (nothing to verify
+        // until at least one client is ready).
+        while pending_n == 0 {
+            let (id, msg) = server.recv()?;
+            ingest_draft(
+                &mut pending,
+                &mut pending_n,
+                &mut latency,
+                &mut leader.recorder,
+                id,
+                msg,
+            )?;
         }
+        // Phase 2 — batching window: admit more drafts until the wave-fill
+        // threshold is met or the deadline expires, whichever comes first.
+        let want = fill_target.min((budget - delivered).min(n as u64) as usize);
+        let deadline = Instant::now() + window;
+        while pending_n < want {
+            match server.recv_deadline(deadline)? {
+                Some((id, msg)) => ingest_draft(
+                    &mut pending,
+                    &mut pending_n,
+                    &mut latency,
+                    &mut leader.recorder,
+                    id,
+                    msg,
+                )?,
+                None => break, // deadline-triggered flush
+            }
+        }
+        // Phase 3 — opportunistic drain: anything already queued rides
+        // along for free (bigger batch, no extra waiting).
+        for (id, msg) in server.try_drain()? {
+            ingest_draft(
+                &mut pending,
+                &mut pending_n,
+                &mut latency,
+                &mut leader.recorder,
+                id,
+                msg,
+            )?;
+        }
+
+        // Phase 4 — form the wave (index order ⇒ ascending client id).
+        let mut msgs: Vec<DraftMsg> = Vec::with_capacity(pending_n);
+        for slot in pending.iter_mut() {
+            if let Some(d) = slot.take() {
+                msgs.push(d);
+            }
+        }
+        pending_n = 0;
+        let recv_ns = sw.lap().as_nanos() as u64;
+
+        // Phase 5 — verify + schedule + send (verify time is measured
+        // inside process_wave; absorb it so send is measured alone).
+        let verdicts = leader.process_wave(wave, &msgs, recv_ns)?;
+        let _ = sw.lap();
+        for vd in &verdicts {
+            (server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
+        }
+        delivered += verdicts.len() as u64;
+        leader.note_send_ns(sw.lap().as_nanos() as u64);
+        wave += 1;
     }
-    let summary = leader.recorder.summary(wall);
-    Ok(RunOutcome { recorder: leader.recorder, summary, draft_stats })
+    Ok(())
 }
 
 #[cfg(test)]
@@ -340,6 +550,34 @@ mod tests {
             simulate_network: false,
         };
         run_serving(&cfg, mock_factory()).unwrap()
+    }
+
+    fn run_async(
+        rounds: u64,
+        clients: usize,
+        window_us: u64,
+        fill: usize,
+    ) -> RunOutcome {
+        let mut s = smoke_scenario(rounds, clients);
+        s.coord_mode = CoordMode::Async;
+        s.batch_window_us = window_us;
+        s.min_wave_fill = fill;
+        let cfg = RunConfig {
+            scenario: s,
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+        };
+        run_serving(&cfg, mock_factory()).unwrap()
+    }
+
+    #[test]
+    fn transport_parse() {
+        assert_eq!(Transport::parse("channel"), Some(Transport::Channel));
+        assert_eq!(Transport::parse("Chan"), Some(Transport::Channel));
+        assert_eq!(Transport::parse("TCP"), Some(Transport::Tcp));
+        assert_eq!(Transport::parse("udp"), None);
+        assert_eq!(Transport::parse(""), None);
     }
 
     #[test]
@@ -419,8 +657,14 @@ mod tests {
         let out = run_serving(&cfg, mock_factory()).unwrap();
         // Both clients drafted at least once across the run.
         for i in 0..2 {
-            let drafted: usize =
-                out.recorder.rounds.iter().map(|r| r.clients[i].s_used).sum();
+            let drafted: usize = out
+                .recorder
+                .rounds
+                .iter()
+                .flat_map(|r| r.clients.iter())
+                .filter(|c| c.client_id == i)
+                .map(|c| c.s_used)
+                .sum();
             assert!(drafted > 0, "client {i} starved");
         }
     }
@@ -443,5 +687,103 @@ mod tests {
         let total_req: u64 = out.draft_stats.iter().map(|d| d.requests_completed).sum();
         assert!(total_req > 0);
         assert!(!out.recorder.request_latency_rounds.is_empty());
+    }
+
+    #[test]
+    fn sync_phase_timings_are_threaded_through() {
+        // Satellite fix: RoundRecord phase times must be the measured
+        // values, not zeros.
+        let out = run(Policy::GoodSpeed, 10, 2);
+        let total_ns: u64 = out.recorder.rounds.iter().map(|r| r.total_ns()).sum();
+        assert!(total_ns > 0, "phase timings must be measured");
+        let recv_ns: u64 = out.recorder.rounds.iter().map(|r| r.recv_ns).sum();
+        assert!(recv_ns > 0, "receive phase must be measured");
+    }
+
+    #[test]
+    fn process_wave_accepts_client_subsets() {
+        // Drive the verification core directly with a partial wave: only
+        // clients {1, 3} of 4 are ready.
+        let factory = mock_factory();
+        let mut s = smoke_scenario(5, 4);
+        s.capacity = 12;
+        let mut leader = Leader::new(&s, Policy::GoodSpeed, factory.as_ref()).unwrap();
+        let msg = |id: u32| DraftMsg {
+            client_id: id,
+            round: 0,
+            prefix: vec![1, 2, 3],
+            prompt_len: 3,
+            draft: vec![],
+            q_probs: vec![],
+            new_request: true,
+            draft_wall_ns: 7,
+        };
+        let verdicts = leader.process_wave(0, &[msg(1), msg(3)], 1234).unwrap();
+        assert_eq!(verdicts.len(), 2);
+        assert_eq!(verdicts[0].client_id, 1);
+        assert_eq!(verdicts[1].client_id, 3);
+        // Only the participants appear in the wave record…
+        let rec = leader.recorder.rounds.last().unwrap();
+        assert_eq!(rec.recv_ns, 1234);
+        let ids: Vec<usize> = rec.clients.iter().map(|c| c.client_id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        // …and only their estimators moved off the 0.5 prior (an S=0 wave
+        // observes a neutral mean ratio of 1.0, pulling α̂ upward).
+        let est = leader.estimators();
+        assert!((est.alpha_hat[0] - 0.5).abs() < 1e-12);
+        assert!((est.alpha_hat[2] - 0.5).abs() < 1e-12);
+        assert!((est.alpha_hat[1] - 0.5).abs() > 1e-3);
+        assert!((est.alpha_hat[3] - 0.5).abs() > 1e-3);
+        // Absent clients get no allocation from this wave.
+        let rec_allocs: Vec<usize> = rec.clients.iter().map(|c| c.next_alloc).collect();
+        assert!(rec_allocs.iter().sum::<usize>() <= 12);
+    }
+
+    #[test]
+    fn async_run_delivers_full_budget() {
+        let rounds = 15u64;
+        let clients = 3usize;
+        let out = run_async(rounds, clients, 500, 0);
+        let budget = rounds * clients as u64;
+        let delivered: u64 = out.recorder.participation().iter().sum();
+        // Total verification work matches the sync budget (the final wave
+        // may overshoot by at most n−1 verdicts).
+        assert!(delivered >= budget, "{delivered} < {budget}");
+        assert!(delivered < budget + clients as u64);
+        // Every wave holds a non-empty, id-ascending client subset.
+        for r in &out.recorder.rounds {
+            assert!(!r.clients.is_empty());
+            for w in r.clients.windows(2) {
+                assert!(w[0].client_id < w[1].client_id);
+            }
+        }
+        // Everyone kept making progress.
+        for (i, &p) in out.recorder.participation().iter().enumerate() {
+            assert!(p > 0, "client {i} never verified");
+        }
+    }
+
+    #[test]
+    fn async_deadline_flush_forms_partial_waves() {
+        // A zero batching window forces deadline flushes: waves fire with
+        // whatever arrived, so partial waves must appear and the run must
+        // still complete the budget.
+        let out = run_async(10, 3, 0, 3);
+        let partial = out.recorder.rounds.iter().any(|r| r.clients.len() < 3);
+        assert!(partial, "zero window must produce at least one partial wave");
+        let delivered: u64 = out.recorder.participation().iter().sum();
+        assert!(delivered >= 30);
+    }
+
+    #[test]
+    fn async_accounting_matches_draft_side() {
+        let out = run_async(12, 2, 200, 1);
+        for (i, d) in out.draft_stats.iter().enumerate() {
+            assert_eq!(
+                d.tokens_accepted,
+                out.recorder.cum_accepted()[i],
+                "client {i} accepted-token accounting"
+            );
+        }
     }
 }

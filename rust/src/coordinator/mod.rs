@@ -1,6 +1,7 @@
 //! The verification-server coordinator — the paper's L3 contribution:
-//! FIFO batching, batched verification, rejection sampling, estimator
-//! updates, gradient scheduling, and verdict fan-out.
+//! wave batching (sync barrier or async event-driven pipeline), batched
+//! verification, rejection sampling, sparse estimator updates, gradient
+//! scheduling, and verdict fan-out. See DESIGN.md for the wave lifecycle.
 
 pub mod batcher;
 pub mod leader;

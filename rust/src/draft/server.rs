@@ -11,6 +11,13 @@
 //! * all S accepted           → ingest the last draft token (it never went
 //!   through the model) and then the bonus token.
 //!
+//! Round numbers are *client-local*: the coordinator echoes the draft's
+//! round back in its verdict, so the protocol works identically whether the
+//! leader runs the sync barrier (rounds advance in lockstep across clients)
+//! or the async wave pipeline (each client progresses at its own pace; see
+//! DESIGN.md, "Wave lifecycle"). A verdict is matched to the in-flight
+//! draft by that echo, never by a global round counter.
+//!
 //! The engine is built *inside* the thread (PJRT handles are not `Send`).
 
 use std::thread::JoinHandle;
@@ -180,7 +187,15 @@ impl Actor {
                     if self.cfg.simulate_network {
                         std::thread::sleep(self.link.delay(verdict_msg_bytes(), &mut self.rng));
                     }
-                    debug_assert_eq!(v.round, round);
+                    // The verdict must echo the round of the draft we just
+                    // sent (client-local matching — no lockstep assumption).
+                    if v.round != round {
+                        return Err(anyhow!(
+                            "client {}: verdict for round {} while round {round} in flight",
+                            self.cfg.client_id,
+                            v.round
+                        ));
+                    }
                     self.apply_verdict(round, &draft, v.accepted as usize, v.correction)?;
                     alloc = v.next_alloc as usize;
                 }

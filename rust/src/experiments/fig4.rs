@@ -19,17 +19,29 @@ use crate::metrics::svg::Chart;
 use crate::sched::utility::LogUtility;
 use crate::simulate::AnalyticSim;
 
-/// U(x̄(T)) for every prefix T of a run.
+/// U(x̄(T)) for every prefix T of a run. Waves may hold arbitrary client
+/// subsets, so goodput is accumulated by `client_id` and averaged per
+/// *participated* wave (identical to the dense per-round math in sync).
+/// Clients with no observations yet are excluded from a prefix's utility
+/// rather than entered as 0 (which would clamp to ln(X_MIN) and put a
+/// spurious cliff at the start of async curves).
 pub fn utility_curve(rec: &Recorder) -> Vec<f64> {
     let n = rec.n_clients();
     let mut cum = vec![0.0f64; n];
+    let mut seen = vec![0u64; n];
     let u = LogUtility;
     let mut out = Vec::with_capacity(rec.rounds.len());
-    for (t, r) in rec.rounds.iter().enumerate() {
-        for (i, c) in r.clients.iter().enumerate() {
-            cum[i] += c.goodput as f64;
+    for r in &rec.rounds {
+        for c in &r.clients {
+            cum[c.client_id] += c.goodput as f64;
+            seen[c.client_id] += 1;
         }
-        let avg: Vec<f64> = cum.iter().map(|&g| g / (t + 1) as f64).collect();
+        let avg: Vec<f64> = cum
+            .iter()
+            .zip(&seen)
+            .filter(|(_, &t)| t > 0)
+            .map(|(&g, &t)| g / t as f64)
+            .collect();
         out.push(crate::sched::utility::system_utility(&u, &avg));
     }
     out

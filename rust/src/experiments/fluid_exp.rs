@@ -40,11 +40,14 @@ pub fn beta_sweep(betas: &[f64], rounds: u64, clients: usize) -> Vec<BetaRow> {
         let mut dist_max: f64 = 0.0;
         let mut count = 0usize;
         for r in &sim.recorder.rounds[tail_start..] {
+            // Keyed by client_id (waves may hold subsets; dense in sync).
             let d: f64 = r
                 .clients
                 .iter()
-                .zip(&x_star)
-                .map(|(c, &xs)| (c.x_beta - xs) * (c.x_beta - xs))
+                .map(|c| {
+                    let xs = x_star[c.client_id];
+                    (c.x_beta - xs) * (c.x_beta - xs)
+                })
                 .sum::<f64>()
                 .sqrt();
             dist_sum += d;

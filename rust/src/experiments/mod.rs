@@ -88,6 +88,8 @@ COMMANDS
   run        one serving run        --scenario <id> --policy <p> --rounds <n>
                                     --transport channel|tcp --engine xla|mock
                                     --capacity <C> --clients <n> --no-network
+                                    --mode sync|async --batch-window-us <µs>
+                                    --min-wave-fill <n>
   quickstart single client speculative vs autoregressive speedup
   fig2       goodput estimation fidelity (paper Fig 2)   --out results
   fig3       wall-time decomposition   (paper Fig 3)     --out results
@@ -96,6 +98,6 @@ COMMANDS
   fluid      fluid-limit / Theorem 1 validation          --out results
   ablation   eta/beta/C sweeps, greedy-vs-DP, buckets    --out results
 
-Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke."
+Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke, straggler."
     );
 }

@@ -8,6 +8,17 @@ use crate::configsys::{Policy, Scenario};
 use crate::coordinator::{run_serving, RunConfig, Transport};
 use crate::metrics::csv::write_rounds;
 
+/// Regenerate the seeded links after a --clients/--seed override while
+/// preserving any preset-specific link (the `straggler` preset's defining
+/// 10× slow uplink on client 0 must survive CLI overrides).
+fn regen_links(s: &mut Scenario) {
+    let keep_slow = if s.id == "straggler" { s.links.first().cloned() } else { None };
+    s.links = Scenario::default_links(s.num_clients, s.seed);
+    if let (Some(slow), Some(slot)) = (keep_slow, s.links.first_mut()) {
+        *slot = slow;
+    }
+}
+
 /// Build a scenario from CLI overrides.
 pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
     let id = args.get_or("scenario", "qwen-8c-150");
@@ -18,14 +29,14 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
     }
     if let Some(n) = args.get_parse::<usize>("clients") {
         s.num_clients = n;
-        s.links = Scenario::default_links(n, s.seed);
+        regen_links(&mut s);
     }
     if let Some(r) = args.get_parse::<u64>("rounds") {
         s.rounds = r;
     }
     if let Some(seed) = args.get_parse::<u64>("seed") {
         s.seed = seed;
-        s.links = Scenario::default_links(s.num_clients, seed);
+        regen_links(&mut s);
     }
     if let Some(m) = args.get_parse::<usize>("max-new-tokens") {
         s.max_new_tokens = m;
@@ -38,6 +49,16 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
     }
     if let Some(st) = args.get_parse::<f64>("stickiness") {
         s.domain_stickiness = st;
+    }
+    if let Some(m) = args.get("mode") {
+        s.coord_mode = crate::configsys::CoordMode::parse(m)
+            .ok_or_else(|| anyhow!("bad --mode (sync|async)"))?;
+    }
+    if let Some(w) = args.get_parse::<u64>("batch-window-us") {
+        s.batch_window_us = w;
+    }
+    if let Some(f) = args.get_parse::<usize>("min-wave-fill") {
+        s.min_wave_fill = f;
     }
     s.validate().map_err(|e| anyhow!("scenario: {e}"))?;
     Ok(s)
@@ -55,9 +76,10 @@ pub fn main(args: &Args) -> Result<()> {
     args.finish().map_err(|e| anyhow!(e))?;
 
     log::info!(
-        "run: scenario={} policy={} transport={transport:?} rounds={}",
+        "run: scenario={} policy={} mode={} transport={transport:?} rounds={}",
         scenario.id,
         policy.name(),
+        scenario.coord_mode.name(),
         scenario.rounds
     );
     let cfg = RunConfig { scenario: scenario.clone(), policy, transport, simulate_network };

@@ -5,9 +5,11 @@
 //! three-layer Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the serving coordinator: draft-server
-//!   actors, verification server, FIFO batching, rejection-sampling
-//!   verification, smoothed estimators (paper eqs. 3–4), and the gradient
-//!   scheduler (GOODSPEED-SCHED, eq. 5) with Fixed-S / Random-S baselines.
+//!   actors, verification server with sync-barrier *and* async
+//!   event-driven wave batching (straggler-tolerant continuous
+//!   verification), rejection-sampling verification, smoothed estimators
+//!   (paper eqs. 3–4), and the gradient scheduler (GOODSPEED-SCHED,
+//!   eq. 5) with Fixed-S / Random-S baselines.
 //! * **Layer 2** — `python/compile/model.py`: the tiny-transformer model
 //!   zoo AOT-lowered to HLO text at build time.
 //! * **Layer 1** — `python/compile/kernels/`: Pallas flash-attention and
@@ -16,8 +18,8 @@
 //! Python never runs at serving time: `runtime::XlaEngine` loads the HLO
 //! artifacts via PJRT (CPU) and executes them from the Rust hot path.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the system inventory, the sync/async
+//! wave lifecycle, and the experiment index.
 
 pub mod cli;
 pub mod configsys;

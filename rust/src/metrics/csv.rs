@@ -43,10 +43,10 @@ pub fn write_rounds<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
         "next_alloc", "recv_ns", "verify_ns", "send_ns",
     ];
     let rows = rec.rounds.iter().flat_map(|r| {
-        r.clients.iter().enumerate().map(move |(i, c)| {
+        r.clients.iter().map(move |c| {
             vec![
                 r.round.to_string(),
-                i.to_string(),
+                c.client_id.to_string(),
                 c.s_used.to_string(),
                 c.accepted.to_string(),
                 c.goodput.to_string(),
@@ -87,8 +87,8 @@ mod tests {
             verify_ns: 20,
             send_ns: 1,
             clients: vec![
-                ClientRoundMetrics { goodput: 2, ..Default::default() },
-                ClientRoundMetrics { goodput: 3, ..Default::default() },
+                ClientRoundMetrics { client_id: 0, goodput: 2, ..Default::default() },
+                ClientRoundMetrics { client_id: 1, goodput: 3, ..Default::default() },
             ],
         });
         write_rounds(&path, &rec).unwrap();

@@ -3,9 +3,13 @@
 use crate::sched::utility::{system_utility, Utility};
 use crate::util::stats::jain_index;
 
-/// One client's slice of one round.
+/// One client's slice of one wave (a sync round is a wave of everyone).
 #[derive(Clone, Debug, Default)]
 pub struct ClientRoundMetrics {
+    /// Which client this row belongs to. Waves carry arbitrary client
+    /// subsets, so the position inside `RoundRecord::clients` is *not* the
+    /// client id (it is in sync mode, where every wave is dense).
+    pub client_id: usize,
     /// Draft length actually used this round.
     pub s_used: usize,
     /// Accepted draft tokens m.
@@ -21,15 +25,18 @@ pub struct ClientRoundMetrics {
     pub next_alloc: usize,
 }
 
-/// One coordinator round.
+/// One coordinator wave (sync mode: one wave per round, all clients).
 #[derive(Clone, Debug, Default)]
 pub struct RoundRecord {
+    /// Wave index (== the round number in sync mode).
     pub round: u64,
     /// Wall-time decomposition (paper Fig 3): waiting for draft batches,
-    /// verification (+ scheduling), sending verdicts.
+    /// verification (+ scheduling), sending verdicts. These are the
+    /// *measured* phase times threaded in by the coordinator.
     pub recv_ns: u64,
     pub verify_ns: u64,
     pub send_ns: u64,
+    /// Participating clients only, ascending by `client_id`.
     pub clients: Vec<ClientRoundMetrics>,
 }
 
@@ -43,7 +50,7 @@ impl RoundRecord {
     }
 }
 
-/// Accumulates rounds and derives the report quantities.
+/// Accumulates waves and derives the report quantities.
 #[derive(Debug, Default)]
 pub struct Recorder {
     pub rounds: Vec<RoundRecord>,
@@ -51,6 +58,10 @@ pub struct Recorder {
     pub request_latency_rounds: Vec<u64>,
     /// Cumulative realized goodput per client (for x̄(T) and Fig 4).
     cum_goodput: Vec<f64>,
+    /// Cumulative *accepted* draft tokens per client (fairness audits).
+    cum_accepted: Vec<u64>,
+    /// Number of waves each client participated in (== rounds in sync).
+    participation: Vec<u64>,
 }
 
 impl Recorder {
@@ -59,12 +70,18 @@ impl Recorder {
             rounds: Vec::new(),
             request_latency_rounds: Vec::new(),
             cum_goodput: vec![0.0; n_clients],
+            cum_accepted: vec![0; n_clients],
+            participation: vec![0; n_clients],
         }
     }
 
     pub fn push(&mut self, rec: RoundRecord) {
-        for (i, c) in rec.clients.iter().enumerate() {
+        for c in &rec.clients {
+            let i = c.client_id;
+            assert!(i < self.cum_goodput.len(), "client_id {i} out of range");
             self.cum_goodput[i] += c.goodput as f64;
+            self.cum_accepted[i] += c.accepted as u64;
+            self.participation[i] += 1;
         }
         self.rounds.push(rec);
     }
@@ -73,10 +90,38 @@ impl Recorder {
         self.cum_goodput.len()
     }
 
-    /// Empirical average goodput x̄_i(T) = (1/T) Σ_t x_i(t).
+    pub fn cum_goodput(&self) -> &[f64] {
+        &self.cum_goodput
+    }
+
+    pub fn cum_accepted(&self) -> &[u64] {
+        &self.cum_accepted
+    }
+
+    pub fn participation(&self) -> &[u64] {
+        &self.participation
+    }
+
+    /// Empirical average goodput per *participated* wave,
+    /// x̄_i(T) = (1/T_i) Σ_t x_i(t). In sync mode T_i == T for everyone, so
+    /// this is exactly the paper's x̄(T); in async mode it is the per-wave
+    /// goodput rate the log-utility scheduler equalizes.
     pub fn avg_goodput(&self) -> Vec<f64> {
-        let t = self.rounds.len().max(1) as f64;
-        self.cum_goodput.iter().map(|&g| g / t).collect()
+        self.cum_goodput
+            .iter()
+            .zip(&self.participation)
+            .map(|(&g, &t)| if t == 0 { 0.0 } else { g / t as f64 })
+            .collect()
+    }
+
+    /// Average accepted draft tokens per participated wave (the fairness
+    /// quantity for Jain-index audits across coordinator modes).
+    pub fn avg_accepted(&self) -> Vec<f64> {
+        self.cum_accepted
+            .iter()
+            .zip(&self.participation)
+            .map(|(&a, &t)| if t == 0 { 0.0 } else { a as f64 / t as f64 })
+            .collect()
     }
 
     /// U(x̄(T)) — the Fig 4 curve evaluated at the current T.
@@ -167,7 +212,32 @@ mod tests {
             send_ns: 10,
             clients: goodputs
                 .iter()
-                .map(|&g| ClientRoundMetrics { goodput: g, ..Default::default() })
+                .enumerate()
+                .map(|(i, &g)| ClientRoundMetrics {
+                    client_id: i,
+                    goodput: g,
+                    accepted: g.saturating_sub(1),
+                    ..Default::default()
+                })
+                .collect(),
+        }
+    }
+
+    /// A wave touching only the given (client, goodput) pairs.
+    fn wave(pairs: &[(usize, usize)]) -> RoundRecord {
+        RoundRecord {
+            round: 0,
+            recv_ns: 10,
+            verify_ns: 20,
+            send_ns: 1,
+            clients: pairs
+                .iter()
+                .map(|&(id, g)| ClientRoundMetrics {
+                    client_id: id,
+                    goodput: g,
+                    accepted: g.saturating_sub(1),
+                    ..Default::default()
+                })
                 .collect(),
         }
     }
@@ -202,5 +272,31 @@ mod tests {
         let r = round(&[1, 2, 3]);
         assert_eq!(r.total_goodput(), 6);
         assert_eq!(r.total_ns(), 3010);
+    }
+
+    #[test]
+    fn partial_waves_average_per_participation() {
+        let mut r = Recorder::new(3);
+        r.push(wave(&[(0, 4), (1, 2)]));
+        r.push(wave(&[(0, 6)]));
+        r.push(wave(&[(2, 3)]));
+        assert_eq!(r.participation(), &[2, 1, 1]);
+        assert_eq!(r.avg_goodput(), vec![5.0, 2.0, 3.0]);
+        assert_eq!(r.cum_goodput(), &[10.0, 2.0, 3.0]);
+        assert_eq!(r.cum_accepted(), &[8, 1, 2]);
+        assert_eq!(r.avg_accepted(), vec![4.0, 1.0, 2.0]);
+        let s = r.summary(1.0);
+        assert_eq!(s.rounds, 3); // 3 waves
+        assert!((s.total_tokens - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wave_accounting_matches_dense_rounds_in_sync_shape() {
+        // Dense waves (sync mode) must reproduce the old per-round math.
+        let mut r = Recorder::new(2);
+        r.push(round(&[2, 4]));
+        r.push(round(&[4, 4]));
+        assert_eq!(r.participation(), &[2, 2]);
+        assert_eq!(r.avg_goodput(), vec![3.0, 4.0]);
     }
 }

@@ -10,8 +10,9 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -30,6 +31,48 @@ pub struct ServerSide {
     pub rx: Receiver<(usize, Message)>,
     /// Per-client verdict senders.
     pub txs: Vec<Box<dyn FnMut(&Message) -> Result<()> + Send>>,
+}
+
+impl ServerSide {
+    /// Blocking receive of the next fan-in message.
+    pub fn recv(&mut self) -> Result<(usize, Message)> {
+        self.rx.recv().map_err(|_| anyhow!("all draft servers disconnected"))
+    }
+
+    /// Receive with an absolute deadline. `Ok(None)` means the deadline
+    /// passed with nothing queued — the async coordinator's batching-window
+    /// expiry. Works identically over channel and TCP because the TCP
+    /// reader threads feed the same mpsc fan-in.
+    pub fn recv_deadline(&mut self, deadline: Instant) -> Result<Option<(usize, Message)>> {
+        let timeout = deadline.saturating_duration_since(Instant::now());
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("all draft servers disconnected"))
+            }
+        }
+    }
+
+    /// Drain everything already queued without blocking (opportunistic
+    /// batching after a wave threshold is met). Disconnection surfaces as
+    /// an error only when nothing was drained — queued messages are never
+    /// dropped.
+    pub fn try_drain(&mut self) -> Result<Vec<(usize, Message)>> {
+        let mut out = Vec::new();
+        loop {
+            match self.rx.try_recv() {
+                Ok(m) => out.push(m),
+                Err(TryRecvError::Empty) => return Ok(out),
+                Err(TryRecvError::Disconnected) => {
+                    if out.is_empty() {
+                        return Err(anyhow!("all draft servers disconnected"));
+                    }
+                    return Ok(out);
+                }
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------- channel
@@ -242,6 +285,55 @@ mod tests {
             }
         }
         drop(t.ports);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_delivers() {
+        let (mut server, mut ports) = channel_transport(1);
+        // Nothing queued: an already-expired deadline returns None.
+        let expired = Instant::now();
+        assert!(server.recv_deadline(expired).unwrap().is_none());
+        // Queued message is delivered even with an expired deadline.
+        ports[0].send(&draft(0, 0)).unwrap();
+        let got = server.recv_deadline(Instant::now()).unwrap();
+        assert!(matches!(got, Some((0, Message::Draft(_)))));
+    }
+
+    #[test]
+    fn try_drain_returns_all_queued_without_blocking() {
+        let (mut server, mut ports) = channel_transport(3);
+        assert!(server.try_drain().unwrap().is_empty());
+        for (i, p) in ports.iter_mut().enumerate() {
+            p.send(&draft(i as u32, 1)).unwrap();
+        }
+        let drained = server.try_drain().unwrap();
+        assert_eq!(drained.len(), 3);
+        let ids: Vec<usize> = drained.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![0, 1, 2]); // FIFO order preserved
+        assert!(server.try_drain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn drain_surfaces_disconnect_only_when_empty() {
+        let (mut server, mut ports) = channel_transport(1);
+        ports[0].send(&draft(0, 0)).unwrap();
+        drop(ports); // all clients gone
+        let drained = server.try_drain().unwrap(); // queued msg survives
+        assert_eq!(drained.len(), 1);
+        assert!(server.try_drain().is_err());
+        assert!(server.recv().is_err());
+    }
+
+    #[test]
+    fn tcp_recv_deadline_roundtrip() {
+        let mut t = TcpTransport::new(2).unwrap();
+        let deadline = Instant::now() + std::time::Duration::from_millis(5);
+        assert!(t.server.recv_deadline(deadline).unwrap().is_none());
+        t.ports[0].send(&draft(0, 2)).unwrap();
+        // Reader thread forwards into the fan-in; a generous deadline sees it.
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        let got = t.server.recv_deadline(deadline).unwrap();
+        assert!(matches!(got, Some((0, Message::Draft(ref d))) if d.round == 2));
     }
 
     #[test]

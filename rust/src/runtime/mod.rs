@@ -4,6 +4,13 @@
 pub mod engine;
 pub mod manifest;
 pub mod mock;
+/// Real PJRT engines when the `xla` feature (and the vendored xla-rs
+/// crate) is available; a fail-at-use stub otherwise so the default build
+/// needs no native toolchain.
+#[cfg(feature = "xla")]
+pub mod xla_engine;
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
 pub mod xla_engine;
 
 pub use engine::{pick_bucket, Drafter, EngineFactory, Verifier, VerifyOutput, VerifyRequest};

@@ -1,0 +1,115 @@
+//! Stub for the PJRT engines when the crate is built **without** the
+//! `xla` feature (the default — the vendored `xla-rs` bindings and the
+//! AOT artifacts are only present on full build hosts).
+//!
+//! The stub keeps every call site compiling (CLI `--engine xla`, the
+//! runtime benches, the gated integration tests) and fails *at use* with
+//! an actionable message instead of at build time. All tests, benches,
+//! simulations, and experiments run on [`crate::runtime::MockEngineFactory`]
+//! either way; see `src/runtime/xla_engine.rs` for the real engines.
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{Drafter, EngineFactory, Verifier, VerifyOutput, VerifyRequest};
+use super::manifest::Manifest;
+
+const UNAVAILABLE: &str =
+    "built without the `xla` feature — rebuild with `--features xla` (requires the vendored xla-rs crate) or use `--engine mock`";
+
+/// Stub draft engine; construction always fails.
+pub struct XlaDrafter {
+    _private: (),
+}
+
+impl XlaDrafter {
+    pub fn new(_manifest: &Manifest, _model_name: &str) -> Result<Self> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+}
+
+impl Drafter for XlaDrafter {
+    fn prefill(&mut self, _prompt: &[u8]) -> Result<Vec<f32>> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    fn step(&mut self, _tok: u8) -> Result<Vec<f32>> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    fn position(&self) -> usize {
+        0
+    }
+
+    fn rewind(&mut self, _position: usize) {}
+
+    fn max_seq(&self) -> usize {
+        0
+    }
+
+    fn vocab(&self) -> usize {
+        0
+    }
+}
+
+/// Stub verification engine; construction always fails.
+pub struct XlaVerifier {
+    _private: (),
+}
+
+impl XlaVerifier {
+    pub fn new(_manifest: &Manifest, _family: &str) -> Result<Self> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+}
+
+impl Verifier for XlaVerifier {
+    fn verify(&mut self, _req: &VerifyRequest) -> Result<VerifyOutput> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    fn buckets(&self) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
+}
+
+/// Stub factory: carries the manifest for shape metadata, errors on any
+/// engine construction.
+pub struct XlaEngineFactory {
+    pub manifest: Manifest,
+}
+
+impl XlaEngineFactory {
+    pub fn new(manifest: Manifest) -> Self {
+        XlaEngineFactory { manifest }
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+}
+
+impl EngineFactory for XlaEngineFactory {
+    fn make_drafter(&self, _model: &str) -> Result<Box<dyn Drafter>> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    fn make_verifier(&self, _family: &str) -> Result<Box<dyn Verifier>> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    fn make_target_stepper(&self, _family: &str) -> Result<Box<dyn Drafter>> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    fn vocab(&self) -> usize {
+        self.manifest.vocab
+    }
+
+    fn max_seq(&self) -> usize {
+        self.manifest.max_seq
+    }
+
+    fn verify_k(&self) -> usize {
+        self.manifest.verify_k
+    }
+}

@@ -9,13 +9,27 @@ use super::utility::Utility;
 use crate::configsys::Policy;
 use crate::util::Rng;
 
-/// Per-round allocation caps (budget + per-client context room).
+/// Per-wave allocation caps (budget + per-client context room).
 #[derive(Clone, Debug)]
 pub struct AllocCaps {
-    /// Verification budget C.
+    /// Verification budget C (already net of any reservations).
     pub capacity: usize,
     /// Per-client max draft length (min of artifact K and context room).
+    /// May be 0 for a *live* client whose context is momentarily full.
     pub max_per_client: Vec<usize>,
+    /// Clients eligible for this allocation (the wave's participants).
+    /// Sync rounds pass all-true; async waves pass their subset so
+    /// uniform/random baselines split the budget over the live set
+    /// instead of diluting it across absent clients.
+    pub live: Vec<bool>,
+}
+
+impl AllocCaps {
+    /// Caps with every client live (the sync-barrier shape).
+    pub fn dense(capacity: usize, max_per_client: Vec<usize>) -> AllocCaps {
+        let live = vec![true; max_per_client.len()];
+        AllocCaps { capacity, max_per_client, live }
+    }
 }
 
 /// A per-round draft-length allocator. Implementations must be
@@ -39,11 +53,20 @@ impl GoodSpeedAlloc {
 impl Allocator for GoodSpeedAlloc {
     fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
         let weights: Vec<f64> = est.x_beta.iter().map(|&x| self.utility.grad(x)).collect();
+        // Enforce the live mask here (not only at call sites): absent
+        // clients must never receive budget — their in-flight grant is
+        // already reserved by the coordinator.
+        let capped: Vec<usize> = caps
+            .max_per_client
+            .iter()
+            .zip(&caps.live)
+            .map(|(&m, &live)| if live { m } else { 0 })
+            .collect();
         let input = AllocInput {
             weights: &weights,
             alphas: &est.alpha_hat,
             capacity: caps.capacity,
-            max_per_client: &caps.max_per_client,
+            max_per_client: &capped,
         };
         solve_greedy(&input)
     }
@@ -58,9 +81,12 @@ pub struct FixedSAlloc;
 
 impl Allocator for FixedSAlloc {
     fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
-        let n = est.len().max(1);
-        let share = caps.capacity / n;
-        (0..est.len()).map(|i| share.min(caps.max_per_client[i])).collect()
+        // Uniform split over the *live* clients (== C / N in sync mode).
+        let live_n = caps.live.iter().filter(|&&l| l).count().max(1);
+        let share = caps.capacity / live_n;
+        (0..est.len())
+            .map(|i| if caps.live[i] { share.min(caps.max_per_client[i]) } else { 0 })
+            .collect()
     }
 
     fn name(&self) -> &'static str {
@@ -84,14 +110,17 @@ impl Allocator for RandomSAlloc {
     fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
         let n = est.len();
         let mut alloc = vec![0usize; n];
-        if n == 0 {
+        // Darts land only on live clients (identical RNG stream to the
+        // pre-wave allocator in sync mode, where everyone is live).
+        let live_idx: Vec<usize> = (0..n).filter(|&i| caps.live[i]).collect();
+        if live_idx.is_empty() {
             return alloc;
         }
         for _ in 0..caps.capacity {
             // Rejection-sample a client with room (bounded retries keep the
             // loop O(C) in expectation even when most clients are full).
             for _ in 0..8 {
-                let i = self.rng.below(n as u64) as usize;
+                let i = live_idx[self.rng.below(live_idx.len() as u64) as usize];
                 if alloc[i] < caps.max_per_client[i] {
                     alloc[i] += 1;
                     break;
@@ -125,7 +154,7 @@ mod tests {
     }
 
     fn caps(n: usize, c: usize) -> AllocCaps {
-        AllocCaps { capacity: c, max_per_client: vec![32; n] }
+        AllocCaps::dense(c, vec![32; n])
     }
 
     #[test]
@@ -165,6 +194,24 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
+    fn baselines_split_over_live_subset_only() {
+        // Async partial wave: only clients {1, 3} participate; the budget
+        // must go to them, not be diluted across absent clients.
+        let mut cap = caps(4, 12);
+        cap.live = vec![false, true, false, true];
+        cap.max_per_client = vec![0, 32, 0, 32];
+        let mut f = FixedSAlloc;
+        let alloc = f.allocate(&est(4), &cap);
+        assert_eq!(alloc, vec![0, 6, 0, 6]); // C / live_count, not C / N
+        let mut r = RandomSAlloc::new(3);
+        let alloc = r.allocate(&est(4), &cap);
+        assert_eq!(alloc[0], 0);
+        assert_eq!(alloc[2], 0);
+        // Live clients have ample room, so no dart is ever wasted.
+        assert_eq!(alloc[1] + alloc[3], 12);
     }
 
     #[test]

@@ -18,7 +18,14 @@ pub struct Estimators {
     pub x_beta: Vec<f64>,
     eta: Smoothing,
     beta: Smoothing,
+    /// Waves observed (global clock; == rounds in sync mode).
     t: u64,
+    /// Per-client observation counts — the decay-schedule clock. Under
+    /// async waves the global `t` advances up to N× faster than any one
+    /// client participates; `Smoothing::Decay` must follow each client's
+    /// own observation count (identical to `t` in sync mode, where every
+    /// client participates in every wave).
+    t_client: Vec<u64>,
 }
 
 /// Clamp keeping α̂ inside (0, α_max] — Assumption 2's uniform bound.
@@ -33,6 +40,7 @@ impl Estimators {
             eta,
             beta,
             t: 0,
+            t_client: vec![0; n],
         }
     }
 
@@ -43,6 +51,7 @@ impl Estimators {
             eta,
             beta,
             t: 0,
+            t_client: vec![0; n],
         }
     }
 
@@ -58,21 +67,38 @@ impl Estimators {
         self.t
     }
 
-    /// One verification round's observations for every client: the mean
-    /// acceptance ratio (eq. 3's empirical term) and the realized goodput
-    /// x_i(t). Clients that did not participate this round pass `None`.
+    /// One verification wave's observations: the mean acceptance ratio
+    /// (eq. 3's empirical term) and the realized goodput x_i(t). Clients
+    /// that did not participate in this wave pass `None` — this sparse
+    /// form is the common path for both the sync barrier (all `Some`) and
+    /// the async pipeline (the wave's subset only).
     pub fn update_round(&mut self, obs: &[Option<(f64, f64)>]) {
         assert_eq!(obs.len(), self.len());
         self.t += 1;
-        let eta = self.eta.at(self.t);
-        let beta = self.beta.at(self.t);
         for (i, o) in obs.iter().enumerate() {
             if let Some((mean_ratio, goodput)) = *o {
+                // Decay schedules follow the client's own observation
+                // count (== the global round count in sync mode).
+                self.t_client[i] += 1;
+                let eta = self.eta.at(self.t_client[i]);
+                let beta = self.beta.at(self.t_client[i]);
                 let a = (1.0 - eta) * self.alpha_hat[i] + eta * mean_ratio.clamp(0.0, 1.0);
                 self.alpha_hat[i] = a.clamp(ALPHA_MIN, ALPHA_MAX);
                 self.x_beta[i] = ((1.0 - beta) * self.x_beta[i] + beta * goodput).max(1e-9);
             }
         }
+    }
+
+    /// Sparse wave update: `(client_id, (mean_ratio, goodput))` pairs for
+    /// the participating subset. Convenience wrapper that scatters into the
+    /// dense [`Estimators::update_round`] form.
+    pub fn update_wave(&mut self, obs: &[(usize, (f64, f64))]) {
+        let mut dense: Vec<Option<(f64, f64)>> = vec![None; self.len()];
+        for &(i, o) in obs {
+            assert!(i < dense.len(), "client_id {i} out of range");
+            dense[i] = Some(o);
+        }
+        self.update_round(&dense);
     }
 
     /// Estimated next-round goodput x̂_i(t+1) for a hypothetical draft
@@ -120,6 +146,35 @@ mod tests {
         // non-participating client untouched
         assert!((e.alpha_hat[1] - 0.5).abs() < 1e-12);
         assert!((e.x_beta[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decay_clock_follows_participation_not_waves() {
+        // A straggler's first observation after many waves it sat out
+        // must be applied with η(1), not η(#waves).
+        let mut e = Estimators::new(
+            2,
+            Smoothing::Decay { c: 1.0, p: 0.7 },
+            Smoothing::Fixed(0.5),
+        );
+        for _ in 0..50 {
+            e.update_round(&[Some((0.9, 1.0)), None]);
+        }
+        e.update_round(&[None, Some((0.9, 1.0))]);
+        // η(1) = 1.0 ⇒ client 1's α̂ jumps straight to the observation.
+        assert!((e.alpha_hat[1] - 0.9).abs() < 1e-9, "{}", e.alpha_hat[1]);
+        assert_eq!(e.round(), 51); // the global wave clock still advances
+    }
+
+    #[test]
+    fn sparse_wave_update_matches_dense() {
+        let mut dense = fixed(3, 0.25, 0.5);
+        let mut sparse = fixed(3, 0.25, 0.5);
+        dense.update_round(&[Some((0.9, 3.0)), None, Some((0.4, 2.0))]);
+        sparse.update_wave(&[(0, (0.9, 3.0)), (2, (0.4, 2.0))]);
+        assert_eq!(dense.alpha_hat, sparse.alpha_hat);
+        assert_eq!(dense.x_beta, sparse.x_beta);
+        assert_eq!(dense.round(), sparse.round());
     }
 
     #[test]

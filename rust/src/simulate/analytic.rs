@@ -9,9 +9,16 @@
 //!
 //! Used by the Fig 4 full grid (600 iterations × 3 policies × 2 families ×
 //! {4, 8} clients), the β-sweep validating Theorem 1, and the ablations.
+//!
+//! Both coordinator modes are modeled: `step()` is one sync barrier round,
+//! `step_wave()` is one async wave under a stylized virtual-time model
+//! (per-client RTT from the scenario links, per-token draft compute, fixed
+//! verify cost) so Fig-4-style convergence studies cover sync *and* async
+//! wave dynamics without real sleeps.
 
-use crate::configsys::{Policy, Scenario};
+use crate::configsys::{CoordMode, Policy, Scenario};
 use crate::metrics::recorder::{ClientRoundMetrics, Recorder, RoundRecord};
+use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
 use crate::sched::baselines::{make_allocator, AllocCaps, Allocator};
 use crate::sched::Estimators;
 use crate::util::Rng;
@@ -71,6 +78,16 @@ pub struct SimConfig {
     pub seed: u64,
     /// Std-dev of per-token indicator noise around α (ratio spread).
     pub indicator_noise: f64,
+    /// Coordinator discipline to model (sync barrier vs async waves).
+    pub mode: CoordMode,
+    /// Async batching window, seconds of virtual time.
+    pub batch_window_s: f64,
+    /// Wave-fill threshold (`0` = all clients).
+    pub min_wave_fill: usize,
+    /// Virtual-time cost of one batched verify.
+    pub verify_s: f64,
+    /// Virtual-time draft compute per speculated token.
+    pub draft_token_s: f64,
 }
 
 impl SimConfig {
@@ -81,6 +98,11 @@ impl SimConfig {
             rounds: s.rounds,
             seed: s.seed,
             indicator_noise: 0.15,
+            mode: s.coord_mode,
+            batch_window_s: s.batch_window_us as f64 * 1e-6,
+            min_wave_fill: s.effective_wave_fill(),
+            verify_s: 2e-3,
+            draft_token_s: 2e-4,
         }
     }
 }
@@ -94,6 +116,13 @@ pub struct AnalyticSim {
     pub recorder: Recorder,
     alloc: Vec<usize>,
     round: u64,
+    /// Per-client round-trip time (uplink with q payload + verdict
+    /// downlink), from the scenario's links.
+    rtt_s: Vec<f64>,
+    /// Virtual clock (seconds since run start).
+    clock: f64,
+    /// Virtual time each client's next draft arrives at the server.
+    ready_at: Vec<f64>,
 }
 
 impl AnalyticSim {
@@ -129,6 +158,19 @@ impl AnalyticSim {
         let estimators = Estimators::new(n, scenario.eta, scenario.beta);
         let allocator = make_allocator(policy, cfg.seed ^ 0x5eed);
         let initial = (cfg.capacity / n.max(1)).min(cfg.max_draft);
+        // RTT from the scenario links: uplink carries the q payload (the
+        // dominant term), downlink the tiny verdict.
+        let up_bytes = draft_msg_bytes(64, cfg.max_draft, 256);
+        let rtt_s: Vec<f64> = (0..n)
+            .map(|i| {
+                let l = Link::new(scenario.link(i));
+                l.mean_delay(up_bytes).as_secs_f64()
+                    + l.mean_delay(verdict_msg_bytes()).as_secs_f64()
+            })
+            .collect();
+        let ready_at: Vec<f64> = (0..n)
+            .map(|i| rtt_s[i] + cfg.draft_token_s * initial as f64)
+            .collect();
         AnalyticSim {
             rng: Rng::new(cfg.seed ^ 0xAAA),
             alloc: vec![initial; n],
@@ -138,7 +180,20 @@ impl AnalyticSim {
             clients,
             cfg,
             round: 0,
+            rtt_s,
+            clock: 0.0,
+            ready_at,
         }
+    }
+
+    /// Virtual seconds elapsed (both modes advance it).
+    pub fn virtual_time(&self) -> f64 {
+        self.clock
+    }
+
+    /// Per-client RTTs the wave model uses (test/inspection hook).
+    pub fn rtt_s(&self) -> &[f64] {
+        &self.rtt_s
     }
 
     /// Swap the allocation policy (utility ablations).
@@ -151,65 +206,78 @@ impl AnalyticSim {
         self.clients.iter().map(|c| c.true_alpha()).collect()
     }
 
-    /// Advance one round; returns realized goodputs.
+    /// Draw one client's verification outcome: per-token indicators
+    /// `clamp(α + noise)` — same mean as the real min(1, p/q) ratios;
+    /// acceptance draws r_j ≤ ratio_j. Also advances the client's request
+    /// lifecycle + Markov domain switching. Returns
+    /// `(s, accepted, goodput, mean_ratio)`.
+    fn verify_one(&mut self, i: usize) -> (usize, usize, usize, f64) {
+        let s = self.alloc[i];
+        let alpha = self.clients[i].true_alpha();
+        let mut accepted = 0usize;
+        let mut ratio_sum = 0.0f64;
+        let mut rejected = false;
+        for _ in 0..s {
+            let ratio =
+                (alpha + self.cfg.indicator_noise * self.rng.normal()).clamp(0.0, 1.0);
+            ratio_sum += ratio;
+            if !rejected {
+                if self.rng.f64() <= ratio {
+                    accepted += 1;
+                } else {
+                    rejected = true;
+                }
+            }
+        }
+        let goodput = accepted + 1;
+        let mean_ratio = if s == 0 { 1.0 } else { ratio_sum / s as f64 };
+
+        // Request lifecycle + domain switching.
+        let c = &mut self.clients[i];
+        c.remaining = c.remaining.saturating_sub(goodput);
+        if c.remaining == 0 {
+            c.remaining = c.max_new_tokens;
+            c.current_domain = if self.rng.bool(c.stickiness) {
+                c.primary_domain
+            } else {
+                loop {
+                    let d = *self.rng.choose(&DOMAINS);
+                    if d != c.primary_domain {
+                        break d;
+                    }
+                }
+            };
+        }
+        (s, accepted, goodput, mean_ratio)
+    }
+
+    /// Advance one sync barrier round (all clients); returns realized
+    /// goodputs. The RNG stream is identical to the pre-wave simulator.
     pub fn step(&mut self) -> Vec<usize> {
         let n = self.clients.len();
         let mut obs = Vec::with_capacity(n);
         let mut metrics = Vec::with_capacity(n);
         let mut goodputs = Vec::with_capacity(n);
         for i in 0..n {
-            let s = self.alloc[i];
-            let alpha = self.clients[i].true_alpha();
-            // Per-token indicators: clamp(α + noise) — same mean as the
-            // real min(1, p/q) ratios; acceptance draws r_j ≤ ratio_j.
-            let mut accepted = 0usize;
-            let mut ratio_sum = 0.0f64;
-            let mut rejected = false;
-            for _ in 0..s {
-                let ratio =
-                    (alpha + self.cfg.indicator_noise * self.rng.normal()).clamp(0.0, 1.0);
-                ratio_sum += ratio;
-                if !rejected {
-                    if self.rng.f64() <= ratio {
-                        accepted += 1;
-                    } else {
-                        rejected = true;
-                    }
-                }
-            }
-            let goodput = accepted + 1;
-            let mean_ratio = if s == 0 { 1.0 } else { ratio_sum / s as f64 };
+            let (s, accepted, goodput, mean_ratio) = self.verify_one(i);
             obs.push(Some((mean_ratio, goodput as f64)));
             metrics.push((s, accepted, goodput, mean_ratio));
             goodputs.push(goodput);
-
-            // Request lifecycle + domain switching.
-            let c = &mut self.clients[i];
-            c.remaining = c.remaining.saturating_sub(goodput);
-            if c.remaining == 0 {
-                c.remaining = c.max_new_tokens;
-                c.current_domain = if self.rng.bool(c.stickiness) {
-                    c.primary_domain
-                } else {
-                    loop {
-                        let d = *self.rng.choose(&DOMAINS);
-                        if d != c.primary_domain {
-                            break d;
-                        }
-                    }
-                };
-            }
         }
         self.estimators.update_round(&obs);
-        let caps = AllocCaps {
-            capacity: self.cfg.capacity,
-            max_per_client: vec![self.cfg.max_draft; n],
-        };
+        let caps = AllocCaps::dense(self.cfg.capacity, vec![self.cfg.max_draft; n]);
         self.alloc = self.allocator.allocate(&self.estimators, &caps);
+        // Virtual clock: the barrier waits for the slowest client's draft
+        // + uplink, then runs one batched verify.
+        let recv_s = (0..n)
+            .map(|i| self.rtt_s[i] + self.cfg.draft_token_s * metrics[i].0 as f64)
+            .fold(0.0f64, f64::max);
+        self.clock += recv_s + self.cfg.verify_s;
         let clients = metrics
             .iter()
             .enumerate()
             .map(|(i, &(s, accepted, goodput, mean_ratio))| ClientRoundMetrics {
+                client_id: i,
                 s_used: s,
                 accepted,
                 goodput,
@@ -221,8 +289,8 @@ impl AnalyticSim {
             .collect();
         self.recorder.push(RoundRecord {
             round: self.round,
-            recv_ns: 0,
-            verify_ns: 0,
+            recv_ns: (recv_s * 1e9) as u64,
+            verify_ns: (self.cfg.verify_s * 1e9) as u64,
             send_ns: 0,
             clients,
         });
@@ -230,10 +298,108 @@ impl AnalyticSim {
         goodputs
     }
 
-    /// Run all configured rounds.
+    /// Advance one async wave: fire on wave-fill or the batching-window
+    /// deadline (whichever comes first after the wave's first arrival),
+    /// verify the ready subset, reschedule only its members. Returns the
+    /// wave's `(client_id, goodput)` pairs.
+    pub fn step_wave(&mut self) -> Vec<(usize, usize)> {
+        let n = self.clients.len();
+        // `min_wave_fill` is pre-resolved by `SimConfig::from_scenario`
+        // (Scenario::effective_wave_fill); clamp defensively for
+        // hand-built configs that kept the raw `0 = all` sentinel.
+        let fill = if self.cfg.min_wave_fill == 0 {
+            n
+        } else {
+            self.cfg.min_wave_fill.min(n)
+        };
+        // Arrival order of the in-flight drafts.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| self.ready_at[a].total_cmp(&self.ready_at[b]));
+        let t_first = self.ready_at[order[0]];
+        let deadline = t_first + self.cfg.batch_window_s;
+        let t_fill = self.ready_at[order[fill - 1]];
+        // The verification server is single-threaded: a wave can never
+        // fire before the previous verify finished (self.clock), however
+        // early its drafts arrived — arrivals during the busy period are
+        // simply drained into this wave, like the real leader's
+        // opportunistic drain.
+        let fire_t = (if t_fill <= deadline { t_fill } else { deadline }).max(self.clock);
+        let mut members: Vec<usize> =
+            order.into_iter().filter(|&i| self.ready_at[i] <= fire_t).collect();
+        members.sort_unstable(); // verify in ascending client id
+
+        let mut obs: Vec<(usize, (f64, f64))> = Vec::with_capacity(members.len());
+        let mut metrics = Vec::with_capacity(members.len());
+        for &i in &members {
+            let (s, accepted, goodput, mean_ratio) = self.verify_one(i);
+            obs.push((i, (mean_ratio, goodput as f64)));
+            metrics.push((i, s, accepted, goodput, mean_ratio));
+        }
+        self.estimators.update_wave(&obs);
+        // Allocate over the wave's live set only; absent clients'
+        // in-flight allocations stay reserved out of the budget (same
+        // invariant as the real leader: Σ alloc ≤ C at all times).
+        let mut live = vec![false; n];
+        let mut max_per_client = vec![0usize; n];
+        for &i in &members {
+            live[i] = true;
+            max_per_client[i] = self.cfg.max_draft;
+        }
+        let reserved: usize =
+            (0..n).filter(|&i| !live[i]).map(|i| self.alloc[i]).sum();
+        let caps = AllocCaps {
+            capacity: self.cfg.capacity.saturating_sub(reserved),
+            max_per_client,
+            live,
+        };
+        let wave_alloc = self.allocator.allocate(&self.estimators, &caps);
+        let t_done = fire_t + self.cfg.verify_s;
+        for &i in &members {
+            self.alloc[i] = wave_alloc[i];
+            self.ready_at[i] =
+                t_done + self.rtt_s[i] + self.cfg.draft_token_s * wave_alloc[i] as f64;
+        }
+        let clients = metrics
+            .iter()
+            .map(|&(i, s, accepted, goodput, mean_ratio)| ClientRoundMetrics {
+                client_id: i,
+                s_used: s,
+                accepted,
+                goodput,
+                mean_ratio,
+                alpha_hat: self.estimators.alpha_hat[i],
+                x_beta: self.estimators.x_beta[i],
+                next_alloc: wave_alloc[i],
+            })
+            .collect();
+        self.recorder.push(RoundRecord {
+            round: self.round,
+            recv_ns: ((fire_t - self.clock).max(0.0) * 1e9) as u64,
+            verify_ns: (self.cfg.verify_s * 1e9) as u64,
+            send_ns: 0,
+            clients,
+        });
+        self.clock = t_done;
+        self.round += 1;
+        metrics.iter().map(|&(i, _, _, g, _)| (i, g)).collect()
+    }
+
+    /// Run the configured workload: `rounds` barrier rounds in sync mode,
+    /// or waves until the same total verification budget
+    /// (`rounds × num_clients` client-rounds) is consumed in async mode.
     pub fn run(&mut self) {
-        for _ in 0..self.cfg.rounds {
-            self.step();
+        match self.cfg.mode {
+            CoordMode::Sync => {
+                for _ in 0..self.cfg.rounds {
+                    self.step();
+                }
+            }
+            CoordMode::Async => {
+                let budget = self.cfg.rounds * self.clients.len() as u64;
+                while self.recorder.participation().iter().sum::<u64>() < budget {
+                    self.step_wave();
+                }
+            }
         }
     }
 }
@@ -326,6 +492,73 @@ mod tests {
         let spread = alphas.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
             - alphas.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!(spread > 0.3, "domains must induce heterogeneity: {alphas:?}");
+    }
+
+    fn straggler_sim(mode: CoordMode) -> AnalyticSim {
+        let mut s = Scenario::preset("straggler").unwrap();
+        s.rounds = 400;
+        s.coord_mode = mode;
+        AnalyticSim::from_scenario(&s, Policy::GoodSpeed)
+    }
+
+    #[test]
+    fn async_waves_consume_the_same_budget() {
+        let mut s = sim(Policy::GoodSpeed, 4, 100);
+        s.cfg.mode = CoordMode::Async;
+        s.cfg.min_wave_fill = 2;
+        s.run();
+        let delivered: u64 = s.recorder.participation().iter().sum();
+        assert!(delivered >= 400 && delivered < 400 + 4);
+        // Waves carry id-ascending subsets and virtual time advances.
+        for r in &s.recorder.rounds {
+            assert!(!r.clients.is_empty());
+            for w in r.clients.windows(2) {
+                assert!(w[0].client_id < w[1].client_id);
+            }
+        }
+        assert!(s.virtual_time() > 0.0);
+    }
+
+    #[test]
+    fn straggler_links_produce_partial_waves() {
+        let mut s = straggler_sim(CoordMode::Async);
+        assert!(s.rtt_s()[0] > 3.0 * s.rtt_s()[1], "straggler RTT must dominate");
+        s.run();
+        let n = s.clients.len();
+        let partial =
+            s.recorder.rounds.iter().filter(|r| r.clients.len() < n).count();
+        assert!(partial > 0, "async mode must fire partial waves around the straggler");
+        // The fast clients participate in more waves than the straggler.
+        let p = s.recorder.participation();
+        assert!(p[1] > p[0] && p[2] > p[0] && p[3] > p[0], "{p:?}");
+    }
+
+    #[test]
+    fn async_recovers_goodput_and_preserves_fairness_under_straggler() {
+        // The acceptance-criterion shape, in virtual time: same total
+        // verification budget, async finishes sooner ⇒ higher aggregate
+        // goodput rate, while per-wave fairness (Jain over accepted
+        // tokens per participated wave) stays close to sync.
+        use crate::util::stats::jain_index;
+        let mut sync = straggler_sim(CoordMode::Sync);
+        sync.run();
+        let mut asy = straggler_sim(CoordMode::Async);
+        asy.run();
+        let tokens = |r: &crate::metrics::recorder::Recorder| -> f64 {
+            r.cum_goodput().iter().sum()
+        };
+        let sync_rate = tokens(&sync.recorder) / sync.virtual_time();
+        let async_rate = tokens(&asy.recorder) / asy.virtual_time();
+        assert!(
+            async_rate > sync_rate,
+            "async {async_rate:.1} tok/s must beat sync {sync_rate:.1} tok/s"
+        );
+        let j_sync = jain_index(&sync.recorder.avg_accepted());
+        let j_async = jain_index(&asy.recorder.avg_accepted());
+        assert!(
+            (j_sync - j_async).abs() <= 0.05 * j_sync,
+            "fairness drift too large: sync {j_sync:.4} vs async {j_async:.4}"
+        );
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use goodspeed::configsys::{Policy, Scenario, Smoothing};
+use goodspeed::configsys::{CoordMode, Policy, Scenario, Smoothing};
 use goodspeed::coordinator::{run_serving, RunConfig, Transport};
 use goodspeed::runtime::{EngineFactory, MockEngineFactory, MockWorld};
 use goodspeed::sched::utility::LogUtility;
@@ -146,6 +146,74 @@ fn alpha_estimates_separate_strong_and_weak_drafts() {
         strong > weak + 0.03,
         "α̂ must separate models: strong {strong:.3} weak {weak:.3}"
     );
+}
+
+fn async_scenario(clients: usize, rounds: u64, capacity: usize) -> Scenario {
+    let mut s = scenario(clients, rounds, capacity);
+    s.coord_mode = CoordMode::Async;
+    s.batch_window_us = 300;
+    s.min_wave_fill = (clients / 2).max(1);
+    s
+}
+
+#[test]
+fn async_mode_full_run_over_channel() {
+    let clients = 4;
+    let rounds = 20u64;
+    let out = run(async_scenario(clients, rounds, 16), Policy::GoodSpeed, Transport::Channel, false);
+    // Same total verification budget as sync (final wave may overshoot by
+    // at most n−1 verdicts).
+    let delivered: u64 = out.recorder.participation().iter().sum();
+    let budget = rounds * clients as u64;
+    assert!(delivered >= budget && delivered < budget + clients as u64, "{delivered}");
+    // System-level conservation inside every wave.
+    for r in &out.recorder.rounds {
+        assert!(!r.clients.is_empty());
+        for c in &r.clients {
+            assert_eq!(c.goodput, c.accepted + 1);
+            assert!(c.accepted <= c.s_used);
+        }
+        let used: usize = r.clients.iter().map(|c| c.s_used).sum();
+        assert!(used <= 16, "capacity violated: {used}");
+    }
+    // Draft-side and coordinator-side accounting agree per client.
+    for (i, d) in out.draft_stats.iter().enumerate() {
+        assert_eq!(d.tokens_accepted, out.recorder.cum_accepted()[i], "client {i}");
+    }
+}
+
+#[test]
+fn async_mode_over_tcp_with_straggler_network() {
+    // The headline configuration: real sockets, real link sleeps, one
+    // straggler — the async pipeline must keep all clients progressing.
+    // Links are pinned (not the seeded preset spread) so the fast-client
+    // budget burn rate vs the straggler's first-arrival time has wide
+    // margins on loaded CI machines.
+    let mut s = Scenario::preset("straggler").unwrap();
+    s.rounds = 12; // budget 48 verdicts
+    s.coord_mode = CoordMode::Async;
+    for l in s.links.iter_mut() {
+        *l = goodspeed::configsys::LinkConfig {
+            latency_s: 2e-3,
+            bandwidth_bps: 25e6,
+            jitter: 0.05,
+        };
+    }
+    s.links[0].latency_s = 10e-3; // straggler: ~5× the fast RTT
+    s.links[0].bandwidth_bps = 2.5e6;
+    let out = run(s, Policy::GoodSpeed, Transport::Tcp, true);
+    let part = out.recorder.participation();
+    for (i, &p) in part.iter().enumerate() {
+        assert!(p > 0, "client {i} starved: {part:?}");
+    }
+    // The fast clients must not be held to the straggler's pace: at least
+    // one wave fired without client 0.
+    let without_straggler = out
+        .recorder
+        .rounds
+        .iter()
+        .any(|r| r.clients.iter().all(|c| c.client_id != 0));
+    assert!(without_straggler, "no wave ever excluded the straggler");
 }
 
 #[test]
