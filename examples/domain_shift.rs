@@ -34,20 +34,20 @@ fn main() {
     for t in 0..rounds {
         if t == shift_at {
             // Abrupt shift: client 0's user moves to the hardest domain.
-            a_before = sim.estimators.alpha_hat[0];
+            a_before = sim.estimators().alpha_hat[0];
             sim.clients[0].primary_domain = "hle";
             sim.clients[0].current_domain = "hle";
             a_after = sim.clients[0].true_alpha();
         }
         sim.step();
         if t >= shift_at && half_time.is_none() {
-            let est = sim.estimators.alpha_hat[0];
+            let est = sim.estimators().alpha_hat[0];
             if (est - a_before).abs() >= 0.5 * (a_after - a_before).abs() {
                 half_time = Some(t - shift_at);
             }
         }
         if t % (rounds / 12).max(1) == 0 || (t >= shift_at && t < shift_at + 5) {
-            let r = sim.recorder.rounds.last().unwrap();
+            let r = sim.recorder().rounds.last().unwrap();
             let allocs: Vec<String> =
                 r.clients.iter().map(|c| c.next_alloc.to_string()).collect();
             println!(
@@ -64,13 +64,13 @@ fn main() {
         Some(h) => println!(
             "\nα̂ adaptation half-time after the shift: {h} rounds \
              (η = {:.2})",
-            sim.estimators.current_eta()
+            sim.estimators().current_eta()
         ),
         None => println!("\nα̂ did not cross the halfway point — increase rounds"),
     }
     // Allocation response: client 0's average allocation before vs after.
     let avg_alloc = |lo: u64, hi: u64| -> f64 {
-        let rs = &sim.recorder.rounds[lo as usize..hi as usize];
+        let rs = &sim.recorder().rounds[lo as usize..hi as usize];
         rs.iter().map(|r| r.clients[0].s_used as f64).sum::<f64>() / rs.len() as f64
     };
     println!(

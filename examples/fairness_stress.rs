@@ -53,13 +53,13 @@ fn main() {
     for policy in Policy::all() {
         let mut sim = AnalyticSim::from_scenario(&s, policy);
         sim.run();
-        rows.push((policy.name().to_string(), sim.recorder.avg_goodput()));
+        rows.push((policy.name().to_string(), sim.recorder().avg_goodput()));
     }
     // Linear-utility ablation (throughput-max) on the GoodSpeed machinery.
     let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
     sim.set_allocator(Box::new(GoodSpeedAlloc { utility: Arc::new(LinearUtility) }));
     sim.run();
-    rows.push(("throughput-max".to_string(), sim.recorder.avg_goodput()));
+    rows.push(("throughput-max".to_string(), sim.recorder().avg_goodput()));
 
     println!(
         "{:<15} {:>9} {:>7} {:>9} {:>9} | per-client x̄",

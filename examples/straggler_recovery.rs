@@ -18,10 +18,10 @@ fn run(mode: CoordMode, rounds: u64) -> (f64, f64, Vec<u64>) {
     s.coord_mode = mode;
     let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
     sim.run();
-    let tokens: f64 = sim.recorder.cum_goodput().iter().sum();
+    let tokens: f64 = sim.recorder().cum_goodput().iter().sum();
     let rate = tokens / sim.virtual_time().max(1e-12);
-    let jain = jain_index(&sim.recorder.avg_accepted());
-    (rate, jain, sim.recorder.participation().to_vec())
+    let jain = jain_index(&sim.recorder().avg_accepted());
+    (rate, jain, sim.recorder().participation().to_vec())
 }
 
 fn main() {

@@ -1,0 +1,67 @@
+//! Sharded-pool benchmark: aggregate goodput scaling with the shard count
+//! M under real simulated link sleeps (the `sharded` preset's 2–8 ms
+//! uplinks), with the cross-shard Jain index held against the M = 1
+//! baseline.
+//!
+//!     cargo bench --bench sharded [-- --quick]
+//!
+//! `--quick` runs the CI smoke shape (fewer rounds, same assertions).
+
+use goodspeed::configsys::{Policy, Scenario};
+use goodspeed::coordinator::{run_pool, PoolOutcome, RunConfig, Transport};
+use goodspeed::experiments::mock_engine;
+use goodspeed::util::stats::jain_index;
+
+fn run(m: usize, rounds: u64) -> PoolOutcome {
+    let mut s = Scenario::preset("sharded").expect("preset");
+    s.num_verifiers = m;
+    s.rounds = rounds;
+    let cfg = RunConfig {
+        scenario: s,
+        policy: Policy::GoodSpeed,
+        transport: Transport::Channel,
+        simulate_network: true, // the whole point: real uplink sleeps
+    };
+    run_pool(&cfg, mock_engine()).expect("pool run")
+}
+
+fn report(out: &PoolOutcome, m: usize) -> (f64, f64) {
+    let jain = jain_index(&out.recorder.avg_goodput());
+    println!(
+        "M={m}  waves {:>5}  tokens {:>8.0}  aggregate {:>8.1} tok/s  jain {:.4}  migrations {}",
+        out.summary.rounds,
+        out.summary.total_tokens,
+        out.summary.tokens_per_sec,
+        jain,
+        out.migrations
+    );
+    (out.summary.tokens_per_sec, jain)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let rounds = if quick { 15 } else { 50 };
+    println!("== sharded bench: 8 clients / C = 32, {rounds} rounds/client budget ==");
+    let mut results = Vec::new();
+    for m in [1usize, 2, 4] {
+        let out = run(m, rounds);
+        results.push(report(&out, m));
+    }
+    let (base_rate, base_jain) = results[0];
+    println!(
+        "\nscaling: M=2 {:.2}x  M=4 {:.2}x   fairness drift: M=2 {:+.2}%  M=4 {:+.2}%",
+        results[1].0 / base_rate.max(1e-12),
+        results[2].0 / base_rate.max(1e-12),
+        100.0 * (results[1].1 - base_jain) / base_jain.max(1e-12),
+        100.0 * (results[2].1 - base_jain) / base_jain.max(1e-12),
+    );
+    let monotone = results.windows(2).all(|w| w[1].0 > w[0].0);
+    let fair = results
+        .iter()
+        .all(|&(_, j)| (j - base_jain).abs() <= 0.05 * base_jain);
+    if monotone && fair {
+        println!("PASS: goodput scales with M, cross-shard fairness within 5% of M=1");
+    } else {
+        println!("WARN: expected monotone scaling with fairness within 5%");
+    }
+}

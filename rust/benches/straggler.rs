@@ -45,7 +45,9 @@ fn report(label: &str, out: &RunOutcome) -> (f64, f64) {
 }
 
 fn main() {
-    let rounds = 80;
+    // `--quick` = the CI smoke shape (fewer rounds, same comparison).
+    let quick = std::env::args().any(|a| a == "--quick");
+    let rounds = if quick { 15 } else { 80 };
     println!("== straggler bench: client 0 on a 10× slower uplink ({rounds} rounds/client budget) ==");
     let sync = run(CoordMode::Sync, rounds);
     let (sync_rate, sync_jain) = report("sync", &sync);

@@ -146,6 +146,15 @@ pub struct Scenario {
     /// even before the window expires. `0` means "all clients" (the window
     /// then bounds the straggler wait).
     pub min_wave_fill: usize,
+    /// Verification shards M. `1` = the classic single-verifier leader;
+    /// `> 1` runs the sharded pool (`coordinator/pool.rs`): each shard
+    /// owns a verifier engine and a transport fan-in, and the global
+    /// budget C is split across shards by hierarchical water-filling.
+    pub num_verifiers: usize,
+    /// Pooled only: recompute the cross-shard budget split (and consider
+    /// migrating one client from the most- to the least-pressured shard)
+    /// every this many waves. `0` = never rebalance (static split).
+    pub shard_rebalance_every: u64,
 }
 
 impl Scenario {
@@ -185,6 +194,12 @@ impl Scenario {
         }
         if self.coord_mode == CoordMode::Async && self.batch_window_us > 10_000_000 {
             return Err("batch_window_us must be <= 10s".into());
+        }
+        if self.num_verifiers == 0 {
+            return Err("num_verifiers must be > 0".into());
+        }
+        if self.num_verifiers > self.num_clients {
+            return Err("num_verifiers must be <= num_clients".into());
         }
         Ok(())
     }
@@ -235,6 +250,8 @@ impl Scenario {
                 coord_mode: CoordMode::Sync,
                 batch_window_us: 500,
                 min_wave_fill: 0,
+                num_verifiers: 1,
+                shard_rebalance_every: 0,
             },
             // Table I row 2: Qwen3-14B / 0.6B+1.7B, C ∈ {16,20}, 8 clients, 150 tok
             "qwen-8c-150" => Scenario {
@@ -255,6 +272,8 @@ impl Scenario {
                 coord_mode: CoordMode::Sync,
                 batch_window_us: 500,
                 min_wave_fill: 0,
+                num_verifiers: 1,
+                shard_rebalance_every: 0,
             },
             // Table I row 3: Llama-70B / 1B+3B, C ∈ {16,20}, 8 clients, 150 tok
             "llama-8c-150" => Scenario {
@@ -275,6 +294,8 @@ impl Scenario {
                 coord_mode: CoordMode::Sync,
                 batch_window_us: 500,
                 min_wave_fill: 0,
+                num_verifiers: 1,
+                shard_rebalance_every: 0,
             },
             // Fast preset for tests and smoke runs.
             "smoke" => Scenario {
@@ -295,6 +316,8 @@ impl Scenario {
                 coord_mode: CoordMode::Sync,
                 batch_window_us: 500,
                 min_wave_fill: 0,
+                num_verifiers: 1,
+                shard_rebalance_every: 0,
             },
             // Straggler study: one client with a 10× slower uplink. In sync
             // mode every round stalls on that link; async mode lets the
@@ -323,6 +346,44 @@ impl Scenario {
                     coord_mode: CoordMode::Sync,
                     batch_window_us: 2_000,
                     min_wave_fill: 2,
+                    num_verifiers: 1,
+                    shard_rebalance_every: 0,
+                }
+            }
+            // Sharded-pool scale-up study: 8 heterogeneous clients whose
+            // round time is dominated by the uplink (4× the default seeded
+            // latencies), served by M verification shards. The batching
+            // window (20 ms) exceeds every RTT, so each wave is a true
+            // barrier over the shard's members: with M = 1 that is the
+            // globally straggler-coupled baseline, while M > 1 shards only
+            // wait on their own members — aggregate goodput grows with M
+            // and the hierarchical budget split keeps cross-shard fairness
+            // near the single-verifier baseline.
+            "sharded" => {
+                let mut links = Scenario::default_links(8, seed);
+                for l in links.iter_mut() {
+                    l.latency_s *= 4.0;
+                }
+                Scenario {
+                    id: id.into(),
+                    family: "qwen".into(),
+                    num_clients: 8,
+                    capacity: 32,
+                    max_new_tokens: 40,
+                    draft_models: vec!["qwen-draft-06b".into(), "qwen-draft-17b".into()],
+                    domains: base_domains,
+                    domain_stickiness: 0.85,
+                    eta: Smoothing::Fixed(0.3),
+                    beta: Smoothing::Fixed(0.5),
+                    max_draft: 16,
+                    rounds: 80,
+                    seed,
+                    links,
+                    coord_mode: CoordMode::Sync,
+                    batch_window_us: 20_000,
+                    min_wave_fill: 0,
+                    num_verifiers: 2,
+                    shard_rebalance_every: 16,
                 }
             }
             _ => return None,
@@ -334,8 +395,8 @@ impl Scenario {
         Some(s)
     }
 
-    pub fn preset_ids() -> [&'static str; 5] {
-        ["qwen-4c-50", "qwen-8c-150", "llama-8c-150", "smoke", "straggler"]
+    pub fn preset_ids() -> [&'static str; 6] {
+        ["qwen-4c-50", "qwen-8c-150", "llama-8c-150", "smoke", "straggler", "sharded"]
     }
 
     /// Serialize for results provenance.
@@ -356,6 +417,8 @@ impl Scenario {
             ("coord_mode", Value::Str(self.coord_mode.name().into())),
             ("batch_window_us", Value::Num(self.batch_window_us as f64)),
             ("min_wave_fill", Value::Num(self.min_wave_fill as f64)),
+            ("num_verifiers", Value::Num(self.num_verifiers as f64)),
+            ("shard_rebalance_every", Value::Num(self.shard_rebalance_every as f64)),
         ])
     }
 }
@@ -468,6 +531,29 @@ mod tests {
         s.coord_mode = CoordMode::Async;
         s.batch_window_us = 20_000_000;
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn sharded_preset_and_verifier_validation() {
+        let s = Scenario::preset("sharded").unwrap();
+        assert_eq!(s.num_clients, 8);
+        assert_eq!(s.num_verifiers, 2);
+        assert_eq!(s.shard_rebalance_every, 16);
+        // Every non-sharded preset stays single-verifier so existing
+        // experiments reproduce bit-for-bit.
+        for id in Scenario::preset_ids() {
+            let p = Scenario::preset(id).unwrap();
+            if id != "sharded" {
+                assert_eq!(p.num_verifiers, 1, "{id}");
+            }
+        }
+        let mut bad = Scenario::preset("smoke").unwrap();
+        bad.num_verifiers = 0;
+        assert!(bad.validate().is_err());
+        bad.num_verifiers = bad.num_clients + 1;
+        assert!(bad.validate().is_err());
+        bad.num_verifiers = bad.num_clients;
+        assert!(bad.validate().is_ok());
     }
 
     #[test]

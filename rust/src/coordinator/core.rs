@@ -1,0 +1,377 @@
+//! RoundCore — the engine-agnostic wave-processing core.
+//!
+//! Everything that happens *after* a verification wave's outcomes are known
+//! is scheduling/accounting, not model execution: the sparse estimator
+//! updates (paper eqs. 3–4), the GOODSPEED-SCHED allocation (eq. 5) under
+//! the budget-reservation invariant, and the [`RoundRecord`] emission. This
+//! module owns that logic in one place so the live coordinator's sync
+//! barrier, its async wave pipeline, *and* the analytic simulator execute
+//! the same code path — the simulator can no longer drift from the
+//! coordinator when the scheduling rules change.
+//!
+//! The live [`Leader`](super::leader::Leader) feeds the core real
+//! rejection-sampling results (via [`RoundCore::judge`], which owns the
+//! verdict RNG so sync-mode runs stay bit-identical to the pre-refactor
+//! coordinator); the analytic simulator feeds it the outcomes of its
+//! synthetic indicator process. Either way the core sees only [`WaveObs`]
+//! rows — it never touches an engine.
+//!
+//! For sharded deployments ([`super::pool`]) each verification shard owns
+//! one `RoundCore` with a *membership mask*: only the shard's own clients
+//! count toward its reservation invariant (Σ outstanding ≤ capacity), and
+//! the shard's capacity is the budget slice the pool controller hands it.
+
+use crate::configsys::{Policy, Smoothing};
+use crate::metrics::recorder::{ClientRoundMetrics, Recorder, RoundRecord};
+use crate::sched::baselines::{make_allocator, AllocCaps, Allocator};
+use crate::sched::Estimators;
+use crate::spec::rejection::{verify_client, ClientVerdict};
+use crate::util::Rng;
+
+/// One participant's verification outcome, in the engine-agnostic form the
+/// core consumes. Rows must be strictly ascending by `client_id`.
+#[derive(Clone, Debug)]
+pub struct WaveObs {
+    pub client_id: usize,
+    /// Draft length actually verified this wave.
+    pub s_used: usize,
+    /// Accepted draft tokens m.
+    pub accepted: usize,
+    /// Realized goodput x_i(t) = m + 1.
+    pub goodput: usize,
+    /// Mean acceptance ratio (eq. 3 empirical term).
+    pub mean_ratio: f64,
+    /// Cap for this client's *next* allocation: min(artifact K limit,
+    /// context room after the verdict is applied).
+    pub max_next: usize,
+}
+
+/// The shared wave-processing core: estimators, allocator, budget
+/// accounting, verdict RNG, and the run's metrics recorder.
+pub struct RoundCore {
+    pub estimators: Estimators,
+    allocator: Box<dyn Allocator>,
+    /// Verdict RNG for rejection sampling (the live path only; seeded
+    /// `seed ^ 0xC0DE` exactly like the pre-refactor coordinator).
+    verdict_rng: Rng,
+    /// Verification budget C of this core (a shard's budget slice in
+    /// pooled mode; the scenario's full C otherwise).
+    capacity: usize,
+    /// Upper bound on each client's in-flight draft length (its last
+    /// granted allocation; clients only clamp downward). Invariant:
+    /// Σ outstanding over *members* ≤ capacity, so no wave's verify batch
+    /// — a subset of the outstanding drafts — can exceed the budget even
+    /// when waves interleave asynchronously.
+    outstanding: Vec<usize>,
+    /// Which clients this core is responsible for. Non-members never count
+    /// toward the reservation (they draw on some other shard's budget).
+    /// All-true outside pooled mode.
+    member: Vec<bool>,
+    /// Shard id stamped onto emitted records (0 outside pooled mode).
+    shard: usize,
+    pub recorder: Recorder,
+}
+
+impl RoundCore {
+    /// `seed` is the scenario seed; the allocator and verdict RNG derive
+    /// their streams from it with the same tweaks the pre-refactor
+    /// coordinator used (`^ 0x5eed`, `^ 0xC0DE`).
+    pub fn new(
+        n: usize,
+        eta: Smoothing,
+        beta: Smoothing,
+        policy: Policy,
+        seed: u64,
+        capacity: usize,
+        initial_alloc: usize,
+    ) -> RoundCore {
+        RoundCore {
+            estimators: Estimators::new(n, eta, beta),
+            allocator: make_allocator(policy, seed ^ 0x5eed),
+            verdict_rng: Rng::new(seed ^ 0xC0DE),
+            capacity,
+            outstanding: vec![initial_alloc; n],
+            member: vec![true; n],
+            shard: 0,
+            recorder: Recorder::new(n),
+        }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.estimators.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Update the budget slice (the pool controller's hierarchical split).
+    pub fn set_capacity(&mut self, c: usize) {
+        self.capacity = c;
+    }
+
+    pub fn shard_id(&self) -> usize {
+        self.shard
+    }
+
+    pub fn set_shard(&mut self, shard: usize) {
+        self.shard = shard;
+    }
+
+    pub fn is_member(&self, client: usize) -> bool {
+        self.member[client]
+    }
+
+    pub fn set_member(&mut self, client: usize, member: bool) {
+        self.member[client] = member;
+    }
+
+    pub fn outstanding(&self, client: usize) -> usize {
+        self.outstanding[client]
+    }
+
+    /// Seed a migrated-in client's in-flight grant (pool rebalancing).
+    pub fn set_outstanding(&mut self, client: usize, alloc: usize) {
+        self.outstanding[client] = alloc;
+    }
+
+    /// Swap the allocation policy (utility ablations).
+    pub fn set_allocator(&mut self, allocator: Box<dyn Allocator>) {
+        self.allocator = allocator;
+    }
+
+    /// Rejection sampling for one verify-batch row (paper step ④), with
+    /// the core-owned verdict RNG — the draw order over rows is the RNG
+    /// stream contract that keeps sync mode bit-identical.
+    pub fn judge(
+        &mut self,
+        ratios: &[f32],
+        resid: &[f32],
+        bonus: &[f32],
+        vocab: usize,
+    ) -> ClientVerdict {
+        verify_client(ratios, resid, bonus, vocab, &mut self.verdict_rng)
+    }
+
+    /// Process one wave's observations (paper steps ⑤–⑥):
+    ///
+    /// 1. sparse estimator update (eqs. 3–4, Algorithm 1 line 14);
+    /// 2. GOODSPEED-SCHED over the wave's live set (line 15), with absent
+    ///    members' in-flight grants reserved out of the budget;
+    /// 3. outstanding-grant bookkeeping;
+    /// 4. one wave-indexed [`RoundRecord`] (send time is patched in later
+    ///    by [`RoundCore::note_send_ns`] after the verdict fan-out).
+    ///
+    /// Returns each participant's next allocation, in `obs` order.
+    pub fn finish_wave(
+        &mut self,
+        wave: u64,
+        obs: &[WaveObs],
+        recv_ns: u64,
+        verify_ns: u64,
+    ) -> Vec<usize> {
+        let n = self.estimators.len();
+        let mut dense: Vec<Option<(f64, f64)>> = vec![None; n];
+        let mut in_wave = vec![false; n];
+        let mut max_per_client = vec![0usize; n];
+        for o in obs {
+            assert!(o.client_id < n, "client_id {} out of range ({n})", o.client_id);
+            dense[o.client_id] = Some((o.mean_ratio, o.goodput as f64));
+            in_wave[o.client_id] = true;
+            // A non-member participant is a client that migrated away while
+            // its draft was in flight here: its grant is reserved by the
+            // *new* shard at the value it had at hand-off, so never grant
+            // it more than that — otherwise the drained wave could exceed
+            // the budget the other shard set aside for it.
+            max_per_client[o.client_id] = if self.member[o.client_id] {
+                o.max_next
+            } else {
+                o.max_next.min(self.outstanding[o.client_id])
+            };
+        }
+        self.estimators.update_round(&dense);
+
+        // Absent *members* keep their in-flight grants reserved so
+        // interleaved waves can never jointly exceed the budget; in a
+        // dense (sync) wave the reservation is 0 and this is exactly the
+        // paper's per-round allocation.
+        let reserved: usize = (0..n)
+            .filter(|&i| self.member[i] && !in_wave[i])
+            .map(|i| self.outstanding[i])
+            .sum();
+        let caps = AllocCaps {
+            capacity: self.capacity.saturating_sub(reserved),
+            max_per_client,
+            live: in_wave,
+        };
+        let alloc = self.allocator.allocate(&self.estimators, &caps);
+
+        let mut next = Vec::with_capacity(obs.len());
+        for o in obs {
+            self.outstanding[o.client_id] = alloc[o.client_id];
+            next.push(alloc[o.client_id]);
+        }
+        let clients = obs
+            .iter()
+            .map(|o| ClientRoundMetrics {
+                client_id: o.client_id,
+                s_used: o.s_used,
+                accepted: o.accepted,
+                goodput: o.goodput,
+                mean_ratio: o.mean_ratio,
+                alpha_hat: self.estimators.alpha_hat[o.client_id],
+                x_beta: self.estimators.x_beta[o.client_id],
+                next_alloc: alloc[o.client_id],
+            })
+            .collect();
+        self.recorder.push(RoundRecord {
+            round: wave,
+            shard: self.shard,
+            recv_ns,
+            verify_ns,
+            send_ns: 0, // noted after the verdict fan-out
+            clients,
+        });
+        next
+    }
+
+    /// Record the measured send-phase time on the wave just processed.
+    pub fn note_send_ns(&mut self, send_ns: u64) {
+        if let Some(rec) = self.recorder.rounds.last_mut() {
+            rec.send_ns = send_ns;
+        }
+    }
+
+    /// Fold extra measured time into the wave's verify phase. The live
+    /// leader uses this to keep the Fig 3 semantics — `verify_ns` covers
+    /// verification *plus scheduling* — since `finish_wave`'s own
+    /// estimator/allocation work happens after the caller's verify lap.
+    /// (The simulator doesn't call it: its verify phase is virtual time.)
+    pub fn note_verify_extra_ns(&mut self, extra_ns: u64) {
+        if let Some(rec) = self.recorder.rounds.last_mut() {
+            rec.verify_ns += extra_ns;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core(n: usize, capacity: usize) -> RoundCore {
+        RoundCore::new(
+            n,
+            Smoothing::Fixed(0.3),
+            Smoothing::Fixed(0.5),
+            Policy::GoodSpeed,
+            2025,
+            capacity,
+            capacity / n.max(1),
+        )
+    }
+
+    fn obs(client_id: usize, accepted: usize, max_next: usize) -> WaveObs {
+        WaveObs {
+            client_id,
+            s_used: accepted + 1,
+            accepted,
+            goodput: accepted + 1,
+            mean_ratio: 0.7,
+            max_next,
+        }
+    }
+
+    #[test]
+    fn dense_wave_allocates_full_budget_and_records() {
+        let mut c = core(4, 16);
+        let wave: Vec<WaveObs> = (0..4).map(|i| obs(i, 2, 16)).collect();
+        let next = c.finish_wave(0, &wave, 111, 222);
+        assert_eq!(next.len(), 4);
+        assert!(next.iter().sum::<usize>() <= 16);
+        let rec = c.recorder.rounds.last().unwrap();
+        assert_eq!(rec.round, 0);
+        assert_eq!(rec.recv_ns, 111);
+        assert_eq!(rec.verify_ns, 222);
+        assert_eq!(rec.clients.len(), 4);
+        // Estimators moved off the prior for every participant.
+        for i in 0..4 {
+            assert!((c.estimators.alpha_hat[i] - 0.5).abs() > 1e-6);
+        }
+        c.note_send_ns(333);
+        assert_eq!(c.recorder.rounds.last().unwrap().send_ns, 333);
+    }
+
+    #[test]
+    fn partial_wave_reserves_absent_members_budget() {
+        let mut c = core(4, 16);
+        // Clients 0 and 2 participate; 1 and 3 hold outstanding = 4 each.
+        let wave = vec![obs(0, 1, 16), obs(2, 1, 16)];
+        let next = c.finish_wave(0, &wave, 0, 0);
+        // 16 − (4 + 4) reserved ⇒ at most 8 for the wave.
+        assert!(next.iter().sum::<usize>() <= 8, "{next:?}");
+        // Absent clients' estimates untouched.
+        assert!((c.estimators.alpha_hat[1] - 0.5).abs() < 1e-12);
+        assert!((c.estimators.alpha_hat[3] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_members_do_not_reserve_budget() {
+        let mut c = core(4, 16);
+        // This core only owns clients 0 and 2 (a 2-shard split).
+        c.set_member(1, false);
+        c.set_member(3, false);
+        c.set_capacity(8);
+        let wave = vec![obs(0, 1, 16), obs(2, 1, 16)];
+        let next = c.finish_wave(0, &wave, 0, 0);
+        // No reservation from the other shard's clients: the full slice
+        // is available to this shard's wave.
+        assert_eq!(next.iter().sum::<usize>(), 8, "{next:?}");
+        assert!(c.is_member(0) && !c.is_member(1));
+    }
+
+    #[test]
+    fn non_member_participant_capped_at_its_outstanding() {
+        // The migration drain path: the client left this shard (member =
+        // false) but its in-flight draft is verified here. Its next grant
+        // must not exceed the outstanding value the new shard reserved.
+        let mut c = core(2, 16);
+        c.set_member(1, false);
+        c.set_outstanding(1, 3);
+        let next = c.finish_wave(0, &[obs(0, 1, 16), obs(1, 1, 16)], 0, 0);
+        assert!(next[1] <= 3, "departed client over-granted: {next:?}");
+    }
+
+    #[test]
+    fn outstanding_tracks_last_grant() {
+        let mut c = core(2, 8);
+        assert_eq!(c.outstanding(0), 4);
+        let next = c.finish_wave(0, &[obs(0, 2, 8), obs(1, 2, 8)], 0, 0);
+        assert_eq!(c.outstanding(0), next[0]);
+        assert_eq!(c.outstanding(1), next[1]);
+        c.set_outstanding(1, 7);
+        assert_eq!(c.outstanding(1), 7);
+    }
+
+    #[test]
+    fn shard_id_is_stamped_on_records() {
+        let mut c = core(2, 8);
+        c.set_shard(3);
+        c.finish_wave(5, &[obs(0, 0, 8)], 0, 0);
+        let rec = c.recorder.rounds.last().unwrap();
+        assert_eq!(rec.shard, 3);
+        assert_eq!(c.shard_id(), 3);
+    }
+
+    #[test]
+    fn judge_consumes_the_verdict_stream_deterministically() {
+        let mut a = core(1, 4);
+        let mut b = core(1, 4);
+        let ratios = [0.9f32, 0.4];
+        let resid = vec![0.25f32; 2 * 4];
+        let bonus = vec![0.25f32; 4];
+        let va = a.judge(&ratios, &resid, &bonus, 4);
+        let vb = b.judge(&ratios, &resid, &bonus, 4);
+        assert_eq!(va, vb);
+        assert_eq!(va.goodput, va.accepted + 1);
+    }
+}

@@ -17,9 +17,11 @@
 //!   (`num_clients × rounds` verdicts), distributed by arrival order.
 //!
 //! Per wave (paper steps ③–⑥): batched forward through the target model,
-//! per-client rejection sampling, α̂ (eq. 3) and X^β (eq. 4) sparse
-//! updates, GOODSPEED-SCHED (eq. 5) over the wave's live client set. See
-//! DESIGN.md, "Wave lifecycle", for the state machine.
+//! then everything engine-agnostic — per-client rejection sampling, α̂
+//! (eq. 3) and X^β (eq. 4) sparse updates, GOODSPEED-SCHED (eq. 5) over
+//! the wave's live client set — runs in the shared [`RoundCore`], the
+//! same code path the analytic simulator executes. See DESIGN.md, "Wave
+//! lifecycle", for the state machine.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -27,15 +29,13 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::build_verify_request;
+use super::core::{RoundCore, WaveObs};
 use crate::configsys::{CoordMode, Policy, Scenario};
 use crate::draft::{spawn_draft_server, DraftServerConfig};
-use crate::metrics::recorder::{ClientRoundMetrics, Recorder, RoundRecord};
+use crate::metrics::recorder::Recorder;
 use crate::net::transport::{channel_transport, ServerSide, TcpTransport};
 use crate::net::wire::{DraftMsg, Message, VerdictMsg};
 use crate::runtime::{EngineFactory, Verifier};
-use crate::sched::baselines::{make_allocator, AllocCaps, Allocator};
-use crate::sched::Estimators;
-use crate::spec::rejection::verify_client;
 use crate::util::{Rng, Stopwatch};
 use crate::workload::DomainStream;
 
@@ -65,24 +65,15 @@ pub struct RunConfig {
     pub simulate_network: bool,
 }
 
-/// The leader + its verdict RNG and estimators, reusable wave to wave.
+/// The leader: one verification engine plus the shared wave-processing
+/// core (estimators, scheduler, budget accounting, verdict RNG, metrics).
 pub struct Leader {
     verifier: Box<dyn Verifier>,
-    estimators: Estimators,
-    allocator: Box<dyn Allocator>,
-    rng: Rng,
-    capacity: usize,
+    pub core: RoundCore,
     max_draft: usize,
     max_seq: usize,
     verify_k: usize,
     vocab: usize,
-    /// Upper bound on each client's in-flight draft length (its last
-    /// granted allocation; clients only clamp downward). Invariant:
-    /// Σ outstanding ≤ capacity, so no wave's verify batch — which is a
-    /// subset of the outstanding drafts — can exceed the budget C even
-    /// when waves interleave asynchronously.
-    outstanding: Vec<usize>,
-    pub recorder: Recorder,
 }
 
 impl Leader {
@@ -92,35 +83,36 @@ impl Leader {
         factory: &dyn EngineFactory,
     ) -> Result<Leader> {
         let verifier = factory.make_verifier(&scenario.family)?;
-        let estimators =
-            Estimators::new(scenario.num_clients, scenario.eta, scenario.beta);
-        let allocator = make_allocator(policy, scenario.seed ^ 0x5eed);
         // Matches the drafters' S_i(0) in `run_serving` (they only clamp
         // further down by context room).
         let initial_alloc = (scenario.capacity / scenario.num_clients.max(1))
             .min(scenario.max_draft);
         Ok(Leader {
             verifier,
-            estimators,
-            allocator,
-            rng: Rng::new(scenario.seed ^ 0xC0DE),
-            capacity: scenario.capacity,
+            core: RoundCore::new(
+                scenario.num_clients,
+                scenario.eta,
+                scenario.beta,
+                policy,
+                scenario.seed,
+                scenario.capacity,
+                initial_alloc,
+            ),
             max_draft: scenario.max_draft.min(factory.verify_k()),
             max_seq: factory.max_seq(),
             verify_k: factory.verify_k(),
             vocab: factory.vocab(),
-            outstanding: vec![initial_alloc; scenario.num_clients],
-            recorder: Recorder::new(scenario.num_clients),
         })
     }
 
-    /// Process one assembled wave: verification + sparse estimator update +
-    /// per-wave allocation over the participating client set. `msgs` holds
-    /// the wave's subset in strictly increasing client-id order; a sync
-    /// round is simply the wave of everyone. `recv_ns` is the measured
+    /// Process one assembled wave: batched verification, then the shared
+    /// core's rejection sampling + sparse estimator update + per-wave
+    /// allocation over the participating client set. `msgs` holds the
+    /// wave's subset in strictly increasing client-id order; a sync round
+    /// is simply the wave of everyone. `recv_ns` is the measured
     /// receive-phase wall time; the verify phase is measured here and both
-    /// are threaded into the pushed [`RoundRecord`] (the send phase is
-    /// filled in by [`Leader::note_send_ns`] after fan-out).
+    /// are threaded into the pushed record (the send phase is filled in by
+    /// [`Leader::note_send_ns`] after fan-out).
     pub fn process_wave(
         &mut self,
         wave: u64,
@@ -128,7 +120,7 @@ impl Leader {
         recv_ns: u64,
     ) -> Result<Vec<VerdictMsg>> {
         let mut sw = Stopwatch::new();
-        let n_total = self.estimators.len();
+        let n_total = self.core.n_clients();
         for m in msgs {
             if m.client_id as usize >= n_total {
                 return Err(anyhow!(
@@ -142,13 +134,12 @@ impl Leader {
         let out = self.verifier.verify(&req)?;
 
         // Rejection sampling per client (paper step ④), in row order so the
-        // verdict RNG stream is identical to the pre-wave coordinator for
-        // dense (sync) waves.
+        // core's verdict RNG stream is identical to the pre-core
+        // coordinator for dense (sync) waves.
         let v = self.vocab;
         let k = self.verify_k;
-        let mut obs: Vec<Option<(f64, f64)>> = vec![None; n_total];
         let mut verdicts = Vec::with_capacity(views.len());
-        let mut metrics = Vec::with_capacity(views.len());
+        let mut obs = Vec::with_capacity(views.len());
         for (b, view) in views.iter().enumerate() {
             let s = view.draft_len;
             let ratios = &out.ratio_row(b, k)[..s];
@@ -162,9 +153,16 @@ impl Leader {
                 bonus_owned = &resid[s * v..(s + 1) * v];
                 bonus_owned
             };
-            let verdict = verify_client(ratios, resid, bonus, v, &mut self.rng);
-            obs[view.client_id] = Some((verdict.mean_ratio, verdict.goodput as f64));
-            metrics.push((verdict.accepted, verdict.goodput, verdict.mean_ratio));
+            let verdict = self.core.judge(ratios, resid, bonus, v);
+            let new_prefix = view.prefix_len + verdict.accepted + 1;
+            obs.push(WaveObs {
+                client_id: view.client_id,
+                s_used: s,
+                accepted: verdict.accepted,
+                goodput: verdict.goodput,
+                mean_ratio: verdict.mean_ratio,
+                max_next: self.max_draft.min(self.max_seq.saturating_sub(new_prefix + 2)),
+            });
             verdicts.push(VerdictMsg {
                 client_id: view.client_id as u32,
                 // Echo the client's own round (client-local matching; in
@@ -173,82 +171,30 @@ impl Leader {
                 accepted: verdict.accepted as u32,
                 correction: verdict.correction,
                 next_alloc: 0, // filled below
+                shard: self.core.shard_id() as u32,
             });
         }
+        let verify_ns = sw.lap().as_nanos() as u64;
 
-        // Estimator updates (eqs. 3–4, Algorithm 1 line 14) — sparse over
-        // the wave's participants.
-        self.estimators.update_round(&obs);
-
-        // GOODSPEED-SCHED (line 15): allocate S(t+1) under context room,
-        // over the currently-live (participating) client set. Absent
-        // clients are capped at 0 — they get their allocation from their
-        // own wave's verdict — and their *outstanding* (in-flight) grants
-        // stay reserved out of the budget, so interleaved waves can never
-        // jointly exceed C (in sync mode everyone participates, so the
-        // reservation is 0 and this is exactly the pre-wave allocation).
-        let mut in_wave = vec![false; n_total];
-        for view in &views {
-            in_wave[view.client_id] = true;
+        // Estimator updates + GOODSPEED-SCHED + record emission (Algorithm
+        // 1 lines 14–15) — the shared core path. The scheduling time is
+        // folded back into the verify phase afterwards so `verify_ns`
+        // keeps its Fig 3 meaning: verification *plus* scheduling.
+        let next = self.core.finish_wave(wave, &obs, recv_ns, verify_ns);
+        self.core.note_verify_extra_ns(sw.lap().as_nanos() as u64);
+        for (vd, nx) in verdicts.iter_mut().zip(&next) {
+            vd.next_alloc = *nx as u32;
         }
-        let reserved: usize = self
-            .outstanding
-            .iter()
-            .zip(&in_wave)
-            .filter(|(_, &live)| !live)
-            .map(|(&o, _)| o)
-            .sum();
-        let mut max_per_client = vec![0usize; n_total];
-        for (view, vd) in views.iter().zip(&verdicts) {
-            let new_prefix = view.prefix_len + vd.accepted as usize + 1;
-            max_per_client[view.client_id] =
-                self.max_draft.min(self.max_seq.saturating_sub(new_prefix + 2));
-        }
-        let caps = AllocCaps {
-            capacity: self.capacity.saturating_sub(reserved),
-            max_per_client,
-            live: in_wave,
-        };
-        let alloc = self.allocator.allocate(&self.estimators, &caps);
-        for (vd, view) in verdicts.iter_mut().zip(&views) {
-            vd.next_alloc = alloc[view.client_id] as u32;
-            self.outstanding[view.client_id] = alloc[view.client_id];
-        }
-
-        // Wave-indexed metrics with the measured phase times threaded in.
-        let clients = views
-            .iter()
-            .enumerate()
-            .map(|(b, view)| ClientRoundMetrics {
-                client_id: view.client_id,
-                s_used: view.draft_len,
-                accepted: metrics[b].0,
-                goodput: metrics[b].1,
-                mean_ratio: metrics[b].2,
-                alpha_hat: self.estimators.alpha_hat[view.client_id],
-                x_beta: self.estimators.x_beta[view.client_id],
-                next_alloc: alloc[view.client_id],
-            })
-            .collect();
-        self.recorder.push(RoundRecord {
-            round: wave,
-            recv_ns,
-            verify_ns: sw.lap().as_nanos() as u64,
-            send_ns: 0, // noted after the verdict fan-out
-            clients,
-        });
         Ok(verdicts)
     }
 
     /// Record the measured send-phase time on the wave just processed.
     pub fn note_send_ns(&mut self, send_ns: u64) {
-        if let Some(rec) = self.recorder.rounds.last_mut() {
-            rec.send_ns = send_ns;
-        }
+        self.core.note_send_ns(send_ns);
     }
 
-    pub fn estimators(&self) -> &Estimators {
-        &self.estimators
+    pub fn estimators(&self) -> &crate::sched::Estimators {
+        &self.core.estimators
     }
 }
 
@@ -284,9 +230,17 @@ impl LatencyTracker {
 
 /// Full distributed run: spawn draft-server threads, drive the leader in
 /// the scenario's coordination mode, shut down, and collect everything.
+/// Single-verifier path; `num_verifiers > 1` runs go through
+/// [`super::pool::run_pool`].
 pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<RunOutcome> {
     let scenario = &cfg.scenario;
     scenario.validate().map_err(|e| anyhow!("invalid scenario: {e}"))?;
+    if scenario.num_verifiers > 1 {
+        return Err(anyhow!(
+            "num_verifiers = {} needs the sharded pool: use coordinator::run_pool",
+            scenario.num_verifiers
+        ));
+    }
     let n = scenario.num_clients;
 
     // Transport.
@@ -347,8 +301,9 @@ pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<R
             Err(_) => return Err(anyhow!("draft server panicked")),
         }
     }
-    let summary = leader.recorder.summary(wall);
-    Ok(RunOutcome { recorder: leader.recorder, summary, draft_stats })
+    let recorder = leader.core.recorder;
+    let summary = recorder.summary(wall);
+    Ok(RunOutcome { recorder, summary, draft_stats })
 }
 
 /// The classic barrier: one dense wave per round, in lockstep.
@@ -389,7 +344,7 @@ fn run_sync_loop(
 
         // Request-latency bookkeeping (coordinator side).
         for (i, m) in msgs.iter().enumerate() {
-            latency.observe(&mut leader.recorder, i, m);
+            latency.observe(&mut leader.core.recorder, i, m);
         }
 
         // 2. Verify + schedule (one dense wave; verify time is measured
@@ -461,7 +416,7 @@ fn run_async_loop(
                 &mut pending,
                 &mut pending_n,
                 &mut latency,
-                &mut leader.recorder,
+                &mut leader.core.recorder,
                 id,
                 msg,
             )?;
@@ -476,7 +431,7 @@ fn run_async_loop(
                     &mut pending,
                     &mut pending_n,
                     &mut latency,
-                    &mut leader.recorder,
+                    &mut leader.core.recorder,
                     id,
                     msg,
                 )?,
@@ -490,7 +445,7 @@ fn run_async_loop(
                 &mut pending,
                 &mut pending_n,
                 &mut latency,
-                &mut leader.recorder,
+                &mut leader.core.recorder,
                 id,
                 msg,
             )?;
@@ -723,7 +678,7 @@ mod tests {
         assert_eq!(verdicts[0].client_id, 1);
         assert_eq!(verdicts[1].client_id, 3);
         // Only the participants appear in the wave record…
-        let rec = leader.recorder.rounds.last().unwrap();
+        let rec = leader.core.recorder.rounds.last().unwrap();
         assert_eq!(rec.recv_ns, 1234);
         let ids: Vec<usize> = rec.clients.iter().map(|c| c.client_id).collect();
         assert_eq!(ids, vec![1, 3]);
@@ -784,6 +739,18 @@ mod tests {
                 out.recorder.cum_accepted()[i],
                 "client {i} accepted-token accounting"
             );
+        }
+    }
+
+    #[test]
+    fn single_verifier_verdicts_carry_shard_zero() {
+        let out = run(Policy::GoodSpeed, 5, 2);
+        // All records stamped shard 0, and no draft server ever switched.
+        for r in &out.recorder.rounds {
+            assert_eq!(r.shard, 0);
+        }
+        for d in &out.draft_stats {
+            assert_eq!(d.shard_switches, 0);
         }
     }
 }

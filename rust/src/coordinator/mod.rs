@@ -1,10 +1,20 @@
 //! The verification-server coordinator — the paper's L3 contribution:
 //! wave batching (sync barrier or async event-driven pipeline), batched
 //! verification, rejection sampling, sparse estimator updates, gradient
-//! scheduling, and verdict fan-out. See DESIGN.md for the wave lifecycle.
+//! scheduling, and verdict fan-out. See DESIGN.md for the wave lifecycle
+//! and the sharded-verification architecture.
+//!
+//! Layering: [`core`] is the engine-agnostic wave-processing core shared
+//! with the analytic simulator; [`leader`] drives one verifier engine
+//! through it; [`pool`] shards verification across M leaders under a
+//! hierarchical proportional-fair budget split.
 
 pub mod batcher;
+pub mod core;
 pub mod leader;
+pub mod pool;
 
 pub use batcher::build_verify_request;
+pub use self::core::{RoundCore, WaveObs};
 pub use leader::{run_serving, Leader, RunConfig, RunOutcome, Transport};
+pub use pool::{run_pool, PoolOutcome};

@@ -1,0 +1,619 @@
+//! VerifierPool — sharded verification with hierarchical
+//! proportional-fair budgets.
+//!
+//! `num_verifiers = M > 1` replaces the single leader with M verification
+//! *shards*. Each shard owns its own verifier engine, its own transport
+//! fan-in, and its own [`RoundCore`] restricted (by membership mask) to
+//! the clients currently routed to it, and runs the event-driven wave
+//! loop over that subset: a wave fires once all current members are
+//! pending or the batching window expires, whichever comes first. Waves
+//! on different shards proceed in parallel — one shard's straggler never
+//! stalls another shard's clients.
+//!
+//! **Hierarchical budget split.** The scenario's verification budget C is
+//! a *global* contract. A controller (run inline, under the pool lock, by
+//! whichever shard's wave crosses the `shard_rebalance_every` boundary)
+//! splits C across shards by water-filling (`sched::gradient::
+//! hierarchical_split`): every shard gets a floor of one token per
+//! member, then the remainder flows to the shards with the largest
+//! aggregate gradient pressure `w_s = Σ_{i∈s} ∇U(X_i^β)` — exactly the
+//! proportional-fairness rule GOODSPEED-SCHED applies per client, lifted
+//! one level up. Inside its slice each shard's core runs the ordinary
+//! per-client allocation, so the hierarchy is gradient-consistent top to
+//! bottom and Σ_s C_s ≤ C at all times.
+//!
+//! **Rebalancing.** At the same cadence the controller may migrate one
+//! client from the most-pressured shard to the least-pressured one: the
+//! router flips the client's next send, the old shard drops it from its
+//! membership (after draining any in-flight draft), and the new shard
+//! seeds the client's estimator state from the controller's published
+//! table so learned α̂ / X^β survive the move. The draft server observes
+//! the move via the verdict's shard id (`DraftStats::shard_switches`).
+//!
+//! The run consumes the same total verification budget as the
+//! single-verifier coordinator (`num_clients × rounds` verdicts), so
+//! pooled and unpooled runs are work-comparable. Request latency is
+//! tracked draft-side (`DraftStats::request_latency_rounds`) in pooled
+//! runs — coordinator-side latency bookkeeping assumes one server clock.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::leader::{Leader, RunConfig, Transport};
+use crate::configsys::Scenario;
+use crate::draft::{spawn_draft_server, DraftServerConfig, DraftStats};
+use crate::metrics::recorder::Recorder;
+use crate::metrics::RunSummary;
+use crate::net::transport::{sharded_channel_transport, ServerSide, ShardRouter};
+use crate::net::wire::{DraftMsg, Message};
+use crate::runtime::EngineFactory;
+use crate::sched::gradient::split_budget_by_members;
+use crate::sched::utility::{LogUtility, Utility};
+use crate::util::{Rng, Stopwatch};
+use crate::workload::DomainStream;
+
+/// How often an idle shard wakes up to check the global stop flag.
+const IDLE_TICK: Duration = Duration::from_millis(2);
+
+/// One pending client migration, delivered to a shard between waves.
+enum Migration {
+    /// Drop this client from the shard's membership.
+    Leave(usize),
+    /// Adopt this client, seeding its learned state from the controller's
+    /// published table (including the decay-schedule observation clock, so
+    /// `Smoothing::Decay` continues from the client's real history).
+    Join { client: usize, alpha_hat: f64, x_beta: f64, outstanding: usize, t_obs: u64 },
+}
+
+/// Controller state shared by all shards (guarded by one mutex; touched
+/// once per wave, which is invisible next to a verification forward).
+struct PoolCtl {
+    /// Latest published per-client estimates (prior values until a client
+    /// first participates somewhere).
+    alpha_hat: Vec<f64>,
+    x_beta: Vec<f64>,
+    outstanding: Vec<usize>,
+    /// Per-client observation counts (the decay-schedule clock).
+    t_obs: Vec<u64>,
+    /// Current per-shard budget slices (Σ ≤ scenario capacity).
+    budgets: Vec<usize>,
+    /// Per-shard migration inboxes.
+    inbox: Vec<Vec<Migration>>,
+    /// Global wave counter (all shards) — the rebalance clock.
+    waves: u64,
+    migrations: u64,
+}
+
+struct PoolShared {
+    stop: AtomicBool,
+    delivered: AtomicU64,
+    budget_total: u64,
+    ctl: Mutex<PoolCtl>,
+}
+
+impl PoolShared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+}
+
+/// Outcome of [`run_pool`].
+pub struct PoolOutcome {
+    /// All shards' waves merged into one client-universe recorder (each
+    /// record keeps its shard id).
+    pub recorder: Recorder,
+    pub summary: RunSummary,
+    /// Per-shard summaries over the same wall clock.
+    pub shard_summaries: Vec<RunSummary>,
+    pub draft_stats: Vec<DraftStats>,
+    /// Client migrations the controller performed.
+    pub migrations: u64,
+}
+
+/// Recompute the hierarchical budget split from the controller's published
+/// estimates — the shared rule in `sched::gradient::split_budget_by_members`.
+fn compute_budgets(scenario: &Scenario, router: &ShardRouter, ctl: &PoolCtl) -> Vec<usize> {
+    let members: Vec<Vec<usize>> =
+        (0..router.num_shards()).map(|s| router.members_of(s)).collect();
+    split_budget_by_members(
+        scenario.capacity,
+        scenario.max_draft,
+        &members,
+        &ctl.alpha_hat,
+        &ctl.x_beta,
+    )
+}
+
+/// Controller step: refresh the budget split, then migrate at most one
+/// client from the highest- to the lowest-pressure shard when the
+/// imbalance is material (> 1.5×) and the donor keeps ≥ 1 member.
+fn controller_step(scenario: &Scenario, router: &ShardRouter, ctl: &mut PoolCtl) {
+    ctl.budgets = compute_budgets(scenario, router, ctl);
+    let u = LogUtility;
+    let m = router.num_shards();
+    if m < 2 {
+        return;
+    }
+    let pressure: Vec<f64> = (0..m)
+        .map(|s| router.members_of(s).iter().map(|&i| u.grad(ctl.x_beta[i])).sum())
+        .collect();
+    let (mut hi, mut lo) = (0usize, 0usize);
+    for s in 1..m {
+        if pressure[s] > pressure[hi] {
+            hi = s;
+        }
+        if pressure[s] < pressure[lo] {
+            lo = s;
+        }
+    }
+    if hi == lo || router.members_of(hi).len() < 2 {
+        return;
+    }
+    if pressure[hi] <= 1.5 * pressure[lo].max(1e-9) {
+        return;
+    }
+    // Move the donor shard's most-starved client (largest ∇U) to the
+    // underloaded shard.
+    let donor = router.members_of(hi);
+    let &client = donor
+        .iter()
+        .max_by(|&&a, &&b| u.grad(ctl.x_beta[a]).total_cmp(&u.grad(ctl.x_beta[b])))
+        .expect("donor has members");
+    router.assign(client, lo);
+    ctl.inbox[hi].push(Migration::Leave(client));
+    ctl.inbox[lo].push(Migration::Join {
+        client,
+        alpha_hat: ctl.alpha_hat[client],
+        x_beta: ctl.x_beta[client],
+        outstanding: ctl.outstanding[client],
+        t_obs: ctl.t_obs[client],
+    });
+    ctl.migrations += 1;
+    // Budgets follow the new membership immediately.
+    ctl.budgets = compute_budgets(scenario, router, ctl);
+}
+
+/// Apply any pending migrations addressed to this shard: membership flips
+/// plus the full estimator hand-off (α̂, X^β, outstanding grant, and the
+/// decay-schedule observation clock).
+fn apply_inbox(shard: usize, leader: &mut Leader, ctl: &mut PoolCtl) {
+    for mig in std::mem::take(&mut ctl.inbox[shard]) {
+        match mig {
+            Migration::Leave(client) => leader.core.set_member(client, false),
+            Migration::Join { client, alpha_hat, x_beta, outstanding, t_obs } => {
+                leader.core.set_member(client, true);
+                leader.core.estimators.alpha_hat[client] = alpha_hat;
+                leader.core.estimators.x_beta[client] = x_beta;
+                leader.core.estimators.set_observations(client, t_obs);
+                leader.core.set_outstanding(client, outstanding);
+            }
+        }
+    }
+}
+
+/// Per-wave bookkeeping a shard performs under the pool lock: publish its
+/// members' learned state, advance the rebalance clock (running the
+/// controller on the boundary), apply inbound migrations, and adopt the
+/// current budget slice.
+fn post_wave(
+    scenario: &Scenario,
+    shard: usize,
+    leader: &mut Leader,
+    router: &ShardRouter,
+    shared: &PoolShared,
+) {
+    let n = scenario.num_clients;
+    let mut ctl = shared.ctl.lock().expect("pool lock");
+    for i in 0..n {
+        if leader.core.is_member(i) {
+            ctl.alpha_hat[i] = leader.core.estimators.alpha_hat[i];
+            ctl.x_beta[i] = leader.core.estimators.x_beta[i];
+            ctl.outstanding[i] = leader.core.outstanding(i);
+            ctl.t_obs[i] = leader.core.estimators.observations(i);
+        }
+    }
+    ctl.waves += 1;
+    let every = scenario.shard_rebalance_every;
+    if every > 0 && ctl.waves % every == 0 {
+        controller_step(scenario, router, &mut ctl);
+    }
+    apply_inbox(shard, leader, &mut ctl);
+    leader.core.set_capacity(ctl.budgets[shard]);
+}
+
+fn ingest(
+    pending: &mut [Option<DraftMsg>],
+    pending_n: &mut usize,
+    id: usize,
+    msg: Message,
+) -> Result<()> {
+    match msg {
+        Message::Draft(d) => {
+            if pending[id].replace(d).is_some() {
+                return Err(anyhow!("client {id}: two drafts in flight"));
+            }
+            *pending_n += 1;
+            Ok(())
+        }
+        Message::Shutdown => Err(anyhow!("client {id} shut down early")),
+        other => Err(anyhow!("unexpected {other:?}")),
+    }
+}
+
+/// One shard's serving loop: the event-driven wave pipeline over the
+/// clients currently routed here. Returns the number of waves processed.
+fn run_shard_loop(
+    scenario: &Scenario,
+    shard: usize,
+    server: &mut ServerSide,
+    leader: &mut Leader,
+    router: &ShardRouter,
+    shared: &PoolShared,
+) -> Result<u64> {
+    let n = scenario.num_clients;
+    let window = Duration::from_micros(scenario.batch_window_us);
+    let mut pending: Vec<Option<DraftMsg>> = vec![None; n];
+    let mut pending_n = 0usize;
+    let mut wave: u64 = 0;
+
+    'run: while !shared.stopping() {
+        let mut sw = Stopwatch::new();
+        // Phase 1 — wait for the wave's first draft, waking periodically
+        // to honor the global stop (a shard whose clients all migrated
+        // away must not block forever).
+        while pending_n == 0 {
+            if shared.stopping() {
+                break 'run;
+            }
+            match server.recv_deadline(Instant::now() + IDLE_TICK)? {
+                Some((id, msg)) => ingest(&mut pending, &mut pending_n, id, msg)?,
+                None => continue,
+            }
+        }
+        // Phase 2 — batching window: wait for the rest of the current
+        // membership until the deadline expires.
+        let members = router.members_of(shard).len().max(1);
+        let fill = scenario.effective_wave_fill().min(members);
+        let deadline = Instant::now() + window;
+        while pending_n < fill {
+            match server.recv_deadline(deadline)? {
+                Some((id, msg)) => ingest(&mut pending, &mut pending_n, id, msg)?,
+                None => break, // deadline-triggered flush
+            }
+        }
+        // Phase 3 — opportunistic drain.
+        for (id, msg) in server.try_drain()? {
+            ingest(&mut pending, &mut pending_n, id, msg)?;
+        }
+        // Phase 4 — form the wave (index order ⇒ ascending client id).
+        let mut msgs: Vec<DraftMsg> = Vec::with_capacity(pending_n);
+        for slot in pending.iter_mut() {
+            if let Some(d) = slot.take() {
+                msgs.push(d);
+            }
+        }
+        pending_n = 0;
+        let recv_ns = sw.lap().as_nanos() as u64;
+
+        // Adopt pending migrations *before* verifying: a freshly routed
+        // client's Join is enqueued (under the pool lock) before the
+        // router can steer its first draft here, so draining the inbox now
+        // guarantees the wave sees it as a member with its handed-off
+        // state — and a later drain can't stomp what this wave learns.
+        {
+            let mut ctl = shared.ctl.lock().expect("pool lock");
+            apply_inbox(shard, leader, &mut ctl);
+            leader.core.set_capacity(ctl.budgets[shard]);
+        }
+
+        // Phase 5 — verify + schedule + send.
+        let verdicts = leader.process_wave(wave, &msgs, recv_ns)?;
+        let _ = sw.lap();
+        for vd in &verdicts {
+            (server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
+        }
+        leader.note_send_ns(sw.lap().as_nanos() as u64);
+        wave += 1;
+
+        let delivered = shared
+            .delivered
+            .fetch_add(verdicts.len() as u64, Ordering::AcqRel)
+            + verdicts.len() as u64;
+        if delivered >= shared.budget_total {
+            shared.stop.store(true, Ordering::Release);
+        }
+        // Phase 6 — controller interaction (publish, rebalance, adopt).
+        post_wave(scenario, shard, leader, router, shared);
+    }
+    Ok(wave)
+}
+
+/// Full sharded serving run: spawn draft servers and M shard threads,
+/// drive the pool until the global verification budget is consumed, and
+/// merge everything. Channel transport only (each shard of a multi-host
+/// TCP pool would simply bind its own `TcpTransport`; the in-process pool
+/// is the single-machine scale-up path).
+pub fn run_pool(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<PoolOutcome> {
+    let scenario = &cfg.scenario;
+    scenario.validate().map_err(|e| anyhow!("invalid scenario: {e}"))?;
+    if cfg.transport != Transport::Channel {
+        return Err(anyhow!("the sharded pool runs over the channel transport"));
+    }
+    let n = scenario.num_clients;
+    let m = scenario.num_verifiers;
+    let (servers, router, ports, master_txs): (_, _, _, Vec<Sender<Message>>) =
+        sharded_channel_transport(n, m);
+
+    // Shared controller state, seeded with the estimator priors.
+    let initial_alloc = (scenario.capacity / n.max(1)).min(scenario.max_draft);
+    let mut ctl = PoolCtl {
+        alpha_hat: vec![0.5; n],
+        x_beta: vec![1.0; n],
+        outstanding: vec![initial_alloc; n],
+        t_obs: vec![0; n],
+        budgets: vec![0; m],
+        inbox: (0..m).map(|_| Vec::new()).collect(),
+        waves: 0,
+        migrations: 0,
+    };
+    ctl.budgets = compute_budgets(scenario, &router, &ctl);
+    let shared = Arc::new(PoolShared {
+        stop: AtomicBool::new(false),
+        delivered: AtomicU64::new(0),
+        budget_total: scenario.rounds.saturating_mul(n as u64),
+        ctl: Mutex::new(ctl),
+    });
+
+    // Draft servers (same client-side protocol as the single leader; the
+    // wave discipline means one client may outpace another, so the safety
+    // cap is the full budget).
+    let max_rounds = scenario.rounds.saturating_mul(n as u64) + 1;
+    let mut client_handles = Vec::with_capacity(n);
+    let mut root_rng = Rng::new(scenario.seed);
+    for (i, port) in ports.into_iter().enumerate() {
+        let stream = DomainStream::new(
+            scenario.domain(i),
+            scenario.domain_stickiness,
+            scenario.max_new_tokens,
+            root_rng.fork(i as u64),
+        );
+        let dcfg = DraftServerConfig {
+            client_id: i,
+            model: scenario.draft_model(i).to_string(),
+            initial_alloc,
+            link: scenario.link(i),
+            simulate_network: cfg.simulate_network,
+            seed: scenario.seed ^ (0xD00D + i as u64),
+            max_rounds,
+        };
+        client_handles.push(spawn_draft_server(dcfg, factory.clone(), stream, port));
+    }
+
+    // Shard threads. Engines are built inside each thread (PJRT handles
+    // are not Send), exactly like the draft-server actors.
+    let run_start = Instant::now();
+    let mut shard_handles = Vec::with_capacity(m);
+    for (shard, mut server) in servers.into_iter().enumerate() {
+        let scenario = scenario.clone();
+        let policy = cfg.policy;
+        let factory = factory.clone();
+        let router = router.clone();
+        let shared = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("verify-shard-{shard}"))
+            .spawn(move || -> (Result<u64>, Option<Recorder>, ServerSide) {
+                let mut leader = match Leader::new(&scenario, policy, factory.as_ref()) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        // A dead shard must release the others: without the
+                        // stop flag its clients never get verdicts, the
+                        // budget never completes, and the pool would hang.
+                        shared.stop.store(true, Ordering::Release);
+                        return (Err(e), None, server);
+                    }
+                };
+                leader.core.set_shard(shard);
+                {
+                    let ctl = shared.ctl.lock().expect("pool lock");
+                    leader.core.set_capacity(ctl.budgets[shard]);
+                }
+                for i in 0..scenario.num_clients {
+                    leader.core.set_member(i, router.shard_of(i) == shard);
+                }
+                let res =
+                    run_shard_loop(&scenario, shard, &mut server, &mut leader, &router, &shared);
+                if res.is_err() {
+                    shared.stop.store(true, Ordering::Release);
+                }
+                (res, Some(leader.core.recorder), server)
+            })
+            .expect("spawn verify shard");
+        shard_handles.push(handle);
+    }
+
+    // Collect shards (they all exit once the budget is consumed), then
+    // release the clients and collect them too.
+    let mut shard_recorders = Vec::with_capacity(m);
+    let mut kept_servers = Vec::with_capacity(m);
+    let mut shard_err: Option<anyhow::Error> = None;
+    for handle in shard_handles {
+        match handle.join() {
+            Ok((res, recorder, server)) => {
+                if let Err(e) = res {
+                    shared.stop.store(true, Ordering::Release);
+                    if shard_err.is_none() {
+                        shard_err = Some(e);
+                    }
+                }
+                if let Some(r) = recorder {
+                    shard_recorders.push(r);
+                }
+                kept_servers.push(server);
+            }
+            Err(_) => {
+                shared.stop.store(true, Ordering::Release);
+                if shard_err.is_none() {
+                    shard_err = Some(anyhow!("verify shard panicked"));
+                }
+            }
+        }
+    }
+    let wall = run_start.elapsed().as_secs_f64();
+    for tx in &master_txs {
+        let _ = tx.send(Message::Shutdown);
+    }
+    let mut draft_stats = Vec::with_capacity(n);
+    for h in client_handles {
+        match h.join() {
+            Ok(Ok(s)) => draft_stats.push(s),
+            Ok(Err(e)) => {
+                if shard_err.is_none() {
+                    shard_err = Some(anyhow!("draft server failed: {e}"));
+                }
+            }
+            Err(_) => {
+                if shard_err.is_none() {
+                    shard_err = Some(anyhow!("draft server panicked"));
+                }
+            }
+        }
+    }
+    // Shard fan-ins must outlive the clients' last sends.
+    drop(kept_servers);
+    if let Some(e) = shard_err {
+        return Err(e);
+    }
+
+    let shard_summaries: Vec<RunSummary> =
+        shard_recorders.iter().map(|r| r.summary(wall)).collect();
+    let mut merged = Recorder::new(n);
+    for rec in shard_recorders {
+        merged.absorb(rec);
+    }
+    let summary = merged.summary(wall);
+    let migrations = shared.ctl.lock().expect("pool lock").migrations;
+    Ok(PoolOutcome { recorder: merged, summary, shard_summaries, draft_stats, migrations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configsys::Policy;
+    use crate::runtime::{MockEngineFactory, MockWorld};
+    use crate::util::stats::jain_index;
+
+    fn mock_factory() -> Arc<dyn EngineFactory> {
+        Arc::new(MockEngineFactory::new(MockWorld {
+            vocab: 32,
+            max_seq: 256,
+            sharpness: 3.0,
+            seed: 11,
+        }))
+    }
+
+    fn pool_scenario(m: usize, rounds: u64) -> Scenario {
+        let mut s = Scenario::preset("sharded").unwrap();
+        s.num_verifiers = m;
+        s.rounds = rounds;
+        s
+    }
+
+    fn run(m: usize, rounds: u64) -> PoolOutcome {
+        let cfg = RunConfig {
+            scenario: pool_scenario(m, rounds),
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+        };
+        run_pool(&cfg, mock_factory()).unwrap()
+    }
+
+    #[test]
+    fn pool_consumes_the_global_budget() {
+        let out = run(2, 12);
+        let budget = 12 * 8u64;
+        let delivered: u64 = out.recorder.participation().iter().sum();
+        // Full budget, with at most one extra wave per shard in flight
+        // when the stop flag latched.
+        assert!(delivered >= budget, "{delivered} < {budget}");
+        assert!(delivered < budget + 2 * 8, "{delivered}");
+        // Everyone made progress.
+        for (i, &p) in out.recorder.participation().iter().enumerate() {
+            assert!(p > 0, "client {i} starved");
+        }
+    }
+
+    #[test]
+    fn pool_waves_never_exceed_their_shard_budget_slice() {
+        let out = run(4, 10);
+        // Σ shard budgets ≤ C, and each wave's drafts fit its slice. The
+        // slice can shrink between the grant and the verify (rebalancing),
+        // so check against the conservative global bound per shard count.
+        for r in &out.recorder.rounds {
+            let used: usize = r.clients.iter().map(|c| c.s_used).sum();
+            assert!(used <= 32, "wave on shard {} used {used} > C", r.shard);
+        }
+        // Waves really ran on multiple shards.
+        let mut shards: Vec<usize> = out.recorder.rounds.iter().map(|r| r.shard).collect();
+        shards.sort_unstable();
+        shards.dedup();
+        assert!(shards.len() >= 2, "expected multiple active shards: {shards:?}");
+    }
+
+    #[test]
+    fn pool_of_one_matches_single_verifier_semantics() {
+        let out = run(1, 10);
+        assert_eq!(out.shard_summaries.len(), 1);
+        assert_eq!(out.migrations, 0); // nothing to rebalance against
+        for r in &out.recorder.rounds {
+            assert_eq!(r.shard, 0);
+        }
+        for d in &out.draft_stats {
+            assert_eq!(d.shard_switches, 0);
+        }
+    }
+
+    #[test]
+    fn pool_fairness_stays_close_to_single_verifier() {
+        // The 5%-of-baseline bound is the acceptance shape demonstrated by
+        // `examples/sharded_scaleup` / `benches/sharded`; the unit test
+        // allows a whisker more slack and disables rebalancing so the
+        // migration sequence (which depends on OS thread scheduling)
+        // cannot perturb the comparison — the static hierarchical split
+        // is what's under test here.
+        let run_static = |m: usize| {
+            let mut s = pool_scenario(m, 50);
+            s.shard_rebalance_every = 0;
+            let cfg = RunConfig {
+                scenario: s,
+                policy: Policy::GoodSpeed,
+                transport: Transport::Channel,
+                simulate_network: false,
+            };
+            run_pool(&cfg, mock_factory()).unwrap()
+        };
+        let one = run_static(1);
+        let four = run_static(4);
+        let j1 = jain_index(&one.recorder.avg_goodput());
+        let j4 = jain_index(&four.recorder.avg_goodput());
+        assert!(
+            (j1 - j4).abs() <= 0.06 * j1,
+            "cross-shard fairness drift: M=1 {j1:.4} vs M=4 {j4:.4}"
+        );
+    }
+
+    #[test]
+    fn pool_rejects_tcp_transport() {
+        let cfg = RunConfig {
+            scenario: pool_scenario(2, 5),
+            policy: Policy::GoodSpeed,
+            transport: Transport::Tcp,
+            simulate_network: false,
+        };
+        assert!(run_pool(&cfg, mock_factory()).is_err());
+    }
+}

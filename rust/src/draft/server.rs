@@ -58,6 +58,10 @@ pub struct DraftStats {
     pub draft_compute: Duration,
     /// Per-request latency (rounds from first draft to completion).
     pub request_latency_rounds: Vec<u64>,
+    /// How many times this client's verdicts started arriving from a
+    /// different verification shard (pool rebalancing observed client-side
+    /// via the verdict's shard id; 0 outside pooled runs).
+    pub shard_switches: u64,
 }
 
 struct Actor {
@@ -77,6 +81,8 @@ struct Actor {
     /// Distribution for the token at index `drafter.position()`.
     pending_dist: Vec<f32>,
     new_request: bool,
+    /// Shard id of the last verdict (u32::MAX until the first one).
+    last_shard: u32,
 }
 
 impl Actor {
@@ -196,6 +202,12 @@ impl Actor {
                             v.round
                         ));
                     }
+                    if self.last_shard != v.shard {
+                        if self.last_shard != u32::MAX {
+                            self.stats.shard_switches += 1;
+                        }
+                        self.last_shard = v.shard;
+                    }
                     self.apply_verdict(round, &draft, v.accepted as usize, v.correction)?;
                     alloc = v.next_alloc as usize;
                 }
@@ -235,6 +247,7 @@ pub fn spawn_draft_server(
                 request_start_round: 0,
                 pending_dist: Vec::new(),
                 new_request: false,
+                last_shard: u32::MAX,
                 cfg,
             };
             actor.run()
@@ -300,6 +313,7 @@ mod tests {
                 accepted: acc,
                 correction: 7,
                 next_alloc: 4,
+                shard: 0,
             }))
             .unwrap();
         }
@@ -332,6 +346,7 @@ mod tests {
                 accepted: d.draft.len() as u32,
                 correction: 3,
                 next_alloc: 4,
+                shard: 0,
             }))
             .unwrap();
         }
@@ -360,6 +375,8 @@ mod tests {
                 accepted: d.draft.len() as u32,
                 correction: 5,
                 next_alloc: 4,
+                // Alternate shard ids: the actor must count the switches.
+                shard: (round % 2) as u32,
             }))
             .unwrap();
         }
@@ -367,6 +384,9 @@ mod tests {
         assert!(stats.requests_completed >= 2, "{stats:?}");
         assert!(new_request_count >= 3); // first + completions
         assert_eq!(stats.requests_completed as usize, stats.request_latency_rounds.len());
+        // 12 verdicts alternating shard 0/1: the first sets the baseline,
+        // every later one is a switch.
+        assert_eq!(stats.shard_switches, 11);
     }
 
     #[test]
@@ -390,6 +410,7 @@ mod tests {
                 accepted: 0,
                 correction: 9,
                 next_alloc: 0,
+                shard: 0,
             }))
             .unwrap();
         }

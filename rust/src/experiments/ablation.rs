@@ -45,12 +45,12 @@ fn eta_beta_sweep(out_dir: &str, rounds: u64) -> Result<()> {
             s.beta = Smoothing::Fixed(beta);
             let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
             sim.run();
-            let u = sim.recorder.utility_of_avg(&LogUtility);
+            let u = sim.recorder().utility_of_avg(&LogUtility);
             // Tracking error: |α̂ − α_true| at the end.
             let err: f64 = sim
                 .true_alphas()
                 .iter()
-                .zip(&sim.estimators.alpha_hat)
+                .zip(&sim.estimators().alpha_hat)
                 .map(|(t, e)| (t - e).abs())
                 .sum::<f64>()
                 / sim.clients.len() as f64;
@@ -78,7 +78,7 @@ fn capacity_sweep(out_dir: &str, rounds: u64) -> Result<()> {
         s.capacity = c;
         let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
         sim.run();
-        let avg = sim.recorder.avg_goodput();
+        let avg = sim.recorder().avg_goodput();
         let total: f64 = avg.iter().sum();
         let jain = jain_index(&avg);
         println!("{c:>4} {total:>12.2} {jain:>8.4}");
@@ -146,7 +146,7 @@ fn utility_ablation(out_dir: &str, rounds: u64) -> Result<()> {
         let alloc: Box<dyn Allocator> = Box::new(GoodSpeedAlloc { utility });
         sim_set_allocator(&mut sim, alloc);
         sim.run();
-        let avg = sim.recorder.avg_goodput();
+        let avg = sim.recorder().avg_goodput();
         let total: f64 = avg.iter().sum();
         let jain = jain_index(&avg);
         let ulog = system_utility(&LogUtility, &avg);

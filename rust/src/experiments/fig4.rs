@@ -77,7 +77,7 @@ pub fn run_grid_sim(rounds: u64) -> Vec<Fig4Curve> {
                     family: fam.to_string(),
                     clients,
                     policy: policy.name(),
-                    curve: utility_curve(&sim.recorder),
+                    curve: utility_curve(sim.recorder()),
                 });
             }
         }

@@ -39,7 +39,7 @@ pub fn beta_sweep(betas: &[f64], rounds: u64, clients: usize) -> Vec<BetaRow> {
         let mut dist_sum = 0.0;
         let mut dist_max: f64 = 0.0;
         let mut count = 0usize;
-        for r in &sim.recorder.rounds[tail_start..] {
+        for r in &sim.recorder().rounds[tail_start..] {
             // Keyed by client_id (waves may hold subsets; dense in sync).
             let d: f64 = r
                 .clients
@@ -54,7 +54,7 @@ pub fn beta_sweep(betas: &[f64], rounds: u64, clients: usize) -> Vec<BetaRow> {
             dist_max = dist_max.max(d);
             count += 1;
         }
-        let u_final = sim.recorder.utility_of_avg(&crate::sched::utility::LogUtility);
+        let u_final = sim.recorder().utility_of_avg(&crate::sched::utility::LogUtility);
         rows.push(BetaRow {
             beta,
             tail_dist_mean: dist_sum / count.max(1) as f64,

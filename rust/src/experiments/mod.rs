@@ -89,7 +89,8 @@ COMMANDS
                                     --transport channel|tcp --engine xla|mock
                                     --capacity <C> --clients <n> --no-network
                                     --mode sync|async --batch-window-us <µs>
-                                    --min-wave-fill <n>
+                                    --min-wave-fill <n> --verifiers <m>
+                                    --rebalance-every <waves>
   quickstart single client speculative vs autoregressive speedup
   fig2       goodput estimation fidelity (paper Fig 2)   --out results
   fig3       wall-time decomposition   (paper Fig 3)     --out results
@@ -98,6 +99,6 @@ COMMANDS
   fluid      fluid-limit / Theorem 1 validation          --out results
   ablation   eta/beta/C sweeps, greedy-vs-DP, buckets    --out results
 
-Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke, straggler."
+Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke, straggler, sharded."
     );
 }

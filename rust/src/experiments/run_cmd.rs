@@ -5,7 +5,7 @@ use anyhow::{anyhow, Result};
 use super::engine_from_args;
 use crate::cli::Args;
 use crate::configsys::{Policy, Scenario};
-use crate::coordinator::{run_serving, RunConfig, Transport};
+use crate::coordinator::{run_pool, run_serving, RunConfig, Transport};
 use crate::metrics::csv::write_rounds;
 
 /// Regenerate the seeded links after a --clients/--seed override while
@@ -60,6 +60,12 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
     if let Some(f) = args.get_parse::<usize>("min-wave-fill") {
         s.min_wave_fill = f;
     }
+    if let Some(m) = args.get_parse::<usize>("verifiers") {
+        s.num_verifiers = m;
+    }
+    if let Some(k) = args.get_parse::<u64>("rebalance-every") {
+        s.shard_rebalance_every = k;
+    }
     s.validate().map_err(|e| anyhow!("scenario: {e}"))?;
     Ok(s)
 }
@@ -76,17 +82,40 @@ pub fn main(args: &Args) -> Result<()> {
     args.finish().map_err(|e| anyhow!(e))?;
 
     log::info!(
-        "run: scenario={} policy={} mode={} transport={transport:?} rounds={}",
+        "run: scenario={} policy={} mode={} verifiers={} transport={transport:?} rounds={}",
         scenario.id,
         policy.name(),
         scenario.coord_mode.name(),
+        scenario.num_verifiers,
         scenario.rounds
     );
     let cfg = RunConfig { scenario: scenario.clone(), policy, transport, simulate_network };
-    let out = run_serving(&cfg, factory)?;
-    out.summary.print(&format!("{} / {}", scenario.id, policy.name()));
+    let recorder = if scenario.num_verifiers > 1 {
+        let out = run_pool(&cfg, factory)?;
+        out.summary.print(&format!(
+            "{} / {} / {} shards",
+            scenario.id,
+            policy.name(),
+            scenario.num_verifiers
+        ));
+        // No per-shard Jain here: each shard's recorder spans the full
+        // client universe, so its index would read ~|members|/n even under
+        // perfect fairness. The merged summary above carries the real one.
+        for (s, sum) in out.shard_summaries.iter().enumerate() {
+            println!(
+                "  shard {s}: waves {:>5}  tokens {:>8.0}",
+                sum.rounds, sum.total_tokens
+            );
+        }
+        println!("  client migrations: {}", out.migrations);
+        out.recorder
+    } else {
+        let out = run_serving(&cfg, factory)?;
+        out.summary.print(&format!("{} / {}", scenario.id, policy.name()));
+        out.recorder
+    };
     let path = format!("{out_dir}/run_{}_{}.csv", scenario.id, policy.name());
-    write_rounds(&path, &out.recorder)?;
+    write_rounds(&path, &recorder)?;
     println!("per-round CSV -> {path}");
     Ok(())
 }

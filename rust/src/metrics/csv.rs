@@ -40,7 +40,7 @@ pub fn write_csv<P: AsRef<Path>>(
 pub fn write_rounds<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
     let header = [
         "round", "client", "s_used", "accepted", "goodput", "mean_ratio", "alpha_hat", "x_beta",
-        "next_alloc", "recv_ns", "verify_ns", "send_ns",
+        "next_alloc", "recv_ns", "verify_ns", "send_ns", "shard",
     ];
     let rows = rec.rounds.iter().flat_map(|r| {
         r.clients.iter().map(move |c| {
@@ -57,6 +57,7 @@ pub fn write_rounds<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
                 r.recv_ns.to_string(),
                 r.verify_ns.to_string(),
                 r.send_ns.to_string(),
+                r.shard.to_string(),
             ]
         })
     });
@@ -83,6 +84,7 @@ mod tests {
         let mut rec = Recorder::new(2);
         rec.push(RoundRecord {
             round: 0,
+            shard: 0,
             recv_ns: 10,
             verify_ns: 20,
             send_ns: 1,

@@ -28,8 +28,12 @@ pub struct ClientRoundMetrics {
 /// One coordinator wave (sync mode: one wave per round, all clients).
 #[derive(Clone, Debug, Default)]
 pub struct RoundRecord {
-    /// Wave index (== the round number in sync mode).
+    /// Wave index (== the round number in sync mode). Per-shard counter in
+    /// pooled runs.
     pub round: u64,
+    /// Verification shard that processed this wave (0 outside pooled
+    /// mode).
+    pub shard: usize,
     /// Wall-time decomposition (paper Fig 3): waiting for draft batches,
     /// verification (+ scheduling), sending verdicts. These are the
     /// *measured* phase times threaded in by the coordinator.
@@ -84,6 +88,22 @@ impl Recorder {
             self.participation[i] += 1;
         }
         self.rounds.push(rec);
+    }
+
+    /// Fold another recorder (same client universe) into this one — used
+    /// to merge per-shard recorders into the pool-wide view. Waves are
+    /// re-pushed so the cumulative per-client accounting stays derived
+    /// from the records themselves.
+    pub fn absorb(&mut self, other: Recorder) {
+        assert_eq!(
+            self.cum_goodput.len(),
+            other.cum_goodput.len(),
+            "recorders must share the client universe"
+        );
+        for rec in other.rounds {
+            self.push(rec);
+        }
+        self.request_latency_rounds.extend(other.request_latency_rounds);
     }
 
     pub fn n_clients(&self) -> usize {
@@ -207,6 +227,7 @@ mod tests {
     fn round(goodputs: &[usize]) -> RoundRecord {
         RoundRecord {
             round: 0,
+            shard: 0,
             recv_ns: 1000,
             verify_ns: 2000,
             send_ns: 10,
@@ -227,6 +248,7 @@ mod tests {
     fn wave(pairs: &[(usize, usize)]) -> RoundRecord {
         RoundRecord {
             round: 0,
+            shard: 0,
             recv_ns: 10,
             verify_ns: 20,
             send_ns: 1,
@@ -288,6 +310,22 @@ mod tests {
         let s = r.summary(1.0);
         assert_eq!(s.rounds, 3); // 3 waves
         assert!((s.total_tokens - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_merges_shard_recorders() {
+        let mut a = Recorder::new(3);
+        a.push(wave(&[(0, 4), (1, 2)]));
+        a.request_latency_rounds.push(3);
+        let mut b = Recorder::new(3);
+        b.push(wave(&[(2, 5)]));
+        b.push(wave(&[(2, 3)]));
+        b.request_latency_rounds.push(7);
+        a.absorb(b);
+        assert_eq!(a.rounds.len(), 3);
+        assert_eq!(a.participation(), &[1, 1, 2]);
+        assert_eq!(a.cum_goodput(), &[4.0, 2.0, 8.0]);
+        assert_eq!(a.request_latency_rounds, vec![3, 7]);
     }
 
     #[test]

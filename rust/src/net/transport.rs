@@ -10,7 +10,9 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -107,6 +109,123 @@ impl ClientPort for ChannelPort {
     fn recv(&mut self) -> Result<Message> {
         self.rx.recv().map_err(|_| anyhow!("coordinator closed"))
     }
+}
+
+// -------------------------------------------------------- sharded channel
+
+/// Client → shard routing table, shared between every client port and the
+/// pool controller. A client's *next* send observes a reassignment
+/// immediately (acquire/release); the message already queued at the old
+/// shard is still verified there — nothing is lost in flight.
+#[derive(Clone)]
+pub struct ShardRouter {
+    assignment: Arc<Vec<AtomicUsize>>,
+    num_shards: usize,
+}
+
+impl ShardRouter {
+    /// Round-robin initial placement: client i → shard i mod m.
+    pub fn new(n: usize, m: usize) -> ShardRouter {
+        assert!(m > 0, "at least one shard");
+        ShardRouter {
+            assignment: Arc::new((0..n).map(|i| AtomicUsize::new(i % m)).collect()),
+            num_shards: m,
+        }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.assignment.len()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    pub fn shard_of(&self, client: usize) -> usize {
+        self.assignment[client].load(Ordering::Acquire)
+    }
+
+    /// Move a client to another shard (pool rebalancing).
+    pub fn assign(&self, client: usize, shard: usize) {
+        assert!(shard < self.num_shards, "shard {shard} out of range");
+        self.assignment[client].store(shard, Ordering::Release);
+    }
+
+    /// Clients currently routed to `shard`, ascending.
+    pub fn members_of(&self, shard: usize) -> Vec<usize> {
+        (0..self.num_clients()).filter(|&i| self.shard_of(i) == shard).collect()
+    }
+}
+
+struct ShardedPort {
+    id: usize,
+    fans: Vec<Sender<(usize, Message)>>,
+    router: ShardRouter,
+    rx: Receiver<Message>,
+}
+
+impl ClientPort for ShardedPort {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        let shard = self.router.shard_of(self.id);
+        self.fans[shard]
+            .send((self.id, msg.clone()))
+            .map_err(|_| anyhow!("shard {shard} gone"))
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.rx.recv().map_err(|_| anyhow!("coordinator closed"))
+    }
+}
+
+/// Build an in-process transport for `n` clients fanned into `m`
+/// verification shards. Each shard gets its own FIFO fan-in (only its
+/// routed clients' messages ever appear there) plus verdict senders for
+/// *all* clients (any shard can answer any client — needed while a
+/// migrated client's last draft drains at its old shard). The extra
+/// `Vec<Sender<Message>>` is a master set of verdict senders the pool
+/// driver keeps for the end-of-run shutdown broadcast.
+#[allow(clippy::type_complexity)]
+pub fn sharded_channel_transport(
+    n: usize,
+    m: usize,
+) -> (Vec<ServerSide>, ShardRouter, Vec<Box<dyn ClientPort>>, Vec<Sender<Message>>) {
+    let router = ShardRouter::new(n, m);
+    let mut fan_txs = Vec::with_capacity(m);
+    let mut fan_rxs = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (tx, rx) = channel::<(usize, Message)>();
+        fan_txs.push(tx);
+        fan_rxs.push(rx);
+    }
+    let mut verdict_txs = Vec::with_capacity(n);
+    let mut ports: Vec<Box<dyn ClientPort>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let (v_tx, v_rx) = channel::<Message>();
+        verdict_txs.push(v_tx);
+        ports.push(Box::new(ShardedPort {
+            id: i,
+            fans: fan_txs.clone(),
+            router: router.clone(),
+            rx: v_rx,
+        }));
+    }
+    let servers = fan_rxs
+        .into_iter()
+        .map(|rx| {
+            let txs: Vec<Box<dyn FnMut(&Message) -> Result<()> + Send>> = verdict_txs
+                .iter()
+                .enumerate()
+                .map(|(i, v_tx)| {
+                    let v_tx = v_tx.clone();
+                    Box::new(move |msg: &Message| {
+                        v_tx.send(msg.clone()).map_err(|_| anyhow!("client {i} gone"))
+                    }) as Box<dyn FnMut(&Message) -> Result<()> + Send>
+                })
+                .collect();
+            ServerSide { rx, txs }
+        })
+        .collect();
+    (servers, router, ports, verdict_txs)
 }
 
 // -------------------------------------------------------------------- tcp
@@ -247,6 +366,7 @@ mod tests {
             accepted: 2,
             correction: 9,
             next_alloc: 4,
+            shard: 0,
         });
         (server.txs[1])(&v).unwrap();
         let got = ports[1].recv().unwrap();
@@ -268,6 +388,7 @@ mod tests {
             accepted: 1,
             correction: 2,
             next_alloc: 8,
+            shard: 0,
         });
         (t.server.txs[0])(&v).unwrap();
         assert_eq!(t.ports[0].recv().unwrap(), v);
@@ -334,6 +455,125 @@ mod tests {
         let deadline = Instant::now() + std::time::Duration::from_secs(5);
         let got = t.server.recv_deadline(deadline).unwrap();
         assert!(matches!(got, Some((0, Message::Draft(ref d))) if d.round == 2));
+    }
+
+    #[test]
+    fn sharded_fanins_have_no_cross_shard_leakage() {
+        // 4 clients over 2 shards: 0,2 → shard 0; 1,3 → shard 1. Every
+        // message must land only in its own shard's fan-in.
+        let (mut servers, router, mut ports, _master) = sharded_channel_transport(4, 2);
+        assert_eq!(router.members_of(0), vec![0, 2]);
+        assert_eq!(router.members_of(1), vec![1, 3]);
+        for (i, p) in ports.iter_mut().enumerate() {
+            p.send(&draft(i as u32, 0)).unwrap();
+        }
+        let ids = |drained: Vec<(usize, Message)>| -> Vec<usize> {
+            drained.into_iter().map(|(id, _)| id).collect::<Vec<_>>()
+        };
+        assert_eq!(ids(servers[0].try_drain().unwrap()), vec![0, 2]);
+        assert_eq!(ids(servers[1].try_drain().unwrap()), vec![1, 3]);
+        // Nothing left anywhere.
+        assert!(servers[0].try_drain().unwrap().is_empty());
+        assert!(servers[1].try_drain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn sharded_recv_deadline_sees_only_own_shard() {
+        let (mut servers, _router, mut ports, _master) = sharded_channel_transport(2, 2);
+        ports[1].send(&draft(1, 0)).unwrap();
+        // Shard 0's deadline receive must time out — client 1's draft is
+        // shard 1 traffic.
+        let expired = Instant::now();
+        assert!(servers[0].recv_deadline(expired).unwrap().is_none());
+        let got = servers[1].recv_deadline(Instant::now()).unwrap();
+        assert!(matches!(got, Some((1, Message::Draft(_)))));
+    }
+
+    #[test]
+    fn sharded_reassignment_routes_next_send() {
+        let (mut servers, router, mut ports, _master) = sharded_channel_transport(2, 2);
+        ports[1].send(&draft(1, 0)).unwrap();
+        router.assign(1, 0);
+        ports[1].send(&draft(1, 1)).unwrap();
+        // Round 0 went to the old shard, round 1 to the new one.
+        let old = servers[1].try_drain().unwrap();
+        assert_eq!(old.len(), 1);
+        assert!(matches!(&old[0].1, Message::Draft(d) if d.round == 0));
+        let new = servers[0].try_drain().unwrap();
+        assert_eq!(new.len(), 1);
+        assert!(matches!(&new[0].1, Message::Draft(d) if d.round == 1));
+        assert_eq!(router.shard_of(1), 0);
+    }
+
+    #[test]
+    fn sharded_verdicts_reach_clients_from_any_shard() {
+        let (mut servers, _router, mut ports, _master) = sharded_channel_transport(2, 2);
+        // Shard 1 answers client 0 even though client 0 routes to shard 0
+        // (the drain-after-migration path).
+        let v = Message::Verdict(VerdictMsg {
+            client_id: 0,
+            round: 0,
+            accepted: 1,
+            correction: 3,
+            next_alloc: 2,
+            shard: 1,
+        });
+        (servers[1].txs[0])(&v).unwrap();
+        assert_eq!(ports[0].recv().unwrap(), v);
+    }
+
+    #[test]
+    fn sharded_concurrent_fanins_stay_isolated() {
+        // Satellite: try_drain / recv_deadline under multiple concurrent
+        // shard fan-ins — no cross-shard message leakage, nothing lost.
+        let n = 6;
+        let m = 3;
+        let per_client = 40u64;
+        let (mut servers, router, ports, _master) = sharded_channel_transport(n, m);
+        let mut senders = Vec::new();
+        for (i, mut p) in ports.into_iter().enumerate() {
+            senders.push(std::thread::spawn(move || {
+                for round in 0..per_client {
+                    p.send(&draft(i as u32, round)).unwrap();
+                }
+            }));
+        }
+        let mut counts = vec![0u64; n];
+        for (shard, server) in servers.iter_mut().enumerate() {
+            let mut got = 0u64;
+            let want = per_client * router.members_of(shard).len() as u64;
+            while got < want {
+                // Alternate the two drain APIs under concurrency.
+                let batch = server.try_drain().unwrap();
+                let msgs = if batch.is_empty() {
+                    let deadline = Instant::now() + std::time::Duration::from_secs(5);
+                    match server.recv_deadline(deadline).unwrap() {
+                        Some(x) => vec![x],
+                        None => panic!("shard {shard} starved"),
+                    }
+                } else {
+                    batch
+                };
+                for (id, msg) in msgs {
+                    assert_eq!(
+                        router.shard_of(id),
+                        shard,
+                        "client {id} leaked into shard {shard}"
+                    );
+                    assert!(matches!(msg, Message::Draft(_)));
+                    counts[id] += 1;
+                    got += 1;
+                }
+            }
+            // And nothing further is queued for this shard (an Err here
+            // means disconnected-and-empty once the senders finished —
+            // queued messages are never dropped, so that also proves it).
+            assert!(server.try_drain().map(|v| v.is_empty()).unwrap_or(true));
+        }
+        for h in senders {
+            h.join().unwrap();
+        }
+        assert_eq!(counts, vec![per_client; n]);
     }
 
     #[test]

@@ -47,6 +47,10 @@ pub struct VerdictMsg {
     pub correction: u8,
     /// Next-round draft allocation S_i(t+1).
     pub next_alloc: u32,
+    /// Verification shard that served this verdict (0 outside pooled
+    /// deployments). Lets a client observe rebalancing — in a multi-host
+    /// pool this is where a redirect endpoint would ride.
+    pub shard: u32,
 }
 
 const TAG_DRAFT: u8 = 1;
@@ -156,6 +160,7 @@ impl Message {
                 w.u32(v.accepted);
                 w.u8(v.correction);
                 w.u32(v.next_alloc);
+                w.u32(v.shard);
             }
             Message::Shutdown => w.u8(TAG_SHUTDOWN),
         }
@@ -184,6 +189,7 @@ impl Message {
                 accepted: r.u32()?,
                 correction: r.u8()?,
                 next_alloc: r.u32()?,
+                shard: r.u32()?,
             }),
             TAG_SHUTDOWN => Message::Shutdown,
             t => return Err(anyhow!("wire: unknown tag {t}")),
@@ -201,7 +207,7 @@ impl Message {
                 4 + 1 + 4 + 8 + (4 + d.prefix.len()) + 4 + (4 + d.draft.len())
                     + (4 + d.q_probs.len() * 4) + 1 + 8
             }
-            Message::Verdict(_) => 4 + 1 + 4 + 8 + 4 + 1 + 4,
+            Message::Verdict(_) => 4 + 1 + 4 + 8 + 4 + 1 + 4 + 4,
             Message::Shutdown => 4 + 1,
         }
     }
@@ -238,6 +244,7 @@ mod tests {
                     accepted: rng.below(33) as u32,
                     correction: rng.below(256) as u8,
                     next_alloc: rng.below(33) as u32,
+                    shard: rng.below(8) as u32,
                 }),
                 Message::Shutdown,
             ];

@@ -89,16 +89,18 @@ impl Estimators {
         }
     }
 
-    /// Sparse wave update: `(client_id, (mean_ratio, goodput))` pairs for
-    /// the participating subset. Convenience wrapper that scatters into the
-    /// dense [`Estimators::update_round`] form.
-    pub fn update_wave(&mut self, obs: &[(usize, (f64, f64))]) {
-        let mut dense: Vec<Option<(f64, f64)>> = vec![None; self.len()];
-        for &(i, o) in obs {
-            assert!(i < dense.len(), "client_id {i} out of range");
-            dense[i] = Some(o);
-        }
-        self.update_round(&dense);
+    /// Per-client observation count — the decay-schedule clock. A sharded
+    /// pool hands this off on client migration so `Smoothing::Decay`
+    /// continues from the client's real history instead of restarting at
+    /// η(1)/β(1) on the new shard.
+    pub fn observations(&self, i: usize) -> u64 {
+        self.t_client[i]
+    }
+
+    /// Seed a migrated-in client's observation count (see
+    /// [`Estimators::observations`]).
+    pub fn set_observations(&mut self, i: usize, t: u64) {
+        self.t_client[i] = t;
     }
 
     /// Estimated next-round goodput x̂_i(t+1) for a hypothetical draft
@@ -167,14 +169,17 @@ mod tests {
     }
 
     #[test]
-    fn sparse_wave_update_matches_dense() {
-        let mut dense = fixed(3, 0.25, 0.5);
-        let mut sparse = fixed(3, 0.25, 0.5);
-        dense.update_round(&[Some((0.9, 3.0)), None, Some((0.4, 2.0))]);
-        sparse.update_wave(&[(0, (0.9, 3.0)), (2, (0.4, 2.0))]);
-        assert_eq!(dense.alpha_hat, sparse.alpha_hat);
-        assert_eq!(dense.x_beta, sparse.x_beta);
-        assert_eq!(dense.round(), sparse.round());
+    fn observation_clock_is_transferable() {
+        // The migration hand-off: carrying t_client across keeps a decay
+        // schedule at the client's real learning rate.
+        let mut e = fixed(2, 0.25, 0.5);
+        e.update_round(&[Some((0.9, 3.0)), None]);
+        e.update_round(&[Some((0.8, 2.0)), None]);
+        assert_eq!(e.observations(0), 2);
+        assert_eq!(e.observations(1), 0);
+        let mut other = fixed(2, 0.25, 0.5);
+        other.set_observations(0, e.observations(0));
+        assert_eq!(other.observations(0), 2);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use super::utility::{LogUtility, Utility};
 use crate::spec::math::{expected_goodput, marginal_gain};
 
 /// One allocation problem instance.
@@ -136,6 +137,81 @@ pub fn solve_dp(input: &AllocInput) -> Vec<usize> {
         b -= alloc[i];
     }
     alloc
+}
+
+/// Hierarchical water-filling for the sharded verifier pool: split a
+/// total budget across M shards. Each shard first receives a *floor*
+/// (normally its member count, so no shard's clients are starved outright),
+/// then the remainder is distributed by the same exact greedy marginal-gain
+/// rule as the per-client allocation — shard weight `w_s = Σ_{i∈s} ∇U_i`
+/// and a representative acceptance rate `α_s` stand in for the client
+/// terms. Invariants: `Σ out ≤ total` and `out[s] ≤ caps[s]`.
+///
+/// Degenerate inputs are first-class: an empty shard passes `floor = 0`,
+/// `weight = 0`, `cap = 0` and receives nothing.
+pub fn hierarchical_split(
+    total: usize,
+    floors: &[usize],
+    weights: &[f64],
+    alphas: &[f64],
+    caps: &[usize],
+) -> Vec<usize> {
+    let m = floors.len();
+    debug_assert_eq!(m, weights.len());
+    debug_assert_eq!(m, alphas.len());
+    debug_assert_eq!(m, caps.len());
+    let mut out = vec![0usize; m];
+    let mut left = total;
+    for i in 0..m {
+        let f = floors[i].min(caps[i]).min(left);
+        out[i] = f;
+        left -= f;
+    }
+    if left > 0 {
+        let rem_caps: Vec<usize> = caps.iter().zip(&out).map(|(&c, &o)| c - o).collect();
+        let extra = solve_greedy(&AllocInput {
+            weights,
+            alphas,
+            capacity: left,
+            max_per_client: &rem_caps,
+        });
+        for i in 0..m {
+            out[i] += extra[i];
+        }
+    }
+    out
+}
+
+/// The pool controller's budget rule, shared verbatim by the live
+/// verifier pool (`coordinator/pool.rs`) and the sharded analytic
+/// simulator so the two can never apply different split policies: per
+/// shard, floor = member count, weight = Σ member ∇U(X_i^β) (log
+/// utility), representative α = member mean (prior 0.5 when empty), cap =
+/// member count × `max_draft`; then [`hierarchical_split`].
+pub fn split_budget_by_members(
+    total: usize,
+    max_draft: usize,
+    members_per_shard: &[Vec<usize>],
+    alpha_hat: &[f64],
+    x_beta: &[f64],
+) -> Vec<usize> {
+    let u = LogUtility;
+    let m = members_per_shard.len();
+    let mut floors = Vec::with_capacity(m);
+    let mut weights = Vec::with_capacity(m);
+    let mut alphas = Vec::with_capacity(m);
+    let mut caps = Vec::with_capacity(m);
+    for members in members_per_shard {
+        floors.push(members.len());
+        weights.push(members.iter().map(|&i| u.grad(x_beta[i])).sum());
+        alphas.push(if members.is_empty() {
+            0.5
+        } else {
+            members.iter().map(|&i| alpha_hat[i]).sum::<f64>() / members.len() as f64
+        });
+        caps.push(members.len() * max_draft);
+    }
+    hierarchical_split(total, &floors, &weights, &alphas, &caps)
 }
 
 /// Objective value Σ w_i μ(α_i, S_i) of an allocation.
@@ -269,6 +345,67 @@ mod tests {
         let a1 = solve_greedy(&input);
         let a2 = solve_greedy(&input);
         assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn prop_greedy_matches_dp_under_degenerate_caps_and_weights() {
+        // Sharding produces degenerate wave membership: absent clients are
+        // capped at 0 and fully-served clients carry weight 0. The greedy
+        // allocator must stay exact (== the DP oracle) and must never hand
+        // tokens to a zero-cap client.
+        proptest::check("greedy_degenerate", proptest::default_cases(), |rng| {
+            let (mut w, a, c, mut caps) = random_instance(rng, 8, 40);
+            for i in 0..w.len() {
+                if rng.bool(0.35) {
+                    caps[i] = 0;
+                }
+                if rng.bool(0.35) {
+                    w[i] = 0.0;
+                }
+            }
+            let input = AllocInput { weights: &w, alphas: &a, capacity: c, max_per_client: &caps };
+            let g = solve_greedy(&input);
+            let d = solve_dp(&input);
+            let og = objective(&input, &g);
+            let od = objective(&input, &d);
+            assert!(
+                (og - od).abs() < 1e-7 * (1.0 + od.abs()),
+                "greedy {og} vs dp {od}\nw={w:?}\na={a:?}\nc={c} caps={caps:?}\ng={g:?} d={d:?}"
+            );
+            for i in 0..caps.len() {
+                assert!(g[i] <= caps[i], "cap violated: {g:?} vs {caps:?}");
+                if w[i] == 0.0 {
+                    assert_eq!(g[i], 0, "zero-weight client got budget: {g:?}");
+                }
+            }
+            assert!(g.iter().sum::<usize>() <= c);
+        });
+    }
+
+    #[test]
+    fn hierarchical_split_floors_then_waterfills() {
+        // Two shards of 2 members each, one far more pressured.
+        let out = hierarchical_split(16, &[2, 2], &[8.0, 1.0], &[0.7, 0.7], &[32, 32]);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().sum::<usize>() <= 16);
+        assert!(out[0] >= 2 && out[1] >= 2, "floors first: {out:?}");
+        assert!(out[0] > out[1], "pressure must attract budget: {out:?}");
+    }
+
+    #[test]
+    fn hierarchical_split_degenerate_shards() {
+        // Empty shard (floor/weight/cap all 0) gets nothing; tight totals
+        // never overflow.
+        let out = hierarchical_split(3, &[2, 0, 2], &[1.0, 0.0, 1.0], &[0.5, 0.5, 0.5], &[8, 0, 8]);
+        assert_eq!(out[1], 0);
+        assert_eq!(out.iter().sum::<usize>(), 3);
+        // Total smaller than the floors: grant in shard order, never more
+        // than the total.
+        let out = hierarchical_split(1, &[2, 2], &[1.0, 1.0], &[0.5, 0.5], &[8, 8]);
+        assert_eq!(out.iter().sum::<usize>(), 1);
+        // Zero total.
+        let out = hierarchical_split(0, &[2, 2], &[1.0, 1.0], &[0.5, 0.5], &[8, 8]);
+        assert_eq!(out, vec![0, 0]);
     }
 
     #[test]

@@ -8,5 +8,7 @@ pub mod utility;
 
 pub use baselines::{Allocator, FixedSAlloc, GoodSpeedAlloc, RandomSAlloc};
 pub use estimator::Estimators;
-pub use gradient::{objective, solve_dp, solve_greedy, AllocInput};
+pub use gradient::{
+    hierarchical_split, objective, solve_dp, solve_greedy, split_budget_by_members, AllocInput,
+};
 pub use utility::{AlphaFair, LinearUtility, LogUtility, Utility};

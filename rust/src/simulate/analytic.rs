@@ -4,22 +4,29 @@
 //! has a *true* time-varying acceptance rate α_i(t) (per-domain base rate,
 //! Markov domain switching), per-token acceptance indicators are drawn
 //! around it, and rejection sampling runs on those indicators. Everything
-//! above the engines — estimators, gradient scheduler, baselines, metrics —
-//! is the *same code* as the real stack, so convergence results transfer.
+//! above the engines — estimators, gradient scheduler, baselines, budget
+//! accounting, metrics — executes through the *same*
+//! [`RoundCore`](crate::coordinator::RoundCore) as the live coordinator,
+//! so convergence results transfer and the simulator cannot drift from the
+//! serving stack.
 //!
 //! Used by the Fig 4 full grid (600 iterations × 3 policies × 2 families ×
 //! {4, 8} clients), the β-sweep validating Theorem 1, and the ablations.
 //!
-//! Both coordinator modes are modeled: `step()` is one sync barrier round,
-//! `step_wave()` is one async wave under a stylized virtual-time model
-//! (per-client RTT from the scenario links, per-token draft compute, fixed
-//! verify cost) so Fig-4-style convergence studies cover sync *and* async
-//! wave dynamics without real sleeps.
+//! Three coordinator disciplines are modeled: `step()` is one sync barrier
+//! round, `step_wave()` is one async wave under a stylized virtual-time
+//! model (per-client RTT from the scenario links, per-token draft compute,
+//! fixed verify cost), and [`run_sharded`] drives one restricted simulator
+//! per verification shard under the pool controller's hierarchical budget
+//! split — the analytic counterpart of
+//! [`run_pool`](crate::coordinator::run_pool).
 
 use crate::configsys::{CoordMode, Policy, Scenario};
-use crate::metrics::recorder::{ClientRoundMetrics, Recorder, RoundRecord};
+use crate::coordinator::{RoundCore, WaveObs};
+use crate::metrics::recorder::Recorder;
 use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
-use crate::sched::baselines::{make_allocator, AllocCaps, Allocator};
+use crate::sched::baselines::Allocator;
+use crate::sched::gradient::split_budget_by_members;
 use crate::sched::Estimators;
 use crate::util::Rng;
 use crate::workload::domains::DOMAINS;
@@ -110,11 +117,16 @@ impl SimConfig {
 pub struct AnalyticSim {
     pub cfg: SimConfig,
     pub clients: Vec<SimClient>,
-    pub estimators: Estimators,
-    allocator: Box<dyn Allocator>,
+    /// The shared wave-processing core — the same estimator / scheduler /
+    /// accounting / record-emission code the live coordinator runs.
+    pub core: RoundCore,
     rng: Rng,
-    pub recorder: Recorder,
+    /// Mirror of each client's current (outstanding) allocation — what the
+    /// client would draft next wave.
     alloc: Vec<usize>,
+    /// Clients this simulator instance drives (all of them outside sharded
+    /// mode; one shard's subset under [`run_sharded`]). Always ascending.
+    members: Vec<usize>,
     round: u64,
     /// Per-client round-trip time (uplink with q payload + verdict
     /// downlink), from the scenario's links.
@@ -155,9 +167,16 @@ impl AnalyticSim {
         policy: Policy,
     ) -> AnalyticSim {
         let n = clients.len();
-        let estimators = Estimators::new(n, scenario.eta, scenario.beta);
-        let allocator = make_allocator(policy, cfg.seed ^ 0x5eed);
         let initial = (cfg.capacity / n.max(1)).min(cfg.max_draft);
+        let core = RoundCore::new(
+            n,
+            scenario.eta,
+            scenario.beta,
+            policy,
+            cfg.seed,
+            cfg.capacity,
+            initial,
+        );
         // RTT from the scenario links: uplink carries the q payload (the
         // dominant term), downlink the tiny verdict.
         let up_bytes = draft_msg_bytes(64, cfg.max_draft, 256);
@@ -174,9 +193,8 @@ impl AnalyticSim {
         AnalyticSim {
             rng: Rng::new(cfg.seed ^ 0xAAA),
             alloc: vec![initial; n],
-            estimators,
-            allocator,
-            recorder: Recorder::new(n),
+            core,
+            members: (0..n).collect(),
             clients,
             cfg,
             round: 0,
@@ -196,9 +214,36 @@ impl AnalyticSim {
         &self.rtt_s
     }
 
+    /// The run's metrics (delegates to the shared core).
+    pub fn recorder(&self) -> &Recorder {
+        &self.core.recorder
+    }
+
+    /// The core's estimators (delegates to the shared core).
+    pub fn estimators(&self) -> &Estimators {
+        &self.core.estimators
+    }
+
     /// Swap the allocation policy (utility ablations).
     pub fn set_allocator(&mut self, alloc: Box<dyn Allocator>) {
-        self.allocator = alloc;
+        self.core.set_allocator(alloc);
+    }
+
+    /// Restrict this simulator to a shard's client subset: only members
+    /// draft/verify here, and only members count toward the core's budget
+    /// reservation. `members` must be non-empty outside trivial tests.
+    pub fn set_members(&mut self, mut members: Vec<usize>) {
+        members.sort_unstable();
+        members.dedup();
+        let n = self.clients.len();
+        for i in 0..n {
+            self.core.set_member(i, members.binary_search(&i).is_ok());
+        }
+        self.members = members;
+    }
+
+    pub fn members(&self) -> &[usize] {
+        &self.members
     }
 
     /// True per-client α vector (ground truth for regret analysis).
@@ -251,69 +296,62 @@ impl AnalyticSim {
         (s, accepted, goodput, mean_ratio)
     }
 
-    /// Advance one sync barrier round (all clients); returns realized
-    /// goodputs. The RNG stream is identical to the pre-wave simulator.
+    /// Advance one sync barrier round (all members); returns realized
+    /// goodputs in member order. The RNG stream is identical to the
+    /// pre-core simulator.
     pub fn step(&mut self) -> Vec<usize> {
-        let n = self.clients.len();
-        let mut obs = Vec::with_capacity(n);
-        let mut metrics = Vec::with_capacity(n);
-        let mut goodputs = Vec::with_capacity(n);
-        for i in 0..n {
+        let members = self.members.clone();
+        let mut obs = Vec::with_capacity(members.len());
+        let mut goodputs = Vec::with_capacity(members.len());
+        for &i in &members {
             let (s, accepted, goodput, mean_ratio) = self.verify_one(i);
-            obs.push(Some((mean_ratio, goodput as f64)));
-            metrics.push((s, accepted, goodput, mean_ratio));
-            goodputs.push(goodput);
-        }
-        self.estimators.update_round(&obs);
-        let caps = AllocCaps::dense(self.cfg.capacity, vec![self.cfg.max_draft; n]);
-        self.alloc = self.allocator.allocate(&self.estimators, &caps);
-        // Virtual clock: the barrier waits for the slowest client's draft
-        // + uplink, then runs one batched verify.
-        let recv_s = (0..n)
-            .map(|i| self.rtt_s[i] + self.cfg.draft_token_s * metrics[i].0 as f64)
-            .fold(0.0f64, f64::max);
-        self.clock += recv_s + self.cfg.verify_s;
-        let clients = metrics
-            .iter()
-            .enumerate()
-            .map(|(i, &(s, accepted, goodput, mean_ratio))| ClientRoundMetrics {
+            obs.push(WaveObs {
                 client_id: i,
                 s_used: s,
                 accepted,
                 goodput,
                 mean_ratio,
-                alpha_hat: self.estimators.alpha_hat[i],
-                x_beta: self.estimators.x_beta[i],
-                next_alloc: self.alloc[i],
-            })
-            .collect();
-        self.recorder.push(RoundRecord {
-            round: self.round,
-            recv_ns: (recv_s * 1e9) as u64,
-            verify_ns: (self.cfg.verify_s * 1e9) as u64,
-            send_ns: 0,
-            clients,
-        });
+                max_next: self.cfg.max_draft,
+            });
+            goodputs.push(goodput);
+        }
+        // Virtual clock: the barrier waits for the slowest member's draft
+        // + uplink, then runs one batched verify.
+        let recv_s = obs
+            .iter()
+            .map(|o| self.rtt_s[o.client_id] + self.cfg.draft_token_s * o.s_used as f64)
+            .fold(0.0f64, f64::max);
+        let next = self.core.finish_wave(
+            self.round,
+            &obs,
+            (recv_s * 1e9) as u64,
+            (self.cfg.verify_s * 1e9) as u64,
+        );
+        for (j, &i) in members.iter().enumerate() {
+            self.alloc[i] = next[j];
+        }
+        self.clock += recv_s + self.cfg.verify_s;
         self.round += 1;
         goodputs
     }
 
     /// Advance one async wave: fire on wave-fill or the batching-window
     /// deadline (whichever comes first after the wave's first arrival),
-    /// verify the ready subset, reschedule only its members. Returns the
-    /// wave's `(client_id, goodput)` pairs.
+    /// verify the ready member subset, reschedule only its members.
+    /// Returns the wave's `(client_id, goodput)` pairs.
     pub fn step_wave(&mut self) -> Vec<(usize, usize)> {
-        let n = self.clients.len();
+        let m = self.members.len();
         // `min_wave_fill` is pre-resolved by `SimConfig::from_scenario`
         // (Scenario::effective_wave_fill); clamp defensively for
-        // hand-built configs that kept the raw `0 = all` sentinel.
+        // hand-built configs that kept the raw `0 = all` sentinel, and to
+        // the member count in sharded mode.
         let fill = if self.cfg.min_wave_fill == 0 {
-            n
+            m
         } else {
-            self.cfg.min_wave_fill.min(n)
+            self.cfg.min_wave_fill.min(m)
         };
-        // Arrival order of the in-flight drafts.
-        let mut order: Vec<usize> = (0..n).collect();
+        // Arrival order of the members' in-flight drafts.
+        let mut order: Vec<usize> = self.members.clone();
         order.sort_by(|&a, &b| self.ready_at[a].total_cmp(&self.ready_at[b]));
         let t_first = self.ready_at[order[0]];
         let deadline = t_first + self.cfg.batch_window_s;
@@ -324,69 +362,45 @@ impl AnalyticSim {
         // simply drained into this wave, like the real leader's
         // opportunistic drain.
         let fire_t = (if t_fill <= deadline { t_fill } else { deadline }).max(self.clock);
-        let mut members: Vec<usize> =
+        let mut wave_members: Vec<usize> =
             order.into_iter().filter(|&i| self.ready_at[i] <= fire_t).collect();
-        members.sort_unstable(); // verify in ascending client id
+        wave_members.sort_unstable(); // verify in ascending client id
 
-        let mut obs: Vec<(usize, (f64, f64))> = Vec::with_capacity(members.len());
-        let mut metrics = Vec::with_capacity(members.len());
-        for &i in &members {
+        let mut obs = Vec::with_capacity(wave_members.len());
+        for &i in &wave_members {
             let (s, accepted, goodput, mean_ratio) = self.verify_one(i);
-            obs.push((i, (mean_ratio, goodput as f64)));
-            metrics.push((i, s, accepted, goodput, mean_ratio));
-        }
-        self.estimators.update_wave(&obs);
-        // Allocate over the wave's live set only; absent clients'
-        // in-flight allocations stay reserved out of the budget (same
-        // invariant as the real leader: Σ alloc ≤ C at all times).
-        let mut live = vec![false; n];
-        let mut max_per_client = vec![0usize; n];
-        for &i in &members {
-            live[i] = true;
-            max_per_client[i] = self.cfg.max_draft;
-        }
-        let reserved: usize =
-            (0..n).filter(|&i| !live[i]).map(|i| self.alloc[i]).sum();
-        let caps = AllocCaps {
-            capacity: self.cfg.capacity.saturating_sub(reserved),
-            max_per_client,
-            live,
-        };
-        let wave_alloc = self.allocator.allocate(&self.estimators, &caps);
-        let t_done = fire_t + self.cfg.verify_s;
-        for &i in &members {
-            self.alloc[i] = wave_alloc[i];
-            self.ready_at[i] =
-                t_done + self.rtt_s[i] + self.cfg.draft_token_s * wave_alloc[i] as f64;
-        }
-        let clients = metrics
-            .iter()
-            .map(|&(i, s, accepted, goodput, mean_ratio)| ClientRoundMetrics {
+            obs.push(WaveObs {
                 client_id: i,
                 s_used: s,
                 accepted,
                 goodput,
                 mean_ratio,
-                alpha_hat: self.estimators.alpha_hat[i],
-                x_beta: self.estimators.x_beta[i],
-                next_alloc: wave_alloc[i],
-            })
-            .collect();
-        self.recorder.push(RoundRecord {
-            round: self.round,
-            recv_ns: ((fire_t - self.clock).max(0.0) * 1e9) as u64,
-            verify_ns: (self.cfg.verify_s * 1e9) as u64,
-            send_ns: 0,
-            clients,
-        });
+                max_next: self.cfg.max_draft,
+            });
+        }
+        // Sparse estimator update + allocation over the wave's live set
+        // with absent members' in-flight grants reserved (the same core
+        // invariant the real leader enforces: Σ alloc ≤ C at all times).
+        let next = self.core.finish_wave(
+            self.round,
+            &obs,
+            (((fire_t - self.clock).max(0.0)) * 1e9) as u64,
+            (self.cfg.verify_s * 1e9) as u64,
+        );
+        let t_done = fire_t + self.cfg.verify_s;
+        for (j, &i) in wave_members.iter().enumerate() {
+            self.alloc[i] = next[j];
+            self.ready_at[i] =
+                t_done + self.rtt_s[i] + self.cfg.draft_token_s * next[j] as f64;
+        }
         self.clock = t_done;
         self.round += 1;
-        metrics.iter().map(|&(i, _, _, g, _)| (i, g)).collect()
+        obs.iter().map(|o| (o.client_id, o.goodput)).collect()
     }
 
     /// Run the configured workload: `rounds` barrier rounds in sync mode,
     /// or waves until the same total verification budget
-    /// (`rounds × num_clients` client-rounds) is consumed in async mode.
+    /// (`rounds × |members|` client-rounds) is consumed in async mode.
     pub fn run(&mut self) {
         match self.cfg.mode {
             CoordMode::Sync => {
@@ -395,13 +409,135 @@ impl AnalyticSim {
                 }
             }
             CoordMode::Async => {
-                let budget = self.cfg.rounds * self.clients.len() as u64;
-                while self.recorder.participation().iter().sum::<u64>() < budget {
+                let budget = self.cfg.rounds * self.members.len() as u64;
+                while self.recorder().participation().iter().sum::<u64>() < budget {
                     self.step_wave();
                 }
             }
         }
     }
+}
+
+/// Outcome of the sharded analytic run: one restricted simulator per
+/// verification shard plus the final hierarchical budget split.
+pub struct ShardedSimOutcome {
+    pub shards: Vec<AnalyticSim>,
+    pub budgets: Vec<usize>,
+}
+
+impl ShardedSimOutcome {
+    /// Aggregate virtual-time goodput rate: total tokens over the slowest
+    /// shard's clock (shards run in parallel in a real pool).
+    pub fn aggregate_rate(&self) -> f64 {
+        let tokens: f64 = self
+            .shards
+            .iter()
+            .map(|s| s.recorder().cum_goodput().iter().sum::<f64>())
+            .sum();
+        let wall = self
+            .shards
+            .iter()
+            .map(|s| s.virtual_time())
+            .fold(0.0f64, f64::max);
+        tokens / wall.max(1e-12)
+    }
+
+    /// Merged per-client average goodput per participated wave (clients
+    /// are disjoint across shards).
+    pub fn avg_goodput(&self) -> Vec<f64> {
+        let n = self.shards.first().map_or(0, |s| s.clients.len());
+        let mut out = vec![0.0; n];
+        for sim in &self.shards {
+            for &i in sim.members() {
+                out[i] = sim.recorder().avg_goodput()[i];
+            }
+        }
+        out
+    }
+
+    /// Mean goodput per delivered verdict (steady-state tokens/verdict —
+    /// the timing-free quantity that must agree with the live pool).
+    pub fn goodput_per_verdict(&self) -> f64 {
+        let tokens: f64 = self
+            .shards
+            .iter()
+            .map(|s| s.recorder().cum_goodput().iter().sum::<f64>())
+            .sum();
+        let verdicts: u64 = self
+            .shards
+            .iter()
+            .map(|s| s.recorder().participation().iter().sum::<u64>())
+            .sum();
+        tokens / (verdicts as f64).max(1.0)
+    }
+}
+
+/// Hierarchical budgets for the analytic pool — the *same* split rule the
+/// live controller applies (`sched::gradient::split_budget_by_members`),
+/// fed from the shard sims' own estimator state. Client i's estimates
+/// live on the (single) shard that owns it, so gathering per-shard keeps
+/// the published table exact.
+fn sharded_budgets(capacity: usize, max_draft: usize, shards: &[AnalyticSim]) -> Vec<usize> {
+    let n = shards.first().map_or(0, |s| s.clients.len());
+    let mut alpha_hat = vec![0.5; n];
+    let mut x_beta = vec![1.0; n];
+    let mut members_per_shard = Vec::with_capacity(shards.len());
+    for sim in shards {
+        let est = sim.estimators();
+        for &i in sim.members() {
+            alpha_hat[i] = est.alpha_hat[i];
+            x_beta[i] = est.x_beta[i];
+        }
+        members_per_shard.push(sim.members().to_vec());
+    }
+    split_budget_by_members(capacity, max_draft, &members_per_shard, &alpha_hat, &x_beta)
+}
+
+/// Analytic counterpart of the live verifier pool: `num_verifiers`
+/// restricted simulators (client i on shard i mod M), each consuming its
+/// budget slice, with the split recomputed every
+/// `shard_rebalance_every` waves from the shards' own estimator state.
+/// Runs until the global verification budget (`rounds × num_clients`
+/// verdicts) is consumed. Client migration is not modeled — the live pool
+/// additionally rebalances membership; the steady-state scheduling and
+/// accounting are the shared-core code either way.
+pub fn run_sharded(scenario: &Scenario, policy: Policy) -> ShardedSimOutcome {
+    let m = scenario.num_verifiers.max(1);
+    let n = scenario.num_clients;
+    let mut shards: Vec<AnalyticSim> = (0..m)
+        .map(|s| {
+            let mut sim = AnalyticSim::from_scenario(scenario, policy);
+            sim.set_members((0..n).filter(|i| i % m == s).collect());
+            sim
+        })
+        .collect();
+    let mut budgets = sharded_budgets(scenario.capacity, scenario.max_draft, &shards);
+    for (sim, &b) in shards.iter_mut().zip(&budgets) {
+        sim.core.set_capacity(b);
+    }
+    let total: u64 = scenario.rounds.saturating_mul(n as u64);
+    let every = scenario.shard_rebalance_every;
+    let mut delivered = 0u64;
+    let mut waves = 0u64;
+    'run: loop {
+        for s in 0..m {
+            if shards[s].members().is_empty() {
+                continue;
+            }
+            delivered += shards[s].step_wave().len() as u64;
+            waves += 1;
+            if every > 0 && waves % every == 0 {
+                budgets = sharded_budgets(scenario.capacity, scenario.max_draft, &shards);
+                for (sim, &b) in shards.iter_mut().zip(&budgets) {
+                    sim.core.set_capacity(b);
+                }
+            }
+            if delivered >= total {
+                break 'run;
+            }
+        }
+    }
+    ShardedSimOutcome { shards, budgets }
 }
 
 #[cfg(test)]
@@ -420,8 +556,8 @@ mod tests {
     fn runs_fast_and_respects_capacity() {
         let mut s = sim(Policy::GoodSpeed, 8, 300);
         s.run();
-        assert_eq!(s.recorder.rounds.len(), 300);
-        for r in &s.recorder.rounds {
+        assert_eq!(s.recorder().rounds.len(), 300);
+        for r in &s.recorder().rounds {
             let used: usize = r.clients.iter().map(|c| c.s_used).sum();
             assert!(used <= 20);
         }
@@ -436,7 +572,7 @@ mod tests {
         }
         s.run();
         for (i, c) in s.clients.iter().enumerate() {
-            let est = s.estimators.alpha_hat[i];
+            let est = s.estimators().alpha_hat[i];
             let truth = c.true_alpha();
             assert!(
                 (est - truth).abs() < 0.12,
@@ -454,7 +590,7 @@ mod tests {
         for p in [Policy::GoodSpeed, Policy::FixedS, Policy::RandomS] {
             let mut s = sim(p, 8, 600);
             s.run();
-            values.push(s.recorder.utility_of_avg(&u));
+            values.push(s.recorder().utility_of_avg(&u));
         }
         assert!(
             values[0] > values[1] && values[0] > values[2],
@@ -474,7 +610,7 @@ mod tests {
         let mut curve = Vec::new();
         for _ in 0..600 {
             s.step();
-            curve.push(s.recorder.utility_of_avg(&u));
+            curve.push(s.recorder().utility_of_avg(&u));
         }
         let tail = &curve[500..];
         let (lo, hi) = tail
@@ -507,10 +643,10 @@ mod tests {
         s.cfg.mode = CoordMode::Async;
         s.cfg.min_wave_fill = 2;
         s.run();
-        let delivered: u64 = s.recorder.participation().iter().sum();
+        let delivered: u64 = s.recorder().participation().iter().sum();
         assert!(delivered >= 400 && delivered < 400 + 4);
         // Waves carry id-ascending subsets and virtual time advances.
-        for r in &s.recorder.rounds {
+        for r in &s.recorder().rounds {
             assert!(!r.clients.is_empty());
             for w in r.clients.windows(2) {
                 assert!(w[0].client_id < w[1].client_id);
@@ -526,10 +662,10 @@ mod tests {
         s.run();
         let n = s.clients.len();
         let partial =
-            s.recorder.rounds.iter().filter(|r| r.clients.len() < n).count();
+            s.recorder().rounds.iter().filter(|r| r.clients.len() < n).count();
         assert!(partial > 0, "async mode must fire partial waves around the straggler");
         // The fast clients participate in more waves than the straggler.
-        let p = s.recorder.participation();
+        let p = s.recorder().participation().to_vec();
         assert!(p[1] > p[0] && p[2] > p[0] && p[3] > p[0], "{p:?}");
     }
 
@@ -547,14 +683,14 @@ mod tests {
         let tokens = |r: &crate::metrics::recorder::Recorder| -> f64 {
             r.cum_goodput().iter().sum()
         };
-        let sync_rate = tokens(&sync.recorder) / sync.virtual_time();
-        let async_rate = tokens(&asy.recorder) / asy.virtual_time();
+        let sync_rate = tokens(sync.recorder()) / sync.virtual_time();
+        let async_rate = tokens(asy.recorder()) / asy.virtual_time();
         assert!(
             async_rate > sync_rate,
             "async {async_rate:.1} tok/s must beat sync {sync_rate:.1} tok/s"
         );
-        let j_sync = jain_index(&sync.recorder.avg_accepted());
-        let j_async = jain_index(&asy.recorder.avg_accepted());
+        let j_sync = jain_index(&sync.recorder().avg_accepted());
+        let j_async = jain_index(&asy.recorder().avg_accepted());
         assert!(
             (j_sync - j_async).abs() <= 0.05 * j_sync,
             "fairness drift too large: sync {j_sync:.4} vs async {j_async:.4}"
@@ -576,5 +712,70 @@ mod tests {
             }
         }
         assert!(changed, "α must move on domain switches");
+    }
+
+    #[test]
+    fn member_restriction_touches_only_members() {
+        let mut s = sim(Policy::GoodSpeed, 6, 10);
+        s.set_members(vec![0, 2, 4]);
+        s.core.set_capacity(10);
+        for _ in 0..10 {
+            s.step_wave();
+        }
+        let part = s.recorder().participation().to_vec();
+        assert!(part[0] > 0 && part[2] > 0 && part[4] > 0, "{part:?}");
+        assert_eq!(part[1] + part[3] + part[5], 0, "{part:?}");
+        // Non-members' estimators never moved.
+        for i in [1usize, 3, 5] {
+            assert!((s.estimators().alpha_hat[i] - 0.5).abs() < 1e-12);
+        }
+        // Member waves respect the shard budget slice.
+        for r in &s.recorder().rounds {
+            let used: usize = r.clients.iter().map(|c| c.s_used).sum();
+            assert!(used <= 10, "{used}");
+        }
+    }
+
+    #[test]
+    fn sharded_run_consumes_budget_and_splits_it() {
+        let mut s = Scenario::preset("sharded").unwrap();
+        s.rounds = 120;
+        s.num_verifiers = 4;
+        let out = run_sharded(&s, Policy::GoodSpeed);
+        assert_eq!(out.shards.len(), 4);
+        // Budget split conserves the global capacity.
+        assert!(out.budgets.iter().sum::<usize>() <= s.capacity);
+        assert!(out.budgets.iter().all(|&b| b >= 2), "{:?}", out.budgets);
+        // The global verification budget is consumed (± one wave/shard).
+        let delivered: u64 = out
+            .shards
+            .iter()
+            .map(|sh| sh.recorder().participation().iter().sum::<u64>())
+            .sum();
+        let total = s.rounds * s.num_clients as u64;
+        assert!(delivered >= total && delivered < total + s.num_clients as u64);
+        // Every client made progress on exactly one shard.
+        let avg = out.avg_goodput();
+        assert!(avg.iter().all(|&g| g >= 1.0), "{avg:?}");
+        assert!(out.goodput_per_verdict() >= 1.0);
+        assert!(out.aggregate_rate() > 0.0);
+    }
+
+    #[test]
+    fn sharded_matches_single_shard_goodput_per_verdict() {
+        // The shared-core agreement check: tokens per verdict must be in
+        // the same ballpark for M = 1 and M = 4 (same α process, same
+        // scheduler, proportionally split budget).
+        let mut s = Scenario::preset("sharded").unwrap();
+        s.rounds = 150;
+        s.num_verifiers = 1;
+        let one = run_sharded(&s, Policy::GoodSpeed);
+        s.num_verifiers = 4;
+        let four = run_sharded(&s, Policy::GoodSpeed);
+        let (g1, g4) = (one.goodput_per_verdict(), four.goodput_per_verdict());
+        assert!(
+            (g1 - g4).abs() <= 0.15 * g1,
+            "per-verdict goodput drifted: M=1 {g1:.3} vs M=4 {g4:.3}"
+        );
     }
 }

@@ -5,5 +5,5 @@
 pub mod analytic;
 pub mod fluid;
 
-pub use analytic::{AnalyticSim, SimClient, SimConfig};
+pub use analytic::{run_sharded, AnalyticSim, ShardedSimOutcome, SimClient, SimConfig};
 pub use fluid::{optimal_allocation, FluidSim};

@@ -193,6 +193,24 @@ mod tests {
     }
 
     #[test]
+    fn jain_edge_cases() {
+        // This is the *single* Jain implementation — experiments, metrics,
+        // the simulator, and the benches all import it from here.
+        // Empty slice: vacuously fair.
+        assert!((jain_index(&[]) - 1.0).abs() < 1e-12);
+        // Single client: always perfectly fair, whatever the value.
+        assert!((jain_index(&[7.3]) - 1.0).abs() < 1e-12);
+        assert!((jain_index(&[0.0]) - 1.0).abs() < 1e-12);
+        // All-equal vectors are fair at any scale and length.
+        for n in [2usize, 5, 64] {
+            let xs = vec![0.25; n];
+            assert!((jain_index(&xs) - 1.0).abs() < 1e-12, "n = {n}");
+        }
+        // All-zero (no goodput anywhere) degenerates to fair, not NaN.
+        assert!((jain_index(&[0.0, 0.0, 0.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn quantile_interpolates() {
         let xs = [1.0, 2.0, 3.0, 4.0];
         assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);

@@ -26,7 +26,7 @@ fn stochastic_system_concentrates_near_fluid_optimum() {
     let (x_star, _) = optimal_allocation(&alphas, s.capacity, s.max_draft);
     sim.run();
     let dist: f64 = sim
-        .estimators
+        .estimators()
         .x_beta
         .iter()
         .zip(&x_star)
@@ -38,7 +38,7 @@ fn stochastic_system_concentrates_near_fluid_optimum() {
         dist / norm < 0.25,
         "‖X^β − x*‖/‖x*‖ = {:.3} (X^β = {:?}, x* = {:?})",
         dist / norm,
-        sim.estimators.x_beta,
+        sim.estimators().x_beta,
         x_star
     );
 }
@@ -56,7 +56,7 @@ fn smaller_beta_concentrates_tighter() {
         let alphas = sim.true_alphas();
         let (x_star, _) = optimal_allocation(&alphas, s.capacity, s.max_draft);
         sim.run();
-        let tail = &sim.recorder.rounds[3000..];
+        let tail = &sim.recorder().rounds[3000..];
         tail.iter()
             .map(|r| {
                 r.clients
@@ -88,7 +88,7 @@ fn fig4_shape_exploration_then_dominance() {
         let mut curve = Vec::new();
         for _ in 0..600 {
             sim.step();
-            curve.push(sim.recorder.utility_of_avg(&LogUtility));
+            curve.push(sim.recorder().utility_of_avg(&LogUtility));
         }
         curve
     };
