@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
             draft_tok: vec![65i32; b * k],
             q_probs: vec![1.0 / v as f32; b * k * v],
             pos0: vec![40i32; b],
+            parent: goodspeed::runtime::chain_parent_array(b, k),
             k,
             vocab: v,
         };

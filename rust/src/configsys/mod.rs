@@ -4,4 +4,4 @@ pub mod json;
 pub mod scenario;
 
 pub use json::Value;
-pub use scenario::{CoordMode, LinkConfig, Policy, Scenario, Smoothing};
+pub use scenario::{CoordMode, LinkConfig, Policy, Scenario, Smoothing, SpecShape};

@@ -76,6 +76,57 @@ impl CoordMode {
     }
 }
 
+/// Speculation topology each draft server spends its node budget on.
+///
+/// The scheduler (eq. 5) always allocates a per-client *node* budget
+/// `S_i(t)`; the shape decides how those nodes are arranged:
+///
+/// * `Chain` — the paper's linear draft (bit-identical to the pre-tree
+///   stack: same RNG streams, call order, and wire bytes);
+/// * `Tree { arity, depth }` — a fixed branching profile: every level up
+///   to `depth` gives each frontier node `arity` sibling candidates,
+///   raising the expected accepted depth per verified node when the
+///   acceptance rate is modest (`spec::expected_tree_goodput`);
+/// * `Adaptive` — each client picks its own (arity, depth) profile from
+///   its observed acceptance rate (`spec::tree::adaptive_profile`):
+///   low-α clients branch wide, high-α clients go deep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpecShape {
+    Chain,
+    Tree { arity: usize, depth: usize },
+    Adaptive,
+}
+
+impl SpecShape {
+    /// Parse `chain`, `adaptive`, `tree` (the 2×8 default), or
+    /// `tree:<arity>x<depth>` (e.g. `tree:3x4`).
+    pub fn parse(s: &str) -> Option<SpecShape> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "chain" | "linear" => return Some(SpecShape::Chain),
+            "adaptive" | "auto" => return Some(SpecShape::Adaptive),
+            "tree" => return Some(SpecShape::Tree { arity: 2, depth: 8 }),
+            _ => {}
+        }
+        let spec = s.strip_prefix("tree:")?;
+        let (a, d) = spec.split_once('x')?;
+        Some(SpecShape::Tree { arity: a.parse().ok()?, depth: d.parse().ok()? })
+    }
+
+    /// Canonical string form (round-trips through [`SpecShape::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            SpecShape::Chain => "chain".into(),
+            SpecShape::Tree { arity, depth } => format!("tree:{arity}x{depth}"),
+            SpecShape::Adaptive => "adaptive".into(),
+        }
+    }
+
+    pub fn is_chain(&self) -> bool {
+        matches!(self, SpecShape::Chain)
+    }
+}
+
 /// Per-client network link (edge → verification server).
 #[derive(Clone, Debug)]
 pub struct LinkConfig {
@@ -155,6 +206,10 @@ pub struct Scenario {
     /// migrating one client from the most- to the least-pressured shard)
     /// every this many waves. `0` = never rebalance (static split).
     pub shard_rebalance_every: u64,
+    /// Speculation topology (chain | tree{arity, depth} | adaptive). The
+    /// node budget `S_i(t)` is allocated the same way either way; the
+    /// shape decides how each client arranges the granted nodes.
+    pub spec_shape: SpecShape,
 }
 
 impl Scenario {
@@ -185,6 +240,24 @@ impl Scenario {
         }
         if self.draft_models.is_empty() || self.domains.is_empty() {
             return Err("draft_models and domains must be non-empty".into());
+        }
+        // Unknown domains used to panic deep inside the workload layer;
+        // they are a configuration error and surface here instead.
+        for d in &self.domains {
+            if !crate::workload::domains::is_domain(d) {
+                return Err(format!(
+                    "unknown domain '{d}' (known: {})",
+                    crate::workload::domains::DOMAINS.join(", ")
+                ));
+            }
+        }
+        if let SpecShape::Tree { arity, depth } = self.spec_shape {
+            if !(1..=8).contains(&arity) {
+                return Err("spec_shape tree arity must be in 1..=8".into());
+            }
+            if !(1..=32).contains(&depth) {
+                return Err("spec_shape tree depth must be in 1..=32".into());
+            }
         }
         if !(0.0..=1.0).contains(&self.domain_stickiness) {
             return Err("domain_stickiness must be in [0,1]".into());
@@ -252,6 +325,7 @@ impl Scenario {
                 min_wave_fill: 0,
                 num_verifiers: 1,
                 shard_rebalance_every: 0,
+                spec_shape: SpecShape::Chain,
             },
             // Table I row 2: Qwen3-14B / 0.6B+1.7B, C ∈ {16,20}, 8 clients, 150 tok
             "qwen-8c-150" => Scenario {
@@ -274,6 +348,7 @@ impl Scenario {
                 min_wave_fill: 0,
                 num_verifiers: 1,
                 shard_rebalance_every: 0,
+                spec_shape: SpecShape::Chain,
             },
             // Table I row 3: Llama-70B / 1B+3B, C ∈ {16,20}, 8 clients, 150 tok
             "llama-8c-150" => Scenario {
@@ -296,6 +371,7 @@ impl Scenario {
                 min_wave_fill: 0,
                 num_verifiers: 1,
                 shard_rebalance_every: 0,
+                spec_shape: SpecShape::Chain,
             },
             // Fast preset for tests and smoke runs.
             "smoke" => Scenario {
@@ -318,6 +394,7 @@ impl Scenario {
                 min_wave_fill: 0,
                 num_verifiers: 1,
                 shard_rebalance_every: 0,
+                spec_shape: SpecShape::Chain,
             },
             // Straggler study: one client with a 10× slower uplink. In sync
             // mode every round stalls on that link; async mode lets the
@@ -348,6 +425,7 @@ impl Scenario {
                     min_wave_fill: 2,
                     num_verifiers: 1,
                     shard_rebalance_every: 0,
+                    spec_shape: SpecShape::Chain,
                 }
             }
             // Sharded-pool scale-up study: 8 heterogeneous clients whose
@@ -384,8 +462,36 @@ impl Scenario {
                     min_wave_fill: 0,
                     num_verifiers: 2,
                     shard_rebalance_every: 16,
+                    spec_shape: SpecShape::Chain,
                 }
             }
+            // Tree-speculation study: four clients drafting with the weak
+            // nano model on moderate-acceptance domains — the α ≈ 0.45–0.6
+            // regime where a binary profile's sibling retries raise the
+            // per-level advance probability enough to beat the chain at
+            // equal node budget (see `spec::expected_tree_goodput`).
+            "tree" => Scenario {
+                id: id.into(),
+                family: "qwen".into(),
+                num_clients: 4,
+                capacity: 24,
+                max_new_tokens: 40,
+                draft_models: vec!["qwen-draft-nano".into()],
+                domains: vec!["gsm8k".into(), "cnn".into(), "orca".into(), "arena".into()],
+                domain_stickiness: 0.85,
+                eta: Smoothing::Fixed(0.3),
+                beta: Smoothing::Fixed(0.5),
+                max_draft: 16,
+                rounds: 200,
+                seed,
+                links: Scenario::default_links(4, seed),
+                coord_mode: CoordMode::Sync,
+                batch_window_us: 500,
+                min_wave_fill: 0,
+                num_verifiers: 1,
+                shard_rebalance_every: 0,
+                spec_shape: SpecShape::Tree { arity: 2, depth: 8 },
+            },
             _ => return None,
         };
         s.validate().expect("preset must validate");
@@ -395,8 +501,8 @@ impl Scenario {
         Some(s)
     }
 
-    pub fn preset_ids() -> [&'static str; 6] {
-        ["qwen-4c-50", "qwen-8c-150", "llama-8c-150", "smoke", "straggler", "sharded"]
+    pub fn preset_ids() -> [&'static str; 7] {
+        ["qwen-4c-50", "qwen-8c-150", "llama-8c-150", "smoke", "straggler", "sharded", "tree"]
     }
 
     /// Serialize for results provenance.
@@ -419,6 +525,7 @@ impl Scenario {
             ("min_wave_fill", Value::Num(self.min_wave_fill as f64)),
             ("num_verifiers", Value::Num(self.num_verifiers as f64)),
             ("shard_rebalance_every", Value::Num(self.shard_rebalance_every as f64)),
+            ("spec_shape", Value::Str(self.spec_shape.label())),
         ])
     }
 }
@@ -554,6 +661,58 @@ mod tests {
         assert!(bad.validate().is_err());
         bad.num_verifiers = bad.num_clients;
         assert!(bad.validate().is_ok());
+    }
+
+    #[test]
+    fn spec_shape_parse_label_roundtrip() {
+        assert_eq!(SpecShape::parse("chain"), Some(SpecShape::Chain));
+        assert_eq!(SpecShape::parse("Adaptive"), Some(SpecShape::Adaptive));
+        assert_eq!(SpecShape::parse("tree"), Some(SpecShape::Tree { arity: 2, depth: 8 }));
+        assert_eq!(SpecShape::parse("tree:3x4"), Some(SpecShape::Tree { arity: 3, depth: 4 }));
+        assert_eq!(SpecShape::parse("tree:x4"), None);
+        assert_eq!(SpecShape::parse("bush"), None);
+        for shape in [
+            SpecShape::Chain,
+            SpecShape::Adaptive,
+            SpecShape::Tree { arity: 3, depth: 5 },
+        ] {
+            assert_eq!(SpecShape::parse(&shape.label()), Some(shape));
+        }
+        assert!(SpecShape::Chain.is_chain());
+        assert!(!SpecShape::Adaptive.is_chain());
+    }
+
+    #[test]
+    fn tree_preset_and_shape_validation() {
+        let t = Scenario::preset("tree").unwrap();
+        assert_eq!(t.spec_shape, SpecShape::Tree { arity: 2, depth: 8 });
+        assert_eq!(t.num_clients, 4);
+        // Every other preset stays on the chain so existing experiments
+        // reproduce bit-for-bit.
+        for id in Scenario::preset_ids() {
+            let p = Scenario::preset(id).unwrap();
+            if id != "tree" {
+                assert_eq!(p.spec_shape, SpecShape::Chain, "{id}");
+            }
+        }
+        let mut bad = Scenario::preset("smoke").unwrap();
+        bad.spec_shape = SpecShape::Tree { arity: 0, depth: 4 };
+        assert!(bad.validate().is_err());
+        bad.spec_shape = SpecShape::Tree { arity: 2, depth: 0 };
+        assert!(bad.validate().is_err());
+        bad.spec_shape = SpecShape::Tree { arity: 9, depth: 4 };
+        assert!(bad.validate().is_err());
+        bad.spec_shape = SpecShape::Tree { arity: 4, depth: 4 };
+        assert!(bad.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_unknown_domains() {
+        let mut s = Scenario::preset("smoke").unwrap();
+        s.domains = vec!["alpaca".into(), "not-a-domain".into()];
+        let err = s.validate().unwrap_err();
+        assert!(err.contains("unknown domain 'not-a-domain'"), "{err}");
+        assert!(err.contains("alpaca"), "should list known domains: {err}");
     }
 
     #[test]

@@ -7,19 +7,23 @@
 //!
 //! Layout contract with `python/compile/model.py::verify_graph`:
 //! * row b = client b (fixed order); `tokens[b] = prefix ++ draft`, padded;
-//! * `draft_tok[b, j]` = j-th drafted token, `q_probs[b, j]` its proposal
-//!   distribution;
-//! * **variable-length trick**: for `j ≥ S_b` the q rows are all-zero, so
-//!   the graph's residual `max(0, p − q)/Σ` reduces to exactly `p` — the
-//!   row at `j = S_b` therefore *is* the bonus/correction distribution for
-//!   a fully-accepted draft of length `S_b < K`. This is what lets one
-//!   static-shape artifact serve heterogeneous draft lengths (the
-//!   limitation of uniform-length SD batching called out in §II-C).
+//! * `draft_tok[b, j]` = j-th drafted node, `q_probs[b, j]` its proposal
+//!   distribution, `parent[b, j]` its parent draft position (−1 = rooted
+//!   at the prefix) — a chain is `parent[j] = j − 1`;
+//! * **variable-length trick**: for positions without a real node the q
+//!   rows are all-zero, so the graph's residual `max(0, p − q)/Σ` reduces
+//!   to exactly `p` — those rows therefore *are* bonus/correction
+//!   distributions. The chain uses one such row at `j = S`; a tree gets
+//!   one **phantom row per leaf** (rows `n .. n + L`, each parented on its
+//!   leaf; see `spec/tree.rs`), so a single static-shape artifact serves
+//!   heterogeneous draft lengths *and* heterogeneous topologies (the
+//!   uniform-length SD-batching limitation called out in §II-C).
 
 use anyhow::{anyhow, Result};
 
 use crate::net::wire::DraftMsg;
 use crate::runtime::{pick_bucket, VerifyRequest};
+use crate::spec::tree::{DraftTree, NO_PARENT};
 
 /// Per-client view the leader keeps for the wave. Row `b` of the verify
 /// request corresponds to `views[b]`; `client_id` is the *actual* client,
@@ -28,7 +32,14 @@ use crate::runtime::{pick_bucket, VerifyRequest};
 pub struct ClientRound {
     pub client_id: usize,
     pub prefix_len: usize,
+    /// Drafted nodes this round (chain: the draft length).
     pub draft_len: usize,
+    /// The draft's topology (chain for legacy messages). The verdict path
+    /// and phantom bonus rows are derived from this.
+    pub tree: DraftTree,
+    /// Whether the message carried an explicit topology (tree-mode client)
+    /// — chain messages keep the legacy verify/RNG path bit-for-bit.
+    pub explicit_tree: bool,
     pub new_request: bool,
     pub draft_wall_ns: u64,
 }
@@ -47,6 +58,7 @@ pub fn build_verify_request(
         return Err(anyhow!("empty wave"));
     }
     let mut need_seq = 0usize;
+    let mut trees = Vec::with_capacity(n);
     for (b, m) in msgs.iter().enumerate() {
         let i = m.client_id as usize;
         if b > 0 && msgs[b - 1].client_id >= m.client_id {
@@ -65,9 +77,33 @@ pub fn build_verify_request(
         if m.prefix.is_empty() {
             return Err(anyhow!("client {i}: empty prefix"));
         }
+        let tree = if m.parents.is_empty() {
+            DraftTree::chain(m.draft.len())
+        } else {
+            if m.parents.len() != m.draft.len() {
+                return Err(anyhow!(
+                    "client {i}: {} parents for {} nodes",
+                    m.parents.len(),
+                    m.draft.len()
+                ));
+            }
+            let t = DraftTree::from_parents(m.parents.clone())
+                .map_err(|e| anyhow!("client {i}: bad topology: {e}"))?;
+            // Real nodes + one phantom bonus row per leaf must fit the
+            // artifact's K rows (the chain's `S = K` special case instead
+            // uses the dedicated bonus output).
+            if t.rows_needed() > k {
+                return Err(anyhow!(
+                    "client {i}: tree needs {} rows (nodes + leaves) > K {k}",
+                    t.rows_needed()
+                ));
+            }
+            t
+        };
         // Row must hold prefix + draft; the graph gathers up to
         // pos0 + S_i − 1 (bonus-trick row S_i gathers pos0 + S_i − 1).
         need_seq = need_seq.max(m.prefix.len() + m.draft.len().max(1));
+        trees.push(tree);
     }
     let (bb, bs) = pick_bucket(buckets, n, need_seq);
     if n > bb || need_seq > bs {
@@ -79,8 +115,10 @@ pub fn build_verify_request(
     // All-zero q rows by default — the variable-length/bonus trick.
     let mut q_probs = vec![0.0f32; n * k * vocab];
     let mut pos0 = vec![0i32; n];
+    let mut parent = vec![0i32; n * k];
     let mut views = Vec::with_capacity(n);
     for (b, m) in msgs.iter().enumerate() {
+        let tree = &trees[b];
         let p = m.prefix.len();
         for (i, &t) in m.prefix.iter().enumerate() {
             tokens[b * bs + i] = t as i32;
@@ -91,16 +129,47 @@ pub fn build_verify_request(
         }
         q_probs[(b * k) * vocab..(b * k + m.draft.len()) * vocab].copy_from_slice(&m.q_probs);
         pos0[b] = p as i32;
+        // Parent layout: real nodes, then one phantom row per leaf
+        // (parented on its leaf — all-zero q ⇒ its residual is the leaf's
+        // bonus distribution), then chain-continuation padding. A chain
+        // message reduces to `parent[j] = j − 1` on every row — the exact
+        // pre-tree linear contexts.
+        let nodes = tree.len();
+        for (j, &pp) in tree.parents().iter().enumerate() {
+            parent[b * k + j] = if pp == NO_PARENT { -1 } else { pp as i32 };
+        }
+        let mut row = nodes;
+        if nodes == 0 {
+            // The empty tree's phantom roots at the prefix (row 0).
+            parent[b * k] = -1;
+            row = 1;
+        } else {
+            for leaf in 0..nodes {
+                // `row == k` only for a full-K chain, whose bonus comes
+                // from the dedicated engine output instead of a phantom
+                // row (explicit trees always fit: rows_needed ≤ k).
+                if tree.children(leaf).is_empty() && row < k {
+                    debug_assert_eq!(tree.bonus_row(leaf), row);
+                    parent[b * k + row] = leaf as i32;
+                    row += 1;
+                }
+            }
+        }
+        for j in row..k {
+            parent[b * k + j] = j as i32 - 1;
+        }
         views.push(ClientRound {
             client_id: m.client_id as usize,
             prefix_len: p,
             draft_len: m.draft.len(),
+            tree: tree.clone(),
+            explicit_tree: !m.parents.is_empty(),
             new_request: m.new_request,
             draft_wall_ns: m.draft_wall_ns,
         });
     }
     Ok((
-        VerifyRequest { tokens, batch: n, seq: bs, draft_tok, q_probs, pos0, k, vocab },
+        VerifyRequest { tokens, batch: n, seq: bs, draft_tok, q_probs, pos0, parent, k, vocab },
         views,
     ))
 }
@@ -116,10 +185,17 @@ mod tests {
             prefix: prefix.to_vec(),
             prompt_len: prefix.len() as u32,
             draft: draft.to_vec(),
+            parents: Vec::new(),
             q_probs: vec![1.0 / vocab as f32; draft.len() * vocab],
             new_request: false,
             draft_wall_ns: 0,
         }
+    }
+
+    fn tree_msg(id: u32, prefix: &[u8], draft: &[u8], parents: &[u8], vocab: usize) -> DraftMsg {
+        let mut m = msg(id, prefix, draft, vocab);
+        m.parents = parents.to_vec();
+        m
     }
 
     const BUCKETS: &[(usize, usize)] = &[(4, 128), (4, 256), (8, 128), (8, 256)];
@@ -138,12 +214,50 @@ mod tests {
         assert_eq!(&req.tokens[128..133], &[4, 5, 20, 21, 22]);
         assert_eq!(req.draft_tok[0..3], [10, 11, 0]);
         assert_eq!(req.draft_tok[8..12], [20, 21, 22, 0]);
+        // chain parent layout on every row
+        assert_eq!(&req.parent[0..8], &[-1, 0, 1, 2, 3, 4, 5, 6]);
+        assert_eq!(&req.parent[8..16], &[-1, 0, 1, 2, 3, 4, 5, 6]);
         // q rows beyond S are zero (bonus trick)
         let row2 = &req.q_probs[(0 * 8 + 2) * v..(0 * 8 + 3) * v];
         assert!(row2.iter().all(|&x| x == 0.0));
         let row1 = &req.q_probs[(0 * 8 + 1) * v..(0 * 8 + 2) * v];
         assert!((row1.iter().sum::<f32>() - 1.0).abs() < 1e-5);
         assert_eq!(views[1].draft_len, 3);
+        assert!(views[0].tree.is_chain());
+        assert!(!views[0].explicit_tree);
+    }
+
+    #[test]
+    fn tree_layout_adds_phantom_bonus_rows() {
+        let v = 16;
+        // Root → {0, 1}, 1 → {2}: leaves are 0 and 2 → phantom rows 3, 4.
+        let parents = [255u8, 255, 1];
+        let msgs = vec![tree_msg(0, &[1, 2], &[10, 11, 12], &parents, v)];
+        let (req, views) = build_verify_request(&msgs, BUCKETS, 8, v).unwrap();
+        assert_eq!(&req.parent[0..8], &[-1, -1, 1, 0, 2, 4, 5, 6]);
+        assert!(views[0].explicit_tree);
+        assert_eq!(views[0].tree.num_leaves(), 2);
+        assert_eq!(views[0].tree.bonus_row(0), 3);
+        assert_eq!(views[0].tree.bonus_row(2), 4);
+        // Phantom rows keep all-zero q (residual ≡ target = bonus).
+        for row in 3..5 {
+            assert!(req.q_probs[row * v..(row + 1) * v].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn tree_rejects_bad_topologies() {
+        let v = 16;
+        // Parent count mismatch.
+        let m = tree_msg(0, &[1], &[9, 9], &[255], v);
+        assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+        // Non-topological parent order.
+        let m = tree_msg(0, &[1], &[9, 9], &[1, 255], v);
+        assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+        // Too many rows: 5 root children = 5 nodes + 5 leaves > K = 8.
+        let m = tree_msg(0, &[1], &[9; 5], &[255; 5], v);
+        let err = build_verify_request(&[m], BUCKETS, 8, v).unwrap_err();
+        assert!(err.to_string().contains("rows"), "{err}");
     }
 
     #[test]
@@ -165,6 +279,7 @@ mod tests {
         assert_eq!(views[0].draft_len, 0);
         // q row 0 all zero → residual = p → correction sampled from target.
         assert!(req.q_probs[..v].iter().all(|&x| x == 0.0));
+        assert_eq!(req.parent[0], -1);
     }
 
     #[test]

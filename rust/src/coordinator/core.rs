@@ -25,7 +25,8 @@ use crate::configsys::{Policy, Smoothing};
 use crate::metrics::recorder::{ClientRoundMetrics, Recorder, RoundRecord};
 use crate::sched::baselines::{make_allocator, AllocCaps, Allocator};
 use crate::sched::Estimators;
-use crate::spec::rejection::{verify_client, ClientVerdict};
+use crate::spec::rejection::{verify_client, verify_tree, ClientVerdict, TreeVerdict};
+use crate::spec::tree::DraftTree;
 use crate::util::Rng;
 
 /// One participant's verification outcome, in the engine-agnostic form the
@@ -39,8 +40,12 @@ pub struct WaveObs {
     pub accepted: usize,
     /// Realized goodput x_i(t) = m + 1.
     pub goodput: usize,
-    /// Mean acceptance ratio (eq. 3 empirical term).
+    /// Mean acceptance ratio (eq. 3 empirical term; per *node* for trees).
     pub mean_ratio: f64,
+    /// Depth of the drafted topology (== `s_used` for a chain; the tree
+    /// profile's realized depth otherwise). Metrics-only: lets the
+    /// fairness plots separate shape effects from budget effects.
+    pub spec_depth: usize,
     /// Cap for this client's *next* allocation: min(artifact K limit,
     /// context room after the verdict is applied).
     pub max_next: usize,
@@ -153,6 +158,21 @@ impl RoundCore {
         verify_client(ratios, resid, bonus, vocab, &mut self.verdict_rng)
     }
 
+    /// Tree rejection sampling for one verify-batch row, on the same
+    /// core-owned verdict RNG stream (an arity-1 tree consumes draws
+    /// bit-identically to [`RoundCore::judge`]).
+    pub fn judge_tree(
+        &mut self,
+        tree: &DraftTree,
+        tokens: &[u8],
+        ratios: &[f32],
+        resid: &[f32],
+        q: &[f32],
+        vocab: usize,
+    ) -> TreeVerdict {
+        verify_tree(tree, tokens, ratios, resid, q, vocab, &mut self.verdict_rng)
+    }
+
     /// Process one wave's observations (paper steps ⑤–⑥):
     ///
     /// 1. sparse estimator update (eqs. 3–4, Algorithm 1 line 14);
@@ -219,6 +239,7 @@ impl RoundCore {
                 accepted: o.accepted,
                 goodput: o.goodput,
                 mean_ratio: o.mean_ratio,
+                spec_depth: o.spec_depth,
                 alpha_hat: self.estimators.alpha_hat[o.client_id],
                 x_beta: self.estimators.x_beta[o.client_id],
                 next_alloc: alloc[o.client_id],
@@ -277,6 +298,7 @@ mod tests {
             accepted,
             goodput: accepted + 1,
             mean_ratio: 0.7,
+            spec_depth: accepted + 1,
             max_next,
         }
     }
@@ -360,6 +382,22 @@ mod tests {
         let rec = c.recorder.rounds.last().unwrap();
         assert_eq!(rec.shard, 3);
         assert_eq!(c.shard_id(), 3);
+    }
+
+    #[test]
+    fn judge_tree_shares_the_verdict_stream_with_judge() {
+        // An arity-1 tree consumes the core's verdict RNG bit-identically
+        // to the chain path (resid carries the phantom bonus row at 2).
+        let mut a = core(1, 4);
+        let mut b = core(1, 4);
+        let ratios = [0.9f32, 0.4];
+        let resid = vec![0.25f32; 3 * 4];
+        let q = vec![0.25f32; 2 * 4];
+        let va = a.judge(&ratios, &resid, &resid[2 * 4..3 * 4], 4);
+        let vb = b.judge_tree(&DraftTree::chain(2), &[1, 2], &ratios, &resid, &q, 4);
+        assert_eq!(va.accepted, vb.path.len());
+        assert_eq!(va.correction, vb.correction);
+        assert_eq!(va.goodput, vb.goodput);
     }
 
     #[test]

@@ -144,23 +144,56 @@ impl Leader {
             let s = view.draft_len;
             let ratios = &out.ratio_row(b, k)[..s];
             let resid = out.resid_rows(b, k, v);
-            // Bonus distribution: the real bonus output when s == K, else
-            // the residual row at j = s (all-zero q ⇒ residual ≡ p).
-            let bonus_owned;
-            let bonus: &[f32] = if s == k {
-                out.bonus_row(b, v)
-            } else {
-                bonus_owned = &resid[s * v..(s + 1) * v];
-                bonus_owned
-            };
-            let verdict = self.core.judge(ratios, resid, bonus, v);
-            let new_prefix = view.prefix_len + verdict.accepted + 1;
+            let (accepted, path, correction, goodput, mean_ratio, spec_depth) =
+                if !view.explicit_tree {
+                    // Legacy chain path (bit-identical RNG stream). Bonus
+                    // distribution: the real bonus output when s == K, else
+                    // the residual row at j = s (all-zero q ⇒ residual ≡ p).
+                    let bonus_owned;
+                    let bonus: &[f32] = if s == k {
+                        out.bonus_row(b, v)
+                    } else {
+                        bonus_owned = &resid[s * v..(s + 1) * v];
+                        bonus_owned
+                    };
+                    let verdict = self.core.judge(ratios, resid, bonus, v);
+                    (
+                        verdict.accepted,
+                        Vec::new(),
+                        verdict.correction,
+                        verdict.goodput,
+                        verdict.mean_ratio,
+                        s,
+                    )
+                } else {
+                    // Tree path: sequential-sibling rejection over the
+                    // topology, bonus from the leaf phantom rows.
+                    let tv = self.core.judge_tree(
+                        &view.tree,
+                        &msgs[b].draft,
+                        ratios,
+                        resid,
+                        &msgs[b].q_probs,
+                        v,
+                    );
+                    let path: Vec<u8> = tv.path.iter().map(|&x| x as u8).collect();
+                    (
+                        tv.path.len(),
+                        path,
+                        tv.correction,
+                        tv.goodput,
+                        tv.mean_ratio,
+                        view.tree.max_depth(),
+                    )
+                };
+            let new_prefix = view.prefix_len + accepted + 1;
             obs.push(WaveObs {
                 client_id: view.client_id,
                 s_used: s,
-                accepted: verdict.accepted,
-                goodput: verdict.goodput,
-                mean_ratio: verdict.mean_ratio,
+                accepted,
+                goodput,
+                mean_ratio,
+                spec_depth,
                 max_next: self.max_draft.min(self.max_seq.saturating_sub(new_prefix + 2)),
             });
             verdicts.push(VerdictMsg {
@@ -168,8 +201,9 @@ impl Leader {
                 // Echo the client's own round (client-local matching; in
                 // sync mode this equals the coordinator round).
                 round: msgs[b].round,
-                accepted: verdict.accepted as u32,
-                correction: verdict.correction,
+                accepted: accepted as u32,
+                path,
+                correction,
                 next_alloc: 0, // filled below
                 shard: self.core.shard_id() as u32,
             });
@@ -237,7 +271,11 @@ pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<R
     scenario.validate().map_err(|e| anyhow!("invalid scenario: {e}"))?;
     if scenario.num_verifiers > 1 {
         return Err(anyhow!(
-            "num_verifiers = {} needs the sharded pool: use coordinator::run_pool",
+            "configuration error: num_verifiers = {} requires the sharded verifier \
+             pool — run it via `goodspeed run --verifiers {}` (which dispatches to \
+             coordinator::run_pool), or set num_verifiers = 1 for the single-verifier \
+             coordinator",
+            scenario.num_verifiers,
             scenario.num_verifiers
         ));
     }
@@ -267,7 +305,7 @@ pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<R
             scenario.domain_stickiness,
             scenario.max_new_tokens,
             root_rng.fork(i as u64),
-        );
+        )?;
         let dcfg = DraftServerConfig {
             client_id: i,
             model: scenario.draft_model(i).to_string(),
@@ -276,6 +314,8 @@ pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<R
             simulate_network: cfg.simulate_network,
             seed: scenario.seed ^ (0xD00D + i as u64),
             max_rounds,
+            spec_shape: scenario.spec_shape,
+            verify_k: factory.verify_k(),
         };
         handles.push(spawn_draft_server(dcfg, factory.clone(), stream, port));
     }
@@ -669,6 +709,7 @@ mod tests {
             prefix: vec![1, 2, 3],
             prompt_len: 3,
             draft: vec![],
+            parents: vec![],
             q_probs: vec![],
             new_request: true,
             draft_wall_ns: 7,
@@ -739,6 +780,102 @@ mod tests {
                 out.recorder.cum_accepted()[i],
                 "client {i} accepted-token accounting"
             );
+        }
+    }
+
+    #[test]
+    fn multi_verifier_scenario_is_a_configuration_error() {
+        // Satellite: the single-verifier path must reject pooled scenarios
+        // with an actionable message, not a terse internal one.
+        let mut s = smoke_scenario(5, 4);
+        s.num_verifiers = 2;
+        let cfg = RunConfig {
+            scenario: s,
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+        };
+        let err = run_serving(&cfg, mock_factory()).unwrap_err().to_string();
+        assert!(err.contains("configuration error"), "{err}");
+        assert!(err.contains("goodspeed run --verifiers 2"), "{err}");
+        assert!(err.contains("num_verifiers = 2"), "{err}");
+    }
+
+    #[test]
+    fn tree_mode_full_run_respects_node_budget() {
+        // End-to-end tree speculation over the mock engine: every wave's
+        // node spend stays within C, depths land between 1 and the node
+        // count, and accepted depth never exceeds drafted depth.
+        let mut s = smoke_scenario(20, 2);
+        s.spec_shape = crate::configsys::SpecShape::Tree { arity: 2, depth: 4 };
+        let cfg = RunConfig {
+            scenario: s,
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+        };
+        let out = run_serving(&cfg, mock_factory()).unwrap();
+        assert_eq!(out.recorder.rounds.len(), 20);
+        let mut saw_branching = false;
+        for r in &out.recorder.rounds {
+            let used: usize = r.clients.iter().map(|c| c.s_used).sum();
+            assert!(used <= 8, "round {}: {used}", r.round);
+            for c in &r.clients {
+                assert!(c.accepted <= c.spec_depth, "{c:?}");
+                assert!(c.spec_depth <= c.s_used.max(1), "{c:?}");
+                if c.spec_depth < c.s_used {
+                    saw_branching = true;
+                }
+            }
+        }
+        assert!(saw_branching, "tree mode must actually branch");
+        // Draft-side and coordinator-side accepted accounting still agree.
+        for (i, d) in out.draft_stats.iter().enumerate() {
+            assert_eq!(d.tokens_accepted, out.recorder.cum_accepted()[i], "client {i}");
+        }
+    }
+
+    #[test]
+    fn adaptive_mode_full_run() {
+        let mut s = smoke_scenario(15, 2);
+        s.spec_shape = crate::configsys::SpecShape::Adaptive;
+        let cfg = RunConfig {
+            scenario: s,
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+        };
+        let out = run_serving(&cfg, mock_factory()).unwrap();
+        assert_eq!(out.recorder.rounds.len(), 15);
+        for g in &out.summary.per_client_goodput {
+            assert!(*g >= 1.0);
+        }
+    }
+
+    #[test]
+    fn chain_mode_is_bit_identical_to_explicit_chain_scenario() {
+        // The acceptance criterion: spec_shape = chain reproduces the
+        // pre-tree RoundRecords exactly (same seeds → same RNG-determined
+        // fields), wave for wave, client for client.
+        let a = run(Policy::GoodSpeed, 12, 2);
+        let mut s = smoke_scenario(12, 2);
+        s.spec_shape = crate::configsys::SpecShape::Chain;
+        let cfg = RunConfig {
+            scenario: s,
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+        };
+        let b = run_serving(&cfg, mock_factory()).unwrap();
+        assert_eq!(a.recorder.rounds.len(), b.recorder.rounds.len());
+        for (ra, rb) in a.recorder.rounds.iter().zip(&b.recorder.rounds) {
+            for (ca, cb) in ra.clients.iter().zip(&rb.clients) {
+                assert_eq!(ca.goodput, cb.goodput);
+                assert_eq!(ca.accepted, cb.accepted);
+                assert_eq!(ca.s_used, cb.s_used);
+                assert_eq!(ca.next_alloc, cb.next_alloc);
+                assert!((ca.alpha_hat - cb.alpha_hat).abs() < 1e-15);
+            }
         }
     }
 

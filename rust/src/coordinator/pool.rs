@@ -380,7 +380,7 @@ pub fn run_pool(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<Pool
             scenario.domain_stickiness,
             scenario.max_new_tokens,
             root_rng.fork(i as u64),
-        );
+        )?;
         let dcfg = DraftServerConfig {
             client_id: i,
             model: scenario.draft_model(i).to_string(),
@@ -389,6 +389,8 @@ pub fn run_pool(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<Pool
             simulate_network: cfg.simulate_network,
             seed: scenario.seed ^ (0xD00D + i as u64),
             max_rounds,
+            spec_shape: scenario.spec_shape,
+            verify_k: factory.verify_k(),
         };
         client_handles.push(spawn_draft_server(dcfg, factory.clone(), stream, port));
     }
@@ -604,6 +606,30 @@ mod tests {
             (j1 - j4).abs() <= 0.06 * j1,
             "cross-shard fairness drift: M=1 {j1:.4} vs M=4 {j4:.4}"
         );
+    }
+
+    #[test]
+    fn pool_runs_tree_shapes() {
+        // Tree speculation flows through the sharded pool unchanged: each
+        // shard's Leader handles topologies via the shared batcher/core.
+        let mut s = pool_scenario(2, 8);
+        s.spec_shape = crate::configsys::SpecShape::Tree { arity: 2, depth: 4 };
+        let cfg = RunConfig {
+            scenario: s,
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+        };
+        let out = run_pool(&cfg, mock_factory()).unwrap();
+        let delivered: u64 = out.recorder.participation().iter().sum();
+        assert!(delivered >= 8 * 8, "{delivered}");
+        let branched = out
+            .recorder
+            .rounds
+            .iter()
+            .flat_map(|r| r.clients.iter())
+            .any(|c| c.spec_depth < c.s_used);
+        assert!(branched, "pooled tree waves must branch");
     }
 
     #[test]

@@ -25,11 +25,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::configsys::LinkConfig;
-use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
+use crate::configsys::{LinkConfig, SpecShape};
+use crate::net::link::{
+    draft_msg_bytes, tree_draft_msg_bytes, tree_verdict_msg_bytes, verdict_msg_bytes, Link,
+};
 use crate::net::transport::ClientPort;
 use crate::net::wire::{DraftMsg, Message};
 use crate::runtime::{Drafter, EngineFactory};
+use crate::spec::tree::{adaptive_profile, DraftTree};
 use crate::util::Rng;
 use crate::workload::DomainStream;
 
@@ -46,6 +49,12 @@ pub struct DraftServerConfig {
     pub seed: u64,
     /// Hard cap on rounds (safety net; coordinator normally shuts down).
     pub max_rounds: u64,
+    /// Speculation topology policy: how the granted node budget is
+    /// arranged (`Chain` keeps the legacy bit-identical draft loop).
+    pub spec_shape: SpecShape,
+    /// Verify-artifact row count K — trees must fit `nodes + leaves ≤ K`
+    /// (each leaf needs a phantom bonus row; see `spec/tree.rs`).
+    pub verify_k: usize,
 }
 
 /// Outcome summary returned when the actor exits.
@@ -55,6 +64,14 @@ pub struct DraftStats {
     pub requests_completed: u64,
     pub tokens_drafted: u64,
     pub tokens_accepted: u64,
+    /// Tree mode only: total sibling *tries* the verifier consumed,
+    /// reconstructed from verdict paths (rank of each accepted child among
+    /// its siblings, plus every sibling of a fully rejected level). The
+    /// adaptive shape rule uses `tokens_accepted / spec_tries` as its
+    /// per-try acceptance estimate — unlike accepted/drafted, this is not
+    /// floor-bounded by 1/arity, so a high-α client can climb back to the
+    /// deep (chain) profile.
+    pub spec_tries: u64,
     pub draft_compute: Duration,
     /// Per-request latency (rounds from first draft to completion).
     pub request_latency_rounds: Vec<u64>,
@@ -128,6 +145,125 @@ impl Actor {
             prefix: self.prefix.clone(),
             prompt_len: self.prompt_len as u32,
             draft,
+            parents: Vec::new(),
+            q_probs,
+            new_request: std::mem::take(&mut self.new_request),
+            draft_wall_ns: wall.as_nanos() as u64,
+        })
+    }
+
+    /// The (arity, depth) profile for this round's tree shape.
+    fn tree_profile(&self) -> (usize, usize) {
+        match self.cfg.spec_shape {
+            SpecShape::Chain => (1, usize::MAX),
+            SpecShape::Tree { arity, depth } => (arity, depth),
+            // Adaptive: pick from the locally observed *per-try* acceptance
+            // rate (0.5 prior until tries have been verified). Accepted
+            // path tokens over sibling tries — NOT over nodes drafted,
+            // which a branching shape bounds near 1/arity and would latch
+            // every client into the widest profile.
+            SpecShape::Adaptive => {
+                let alpha = if self.stats.spec_tries == 0 {
+                    0.5
+                } else {
+                    self.stats.tokens_accepted as f64 / self.stats.spec_tries as f64
+                };
+                adaptive_profile(alpha)
+            }
+        }
+    }
+
+    /// Reconstruct how many sibling tries the verifier spent on this
+    /// round's tree from the accepted path: an accepted child at sibling
+    /// rank j cost j tries (j − 1 rejections + 1 acceptance); the terminal
+    /// level — unless the path ended on a leaf — rejected every sibling.
+    fn note_spec_tries(&mut self, tree: &DraftTree, path: &[u8]) -> Result<()> {
+        let mut tries = 0u64;
+        let mut cur: Option<usize> = None;
+        for &nid in path {
+            let kids = match cur {
+                None => tree.root_children(),
+                Some(i) => tree.children(i),
+            };
+            let rank = kids
+                .iter()
+                .position(|&c| c == nid as usize)
+                .ok_or_else(|| anyhow!("verdict path node {nid} is not a child of the path"))?;
+            tries += rank as u64 + 1;
+            cur = Some(nid as usize);
+        }
+        let kids = match cur {
+            None => tree.root_children(),
+            Some(i) => tree.children(i),
+        };
+        if !kids.is_empty() {
+            // Off-path rejection: every sibling of the terminal level was
+            // tried and rejected. (Empty = the path reached a leaf.)
+            tries += kids.len() as u64;
+        }
+        self.stats.spec_tries += tries;
+        Ok(())
+    }
+
+    /// DFS over `kids`: sample every sibling token i.i.d. from the parent
+    /// distribution (node order — the sequential-try contract
+    /// `verify_tree` assumes), then descend into each internal child,
+    /// rewinding the KV cache to the parent position between branches.
+    fn draft_subtree(
+        &mut self,
+        tree: &DraftTree,
+        kids: &[usize],
+        dist: &[f32],
+        draft: &mut [u8],
+        q_probs: &mut [f32],
+    ) -> Result<()> {
+        let vocab = dist.len();
+        for &c in kids {
+            let tok = self.rng.categorical(dist) as u8;
+            draft[c] = tok;
+            q_probs[c * vocab..(c + 1) * vocab].copy_from_slice(dist);
+        }
+        let parent_pos = self.drafter.position();
+        for &c in kids {
+            let grand = tree.children(c);
+            if !grand.is_empty() {
+                let next = self.drafter.step(draft[c])?;
+                self.draft_subtree(tree, grand, &next, draft, q_probs)?;
+                self.drafter.rewind(parent_pos);
+            }
+        }
+        Ok(())
+    }
+
+    /// Tree-mode drafting: build the shape for the granted node budget,
+    /// fill it by DFS, and ship topology + tokens + q rows. The KV cache
+    /// ends back at the root position (the verdict replays the accepted
+    /// path).
+    fn draft_round_tree(&mut self, round: u64, alloc: usize) -> Result<DraftMsg> {
+        let t0 = Instant::now();
+        let (arity, depth) = self.tree_profile();
+        let tree = DraftTree::shaped(arity, depth, alloc, self.cfg.verify_k, self.context_room());
+        let n = tree.len();
+        let vocab = self.drafter.vocab();
+        let mut draft = vec![0u8; n];
+        let mut q_probs = vec![0.0f32; n * vocab];
+        let pos0 = self.drafter.position();
+        if n > 0 {
+            let dist = self.pending_dist.clone();
+            let roots: Vec<usize> = tree.root_children().to_vec();
+            self.draft_subtree(&tree, &roots, &dist, &mut draft, &mut q_probs)?;
+            self.drafter.rewind(pos0);
+        }
+        let wall = t0.elapsed();
+        self.stats.draft_compute += wall;
+        self.stats.tokens_drafted += n as u64;
+        Ok(DraftMsg {
+            client_id: self.cfg.client_id as u32,
+            round,
+            prefix: self.prefix.clone(),
+            prompt_len: self.prompt_len as u32,
+            draft,
+            parents: tree.parents().to_vec(),
             q_probs,
             new_request: std::mem::take(&mut self.new_request),
             draft_wall_ns: wall.as_nanos() as u64,
@@ -160,6 +296,42 @@ impl Actor {
         }
         debug_assert_eq!(self.drafter.position(), pos0 + m);
 
+        self.finish_round(round)
+    }
+
+    /// Tree-mode reconciliation: the DFS left the cache at the root
+    /// position, so replay the accepted path (node ids from the verdict,
+    /// tokens from our own draft) into the cache, then ingest the
+    /// correction/bonus token exactly like the chain path.
+    fn apply_verdict_tree(
+        &mut self,
+        round: u64,
+        draft: &[u8],
+        path: &[u8],
+        correction: u8,
+    ) -> Result<()> {
+        let m = path.len();
+        let pos0 = self.prefix.len();
+        debug_assert_eq!(self.drafter.position(), pos0);
+        for &nid in path {
+            let tok = *draft
+                .get(nid as usize)
+                .ok_or_else(|| anyhow!("verdict path node {nid} out of range"))?;
+            self.drafter.step(tok)?;
+            self.prefix.push(tok);
+        }
+        self.prefix.push(correction);
+        self.stats.tokens_accepted += m as u64;
+        self.generated += m + 1;
+        debug_assert_eq!(self.drafter.position(), pos0 + m);
+
+        self.finish_round(round)
+    }
+
+    /// Shared round epilogue: request completion bookkeeping, or ingest
+    /// the correction token to seed the next round's first sample.
+    fn finish_round(&mut self, round: u64) -> Result<()> {
+        let correction = *self.prefix.last().expect("prefix holds the correction");
         let done = self.generated >= self.max_new_tokens
             || self.prefix.len() + 2 >= self.drafter.max_seq();
         if done {
@@ -178,20 +350,38 @@ impl Actor {
 
     fn run(&mut self) -> Result<DraftStats> {
         let vocab = self.drafter.vocab();
+        let chain_mode = self.cfg.spec_shape.is_chain();
         self.start_request(0)?;
         let mut alloc = self.cfg.initial_alloc;
         for round in 0..self.cfg.max_rounds {
-            let msg = self.draft_round(round, alloc)?;
+            // Chain mode keeps the legacy draft loop verbatim (bit-identical
+            // RNG stream, engine calls, and wire bytes).
+            let msg = if chain_mode {
+                self.draft_round(round, alloc)?
+            } else {
+                self.draft_round_tree(round, alloc)?
+            };
             let draft = msg.draft.clone();
+            let parents = msg.parents.clone();
+            let is_tree_draft = !parents.is_empty();
             if self.cfg.simulate_network {
-                let bytes = draft_msg_bytes(msg.prefix.len(), msg.draft.len(), vocab);
+                let bytes = if is_tree_draft {
+                    tree_draft_msg_bytes(msg.prefix.len(), msg.draft.len(), vocab)
+                } else {
+                    draft_msg_bytes(msg.prefix.len(), msg.draft.len(), vocab)
+                };
                 std::thread::sleep(self.link.delay(bytes, &mut self.rng));
             }
             self.port.send(&Message::Draft(msg))?;
             match self.port.recv() {
                 Ok(Message::Verdict(v)) => {
                     if self.cfg.simulate_network {
-                        std::thread::sleep(self.link.delay(verdict_msg_bytes(), &mut self.rng));
+                        let bytes = if v.path.is_empty() {
+                            verdict_msg_bytes()
+                        } else {
+                            tree_verdict_msg_bytes(v.path.len())
+                        };
+                        std::thread::sleep(self.link.delay(bytes, &mut self.rng));
                     }
                     // The verdict must echo the round of the draft we just
                     // sent (client-local matching — no lockstep assumption).
@@ -208,7 +398,16 @@ impl Actor {
                         }
                         self.last_shard = v.shard;
                     }
-                    self.apply_verdict(round, &draft, v.accepted as usize, v.correction)?;
+                    if chain_mode {
+                        self.apply_verdict(round, &draft, v.accepted as usize, v.correction)?;
+                    } else {
+                        // Tree mode: even a degenerate (empty) tree draft
+                        // reconciles through the path — an empty path is
+                        // the S = 0 correction-only round.
+                        let tree = DraftTree::from_parents(parents)?;
+                        self.note_spec_tries(&tree, &v.path)?;
+                        self.apply_verdict_tree(round, &draft, &v.path, v.correction)?;
+                    }
                     alloc = v.next_alloc as usize;
                 }
                 Ok(Message::Shutdown) | Err(_) => break,
@@ -281,6 +480,8 @@ mod tests {
             simulate_network: false,
             seed: 42 + id as u64,
             max_rounds: rounds,
+            spec_shape: SpecShape::Chain,
+            verify_k: 32,
         }
     }
 
@@ -288,7 +489,7 @@ mod tests {
     #[test]
     fn actor_round_trip_with_manual_coordinator() {
         let (mut server, mut ports) = channel_transport(1);
-        let stream = DomainStream::new("alpaca", 1.0, 10, Rng::new(1));
+        let stream = DomainStream::new("alpaca", 1.0, 10, Rng::new(1)).unwrap();
         let h = spawn_draft_server(cfg(0, 5), factory(), stream, ports.remove(0));
         for round in 0..5u64 {
             let (id, msg) = server.rx.recv().unwrap();
@@ -311,6 +512,7 @@ mod tests {
                 client_id: 0,
                 round,
                 accepted: acc,
+                path: vec![],
                 correction: 7,
                 next_alloc: 4,
                 shard: 0,
@@ -325,7 +527,7 @@ mod tests {
     #[test]
     fn prefix_grows_by_accepted_plus_one() {
         let (mut server, mut ports) = channel_transport(1);
-        let stream = DomainStream::new("gsm8k", 1.0, 100, Rng::new(2));
+        let stream = DomainStream::new("gsm8k", 1.0, 100, Rng::new(2)).unwrap();
         let h = spawn_draft_server(cfg(0, 3), factory(), stream, ports.remove(0));
         let mut last_len = None;
         let mut last_accept = 0usize;
@@ -344,6 +546,7 @@ mod tests {
                 client_id: 0,
                 round,
                 accepted: d.draft.len() as u32,
+                path: vec![],
                 correction: 3,
                 next_alloc: 4,
                 shard: 0,
@@ -357,7 +560,7 @@ mod tests {
     fn completes_requests_and_starts_new_ones() {
         let (mut server, mut ports) = channel_transport(1);
         // max_new_tokens = 5 → finishes a request every ~1–2 rounds
-        let stream = DomainStream::new("arena", 1.0, 5, Rng::new(3));
+        let stream = DomainStream::new("arena", 1.0, 5, Rng::new(3)).unwrap();
         let h = spawn_draft_server(cfg(0, 12), factory(), stream, ports.remove(0));
         let mut new_request_count = 0;
         for round in 0..12u64 {
@@ -373,6 +576,7 @@ mod tests {
                 client_id: 0,
                 round,
                 accepted: d.draft.len() as u32,
+                path: vec![],
                 correction: 5,
                 next_alloc: 4,
                 // Alternate shard ids: the actor must count the switches.
@@ -389,10 +593,72 @@ mod tests {
         assert_eq!(stats.shard_switches, 11);
     }
 
+    /// Drive a tree-mode actor manually: topology ships on the wire, q
+    /// rows are per-node distributions (siblings share their parent's),
+    /// and path-based verdicts reconcile the KV cache.
+    #[test]
+    fn tree_actor_round_trip_with_manual_coordinator() {
+        let (mut server, mut ports) = channel_transport(1);
+        let stream = DomainStream::new("gsm8k", 1.0, 50, Rng::new(7)).unwrap();
+        let mut c = cfg(0, 4);
+        c.spec_shape = SpecShape::Tree { arity: 2, depth: 3 };
+        c.initial_alloc = 6;
+        let h = spawn_draft_server(c, factory(), stream, ports.remove(0));
+        let mut accepted_total = 0u64;
+        for round in 0..4u64 {
+            let (_, msg) = server.rx.recv().unwrap();
+            let d = match msg {
+                Message::Draft(d) => d,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(d.parents.len(), d.draft.len());
+            assert!(!d.parents.is_empty(), "budget 6 must draft tree nodes");
+            let tree = DraftTree::from_parents(d.parents.clone()).unwrap();
+            assert!(!tree.is_chain(), "arity 2 with budget 6 must branch");
+            assert!(tree.rows_needed() <= 32);
+            // Every node's q row is a distribution; siblings share one.
+            for j in 0..d.draft.len() {
+                let s: f32 = d.q_probs[j * 32..(j + 1) * 32].iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "node {j} q sums {s}");
+            }
+            let roots = tree.root_children();
+            assert_eq!(
+                d.q_probs[roots[0] * 32..(roots[0] + 1) * 32],
+                d.q_probs[roots[1] * 32..(roots[1] + 1) * 32],
+                "siblings sample from the same parent distribution"
+            );
+            // Accept a real root path: second root child, then its first
+            // child when it has one.
+            let mut path: Vec<u8> = vec![roots[1] as u8];
+            if let Some(&g) = tree.children(roots[1]).first() {
+                path.push(g as u8);
+            }
+            accepted_total += path.len() as u64;
+            (server.txs[0])(&Message::Verdict(VerdictMsg {
+                client_id: 0,
+                round,
+                accepted: path.len() as u32,
+                path,
+                correction: 5,
+                next_alloc: 6,
+                shard: 0,
+            }))
+            .unwrap();
+        }
+        let stats = h.join().unwrap().unwrap();
+        assert_eq!(stats.rounds, 4);
+        assert_eq!(stats.tokens_drafted, 4 * 6);
+        assert_eq!(stats.tokens_accepted, accepted_total);
+        // Per-try accounting (the adaptive rule's statistic): each round's
+        // path [roots[1], first grandchild] costs 2 tries at level 1
+        // (sibling rank 1) + 1 try at level 2, ending on a leaf.
+        assert_eq!(stats.spec_tries, 4 * 3);
+    }
+
     #[test]
     fn zero_allocation_rounds_still_progress() {
         let (mut server, mut ports) = channel_transport(1);
-        let stream = DomainStream::new("hle", 1.0, 50, Rng::new(4));
+        let stream = DomainStream::new("hle", 1.0, 50, Rng::new(4)).unwrap();
         let mut c = cfg(0, 4);
         c.initial_alloc = 0;
         let h = spawn_draft_server(c, factory(), stream, ports.remove(0));
@@ -408,6 +674,7 @@ mod tests {
                 client_id: 0,
                 round,
                 accepted: 0,
+                path: vec![],
                 correction: 9,
                 next_alloc: 0,
                 shard: 0,
@@ -423,7 +690,7 @@ mod tests {
     #[test]
     fn shutdown_exits_cleanly() {
         let (mut server, mut ports) = channel_transport(1);
-        let stream = DomainStream::new("cnn", 1.0, 50, Rng::new(5));
+        let stream = DomainStream::new("cnn", 1.0, 50, Rng::new(5)).unwrap();
         let h = spawn_draft_server(cfg(0, 100), factory(), stream, ports.remove(0));
         let (_, _msg) = server.rx.recv().unwrap();
         (server.txs[0])(&Message::Shutdown).unwrap();

@@ -93,6 +93,7 @@ pub fn run_quickstart(
             draft_tok,
             q_probs: q_full,
             pos0: vec![pos0 as i32],
+            parent: crate::runtime::chain_parent_array(1, k),
             k,
             vocab,
         };

@@ -66,6 +66,10 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
     if let Some(k) = args.get_parse::<u64>("rebalance-every") {
         s.shard_rebalance_every = k;
     }
+    if let Some(shape) = args.get("spec-shape") {
+        s.spec_shape = crate::configsys::SpecShape::parse(shape)
+            .ok_or_else(|| anyhow!("bad --spec-shape (chain|tree[:AxD]|adaptive)"))?;
+    }
     s.validate().map_err(|e| anyhow!("scenario: {e}"))?;
     Ok(s)
 }
@@ -82,10 +86,11 @@ pub fn main(args: &Args) -> Result<()> {
     args.finish().map_err(|e| anyhow!(e))?;
 
     log::info!(
-        "run: scenario={} policy={} mode={} verifiers={} transport={transport:?} rounds={}",
+        "run: scenario={} policy={} mode={} shape={} verifiers={} transport={transport:?} rounds={}",
         scenario.id,
         policy.name(),
         scenario.coord_mode.name(),
+        scenario.spec_shape.label(),
         scenario.num_verifiers,
         scenario.rounds
     );

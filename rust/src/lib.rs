@@ -7,7 +7,9 @@
 //! * **Layer 3 (this crate)** — the serving coordinator: draft-server
 //!   actors, verification server with sync-barrier *and* async
 //!   event-driven wave batching (straggler-tolerant continuous
-//!   verification), rejection-sampling verification, smoothed estimators
+//!   verification), chain *and* tree speculation (`spec::DraftTree`:
+//!   node budgets arranged as branching candidate trees, lossless
+//!   sequential-sibling rejection sampling), smoothed estimators
 //!   (paper eqs. 3–4), and the gradient scheduler (GOODSPEED-SCHED,
 //!   eq. 5) with Fixed-S / Random-S baselines.
 //! * **Layer 2** — `python/compile/model.py`: the tiny-transformer model

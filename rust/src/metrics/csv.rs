@@ -40,10 +40,14 @@ pub fn write_csv<P: AsRef<Path>>(
 pub fn write_rounds<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
     let header = [
         "round", "client", "s_used", "accepted", "goodput", "mean_ratio", "alpha_hat", "x_beta",
-        "next_alloc", "recv_ns", "verify_ns", "send_ns", "shard",
+        "next_alloc", "recv_ns", "verify_ns", "send_ns", "shard", "spec_depth", "node_accept",
     ];
     let rows = rec.rounds.iter().flat_map(|r| {
         r.clients.iter().map(move |c| {
+            // Per-node acceptance: accepted path depth over nodes spent —
+            // distinguishes shape efficiency from budget size.
+            let node_accept =
+                if c.s_used == 0 { 0.0 } else { c.accepted as f64 / c.s_used as f64 };
             vec![
                 r.round.to_string(),
                 c.client_id.to_string(),
@@ -58,6 +62,8 @@ pub fn write_rounds<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
                 r.verify_ns.to_string(),
                 r.send_ns.to_string(),
                 r.shard.to_string(),
+                c.spec_depth.to_string(),
+                format!("{node_accept:.6}"),
             ]
         })
     });

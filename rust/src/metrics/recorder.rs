@@ -16,8 +16,12 @@ pub struct ClientRoundMetrics {
     pub accepted: usize,
     /// Realized goodput x_i(t) = m + 1.
     pub goodput: usize,
-    /// Mean acceptance ratio (eq. 3 empirical term).
+    /// Mean acceptance ratio (eq. 3 empirical term; per *node* for trees).
     pub mean_ratio: f64,
+    /// Depth of the drafted topology (== `s_used` for a chain). With
+    /// trees, `accepted ≤ spec_depth ≤ s_used`: the accepted-depth /
+    /// node-budget split the shape plots need.
+    pub spec_depth: usize,
     /// Estimates α̂_i(t), X_i^β(t) *after* the round's update.
     pub alpha_hat: f64,
     pub x_beta: f64,
@@ -63,7 +67,12 @@ pub struct Recorder {
     /// Cumulative realized goodput per client (for x̄(T) and Fig 4).
     cum_goodput: Vec<f64>,
     /// Cumulative *accepted* draft tokens per client (fairness audits).
+    /// For trees this is the accepted root-path depth.
     cum_accepted: Vec<u64>,
+    /// Cumulative drafted-topology depth per client (== s_used on chains).
+    cum_spec_depth: Vec<u64>,
+    /// Cumulative nodes spent per client (the budget actually consumed).
+    cum_nodes: Vec<u64>,
     /// Number of waves each client participated in (== rounds in sync).
     participation: Vec<u64>,
 }
@@ -75,6 +84,8 @@ impl Recorder {
             request_latency_rounds: Vec::new(),
             cum_goodput: vec![0.0; n_clients],
             cum_accepted: vec![0; n_clients],
+            cum_spec_depth: vec![0; n_clients],
+            cum_nodes: vec![0; n_clients],
             participation: vec![0; n_clients],
         }
     }
@@ -85,6 +96,8 @@ impl Recorder {
             assert!(i < self.cum_goodput.len(), "client_id {i} out of range");
             self.cum_goodput[i] += c.goodput as f64;
             self.cum_accepted[i] += c.accepted as u64;
+            self.cum_spec_depth[i] += c.spec_depth as u64;
+            self.cum_nodes[i] += c.s_used as u64;
             self.participation[i] += 1;
         }
         self.rounds.push(rec);
@@ -135,12 +148,46 @@ impl Recorder {
     }
 
     /// Average accepted draft tokens per participated wave (the fairness
-    /// quantity for Jain-index audits across coordinator modes).
+    /// quantity for Jain-index audits across coordinator modes). For
+    /// trees this is the mean accepted root-path *depth*.
     pub fn avg_accepted(&self) -> Vec<f64> {
         self.cum_accepted
             .iter()
             .zip(&self.participation)
             .map(|(&a, &t)| if t == 0 { 0.0 } else { a as f64 / t as f64 })
+            .collect()
+    }
+
+    /// Average drafted-topology depth per participated wave (== the mean
+    /// draft length on chains; the shape axis of the tree plots).
+    pub fn avg_spec_depth(&self) -> Vec<f64> {
+        self.cum_spec_depth
+            .iter()
+            .zip(&self.participation)
+            .map(|(&d, &t)| if t == 0 { 0.0 } else { d as f64 / t as f64 })
+            .collect()
+    }
+
+    /// Mean realized goodput per delivered verdict (tokens/verdict) — the
+    /// budget-normalized steady-state figure shape and mode comparisons
+    /// use (equal node budgets ⇒ directly comparable).
+    pub fn goodput_per_verdict(&self) -> f64 {
+        let verdicts: u64 = self.participation.iter().sum();
+        if verdicts == 0 {
+            0.0
+        } else {
+            self.cum_goodput.iter().sum::<f64>() / verdicts as f64
+        }
+    }
+
+    /// Per-node acceptance: accepted path length over nodes spent — the
+    /// budget-efficiency of a shape (1.0 means every verified node landed
+    /// on the accepted path).
+    pub fn node_acceptance(&self) -> Vec<f64> {
+        self.cum_accepted
+            .iter()
+            .zip(&self.cum_nodes)
+            .map(|(&a, &n)| if n == 0 { 0.0 } else { a as f64 / n as f64 })
             .collect()
     }
 
@@ -310,6 +357,31 @@ mod tests {
         let s = r.summary(1.0);
         assert_eq!(s.rounds, 3); // 3 waves
         assert!((s.total_tokens - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shape_metrics_accumulate() {
+        let mut r = Recorder::new(1);
+        let rec = |s_used: usize, accepted: usize, spec_depth: usize| RoundRecord {
+            round: 0,
+            shard: 0,
+            recv_ns: 0,
+            verify_ns: 0,
+            send_ns: 0,
+            clients: vec![ClientRoundMetrics {
+                client_id: 0,
+                s_used,
+                accepted,
+                goodput: accepted + 1,
+                spec_depth,
+                ..Default::default()
+            }],
+        };
+        r.push(rec(6, 2, 3));
+        r.push(rec(6, 4, 3));
+        assert_eq!(r.avg_spec_depth(), vec![3.0]);
+        // 6 accepted over 12 nodes spent.
+        assert_eq!(r.node_acceptance(), vec![0.5]);
     }
 
     #[test]

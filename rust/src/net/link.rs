@@ -49,9 +49,21 @@ pub fn draft_msg_bytes(prefix_len: usize, draft_len: usize, vocab: usize) -> usi
     header + prefix_len + draft_len + draft_len * vocab * 4
 }
 
+/// Uplink payload of a *tree* draft: the chain payload plus the compact
+/// parent-index array (one byte per node, plus its length prefix).
+pub fn tree_draft_msg_bytes(prefix_len: usize, nodes: usize, vocab: usize) -> usize {
+    draft_msg_bytes(prefix_len, nodes, vocab) + 4 + nodes
+}
+
 /// Downlink payload of a verdict: accept count + correction + allocation.
 pub fn verdict_msg_bytes() -> usize {
     24
+}
+
+/// Downlink payload of a *tree* verdict: the chain verdict plus the
+/// accepted root-path node indices (one byte each, plus length prefix).
+pub fn tree_verdict_msg_bytes(path_len: usize) -> usize {
+    verdict_msg_bytes() + 4 + path_len
 }
 
 #[cfg(test)]

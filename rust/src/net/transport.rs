@@ -335,6 +335,7 @@ mod tests {
             prefix: vec![1, 2, 3],
             prompt_len: 3,
             draft: vec![7],
+            parents: Vec::new(),
             q_probs: vec![0.25; 4],
             new_request: round == 0,
             draft_wall_ns: 5,
@@ -364,6 +365,7 @@ mod tests {
             client_id: 1,
             round: 0,
             accepted: 2,
+            path: vec![],
             correction: 9,
             next_alloc: 4,
             shard: 0,
@@ -386,6 +388,7 @@ mod tests {
             client_id: 0,
             round: 3,
             accepted: 1,
+            path: vec![],
             correction: 2,
             next_alloc: 8,
             shard: 0,
@@ -514,6 +517,7 @@ mod tests {
             client_id: 0,
             round: 0,
             accepted: 1,
+            path: vec![],
             correction: 3,
             next_alloc: 2,
             shard: 1,
@@ -585,6 +589,7 @@ mod tests {
             prefix: vec![5; 200],
             prompt_len: 10,
             draft: vec![1; 32],
+            parents: Vec::new(),
             q_probs: vec![0.1; 32 * 256], // 32 KiB — the paper's q payload
             new_request: false,
             draft_wall_ns: 0,

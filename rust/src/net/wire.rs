@@ -26,8 +26,15 @@ pub struct DraftMsg {
     pub prefix: Vec<u8>,
     /// Length of the prompt within `prefix`.
     pub prompt_len: u32,
-    /// Drafted tokens (length = this round's allocation, may be 0).
+    /// Drafted tokens — one per tree node, in node-index order (length =
+    /// this round's node allocation, may be 0).
     pub draft: Vec<u8>,
+    /// Tree topology as a compact parent-index array (one byte per node;
+    /// `0xFF` = child of the root — `spec::tree::NO_PARENT`). **Empty =
+    /// linear chain**: chain drafts omit the topology entirely and are
+    /// encoded with the legacy [`TAG_DRAFT`] frame, byte-for-byte
+    /// identical to the pre-tree wire format.
+    pub parents: Vec<u8>,
     /// Proposal distributions, row-major `[draft.len() * vocab]` — the
     /// dominant payload (the paper's transmission-cost observation).
     pub q_probs: Vec<f32>,
@@ -41,9 +48,14 @@ pub struct DraftMsg {
 pub struct VerdictMsg {
     pub client_id: u32,
     pub round: u64,
-    /// Accepted draft prefix length m.
+    /// Accepted draft tokens m (tree: accepted root-path depth).
     pub accepted: u32,
-    /// Correction (m < S) or bonus (m == S) token.
+    /// Accepted root-path node indices, root → leaf order (one byte per
+    /// node id). **Empty for chain verdicts** — a chain's accepted path is
+    /// implied by `accepted`, and the legacy [`TAG_VERDICT`] frame stays
+    /// byte-for-byte identical.
+    pub path: Vec<u8>,
+    /// Correction (rejection) or bonus (full path accepted) token.
     pub correction: u8,
     /// Next-round draft allocation S_i(t+1).
     pub next_alloc: u32,
@@ -56,6 +68,10 @@ pub struct VerdictMsg {
 const TAG_DRAFT: u8 = 1;
 const TAG_VERDICT: u8 = 2;
 const TAG_SHUTDOWN: u8 = 3;
+/// A draft carrying an explicit tree topology (non-empty `parents`).
+const TAG_DRAFT_TREE: u8 = 4;
+/// A verdict carrying an explicit accepted path (non-empty `path`).
+const TAG_VERDICT_TREE: u8 = 5;
 
 struct Writer {
     buf: Vec<u8>,
@@ -143,21 +159,29 @@ impl Message {
         w.u32(0); // frame length placeholder
         match self {
             Message::Draft(d) => {
-                w.u8(TAG_DRAFT);
+                // Chain drafts keep the legacy frame byte-for-byte; a tree
+                // frame inserts the parent array after the drafted tokens.
+                w.u8(if d.parents.is_empty() { TAG_DRAFT } else { TAG_DRAFT_TREE });
                 w.u32(d.client_id);
                 w.u64(d.round);
                 w.bytes(&d.prefix);
                 w.u32(d.prompt_len);
                 w.bytes(&d.draft);
+                if !d.parents.is_empty() {
+                    w.bytes(&d.parents);
+                }
                 w.f32s(&d.q_probs);
                 w.u8(d.new_request as u8);
                 w.u64(d.draft_wall_ns);
             }
             Message::Verdict(v) => {
-                w.u8(TAG_VERDICT);
+                w.u8(if v.path.is_empty() { TAG_VERDICT } else { TAG_VERDICT_TREE });
                 w.u32(v.client_id);
                 w.u64(v.round);
                 w.u32(v.accepted);
+                if !v.path.is_empty() {
+                    w.bytes(&v.path);
+                }
                 w.u8(v.correction);
                 w.u32(v.next_alloc);
                 w.u32(v.shard);
@@ -173,24 +197,47 @@ impl Message {
     pub fn decode(payload: &[u8]) -> Result<Message> {
         let mut r = Reader { buf: payload, pos: 0 };
         let msg = match r.u8()? {
-            TAG_DRAFT => Message::Draft(DraftMsg {
-                client_id: r.u32()?,
-                round: r.u64()?,
-                prefix: r.bytes()?,
-                prompt_len: r.u32()?,
-                draft: r.bytes()?,
-                q_probs: r.f32s()?,
-                new_request: r.u8()? != 0,
-                draft_wall_ns: r.u64()?,
-            }),
-            TAG_VERDICT => Message::Verdict(VerdictMsg {
-                client_id: r.u32()?,
-                round: r.u64()?,
-                accepted: r.u32()?,
-                correction: r.u8()?,
-                next_alloc: r.u32()?,
-                shard: r.u32()?,
-            }),
+            tag @ (TAG_DRAFT | TAG_DRAFT_TREE) => {
+                let client_id = r.u32()?;
+                let round = r.u64()?;
+                let prefix = r.bytes()?;
+                let prompt_len = r.u32()?;
+                let draft = r.bytes()?;
+                let parents = if tag == TAG_DRAFT_TREE { r.bytes()? } else { Vec::new() };
+                if tag == TAG_DRAFT_TREE && parents.len() != draft.len() {
+                    return Err(anyhow!(
+                        "wire: tree draft with {} parents for {} nodes",
+                        parents.len(),
+                        draft.len()
+                    ));
+                }
+                Message::Draft(DraftMsg {
+                    client_id,
+                    round,
+                    prefix,
+                    prompt_len,
+                    draft,
+                    parents,
+                    q_probs: r.f32s()?,
+                    new_request: r.u8()? != 0,
+                    draft_wall_ns: r.u64()?,
+                })
+            }
+            tag @ (TAG_VERDICT | TAG_VERDICT_TREE) => {
+                let client_id = r.u32()?;
+                let round = r.u64()?;
+                let accepted = r.u32()?;
+                let path = if tag == TAG_VERDICT_TREE { r.bytes()? } else { Vec::new() };
+                Message::Verdict(VerdictMsg {
+                    client_id,
+                    round,
+                    accepted,
+                    path,
+                    correction: r.u8()?,
+                    next_alloc: r.u32()?,
+                    shard: r.u32()?,
+                })
+            }
             TAG_SHUTDOWN => Message::Shutdown,
             t => return Err(anyhow!("wire: unknown tag {t}")),
         };
@@ -204,10 +251,15 @@ impl Message {
     pub fn wire_bytes(&self) -> usize {
         match self {
             Message::Draft(d) => {
+                let topology =
+                    if d.parents.is_empty() { 0 } else { 4 + d.parents.len() };
                 4 + 1 + 4 + 8 + (4 + d.prefix.len()) + 4 + (4 + d.draft.len())
-                    + (4 + d.q_probs.len() * 4) + 1 + 8
+                    + topology + (4 + d.q_probs.len() * 4) + 1 + 8
             }
-            Message::Verdict(_) => 4 + 1 + 4 + 8 + 4 + 1 + 4 + 4,
+            Message::Verdict(v) => {
+                let path = if v.path.is_empty() { 0 } else { 4 + v.path.len() };
+                4 + 1 + 4 + 8 + 4 + path + 1 + 4 + 4
+            }
             Message::Shutdown => 4 + 1,
         }
     }
@@ -227,10 +279,34 @@ mod tests {
             prefix: (0..rng.below(40)).map(|_| rng.below(256) as u8).collect(),
             prompt_len: rng.below(20) as u32,
             draft: (0..s).map(|_| rng.below(256) as u8).collect(),
+            parents: Vec::new(),
             q_probs: (0..s * v).map(|_| rng.f32()).collect(),
             new_request: rng.bool(0.5),
             draft_wall_ns: rng.next_u64() % 1_000_000,
         }
+    }
+
+    /// A draft carrying a random (valid) tree topology.
+    fn sample_tree_draft(rng: &mut crate::util::Rng) -> DraftMsg {
+        use crate::spec::tree::DraftTree;
+        let arity = rng.below(3) as usize + 1;
+        let depth = rng.below(4) as usize + 1;
+        let budget = rng.below(12) as usize + 1;
+        let tree = DraftTree::shaped(arity, depth, budget, 32, 16);
+        let mut d = sample_draft(rng);
+        d.draft = (0..tree.len()).map(|_| rng.below(256) as u8).collect();
+        d.parents = tree.parents().to_vec();
+        d.q_probs = (0..tree.len() * 16).map(|_| rng.f32()).collect();
+        d
+    }
+
+    fn roundtrip(m: &Message) {
+        let frame = m.encode();
+        let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - 4);
+        assert_eq!(len + 4, m.wire_bytes(), "wire_bytes must match encode");
+        let back = Message::decode(&frame[4..]).unwrap();
+        assert_eq!(*m, back);
     }
 
     #[test]
@@ -242,6 +318,7 @@ mod tests {
                     client_id: rng.below(8) as u32,
                     round: rng.next_u64() % 1000,
                     accepted: rng.below(33) as u32,
+                    path: Vec::new(),
                     correction: rng.below(256) as u8,
                     next_alloc: rng.below(33) as u32,
                     shard: rng.below(8) as u32,
@@ -249,14 +326,108 @@ mod tests {
                 Message::Shutdown,
             ];
             for m in msgs {
-                let frame = m.encode();
-                let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
-                assert_eq!(len, frame.len() - 4);
-                assert_eq!(len + 4, m.wire_bytes(), "wire_bytes must match encode");
-                let back = Message::decode(&frame[4..]).unwrap();
-                assert_eq!(m, back);
+                roundtrip(&m);
             }
         });
+    }
+
+    /// Tree topologies round-trip (parents and accepted paths survive, and
+    /// the decoded topology reconstructs the same `DraftTree`).
+    #[test]
+    fn prop_tree_roundtrip() {
+        use crate::spec::tree::DraftTree;
+        proptest::check("wire_tree_roundtrip", proptest::default_cases(), |rng| {
+            let d = sample_tree_draft(rng);
+            let tree = DraftTree::from_parents(d.parents.clone()).unwrap();
+            let m = Message::Draft(d);
+            roundtrip(&m);
+            if let Message::Draft(back) =
+                Message::decode(&m.encode()[4..]).unwrap()
+            {
+                assert_eq!(DraftTree::from_parents(back.parents).unwrap(), tree);
+            } else {
+                panic!("decoded to a different variant");
+            }
+            let depth = rng.below(6) as usize;
+            let v = Message::Verdict(VerdictMsg {
+                client_id: rng.below(8) as u32,
+                round: rng.next_u64() % 1000,
+                accepted: depth as u32,
+                path: (0..depth).map(|i| i as u8).collect(),
+                correction: rng.below(256) as u8,
+                next_alloc: rng.below(33) as u32,
+                shard: rng.below(8) as u32,
+            });
+            roundtrip(&v);
+        });
+    }
+
+    #[test]
+    fn chain_frames_are_bit_identical_to_legacy_layout() {
+        // The legacy TAG_DRAFT/TAG_VERDICT byte layouts are load-bearing:
+        // chain-mode runs must produce the exact pre-tree frames (same
+        // tags, same sizes — the delay model sleeps on these bytes).
+        let d = DraftMsg {
+            client_id: 3,
+            round: 7,
+            prefix: vec![1, 2, 3],
+            prompt_len: 3,
+            draft: vec![4, 5],
+            parents: Vec::new(),
+            q_probs: vec![0.5; 32],
+            new_request: true,
+            draft_wall_ns: 99,
+        };
+        let frame = Message::Draft(d.clone()).encode();
+        assert_eq!(frame[4], 1); // TAG_DRAFT
+        assert_eq!(
+            frame.len(),
+            4 + 1 + 4 + 8 + (4 + 3) + 4 + (4 + 2) + (4 + 32 * 4) + 1 + 8
+        );
+        let mut tree_d = d;
+        tree_d.parents = vec![255, 0];
+        let tree_frame = Message::Draft(tree_d).encode();
+        assert_eq!(tree_frame[4], 4); // TAG_DRAFT_TREE
+        assert_eq!(tree_frame.len(), frame.len() + 4 + 2);
+        let v = VerdictMsg {
+            client_id: 0,
+            round: 1,
+            accepted: 2,
+            path: Vec::new(),
+            correction: 9,
+            next_alloc: 4,
+            shard: 0,
+        };
+        let vframe = Message::Verdict(v.clone()).encode();
+        assert_eq!(vframe[4], 2); // TAG_VERDICT
+        assert_eq!(vframe.len(), 4 + 1 + 4 + 8 + 4 + 1 + 4 + 4);
+        let mut tv = v;
+        tv.path = vec![0, 1];
+        let tvframe = Message::Verdict(tv).encode();
+        assert_eq!(tvframe[4], 5); // TAG_VERDICT_TREE
+        assert_eq!(tvframe.len(), vframe.len() + 4 + 2);
+    }
+
+    #[test]
+    fn tree_draft_with_mismatched_parents_rejected() {
+        let mut d = DraftMsg {
+            client_id: 0,
+            round: 0,
+            prefix: vec![1],
+            prompt_len: 1,
+            draft: vec![2, 3],
+            parents: vec![255, 0],
+            q_probs: vec![0.5; 32],
+            new_request: false,
+            draft_wall_ns: 0,
+        };
+        let frame = Message::Draft(d.clone()).encode();
+        assert!(Message::decode(&frame[4..]).is_ok());
+        // Corrupt: drop one draft token so counts disagree.
+        d.draft.pop();
+        d.q_probs.truncate(16);
+        let frame = Message::Draft(d).encode();
+        assert!(Message::decode(&frame[4..]).is_err());
     }
 
     #[test]
@@ -272,6 +443,7 @@ mod tests {
             prefix: vec![1, 2, 3],
             prompt_len: 3,
             draft: vec![4],
+            parents: Vec::new(),
             q_probs: vec![0.5; 16],
             new_request: false,
             draft_wall_ns: 0,

@@ -46,8 +46,22 @@ pub struct VerifyRequest {
     pub q_probs: Vec<f32>,
     /// Prefix length per client (draft j sits at sequence index pos0+j).
     pub pos0: Vec<i32>,
+    /// Row-major `[batch, k]` draft-position parent indices: the context
+    /// of draft position `j` is the prefix plus the tokens along its
+    /// parent chain (`−1` = rooted at the prefix). A linear chain is
+    /// `parent[j] = j − 1` — see [`chain_parent_array`] — which makes the
+    /// engines' per-position contexts exactly the pre-tree linear ones;
+    /// tree topologies carry real branching plus phantom bonus rows (see
+    /// `spec/tree.rs` for the row-layout contract).
+    pub parent: Vec<i32>,
     pub k: usize,
     pub vocab: usize,
+}
+
+/// The chain parent layout: within each client row, position `j`'s parent
+/// is `j − 1` (position 0 roots at the prefix).
+pub fn chain_parent_array(batch: usize, k: usize) -> Vec<i32> {
+    (0..batch * k).map(|idx| (idx % k) as i32 - 1).collect()
 }
 
 /// Verification outputs (see `python/compile/model.py::verify_graph`).
@@ -129,6 +143,12 @@ mod tests {
     fn bucket_falls_back_to_largest() {
         let buckets = vec![(4, 128), (8, 256)];
         assert_eq!(pick_bucket(&buckets, 16, 512), (8, 256));
+    }
+
+    #[test]
+    fn chain_parent_layout() {
+        assert_eq!(chain_parent_array(2, 3), vec![-1, 0, 1, -1, 0, 1]);
+        assert_eq!(chain_parent_array(0, 4), Vec::<i32>::new());
     }
 
     #[test]

@@ -143,6 +143,32 @@ pub struct MockVerifier {
     buckets: Vec<(usize, usize)>,
 }
 
+/// Context of draft position `j` in row `row`: the prefix plus the tokens
+/// along `j`'s parent chain, truncated to the bucket length (the verify
+/// graph's row clamp). For the chain layout (`parent[j] = j − 1`) this is
+/// exactly the pre-tree linear context `tokens[..pos0 + j]`.
+fn ctx_of(req: &VerifyRequest, row: usize, j: usize) -> Vec<u8> {
+    let k = req.k;
+    let mut path = Vec::new();
+    let mut p = req.parent[row * k + j];
+    while p >= 0 {
+        path.push(req.draft_tok[row * k + p as usize] as u8);
+        let next = req.parent[row * k + p as usize];
+        // Topological order is validated upstream; never loop on bad data.
+        if next >= p {
+            break;
+        }
+        p = next;
+    }
+    path.reverse();
+    let pos0 = (req.pos0[row] as usize).min(req.seq);
+    let mut ctx: Vec<u8> =
+        req.tokens[row * req.seq..row * req.seq + pos0].iter().map(|&t| t as u8).collect();
+    ctx.extend_from_slice(&path);
+    ctx.truncate(req.seq);
+    ctx
+}
+
 impl Verifier for MockVerifier {
     fn verify(&mut self, req: &VerifyRequest) -> Result<VerifyOutput> {
         let v = req.vocab;
@@ -150,19 +176,17 @@ impl Verifier for MockVerifier {
             return Err(anyhow!("vocab mismatch: {} vs {}", v, self.world.vocab));
         }
         let (b, k) = (req.batch, req.k);
+        if req.parent.len() != b * k {
+            return Err(anyhow!("parent array {} != batch*k {}", req.parent.len(), b * k));
+        }
         let mut ratio = vec![0.0f32; b * k];
         let mut resid = vec![0.0f32; b * k * v];
         let mut bonus = vec![0.0f32; b * v];
         for row in 0..b {
-            let toks = &req.tokens[row * req.seq..(row + 1) * req.seq];
-            let pos0 = req.pos0[row] as usize;
             for j in 0..k {
-                // Context = everything before draft position j (clipped to
-                // the bucket, exactly like the verify graph's row clamp —
-                // rows past the client's true draft length are ignored by
-                // the coordinator).
-                let end = (pos0 + j).min(req.seq);
-                let ctx: Vec<u8> = toks[..end].iter().map(|&t| t as u8).collect();
+                // Context from the parent chain (rows past the client's
+                // true node count are ignored by the coordinator).
+                let ctx = ctx_of(req, row, j);
                 let p = self.world.target_dist(&ctx);
                 let q = &req.q_probs[(row * k + j) * v..(row * k + j + 1) * v];
                 let tok = req.draft_tok[row * k + j] as usize;
@@ -184,8 +208,13 @@ impl Verifier for MockVerifier {
                     out.copy_from_slice(&p);
                 }
             }
-            let end = (pos0 + k).min(req.seq);
-            let ctx: Vec<u8> = toks[..end].iter().map(|&t| t as u8).collect();
+            // Bonus output: the target after the last row's context plus
+            // its own token — for the chain layout this is exactly the
+            // legacy `tokens[..pos0 + k]` context. (Tree clients never use
+            // this output: each leaf has its own phantom bonus row.)
+            let mut ctx = ctx_of(req, row, k - 1);
+            ctx.push(req.draft_tok[row * k + (k - 1)] as u8);
+            ctx.truncate(req.seq);
             bonus[row * v..(row + 1) * v].copy_from_slice(&self.world.target_dist(&ctx));
         }
         Ok(VerifyOutput { ratio, resid, bonus })
@@ -213,7 +242,10 @@ impl MockEngineFactory {
         MockEngineFactory {
             world: Arc::new(world),
             noises: vec![
-                // Mirror the real zoo: bigger drafts diverge less.
+                // Mirror the real zoo: bigger drafts diverge less. The
+                // nano tier is the low-acceptance regime where branching
+                // speculation pays (the `tree` preset's draft).
+                ("qwen-draft-nano".into(), 0.75),
                 ("qwen-draft-06b".into(), 0.5),
                 ("qwen-draft-17b".into(), 0.3),
                 ("llama-draft-1b".into(), 0.55),
@@ -366,6 +398,7 @@ mod tests {
             draft_tok,
             q_probs: q_probs.clone(),
             pos0: vec![prompt.len() as i32],
+            parent: super::engine::chain_parent_array(b, k),
             k,
             vocab: v,
         };
@@ -382,6 +415,46 @@ mod tests {
         }
         let sb: f32 = out.bonus.iter().sum();
         assert!((sb - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn verifier_tree_contexts_follow_parent_pointers() {
+        let w = world();
+        let f = MockEngineFactory::new(w.clone());
+        let mut ver = f.make_verifier("fam").unwrap();
+        let (b, s, v, k) = (1usize, 16usize, 32usize, 4usize);
+        let prompt = [3u8, 4, 5];
+        let mut tokens = vec![0i32; b * s];
+        for (i, &t) in prompt.iter().enumerate() {
+            tokens[i] = t as i32;
+        }
+        // Nodes 0 and 1 are siblings off the root; node 2 is a child of
+        // node 1; row 3 is unused padding.
+        let draft_tok = vec![7i32, 9, 11, 0];
+        tokens[3] = 7;
+        tokens[4] = 9;
+        tokens[5] = 11;
+        let parent = vec![-1i32, -1, 1, 2];
+        let q_probs = vec![1.0f32 / v as f32; k * v];
+        let req = VerifyRequest {
+            tokens,
+            batch: b,
+            seq: s,
+            draft_tok,
+            q_probs,
+            pos0: vec![3],
+            parent,
+            k,
+            vocab: v,
+        };
+        let out = ver.verify(&req).unwrap();
+        // Siblings share the root context ⇒ identical residual rows.
+        assert_eq!(&out.resid[0..v], &out.resid[v..2 * v]);
+        // Node 2's context is the prefix plus its parent's token (9), NOT
+        // the linear prefix+[7, 9] a chain layout would use.
+        let p = w.target_dist(&[3, 4, 5, 9]);
+        let expect = (p[11] / (1.0 / 32.0)).min(1.0);
+        assert!((out.ratio[2] - expect).abs() < 1e-5, "{} vs {expect}", out.ratio[2]);
     }
 
     #[test]

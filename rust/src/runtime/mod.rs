@@ -13,7 +13,10 @@ pub mod xla_engine;
 #[path = "xla_stub.rs"]
 pub mod xla_engine;
 
-pub use engine::{pick_bucket, Drafter, EngineFactory, Verifier, VerifyOutput, VerifyRequest};
+pub use engine::{
+    chain_parent_array, pick_bucket, Drafter, EngineFactory, Verifier, VerifyOutput,
+    VerifyRequest,
+};
 pub use manifest::{default_artifacts_dir, Manifest};
 pub use mock::{MockEngineFactory, MockWorld};
 pub use xla_engine::{XlaDrafter, XlaEngineFactory, XlaVerifier};

@@ -253,6 +253,20 @@ impl Verifier for XlaVerifier {
         if req.k != self.k {
             return Err(anyhow!("k mismatch: req {} vs artifact {}", req.k, self.k));
         }
+        // The AOT verify graph gathers *linear* per-position contexts; a
+        // branching topology needs a tree-attention artifact. Until one is
+        // compiled, tree waves run on the mock engine.
+        let chain = req
+            .parent
+            .iter()
+            .enumerate()
+            .all(|(idx, &p)| p == (idx % req.k) as i32 - 1);
+        if !chain {
+            return Err(anyhow!(
+                "XLA verify artifacts are chain-only; tree topologies need a \
+                 tree-attention graph (use --engine mock or spec_shape=chain)"
+            ));
+        }
         let v = self.vocab;
         // Pad the request into the bucket shape.
         let mut tokens = vec![0i32; bb * bs];
@@ -419,6 +433,7 @@ mod tests {
             draft_tok: vec![b' ' as i32; b * k],
             q_probs: vec![1.0 / v as f32; b * k * v],
             pos0: vec![prompt.len() as i32; b],
+            parent: super::engine::chain_parent_array(b, k),
             k,
             vocab: v,
         };
@@ -471,6 +486,7 @@ mod tests {
             draft_tok,
             q_probs,
             pos0: vec![prompt.len() as i32],
+            parent: super::engine::chain_parent_array(b, k),
             k,
             vocab: v,
         };

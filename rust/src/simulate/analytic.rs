@@ -21,13 +21,14 @@
 //! split — the analytic counterpart of
 //! [`run_pool`](crate::coordinator::run_pool).
 
-use crate::configsys::{CoordMode, Policy, Scenario};
+use crate::configsys::{CoordMode, Policy, Scenario, SpecShape};
 use crate::coordinator::{RoundCore, WaveObs};
 use crate::metrics::recorder::Recorder;
 use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
 use crate::sched::baselines::Allocator;
 use crate::sched::gradient::split_budget_by_members;
 use crate::sched::Estimators;
+use crate::spec::tree::{adaptive_profile, DraftTree};
 use crate::util::Rng;
 use crate::workload::domains::DOMAINS;
 
@@ -51,6 +52,7 @@ pub fn domain_alpha(domain: &str) -> f64 {
 /// Draft-model quality multiplier (bigger drafts track the target better).
 pub fn model_quality(model: &str) -> f64 {
     match model {
+        m if m.contains("nano") => 0.65,
         m if m.contains("17b") || m.contains("3b") => 1.1,
         m if m.contains("06b") || m.contains("1b") => 0.9,
         _ => 1.0,
@@ -95,6 +97,12 @@ pub struct SimConfig {
     pub verify_s: f64,
     /// Virtual-time draft compute per speculated token.
     pub draft_token_s: f64,
+    /// Speculation topology (the live stack's `Scenario::spec_shape`).
+    pub spec_shape: SpecShape,
+    /// Engine rows available per client (the artifact K): trees are
+    /// clamped so `nodes + leaves ≤ verify_rows`, exactly like the live
+    /// batcher's phantom-row constraint.
+    pub verify_rows: usize,
 }
 
 impl SimConfig {
@@ -110,6 +118,9 @@ impl SimConfig {
             min_wave_fill: s.effective_wave_fill(),
             verify_s: 2e-3,
             draft_token_s: 2e-4,
+            spec_shape: s.spec_shape,
+            // The mock/XLA verify artifacts carry K = 32 rows.
+            verify_rows: 32,
         }
     }
 }
@@ -251,29 +262,75 @@ impl AnalyticSim {
         self.clients.iter().map(|c| c.true_alpha()).collect()
     }
 
-    /// Draw one client's verification outcome: per-token indicators
+    /// Draw one client's verification outcome: per-node indicators
     /// `clamp(α + noise)` — same mean as the real min(1, p/q) ratios;
-    /// acceptance draws r_j ≤ ratio_j. Also advances the client's request
+    /// acceptance draws r_j ≤ ratio_j. Chain mode runs the legacy loop
+    /// (bit-identical RNG stream); tree shapes walk the same `shaped`
+    /// topology the live draft server builds, advancing a level when any
+    /// sibling try accepts (the indicator abstraction of `verify_tree`'s
+    /// sequential residual scheme). Also advances the client's request
     /// lifecycle + Markov domain switching. Returns
-    /// `(s, accepted, goodput, mean_ratio)`.
-    fn verify_one(&mut self, i: usize) -> (usize, usize, usize, f64) {
-        let s = self.alloc[i];
+    /// `(nodes, accepted, goodput, mean_ratio, spec_depth)`.
+    fn verify_one(&mut self, i: usize) -> (usize, usize, usize, f64, usize) {
+        let budget = self.alloc[i];
         let alpha = self.clients[i].true_alpha();
-        let mut accepted = 0usize;
-        let mut ratio_sum = 0.0f64;
-        let mut rejected = false;
-        for _ in 0..s {
-            let ratio =
-                (alpha + self.cfg.indicator_noise * self.rng.normal()).clamp(0.0, 1.0);
-            ratio_sum += ratio;
-            if !rejected {
-                if self.rng.f64() <= ratio {
-                    accepted += 1;
-                } else {
-                    rejected = true;
+        let (s, accepted, ratio_sum, spec_depth) = if self.cfg.spec_shape.is_chain() {
+            let mut accepted = 0usize;
+            let mut ratio_sum = 0.0f64;
+            let mut rejected = false;
+            for _ in 0..budget {
+                let ratio =
+                    (alpha + self.cfg.indicator_noise * self.rng.normal()).clamp(0.0, 1.0);
+                ratio_sum += ratio;
+                if !rejected {
+                    if self.rng.f64() <= ratio {
+                        accepted += 1;
+                    } else {
+                        rejected = true;
+                    }
                 }
             }
-        }
+            (budget, accepted, ratio_sum, budget)
+        } else {
+            let (arity, depth) = match self.cfg.spec_shape {
+                SpecShape::Tree { arity, depth } => (arity, depth),
+                // The live adaptive rule uses the client's observed
+                // acceptance rate; the analytic counterpart feeds the
+                // same rule the estimator's α̂.
+                SpecShape::Adaptive => adaptive_profile(self.core.estimators.alpha_hat[i]),
+                SpecShape::Chain => unreachable!("chain handled above"),
+            };
+            let tree = DraftTree::shaped(
+                arity,
+                depth,
+                budget,
+                self.cfg.verify_rows,
+                self.cfg.max_draft,
+            );
+            let n = tree.len();
+            let mut on_path = vec![false; n];
+            // Slot 0 = the root; slot c + 1 = node c: whether a child of
+            // that node already accepted (sibling tries stop there).
+            let mut descended = vec![false; n + 1];
+            let mut accepted = 0usize;
+            let mut ratio_sum = 0.0f64;
+            for c in 0..n {
+                let ratio =
+                    (alpha + self.cfg.indicator_noise * self.rng.normal()).clamp(0.0, 1.0);
+                ratio_sum += ratio;
+                let (pslot, parent_on_path) = match tree.parent_of(c) {
+                    None => (0, true),
+                    Some(p) => (p + 1, on_path[p]),
+                };
+                let attempted = parent_on_path && !descended[pslot];
+                if attempted && self.rng.f64() <= ratio {
+                    on_path[c] = true;
+                    descended[pslot] = true;
+                    accepted += 1;
+                }
+            }
+            (n, accepted, ratio_sum, tree.max_depth())
+        };
         let goodput = accepted + 1;
         let mean_ratio = if s == 0 { 1.0 } else { ratio_sum / s as f64 };
 
@@ -293,7 +350,7 @@ impl AnalyticSim {
                 }
             };
         }
-        (s, accepted, goodput, mean_ratio)
+        (s, accepted, goodput, mean_ratio, spec_depth)
     }
 
     /// Advance one sync barrier round (all members); returns realized
@@ -304,13 +361,14 @@ impl AnalyticSim {
         let mut obs = Vec::with_capacity(members.len());
         let mut goodputs = Vec::with_capacity(members.len());
         for &i in &members {
-            let (s, accepted, goodput, mean_ratio) = self.verify_one(i);
+            let (s, accepted, goodput, mean_ratio, spec_depth) = self.verify_one(i);
             obs.push(WaveObs {
                 client_id: i,
                 s_used: s,
                 accepted,
                 goodput,
                 mean_ratio,
+                spec_depth,
                 max_next: self.cfg.max_draft,
             });
             goodputs.push(goodput);
@@ -368,13 +426,14 @@ impl AnalyticSim {
 
         let mut obs = Vec::with_capacity(wave_members.len());
         for &i in &wave_members {
-            let (s, accepted, goodput, mean_ratio) = self.verify_one(i);
+            let (s, accepted, goodput, mean_ratio, spec_depth) = self.verify_one(i);
             obs.push(WaveObs {
                 client_id: i,
                 s_used: s,
                 accepted,
                 goodput,
                 mean_ratio,
+                spec_depth,
                 max_next: self.cfg.max_draft,
             });
         }
@@ -694,6 +753,55 @@ mod tests {
         assert!(
             (j_sync - j_async).abs() <= 0.05 * j_sync,
             "fairness drift too large: sync {j_sync:.4} vs async {j_async:.4}"
+        );
+    }
+
+    /// The tentpole's goodput lever, in the analytic model: the `tree`
+    /// preset's binary profile must beat the chain at the exact same node
+    /// budget, and the realized shapes must actually branch.
+    #[test]
+    fn tree_shape_raises_goodput_at_equal_node_budget() {
+        let mut s = Scenario::preset("tree").unwrap();
+        s.rounds = 300;
+        let mut tree_sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        tree_sim.run();
+        s.spec_shape = SpecShape::Chain;
+        let mut chain_sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        chain_sim.run();
+        let (gt, gc) = (
+            tree_sim.recorder().goodput_per_verdict(),
+            chain_sim.recorder().goodput_per_verdict(),
+        );
+        assert!(gt > gc, "tree {gt:.3} must beat chain {gc:.3} tokens/verdict");
+        // Branching really happened: depth < nodes on some records, and
+        // node budgets stayed within C either way.
+        let branched = tree_sim
+            .recorder()
+            .rounds
+            .iter()
+            .flat_map(|r| r.clients.iter())
+            .any(|c| c.spec_depth < c.s_used);
+        assert!(branched);
+        for r in tree_sim.recorder().rounds.iter() {
+            let used: usize = r.clients.iter().map(|c| c.s_used).sum();
+            assert!(used <= 24, "{used}");
+        }
+    }
+
+    /// The adaptive shape holds its own: never worse than the fixed chain
+    /// on the heterogeneous-α tree preset.
+    #[test]
+    fn adaptive_shape_not_worse_than_chain() {
+        let mut s = Scenario::preset("tree").unwrap();
+        s.rounds = 300;
+        s.spec_shape = SpecShape::Adaptive;
+        let mut ad = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        ad.run();
+        s.spec_shape = SpecShape::Chain;
+        let mut ch = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        ch.run();
+        assert!(
+            ad.recorder().goodput_per_verdict() >= ch.recorder().goodput_per_verdict() * 0.98
         );
     }
 

@@ -27,6 +27,29 @@ pub fn marginal_gain(alpha: f64, s: usize) -> f64 {
     alpha.clamp(0.0, 1.0).powi(s as i32 + 1)
 }
 
+/// Expected goodput of verifying a *full* (arity `a`, depth `d`) candidate
+/// tree under per-try acceptance probability `α`, with sequential sibling
+/// tries per level: the path advances past a level iff any of the `a`
+/// siblings accepts, so the per-level advance probability is
+/// `A = 1 − (1 − α)^a` and
+///
+/// ```text
+/// μ_tree(a, d, α) = 1 + A + A² + … + A^d = (1 − A^{d+1}) / (1 − A).
+/// ```
+///
+/// `a = 1` recovers [`expected_goodput`] with `S = d`. Partial trees go
+/// through [`DraftTree::expected_goodput`](crate::spec::DraftTree), which
+/// sums per-node path probabilities; this closed form is the analytic
+/// steady-state model for full profiles.
+pub fn expected_tree_goodput(alpha: f64, arity: usize, depth: usize) -> f64 {
+    let alpha = alpha.clamp(0.0, 1.0);
+    let advance = 1.0 - (1.0 - alpha).powi(arity.max(1) as i32);
+    if (1.0 - advance) < 1e-12 {
+        return (depth + 1) as f64;
+    }
+    (1.0 - advance.powi(depth as i32 + 1)) / (1.0 - advance)
+}
+
 /// Expected *speedup* of speculative decoding vs autoregressive decoding
 /// when verification costs one target forward: μ(S, α) target tokens per
 /// round (Leviathan et al. eq. 1; used in the quickstart example report).
@@ -91,6 +114,37 @@ mod tests {
             let a1 = rng.f64() * 0.5;
             let a2 = a1 + rng.f64() * 0.4 + 0.01;
             assert!(expected_goodput(a2, s) > expected_goodput(a1, s));
+        });
+    }
+
+    #[test]
+    fn tree_goodput_arity1_matches_chain() {
+        for &alpha in &[0.0f64, 0.2, 0.6, 0.9, 1.0] {
+            for d in 0..12usize {
+                assert!(
+                    (expected_tree_goodput(alpha, 1, d) - expected_goodput(alpha, d)).abs()
+                        < 1e-9,
+                    "alpha={alpha} d={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_tree_goodput_monotone_in_arity_and_depth() {
+        proptest::check("tree_goodput_monotone", proptest::default_cases(), |rng| {
+            let alpha = rng.f64() * 0.9 + 0.05;
+            let a = rng.below(4) as usize + 1;
+            let d = rng.below(8) as usize + 1;
+            // Wider and deeper full trees never lose expected goodput.
+            assert!(
+                expected_tree_goodput(alpha, a + 1, d) >= expected_tree_goodput(alpha, a, d)
+            );
+            assert!(
+                expected_tree_goodput(alpha, a, d + 1) >= expected_tree_goodput(alpha, a, d)
+            );
+            // And stay within the perfect-acceptance bound.
+            assert!(expected_tree_goodput(alpha, a, d) <= (d + 1) as f64 + 1e-9);
         });
     }
 

@@ -1,7 +1,10 @@
-//! Speculative-decoding core: goodput math and rejection sampling.
+//! Speculative-decoding core: goodput math, topologies, and rejection
+//! sampling (chain and tree).
 
 pub mod math;
 pub mod rejection;
+pub mod tree;
 
-pub use math::{expected_goodput, marginal_gain};
-pub use rejection::{verify_client, ClientVerdict};
+pub use math::{expected_goodput, expected_tree_goodput, marginal_gain};
+pub use rejection::{verify_client, verify_tree, ClientVerdict, TreeVerdict};
+pub use tree::{adaptive_profile, DraftTree};

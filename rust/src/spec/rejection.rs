@@ -12,6 +12,16 @@
 //! distributed exactly as the target model (the lossless property —
 //! verified statistically in the tests below).
 
+//!
+//! [`verify_tree`] generalizes the same math to a [`DraftTree`]: walk from
+//! the root, trying each level's sibling candidates sequentially with
+//! recursive-rejection residuals (lossless for i.i.d. proposals), descend
+//! on the first accepted sibling, and sample the correction from the final
+//! residual at the first off-path rejection — or the leaf's phantom bonus
+//! row when the whole path is accepted. A chain is the arity-1 tree and
+//! produces bit-identical RNG draws to [`verify_client`].
+
+use crate::spec::tree::DraftTree;
 use crate::util::Rng;
 
 /// Per-client verification verdict for one round.
@@ -68,9 +78,130 @@ pub fn verify_client(
     ClientVerdict { accepted, correction, goodput: accepted + 1, mean_ratio }
 }
 
+/// Verdict of one tree verification.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreeVerdict {
+    /// Accepted node ids along the root path, in root → leaf order.
+    pub path: Vec<usize>,
+    /// The correction (off-path rejection) or bonus (leaf reached) token.
+    pub correction: u8,
+    /// Realized goodput: accepted depth + 1.
+    pub goodput: usize,
+    /// Mean acceptance ratio over ALL drafted nodes (eq. 3 per-node term).
+    pub mean_ratio: f64,
+}
+
+/// Run tree rejection sampling for one client (the tree generalization of
+/// [`verify_client`]; lossless — the output path + correction is
+/// distributed exactly as target-model sampling).
+///
+/// At each level the current node's children are tried in node order.
+/// The first child uses the engine ratio `min(1, p/q)`. After `j`
+/// rejections the (normalized) leftover target is `resid_j` — the
+/// engine's residual row for `j = 1`, then `norm((resid_j − q)₊)` — and
+/// child `j+1` (an i.i.d. proposal from the same `q`) accepts with
+/// `min(1, resid_j(tok)/q(tok))`: the recursive-rejection scheme whose
+/// per-level acceptance telescopes exactly to the target distribution.
+/// If every child rejects, the correction is sampled from the final
+/// residual; if the path reaches a leaf, the bonus is sampled from the
+/// leaf's phantom row (all-zero q ⇒ residual ≡ the target after the
+/// path). See `spec/tree.rs` for the row-layout contract.
+///
+/// * `tokens` — drafted token per node (`tree.len()` entries);
+/// * `ratios` — engine `min(1, p/q)` per node (`≥ tree.len()` entries);
+/// * `resid`  — row-major `[rows × vocab]` residuals covering
+///   `tree.rows_needed()` rows (real nodes then phantom leaf rows);
+/// * `q`      — row-major `[tree.len() × vocab]` proposal distributions.
+pub fn verify_tree(
+    tree: &DraftTree,
+    tokens: &[u8],
+    ratios: &[f32],
+    resid: &[f32],
+    q: &[f32],
+    vocab: usize,
+    rng: &mut Rng,
+) -> TreeVerdict {
+    let n = tree.len();
+    let v = vocab;
+    debug_assert!(tokens.len() >= n);
+    debug_assert!(ratios.len() >= n);
+    debug_assert!(resid.len() >= tree.rows_needed() * v);
+    debug_assert!(q.len() >= n * v);
+    let mean_ratio = if n == 0 {
+        1.0
+    } else {
+        ratios[..n].iter().map(|&r| r as f64).sum::<f64>() / n as f64
+    };
+
+    let mut path: Vec<usize> = Vec::new();
+    let mut cur: Option<usize> = None;
+    loop {
+        let kids: &[usize] = match cur {
+            None => tree.root_children(),
+            Some(i) => tree.children(i),
+        };
+        if kids.is_empty() {
+            // Whole path accepted: bonus from the phantom row after `cur`
+            // (row 0 for the empty tree — exactly the chain's S = 0 case).
+            let row = match cur {
+                None => 0,
+                Some(leaf) => tree.bonus_row(leaf),
+            };
+            let correction = rng.categorical(&resid[row * v..(row + 1) * v]) as u8;
+            return TreeVerdict { goodput: path.len() + 1, path, correction, mean_ratio };
+        }
+        // Sequential sibling tries with recursive-rejection residuals.
+        let mut residual: Vec<f32> = Vec::new();
+        let mut descended: Option<usize> = None;
+        for (j, &c) in kids.iter().enumerate() {
+            let accept_p = if j == 0 {
+                ratios[c] as f64
+            } else {
+                let tok = tokens[c] as usize;
+                let qt = q[c * v + tok].max(1e-9) as f64;
+                (residual[tok] as f64 / qt).min(1.0)
+            };
+            if rng.f64() <= accept_p {
+                descended = Some(c);
+                break;
+            }
+            if j == 0 {
+                residual = resid[c * v..(c + 1) * v].to_vec();
+            } else {
+                let qr = &q[c * v..(c + 1) * v];
+                let mut s = 0.0f32;
+                for t in 0..v {
+                    let d = (residual[t] - qr[t]).max(0.0);
+                    residual[t] = d;
+                    s += d;
+                }
+                if s > 1e-9 {
+                    for x in residual.iter_mut() {
+                        *x /= s;
+                    }
+                }
+                // s ≈ 0 means this try accepts almost surely; the uniform
+                // fallback inside `categorical` covers the measure-zero
+                // remainder.
+            }
+        }
+        match descended {
+            Some(c) => {
+                path.push(c);
+                cur = Some(c);
+            }
+            None => {
+                let correction = rng.categorical(&residual) as u8;
+                return TreeVerdict { goodput: path.len() + 1, path, correction, mean_ratio };
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spec::tree::NO_PARENT;
     use crate::util::proptest;
 
     #[test]
@@ -175,6 +306,177 @@ mod tests {
                 p[t]
             );
         }
+    }
+
+    /// Chain ≡ arity-1 tree, bit for bit: identical RNG draw sequences ⇒
+    /// identical accepted counts and corrections on every case.
+    #[test]
+    fn prop_chain_equals_arity1_tree_bit_for_bit() {
+        proptest::check("chain_tree_equivalence", proptest::default_cases(), |rng| {
+            let vocab = 8;
+            let s = rng.below(10) as usize;
+            let ratios: Vec<f32> = (0..s).map(|_| rng.f32()).collect();
+            // Real-node residual rows plus the phantom bonus row at `s`
+            // (the chain layout for S < K).
+            let resid: Vec<f32> =
+                (0..(s + 1) * vocab).map(|_| rng.f32() + 1e-3).collect();
+            let bonus = &resid[s * vocab..(s + 1) * vocab];
+            let tokens: Vec<u8> = (0..s).map(|_| rng.below(vocab as u64) as u8).collect();
+            let q: Vec<f32> = (0..s * vocab).map(|_| rng.f32() + 1e-3).collect();
+            let seed = rng.next_u64();
+            let mut rng_a = Rng::new(seed);
+            let mut rng_b = Rng::new(seed);
+            let chain = verify_client(&ratios, &resid, bonus, vocab, &mut rng_a);
+            let tree = DraftTree::chain(s);
+            let tv = verify_tree(&tree, &tokens, &ratios, &resid, &q, vocab, &mut rng_b);
+            assert_eq!(tv.path.len(), chain.accepted);
+            assert_eq!(tv.path, (0..chain.accepted).collect::<Vec<_>>());
+            assert_eq!(tv.correction, chain.correction);
+            assert_eq!(tv.goodput, chain.goodput);
+            assert!((tv.mean_ratio - chain.mean_ratio).abs() < 1e-12);
+            // The two consumed exactly the same RNG stream.
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+        });
+    }
+
+    /// The tree lossless property: with two sibling candidates drawn
+    /// i.i.d. from q and verified by the sequential-residual scheme, the
+    /// *first output token* is still distributed exactly as the target p.
+    #[test]
+    fn tree_output_distribution_equals_target() {
+        let p = [0.5f32, 0.3, 0.15, 0.05];
+        let q = [0.25f32, 0.25, 0.25, 0.25];
+        let vocab = 4;
+        let ratio_of = |tok: usize| (p[tok] / q[tok]).min(1.0);
+        let mut resid_row = [0.0f32; 4];
+        let mut rsum = 0.0;
+        for t in 0..vocab {
+            resid_row[t] = (p[t] - q[t]).max(0.0);
+            rsum += resid_row[t];
+        }
+        for r in resid_row.iter_mut() {
+            *r /= rsum;
+        }
+        // Depth-1 arity-2 tree: two root children (leaves at rows 2, 3).
+        let tree = DraftTree::from_parents(vec![NO_PARENT; 2]).unwrap();
+        assert_eq!(tree.rows_needed(), 4);
+        let mut rng = Rng::new(40);
+        let n = 300_000;
+        let mut counts = [0u64; 4];
+        for _ in 0..n {
+            let t1 = rng.categorical(&q) as u8;
+            let t2 = rng.categorical(&q) as u8;
+            let tokens = [t1, t2];
+            let ratios = [ratio_of(t1 as usize), ratio_of(t2 as usize)];
+            // Rows 0–1: the siblings' (identical) residual rows; rows 2–3:
+            // phantom bonus rows (irrelevant for the first output token).
+            let mut resid = Vec::with_capacity(4 * vocab);
+            resid.extend_from_slice(&resid_row);
+            resid.extend_from_slice(&resid_row);
+            resid.extend_from_slice(&[0.25f32; 4]);
+            resid.extend_from_slice(&[0.25f32; 4]);
+            let mut qrows = Vec::with_capacity(2 * vocab);
+            qrows.extend_from_slice(&q);
+            qrows.extend_from_slice(&q);
+            let tv = verify_tree(&tree, &tokens, &ratios, &resid, &qrows, vocab, &mut rng);
+            let out = match tv.path.first() {
+                Some(&node) => tokens[node] as usize,
+                None => tv.correction as usize,
+            };
+            counts[out] += 1;
+        }
+        for t in 0..vocab {
+            let freq = counts[t] as f64 / n as f64;
+            assert!(
+                (freq - p[t] as f64).abs() < 0.005,
+                "token {t}: freq {freq} vs p {}",
+                p[t]
+            );
+        }
+    }
+
+    /// Same lossless check as a χ² statistic (k − 1 = 3 dof; 16.27 is the
+    /// 0.1% critical value — a deterministic seed keeps this stable).
+    #[test]
+    fn tree_output_chi_square_within_critical_value() {
+        let p = [0.4f32, 0.3, 0.2, 0.1];
+        let q = [0.1f32, 0.2, 0.3, 0.4];
+        let vocab = 4;
+        let ratio_of = |tok: usize| (p[tok] / q[tok]).min(1.0);
+        let mut resid_row = [0.0f32; 4];
+        let mut rsum = 0.0;
+        for t in 0..vocab {
+            resid_row[t] = (p[t] - q[t]).max(0.0);
+            rsum += resid_row[t];
+        }
+        for r in resid_row.iter_mut() {
+            *r /= rsum;
+        }
+        let tree = DraftTree::from_parents(vec![NO_PARENT; 3]).unwrap();
+        let mut rng = Rng::new(41);
+        let n = 200_000usize;
+        let mut counts = [0u64; 4];
+        for _ in 0..n {
+            let tokens: Vec<u8> = (0..3).map(|_| rng.categorical(&q) as u8).collect();
+            let ratios: Vec<f32> = tokens.iter().map(|&t| ratio_of(t as usize)).collect();
+            let mut resid = Vec::with_capacity(6 * vocab);
+            for _ in 0..3 {
+                resid.extend_from_slice(&resid_row);
+            }
+            for _ in 0..3 {
+                resid.extend_from_slice(&[0.25f32; 4]); // phantom rows
+            }
+            let mut qrows = Vec::with_capacity(3 * vocab);
+            for _ in 0..3 {
+                qrows.extend_from_slice(&q);
+            }
+            let tv = verify_tree(&tree, &tokens, &ratios, &resid, &qrows, vocab, &mut rng);
+            let out = match tv.path.first() {
+                Some(&node) => tokens[node] as usize,
+                None => tv.correction as usize,
+            };
+            counts[out] += 1;
+        }
+        let chi2: f64 = (0..vocab)
+            .map(|t| {
+                let expect = p[t] as f64 * n as f64;
+                let d = counts[t] as f64 - expect;
+                d * d / expect
+            })
+            .sum();
+        assert!(chi2 < 16.27, "chi2 {chi2} (counts {counts:?})");
+    }
+
+    #[test]
+    fn prop_tree_verdict_invariants() {
+        proptest::check("tree_verdict_invariants", proptest::default_cases(), |rng| {
+            let vocab = 8;
+            let arity = rng.below(3) as usize + 1;
+            let depth = rng.below(4) as usize + 1;
+            let budget = rng.below(10) as usize;
+            let tree = DraftTree::shaped(arity, depth, budget, 24, 16);
+            let n = tree.len();
+            let rows = tree.rows_needed();
+            let tokens: Vec<u8> = (0..n).map(|_| rng.below(vocab as u64) as u8).collect();
+            let ratios: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let resid: Vec<f32> = (0..rows * vocab).map(|_| rng.f32() + 1e-3).collect();
+            let q: Vec<f32> = (0..n * vocab).map(|_| rng.f32() + 1e-3).collect();
+            let tv = verify_tree(&tree, &tokens, &ratios, &resid, &q, vocab, rng);
+            assert_eq!(tv.goodput, tv.path.len() + 1);
+            assert!(tv.path.len() <= tree.max_depth());
+            assert!((tv.correction as usize) < vocab);
+            assert!((0.0..=1.0 + 1e-9).contains(&tv.mean_ratio));
+            // The path is a root-descending parent chain.
+            for (d, &node) in tv.path.iter().enumerate() {
+                assert_eq!(tree.depth(node), d + 1);
+                let parent = tree.parent_of(node);
+                if d == 0 {
+                    assert_eq!(parent, None);
+                } else {
+                    assert_eq!(parent, Some(tv.path[d - 1]));
+                }
+            }
+        });
     }
 
     #[test]

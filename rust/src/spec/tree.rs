@@ -1,0 +1,400 @@
+//! `DraftTree` — node-indexed speculation topology.
+//!
+//! A draft is a tree of candidate tokens rooted at the current prefix:
+//! node `i` holds one drafted token whose context is the prefix plus the
+//! tokens along `i`'s ancestor path. A linear chain is the degenerate
+//! arity-1 tree, so every layer that consumes a `DraftTree` (drafting,
+//! wire, batching, verification, scheduling, simulation) handles both
+//! shapes through one abstraction — and chain-mode runs stay bit-identical
+//! to the pre-tree stack.
+//!
+//! Topology is a parent-index array: `parent[i] < i` (topological order)
+//! or [`NO_PARENT`] for children of the root. Sibling order is node-index
+//! order; verification tries siblings sequentially in that order (the
+//! recursive-rejection residual scheme in
+//! [`verify_tree`](crate::spec::rejection::verify_tree)), so the drafting
+//! and verifying sides agree on the RNG/order contract by construction.
+//!
+//! **Row layout contract** (shared with `coordinator/batcher.rs` and the
+//! verify engines): the `k` engine rows of one client hold the `n` real
+//! nodes at rows `0..n`, then one *phantom* row per leaf (ascending leaf
+//! order, rows `n..n+L`) whose q-row is all-zero — its residual therefore
+//! reduces to the raw target distribution after that leaf, i.e. the
+//! leaf's bonus distribution. An empty tree keeps the phantom at row 0.
+//! This is the same trick the chain already used (the all-zero q row at
+//! `j = S`), generalized to one row per leaf.
+
+use anyhow::{anyhow, Result};
+
+/// Parent sentinel for children of the root (the current prefix).
+pub const NO_PARENT: u8 = u8::MAX;
+
+/// A speculation topology (tokens live outside, indexed by node id).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DraftTree {
+    /// `parent[i]` is the parent node of `i` (`< i`), or [`NO_PARENT`].
+    parent: Vec<u8>,
+    /// `children[0]` = root's children; `children[i + 1]` = node `i`'s,
+    /// each in ascending node order (== sibling try order).
+    children: Vec<Vec<usize>>,
+    /// 1-based depth per node (root children have depth 1).
+    depth: Vec<usize>,
+    /// Engine row of each leaf's phantom bonus row (`u32::MAX` internal).
+    bonus_row: Vec<u32>,
+    num_leaves: usize,
+    max_depth: usize,
+}
+
+impl DraftTree {
+    /// The degenerate arity-1 tree: node `i`'s parent is `i − 1`.
+    pub fn chain(s: usize) -> DraftTree {
+        let parent: Vec<u8> =
+            (0..s).map(|i| if i == 0 { NO_PARENT } else { (i - 1) as u8 }).collect();
+        DraftTree::from_parents(parent).expect("chain is always valid")
+    }
+
+    /// Build from a parent-index array (the wire form). Requires
+    /// topological order: `parent[i] < i` or `NO_PARENT`.
+    pub fn from_parents(parent: Vec<u8>) -> Result<DraftTree> {
+        let n = parent.len();
+        if n > NO_PARENT as usize {
+            return Err(anyhow!("tree too large: {n} nodes (max {})", NO_PARENT));
+        }
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n + 1];
+        for (i, &p) in parent.iter().enumerate() {
+            if p == NO_PARENT {
+                children[0].push(i);
+            } else if (p as usize) < i {
+                children[p as usize + 1].push(i);
+            } else {
+                return Err(anyhow!("node {i}: parent {p} violates topological order"));
+            }
+        }
+        let mut depth = vec![0usize; n];
+        let mut max_depth = 0usize;
+        for (i, &p) in parent.iter().enumerate() {
+            depth[i] = if p == NO_PARENT { 1 } else { depth[p as usize] + 1 };
+            max_depth = max_depth.max(depth[i]);
+        }
+        let mut bonus_row = vec![u32::MAX; n];
+        let mut num_leaves = 0usize;
+        for i in 0..n {
+            if children[i + 1].is_empty() {
+                bonus_row[i] = (n + num_leaves) as u32;
+                num_leaves += 1;
+            }
+        }
+        Ok(DraftTree { parent, children, depth, bonus_row, num_leaves, max_depth })
+    }
+
+    /// Deterministic shape policy: spend up to `budget` nodes on an
+    /// (`arity`, `depth`) profile — levels `1..=depth` give every frontier
+    /// node `arity` children (leftmost-parent first), deeper levels
+    /// continue as a chain tail so a generous budget is still spent —
+    /// subject to `max_rows` engine rows (nodes + phantom leaf rows) and
+    /// `max_depth` context room.
+    pub fn shaped(
+        arity: usize,
+        depth: usize,
+        budget: usize,
+        max_rows: usize,
+        max_depth: usize,
+    ) -> DraftTree {
+        let arity = arity.max(1);
+        let depth = depth.max(1);
+        if budget == 0 || max_depth == 0 || max_rows < 2 {
+            return DraftTree::chain(0);
+        }
+        let mut parent: Vec<u8> = Vec::new();
+        let mut nodes = 0usize;
+        let mut leaves = 0usize;
+        // `None` = the root; `Some(i)` = node i.
+        let mut frontier: Vec<Option<usize>> = vec![None];
+        let mut level = 0usize;
+        'grow: while nodes < budget && level < max_depth && !frontier.is_empty() {
+            level += 1;
+            let width = if level <= depth { arity } else { 1 };
+            let mut next: Vec<Option<usize>> = Vec::new();
+            for &p in &frontier {
+                for j in 0..width {
+                    if nodes >= budget || nodes >= NO_PARENT as usize {
+                        break 'grow;
+                    }
+                    // Row cost: the node plus its own phantom leaf row,
+                    // minus the phantom its parent stops needing when it
+                    // gains its first child.
+                    let first_child_of_node = j == 0 && p.is_some();
+                    let delta = if first_child_of_node { 1 } else { 2 };
+                    if nodes + leaves + delta > max_rows {
+                        break 'grow;
+                    }
+                    parent.push(match p {
+                        None => NO_PARENT,
+                        Some(i) => i as u8,
+                    });
+                    next.push(Some(nodes));
+                    nodes += 1;
+                    if !first_child_of_node {
+                        leaves += 1;
+                    }
+                }
+            }
+            if next.is_empty() {
+                break;
+            }
+            frontier = next;
+        }
+        DraftTree::from_parents(parent).expect("shaped tree is topologically valid")
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// The wire form (parent-index array).
+    pub fn parents(&self) -> &[u8] {
+        &self.parent
+    }
+
+    pub fn parent_of(&self, node: usize) -> Option<usize> {
+        match self.parent[node] {
+            NO_PARENT => None,
+            p => Some(p as usize),
+        }
+    }
+
+    /// Is this the degenerate arity-1 (chain) topology?
+    pub fn is_chain(&self) -> bool {
+        self.parent
+            .iter()
+            .enumerate()
+            .all(|(i, &p)| if i == 0 { p == NO_PARENT } else { p as usize == i - 1 })
+    }
+
+    pub fn root_children(&self) -> &[usize] {
+        &self.children[0]
+    }
+
+    pub fn children(&self, node: usize) -> &[usize] {
+        &self.children[node + 1]
+    }
+
+    /// 1-based depth of a node (root children are depth 1).
+    pub fn depth(&self, node: usize) -> usize {
+        self.depth[node]
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.num_leaves
+    }
+
+    /// Engine rows this tree needs: real nodes plus one phantom bonus row
+    /// per leaf (an empty tree still needs the row-0 phantom).
+    pub fn rows_needed(&self) -> usize {
+        if self.parent.is_empty() {
+            1
+        } else {
+            self.parent.len() + self.num_leaves
+        }
+    }
+
+    /// Engine row of the phantom bonus row after `leaf` (panics on
+    /// internal nodes — only leaves terminate an accepted path).
+    pub fn bonus_row(&self, leaf: usize) -> usize {
+        let r = self.bonus_row[leaf];
+        assert!(r != u32::MAX, "node {leaf} is not a leaf");
+        r as usize
+    }
+
+    /// Node ids from the root down to `node`, inclusive.
+    pub fn path_to(&self, node: usize) -> Vec<usize> {
+        let mut path = vec![node];
+        let mut cur = node;
+        while let Some(p) = self.parent_of(cur) {
+            path.push(p);
+            cur = p;
+        }
+        path.reverse();
+        path
+    }
+
+    /// Expected goodput (accepted depth + 1) of verifying this tree under
+    /// per-try acceptance probability `alpha`, with sequential sibling
+    /// tries: child `j` of a node is reached only after siblings `0..j`
+    /// all rejected, so `P(on path) = P(parent) · (1 − α)^j · α`. For a
+    /// chain this is exactly `spec::expected_goodput(α, S)`.
+    pub fn expected_goodput(&self, alpha: f64) -> f64 {
+        let a = alpha.clamp(0.0, 1.0);
+        let n = self.len();
+        let mut prob = vec![0.0f64; n];
+        fn assign(kids: &[usize], parent_prob: f64, a: f64, prob: &mut [f64]) {
+            let mut miss = 1.0;
+            for &c in kids {
+                prob[c] = parent_prob * miss * a;
+                miss *= 1.0 - a;
+            }
+        }
+        assign(self.root_children(), 1.0, a, &mut prob);
+        for i in 0..n {
+            let pi = prob[i];
+            assign(self.children(i), pi, a, &mut prob);
+        }
+        1.0 + prob.iter().sum::<f64>()
+    }
+}
+
+/// The adaptive per-client shape rule, shared by the live draft server
+/// (fed its locally observed acceptance rate) and the analytic simulator
+/// (fed α̂): low-acceptance clients branch wide — sibling retries raise
+/// the per-level advance probability — while high-acceptance clients
+/// spend their whole budget on depth.
+pub fn adaptive_profile(alpha: f64) -> (usize, usize) {
+    if alpha < 0.45 {
+        (3, 8)
+    } else if alpha < 0.7 {
+        (2, 8)
+    } else {
+        (1, 32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::expected_goodput;
+
+    #[test]
+    fn chain_topology() {
+        let t = DraftTree::chain(4);
+        assert_eq!(t.len(), 4);
+        assert!(t.is_chain());
+        assert_eq!(t.parents(), &[NO_PARENT, 0, 1, 2]);
+        assert_eq!(t.root_children(), &[0]);
+        assert_eq!(t.children(1), &[2]);
+        assert_eq!(t.children(3), &[] as &[usize]);
+        assert_eq!(t.max_depth(), 4);
+        assert_eq!(t.num_leaves(), 1);
+        assert_eq!(t.rows_needed(), 5);
+        assert_eq!(t.bonus_row(3), 4);
+        assert_eq!(t.path_to(3), vec![0, 1, 2, 3]);
+        let empty = DraftTree::chain(0);
+        assert!(empty.is_empty() && empty.is_chain());
+        assert_eq!(empty.rows_needed(), 1);
+        assert_eq!(empty.max_depth(), 0);
+    }
+
+    #[test]
+    fn binary_tree_topology() {
+        // Root → {0, 1}; 0 → {2, 3}; 1 → {4}.
+        let t = DraftTree::from_parents(vec![NO_PARENT, NO_PARENT, 0, 0, 1]).unwrap();
+        assert!(!t.is_chain());
+        assert_eq!(t.root_children(), &[0, 1]);
+        assert_eq!(t.children(0), &[2, 3]);
+        assert_eq!(t.depth(0), 1);
+        assert_eq!(t.depth(4), 2);
+        assert_eq!(t.max_depth(), 2);
+        // Leaves 2, 3, 4 → phantom rows 5, 6, 7.
+        assert_eq!(t.num_leaves(), 3);
+        assert_eq!(t.rows_needed(), 8);
+        assert_eq!(t.bonus_row(2), 5);
+        assert_eq!(t.bonus_row(4), 7);
+        assert_eq!(t.path_to(3), vec![0, 3]);
+        assert_eq!(t.parent_of(4), Some(1));
+        assert_eq!(t.parent_of(0), None);
+    }
+
+    #[test]
+    fn from_parents_rejects_non_topological_order() {
+        assert!(DraftTree::from_parents(vec![0]).is_err()); // self-parent
+        assert!(DraftTree::from_parents(vec![NO_PARENT, 2, 0]).is_err()); // forward ref
+        assert!(DraftTree::from_parents(vec![NO_PARENT, 1]).is_err()); // self
+    }
+
+    #[test]
+    fn shaped_arity1_is_chain() {
+        let t = DraftTree::shaped(1, 8, 5, 32, 64);
+        assert!(t.is_chain());
+        assert_eq!(t.len(), 5);
+        assert_eq!(DraftTree::shaped(1, 8, 0, 32, 64).len(), 0);
+    }
+
+    #[test]
+    fn shaped_spends_budget_breadth_first() {
+        // arity 2, depth 2, budget 6 → levels 2 + 4.
+        let t = DraftTree::shaped(2, 2, 6, 32, 64);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.root_children().len(), 2);
+        assert_eq!(t.children(0).len(), 2);
+        assert_eq!(t.children(1).len(), 2);
+        assert_eq!(t.max_depth(), 2);
+        // Budget beyond the full profile extends chain tails below the
+        // frontier (width drops to 1 past the profile depth).
+        let t = DraftTree::shaped(2, 1, 6, 32, 64);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.max_depth(), 3, "{:?}", t.parents());
+        assert_eq!(t.children(0).len(), 1);
+        assert_eq!(t.children(1).len(), 1);
+        // Partial level: budget 3 on arity-2 depth-2 → 2 + 1 nodes.
+        let t = DraftTree::shaped(2, 2, 3, 32, 64);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.children(0).len(), 1);
+    }
+
+    #[test]
+    fn shaped_respects_row_and_depth_caps() {
+        // Row cap: nodes + leaves ≤ max_rows.
+        for max_rows in 2..=16usize {
+            let t = DraftTree::shaped(2, 4, 30, max_rows, 64);
+            assert!(t.rows_needed() <= max_rows, "rows {} > {max_rows}", t.rows_needed());
+            assert!(t.len() >= 1);
+        }
+        // Depth cap.
+        let t = DraftTree::shaped(1, 32, 30, 64, 3);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.max_depth(), 3);
+        // Degenerate caps yield the empty tree.
+        assert!(DraftTree::shaped(2, 4, 8, 1, 64).is_empty());
+        assert!(DraftTree::shaped(2, 4, 8, 32, 0).is_empty());
+    }
+
+    #[test]
+    fn expected_goodput_matches_chain_closed_form() {
+        for &alpha in &[0.0, 0.3, 0.7, 0.95] {
+            for s in 0..8usize {
+                let t = DraftTree::chain(s);
+                let want = expected_goodput(alpha, s);
+                assert!(
+                    (t.expected_goodput(alpha) - want).abs() < 1e-9,
+                    "alpha={alpha} s={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn branching_beats_chain_at_low_alpha() {
+        // Same 6-node budget: a binary tree outperforms the chain when the
+        // acceptance rate is modest (the tentpole's goodput lever) but not
+        // when drafts are almost always accepted.
+        let chain = DraftTree::chain(6);
+        let tree = DraftTree::shaped(2, 3, 6, 32, 64);
+        assert_eq!(tree.len(), 6);
+        assert!(tree.expected_goodput(0.5) > chain.expected_goodput(0.5));
+        assert!(tree.expected_goodput(0.95) < chain.expected_goodput(0.95));
+    }
+
+    #[test]
+    fn adaptive_profile_widens_at_low_alpha() {
+        assert_eq!(adaptive_profile(0.2).0, 3);
+        assert_eq!(adaptive_profile(0.6).0, 2);
+        assert_eq!(adaptive_profile(0.9).0, 1);
+    }
+}

@@ -7,6 +7,8 @@
 //! acceptance rate α; the long-tail domain (hle) is nearly incompressible →
 //! low α. That spread is what makes the fairness problem non-trivial.
 
+use anyhow::{anyhow, Result};
+
 use crate::util::Rng;
 
 pub const VERBS: [&str; 8] =
@@ -33,8 +35,11 @@ pub const DOMAINS: [&str; 8] =
 
 /// Generate one prompt for a domain (the serving-side half of the
 /// templates; completions are what the models were trained to produce).
-pub fn prompt(domain: &str, rng: &mut Rng) -> String {
-    match domain {
+///
+/// Unknown domains are a configuration error, reported as `Err` (and
+/// caught earlier by `Scenario::validate`) rather than a panic.
+pub fn prompt(domain: &str, rng: &mut Rng) -> Result<String> {
+    let p = match domain {
         "alpaca" => {
             let v = rng.choose(&VERBS);
             let n = rng.choose(&NOUNS);
@@ -72,8 +77,14 @@ pub fn prompt(domain: &str, rng: &mut Rng) -> String {
             let words: Vec<&str> = (0..3).map(|_| *rng.choose(&RARE)).collect();
             format!("decode: {}", words.join(" "))
         }
-        other => panic!("unknown domain '{other}'"),
-    }
+        other => {
+            return Err(anyhow!(
+                "unknown domain '{other}' (known: {})",
+                DOMAINS.join(", ")
+            ))
+        }
+    };
+    Ok(p)
 }
 
 /// Is this a known domain?
@@ -95,7 +106,7 @@ mod tests {
         let mut rng = Rng::new(0);
         for d in DOMAINS {
             for _ in 0..20 {
-                let p = prompt(d, &mut rng);
+                let p = prompt(d, &mut rng).unwrap();
                 assert!(p.is_ascii());
                 assert!((5..=120).contains(&p.len()), "{d}: '{p}'");
             }
@@ -107,13 +118,15 @@ mod tests {
         let mut a = Rng::new(3);
         let mut b = Rng::new(3);
         for d in DOMAINS {
-            assert_eq!(prompt(d, &mut a), prompt(d, &mut b));
+            assert_eq!(prompt(d, &mut a).unwrap(), prompt(d, &mut b).unwrap());
         }
     }
 
     #[test]
-    #[should_panic]
-    fn unknown_domain_panics() {
-        prompt("nope", &mut Rng::new(0));
+    fn unknown_domain_is_an_error_not_a_panic() {
+        let err = prompt("nope", &mut Rng::new(0)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown domain 'nope'"), "{msg}");
+        assert!(msg.contains("alpaca"), "should list known domains: {msg}");
     }
 }

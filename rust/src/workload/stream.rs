@@ -7,8 +7,21 @@
 //! the non-stationarity that GoodSpeed's smoothed estimators must track
 //! (paper §III-B "dynamic evolution of client prompts").
 
+use anyhow::{anyhow, Result};
+
 use super::domains::{self, DOMAINS};
 use crate::util::Rng;
+
+/// Resolve a domain name to its static entry — unknown names are a
+/// configuration error (`Scenario::validate` reports them before any
+/// stream is built), not a panic.
+fn resolve_domain(name: &str) -> Result<&'static str> {
+    DOMAINS
+        .iter()
+        .find(|d| **d == name)
+        .copied()
+        .ok_or_else(|| anyhow!("unknown domain '{name}' (known: {})", DOMAINS.join(", ")))
+}
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -32,20 +45,16 @@ pub struct DomainStream {
 }
 
 impl DomainStream {
-    pub fn new(primary: &str, stickiness: f64, max_new_tokens: usize, rng: Rng) -> Self {
-        let primary_static = DOMAINS
-            .iter()
-            .find(|d| **d == primary)
-            .copied()
-            .unwrap_or_else(|| panic!("unknown domain '{primary}'"));
-        DomainStream {
+    pub fn new(primary: &str, stickiness: f64, max_new_tokens: usize, rng: Rng) -> Result<Self> {
+        let primary_static = resolve_domain(primary)?;
+        Ok(DomainStream {
             primary: primary_static,
             current: primary_static,
             stickiness,
             max_new_tokens,
             rng,
             seq: 0,
-        }
+        })
     }
 
     pub fn current_domain(&self) -> &'static str {
@@ -54,12 +63,9 @@ impl DomainStream {
 
     /// Force a domain (used by the domain-shift example to create abrupt
     /// mid-run transitions).
-    pub fn set_primary(&mut self, domain: &str) {
-        self.primary = DOMAINS
-            .iter()
-            .find(|d| **d == domain)
-            .copied()
-            .unwrap_or_else(|| panic!("unknown domain '{domain}'"));
+    pub fn set_primary(&mut self, domain: &str) -> Result<()> {
+        self.primary = resolve_domain(domain)?;
+        Ok(())
     }
 
     /// Next request in the stream.
@@ -75,7 +81,8 @@ impl DomainStream {
                 }
             }
         };
-        let prompt = domains::prompt(self.current, &mut self.rng);
+        let prompt = domains::prompt(self.current, &mut self.rng)
+            .expect("stream domains are validated at construction");
         self.seq += 1;
         Request { prompt, domain: self.current, max_new_tokens: self.max_new_tokens, seq: self.seq }
     }
@@ -87,7 +94,7 @@ mod tests {
 
     #[test]
     fn sticky_stream_stays_mostly_primary() {
-        let mut s = DomainStream::new("gsm8k", 0.9, 50, Rng::new(0));
+        let mut s = DomainStream::new("gsm8k", 0.9, 50, Rng::new(0)).unwrap();
         let mut primary_count = 0;
         let n = 1000;
         for _ in 0..n {
@@ -101,7 +108,7 @@ mod tests {
 
     #[test]
     fn stationary_stream_never_leaves() {
-        let mut s = DomainStream::new("alpaca", 1.0, 50, Rng::new(1));
+        let mut s = DomainStream::new("alpaca", 1.0, 50, Rng::new(1)).unwrap();
         for _ in 0..100 {
             assert_eq!(s.next_request().domain, "alpaca");
         }
@@ -109,7 +116,7 @@ mod tests {
 
     #[test]
     fn requests_numbered_and_bounded() {
-        let mut s = DomainStream::new("spider", 0.8, 150, Rng::new(2));
+        let mut s = DomainStream::new("spider", 0.8, 150, Rng::new(2)).unwrap();
         let r1 = s.next_request();
         let r2 = s.next_request();
         assert_eq!(r1.seq, 1);
@@ -120,14 +127,15 @@ mod tests {
 
     #[test]
     fn set_primary_redirects() {
-        let mut s = DomainStream::new("alpaca", 1.0, 50, Rng::new(3));
-        s.set_primary("hle");
+        let mut s = DomainStream::new("alpaca", 1.0, 50, Rng::new(3)).unwrap();
+        s.set_primary("hle").unwrap();
         assert_eq!(s.next_request().domain, "hle");
+        assert!(s.set_primary("nope").is_err());
     }
 
     #[test]
-    #[should_panic]
-    fn unknown_primary_panics() {
-        DomainStream::new("nope", 0.5, 50, Rng::new(0));
+    fn unknown_primary_is_an_error_not_a_panic() {
+        let err = DomainStream::new("nope", 0.5, 50, Rng::new(0)).unwrap_err();
+        assert!(err.to_string().contains("unknown domain 'nope'"), "{err}");
     }
 }

@@ -128,6 +128,7 @@ fn verify_bucket_selection_consistency() {
             draft_tok,
             q_probs: q,
             pos0: vec![prompt.len() as i32],
+            parent: goodspeed::runtime::chain_parent_array(1, k),
             k,
             vocab: v,
         }
