@@ -1,0 +1,156 @@
+//! Session-oriented serving with dynamic client churn.
+//!
+//! Demonstrates the `Cluster` builder + `ServingHandle` API end-to-end:
+//!
+//! 1. the `churn` preset's *scheduled* membership changes (a client joins
+//!    a third of the way in, a resident drains out at the two-thirds
+//!    mark), cross-checked against the analytic simulator;
+//! 2. *external* churn on a live handle: `attach` a new session mid-run,
+//!    watch it converge in `snapshot()`, `detach` a resident, `stop()`.
+//!
+//!     cargo run --release --example churn [-- --quick]
+
+use std::time::Duration;
+
+use goodspeed::configsys::{
+    ChurnEvent, ChurnKind, ChurnSchedule, ClientSpec, Policy, Scenario,
+};
+use goodspeed::coordinator::{Cluster, Transport};
+use goodspeed::experiments::{mock_engine, serve_once};
+use goodspeed::simulate::analytic::AnalyticSim;
+
+fn scheduled_churn(rounds: u64) {
+    let mut s = Scenario::preset("churn").expect("preset");
+    s.rounds = rounds;
+    // The preset's schedule shape, re-timed to the requested length.
+    s.churn = ChurnSchedule {
+        events: vec![
+            ChurnEvent {
+                at_wave: rounds / 3,
+                kind: ChurnKind::Join(ClientSpec::new("qwen-draft-06b", "cnn")),
+            },
+            ChurnEvent { at_wave: 2 * rounds / 3, kind: ChurnKind::Leave(1) },
+        ],
+    };
+    println!("== scheduled churn: `churn` preset shape, {rounds} waves ==");
+    let out = serve_once(
+        s.clone(),
+        Policy::GoodSpeed,
+        Transport::Channel,
+        false,
+        mock_engine(),
+    )
+    .expect("live churn run");
+    for ev in &out.recorder.membership {
+        println!(
+            "  wave {:>4} epoch {:>2}: joined {:?} left {:?} -> members {:?}",
+            ev.wave, ev.epoch, ev.joined, ev.left, ev.members
+        );
+    }
+    let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+    sim.run();
+    println!(
+        "\n  {:<6} {:>10} {:>10} {:>12} {:>12}",
+        "client", "waves", "lifetime", "live tok/w", "sim tok/w"
+    );
+    let live_avg = out.recorder.avg_goodput();
+    let sim_avg = sim.recorder().avg_goodput();
+    for i in 0..out.recorder.n_clients() {
+        println!(
+            "  {:<6} {:>10} {:>10.0} {:>12.2} {:>12.2}",
+            i,
+            out.recorder.participation()[i],
+            out.recorder.lifetime_goodput()[i],
+            live_avg[i],
+            sim_avg[i]
+        );
+    }
+}
+
+fn dynamic_handle(rounds: u64) {
+    println!("\n== external churn: attach/detach on a live ServingHandle ==");
+    let mut s = Scenario::preset("smoke").expect("preset");
+    s.rounds = rounds;
+    s.num_clients = 3;
+    s.capacity = 12;
+    s.links = Scenario::default_links(3, s.seed);
+    let handle = Cluster::builder(s)
+        .policy(Policy::GoodSpeed)
+        .transport(Transport::Channel)
+        .engine(mock_engine())
+        .reserve_slots(1) // headroom for one external attach
+        .start()
+        .expect("cluster start");
+
+    // Let the residents learn for a while (bail out gracefully if the
+    // budget completes first — external churn races real time).
+    while handle.snapshot().waves < rounds / 4 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let id = match handle.attach(ClientSpec::new("qwen-draft-06b", "gsm8k")) {
+        Ok(id) => id,
+        Err(e) => {
+            println!("  attach raced run completion ({e}); try more rounds");
+            report(handle.wait().expect("collect"));
+            return;
+        }
+    };
+    let snap = handle.snapshot();
+    println!(
+        "  attached client {id} at wave {} (epoch {}, members {:?})",
+        snap.waves, snap.epoch, snap.members
+    );
+
+    // Drain a resident once the joiner is serving.
+    loop {
+        let snap = handle.snapshot();
+        if snap.participation.get(id).copied().unwrap_or(0) > 0 || snap.waves >= rounds {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    match handle.detach(0) {
+        Ok(()) => {
+            loop {
+                let snap = handle.snapshot();
+                if !snap.members.contains(&0) || snap.waves >= rounds {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let snap = handle.snapshot();
+            println!(
+                "  detached client 0 (drain complete) at wave {} (epoch {}, members {:?})",
+                snap.waves, snap.epoch, snap.members
+            );
+        }
+        Err(e) => println!("  detach raced run completion ({e})"),
+    }
+
+    let out = handle.stop().expect("stop");
+    report(out);
+}
+
+fn report(out: goodspeed::coordinator::RunOutcome) {
+    println!(
+        "  collected after {} waves, {} membership epochs:",
+        out.summary.rounds,
+        out.recorder.membership.len()
+    );
+    for (i, (&p, &g)) in out
+        .recorder
+        .participation()
+        .iter()
+        .zip(out.recorder.lifetime_goodput().iter())
+        .enumerate()
+    {
+        println!("    client {i}: {p} waves, lifetime goodput {g:.0}");
+    }
+}
+
+fn main() {
+    goodspeed::util::logger::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    scheduled_churn(if quick { 120 } else { 240 });
+    dynamic_handle(if quick { 800 } else { 2000 });
+}

@@ -15,8 +15,8 @@
 use anyhow::{anyhow, Result};
 use goodspeed::cli::Args;
 use goodspeed::configsys::{Policy, Scenario};
-use goodspeed::coordinator::{run_serving, RunConfig, Transport};
-use goodspeed::experiments::engine_from_args;
+use goodspeed::coordinator::Transport;
+use goodspeed::experiments::{engine_from_args, serve_once};
 use goodspeed::metrics::csv::write_rounds;
 use goodspeed::sched::utility::LogUtility;
 
@@ -25,10 +25,12 @@ fn run(args: &Args) -> Result<()> {
     let preset = if family == "qwen" { "qwen-8c-150" } else { "llama-8c-150" };
     let mut scenario = Scenario::preset(preset).unwrap();
     scenario.rounds = args.get_parse::<u64>("rounds").unwrap_or(300);
-    let policy = Policy::parse(&args.get_or("policy", "goodspeed"))
-        .ok_or_else(|| anyhow!("bad --policy"))?;
-    let transport = Transport::parse(&args.get_or("transport", "channel"))
-        .ok_or_else(|| anyhow!("bad --transport"))?;
+    let policy: Policy =
+        args.get_or("policy", "goodspeed").parse().map_err(|e| anyhow!("--policy: {e}"))?;
+    let transport: Transport = args
+        .get_or("transport", "channel")
+        .parse()
+        .map_err(|e| anyhow!("--transport: {e}"))?;
     let factory = engine_from_args(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
@@ -41,8 +43,7 @@ fn run(args: &Args) -> Result<()> {
         scenario.draft_models
     );
     println!("domains: {:?}\n", scenario.domains);
-    let cfg = RunConfig { scenario: scenario.clone(), policy, transport, simulate_network: true };
-    let out = run_serving(&cfg, factory)?;
+    let out = serve_once(scenario.clone(), policy, transport, true, factory)?;
     out.summary.print(&format!("edge_cluster {family} / {}", policy.name()));
 
     // Per-client detail: domain, model, final α̂, avg goodput.

@@ -14,8 +14,8 @@
 //! are compared: live and simulated steady state must agree.
 
 use goodspeed::configsys::{Policy, Scenario};
-use goodspeed::coordinator::{run_pool, PoolOutcome, RunConfig, Transport};
-use goodspeed::experiments::mock_engine;
+use goodspeed::coordinator::{RunOutcome, Transport};
+use goodspeed::experiments::{mock_engine, serve_once};
 use goodspeed::simulate::run_sharded;
 use goodspeed::util::jain_index;
 
@@ -26,14 +26,17 @@ fn scenario(m: usize, rounds: u64) -> Scenario {
     s
 }
 
-fn live(m: usize, rounds: u64) -> PoolOutcome {
-    let cfg = RunConfig {
-        scenario: scenario(m, rounds),
-        policy: Policy::GoodSpeed,
-        transport: Transport::Channel,
-        simulate_network: true, // the point: real uplink sleeps
-    };
-    run_pool(&cfg, mock_engine()).expect("pool run")
+fn live(m: usize, rounds: u64) -> RunOutcome {
+    // Real uplink sleeps are the point; the session API dispatches to the
+    // sharded pool automatically when num_verifiers > 1.
+    serve_once(
+        scenario(m, rounds),
+        Policy::GoodSpeed,
+        Transport::Channel,
+        true,
+        mock_engine(),
+    )
+    .expect("pool run")
 }
 
 fn main() {
@@ -72,7 +75,7 @@ fn main() {
             rate,
             jain,
             gpv,
-            out.migrations,
+            out.pool.as_ref().map_or(0, |p| p.migrations),
             rate / base_rate.max(1e-12)
         );
         rates.push(rate);

@@ -15,8 +15,8 @@
 //! depth reached).
 
 use goodspeed::configsys::{Policy, Scenario, SpecShape};
-use goodspeed::coordinator::{run_serving, RunConfig, Transport};
-use goodspeed::experiments::mock_engine;
+use goodspeed::coordinator::Transport;
+use goodspeed::experiments::{mock_engine, serve_once};
 use goodspeed::metrics::csv::write_rounds;
 use goodspeed::metrics::recorder::Recorder;
 use goodspeed::simulate::analytic::AnalyticSim;
@@ -116,13 +116,16 @@ fn main() {
     // Live cross-check: run the analytic winner through the real stack.
     println!("\n== live mock run, analytic winner vs chain ==");
     let live = |shape: SpecShape| -> f64 {
-        let cfg = RunConfig {
-            scenario: scenario(shape, rounds.min(120)),
-            policy: Policy::GoodSpeed,
-            transport: Transport::Channel,
-            simulate_network: false,
-        };
-        run_serving(&cfg, mock_engine()).expect("live run").recorder.goodput_per_verdict()
+        serve_once(
+            scenario(shape, rounds.min(120)),
+            Policy::GoodSpeed,
+            Transport::Channel,
+            false,
+            mock_engine(),
+        )
+        .expect("live run")
+        .recorder
+        .goodput_per_verdict()
     };
     let live_best = live(best_shape);
     let live_chain = live(SpecShape::Chain);

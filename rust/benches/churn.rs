@@ -1,0 +1,148 @@
+//! Churn benchmark: fairness recovery under dynamic client membership.
+//!
+//! Runs the `churn` preset shape — one client joining a third of the way
+//! in, one resident departing at the two-thirds mark — through both the
+//! live serving cluster (session API, mock engine) and the analytic
+//! simulator, and checks:
+//!
+//! * the joiner converges to its fair share: its relative share of the
+//!   population's per-wave goodput matches the analytic sim within 10%;
+//! * Jain's index over the surviving clients recovers after the
+//!   departure (the freed budget water-fills over the survivors).
+//!
+//!     cargo bench --bench churn [-- --quick]
+
+use goodspeed::configsys::{
+    ChurnEvent, ChurnKind, ChurnSchedule, ClientSpec, Policy, Scenario,
+};
+use goodspeed::coordinator::Transport;
+use goodspeed::experiments::{mock_engine, serve_once};
+use goodspeed::metrics::recorder::Recorder;
+use goodspeed::simulate::analytic::AnalyticSim;
+use goodspeed::util::stats::jain_index;
+
+/// The churn shape scaled to `rounds`: join at rounds/3, leave client 1 at
+/// 2·rounds/3 (the preset's schedule, re-timed).
+fn scenario(rounds: u64) -> Scenario {
+    let mut s = Scenario::preset("churn").expect("preset");
+    s.rounds = rounds;
+    s.churn = ChurnSchedule {
+        events: vec![
+            ChurnEvent {
+                at_wave: rounds / 3,
+                kind: ChurnKind::Join(ClientSpec::new("qwen-draft-06b", "cnn")),
+            },
+            ChurnEvent { at_wave: 2 * rounds / 3, kind: ChurnKind::Leave(1) },
+        ],
+    };
+    s
+}
+
+/// Per-client mean goodput over the waves in `[lo, hi)`, restricted to
+/// `clients`; `None` when a client never participated in the window.
+fn window_goodput(rec: &Recorder, lo: u64, hi: u64, clients: &[usize]) -> Vec<Option<f64>> {
+    let mut sum = vec![0.0f64; rec.n_clients()];
+    let mut cnt = vec![0u64; rec.n_clients()];
+    for r in rec.rounds.iter().filter(|r| r.round >= lo && r.round < hi) {
+        for c in &r.clients {
+            sum[c.client_id] += c.goodput as f64;
+            cnt[c.client_id] += 1;
+        }
+    }
+    clients
+        .iter()
+        .map(|&i| if cnt[i] == 0 { None } else { Some(sum[i] / cnt[i] as f64) })
+        .collect()
+}
+
+/// The joiner's share relative to the always-present clients' mean, over
+/// the post-join steady state (skipping a warm-up third of its lifetime).
+fn joiner_relative_share(rec: &Recorder, rounds: u64, joiner: usize) -> f64 {
+    let join_at = rounds / 3;
+    let lo = join_at + (rounds - join_at) / 3;
+    let stayers = [0usize, 2, 3];
+    let g = window_goodput(rec, lo, rounds, &[joiner, stayers[0], stayers[1], stayers[2]]);
+    let joiner_g = g[0].unwrap_or(0.0);
+    let stay_mean: f64 =
+        g[1..].iter().map(|x| x.unwrap_or(0.0)).sum::<f64>() / stayers.len() as f64;
+    joiner_g / stay_mean.max(1e-12)
+}
+
+/// Jain over the surviving clients in a wave window.
+fn window_jain(rec: &Recorder, lo: u64, hi: u64, clients: &[usize]) -> f64 {
+    let g: Vec<f64> = window_goodput(rec, lo, hi, clients)
+        .into_iter()
+        .map(|x| x.unwrap_or(0.0))
+        .collect();
+    jain_index(&g)
+}
+
+fn main() {
+    goodspeed::util::logger::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let rounds = if quick { 90 } else { 240 };
+    let s = scenario(rounds);
+    let joiner = s.num_clients; // first fresh slot
+    println!(
+        "== churn bench: {} residents, join@{} leave(1)@{}  ({rounds} waves) ==",
+        s.num_clients,
+        rounds / 3,
+        2 * rounds / 3
+    );
+
+    let live = serve_once(
+        s.clone(),
+        Policy::GoodSpeed,
+        Transport::Channel,
+        false,
+        mock_engine(),
+    )
+    .expect("live churn run");
+    let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+    sim.run();
+
+    println!("membership epochs (live): {}", live.recorder.membership.len());
+    for ev in &live.recorder.membership {
+        println!(
+            "  wave {:>4} epoch {:>2}: joined {:?} left {:?} -> members {:?}",
+            ev.wave, ev.epoch, ev.joined, ev.left, ev.members
+        );
+    }
+
+    // 1. Joiner fair-share convergence, live vs analytic.
+    let live_rel = joiner_relative_share(&live.recorder, rounds, joiner);
+    let sim_rel = joiner_relative_share(sim.recorder(), rounds, joiner);
+    println!(
+        "\njoiner relative share (joiner / resident mean, post-join steady state):\n\
+         live {live_rel:.3}   analytic {sim_rel:.3}   gap {:+.1}%",
+        100.0 * (live_rel - sim_rel) / sim_rel.max(1e-12)
+    );
+
+    // 2. Jain recovery after the departure, over the surviving clients.
+    let leave_at = 2 * rounds / 3;
+    let survivors = [0usize, 2, 3, joiner];
+    let w = (rounds / 6).max(10);
+    let jain_pre = window_jain(&live.recorder, leave_at.saturating_sub(w), leave_at, &survivors);
+    let recovery = (rounds - leave_at) / 3;
+    let jain_post = window_jain(&live.recorder, leave_at + recovery, rounds, &survivors);
+    let sim_post = window_jain(sim.recorder(), leave_at + recovery, rounds, &survivors);
+    println!(
+        "jain over survivors: pre-leave {jain_pre:.4}   post-leave {jain_post:.4} \
+         (analytic post {sim_post:.4})"
+    );
+
+    let share_ok = (live_rel - sim_rel).abs() <= 0.10 * sim_rel.max(1e-12);
+    let jain_ok = jain_post >= 0.95 * jain_pre && jain_post >= 0.90;
+    if share_ok && jain_ok {
+        println!(
+            "PASS: joiner within 10% of its analytic fair share, fairness recovers \
+             after the departure"
+        );
+    } else {
+        println!(
+            "WARN: expected joiner share live≈analytic within 10% \
+             (live {live_rel:.3} vs sim {sim_rel:.3}) and post-leave Jain ≥ max(0.90, \
+             0.95·pre) (pre {jain_pre:.4}, post {jain_post:.4})"
+        );
+    }
+}

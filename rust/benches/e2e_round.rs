@@ -5,22 +5,17 @@
 use std::time::Instant;
 
 use goodspeed::configsys::{Policy, Scenario};
-use goodspeed::coordinator::{run_serving, RunConfig, Transport};
-use goodspeed::experiments::mock_engine;
+use goodspeed::coordinator::Transport;
+use goodspeed::experiments::{mock_engine, serve_once};
 
 fn run(transport: Transport, clients: usize, rounds: u64, network: bool) -> (f64, f64) {
     let mut s = Scenario::preset("qwen-8c-150").unwrap();
     s.num_clients = clients;
     s.rounds = rounds;
     s.links = Scenario::default_links(clients, s.seed);
-    let cfg = RunConfig {
-        scenario: s,
-        policy: Policy::GoodSpeed,
-        transport,
-        simulate_network: network,
-    };
     let t0 = Instant::now();
-    let out = run_serving(&cfg, mock_engine()).expect("run");
+    let out =
+        serve_once(s, Policy::GoodSpeed, transport, network, mock_engine()).expect("run");
     let wall = t0.elapsed().as_secs_f64();
     (wall / rounds as f64 * 1e3, out.summary.total_tokens / wall)
 }

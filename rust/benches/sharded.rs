@@ -8,24 +8,20 @@
 //! `--quick` runs the CI smoke shape (fewer rounds, same assertions).
 
 use goodspeed::configsys::{Policy, Scenario};
-use goodspeed::coordinator::{run_pool, PoolOutcome, RunConfig, Transport};
-use goodspeed::experiments::mock_engine;
+use goodspeed::coordinator::{RunOutcome, Transport};
+use goodspeed::experiments::{mock_engine, serve_once};
 use goodspeed::util::stats::jain_index;
 
-fn run(m: usize, rounds: u64) -> PoolOutcome {
+fn run(m: usize, rounds: u64) -> RunOutcome {
     let mut s = Scenario::preset("sharded").expect("preset");
     s.num_verifiers = m;
     s.rounds = rounds;
-    let cfg = RunConfig {
-        scenario: s,
-        policy: Policy::GoodSpeed,
-        transport: Transport::Channel,
-        simulate_network: true, // the whole point: real uplink sleeps
-    };
-    run_pool(&cfg, mock_engine()).expect("pool run")
+    // Real uplink sleeps are the whole point.
+    serve_once(s, Policy::GoodSpeed, Transport::Channel, true, mock_engine())
+        .expect("pool run")
 }
 
-fn report(out: &PoolOutcome, m: usize) -> (f64, f64) {
+fn report(out: &RunOutcome, m: usize) -> (f64, f64) {
     let jain = jain_index(&out.recorder.avg_goodput());
     println!(
         "M={m}  waves {:>5}  tokens {:>8.0}  aggregate {:>8.1} tok/s  jain {:.4}  migrations {}",
@@ -33,7 +29,7 @@ fn report(out: &PoolOutcome, m: usize) -> (f64, f64) {
         out.summary.total_tokens,
         out.summary.tokens_per_sec,
         jain,
-        out.migrations
+        out.pool.as_ref().map_or(0, |p| p.migrations)
     );
     (out.summary.tokens_per_sec, jain)
 }

@@ -9,21 +9,16 @@
 //! wave) is preserved.
 
 use goodspeed::configsys::{CoordMode, Policy, Scenario};
-use goodspeed::coordinator::{run_serving, RunConfig, RunOutcome, Transport};
-use goodspeed::experiments::mock_engine;
+use goodspeed::coordinator::{RunOutcome, Transport};
+use goodspeed::experiments::{mock_engine, serve_once};
 use goodspeed::util::stats::jain_index;
 
 fn run(mode: CoordMode, rounds: u64) -> RunOutcome {
     let mut s = Scenario::preset("straggler").expect("preset");
     s.rounds = rounds;
     s.coord_mode = mode;
-    let cfg = RunConfig {
-        scenario: s,
-        policy: Policy::GoodSpeed,
-        transport: Transport::Channel,
-        simulate_network: true, // the whole point: real link sleeps
-    };
-    run_serving(&cfg, mock_engine()).expect("run")
+    // Real link sleeps are the whole point.
+    serve_once(s, Policy::GoodSpeed, Transport::Channel, true, mock_engine()).expect("run")
 }
 
 fn report(label: &str, out: &RunOutcome) -> (f64, f64) {

@@ -11,8 +11,8 @@
 //! acceptance criterion asks for.
 
 use goodspeed::configsys::{Policy, Scenario, SpecShape};
-use goodspeed::coordinator::{run_serving, RunConfig, Transport};
-use goodspeed::experiments::mock_engine;
+use goodspeed::coordinator::Transport;
+use goodspeed::experiments::{mock_engine, serve_once};
 use goodspeed::metrics::recorder::Recorder;
 use goodspeed::simulate::analytic::AnalyticSim;
 
@@ -32,13 +32,15 @@ fn scenario(shape: SpecShape, rounds: u64) -> Scenario {
 }
 
 fn live(shape: SpecShape, rounds: u64) -> Recorder {
-    let cfg = RunConfig {
-        scenario: scenario(shape, rounds),
-        policy: Policy::GoodSpeed,
-        transport: Transport::Channel,
-        simulate_network: false,
-    };
-    run_serving(&cfg, mock_engine()).expect("run").recorder
+    serve_once(
+        scenario(shape, rounds),
+        Policy::GoodSpeed,
+        Transport::Channel,
+        false,
+        mock_engine(),
+    )
+    .expect("run")
+    .recorder
 }
 
 fn analytic(shape: SpecShape, rounds: u64) -> Recorder {

@@ -4,4 +4,7 @@ pub mod json;
 pub mod scenario;
 
 pub use json::Value;
-pub use scenario::{CoordMode, LinkConfig, Policy, Scenario, Smoothing, SpecShape};
+pub use scenario::{
+    ChurnEvent, ChurnKind, ChurnSchedule, ClientSpec, CoordMode, LinkConfig, Policy, Scenario,
+    Smoothing, SpecShape,
+};

@@ -7,7 +7,10 @@
 //! three rows of Table I; every field can be overridden from the CLI or a
 //! JSON scenario file.
 
+use std::str::FromStr;
+
 use super::json::Value;
+use crate::error::ConfigError;
 use crate::workload::domains::DOMAINS;
 
 /// Scheduling policy under test (§IV-B2 baselines).
@@ -21,16 +24,24 @@ pub enum Policy {
     RandomS,
 }
 
-impl Policy {
-    pub fn parse(s: &str) -> Option<Policy> {
+impl FromStr for Policy {
+    type Err = ConfigError;
+
+    fn from_str(s: &str) -> Result<Policy, ConfigError> {
         match s.to_ascii_lowercase().as_str() {
-            "goodspeed" | "gs" => Some(Policy::GoodSpeed),
-            "fixed" | "fixed-s" | "fixeds" => Some(Policy::FixedS),
-            "random" | "random-s" | "randoms" => Some(Policy::RandomS),
-            _ => None,
+            "goodspeed" | "gs" => Ok(Policy::GoodSpeed),
+            "fixed" | "fixed-s" | "fixeds" => Ok(Policy::FixedS),
+            "random" | "random-s" | "randoms" => Ok(Policy::RandomS),
+            _ => Err(ConfigError::InvalidChoice {
+                field: "policy",
+                given: s.to_string(),
+                expected: &["goodspeed", "fixed-s", "random-s"],
+            }),
         }
     }
+}
 
+impl Policy {
     pub fn name(&self) -> &'static str {
         match self {
             Policy::GoodSpeed => "goodspeed",
@@ -59,15 +70,23 @@ pub enum CoordMode {
     Async,
 }
 
-impl CoordMode {
-    pub fn parse(s: &str) -> Option<CoordMode> {
+impl FromStr for CoordMode {
+    type Err = ConfigError;
+
+    fn from_str(s: &str) -> Result<CoordMode, ConfigError> {
         match s.to_ascii_lowercase().as_str() {
-            "sync" | "barrier" => Some(CoordMode::Sync),
-            "async" | "wave" | "event" => Some(CoordMode::Async),
-            _ => None,
+            "sync" | "barrier" => Ok(CoordMode::Sync),
+            "async" | "wave" | "event" => Ok(CoordMode::Async),
+            _ => Err(ConfigError::InvalidChoice {
+                field: "coordination mode",
+                given: s.to_string(),
+                expected: &["sync", "async"],
+            }),
         }
     }
+}
 
+impl CoordMode {
     pub fn name(&self) -> &'static str {
         match self {
             CoordMode::Sync => "sync",
@@ -97,23 +116,35 @@ pub enum SpecShape {
     Adaptive,
 }
 
-impl SpecShape {
+impl FromStr for SpecShape {
+    type Err = ConfigError;
+
     /// Parse `chain`, `adaptive`, `tree` (the 2×8 default), or
     /// `tree:<arity>x<depth>` (e.g. `tree:3x4`).
-    pub fn parse(s: &str) -> Option<SpecShape> {
-        let s = s.to_ascii_lowercase();
-        match s.as_str() {
-            "chain" | "linear" => return Some(SpecShape::Chain),
-            "adaptive" | "auto" => return Some(SpecShape::Adaptive),
-            "tree" => return Some(SpecShape::Tree { arity: 2, depth: 8 }),
+    fn from_str(s: &str) -> Result<SpecShape, ConfigError> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "chain" | "linear" => return Ok(SpecShape::Chain),
+            "adaptive" | "auto" => return Ok(SpecShape::Adaptive),
+            "tree" => return Ok(SpecShape::Tree { arity: 2, depth: 8 }),
             _ => {}
         }
-        let spec = s.strip_prefix("tree:")?;
-        let (a, d) = spec.split_once('x')?;
-        Some(SpecShape::Tree { arity: a.parse().ok()?, depth: d.parse().ok()? })
+        let reject = || ConfigError::InvalidChoice {
+            field: "spec shape",
+            given: s.to_string(),
+            expected: &["chain", "tree", "tree:<arity>x<depth>", "adaptive"],
+        };
+        let spec = lower.strip_prefix("tree:").ok_or_else(reject)?;
+        let (a, d) = spec.split_once('x').ok_or_else(reject)?;
+        Ok(SpecShape::Tree {
+            arity: a.parse().map_err(|_| reject())?,
+            depth: d.parse().map_err(|_| reject())?,
+        })
     }
+}
 
-    /// Canonical string form (round-trips through [`SpecShape::parse`]).
+impl SpecShape {
+    /// Canonical string form (round-trips through the [`FromStr`] impl).
     pub fn label(&self) -> String {
         match self {
             SpecShape::Chain => "chain".into(),
@@ -141,6 +172,94 @@ pub struct LinkConfig {
 impl Default for LinkConfig {
     fn default() -> Self {
         LinkConfig { latency_s: 1e-3, bandwidth_bps: 12.5e6, jitter: 0.1 }
+    }
+}
+
+/// Everything the cluster needs to admit one new draft server: the draft
+/// model it runs, the workload domain it serves, and its uplink. Used by
+/// [`ServingHandle::attach`](crate::coordinator::ServingHandle::attach)
+/// and by scheduled [`ChurnKind::Join`] events.
+#[derive(Clone, Debug)]
+pub struct ClientSpec {
+    /// Draft model name (must resolve in the engine factory's zoo).
+    pub model: String,
+    /// Primary workload domain (must be a known domain).
+    pub domain: String,
+    /// Edge uplink characteristics.
+    pub link: LinkConfig,
+}
+
+impl ClientSpec {
+    /// A spec with the default link.
+    pub fn new(model: impl Into<String>, domain: impl Into<String>) -> ClientSpec {
+        ClientSpec { model: model.into(), domain: domain.into(), link: LinkConfig::default() }
+    }
+}
+
+/// One scheduled membership change, applied at a wave boundary.
+#[derive(Clone, Debug)]
+pub enum ChurnKind {
+    /// A new draft server joins the cluster.
+    Join(ClientSpec),
+    /// The given client id detaches (graceful drain; ids are assigned in
+    /// order: initial clients `0..num_clients`, then one per join event).
+    Leave(usize),
+}
+
+/// A membership change pinned to a point in virtual time (the coordinator
+/// wave counter — in sync mode, the round number; in pooled runs the mean
+/// per-shard wave count, global waves ÷ M).
+#[derive(Clone, Debug)]
+pub struct ChurnEvent {
+    /// Wave boundary at which the change takes effect (applied before the
+    /// wave with this index is formed). With an empty membership, pending
+    /// events fire immediately — the frozen wave clock could never reach
+    /// them otherwise.
+    pub at_wave: u64,
+    pub kind: ChurnKind,
+}
+
+/// Arrival/departure schedule for a serving run. Both the live cluster
+/// ([`Cluster`](crate::coordinator::Cluster)) and the analytic simulator
+/// apply the same events at the same wave boundaries, so live and analytic
+/// steady state stay comparable through membership changes.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnSchedule {
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnSchedule {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of scheduled joins (each consumes one client slot).
+    pub fn join_count(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e.kind, ChurnKind::Join(_))).count()
+    }
+
+    /// Events sorted by wave (stable: ties keep schedule order).
+    pub fn sorted(&self) -> Vec<ChurnEvent> {
+        let mut v = self.events.clone();
+        v.sort_by_key(|e| e.at_wave);
+        v
+    }
+
+    /// The standard demo schedule for a scenario (`goodspeed run
+    /// --churn`): one extra client joins a third of the way in, and
+    /// client 0 departs at the two-thirds mark.
+    pub fn demo(scenario: &Scenario) -> ChurnSchedule {
+        let model = scenario.draft_model(0).to_string();
+        let domain = scenario.domain(0).to_string();
+        ChurnSchedule {
+            events: vec![
+                ChurnEvent {
+                    at_wave: scenario.rounds / 3,
+                    kind: ChurnKind::Join(ClientSpec::new(model, domain)),
+                },
+                ChurnEvent { at_wave: 2 * scenario.rounds / 3, kind: ChurnKind::Leave(0) },
+            ],
+        }
     }
 }
 
@@ -210,6 +329,9 @@ pub struct Scenario {
     /// node budget `S_i(t)` is allocated the same way either way; the
     /// shape decides how each client arranges the granted nodes.
     pub spec_shape: SpecShape,
+    /// Scheduled client arrivals/departures (empty = static membership,
+    /// which reproduces the pre-churn stack bit-for-bit).
+    pub churn: ChurnSchedule,
 }
 
 impl Scenario {
@@ -228,24 +350,25 @@ impl Scenario {
     }
 
     /// Sanity-check invariants shared by every consumer.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let err = |msg: String| Err(ConfigError::Invalid(msg));
         if self.num_clients == 0 {
-            return Err("num_clients must be > 0".into());
+            return err("num_clients must be > 0".into());
         }
         if self.capacity == 0 {
-            return Err("capacity C must be > 0".into());
+            return err("capacity C must be > 0".into());
         }
         if self.max_draft == 0 || self.max_draft > 32 {
-            return Err("max_draft must be in 1..=32 (verify artifact K)".into());
+            return err("max_draft must be in 1..=32 (verify artifact K)".into());
         }
         if self.draft_models.is_empty() || self.domains.is_empty() {
-            return Err("draft_models and domains must be non-empty".into());
+            return err("draft_models and domains must be non-empty".into());
         }
         // Unknown domains used to panic deep inside the workload layer;
         // they are a configuration error and surface here instead.
         for d in &self.domains {
             if !crate::workload::domains::is_domain(d) {
-                return Err(format!(
+                return err(format!(
                     "unknown domain '{d}' (known: {})",
                     crate::workload::domains::DOMAINS.join(", ")
                 ));
@@ -253,26 +376,54 @@ impl Scenario {
         }
         if let SpecShape::Tree { arity, depth } = self.spec_shape {
             if !(1..=8).contains(&arity) {
-                return Err("spec_shape tree arity must be in 1..=8".into());
+                return err("spec_shape tree arity must be in 1..=8".into());
             }
             if !(1..=32).contains(&depth) {
-                return Err("spec_shape tree depth must be in 1..=32".into());
+                return err("spec_shape tree depth must be in 1..=32".into());
             }
         }
         if !(0.0..=1.0).contains(&self.domain_stickiness) {
-            return Err("domain_stickiness must be in [0,1]".into());
+            return err("domain_stickiness must be in [0,1]".into());
         }
         if self.min_wave_fill > self.num_clients {
-            return Err("min_wave_fill must be <= num_clients (0 = all)".into());
+            return err("min_wave_fill must be <= num_clients (0 = all)".into());
         }
         if self.coord_mode == CoordMode::Async && self.batch_window_us > 10_000_000 {
-            return Err("batch_window_us must be <= 10s".into());
+            return err("batch_window_us must be <= 10s".into());
         }
         if self.num_verifiers == 0 {
-            return Err("num_verifiers must be > 0".into());
+            return err("num_verifiers must be > 0".into());
         }
         if self.num_verifiers > self.num_clients {
-            return Err("num_verifiers must be <= num_clients".into());
+            return err("num_verifiers must be <= num_clients".into());
+        }
+        // Churn schedule: joins must name known domains, leaves must name
+        // client ids that exist by the time the event fires (ids are
+        // assigned in order — initial clients, then one per join event).
+        let mut known = self.num_clients;
+        let mut gone: Vec<usize> = Vec::new();
+        for ev in self.churn.sorted() {
+            match ev.kind {
+                ChurnKind::Join(ref spec) => {
+                    if !crate::workload::domains::is_domain(&spec.domain) {
+                        return err(format!("churn join: unknown domain '{}'", spec.domain));
+                    }
+                    known += 1;
+                }
+                ChurnKind::Leave(id) => {
+                    if id >= known {
+                        return err(format!(
+                            "churn leave: client {id} does not exist at wave {} \
+                             (only {known} ids assigned by then)",
+                            ev.at_wave
+                        ));
+                    }
+                    if gone.contains(&id) {
+                        return err(format!("churn leave: client {id} departs twice"));
+                    }
+                    gone.push(id);
+                }
+            }
         }
         Ok(())
     }
@@ -326,6 +477,7 @@ impl Scenario {
                 num_verifiers: 1,
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
+                churn: ChurnSchedule::default(),
             },
             // Table I row 2: Qwen3-14B / 0.6B+1.7B, C ∈ {16,20}, 8 clients, 150 tok
             "qwen-8c-150" => Scenario {
@@ -349,6 +501,7 @@ impl Scenario {
                 num_verifiers: 1,
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
+                churn: ChurnSchedule::default(),
             },
             // Table I row 3: Llama-70B / 1B+3B, C ∈ {16,20}, 8 clients, 150 tok
             "llama-8c-150" => Scenario {
@@ -372,6 +525,7 @@ impl Scenario {
                 num_verifiers: 1,
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
+                churn: ChurnSchedule::default(),
             },
             // Fast preset for tests and smoke runs.
             "smoke" => Scenario {
@@ -395,6 +549,7 @@ impl Scenario {
                 num_verifiers: 1,
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
+                churn: ChurnSchedule::default(),
             },
             // Straggler study: one client with a 10× slower uplink. In sync
             // mode every round stalls on that link; async mode lets the
@@ -426,6 +581,7 @@ impl Scenario {
                     num_verifiers: 1,
                     shard_rebalance_every: 0,
                     spec_shape: SpecShape::Chain,
+                    churn: ChurnSchedule::default(),
                 }
             }
             // Sharded-pool scale-up study: 8 heterogeneous clients whose
@@ -463,6 +619,7 @@ impl Scenario {
                     num_verifiers: 2,
                     shard_rebalance_every: 16,
                     spec_shape: SpecShape::Chain,
+                    churn: ChurnSchedule::default(),
                 }
             }
             // Tree-speculation study: four clients drafting with the weak
@@ -491,7 +648,48 @@ impl Scenario {
                 num_verifiers: 1,
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Tree { arity: 2, depth: 8 },
+                churn: ChurnSchedule::default(),
             },
+            // Dynamic-membership study: four resident clients, one extra
+            // client joining a third of the way through the run, and one
+            // resident departing at the two-thirds mark. Sync barrier so
+            // live waves line up one-to-one with the analytic simulator's
+            // rounds (the churn bench cross-checks the two).
+            "churn" => {
+                let mut s = Scenario {
+                    id: id.into(),
+                    family: "qwen".into(),
+                    num_clients: 4,
+                    capacity: 24,
+                    max_new_tokens: 40,
+                    draft_models: vec!["qwen-draft-06b".into()],
+                    domains: base_domains[..4].to_vec(),
+                    domain_stickiness: 0.85,
+                    eta: Smoothing::Fixed(0.3),
+                    beta: Smoothing::Fixed(0.5),
+                    max_draft: 16,
+                    rounds: 240,
+                    seed,
+                    links: Scenario::default_links(4, seed),
+                    coord_mode: CoordMode::Sync,
+                    batch_window_us: 500,
+                    min_wave_fill: 0,
+                    num_verifiers: 1,
+                    shard_rebalance_every: 0,
+                    spec_shape: SpecShape::Chain,
+                    churn: ChurnSchedule::default(),
+                };
+                s.churn = ChurnSchedule {
+                    events: vec![
+                        ChurnEvent {
+                            at_wave: 80,
+                            kind: ChurnKind::Join(ClientSpec::new("qwen-draft-06b", "cnn")),
+                        },
+                        ChurnEvent { at_wave: 160, kind: ChurnKind::Leave(1) },
+                    ],
+                };
+                s
+            }
             _ => return None,
         };
         s.validate().expect("preset must validate");
@@ -501,8 +699,17 @@ impl Scenario {
         Some(s)
     }
 
-    pub fn preset_ids() -> [&'static str; 7] {
-        ["qwen-4c-50", "qwen-8c-150", "llama-8c-150", "smoke", "straggler", "sharded", "tree"]
+    pub fn preset_ids() -> [&'static str; 8] {
+        [
+            "qwen-4c-50",
+            "qwen-8c-150",
+            "llama-8c-150",
+            "smoke",
+            "straggler",
+            "sharded",
+            "tree",
+            "churn",
+        ]
     }
 
     /// Serialize for results provenance.
@@ -526,6 +733,7 @@ impl Scenario {
             ("num_verifiers", Value::Num(self.num_verifiers as f64)),
             ("shard_rebalance_every", Value::Num(self.shard_rebalance_every as f64)),
             ("spec_shape", Value::Str(self.spec_shape.label())),
+            ("churn_events", Value::Num(self.churn.events.len() as f64)),
         ])
     }
 }
@@ -604,10 +812,11 @@ mod tests {
 
     #[test]
     fn coord_mode_parse_and_defaults() {
-        assert_eq!(CoordMode::parse("sync"), Some(CoordMode::Sync));
-        assert_eq!(CoordMode::parse("Async"), Some(CoordMode::Async));
-        assert_eq!(CoordMode::parse("wave"), Some(CoordMode::Async));
-        assert_eq!(CoordMode::parse("nope"), None);
+        assert_eq!("sync".parse(), Ok(CoordMode::Sync));
+        assert_eq!("Async".parse(), Ok(CoordMode::Async));
+        assert_eq!("wave".parse(), Ok(CoordMode::Async));
+        let err = "nope".parse::<CoordMode>().unwrap_err().to_string();
+        assert!(err.contains("sync, async"), "{err}");
         // Every preset defaults to the barrier so existing experiments
         // reproduce bit-for-bit.
         for id in Scenario::preset_ids() {
@@ -665,18 +874,20 @@ mod tests {
 
     #[test]
     fn spec_shape_parse_label_roundtrip() {
-        assert_eq!(SpecShape::parse("chain"), Some(SpecShape::Chain));
-        assert_eq!(SpecShape::parse("Adaptive"), Some(SpecShape::Adaptive));
-        assert_eq!(SpecShape::parse("tree"), Some(SpecShape::Tree { arity: 2, depth: 8 }));
-        assert_eq!(SpecShape::parse("tree:3x4"), Some(SpecShape::Tree { arity: 3, depth: 4 }));
-        assert_eq!(SpecShape::parse("tree:x4"), None);
-        assert_eq!(SpecShape::parse("bush"), None);
+        assert_eq!("chain".parse(), Ok(SpecShape::Chain));
+        assert_eq!("Adaptive".parse(), Ok(SpecShape::Adaptive));
+        assert_eq!("tree".parse(), Ok(SpecShape::Tree { arity: 2, depth: 8 }));
+        assert_eq!("tree:3x4".parse(), Ok(SpecShape::Tree { arity: 3, depth: 4 }));
+        assert!("tree:x4".parse::<SpecShape>().is_err());
+        let err = "bush".parse::<SpecShape>().unwrap_err().to_string();
+        assert!(err.contains("unknown spec shape 'bush'"), "{err}");
+        assert!(err.contains("tree:<arity>x<depth>"), "{err}");
         for shape in [
             SpecShape::Chain,
             SpecShape::Adaptive,
             SpecShape::Tree { arity: 3, depth: 5 },
         ] {
-            assert_eq!(SpecShape::parse(&shape.label()), Some(shape));
+            assert_eq!(shape.label().parse(), Ok(shape));
         }
         assert!(SpecShape::Chain.is_chain());
         assert!(!SpecShape::Adaptive.is_chain());
@@ -710,16 +921,68 @@ mod tests {
     fn validation_rejects_unknown_domains() {
         let mut s = Scenario::preset("smoke").unwrap();
         s.domains = vec!["alpaca".into(), "not-a-domain".into()];
-        let err = s.validate().unwrap_err();
+        let err = s.validate().unwrap_err().to_string();
         assert!(err.contains("unknown domain 'not-a-domain'"), "{err}");
         assert!(err.contains("alpaca"), "should list known domains: {err}");
     }
 
     #[test]
     fn policy_parse() {
-        assert_eq!(Policy::parse("GoodSpeed"), Some(Policy::GoodSpeed));
-        assert_eq!(Policy::parse("fixed-s"), Some(Policy::FixedS));
-        assert_eq!(Policy::parse("random"), Some(Policy::RandomS));
-        assert_eq!(Policy::parse("zzz"), None);
+        assert_eq!("GoodSpeed".parse(), Ok(Policy::GoodSpeed));
+        assert_eq!("fixed-s".parse(), Ok(Policy::FixedS));
+        assert_eq!("random".parse(), Ok(Policy::RandomS));
+        let err = "zzz".parse::<Policy>().unwrap_err().to_string();
+        assert!(err.contains("unknown policy 'zzz'"), "{err}");
+        assert!(err.contains("goodspeed, fixed-s, random-s"), "{err}");
+    }
+
+    #[test]
+    fn churn_preset_and_schedule_validation() {
+        let s = Scenario::preset("churn").unwrap();
+        assert_eq!(s.churn.events.len(), 2);
+        assert_eq!(s.churn.join_count(), 1);
+        // Every other preset stays static so existing experiments
+        // reproduce bit-for-bit.
+        for id in Scenario::preset_ids() {
+            let p = Scenario::preset(id).unwrap();
+            if id != "churn" {
+                assert!(p.churn.is_empty(), "{id}");
+            }
+        }
+        // Leave of a never-assigned id rejected.
+        let mut bad = Scenario::preset("smoke").unwrap();
+        bad.churn.events.push(ChurnEvent { at_wave: 5, kind: ChurnKind::Leave(7) });
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("does not exist"), "{err}");
+        // A join before the leave makes the id legal.
+        let mut ok = Scenario::preset("smoke").unwrap();
+        ok.churn.events.push(ChurnEvent {
+            at_wave: 2,
+            kind: ChurnKind::Join(ClientSpec::new("qwen-draft-06b", "alpaca")),
+        });
+        ok.churn.events.push(ChurnEvent { at_wave: 5, kind: ChurnKind::Leave(2) });
+        assert!(ok.validate().is_ok());
+        // Unknown join domain rejected; double departure rejected.
+        let mut bad = Scenario::preset("smoke").unwrap();
+        bad.churn.events.push(ChurnEvent {
+            at_wave: 1,
+            kind: ChurnKind::Join(ClientSpec::new("qwen-draft-06b", "not-a-domain")),
+        });
+        assert!(bad.validate().is_err());
+        let mut bad = Scenario::preset("smoke").unwrap();
+        bad.churn.events.push(ChurnEvent { at_wave: 1, kind: ChurnKind::Leave(0) });
+        bad.churn.events.push(ChurnEvent { at_wave: 2, kind: ChurnKind::Leave(0) });
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("departs twice"), "{err}");
+    }
+
+    #[test]
+    fn churn_demo_schedule_is_well_formed() {
+        let mut s = Scenario::preset("smoke").unwrap();
+        s.churn = ChurnSchedule::demo(&s);
+        assert!(s.validate().is_ok());
+        assert_eq!(s.churn.join_count(), 1);
+        let sorted = s.churn.sorted();
+        assert!(sorted[0].at_wave <= sorted[1].at_wave);
     }
 }

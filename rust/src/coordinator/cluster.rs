@@ -1,0 +1,970 @@
+//! Session-oriented serving API: a long-lived cluster with dynamic
+//! client churn.
+//!
+//! The paper's setting is a verification server coordinating a
+//! *population* of heterogeneous edge draft servers — and edge drafters
+//! arrive and depart continuously. This module is the public face of that
+//! closed loop:
+//!
+//! ```text
+//! Cluster::builder(scenario)      // policy, transport, engine factory…
+//!     .engine(factory)
+//!     .start()?                   // spawns the coordinator; admits the
+//!                                 // scenario's initial clients
+//!     -> ServingHandle
+//!         .attach(ClientSpec)?    // admit a new session  -> ClientId
+//!         .detach(ClientId)?      // graceful drain
+//!         .snapshot()             // live ClusterStats
+//!         .stop()? / .wait()?     // -> RunOutcome
+//! ```
+//!
+//! **Epochs.** Membership is epoch-stamped: every change — a scheduled
+//! [`ChurnEvent`], an external [`ServingHandle::attach`]/
+//! [`ServingHandle::detach`], or a drain completing — is applied at a
+//! *wave boundary*, bumps the epoch, and is recorded as a
+//! [`MembershipEvent`](crate::metrics::MembershipEvent) in the run's
+//! recorder. Waves never observe a half-applied membership.
+//!
+//! **Admission.** A joining client gets a fresh slot, estimators seeded
+//! from the population prior (`Estimators::seed_from_population`), and an
+//! initial grant from the *unreserved* budget
+//! ([`RoundCore::admit_member`](super::RoundCore::admit_member)) — the
+//! Σ outstanding ≤ C reservation
+//! invariant holds through the admission itself. Dynamically attached
+//! clients open with the wire hello ([`Message::Join`] →
+//! [`Message::JoinAck`]), which carries the protocol version byte.
+//!
+//! **Graceful drain.** [`ServingHandle::detach`] marks the session
+//! draining: it stays a member — its in-flight grant stays reserved —
+//! until its final verdict is delivered; that wave grants it 0, the
+//! coordinator sends [`Message::Leave`], retires the membership, and the
+//! freed budget water-fills over the survivors. A drain never drops or
+//! double-counts a verdict.
+//!
+//! **Static parity.** A cluster whose scenario has no churn schedule (and
+//! no external attach/detach) executes the exact call sequence of the
+//! pre-redesign `run_serving` path: same transport setup, same per-client
+//! RNG forks, same wave order, same RNG streams, same records. The
+//! deprecated [`run_serving`](super::run_serving) shim is nothing but
+//! `builder → start → wait`.
+//!
+//! `num_verifiers > 1` scenarios run the sharded pool
+//! ([`super::pool`]) under the same handle; a joining client is routed to
+//! the least-pressured shard.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::leader::{Leader, PoolReport, RunConfig, RunOutcome, Transport};
+use crate::configsys::{ChurnEvent, ChurnKind, ClientSpec, CoordMode, Policy, Scenario};
+use crate::draft::{spawn_draft_server, DraftServerConfig, DraftStats};
+use crate::error::{ConfigError, GoodSpeedError};
+use crate::metrics::recorder::{MembershipEvent, Recorder};
+use crate::net::transport::{channel_transport, ClientPort, ServerSide, TcpTransport};
+use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, PROTOCOL_VERSION};
+use crate::runtime::EngineFactory;
+use crate::util::{Rng, Stopwatch};
+use crate::workload::DomainStream;
+
+/// Identifier of one client session. Slots are assigned in order — the
+/// scenario's initial clients take `0..num_clients`, then one fresh id
+/// per admission — and are never reused.
+pub type ClientId = usize;
+
+/// How often idle/blocked coordinator loops wake to look at control
+/// traffic and liveness.
+const CTL_TICK: Duration = Duration::from_millis(2);
+
+/// How long the sync barrier tolerates silence before checking whether an
+/// awaited draft server died (a dead client would otherwise hang the
+/// barrier forever).
+const LIVENESS_TICK: Duration = Duration::from_millis(200);
+
+/// Lifecycle of one client slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum SlotState {
+    /// Reserved but never attached.
+    Empty,
+    /// Serving.
+    Active,
+    /// Detach requested; awaiting the final verdict.
+    Draining,
+    /// Drain complete (or never re-attachable); slot archived.
+    Retired,
+}
+
+/// Control messages from the [`ServingHandle`] to the coordinator.
+pub(crate) enum Ctl {
+    Attach { spec: ClientSpec, reply: Sender<Result<ClientId, GoodSpeedError>> },
+    Detach { id: ClientId, reply: Sender<Result<(), GoodSpeedError>> },
+    Stop,
+}
+
+/// A point-in-time view of the cluster, published at every wave boundary.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    /// Membership epoch (bumps on every join/leave).
+    pub epoch: u64,
+    /// Waves processed so far.
+    pub waves: u64,
+    /// Verdicts delivered so far.
+    pub delivered: u64,
+    /// Currently serving client ids (including draining), ascending.
+    pub members: Vec<ClientId>,
+    /// Subset of `members` in graceful drain.
+    pub draining: Vec<ClientId>,
+    /// Per-slot lifetime goodput (retired clients keep their totals).
+    pub lifetime_goodput: Vec<f64>,
+    /// Per-slot wave-participation counts.
+    pub participation: Vec<u64>,
+    /// Per-slot acceptance-rate estimates α̂ (archived for retired slots).
+    pub alpha_hat: Vec<f64>,
+    /// Total client slots (initial + churn joins + reserved headroom).
+    pub slots: usize,
+    /// Sessions admitted over the cluster's lifetime (incl. initial).
+    pub attached_total: u64,
+    /// Sessions retired over the cluster's lifetime.
+    pub retired_total: u64,
+}
+
+/// Namespace for [`Cluster::builder`] — the entry point of the serving
+/// API.
+pub struct Cluster;
+
+impl Cluster {
+    /// Start describing a serving cluster for `scenario`. The scenario's
+    /// `num_clients` clients (models/domains/links cycled exactly like
+    /// the batch runner did) are admitted at start; its churn schedule,
+    /// if any, is applied as the run progresses.
+    pub fn builder(scenario: Scenario) -> ClusterBuilder {
+        ClusterBuilder {
+            scenario,
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+            factory: None,
+            extra_slots: 0,
+        }
+    }
+}
+
+/// Builder for a serving cluster (see [`Cluster::builder`]).
+pub struct ClusterBuilder {
+    scenario: Scenario,
+    policy: Policy,
+    transport: Transport,
+    simulate_network: bool,
+    factory: Option<Arc<dyn EngineFactory>>,
+    extra_slots: usize,
+}
+
+impl ClusterBuilder {
+    /// Scheduling policy (default: GoodSpeed).
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Transport carrying draft batches (default: in-process channel).
+    pub fn transport(mut self, transport: Transport) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// Apply real sleeps for simulated link delays (default: off).
+    pub fn simulate_network(mut self, on: bool) -> Self {
+        self.simulate_network = on;
+        self
+    }
+
+    /// Engine factory building the verifier and drafter engines
+    /// (required).
+    pub fn engine(mut self, factory: Arc<dyn EngineFactory>) -> Self {
+        self.factory = Some(factory);
+        self
+    }
+
+    /// Reserve extra client slots beyond the initial clients and the
+    /// churn schedule's joins, for external [`ServingHandle::attach`]
+    /// calls (default: 0 — a static cluster admits nobody new).
+    pub fn reserve_slots(mut self, extra: usize) -> Self {
+        self.extra_slots = extra;
+        self
+    }
+
+    /// Validate, spawn the coordinator, admit the initial clients, and
+    /// return the serving handle.
+    pub fn start(self) -> Result<ServingHandle> {
+        let scenario = self.scenario;
+        scenario.validate().map_err(|e| anyhow!("invalid scenario: {e}"))?;
+        let factory = self
+            .factory
+            .ok_or_else(|| anyhow!("configuration error: ClusterBuilder requires an engine \
+                                    factory (ClusterBuilder::engine)"))?;
+        let slots = scenario.num_clients + scenario.churn.join_count() + self.extra_slots;
+        let cfg = RunConfig {
+            scenario,
+            policy: self.policy,
+            transport: self.transport,
+            simulate_network: self.simulate_network,
+        };
+        let (ctl_tx, ctl_rx) = channel::<Ctl>();
+        let snapshot = Arc::new(Mutex::new(ClusterStats::default()));
+        let snap = snapshot.clone();
+        // Engines are not `Send`, so everything engine-adjacent is built
+        // inside the coordinator thread; a readiness channel carries the
+        // construction result back to the caller.
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("goodspeed-cluster".into())
+            .spawn(move || -> Result<RunOutcome> {
+                if cfg.scenario.num_verifiers > 1 {
+                    let out = super::pool::run_pool_dynamic(
+                        &cfg,
+                        factory,
+                        slots,
+                        Some(ctl_rx),
+                        Some(snap),
+                        Some(ready_tx),
+                    )?;
+                    return Ok(RunOutcome {
+                        recorder: out.recorder,
+                        summary: out.summary,
+                        draft_stats: out.draft_stats,
+                        pool: Some(PoolReport {
+                            shard_summaries: out.shard_summaries,
+                            migrations: out.migrations,
+                        }),
+                    });
+                }
+                let mut engine = match ClusterEngine::new(&cfg, factory, slots, ctl_rx, snap) {
+                    Ok(engine) => {
+                        let _ = ready_tx.send(Ok(()));
+                        engine
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow!("{e:#}")));
+                        return Err(e);
+                    }
+                };
+                engine.run()
+            })
+            .expect("spawn cluster coordinator");
+        // Surface construction failures synchronously.
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(_)) | Err(_) => {
+                return match thread.join() {
+                    Ok(Err(e)) => Err(e),
+                    Ok(Ok(_)) => Err(anyhow!("cluster failed to start")),
+                    Err(_) => Err(anyhow!("cluster coordinator panicked at startup")),
+                };
+            }
+        }
+        Ok(ServingHandle { ctl: Some(ctl_tx), snapshot, thread: Some(thread) })
+    }
+}
+
+/// Handle to a running serving cluster. Dropping the handle leaves the
+/// cluster running to natural completion; use [`ServingHandle::stop`] or
+/// [`ServingHandle::wait`] to collect the [`RunOutcome`].
+pub struct ServingHandle {
+    ctl: Option<Sender<Ctl>>,
+    snapshot: Arc<Mutex<ClusterStats>>,
+    thread: Option<JoinHandle<Result<RunOutcome>>>,
+}
+
+impl ServingHandle {
+    fn ctl(&self) -> Result<&Sender<Ctl>, GoodSpeedError> {
+        self.ctl
+            .as_ref()
+            .ok_or_else(|| GoodSpeedError::Shutdown("cluster already stopped".into()))
+    }
+
+    /// Admit a new client session. Applied at the next wave boundary;
+    /// returns the assigned [`ClientId`]. Fails (typed) when no slot is
+    /// free — reserve headroom with [`ClusterBuilder::reserve_slots`] —
+    /// or when the spec names an unknown domain. A model name the engine
+    /// factory rejects cannot be caught here (engines are only
+    /// constructible inside the actor thread): such a session is admitted
+    /// but retired by the coordinator's liveness check on its first wave,
+    /// without disturbing the rest of the cluster.
+    pub fn attach(&self, spec: ClientSpec) -> Result<ClientId, GoodSpeedError> {
+        let (reply, rx) = channel();
+        self.ctl()?
+            .send(Ctl::Attach { spec, reply })
+            .map_err(|_| GoodSpeedError::Shutdown("cluster already stopped".into()))?;
+        rx.recv()
+            .map_err(|_| GoodSpeedError::Shutdown("cluster stopped before admission".into()))?
+    }
+
+    /// Begin a graceful drain of `id`: its in-flight grant stays reserved
+    /// until the final verdict, then the session is retired and its
+    /// estimator state archived. Returns as soon as the drain is
+    /// *scheduled* (the retirement itself completes within one wave of
+    /// the client's next participation).
+    pub fn detach(&self, id: ClientId) -> Result<(), GoodSpeedError> {
+        let (reply, rx) = channel();
+        self.ctl()?
+            .send(Ctl::Detach { id, reply })
+            .map_err(|_| GoodSpeedError::Shutdown("cluster already stopped".into()))?;
+        rx.recv()
+            .map_err(|_| GoodSpeedError::Shutdown("cluster stopped before detach".into()))?
+    }
+
+    /// The latest wave boundary's cluster state.
+    pub fn snapshot(&self) -> ClusterStats {
+        self.snapshot.lock().expect("snapshot lock").clone()
+    }
+
+    /// Request shutdown at the next wave boundary and collect the run.
+    pub fn stop(mut self) -> Result<RunOutcome> {
+        if let Some(ctl) = &self.ctl {
+            let _ = ctl.send(Ctl::Stop);
+        }
+        self.join_thread()
+    }
+
+    /// Wait for the scenario's budget to complete and collect the run
+    /// (the deprecated `run_serving` shim is `start()` + `wait()`).
+    pub fn wait(mut self) -> Result<RunOutcome> {
+        self.join_thread()
+    }
+
+    fn join_thread(&mut self) -> Result<RunOutcome> {
+        // Dropping the control sender lets a fully drained cluster (no
+        // members, nothing scheduled) finish instead of idling for
+        // control traffic that can never arrive.
+        self.ctl = None;
+        match self.thread.take() {
+            Some(t) => t.join().map_err(|_| anyhow!("cluster coordinator panicked"))?,
+            None => Err(anyhow!("cluster already collected")),
+        }
+    }
+}
+
+/// Per-client request-latency bookkeeping: latency is counted in
+/// *client-local* rounds between `new_request` flags.
+struct LatencyTracker {
+    start_round: Vec<u64>,
+}
+
+impl LatencyTracker {
+    fn new(n: usize) -> Self {
+        LatencyTracker { start_round: vec![0; n] }
+    }
+
+    fn observe(&mut self, recorder: &mut Recorder, client: usize, msg: &DraftMsg) {
+        if msg.new_request {
+            if msg.round > 0 {
+                recorder
+                    .request_latency_rounds
+                    .push(msg.round - self.start_round[client]);
+            }
+            self.start_round[client] = msg.round;
+        }
+    }
+}
+
+/// The single-verifier coordinator: owns the transport, the leader, and
+/// every client slot's lifecycle. Pooled scenarios use
+/// [`super::pool::run_pool_dynamic`] instead.
+struct ClusterEngine {
+    scenario: Scenario,
+    simulate_network: bool,
+    factory: Arc<dyn EngineFactory>,
+    server: ServerSide,
+    /// Unclaimed ports, one per slot (taken at admission).
+    ports: Vec<Option<Box<dyn ClientPort>>>,
+    leader: Leader,
+    state: Vec<SlotState>,
+    /// Client-local round each slot will send next (sync-barrier check).
+    expected_round: Vec<u64>,
+    handles: Vec<Option<JoinHandle<Result<DraftStats>>>>,
+    latency: LatencyTracker,
+    /// Root RNG the per-client domain streams fork from, in slot order —
+    /// the same stream discipline the batch runner used.
+    root_rng: Rng,
+    ctl_rx: Receiver<Ctl>,
+    /// Scheduled churn, sorted by wave; `schedule_cursor` marks progress.
+    schedule: Vec<ChurnEvent>,
+    schedule_cursor: usize,
+    epoch: u64,
+    delivered: u64,
+    attached_total: u64,
+    retired_total: u64,
+    stop: bool,
+    /// True once the control channel disconnected (handle dropped).
+    ctl_gone: bool,
+    snapshot: Arc<Mutex<ClusterStats>>,
+}
+
+impl ClusterEngine {
+    fn new(
+        cfg: &RunConfig,
+        factory: Arc<dyn EngineFactory>,
+        slots: usize,
+        ctl_rx: Receiver<Ctl>,
+        snapshot: Arc<Mutex<ClusterStats>>,
+    ) -> Result<ClusterEngine> {
+        let scenario = cfg.scenario.clone();
+        let n = scenario.num_clients;
+
+        // Transport, sized to the full slot capacity (spare connections
+        // are parked until admission).
+        let (server, ports): (ServerSide, Vec<_>) = match cfg.transport {
+            Transport::Channel => channel_transport(slots),
+            Transport::Tcp => {
+                let t = TcpTransport::new(slots)?;
+                (t.server, t.ports)
+            }
+        };
+
+        let mut leader = Leader::with_slots(&scenario, cfg.policy, factory.as_ref(), slots)?;
+        // Spare slots: not members, no reservation.
+        for i in n..slots {
+            leader.core.set_member(i, false);
+            leader.core.set_outstanding(i, 0);
+        }
+
+        let mut engine = ClusterEngine {
+            simulate_network: cfg.simulate_network,
+            factory,
+            server,
+            ports: ports.into_iter().map(Some).collect(),
+            leader,
+            state: vec![SlotState::Empty; slots],
+            expected_round: vec![0; slots],
+            handles: (0..slots).map(|_| None).collect(),
+            latency: LatencyTracker::new(slots),
+            root_rng: Rng::new(scenario.seed),
+            ctl_rx,
+            schedule: scenario.churn.sorted(),
+            schedule_cursor: 0,
+            epoch: 0,
+            delivered: 0,
+            attached_total: 0,
+            retired_total: 0,
+            stop: false,
+            ctl_gone: false,
+            snapshot,
+            scenario,
+        };
+
+        // Admit the initial membership — the exact spawn sequence (and
+        // RNG fork order) of the batch runner: client i gets the cycled
+        // model/domain/link and the `seed ^ (0xD00D + i)` stream.
+        let max_rounds = engine.draft_round_cap();
+        let initial_alloc =
+            (engine.scenario.capacity / n.max(1)).min(engine.scenario.max_draft);
+        for i in 0..n {
+            let stream = DomainStream::new(
+                engine.scenario.domain(i),
+                engine.scenario.domain_stickiness,
+                engine.scenario.max_new_tokens,
+                engine.root_rng.fork(i as u64),
+            )?;
+            let dcfg = DraftServerConfig {
+                client_id: i,
+                model: engine.scenario.draft_model(i).to_string(),
+                initial_alloc,
+                link: engine.scenario.link(i),
+                simulate_network: engine.simulate_network,
+                seed: engine.scenario.seed ^ (0xD00D + i as u64),
+                max_rounds,
+                spec_shape: engine.scenario.spec_shape,
+                verify_k: engine.factory.verify_k(),
+                hello: false,
+            };
+            let port = engine.ports[i].take().expect("initial port");
+            engine.handles[i] =
+                Some(spawn_draft_server(dcfg, engine.factory.clone(), stream, port));
+            engine.state[i] = SlotState::Active;
+            engine.attached_total += 1;
+        }
+        Ok(engine)
+    }
+
+    /// Safety cap on client-local rounds (the coordinator normally shuts
+    /// sessions down; in async mode one fast client may absorb most of
+    /// the budget).
+    fn draft_round_cap(&self) -> u64 {
+        match self.scenario.coord_mode {
+            CoordMode::Sync => self.scenario.rounds + 1,
+            CoordMode::Async => {
+                self.scenario.rounds.saturating_mul(self.scenario.num_clients as u64) + 1
+            }
+        }
+    }
+
+    fn members(&self) -> Vec<usize> {
+        (0..self.state.len())
+            .filter(|&i| matches!(self.state[i], SlotState::Active | SlotState::Draining))
+            .collect()
+    }
+
+    /// Admit one new session (external attach or scheduled join).
+    fn admit(&mut self, spec: ClientSpec, wave: u64) -> Result<ClientId, GoodSpeedError> {
+        let slot = match self.state.iter().position(|s| *s == SlotState::Empty) {
+            Some(s) => s,
+            None => {
+                return Err(ConfigError::invalid(
+                    "no free client slots (reserve headroom with \
+                     ClusterBuilder::reserve_slots or the churn schedule)",
+                )
+                .into())
+            }
+        };
+        if !crate::workload::domains::is_domain(&spec.domain) {
+            return Err(ConfigError::invalid(format!(
+                "attach: unknown domain '{}' (known: {})",
+                spec.domain,
+                crate::workload::domains::DOMAINS.join(", ")
+            ))
+            .into());
+        }
+        // Build everything fallible first, so a failed admission leaves
+        // the membership untouched…
+        let stream = DomainStream::new(
+            &spec.domain,
+            self.scenario.domain_stickiness,
+            self.scenario.max_new_tokens,
+            self.root_rng.fork(slot as u64),
+        )
+        .map_err(|e| GoodSpeedError::Engine(format!("{e:#}")))?;
+        // …then commit: estimators from the population prior of the
+        // current members, grant from the unreserved budget.
+        let members = self.leader.core.members();
+        self.leader.core.estimators.seed_from_population(slot, &members);
+        let grant = self.leader.core.admit_member(slot, self.scenario.max_draft);
+        let dcfg = DraftServerConfig {
+            client_id: slot,
+            model: spec.model,
+            initial_alloc: grant,
+            link: spec.link,
+            simulate_network: self.simulate_network,
+            seed: self.scenario.seed ^ (0xD00D + slot as u64),
+            max_rounds: self.draft_round_cap(),
+            spec_shape: self.scenario.spec_shape,
+            verify_k: self.factory.verify_k(),
+            hello: true,
+        };
+        let port = self.ports[slot].take().expect("spare port");
+        self.handles[slot] =
+            Some(spawn_draft_server(dcfg, self.factory.clone(), stream, port));
+        self.state[slot] = SlotState::Active;
+        self.expected_round[slot] = 0;
+        self.attached_total += 1;
+        self.epoch += 1;
+        let ev = MembershipEvent {
+            wave,
+            epoch: self.epoch,
+            joined: vec![(slot, grant)],
+            left: vec![],
+            members: self.members(),
+        };
+        self.leader.core.recorder.note_membership(ev);
+        Ok(slot)
+    }
+
+    /// Schedule a graceful drain.
+    fn begin_detach(&mut self, id: ClientId) -> Result<(), GoodSpeedError> {
+        if id >= self.state.len() || self.state[id] != SlotState::Active {
+            return Err(ConfigError::invalid(format!(
+                "detach: client {id} is not an active session"
+            ))
+            .into());
+        }
+        self.state[id] = SlotState::Draining;
+        self.leader.core.set_draining(id, true);
+        Ok(())
+    }
+
+    /// Complete a drain after the client's final verdict: send the Leave
+    /// frame, retire the membership, archive the stats.
+    fn retire(&mut self, id: ClientId, wave: u64) {
+        self.epoch += 1;
+        let _ = (self.server.txs[id])(&Message::Leave(LeaveMsg {
+            client_id: id as u32,
+            epoch: self.epoch,
+        }));
+        self.leader.core.retire_member(id);
+        self.state[id] = SlotState::Retired;
+        self.retired_total += 1;
+        let ev = MembershipEvent {
+            wave,
+            epoch: self.epoch,
+            joined: vec![],
+            left: vec![id],
+            members: self.members(),
+        };
+        self.leader.core.recorder.note_membership(ev);
+    }
+
+    /// Wave boundary: apply due schedule events, drain external control,
+    /// publish the snapshot. Returns with `self.stop` set when shutdown
+    /// was requested. With an empty membership, pending events fire
+    /// immediately (the wave clock is frozen, so they could never come
+    /// due otherwise) — the same rule the analytic simulator applies.
+    fn boundary(&mut self, wave: u64) {
+        while self.schedule_cursor < self.schedule.len()
+            && (self.schedule[self.schedule_cursor].at_wave <= wave
+                || self.members().is_empty())
+        {
+            let ev = self.schedule[self.schedule_cursor].clone();
+            self.schedule_cursor += 1;
+            match ev.kind {
+                ChurnKind::Join(spec) => {
+                    if let Err(e) = self.admit(spec, wave) {
+                        log::warn!("scheduled join at wave {wave} failed: {e}");
+                    }
+                }
+                ChurnKind::Leave(id) => {
+                    if let Err(e) = self.begin_detach(id) {
+                        log::warn!("scheduled leave of client {id} at wave {wave}: {e}");
+                    }
+                }
+            }
+        }
+        loop {
+            match self.ctl_rx.try_recv() {
+                Ok(Ctl::Attach { spec, reply }) => {
+                    let _ = reply.send(self.admit(spec, wave));
+                }
+                Ok(Ctl::Detach { id, reply }) => {
+                    let _ = reply.send(self.begin_detach(id));
+                }
+                Ok(Ctl::Stop) => self.stop = true,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.ctl_gone = true;
+                    break;
+                }
+            }
+        }
+        self.publish(wave);
+    }
+
+    fn publish(&self, wave: u64) {
+        let mut snap = self.snapshot.lock().expect("snapshot lock");
+        snap.epoch = self.epoch;
+        snap.waves = wave;
+        snap.delivered = self.delivered;
+        snap.members = self.members();
+        snap.draining = (0..self.state.len())
+            .filter(|&i| self.state[i] == SlotState::Draining)
+            .collect();
+        snap.lifetime_goodput = self.leader.core.recorder.lifetime_goodput().to_vec();
+        snap.participation = self.leader.core.recorder.participation().to_vec();
+        snap.alpha_hat = self.leader.core.estimators.alpha_hat.clone();
+        snap.slots = self.state.len();
+        snap.attached_total = self.attached_total;
+        snap.retired_total = self.retired_total;
+    }
+
+    /// Answer a session hello.
+    fn ack_join(&mut self, id: usize, protocol: u8) -> Result<()> {
+        if protocol > PROTOCOL_VERSION {
+            return Err(anyhow!(
+                "client {id} speaks protocol {protocol}, newer than {PROTOCOL_VERSION}"
+            ));
+        }
+        (self.server.txs[id])(&Message::JoinAck(JoinAckMsg {
+            client_id: id as u32,
+            protocol: PROTOCOL_VERSION,
+            initial_alloc: self.leader.core.outstanding(id) as u32,
+            epoch: self.epoch,
+        }))
+    }
+
+    fn slot_live(&self, id: usize) -> bool {
+        matches!(self.state[id], SlotState::Active | SlotState::Draining)
+    }
+
+    /// A member we are waiting on whose actor thread already exited is a
+    /// dead client. A dead *initial* client fails the run (the batch
+    /// semantics); a dead dynamically-attached session — e.g. an
+    /// `attach` whose model the engine factory rejected inside the actor
+    /// thread — is retired so one bad admission cannot take down the
+    /// long-lived cluster.
+    fn check_liveness(&mut self, awaited: &[usize], wave: u64) -> Result<()> {
+        for &i in awaited {
+            let finished =
+                self.handles[i].as_ref().map(|h| h.is_finished()).unwrap_or(false);
+            if finished {
+                let res = self.handles[i].take().expect("handle").join();
+                let detail = match res {
+                    Ok(Ok(_)) => format!("client {i} exited mid-session"),
+                    Ok(Err(e)) => format!("client {i} failed: {e:#}"),
+                    Err(_) => format!("client {i} panicked"),
+                };
+                if i < self.scenario.num_clients {
+                    self.state[i] = SlotState::Retired;
+                    self.leader.core.retire_member(i);
+                    return Err(anyhow!(detail));
+                }
+                log::warn!("retiring dead attached session: {detail}");
+                self.retire(i, wave);
+            }
+        }
+        Ok(())
+    }
+
+    fn run(&mut self) -> Result<RunOutcome> {
+        let run_start = Instant::now();
+        let loop_result = match self.scenario.coord_mode {
+            CoordMode::Sync => self.run_sync(),
+            CoordMode::Async => self.run_async(),
+        };
+        // Shutdown (even on error, so draft threads can exit before join).
+        for tx in self.server.txs.iter_mut() {
+            let _ = tx(&Message::Shutdown);
+        }
+        loop_result?;
+        let wall = run_start.elapsed().as_secs_f64();
+
+        let mut draft_stats: Vec<DraftStats> = Vec::with_capacity(self.handles.len());
+        for (i, slot) in self.handles.iter_mut().enumerate() {
+            match slot.take() {
+                Some(h) => match h.join() {
+                    Ok(Ok(s)) => draft_stats.push(s),
+                    Ok(Err(e)) => return Err(anyhow!("draft server {i} failed: {e}")),
+                    Err(_) => return Err(anyhow!("draft server {i} panicked")),
+                },
+                None => draft_stats.push(DraftStats::default()),
+            }
+        }
+        let recorder = std::mem::take(&mut self.leader.core.recorder);
+        let summary = recorder.summary(wall);
+        Ok(RunOutcome { recorder, summary, draft_stats, pool: None })
+    }
+
+    /// The sync barrier, generalized to epoch-stamped membership: one
+    /// dense wave over the *current* members per round.
+    fn run_sync(&mut self) -> Result<()> {
+        let slots = self.state.len();
+        let mut wave: u64 = 0;
+        while wave < self.scenario.rounds {
+            self.boundary(wave);
+            if self.stop {
+                break;
+            }
+            let members = self.members();
+            if members.is_empty() {
+                // Nothing to serve. If nothing can ever change, finish.
+                if self.ctl_gone && self.schedule_cursor >= self.schedule.len() {
+                    break;
+                }
+                std::thread::sleep(CTL_TICK);
+                continue;
+            }
+            let mut sw = Stopwatch::new();
+            // 1. Receive: FIFO until every *current* member's batch for
+            // its own round arrived (the awaited set is recomputed each
+            // pass — a dead attached session retired by the liveness
+            // check shrinks the barrier instead of hanging it). Retired
+            // stragglers' drained drafts are discarded; hellos are acked
+            // inline.
+            let mut pending: Vec<Option<DraftMsg>> = vec![None; slots];
+            loop {
+                let awaited: Vec<usize> = self
+                    .members()
+                    .into_iter()
+                    .filter(|&i| pending[i].is_none())
+                    .collect();
+                if awaited.is_empty() {
+                    break;
+                }
+                let (id, msg) =
+                    match self.server.recv_deadline(Instant::now() + LIVENESS_TICK)? {
+                        Some(m) => m,
+                        None => {
+                            self.check_liveness(&awaited, wave)?;
+                            continue;
+                        }
+                    };
+                match msg {
+                    Message::Draft(d) if self.slot_live(id) => {
+                        if d.round != self.expected_round[id] {
+                            return Err(anyhow!(
+                                "client {id} sent round {} while round {} expected",
+                                d.round,
+                                self.expected_round[id]
+                            ));
+                        }
+                        pending[id] = Some(d);
+                    }
+                    Message::Draft(_) => {} // retired straggler: drop
+                    Message::Join(j) => self.ack_join(id, j.protocol)?,
+                    Message::Leave(_) => {
+                        // Client-initiated departure request.
+                        let _ = self.begin_detach(id);
+                    }
+                    Message::Shutdown => {
+                        return Err(anyhow!("client {id} shut down early"))
+                    }
+                    other => return Err(anyhow!("unexpected {other:?}")),
+                }
+            }
+            let members = self.members();
+            if members.is_empty() {
+                continue; // every awaited session retired mid-collect
+            }
+            let msgs: Vec<DraftMsg> =
+                members.iter().map(|&i| pending[i].take().expect("collected")).collect();
+            let recv_ns = sw.lap().as_nanos() as u64;
+
+            for m in msgs.iter() {
+                self.latency
+                    .observe(&mut self.leader.core.recorder, m.client_id as usize, m);
+            }
+
+            // 2. Verify + schedule (one dense wave over the members).
+            let verdicts = self.leader.process_wave(wave, &msgs, recv_ns)?;
+            let _ = sw.lap();
+
+            // 3. Send verdicts.
+            for vd in &verdicts {
+                (self.server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
+                self.expected_round[vd.client_id as usize] += 1;
+            }
+            self.leader.note_send_ns(sw.lap().as_nanos() as u64);
+            self.delivered += verdicts.len() as u64;
+
+            // 4. Complete drains: the verdict just sent was the final one.
+            let drained: Vec<usize> = verdicts
+                .iter()
+                .map(|vd| vd.client_id as usize)
+                .filter(|&id| self.state[id] == SlotState::Draining)
+                .collect();
+            for id in drained {
+                self.retire(id, wave + 1);
+            }
+            wave += 1;
+        }
+        self.publish(wave);
+        Ok(())
+    }
+
+    /// Admit one fan-in message into the async pending set.
+    fn ingest(
+        &mut self,
+        pending: &mut [Option<DraftMsg>],
+        pending_n: &mut usize,
+        id: usize,
+        msg: Message,
+    ) -> Result<()> {
+        match msg {
+            Message::Draft(d) if self.slot_live(id) => {
+                self.latency.observe(&mut self.leader.core.recorder, id, &d);
+                if pending[id].replace(d).is_some() {
+                    return Err(anyhow!("client {id}: two drafts in flight"));
+                }
+                *pending_n += 1;
+                Ok(())
+            }
+            Message::Draft(_) => Ok(()), // retired straggler: drop
+            Message::Join(j) => self.ack_join(id, j.protocol),
+            Message::Leave(_) => {
+                let _ = self.begin_detach(id);
+                Ok(())
+            }
+            Message::Shutdown => Err(anyhow!("client {id} shut down early")),
+            other => Err(anyhow!("unexpected {other:?}")),
+        }
+    }
+
+    /// The event-driven pipeline, generalized to membership: waves fire
+    /// on fill or deadline over the live member set; the run stops after
+    /// the same total verification budget as the batch runner
+    /// (`num_clients × rounds` verdicts over the initial membership).
+    fn run_async(&mut self) -> Result<()> {
+        let slots = self.state.len();
+        let window = Duration::from_micros(self.scenario.batch_window_us);
+        let budget: u64 =
+            self.scenario.rounds.saturating_mul(self.scenario.num_clients as u64);
+        let mut pending: Vec<Option<DraftMsg>> = vec![None; slots];
+        let mut pending_n = 0usize;
+        let mut wave: u64 = 0;
+
+        while self.delivered < budget {
+            self.boundary(wave);
+            if self.stop {
+                break;
+            }
+            let members = self.members();
+            if members.is_empty() && pending_n == 0 {
+                if self.ctl_gone && self.schedule_cursor >= self.schedule.len() {
+                    break;
+                }
+                std::thread::sleep(CTL_TICK);
+                continue;
+            }
+            let mut sw = Stopwatch::new();
+            // Phase 1 — wait for the wave's first draft.
+            while pending_n == 0 {
+                match self.server.recv_deadline(Instant::now() + LIVENESS_TICK)? {
+                    Some((id, msg)) => self.ingest(&mut pending, &mut pending_n, id, msg)?,
+                    None => {
+                        self.check_liveness(&self.members(), wave)?;
+                        if self.members().is_empty() {
+                            break; // every session retired; re-enter the boundary
+                        }
+                    }
+                }
+            }
+            if pending_n == 0 {
+                continue;
+            }
+            // Phase 2 — batching window up to the wave-fill target.
+            let fill = self.scenario.effective_wave_fill().min(members.len());
+            let want = fill.min((budget - self.delivered).min(slots as u64) as usize);
+            let deadline = Instant::now() + window;
+            while pending_n < want {
+                match self.server.recv_deadline(deadline)? {
+                    Some((id, msg)) => self.ingest(&mut pending, &mut pending_n, id, msg)?,
+                    None => break, // deadline-triggered flush
+                }
+            }
+            // Phase 3 — opportunistic drain.
+            for (id, msg) in self.server.try_drain()? {
+                self.ingest(&mut pending, &mut pending_n, id, msg)?;
+            }
+            // Phase 4 — form the wave (index order ⇒ ascending client id).
+            let mut msgs: Vec<DraftMsg> = Vec::with_capacity(pending_n);
+            for slot in pending.iter_mut() {
+                if let Some(d) = slot.take() {
+                    msgs.push(d);
+                }
+            }
+            pending_n = 0;
+            let recv_ns = sw.lap().as_nanos() as u64;
+
+            // Phase 5 — verify + schedule + send.
+            let verdicts = self.leader.process_wave(wave, &msgs, recv_ns)?;
+            let _ = sw.lap();
+            for vd in &verdicts {
+                (self.server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
+            }
+            self.delivered += verdicts.len() as u64;
+            self.leader.note_send_ns(sw.lap().as_nanos() as u64);
+
+            // Phase 6 — complete drains.
+            let drained: Vec<usize> = verdicts
+                .iter()
+                .map(|vd| vd.client_id as usize)
+                .filter(|&id| self.state[id] == SlotState::Draining)
+                .collect();
+            for id in drained {
+                self.retire(id, wave + 1);
+            }
+            wave += 1;
+        }
+        self.publish(wave);
+        Ok(())
+    }
+}

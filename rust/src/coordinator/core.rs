@@ -72,6 +72,10 @@ pub struct RoundCore {
     /// toward the reservation (they draw on some other shard's budget).
     /// All-true outside pooled mode.
     member: Vec<bool>,
+    /// Members in graceful drain: still counted in the reservation (their
+    /// in-flight draft is owed a verdict) but granted 0 on their final
+    /// wave, so the freed budget water-fills over the survivors.
+    draining: Vec<bool>,
     /// Shard id stamped onto emitted records (0 outside pooled mode).
     shard: usize,
     pub recorder: Recorder,
@@ -97,6 +101,7 @@ impl RoundCore {
             capacity,
             outstanding: vec![initial_alloc; n],
             member: vec![true; n],
+            draining: vec![false; n],
             shard: 0,
             recorder: Recorder::new(n),
         }
@@ -138,6 +143,61 @@ impl RoundCore {
     /// Seed a migrated-in client's in-flight grant (pool rebalancing).
     pub fn set_outstanding(&mut self, client: usize, alloc: usize) {
         self.outstanding[client] = alloc;
+    }
+
+    /// Current members, ascending.
+    pub fn members(&self) -> Vec<usize> {
+        (0..self.member.len()).filter(|&i| self.member[i]).collect()
+    }
+
+    /// Σ outstanding grants over current members — the budget currently
+    /// reserved by in-flight drafts. Invariant: `reserved_total() ≤
+    /// capacity()` at every wave boundary (joins are only granted from the
+    /// unreserved remainder).
+    pub fn reserved_total(&self) -> usize {
+        (0..self.member.len()).filter(|&i| self.member[i]).map(|i| self.outstanding[i]).sum()
+    }
+
+    /// Whether a client is in graceful drain (see [`RoundCore::set_draining`]).
+    pub fn is_draining(&self, client: usize) -> bool {
+        self.draining[client]
+    }
+
+    /// Begin a graceful drain: the client stays a member (its in-flight
+    /// grant stays reserved until the final verdict) but its next
+    /// allocation is forced to 0, so the drain completes within one wave
+    /// of participation.
+    pub fn set_draining(&mut self, client: usize, draining: bool) {
+        self.draining[client] = draining;
+    }
+
+    /// Admit a new member under the reservation invariant: the grant is
+    /// the uniform share `C / (m + 1)` over the new member count, clamped
+    /// to `max_draft` and to the budget not currently reserved by other
+    /// members' in-flight drafts — so Σ outstanding ≤ C keeps holding at
+    /// the instant of admission. Returns the initial grant S_i(0).
+    pub fn admit_member(&mut self, client: usize, max_draft: usize) -> usize {
+        let others: usize = (0..self.member.len())
+            .filter(|&i| self.member[i] && i != client)
+            .map(|i| self.outstanding[i])
+            .sum();
+        let count =
+            (0..self.member.len()).filter(|&i| self.member[i] && i != client).count();
+        let share = self.capacity / (count + 1).max(1);
+        let grant = share.min(max_draft).min(self.capacity.saturating_sub(others));
+        self.member[client] = true;
+        self.draining[client] = false;
+        self.outstanding[client] = grant;
+        grant
+    }
+
+    /// Retire a member after its final verdict: drop its reservation and
+    /// membership. Its estimator entries stay in place as the archived
+    /// lifetime state (slots are never reused).
+    pub fn retire_member(&mut self, client: usize) {
+        self.member[client] = false;
+        self.draining[client] = false;
+        self.outstanding[client] = 0;
     }
 
     /// Swap the allocation policy (utility ablations).
@@ -202,8 +262,12 @@ impl RoundCore {
             // its draft was in flight here: its grant is reserved by the
             // *new* shard at the value it had at hand-off, so never grant
             // it more than that — otherwise the drained wave could exceed
-            // the budget the other shard set aside for it.
-            max_per_client[o.client_id] = if self.member[o.client_id] {
+            // the budget the other shard set aside for it. A draining
+            // member gets 0: this wave delivers its final verdict, and its
+            // share water-fills over the surviving members.
+            max_per_client[o.client_id] = if self.draining[o.client_id] {
+                0
+            } else if self.member[o.client_id] {
                 o.max_next
             } else {
                 o.max_next.min(self.outstanding[o.client_id])
@@ -372,6 +436,48 @@ mod tests {
         assert_eq!(c.outstanding(1), next[1]);
         c.set_outstanding(1, 7);
         assert_eq!(c.outstanding(1), 7);
+    }
+
+    #[test]
+    fn admit_respects_the_reservation_invariant() {
+        let mut c = core(4, 16);
+        // Slot 3 starts empty: not a member, no reservation.
+        c.retire_member(3);
+        assert_eq!(c.members(), vec![0, 1, 2]);
+        // 3 members × 4 outstanding = 12 reserved of 16.
+        assert_eq!(c.reserved_total(), 12);
+        // Admission grant: share C/(3+1) = 4, free budget = 4 → grant 4.
+        let g = c.admit_member(3, 32);
+        assert_eq!(g, 4);
+        assert!(c.is_member(3));
+        assert_eq!(c.reserved_total(), 16);
+        assert!(c.reserved_total() <= c.capacity());
+        // A second admission with nothing free grants 0, never overshoots.
+        let mut c3 = core(3, 8);
+        c3.retire_member(2);
+        c3.set_outstanding(0, 4);
+        c3.set_outstanding(1, 4);
+        assert_eq!(c3.admit_member(2, 32), 0);
+        assert!(c3.reserved_total() <= c3.capacity());
+    }
+
+    #[test]
+    fn draining_member_gets_zero_but_stays_reserved() {
+        let mut c = core(4, 16);
+        c.set_draining(1, true);
+        assert!(c.is_draining(1));
+        // Before its final wave the drain keeps the reservation.
+        assert_eq!(c.reserved_total(), 16);
+        let wave: Vec<WaveObs> = (0..4).map(|i| obs(i, 2, 16)).collect();
+        let next = c.finish_wave(0, &wave, 0, 0);
+        assert_eq!(next[1], 0, "draining client must be granted 0: {next:?}");
+        assert!(next[0] > 0 && next[2] > 0 && next[3] > 0, "{next:?}");
+        // Retirement releases the reservation and the drain flag.
+        c.retire_member(1);
+        assert!(!c.is_member(1));
+        assert!(!c.is_draining(1));
+        assert_eq!(c.outstanding(1), 0);
+        assert_eq!(c.members(), vec![0, 2, 3]);
     }
 
     #[test]

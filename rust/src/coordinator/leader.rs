@@ -23,21 +23,18 @@
 //! same code path the analytic simulator executes. See DESIGN.md, "Wave
 //! lifecycle", for the state machine.
 
+use std::str::FromStr;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::batcher::build_verify_request;
 use super::core::{RoundCore, WaveObs};
-use crate::configsys::{CoordMode, Policy, Scenario};
-use crate::draft::{spawn_draft_server, DraftServerConfig};
-use crate::metrics::recorder::Recorder;
-use crate::net::transport::{channel_transport, ServerSide, TcpTransport};
-use crate::net::wire::{DraftMsg, Message, VerdictMsg};
+use crate::configsys::{Policy, Scenario};
+use crate::error::ConfigError;
+use crate::net::wire::{DraftMsg, VerdictMsg};
 use crate::runtime::{EngineFactory, Verifier};
-use crate::util::{Rng, Stopwatch};
-use crate::workload::DomainStream;
+use crate::util::Stopwatch;
 
 /// Which transport carries draft batches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,12 +43,18 @@ pub enum Transport {
     Tcp,
 }
 
-impl Transport {
-    pub fn parse(s: &str) -> Option<Transport> {
+impl FromStr for Transport {
+    type Err = ConfigError;
+
+    fn from_str(s: &str) -> Result<Transport, ConfigError> {
         match s.to_ascii_lowercase().as_str() {
-            "channel" | "chan" => Some(Transport::Channel),
-            "tcp" => Some(Transport::Tcp),
-            _ => None,
+            "channel" | "chan" => Ok(Transport::Channel),
+            "tcp" => Ok(Transport::Tcp),
+            _ => Err(ConfigError::InvalidChoice {
+                field: "transport",
+                given: s.to_string(),
+                expected: &["channel", "tcp"],
+            }),
         }
     }
 }
@@ -82,22 +85,41 @@ impl Leader {
         policy: Policy,
         factory: &dyn EngineFactory,
     ) -> Result<Leader> {
+        Leader::with_slots(scenario, policy, factory, scenario.num_clients)
+    }
+
+    /// A leader whose core is sized to `slots ≥ num_clients` client
+    /// slots. The serving cluster reserves slots for scheduled/dynamic
+    /// joins; extra slots start as non-members with no reservation, so a
+    /// `slots == num_clients` leader is identical to [`Leader::new`].
+    pub fn with_slots(
+        scenario: &Scenario,
+        policy: Policy,
+        factory: &dyn EngineFactory,
+        slots: usize,
+    ) -> Result<Leader> {
+        assert!(slots >= scenario.num_clients, "slots must cover the initial clients");
         let verifier = factory.make_verifier(&scenario.family)?;
-        // Matches the drafters' S_i(0) in `run_serving` (they only clamp
+        // Matches the drafters' S_i(0) in the cluster (they only clamp
         // further down by context room).
         let initial_alloc = (scenario.capacity / scenario.num_clients.max(1))
             .min(scenario.max_draft);
+        let mut core = RoundCore::new(
+            slots,
+            scenario.eta,
+            scenario.beta,
+            policy,
+            scenario.seed,
+            scenario.capacity,
+            initial_alloc,
+        );
+        for i in scenario.num_clients..slots {
+            core.set_member(i, false);
+            core.set_outstanding(i, 0);
+        }
         Ok(Leader {
             verifier,
-            core: RoundCore::new(
-                scenario.num_clients,
-                scenario.eta,
-                scenario.beta,
-                policy,
-                scenario.seed,
-                scenario.capacity,
-                initial_alloc,
-            ),
+            core,
             max_draft: scenario.max_draft.min(factory.verify_k()),
             max_seq: factory.max_seq(),
             verify_k: factory.verify_k(),
@@ -232,40 +254,38 @@ impl Leader {
     }
 }
 
-/// Outcome of [`run_serving`].
+/// Per-shard extras of a pooled run, carried by [`RunOutcome::pool`].
+#[derive(Clone, Debug, Default)]
+pub struct PoolReport {
+    /// Per-shard summaries over the same wall clock.
+    pub shard_summaries: Vec<crate::metrics::RunSummary>,
+    /// Client migrations the pool controller performed.
+    pub migrations: u64,
+}
+
+/// Outcome of a serving run ([`ServingHandle`](super::ServingHandle)).
 pub struct RunOutcome {
-    pub recorder: Recorder,
+    pub recorder: crate::metrics::Recorder,
     pub summary: crate::metrics::RunSummary,
+    /// Per client *slot* (initial clients, then one slot per admitted
+    /// session; never-attached reserve slots hold defaults).
     pub draft_stats: Vec<crate::draft::DraftStats>,
+    /// Present when the run executed on the sharded verifier pool.
+    pub pool: Option<PoolReport>,
 }
 
-/// Per-client request-latency bookkeeping shared by both modes: latency is
-/// counted in *client-local* rounds between `new_request` flags.
-struct LatencyTracker {
-    start_round: Vec<u64>,
-}
-
-impl LatencyTracker {
-    fn new(n: usize) -> Self {
-        LatencyTracker { start_round: vec![0; n] }
-    }
-
-    fn observe(&mut self, recorder: &mut Recorder, client: usize, msg: &DraftMsg) {
-        if msg.new_request {
-            if msg.round > 0 {
-                recorder
-                    .request_latency_rounds
-                    .push(msg.round - self.start_round[client]);
-            }
-            self.start_round[client] = msg.round;
-        }
-    }
-}
-
-/// Full distributed run: spawn draft-server threads, drive the leader in
-/// the scenario's coordination mode, shut down, and collect everything.
-/// Single-verifier path; `num_verifiers > 1` runs go through
-/// [`super::pool::run_pool`].
+/// Full distributed run over a membership set frozen at construction.
+///
+/// Deprecated shim: the serving API is now session-oriented —
+/// [`Cluster::builder`](super::Cluster::builder) →
+/// [`ServingHandle`](super::ServingHandle). This function is exactly
+/// `builder → start → wait` (bit-identical to the historic batch runner:
+/// same transport setup, RNG streams, wave order, and records) and exists
+/// for callers that still think in one-shot runs.
+#[deprecated(
+    since = "0.2.0",
+    note = "use coordinator::Cluster::builder(scenario)…start() and drive the ServingHandle"
+)]
 pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<RunOutcome> {
     let scenario = &cfg.scenario;
     scenario.validate().map_err(|e| anyhow!("invalid scenario: {e}"))?;
@@ -279,245 +299,20 @@ pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<R
             scenario.num_verifiers
         ));
     }
-    let n = scenario.num_clients;
-
-    // Transport.
-    let (mut server, ports): (ServerSide, Vec<_>) = match cfg.transport {
-        Transport::Channel => channel_transport(n),
-        Transport::Tcp => {
-            let t = TcpTransport::new(n)?;
-            (t.server, t.ports)
-        }
-    };
-
-    // Draft servers. In async mode one fast client may absorb most of the
-    // total round budget, so the per-client safety cap is the full budget.
-    let max_rounds = match scenario.coord_mode {
-        CoordMode::Sync => scenario.rounds + 1,
-        CoordMode::Async => scenario.rounds.saturating_mul(n as u64) + 1,
-    };
-    let initial_alloc = scenario.capacity / n.max(1);
-    let mut handles = Vec::with_capacity(n);
-    let mut root_rng = Rng::new(scenario.seed);
-    for (i, port) in ports.into_iter().enumerate() {
-        let stream = DomainStream::new(
-            scenario.domain(i),
-            scenario.domain_stickiness,
-            scenario.max_new_tokens,
-            root_rng.fork(i as u64),
-        )?;
-        let dcfg = DraftServerConfig {
-            client_id: i,
-            model: scenario.draft_model(i).to_string(),
-            initial_alloc: initial_alloc.min(scenario.max_draft),
-            link: scenario.link(i),
-            simulate_network: cfg.simulate_network,
-            seed: scenario.seed ^ (0xD00D + i as u64),
-            max_rounds,
-            spec_shape: scenario.spec_shape,
-            verify_k: factory.verify_k(),
-        };
-        handles.push(spawn_draft_server(dcfg, factory.clone(), stream, port));
-    }
-
-    let mut leader = Leader::new(scenario, cfg.policy, factory.as_ref())?;
-    let run_start = Instant::now();
-    let loop_result = match scenario.coord_mode {
-        CoordMode::Sync => run_sync_loop(scenario, &mut server, &mut leader),
-        CoordMode::Async => run_async_loop(scenario, &mut server, &mut leader),
-    };
-    // Shutdown (even on error, so draft threads can exit before join).
-    for tx in server.txs.iter_mut() {
-        let _ = tx(&Message::Shutdown);
-    }
-    loop_result?;
-    let wall = run_start.elapsed().as_secs_f64();
-
-    let mut draft_stats = Vec::with_capacity(n);
-    for h in handles {
-        match h.join() {
-            Ok(Ok(s)) => draft_stats.push(s),
-            Ok(Err(e)) => return Err(anyhow!("draft server failed: {e}")),
-            Err(_) => return Err(anyhow!("draft server panicked")),
-        }
-    }
-    let recorder = leader.core.recorder;
-    let summary = recorder.summary(wall);
-    Ok(RunOutcome { recorder, summary, draft_stats })
-}
-
-/// The classic barrier: one dense wave per round, in lockstep.
-fn run_sync_loop(
-    scenario: &Scenario,
-    server: &mut ServerSide,
-    leader: &mut Leader,
-) -> Result<()> {
-    let n = scenario.num_clients;
-    let mut latency = LatencyTracker::new(n);
-    for round in 0..scenario.rounds {
-        let mut sw = Stopwatch::new();
-        // 1. Receive (FIFO until all N batches for this round arrived).
-        let mut slots: Vec<Option<DraftMsg>> = vec![None; n];
-        let mut have = 0usize;
-        while have < n {
-            let (id, msg) = server
-                .recv()
-                .map_err(|_| anyhow!("draft servers disconnected at round {round}"))?;
-            match msg {
-                Message::Draft(d) => {
-                    if d.round != round {
-                        return Err(anyhow!(
-                            "client {id} sent round {} during round {round}",
-                            d.round
-                        ));
-                    }
-                    if slots[id].replace(d).is_none() {
-                        have += 1;
-                    }
-                }
-                Message::Shutdown => return Err(anyhow!("client {id} shut down early")),
-                other => return Err(anyhow!("unexpected {other:?}")),
-            }
-        }
-        let msgs: Vec<DraftMsg> = slots.into_iter().map(Option::unwrap).collect();
-        let recv_ns = sw.lap().as_nanos() as u64;
-
-        // Request-latency bookkeeping (coordinator side).
-        for (i, m) in msgs.iter().enumerate() {
-            latency.observe(&mut leader.core.recorder, i, m);
-        }
-
-        // 2. Verify + schedule (one dense wave; verify time is measured
-        // inside process_wave — absorb it from the outer lap so the send
-        // phase below is measured alone).
-        let verdicts = leader.process_wave(round, &msgs, recv_ns)?;
-        let _ = sw.lap();
-
-        // 3. Send verdicts (tiny messages; paper: <0.1 % of wall time).
-        for vd in &verdicts {
-            (server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
-        }
-        leader.note_send_ns(sw.lap().as_nanos() as u64);
-    }
-    Ok(())
-}
-
-/// Admit one fan-in message into the pending set (at most one in-flight
-/// draft per client — the actor protocol strictly alternates send/recv).
-fn ingest_draft(
-    pending: &mut [Option<DraftMsg>],
-    pending_n: &mut usize,
-    latency: &mut LatencyTracker,
-    recorder: &mut Recorder,
-    id: usize,
-    msg: Message,
-) -> Result<()> {
-    match msg {
-        Message::Draft(d) => {
-            latency.observe(recorder, id, &d);
-            if pending[id].replace(d).is_some() {
-                return Err(anyhow!("client {id}: two drafts in flight"));
-            }
-            *pending_n += 1;
-            Ok(())
-        }
-        Message::Shutdown => Err(anyhow!("client {id} shut down early")),
-        other => Err(anyhow!("unexpected {other:?}")),
-    }
-}
-
-/// The event-driven pipeline: waves fire on fill or deadline, stragglers
-/// join later waves, and the run stops after the same total verification
-/// budget as sync (`num_clients × rounds` verdicts).
-fn run_async_loop(
-    scenario: &Scenario,
-    server: &mut ServerSide,
-    leader: &mut Leader,
-) -> Result<()> {
-    let n = scenario.num_clients;
-    let window = Duration::from_micros(scenario.batch_window_us);
-    let fill_target = scenario.effective_wave_fill();
-    let budget: u64 = scenario.rounds.saturating_mul(n as u64);
-    let mut delivered: u64 = 0;
-    // At most one in-flight draft per client (the actor protocol strictly
-    // alternates send/recv).
-    let mut pending: Vec<Option<DraftMsg>> = vec![None; n];
-    let mut pending_n = 0usize;
-    let mut latency = LatencyTracker::new(n);
-    let mut wave: u64 = 0;
-
-    while delivered < budget {
-        let mut sw = Stopwatch::new();
-        // Phase 1 — block for the wave's first draft (nothing to verify
-        // until at least one client is ready).
-        while pending_n == 0 {
-            let (id, msg) = server.recv()?;
-            ingest_draft(
-                &mut pending,
-                &mut pending_n,
-                &mut latency,
-                &mut leader.core.recorder,
-                id,
-                msg,
-            )?;
-        }
-        // Phase 2 — batching window: admit more drafts until the wave-fill
-        // threshold is met or the deadline expires, whichever comes first.
-        let want = fill_target.min((budget - delivered).min(n as u64) as usize);
-        let deadline = Instant::now() + window;
-        while pending_n < want {
-            match server.recv_deadline(deadline)? {
-                Some((id, msg)) => ingest_draft(
-                    &mut pending,
-                    &mut pending_n,
-                    &mut latency,
-                    &mut leader.core.recorder,
-                    id,
-                    msg,
-                )?,
-                None => break, // deadline-triggered flush
-            }
-        }
-        // Phase 3 — opportunistic drain: anything already queued rides
-        // along for free (bigger batch, no extra waiting).
-        for (id, msg) in server.try_drain()? {
-            ingest_draft(
-                &mut pending,
-                &mut pending_n,
-                &mut latency,
-                &mut leader.core.recorder,
-                id,
-                msg,
-            )?;
-        }
-
-        // Phase 4 — form the wave (index order ⇒ ascending client id).
-        let mut msgs: Vec<DraftMsg> = Vec::with_capacity(pending_n);
-        for slot in pending.iter_mut() {
-            if let Some(d) = slot.take() {
-                msgs.push(d);
-            }
-        }
-        pending_n = 0;
-        let recv_ns = sw.lap().as_nanos() as u64;
-
-        // Phase 5 — verify + schedule + send (verify time is measured
-        // inside process_wave; absorb it so send is measured alone).
-        let verdicts = leader.process_wave(wave, &msgs, recv_ns)?;
-        let _ = sw.lap();
-        for vd in &verdicts {
-            (server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
-        }
-        delivered += verdicts.len() as u64;
-        leader.note_send_ns(sw.lap().as_nanos() as u64);
-        wave += 1;
-    }
-    Ok(())
+    super::Cluster::builder(cfg.scenario.clone())
+        .policy(cfg.policy)
+        .transport(cfg.transport)
+        .simulate_network(cfg.simulate_network)
+        .engine(factory)
+        .start()?
+        .wait()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::configsys::CoordMode;
+    use crate::coordinator::Cluster;
     use crate::runtime::{MockEngineFactory, MockWorld};
 
     fn mock_factory() -> Arc<dyn EngineFactory> {
@@ -537,6 +332,17 @@ mod tests {
         s
     }
 
+    /// Drive a one-shot run through the session API (builder → wait).
+    fn serve(cfg: RunConfig, factory: Arc<dyn EngineFactory>) -> Result<RunOutcome> {
+        Cluster::builder(cfg.scenario)
+            .policy(cfg.policy)
+            .transport(cfg.transport)
+            .simulate_network(cfg.simulate_network)
+            .engine(factory)
+            .start()?
+            .wait()
+    }
+
     fn run(policy: Policy, rounds: u64, clients: usize) -> RunOutcome {
         let cfg = RunConfig {
             scenario: smoke_scenario(rounds, clients),
@@ -544,7 +350,7 @@ mod tests {
             transport: Transport::Channel,
             simulate_network: false,
         };
-        run_serving(&cfg, mock_factory()).unwrap()
+        serve(cfg, mock_factory()).unwrap()
     }
 
     fn run_async(
@@ -563,16 +369,18 @@ mod tests {
             transport: Transport::Channel,
             simulate_network: false,
         };
-        run_serving(&cfg, mock_factory()).unwrap()
+        serve(cfg, mock_factory()).unwrap()
     }
 
     #[test]
     fn transport_parse() {
-        assert_eq!(Transport::parse("channel"), Some(Transport::Channel));
-        assert_eq!(Transport::parse("Chan"), Some(Transport::Channel));
-        assert_eq!(Transport::parse("TCP"), Some(Transport::Tcp));
-        assert_eq!(Transport::parse("udp"), None);
-        assert_eq!(Transport::parse(""), None);
+        assert_eq!("channel".parse(), Ok(Transport::Channel));
+        assert_eq!("Chan".parse(), Ok(Transport::Channel));
+        assert_eq!("TCP".parse(), Ok(Transport::Tcp));
+        let err = "udp".parse::<Transport>().unwrap_err().to_string();
+        assert!(err.contains("unknown transport 'udp'"), "{err}");
+        assert!(err.contains("channel, tcp"), "{err}");
+        assert!("".parse::<Transport>().is_err());
     }
 
     #[test]
@@ -617,7 +425,7 @@ mod tests {
             transport: Transport::Tcp,
             simulate_network: false,
         };
-        let out = run_serving(&cfg, mock_factory()).unwrap();
+        let out = serve(cfg, mock_factory()).unwrap();
         assert_eq!(out.recorder.rounds.len(), 8);
     }
 
@@ -631,7 +439,7 @@ mod tests {
             transport: Transport::Channel,
             simulate_network: false,
         };
-        let out = run_serving(&cfg, mock_factory()).unwrap();
+        let out = serve(cfg, mock_factory()).unwrap();
         for r in &out.recorder.rounds {
             assert!(r.clients[0].s_used <= 2);
         }
@@ -649,7 +457,7 @@ mod tests {
             transport: Transport::Channel,
             simulate_network: false,
         };
-        let out = run_serving(&cfg, mock_factory()).unwrap();
+        let out = serve(cfg, mock_factory()).unwrap();
         // Both clients drafted at least once across the run.
         for i in 0..2 {
             let drafted: usize = out
@@ -784,8 +592,9 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn multi_verifier_scenario_is_a_configuration_error() {
-        // Satellite: the single-verifier path must reject pooled scenarios
+        // Satellite: the single-verifier shim must reject pooled scenarios
         // with an actionable message, not a terse internal one.
         let mut s = smoke_scenario(5, 4);
         s.num_verifiers = 2;
@@ -801,6 +610,39 @@ mod tests {
         assert!(err.contains("num_verifiers = 2"), "{err}");
     }
 
+    /// The acceptance pin: the deprecated `run_serving` shim and the
+    /// session API produce identical runs — same waves, same
+    /// RNG-determined fields, same draft-side accounting.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_matches_builder() {
+        let cfg = || RunConfig {
+            scenario: smoke_scenario(15, 2),
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+        };
+        let shim = run_serving(&cfg(), mock_factory()).unwrap();
+        let cluster = serve(cfg(), mock_factory()).unwrap();
+        assert!(shim.pool.is_none());
+        assert_eq!(shim.recorder.rounds.len(), cluster.recorder.rounds.len());
+        for (a, b) in shim.recorder.rounds.iter().zip(&cluster.recorder.rounds) {
+            assert_eq!(a.round, b.round);
+            for (ca, cb) in a.clients.iter().zip(&b.clients) {
+                assert_eq!(ca.client_id, cb.client_id);
+                assert_eq!(ca.s_used, cb.s_used);
+                assert_eq!(ca.accepted, cb.accepted);
+                assert_eq!(ca.goodput, cb.goodput);
+                assert_eq!(ca.next_alloc, cb.next_alloc);
+                assert!((ca.alpha_hat - cb.alpha_hat).abs() < 1e-15);
+            }
+        }
+        for (da, db) in shim.draft_stats.iter().zip(&cluster.draft_stats) {
+            assert_eq!(da.tokens_drafted, db.tokens_drafted);
+            assert_eq!(da.tokens_accepted, db.tokens_accepted);
+        }
+    }
+
     #[test]
     fn tree_mode_full_run_respects_node_budget() {
         // End-to-end tree speculation over the mock engine: every wave's
@@ -814,7 +656,7 @@ mod tests {
             transport: Transport::Channel,
             simulate_network: false,
         };
-        let out = run_serving(&cfg, mock_factory()).unwrap();
+        let out = serve(cfg, mock_factory()).unwrap();
         assert_eq!(out.recorder.rounds.len(), 20);
         let mut saw_branching = false;
         for r in &out.recorder.rounds {
@@ -845,7 +687,7 @@ mod tests {
             transport: Transport::Channel,
             simulate_network: false,
         };
-        let out = run_serving(&cfg, mock_factory()).unwrap();
+        let out = serve(cfg, mock_factory()).unwrap();
         assert_eq!(out.recorder.rounds.len(), 15);
         for g in &out.summary.per_client_goodput {
             assert!(*g >= 1.0);
@@ -866,7 +708,7 @@ mod tests {
             transport: Transport::Channel,
             simulate_network: false,
         };
-        let b = run_serving(&cfg, mock_factory()).unwrap();
+        let b = serve(cfg, mock_factory()).unwrap();
         assert_eq!(a.recorder.rounds.len(), b.recorder.rounds.len());
         for (ra, rb) in a.recorder.rounds.iter().zip(&b.recorder.rounds) {
             for (ca, cb) in ra.clients.iter().zip(&rb.clients) {

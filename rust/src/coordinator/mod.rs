@@ -7,14 +7,20 @@
 //! Layering: [`core`] is the engine-agnostic wave-processing core shared
 //! with the analytic simulator; [`leader`] drives one verifier engine
 //! through it; [`pool`] shards verification across M leaders under a
-//! hierarchical proportional-fair budget split.
+//! hierarchical proportional-fair budget split; [`cluster`] is the public
+//! session-oriented serving API (`Cluster::builder` → [`ServingHandle`])
+//! with epoch-stamped membership churn on top of either.
 
 pub mod batcher;
+pub mod cluster;
 pub mod core;
 pub mod leader;
 pub mod pool;
 
 pub use batcher::build_verify_request;
+pub use cluster::{ClientId, Cluster, ClusterBuilder, ClusterStats, ServingHandle};
 pub use self::core::{RoundCore, WaveObs};
-pub use leader::{run_serving, Leader, RunConfig, RunOutcome, Transport};
+#[allow(deprecated)]
+pub use leader::run_serving;
+pub use leader::{Leader, PoolReport, RunConfig, RunOutcome, Transport};
 pub use pool::{run_pool, PoolOutcome};

@@ -37,19 +37,23 @@
 //! runs — coordinator-side latency bookkeeping assumes one server clock.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::cluster::{ClientId, ClusterStats, Ctl, SlotState};
 use super::leader::{Leader, RunConfig, Transport};
-use crate::configsys::Scenario;
+use crate::configsys::{ChurnEvent, ChurnKind, ClientSpec, Scenario};
 use crate::draft::{spawn_draft_server, DraftServerConfig, DraftStats};
-use crate::metrics::recorder::Recorder;
+use crate::error::{ConfigError, GoodSpeedError};
+use crate::metrics::recorder::{MembershipEvent, Recorder};
 use crate::metrics::RunSummary;
-use crate::net::transport::{sharded_channel_transport, ServerSide, ShardRouter};
-use crate::net::wire::{DraftMsg, Message};
+use crate::net::transport::{
+    sharded_channel_transport, ClientPort, ServerSide, ShardRouter,
+};
+use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, PROTOCOL_VERSION};
 use crate::runtime::EngineFactory;
 use crate::sched::gradient::split_budget_by_members;
 use crate::sched::utility::{LogUtility, Utility};
@@ -67,6 +71,9 @@ enum Migration {
     /// published table (including the decay-schedule observation clock, so
     /// `Smoothing::Decay` continues from the client's real history).
     Join { client: usize, alpha_hat: f64, x_beta: f64, outstanding: usize, t_obs: u64 },
+    /// Begin a graceful drain: the client stays a member until its final
+    /// verdict, which the shard answers with a Leave frame.
+    Drain(usize),
 }
 
 /// Controller state shared by all shards (guarded by one mutex; touched
@@ -86,18 +93,70 @@ struct PoolCtl {
     /// Global wave counter (all shards) — the rebalance clock.
     waves: u64,
     migrations: u64,
+    /// Slot lifecycle (Empty reserve slots → Active → Draining → Retired).
+    state: Vec<SlotState>,
+    /// Membership epoch (bumps on every join/retire).
+    epoch: u64,
+    /// Epoch-stamped membership changes, drained into the merged recorder.
+    events: Vec<MembershipEvent>,
+    /// Published per-shard, per-slot lifetime goodput / participation
+    /// (each shard refreshes its own row every wave; a migrated client's
+    /// lifetime is the column sum).
+    shard_goodput: Vec<Vec<f64>>,
+    shard_participation: Vec<Vec<u64>>,
+    attached_total: u64,
+    retired_total: u64,
+}
+
+impl PoolCtl {
+    /// Serving slots (Active | Draining), ascending.
+    fn serving(&self) -> Vec<usize> {
+        (0..self.state.len())
+            .filter(|&i| matches!(self.state[i], SlotState::Active | SlotState::Draining))
+            .collect()
+    }
+
+    /// Per-slot lifetime goodput summed across the shards that served it.
+    fn lifetime_goodput(&self) -> Vec<f64> {
+        let slots = self.state.len();
+        let mut out = vec![0.0; slots];
+        for row in &self.shard_goodput {
+            for (i, &g) in row.iter().enumerate() {
+                out[i] += g;
+            }
+        }
+        out
+    }
+
+    /// Per-slot participation summed across shards.
+    fn participation(&self) -> Vec<u64> {
+        let slots = self.state.len();
+        let mut out = vec![0u64; slots];
+        for row in &self.shard_participation {
+            for (i, &p) in row.iter().enumerate() {
+                out[i] += p;
+            }
+        }
+        out
+    }
 }
 
 struct PoolShared {
     stop: AtomicBool,
     delivered: AtomicU64,
     budget_total: u64,
+    /// Retired sessions whose drained stragglers shards must discard.
+    retired: Vec<AtomicBool>,
     ctl: Mutex<PoolCtl>,
 }
 
 impl PoolShared {
     fn stopping(&self) -> bool {
         self.stop.load(Ordering::Acquire)
+    }
+
+    fn is_retired(&self, client: usize) -> bool {
+        self.retired[client].load(Ordering::Acquire)
     }
 }
 
@@ -157,12 +216,20 @@ fn controller_step(scenario: &Scenario, router: &ShardRouter, ctl: &mut PoolCtl)
         return;
     }
     // Move the donor shard's most-starved client (largest ∇U) to the
-    // underloaded shard.
-    let donor = router.members_of(hi);
-    let &client = donor
+    // underloaded shard. Draining sessions stay put — their remaining
+    // lifetime is one verdict.
+    let donor: Vec<usize> = router
+        .members_of(hi)
+        .into_iter()
+        .filter(|&i| ctl.state[i] == SlotState::Active)
+        .collect();
+    let client = match donor
         .iter()
         .max_by(|&&a, &&b| u.grad(ctl.x_beta[a]).total_cmp(&u.grad(ctl.x_beta[b])))
-        .expect("donor has members");
+    {
+        Some(&c) => c,
+        None => return,
+    };
     router.assign(client, lo);
     ctl.inbox[hi].push(Migration::Leave(client));
     ctl.inbox[lo].push(Migration::Join {
@@ -191,6 +258,7 @@ fn apply_inbox(shard: usize, leader: &mut Leader, ctl: &mut PoolCtl) {
                 leader.core.estimators.set_observations(client, t_obs);
                 leader.core.set_outstanding(client, outstanding);
             }
+            Migration::Drain(client) => leader.core.set_draining(client, true),
         }
     }
 }
@@ -206,9 +274,9 @@ fn post_wave(
     router: &ShardRouter,
     shared: &PoolShared,
 ) {
-    let n = scenario.num_clients;
+    let slots = leader.core.n_clients();
     let mut ctl = shared.ctl.lock().expect("pool lock");
-    for i in 0..n {
+    for i in 0..slots {
         if leader.core.is_member(i) {
             ctl.alpha_hat[i] = leader.core.estimators.alpha_hat[i];
             ctl.x_beta[i] = leader.core.estimators.x_beta[i];
@@ -216,6 +284,11 @@ fn post_wave(
             ctl.t_obs[i] = leader.core.estimators.observations(i);
         }
     }
+    // Publish this shard's cumulative per-slot views (a migrated
+    // client's lifetime is the column sum across shards).
+    ctl.shard_goodput[shard]
+        .copy_from_slice(leader.core.recorder.lifetime_goodput());
+    ctl.shard_participation[shard].copy_from_slice(leader.core.recorder.participation());
     ctl.waves += 1;
     let every = scenario.shard_rebalance_every;
     if every > 0 && ctl.waves % every == 0 {
@@ -225,14 +298,45 @@ fn post_wave(
     leader.core.set_capacity(ctl.budgets[shard]);
 }
 
+/// Answer a session hello with the granted S_i(0) and current epoch (the
+/// controller published both at admission, before the client could send).
+fn answer_hello(
+    server: &mut ServerSide,
+    shared: &PoolShared,
+    id: usize,
+    protocol: u8,
+) -> Result<()> {
+    if protocol > PROTOCOL_VERSION {
+        return Err(anyhow!(
+            "client {id} speaks protocol {protocol}, newer than {PROTOCOL_VERSION}"
+        ));
+    }
+    let (initial_alloc, epoch) = {
+        let ctl = shared.ctl.lock().expect("pool lock");
+        (ctl.outstanding[id] as u32, ctl.epoch)
+    };
+    (server.txs[id])(&Message::JoinAck(JoinAckMsg {
+        client_id: id as u32,
+        protocol: PROTOCOL_VERSION,
+        initial_alloc,
+        epoch,
+    }))
+}
+
 fn ingest(
     pending: &mut [Option<DraftMsg>],
     pending_n: &mut usize,
+    shared: &PoolShared,
     id: usize,
     msg: Message,
 ) -> Result<()> {
     match msg {
         Message::Draft(d) => {
+            // A retired session's drained straggler (the draft it sent
+            // between its final verdict and the Leave frame) is dropped.
+            if shared.is_retired(id) {
+                return Ok(());
+            }
             if pending[id].replace(d).is_some() {
                 return Err(anyhow!("client {id}: two drafts in flight"));
             }
@@ -254,9 +358,9 @@ fn run_shard_loop(
     router: &ShardRouter,
     shared: &PoolShared,
 ) -> Result<u64> {
-    let n = scenario.num_clients;
+    let slots = router.num_clients();
     let window = Duration::from_micros(scenario.batch_window_us);
-    let mut pending: Vec<Option<DraftMsg>> = vec![None; n];
+    let mut pending: Vec<Option<DraftMsg>> = vec![None; slots];
     let mut pending_n = 0usize;
     let mut wave: u64 = 0;
 
@@ -270,7 +374,8 @@ fn run_shard_loop(
                 break 'run;
             }
             match server.recv_deadline(Instant::now() + IDLE_TICK)? {
-                Some((id, msg)) => ingest(&mut pending, &mut pending_n, id, msg)?,
+                Some((id, Message::Join(j))) => answer_hello(server, shared, id, j.protocol)?,
+                Some((id, msg)) => ingest(&mut pending, &mut pending_n, shared, id, msg)?,
                 None => continue,
             }
         }
@@ -281,13 +386,18 @@ fn run_shard_loop(
         let deadline = Instant::now() + window;
         while pending_n < fill {
             match server.recv_deadline(deadline)? {
-                Some((id, msg)) => ingest(&mut pending, &mut pending_n, id, msg)?,
+                Some((id, Message::Join(j))) => answer_hello(server, shared, id, j.protocol)?,
+                Some((id, msg)) => ingest(&mut pending, &mut pending_n, shared, id, msg)?,
                 None => break, // deadline-triggered flush
             }
         }
         // Phase 3 — opportunistic drain.
         for (id, msg) in server.try_drain()? {
-            ingest(&mut pending, &mut pending_n, id, msg)?;
+            if let Message::Join(j) = msg {
+                answer_hello(server, shared, id, j.protocol)?;
+            } else {
+                ingest(&mut pending, &mut pending_n, shared, id, msg)?;
+            }
         }
         // Phase 4 — form the wave (index order ⇒ ascending client id).
         let mut msgs: Vec<DraftMsg> = Vec::with_capacity(pending_n);
@@ -326,73 +436,415 @@ fn run_shard_loop(
         if delivered >= shared.budget_total {
             shared.stop.store(true, Ordering::Release);
         }
-        // Phase 6 — controller interaction (publish, rebalance, adopt).
+        // Phase 6 — complete graceful drains: the verdict just sent was
+        // the final one for any draining participant. Retire it under the
+        // pool lock (epoch bump + membership event), answer with Leave,
+        // and deactivate its routing slot.
+        let drained: Vec<usize> = verdicts
+            .iter()
+            .map(|vd| vd.client_id as usize)
+            .filter(|&id| leader.core.is_draining(id))
+            .collect();
+        for id in drained {
+            let epoch = {
+                let mut ctl = shared.ctl.lock().expect("pool lock");
+                ctl.epoch += 1;
+                ctl.state[id] = SlotState::Retired;
+                ctl.retired_total += 1;
+                router.set_active(id, false);
+                shared.retired[id].store(true, Ordering::Release);
+                let ev = MembershipEvent {
+                    wave: ctl.waves / router.num_shards().max(1) as u64,
+                    epoch: ctl.epoch,
+                    joined: vec![],
+                    left: vec![id],
+                    members: ctl.serving(),
+                };
+                ctl.events.push(ev);
+                ctl.epoch
+            };
+            let _ = (server.txs[id])(&Message::Leave(LeaveMsg {
+                client_id: id as u32,
+                epoch,
+            }));
+            leader.core.retire_member(id);
+        }
+        // Phase 7 — controller interaction (publish, rebalance, adopt).
         post_wave(scenario, shard, leader, router, shared);
     }
     Ok(wave)
 }
 
-/// Full sharded serving run: spawn draft servers and M shard threads,
-/// drive the pool until the global verification budget is consumed, and
-/// merge everything. Channel transport only (each shard of a multi-host
-/// TCP pool would simply bind its own `TcpTransport`; the in-process pool
-/// is the single-machine scale-up path).
+/// Mean (α̂, X^β) over a member subset of the controller's published
+/// tables — the pool-side population prior for admissions, clamped to
+/// the same bounds `Estimators::seed_from_population` applies on the
+/// single-verifier path.
+fn population_mean(ctl: &PoolCtl, members: &[usize]) -> (f64, f64) {
+    use crate::sched::estimator::{ALPHA_MAX, ALPHA_MIN};
+    if members.is_empty() {
+        return (0.5, 1.0);
+    }
+    let n = members.len() as f64;
+    let a = members.iter().map(|&i| ctl.alpha_hat[i]).sum::<f64>() / n;
+    let x = members.iter().map(|&i| ctl.x_beta[i]).sum::<f64>() / n;
+    (a.clamp(ALPHA_MIN, ALPHA_MAX), x.max(1e-9))
+}
+
+/// Driver-side state for the pool's session churn: client ports/threads
+/// by slot, plus everything an admission needs.
+struct PoolDriver {
+    scenario: Scenario,
+    simulate_network: bool,
+    factory: Arc<dyn EngineFactory>,
+    router: ShardRouter,
+    shared: Arc<PoolShared>,
+    ports: Vec<Option<Box<dyn ClientPort>>>,
+    handles: Vec<Option<std::thread::JoinHandle<Result<DraftStats>>>>,
+    root_rng: Rng,
+    max_rounds: u64,
+    snapshot: Option<Arc<Mutex<ClusterStats>>>,
+}
+
+impl PoolDriver {
+    /// Spawn one draft-server actor into `slot`. Dynamically admitted
+    /// sessions (`hello`) open with the Join → JoinAck wire handshake,
+    /// answered by their shard; initial clients skip it (the legacy
+    /// byte-identical stream).
+    fn spawn_client(
+        &mut self,
+        slot: usize,
+        spec: ClientSpec,
+        initial_alloc: usize,
+        hello: bool,
+    ) -> Result<()> {
+        let stream = DomainStream::new(
+            &spec.domain,
+            self.scenario.domain_stickiness,
+            self.scenario.max_new_tokens,
+            self.root_rng.fork(slot as u64),
+        )?;
+        let dcfg = DraftServerConfig {
+            client_id: slot,
+            model: spec.model,
+            initial_alloc,
+            link: spec.link,
+            simulate_network: self.simulate_network,
+            seed: self.scenario.seed ^ (0xD00D + slot as u64),
+            max_rounds: self.max_rounds,
+            spec_shape: self.scenario.spec_shape,
+            verify_k: self.factory.verify_k(),
+            hello,
+        };
+        let port = self.ports[slot].take().expect("client port");
+        self.handles[slot] =
+            Some(spawn_draft_server(dcfg, self.factory.clone(), stream, port));
+        Ok(())
+    }
+
+    /// Admit a new session: route it to the least-pressured shard, seed
+    /// its estimator state from the population prior, grant from the
+    /// shard's unreserved budget slice, and enqueue the membership
+    /// migration the shard applies pre-wave.
+    fn admit(&mut self, spec: ClientSpec) -> Result<ClientId, GoodSpeedError> {
+        if self.shared.stopping() {
+            return Err(GoodSpeedError::Shutdown("pool is stopping".into()));
+        }
+        if !crate::workload::domains::is_domain(&spec.domain) {
+            return Err(ConfigError::invalid(format!(
+                "attach: unknown domain '{}' (known: {})",
+                spec.domain,
+                crate::workload::domains::DOMAINS.join(", ")
+            ))
+            .into());
+        }
+        let (slot, grant) = {
+            let mut ctl = self.shared.ctl.lock().expect("pool lock");
+            let slot = match ctl.state.iter().position(|s| *s == SlotState::Empty) {
+                Some(s) => s,
+                None => {
+                    return Err(ConfigError::invalid(
+                        "no free client slots (reserve headroom with \
+                         ClusterBuilder::reserve_slots or the churn schedule)",
+                    )
+                    .into())
+                }
+            };
+            // Least-pressured shard: smallest Σ ∇U(X^β) over its members;
+            // ties break to the smaller membership, then the lower index.
+            let u = LogUtility;
+            let mut shard = 0usize;
+            let mut best = (f64::INFINITY, usize::MAX);
+            for s in 0..self.router.num_shards() {
+                let members = self.router.members_of(s);
+                let pressure: f64 =
+                    members.iter().map(|&i| u.grad(ctl.x_beta[i])).sum();
+                let key = (pressure, members.len());
+                if key.0 < best.0 || (key.0 == best.0 && key.1 < best.1) {
+                    best = key;
+                    shard = s;
+                }
+            }
+            let serving = ctl.serving();
+            let (a, x) = population_mean(&ctl, &serving);
+            let members = self.router.members_of(shard);
+            let reserved: usize = members.iter().map(|&i| ctl.outstanding[i]).sum();
+            let share = ctl.budgets[shard] / (members.len() + 1).max(1);
+            let grant = share
+                .min(self.scenario.max_draft)
+                .min(ctl.budgets[shard].saturating_sub(reserved));
+            ctl.alpha_hat[slot] = a;
+            ctl.x_beta[slot] = x;
+            ctl.outstanding[slot] = grant;
+            ctl.t_obs[slot] = 0;
+            ctl.inbox[shard].push(Migration::Join {
+                client: slot,
+                alpha_hat: a,
+                x_beta: x,
+                outstanding: grant,
+                t_obs: 0,
+            });
+            self.router.assign(slot, shard);
+            self.router.set_active(slot, true);
+            ctl.state[slot] = SlotState::Active;
+            ctl.epoch += 1;
+            ctl.attached_total += 1;
+            // Event waves are on the mean per-shard scale (M = 1 ⇒ the
+            // plain wave counter), matching the schedule clock.
+            let ev = MembershipEvent {
+                wave: ctl.waves / self.router.num_shards().max(1) as u64,
+                epoch: ctl.epoch,
+                joined: vec![(slot, grant)],
+                left: vec![],
+                members: ctl.serving(),
+            };
+            ctl.events.push(ev);
+            (slot, grant)
+        };
+        self.spawn_client(slot, spec, grant, true)
+            .map_err(|e| GoodSpeedError::Engine(format!("{e:#}")))?;
+        Ok(slot)
+    }
+
+    /// Schedule a graceful drain: the owning shard is told pre-wave; the
+    /// retirement completes after the client's final verdict there.
+    fn detach(&mut self, id: ClientId) -> Result<(), GoodSpeedError> {
+        let mut ctl = self.shared.ctl.lock().expect("pool lock");
+        if id >= ctl.state.len() || ctl.state[id] != SlotState::Active {
+            return Err(ConfigError::invalid(format!(
+                "detach: client {id} is not an active session"
+            ))
+            .into());
+        }
+        ctl.state[id] = SlotState::Draining;
+        let shard = self.router.shard_of(id);
+        ctl.inbox[shard].push(Migration::Drain(id));
+        Ok(())
+    }
+
+    fn publish(&self) {
+        if let Some(snap) = &self.snapshot {
+            let ctl = self.shared.ctl.lock().expect("pool lock");
+            let mut s = snap.lock().expect("snapshot lock");
+            s.epoch = ctl.epoch;
+            s.waves = ctl.waves;
+            s.delivered = self.shared.delivered.load(Ordering::Acquire);
+            s.members = ctl.serving();
+            s.draining = (0..ctl.state.len())
+                .filter(|&i| ctl.state[i] == SlotState::Draining)
+                .collect();
+            s.lifetime_goodput = ctl.lifetime_goodput();
+            s.participation = ctl.participation();
+            s.alpha_hat = ctl.alpha_hat.clone();
+            s.slots = ctl.state.len();
+            s.attached_total = ctl.attached_total;
+            s.retired_total = ctl.retired_total;
+        }
+    }
+
+    /// Drive scheduled churn and external control until the pool stops
+    /// (or, with neither, return immediately — the static path).
+    ///
+    /// Schedule events are keyed on the *mean per-shard* wave count
+    /// (global waves ÷ M), which matches the single-verifier wave clock
+    /// at M = 1 and keeps `ChurnEvent::at_wave` on the per-coordinator
+    /// scale for pooled runs. With an empty membership, pending events
+    /// fire immediately (no waves can pass to reach them otherwise).
+    fn drive(&mut self, ctl_rx: Option<Receiver<Ctl>>) {
+        let schedule: Vec<ChurnEvent> = self.scenario.churn.sorted();
+        let shards = self.router.num_shards().max(1) as u64;
+        let mut cursor = 0usize;
+        let mut ctl_rx = ctl_rx;
+        while !self.shared.stopping() {
+            loop {
+                let (waves, serving_empty) = {
+                    let ctl = self.shared.ctl.lock().expect("pool lock");
+                    (ctl.waves / shards, ctl.serving().is_empty())
+                };
+                let due = cursor < schedule.len()
+                    && (schedule[cursor].at_wave <= waves || serving_empty);
+                if !due {
+                    break;
+                }
+                match schedule[cursor].kind.clone() {
+                    ChurnKind::Join(spec) => {
+                        if let Err(e) = self.admit(spec) {
+                            log::warn!("scheduled pool join failed: {e}");
+                        }
+                    }
+                    ChurnKind::Leave(id) => {
+                        if let Err(e) = self.detach(id) {
+                            log::warn!("scheduled pool leave of client {id}: {e}");
+                        }
+                    }
+                }
+                cursor += 1;
+            }
+            self.publish();
+            let polled = ctl_rx.as_ref().map(|rx| rx.recv_timeout(IDLE_TICK));
+            match polled {
+                Some(Ok(Ctl::Attach { spec, reply })) => {
+                    let _ = reply.send(self.admit(spec));
+                }
+                Some(Ok(Ctl::Detach { id, reply })) => {
+                    let _ = reply.send(self.detach(id));
+                }
+                Some(Ok(Ctl::Stop)) => self.shared.stop.store(true, Ordering::Release),
+                Some(Err(RecvTimeoutError::Timeout)) => {}
+                Some(Err(RecvTimeoutError::Disconnected)) => ctl_rx = None,
+                None => {
+                    if cursor >= schedule.len() {
+                        // Nothing left to drive. If the membership fully
+                        // drained (and no drain is still in flight),
+                        // nothing can ever be verified again — latch the
+                        // stop so the shards exit; otherwise let them
+                        // finish the budget alone.
+                        let (serving_empty, draining) = {
+                            let ctl = self.shared.ctl.lock().expect("pool lock");
+                            (
+                                ctl.serving().is_empty(),
+                                ctl.state.iter().any(|s| *s == SlotState::Draining),
+                            )
+                        };
+                        if serving_empty {
+                            self.shared.stop.store(true, Ordering::Release);
+                            break;
+                        }
+                        if !draining {
+                            break;
+                        }
+                    }
+                    std::thread::sleep(IDLE_TICK);
+                }
+            }
+        }
+        self.publish();
+    }
+}
+
+/// Full sharded serving run over a static membership: spawn draft servers
+/// and M shard threads, drive the pool until the global verification
+/// budget is consumed, and merge everything. Channel transport only (each
+/// shard of a multi-host TCP pool would simply bind its own
+/// `TcpTransport`; the in-process pool is the single-machine scale-up
+/// path). The session API ([`Cluster`](super::Cluster)) layers churn on
+/// top via the crate-internal `run_pool_dynamic`.
 pub fn run_pool(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<PoolOutcome> {
+    run_pool_dynamic(cfg, factory, cfg.scenario.num_clients, None, None, None)
+}
+
+/// The pool under the session API: `slots ≥ num_clients` client slots,
+/// scheduled churn from the scenario, and optional external control +
+/// snapshot publishing. With `slots == num_clients`, no schedule, and no
+/// control channel this is exactly the static [`run_pool`].
+pub(crate) fn run_pool_dynamic(
+    cfg: &RunConfig,
+    factory: Arc<dyn EngineFactory>,
+    slots: usize,
+    ctl_rx: Option<Receiver<Ctl>>,
+    snapshot: Option<Arc<Mutex<ClusterStats>>>,
+    ready: Option<Sender<Result<()>>>,
+) -> Result<PoolOutcome> {
     let scenario = &cfg.scenario;
-    scenario.validate().map_err(|e| anyhow!("invalid scenario: {e}"))?;
+    let fail = |e: String| {
+        if let Some(tx) = &ready {
+            let _ = tx.send(Err(anyhow!(e.clone())));
+        }
+        anyhow!(e)
+    };
+    if let Err(e) = scenario.validate() {
+        return Err(fail(format!("invalid scenario: {e}")));
+    }
     if cfg.transport != Transport::Channel {
-        return Err(anyhow!("the sharded pool runs over the channel transport"));
+        return Err(fail("the sharded pool runs over the channel transport".into()));
     }
     let n = scenario.num_clients;
     let m = scenario.num_verifiers;
+    assert!(slots >= n, "slots must cover the initial clients");
     let (servers, router, ports, master_txs): (_, _, _, Vec<Sender<Message>>) =
-        sharded_channel_transport(n, m);
+        sharded_channel_transport(slots, m);
+    // Reserve slots hold a routing entry but are not serving yet.
+    for i in n..slots {
+        router.set_active(i, false);
+    }
 
     // Shared controller state, seeded with the estimator priors.
     let initial_alloc = (scenario.capacity / n.max(1)).min(scenario.max_draft);
+    let mut outstanding = vec![0usize; slots];
+    let mut state = vec![SlotState::Empty; slots];
+    for i in 0..n {
+        outstanding[i] = initial_alloc;
+        state[i] = SlotState::Active;
+    }
     let mut ctl = PoolCtl {
-        alpha_hat: vec![0.5; n],
-        x_beta: vec![1.0; n],
-        outstanding: vec![initial_alloc; n],
-        t_obs: vec![0; n],
+        alpha_hat: vec![0.5; slots],
+        x_beta: vec![1.0; slots],
+        outstanding,
+        t_obs: vec![0; slots],
         budgets: vec![0; m],
         inbox: (0..m).map(|_| Vec::new()).collect(),
         waves: 0,
         migrations: 0,
+        state,
+        epoch: 0,
+        events: Vec::new(),
+        shard_goodput: (0..m).map(|_| vec![0.0; slots]).collect(),
+        shard_participation: (0..m).map(|_| vec![0u64; slots]).collect(),
+        attached_total: n as u64,
+        retired_total: 0,
     };
     ctl.budgets = compute_budgets(scenario, &router, &ctl);
     let shared = Arc::new(PoolShared {
         stop: AtomicBool::new(false),
         delivered: AtomicU64::new(0),
         budget_total: scenario.rounds.saturating_mul(n as u64),
+        retired: (0..slots).map(|_| AtomicBool::new(false)).collect(),
         ctl: Mutex::new(ctl),
     });
 
     // Draft servers (same client-side protocol as the single leader; the
     // wave discipline means one client may outpace another, so the safety
     // cap is the full budget).
-    let max_rounds = scenario.rounds.saturating_mul(n as u64) + 1;
-    let mut client_handles = Vec::with_capacity(n);
-    let mut root_rng = Rng::new(scenario.seed);
-    for (i, port) in ports.into_iter().enumerate() {
-        let stream = DomainStream::new(
-            scenario.domain(i),
-            scenario.domain_stickiness,
-            scenario.max_new_tokens,
-            root_rng.fork(i as u64),
-        )?;
-        let dcfg = DraftServerConfig {
-            client_id: i,
+    let mut driver = PoolDriver {
+        scenario: scenario.clone(),
+        simulate_network: cfg.simulate_network,
+        factory: factory.clone(),
+        router: router.clone(),
+        shared: shared.clone(),
+        ports: ports.into_iter().map(Some).collect(),
+        handles: (0..slots).map(|_| None).collect(),
+        root_rng: Rng::new(scenario.seed),
+        max_rounds: scenario.rounds.saturating_mul(n as u64) + 1,
+        snapshot,
+    };
+    for i in 0..n {
+        let spec = ClientSpec {
             model: scenario.draft_model(i).to_string(),
-            initial_alloc,
+            domain: scenario.domain(i).to_string(),
             link: scenario.link(i),
-            simulate_network: cfg.simulate_network,
-            seed: scenario.seed ^ (0xD00D + i as u64),
-            max_rounds,
-            spec_shape: scenario.spec_shape,
-            verify_k: factory.verify_k(),
         };
-        client_handles.push(spawn_draft_server(dcfg, factory.clone(), stream, port));
+        if let Err(e) = driver.spawn_client(i, spec, initial_alloc, false) {
+            return Err(fail(format!("draft server {i} failed to spawn: {e:#}")));
+        }
     }
 
     // Shard threads. Engines are built inside each thread (PJRT handles
@@ -408,23 +860,27 @@ pub fn run_pool(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<Pool
         let handle = std::thread::Builder::new()
             .name(format!("verify-shard-{shard}"))
             .spawn(move || -> (Result<u64>, Option<Recorder>, ServerSide) {
-                let mut leader = match Leader::new(&scenario, policy, factory.as_ref()) {
-                    Ok(l) => l,
-                    Err(e) => {
-                        // A dead shard must release the others: without the
-                        // stop flag its clients never get verdicts, the
-                        // budget never completes, and the pool would hang.
-                        shared.stop.store(true, Ordering::Release);
-                        return (Err(e), None, server);
-                    }
-                };
+                let mut leader =
+                    match Leader::with_slots(&scenario, policy, factory.as_ref(), slots) {
+                        Ok(l) => l,
+                        Err(e) => {
+                            // A dead shard must release the others: without
+                            // the stop flag its clients never get verdicts,
+                            // the budget never completes, and the pool
+                            // would hang.
+                            shared.stop.store(true, Ordering::Release);
+                            return (Err(e), None, server);
+                        }
+                    };
                 leader.core.set_shard(shard);
                 {
                     let ctl = shared.ctl.lock().expect("pool lock");
                     leader.core.set_capacity(ctl.budgets[shard]);
                 }
-                for i in 0..scenario.num_clients {
-                    leader.core.set_member(i, router.shard_of(i) == shard);
+                for i in 0..slots {
+                    leader
+                        .core
+                        .set_member(i, router.is_active(i) && router.shard_of(i) == shard);
                 }
                 let res =
                     run_shard_loop(&scenario, shard, &mut server, &mut leader, &router, &shared);
@@ -436,6 +892,12 @@ pub fn run_pool(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<Pool
             .expect("spawn verify shard");
         shard_handles.push(handle);
     }
+
+    if let Some(tx) = &ready {
+        let _ = tx.send(Ok(()));
+    }
+    // Drive churn/control; the static path returns immediately.
+    driver.drive(ctl_rx);
 
     // Collect shards (they all exit once the budget is consumed), then
     // release the clients and collect them too.
@@ -468,18 +930,20 @@ pub fn run_pool(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<Pool
     for tx in &master_txs {
         let _ = tx.send(Message::Shutdown);
     }
-    let mut draft_stats = Vec::with_capacity(n);
-    for h in client_handles {
-        match h.join() {
-            Ok(Ok(s)) => draft_stats.push(s),
-            Ok(Err(e)) => {
-                if shard_err.is_none() {
-                    shard_err = Some(anyhow!("draft server failed: {e}"));
+    let mut draft_stats = vec![DraftStats::default(); slots];
+    for (i, slot) in driver.handles.iter_mut().enumerate() {
+        if let Some(h) = slot.take() {
+            match h.join() {
+                Ok(Ok(s)) => draft_stats[i] = s,
+                Ok(Err(e)) => {
+                    if shard_err.is_none() {
+                        shard_err = Some(anyhow!("draft server failed: {e}"));
+                    }
                 }
-            }
-            Err(_) => {
-                if shard_err.is_none() {
-                    shard_err = Some(anyhow!("draft server panicked"));
+                Err(_) => {
+                    if shard_err.is_none() {
+                        shard_err = Some(anyhow!("draft server panicked"));
+                    }
                 }
             }
         }
@@ -492,10 +956,18 @@ pub fn run_pool(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<Pool
 
     let shard_summaries: Vec<RunSummary> =
         shard_recorders.iter().map(|r| r.summary(wall)).collect();
-    let mut merged = Recorder::new(n);
+    let mut merged = Recorder::new(slots);
     for rec in shard_recorders {
         merged.absorb(rec);
     }
+    {
+        // Epoch-stamped membership changes recorded by the controller.
+        let mut ctl = shared.ctl.lock().expect("pool lock");
+        let mut events = std::mem::take(&mut ctl.events);
+        events.sort_by_key(|e| (e.wave, e.epoch));
+        merged.membership = events;
+    }
+    driver.publish();
     let summary = merged.summary(wall);
     let migrations = shared.ctl.lock().expect("pool lock").migrations;
     Ok(PoolOutcome { recorder: merged, summary, shard_summaries, draft_stats, migrations })

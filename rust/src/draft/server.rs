@@ -55,6 +55,10 @@ pub struct DraftServerConfig {
     /// Verify-artifact row count K — trees must fit `nodes + leaves ≤ K`
     /// (each leaf needs a phantom bonus row; see `spec/tree.rs`).
     pub verify_k: usize,
+    /// Open the session with the Join → JoinAck handshake before the
+    /// first draft (dynamically attached clients). Statically configured
+    /// clients skip it, keeping the legacy frame stream byte-identical.
+    pub hello: bool,
 }
 
 /// Outcome summary returned when the actor exits.
@@ -348,11 +352,42 @@ impl Actor {
         Ok(())
     }
 
+    /// Session hello: announce ourselves and wait for the coordinator's
+    /// ack (which carries the authoritative first allocation). Returns
+    /// `None` if the cluster shut down before acknowledging.
+    fn handshake(&mut self) -> Result<Option<usize>> {
+        use crate::net::wire::JoinMsg;
+        self.port.send(&Message::Join(JoinMsg {
+            client_id: self.cfg.client_id as u32,
+            protocol: crate::net::wire::PROTOCOL_VERSION,
+        }))?;
+        match self.port.recv() {
+            Ok(Message::JoinAck(ack)) => {
+                if ack.client_id as usize != self.cfg.client_id {
+                    return Err(anyhow!(
+                        "client {}: join ack addressed to {}",
+                        self.cfg.client_id,
+                        ack.client_id
+                    ));
+                }
+                Ok(Some(ack.initial_alloc as usize))
+            }
+            Ok(Message::Shutdown) | Ok(Message::Leave(_)) | Err(_) => Ok(None),
+            Ok(other) => Err(anyhow!("unexpected handshake reply {other:?}")),
+        }
+    }
+
     fn run(&mut self) -> Result<DraftStats> {
         let vocab = self.drafter.vocab();
         let chain_mode = self.cfg.spec_shape.is_chain();
-        self.start_request(0)?;
         let mut alloc = self.cfg.initial_alloc;
+        if self.cfg.hello {
+            match self.handshake()? {
+                Some(granted) => alloc = granted,
+                None => return Ok(std::mem::take(&mut self.stats)),
+            }
+        }
+        self.start_request(0)?;
         for round in 0..self.cfg.max_rounds {
             // Chain mode keeps the legacy draft loop verbatim (bit-identical
             // RNG stream, engine calls, and wire bytes).
@@ -410,7 +445,9 @@ impl Actor {
                     }
                     alloc = v.next_alloc as usize;
                 }
-                Ok(Message::Shutdown) | Err(_) => break,
+                // A Leave is the coordinator completing our graceful
+                // drain: the final verdict has already been applied.
+                Ok(Message::Shutdown) | Ok(Message::Leave(_)) | Err(_) => break,
                 Ok(other) => return Err(anyhow!("unexpected message {other:?}")),
             }
             self.stats.rounds = round + 1;
@@ -482,6 +519,7 @@ mod tests {
             max_rounds: rounds,
             spec_shape: SpecShape::Chain,
             verify_k: 32,
+            hello: false,
         }
     }
 
@@ -685,6 +723,59 @@ mod tests {
         // Still generates one (correction) token per round.
         assert_eq!(stats.tokens_drafted, 0);
         assert_eq!(stats.rounds, 4);
+    }
+
+    #[test]
+    fn hello_handshake_then_leave_exits_cleanly() {
+        use crate::net::wire::{JoinAckMsg, LeaveMsg, Message, PROTOCOL_VERSION};
+        let (mut server, mut ports) = channel_transport(1);
+        let stream = DomainStream::new("alpaca", 1.0, 20, Rng::new(9)).unwrap();
+        let mut c = cfg(0, 10);
+        c.hello = true;
+        c.initial_alloc = 1; // the ack must override this
+        let h = spawn_draft_server(c, factory(), stream, ports.remove(0));
+        // The first frame is the hello, carrying the protocol version.
+        let (id, msg) = server.rx.recv().unwrap();
+        assert_eq!(id, 0);
+        match msg {
+            Message::Join(j) => {
+                assert_eq!(j.client_id, 0);
+                assert_eq!(j.protocol, PROTOCOL_VERSION);
+            }
+            other => panic!("expected Join, got {other:?}"),
+        }
+        (server.txs[0])(&Message::JoinAck(JoinAckMsg {
+            client_id: 0,
+            protocol: PROTOCOL_VERSION,
+            initial_alloc: 3,
+            epoch: 1,
+        }))
+        .unwrap();
+        // First draft uses the acked allocation, not the config's.
+        let (_, msg) = server.rx.recv().unwrap();
+        let d = match msg {
+            Message::Draft(d) => d,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(d.round, 0);
+        assert_eq!(d.draft.len(), 3);
+        // Deliver the verdict, then complete a graceful drain with Leave.
+        (server.txs[0])(&Message::Verdict(VerdictMsg {
+            client_id: 0,
+            round: 0,
+            accepted: 1,
+            path: vec![],
+            correction: 7,
+            next_alloc: 0,
+            shard: 0,
+        }))
+        .unwrap();
+        let (_, msg) = server.rx.recv().unwrap(); // the drained (empty) draft
+        assert!(matches!(msg, Message::Draft(ref d) if d.draft.is_empty()));
+        (server.txs[0])(&Message::Leave(LeaveMsg { client_id: 0, epoch: 2 })).unwrap();
+        let stats = h.join().unwrap().unwrap();
+        assert_eq!(stats.rounds, 1);
+        assert_eq!(stats.tokens_accepted, 1);
     }
 
     #[test]

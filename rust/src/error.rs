@@ -1,0 +1,178 @@
+//! Crate-wide typed errors.
+//!
+//! Three layers of structure replace the ad-hoc `String` errors the early
+//! prototype used:
+//!
+//! * [`ConfigError`] — scenario / CLI configuration problems. The
+//!   [`ConfigError::InvalidChoice`] variant carries the full candidate
+//!   list so `goodspeed run --policy typo` can print what *would* have
+//!   been accepted.
+//! * [`WireError`] — wire-format decode failures. Unknown tags and
+//!   newer-than-supported protocol versions are first-class variants so a
+//!   forward-compat peer degrades to a typed error instead of a panic.
+//! * [`GoodSpeedError`] — the crate-wide union (config / wire / engine /
+//!   shutdown) used by the serving API
+//!   ([`ServingHandle`](crate::coordinator::ServingHandle)).
+//!
+//! All three implement [`std::error::Error`], so they convert into
+//! `anyhow::Error` at the binary boundary with `?`.
+
+use std::fmt;
+
+/// A configuration problem (scenario validation or CLI parsing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// A multiple-choice field received an unrecognized value. Lists the
+    /// accepted values so the CLI error is actionable.
+    InvalidChoice {
+        /// Which field was being parsed (e.g. `"policy"`).
+        field: &'static str,
+        /// The rejected input.
+        given: String,
+        /// The canonical accepted values.
+        expected: &'static [&'static str],
+    },
+    /// A scenario-level invariant violation (free-form description).
+    Invalid(String),
+}
+
+impl ConfigError {
+    /// Shorthand for [`ConfigError::Invalid`].
+    pub fn invalid(msg: impl Into<String>) -> ConfigError {
+        ConfigError::Invalid(msg.into())
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::InvalidChoice { field, given, expected } => {
+                write!(f, "unknown {field} '{given}' (expected one of: {})", expected.join(", "))
+            }
+            ConfigError::Invalid(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A wire-format decode failure. Decoding never panics: malformed,
+/// unknown, or from-the-future frames all surface as one of these.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The frame's tag byte is not one this build understands (a newer
+    /// peer may legitimately send frame kinds we do not know yet).
+    UnknownTag(u8),
+    /// A control frame declared a protocol version newer than ours.
+    UnsupportedVersion {
+        /// Version the peer speaks.
+        got: u8,
+        /// Highest version this build supports.
+        supported: u8,
+    },
+    /// The payload ended before the frame's declared fields did.
+    Eof {
+        /// Bytes the decoder wanted next.
+        want: usize,
+        /// Offset at which it wanted them.
+        at: usize,
+    },
+    /// Bytes remained after the last field of the frame.
+    TrailingBytes(usize),
+    /// Structurally invalid contents (e.g. a tree draft whose parent
+    /// array disagrees with its token count).
+    Malformed(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::UnknownTag(t) => write!(f, "wire: unknown tag {t}"),
+            WireError::UnsupportedVersion { got, supported } => {
+                write!(f, "wire: protocol version {got} newer than supported {supported}")
+            }
+            WireError::Eof { want, at } => write!(f, "wire: eof (want {want} at {at})"),
+            WireError::TrailingBytes(n) => write!(f, "wire: {n} trailing bytes"),
+            WireError::Malformed(msg) => write!(f, "wire: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// The crate-wide error union the serving API returns.
+#[derive(Clone, Debug)]
+pub enum GoodSpeedError {
+    /// Configuration rejected (scenario validation, CLI parsing, attach
+    /// of an invalid [`ClientSpec`](crate::configsys::ClientSpec)).
+    Config(ConfigError),
+    /// Wire decode failure.
+    Wire(WireError),
+    /// Engine construction or execution failure (message only — engine
+    /// errors originate as `anyhow` chains).
+    Engine(String),
+    /// The operation raced with (or requires) cluster shutdown.
+    Shutdown(String),
+}
+
+impl fmt::Display for GoodSpeedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GoodSpeedError::Config(e) => write!(f, "configuration error: {e}"),
+            GoodSpeedError::Wire(e) => write!(f, "wire error: {e}"),
+            GoodSpeedError::Engine(msg) => write!(f, "engine error: {msg}"),
+            GoodSpeedError::Shutdown(msg) => write!(f, "shutdown: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GoodSpeedError {}
+
+impl From<ConfigError> for GoodSpeedError {
+    fn from(e: ConfigError) -> Self {
+        GoodSpeedError::Config(e)
+    }
+}
+
+impl From<WireError> for GoodSpeedError {
+    fn from(e: WireError) -> Self {
+        GoodSpeedError::Wire(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invalid_choice_lists_candidates() {
+        let e = ConfigError::InvalidChoice {
+            field: "policy",
+            given: "typo".into(),
+            expected: &["goodspeed", "fixed-s", "random-s"],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("unknown policy 'typo'"), "{msg}");
+        assert!(msg.contains("goodspeed"), "{msg}");
+        assert!(msg.contains("random-s"), "{msg}");
+    }
+
+    #[test]
+    fn wire_error_messages() {
+        assert_eq!(WireError::UnknownTag(99).to_string(), "wire: unknown tag 99");
+        let v = WireError::UnsupportedVersion { got: 9, supported: 1 };
+        assert!(v.to_string().contains("version 9 newer than supported 1"));
+        assert!(WireError::Eof { want: 4, at: 7 }.to_string().contains("want 4 at 7"));
+    }
+
+    #[test]
+    fn goodspeed_error_wraps_and_converts() {
+        let g: GoodSpeedError = ConfigError::invalid("num_clients must be > 0").into();
+        assert!(g.to_string().contains("configuration error"));
+        let g: GoodSpeedError = WireError::UnknownTag(7).into();
+        assert!(g.to_string().contains("wire error"));
+        assert!(GoodSpeedError::Shutdown("cluster stopped".into())
+            .to_string()
+            .contains("cluster stopped"));
+    }
+}

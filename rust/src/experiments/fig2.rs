@@ -10,7 +10,7 @@ use anyhow::{anyhow, Result};
 use super::engine_from_args;
 use crate::cli::Args;
 use crate::configsys::{Policy, Scenario};
-use crate::coordinator::{run_serving, RunConfig, Transport};
+use crate::coordinator::Transport;
 use crate::metrics::csv::write_csv;
 use crate::metrics::recorder::Recorder;
 use crate::metrics::svg::Chart;
@@ -87,13 +87,13 @@ pub fn main(args: &Args) -> Result<()> {
         let mut scenario = Scenario::preset(preset).unwrap();
         scenario.rounds = rounds;
         log::info!("fig2: {fam} ({rounds} rounds)");
-        let cfg = RunConfig {
+        let out = super::serve_once(
             scenario,
-            policy: Policy::GoodSpeed,
-            transport: Transport::Channel,
-            simulate_network: false,
-        };
-        let out = run_serving(&cfg, factory.clone())?;
+            Policy::GoodSpeed,
+            Transport::Channel,
+            false,
+            factory.clone(),
+        )?;
         let series = estimation_series(&out.recorder, 10);
         let csv_path = format!("{out_dir}/fig2_{fam}.csv");
         write_csv(

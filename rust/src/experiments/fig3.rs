@@ -11,7 +11,7 @@ use anyhow::{anyhow, Result};
 use super::engine_from_args;
 use crate::cli::Args;
 use crate::configsys::{Policy, Scenario};
-use crate::coordinator::{run_serving, RunConfig, Transport};
+use crate::coordinator::Transport;
 use crate::metrics::csv::write_csv;
 
 pub struct Fig3Row {
@@ -37,13 +37,8 @@ pub fn run_grid(
             let mut scenario = Scenario::preset(preset).unwrap();
             scenario.rounds = rounds;
             log::info!("fig3: {fam}/{} ({rounds} rounds)", policy.name());
-            let cfg = RunConfig {
-                scenario,
-                policy,
-                transport,
-                simulate_network: true, // the decomposition needs real delays
-            };
-            let out = run_serving(&cfg, factory.clone())?;
+            // The decomposition needs real delays (simulate_network on).
+            let out = super::serve_once(scenario, policy, transport, true, factory.clone())?;
             let s = out.summary;
             rows.push(Fig3Row {
                 family: fam.to_string(),
@@ -64,8 +59,10 @@ pub fn main(args: &Args) -> Result<()> {
     let rounds = args.get_parse::<u64>("rounds").unwrap_or(120);
     let families: Vec<String> =
         args.get_or("families", "qwen,llama").split(',').map(String::from).collect();
-    let transport = Transport::parse(&args.get_or("transport", "channel"))
-        .ok_or_else(|| anyhow!("bad --transport"))?;
+    let transport: Transport = args
+        .get_or("transport", "channel")
+        .parse()
+        .map_err(|e| anyhow!("--transport: {e}"))?;
     let factory = engine_from_args(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 

@@ -12,7 +12,7 @@ use anyhow::{anyhow, Result};
 use super::engine_from_args;
 use crate::cli::Args;
 use crate::configsys::{Policy, Scenario};
-use crate::coordinator::{run_serving, RunConfig, Transport};
+use crate::coordinator::Transport;
 use crate::metrics::csv::write_csv;
 use crate::metrics::recorder::Recorder;
 use crate::metrics::svg::Chart;
@@ -106,13 +106,13 @@ pub fn main(args: &Args) -> Result<()> {
                     s.rounds = rounds;
                     s.links = Scenario::default_links(clients, s.seed);
                     log::info!("fig4(real): {fam}/{clients}c/{}", policy.name());
-                    let cfg = RunConfig {
-                        scenario: s,
+                    let run = super::serve_once(
+                        s,
                         policy,
-                        transport: Transport::Channel,
-                        simulate_network: false,
-                    };
-                    let run = run_serving(&cfg, factory.clone())?;
+                        Transport::Channel,
+                        false,
+                        factory.clone(),
+                    )?;
                     out.push(Fig4Curve {
                         family: fam.to_string(),
                         clients,

@@ -18,10 +18,32 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::cli::Args;
+use crate::configsys::{Policy, Scenario};
+use crate::coordinator::{Cluster, RunOutcome, Transport};
 use crate::runtime::{
     default_artifacts_dir, EngineFactory, Manifest, MockEngineFactory, MockWorld,
     XlaEngineFactory,
 };
+
+/// One-shot serving run through the session API (`Cluster::builder` →
+/// `start` → `wait`) — the experiment harnesses' standard entry point.
+/// Dispatches to the sharded pool automatically when the scenario asks
+/// for multiple verifiers.
+pub fn serve_once(
+    scenario: Scenario,
+    policy: Policy,
+    transport: Transport,
+    simulate_network: bool,
+    factory: Arc<dyn EngineFactory>,
+) -> Result<RunOutcome> {
+    Cluster::builder(scenario)
+        .policy(policy)
+        .transport(transport)
+        .simulate_network(simulate_network)
+        .engine(factory)
+        .start()?
+        .wait()
+}
 
 /// Engine selection: `--engine xla|mock` (default: xla when artifacts are
 /// present, mock otherwise).
@@ -90,7 +112,7 @@ COMMANDS
                                     --capacity <C> --clients <n> --no-network
                                     --mode sync|async --batch-window-us <µs>
                                     --min-wave-fill <n> --verifiers <m>
-                                    --rebalance-every <waves>
+                                    --rebalance-every <waves> --churn
   quickstart single client speculative vs autoregressive speedup
   fig2       goodput estimation fidelity (paper Fig 2)   --out results
   fig3       wall-time decomposition   (paper Fig 3)     --out results
@@ -99,6 +121,7 @@ COMMANDS
   fluid      fluid-limit / Theorem 1 validation          --out results
   ablation   eta/beta/C sweeps, greedy-vs-DP, buckets    --out results
 
-Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke, straggler, sharded."
+Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke, straggler,
+sharded, tree, churn."
     );
 }

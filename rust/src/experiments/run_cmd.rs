@@ -1,12 +1,18 @@
 //! `goodspeed run` — one configurable serving run with a full report.
+//!
+//! Runs through the session API ([`Cluster::builder`] →
+//! [`ServingHandle`](crate::coordinator::ServingHandle)): static scenarios
+//! behave exactly like the historic batch runner, while `--churn` (or the
+//! `churn` preset) exercises dynamic membership — clients joining and
+//! draining mid-run — and additionally writes the membership-epoch CSV.
 
 use anyhow::{anyhow, Result};
 
 use super::engine_from_args;
 use crate::cli::Args;
-use crate::configsys::{Policy, Scenario};
-use crate::coordinator::{run_pool, run_serving, RunConfig, Transport};
-use crate::metrics::csv::write_rounds;
+use crate::configsys::{ChurnSchedule, Policy, Scenario};
+use crate::coordinator::{Cluster, Transport};
+use crate::metrics::csv::{write_membership, write_rounds};
 
 /// Regenerate the seeded links after a --clients/--seed override while
 /// preserving any preset-specific link (the `straggler` preset's defining
@@ -51,8 +57,7 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
         s.domain_stickiness = st;
     }
     if let Some(m) = args.get("mode") {
-        s.coord_mode = crate::configsys::CoordMode::parse(m)
-            .ok_or_else(|| anyhow!("bad --mode (sync|async)"))?;
+        s.coord_mode = m.parse().map_err(|e| anyhow!("--mode: {e}"))?;
     }
     if let Some(w) = args.get_parse::<u64>("batch-window-us") {
         s.batch_window_us = w;
@@ -67,8 +72,12 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
         s.shard_rebalance_every = k;
     }
     if let Some(shape) = args.get("spec-shape") {
-        s.spec_shape = crate::configsys::SpecShape::parse(shape)
-            .ok_or_else(|| anyhow!("bad --spec-shape (chain|tree[:AxD]|adaptive)"))?;
+        s.spec_shape = shape.parse().map_err(|e| anyhow!("--spec-shape: {e}"))?;
+    }
+    // `--churn` layers the standard demo schedule (one join at rounds/3,
+    // one departure at 2·rounds/3) onto whatever scenario was selected.
+    if args.flag("churn") && s.churn.is_empty() {
+        s.churn = ChurnSchedule::demo(&s);
     }
     s.validate().map_err(|e| anyhow!("scenario: {e}"))?;
     Ok(s)
@@ -76,27 +85,38 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
 
 pub fn main(args: &Args) -> Result<()> {
     let scenario = scenario_from_args(args)?;
-    let policy = Policy::parse(&args.get_or("policy", "goodspeed"))
-        .ok_or_else(|| anyhow!("bad --policy"))?;
-    let transport = Transport::parse(&args.get_or("transport", "channel"))
-        .ok_or_else(|| anyhow!("bad --transport"))?;
+    let policy: Policy =
+        args.get_or("policy", "goodspeed").parse().map_err(|e| anyhow!("--policy: {e}"))?;
+    let transport: Transport = args
+        .get_or("transport", "channel")
+        .parse()
+        .map_err(|e| anyhow!("--transport: {e}"))?;
     let simulate_network = !args.flag("no-network");
     let out_dir = args.get_or("out", "results");
     let factory = engine_from_args(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
     log::info!(
-        "run: scenario={} policy={} mode={} shape={} verifiers={} transport={transport:?} rounds={}",
+        "run: scenario={} policy={} mode={} shape={} verifiers={} transport={transport:?} \
+         rounds={} churn-events={}",
         scenario.id,
         policy.name(),
         scenario.coord_mode.name(),
         scenario.spec_shape.label(),
         scenario.num_verifiers,
-        scenario.rounds
+        scenario.rounds,
+        scenario.churn.events.len()
     );
-    let cfg = RunConfig { scenario: scenario.clone(), policy, transport, simulate_network };
-    let recorder = if scenario.num_verifiers > 1 {
-        let out = run_pool(&cfg, factory)?;
+    let churned = !scenario.churn.is_empty();
+    let handle = Cluster::builder(scenario.clone())
+        .policy(policy)
+        .transport(transport)
+        .simulate_network(simulate_network)
+        .engine(factory)
+        .start()?;
+    let out = handle.wait()?;
+
+    if let Some(pool) = &out.pool {
         out.summary.print(&format!(
             "{} / {} / {} shards",
             scenario.id,
@@ -106,21 +126,38 @@ pub fn main(args: &Args) -> Result<()> {
         // No per-shard Jain here: each shard's recorder spans the full
         // client universe, so its index would read ~|members|/n even under
         // perfect fairness. The merged summary above carries the real one.
-        for (s, sum) in out.shard_summaries.iter().enumerate() {
+        for (s, sum) in pool.shard_summaries.iter().enumerate() {
             println!(
                 "  shard {s}: waves {:>5}  tokens {:>8.0}",
                 sum.rounds, sum.total_tokens
             );
         }
-        println!("  client migrations: {}", out.migrations);
-        out.recorder
+        println!("  client migrations: {}", pool.migrations);
     } else {
-        let out = run_serving(&cfg, factory)?;
         out.summary.print(&format!("{} / {}", scenario.id, policy.name()));
-        out.recorder
-    };
+    }
+    if churned {
+        println!("  membership epochs: {}", out.recorder.membership.len());
+        for ev in &out.recorder.membership {
+            let joined: Vec<String> =
+                ev.joined.iter().map(|(id, g)| format!("+{id}(S0={g})")).collect();
+            let left: Vec<String> = ev.left.iter().map(|id| format!("-{id}")).collect();
+            println!(
+                "    wave {:>5} epoch {:>3}: {} members={:?}",
+                ev.wave,
+                ev.epoch,
+                joined.iter().chain(left.iter()).cloned().collect::<Vec<_>>().join(" "),
+                ev.members
+            );
+        }
+    }
     let path = format!("{out_dir}/run_{}_{}.csv", scenario.id, policy.name());
-    write_rounds(&path, &recorder)?;
+    write_rounds(&path, &out.recorder)?;
     println!("per-round CSV -> {path}");
+    if churned {
+        let mpath = format!("{out_dir}/run_{}_{}_membership.csv", scenario.id, policy.name());
+        write_membership(&mpath, &out.recorder)?;
+        println!("membership CSV -> {mpath}");
+    }
     Ok(())
 }

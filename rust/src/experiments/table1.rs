@@ -6,7 +6,7 @@ use anyhow::{anyhow, Result};
 use super::engine_from_args;
 use crate::cli::Args;
 use crate::configsys::{Policy, Scenario};
-use crate::coordinator::{run_serving, RunConfig, Transport};
+use crate::coordinator::Transport;
 use crate::metrics::csv::write_csv;
 
 pub struct Table1Row {
@@ -46,13 +46,13 @@ pub fn main(args: &Args) -> Result<()> {
                 s.capacity = c;
                 s.rounds = rounds;
                 log::info!("table1: {preset} C={c} {}", policy.name());
-                let cfg = RunConfig {
-                    scenario: s,
+                let out = super::serve_once(
+                    s,
                     policy,
-                    transport: Transport::Channel,
-                    simulate_network: false,
-                };
-                let out = run_serving(&cfg, factory.clone())?;
+                    Transport::Channel,
+                    false,
+                    factory.clone(),
+                )?;
                 rows.push(Table1Row {
                     scenario: preset.to_string(),
                     capacity: c,

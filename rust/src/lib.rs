@@ -11,7 +11,11 @@
 //!   node budgets arranged as branching candidate trees, lossless
 //!   sequential-sibling rejection sampling), smoothed estimators
 //!   (paper eqs. 3–4), and the gradient scheduler (GOODSPEED-SCHED,
-//!   eq. 5) with Fixed-S / Random-S baselines.
+//!   eq. 5) with Fixed-S / Random-S baselines. The public serving API
+//!   is session-oriented ([`coordinator::Cluster::builder`] →
+//!   [`coordinator::ServingHandle`]): a long-lived cluster that edge
+//!   draft servers join and leave dynamically, with epoch-stamped
+//!   membership applied at wave boundaries.
 //! * **Layer 2** — `python/compile/model.py`: the tiny-transformer model
 //!   zoo AOT-lowered to HLO text at build time.
 //! * **Layer 1** — `python/compile/kernels/`: Pallas flash-attention and
@@ -27,6 +31,7 @@ pub mod cli;
 pub mod configsys;
 pub mod coordinator;
 pub mod draft;
+pub mod error;
 pub mod experiments;
 pub mod metrics;
 pub mod net;

@@ -70,10 +70,36 @@ pub fn write_rounds<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
     write_csv(path, &header, rows)
 }
 
+/// Membership-epoch dump of a churn run: one row per epoch change, with
+/// the joined/left ids and the resulting member set (`|`-separated).
+/// Written alongside the per-round CSV only when the run actually churned,
+/// so static runs keep producing the exact same file set.
+pub fn write_membership<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
+    let header = ["wave", "epoch", "joined", "left", "members", "lifetime_goodput"];
+    let lifetime = rec.lifetime_goodput();
+    let rows = rec.membership.iter().map(|ev| {
+        let joined: Vec<String> =
+            ev.joined.iter().map(|(id, grant)| format!("{id}:{grant}")).collect();
+        let left: Vec<String> = ev.left.iter().map(|id| id.to_string()).collect();
+        let members: Vec<String> = ev.members.iter().map(|id| id.to_string()).collect();
+        let lg: Vec<String> =
+            ev.members.iter().map(|&id| format!("{:.1}", lifetime[id])).collect();
+        vec![
+            ev.wave.to_string(),
+            ev.epoch.to_string(),
+            joined.join("|"),
+            left.join("|"),
+            members.join("|"),
+            lg.join("|"),
+        ]
+    });
+    write_csv(path, &header, rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::metrics::recorder::{ClientRoundMetrics, RoundRecord};
+    use crate::metrics::recorder::{ClientRoundMetrics, MembershipEvent, RoundRecord};
 
     #[test]
     fn escapes_fields() {
@@ -105,6 +131,40 @@ mod tests {
         assert_eq!(lines.len(), 3); // header + 2 clients
         assert!(lines[0].starts_with("round,client"));
         assert!(lines[1].starts_with("0,0,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writes_membership_csv() {
+        let dir = std::env::temp_dir().join("goodspeed_membership_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("membership.csv");
+        let mut rec = Recorder::new(3);
+        rec.push(RoundRecord {
+            round: 0,
+            shard: 0,
+            recv_ns: 0,
+            verify_ns: 0,
+            send_ns: 0,
+            clients: vec![ClientRoundMetrics {
+                client_id: 2,
+                goodput: 5,
+                ..Default::default()
+            }],
+        });
+        rec.note_membership(MembershipEvent {
+            wave: 4,
+            epoch: 1,
+            joined: vec![(2, 3)],
+            left: vec![0],
+            members: vec![1, 2],
+        });
+        write_membership(&path, &rec).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], "wave,epoch,joined,left,members,lifetime_goodput");
+        assert_eq!(lines[1], "4,1,2:3,0,1|2,0.0|5.0");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

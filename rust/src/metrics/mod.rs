@@ -4,4 +4,4 @@ pub mod csv;
 pub mod recorder;
 pub mod svg;
 
-pub use recorder::{ClientRoundMetrics, Recorder, RoundRecord, RunSummary};
+pub use recorder::{ClientRoundMetrics, MembershipEvent, Recorder, RoundRecord, RunSummary};

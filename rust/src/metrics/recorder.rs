@@ -58,10 +58,31 @@ impl RoundRecord {
     }
 }
 
+/// One membership epoch change: who joined/left at which wave boundary,
+/// and the resulting member set. Emitted by the serving cluster (and its
+/// analytic counterpart) whenever the epoch advances; static-membership
+/// runs record nothing, keeping their outputs byte-identical.
+#[derive(Clone, Debug, Default)]
+pub struct MembershipEvent {
+    /// Wave boundary at which the change took effect (the first wave
+    /// formed under the new membership).
+    pub wave: u64,
+    /// Epoch counter after the change (starts at 0 with the initial set).
+    pub epoch: u64,
+    /// Admitted clients with their initial grants S_i(0).
+    pub joined: Vec<(usize, usize)>,
+    /// Retired clients (graceful drain complete).
+    pub left: Vec<usize>,
+    /// The member set after the change, ascending.
+    pub members: Vec<usize>,
+}
+
 /// Accumulates waves and derives the report quantities.
 #[derive(Debug, Default)]
 pub struct Recorder {
     pub rounds: Vec<RoundRecord>,
+    /// Per-epoch membership changes (empty on static runs).
+    pub membership: Vec<MembershipEvent>,
     /// Per-request latency in rounds, as requests complete.
     pub request_latency_rounds: Vec<u64>,
     /// Cumulative realized goodput per client (for x̄(T) and Fig 4).
@@ -81,6 +102,7 @@ impl Recorder {
     pub fn new(n_clients: usize) -> Self {
         Recorder {
             rounds: Vec::new(),
+            membership: Vec::new(),
             request_latency_rounds: Vec::new(),
             cum_goodput: vec![0.0; n_clients],
             cum_accepted: vec![0; n_clients],
@@ -116,7 +138,21 @@ impl Recorder {
         for rec in other.rounds {
             self.push(rec);
         }
+        self.membership.extend(other.membership);
         self.request_latency_rounds.extend(other.request_latency_rounds);
+    }
+
+    /// Record a membership epoch change (serving clusters with churn).
+    pub fn note_membership(&mut self, ev: MembershipEvent) {
+        self.membership.push(ev);
+    }
+
+    /// Per-client lifetime goodput: total realized tokens over the
+    /// client's whole session (identical to [`Recorder::cum_goodput`];
+    /// named for the churn reports, where departed clients keep their
+    /// archived totals).
+    pub fn lifetime_goodput(&self) -> &[f64] {
+        &self.cum_goodput
     }
 
     pub fn n_clients(&self) -> usize {
@@ -382,6 +418,33 @@ mod tests {
         assert_eq!(r.avg_spec_depth(), vec![3.0]);
         // 6 accepted over 12 nodes spent.
         assert_eq!(r.node_acceptance(), vec![0.5]);
+    }
+
+    #[test]
+    fn membership_events_accumulate_and_absorb() {
+        let mut a = Recorder::new(3);
+        a.note_membership(MembershipEvent {
+            wave: 5,
+            epoch: 1,
+            joined: vec![(2, 4)],
+            left: vec![],
+            members: vec![0, 1, 2],
+        });
+        let mut b = Recorder::new(3);
+        b.note_membership(MembershipEvent {
+            wave: 9,
+            epoch: 2,
+            joined: vec![],
+            left: vec![0],
+            members: vec![1, 2],
+        });
+        a.absorb(b);
+        assert_eq!(a.membership.len(), 2);
+        assert_eq!(a.membership[0].joined, vec![(2, 4)]);
+        assert_eq!(a.membership[1].left, vec![0]);
+        // Lifetime goodput is the cumulative view.
+        a.push(wave(&[(1, 3)]));
+        assert_eq!(a.lifetime_goodput(), &[0.0, 3.0, 0.0]);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -117,18 +117,26 @@ impl ClientPort for ChannelPort {
 /// pool controller. A client's *next* send observes a reassignment
 /// immediately (acquire/release); the message already queued at the old
 /// shard is still verified there — nothing is lost in flight.
+///
+/// Slots can be marked inactive (`set_active`): reserved-but-unattached
+/// and retired sessions keep a routing entry but are excluded from
+/// `members_of`, so shard membership, budget floors, and wave-fill counts
+/// see only the serving population.
 #[derive(Clone)]
 pub struct ShardRouter {
     assignment: Arc<Vec<AtomicUsize>>,
+    active: Arc<Vec<AtomicBool>>,
     num_shards: usize,
 }
 
 impl ShardRouter {
-    /// Round-robin initial placement: client i → shard i mod m.
+    /// Round-robin initial placement: client i → shard i mod m, all
+    /// active.
     pub fn new(n: usize, m: usize) -> ShardRouter {
         assert!(m > 0, "at least one shard");
         ShardRouter {
             assignment: Arc::new((0..n).map(|i| AtomicUsize::new(i % m)).collect()),
+            active: Arc::new((0..n).map(|_| AtomicBool::new(true)).collect()),
             num_shards: m,
         }
     }
@@ -145,15 +153,27 @@ impl ShardRouter {
         self.assignment[client].load(Ordering::Acquire)
     }
 
-    /// Move a client to another shard (pool rebalancing).
+    /// Whether the slot currently holds a serving session.
+    pub fn is_active(&self, client: usize) -> bool {
+        self.active[client].load(Ordering::Acquire)
+    }
+
+    /// Mark a slot as serving (admission) or not (reserve/retired).
+    pub fn set_active(&self, client: usize, active: bool) {
+        self.active[client].store(active, Ordering::Release);
+    }
+
+    /// Move a client to another shard (pool rebalancing / admission).
     pub fn assign(&self, client: usize, shard: usize) {
         assert!(shard < self.num_shards, "shard {shard} out of range");
         self.assignment[client].store(shard, Ordering::Release);
     }
 
-    /// Clients currently routed to `shard`, ascending.
+    /// Active clients currently routed to `shard`, ascending.
     pub fn members_of(&self, shard: usize) -> Vec<usize> {
-        (0..self.num_clients()).filter(|&i| self.shard_of(i) == shard).collect()
+        (0..self.num_clients())
+            .filter(|&i| self.is_active(i) && self.shard_of(i) == shard)
+            .collect()
     }
 }
 
@@ -245,7 +265,7 @@ fn read_frame(stream: &mut TcpStream) -> Result<Message> {
     }
     let mut payload = vec![0u8; len];
     stream.read_exact(&mut payload).context("tcp read payload")?;
-    Message::decode(&payload)
+    Ok(Message::decode(&payload)?)
 }
 
 struct TcpPort {
@@ -490,6 +510,21 @@ mod tests {
         assert!(servers[0].recv_deadline(expired).unwrap().is_none());
         let got = servers[1].recv_deadline(Instant::now()).unwrap();
         assert!(matches!(got, Some((1, Message::Draft(_)))));
+    }
+
+    #[test]
+    fn inactive_slots_are_excluded_from_membership() {
+        let (_servers, router, _ports, _master) = sharded_channel_transport(4, 2);
+        assert_eq!(router.members_of(0), vec![0, 2]);
+        // Retire client 2: routing survives, membership does not.
+        router.set_active(2, false);
+        assert!(!router.is_active(2));
+        assert_eq!(router.shard_of(2), 0);
+        assert_eq!(router.members_of(0), vec![0]);
+        // Re-admit into shard 1.
+        router.assign(2, 1);
+        router.set_active(2, true);
+        assert_eq!(router.members_of(1), vec![1, 2, 3]);
     }
 
     #[test]

@@ -4,8 +4,27 @@
 //! Numbers are little-endian; vectors are `u32 LE count` + raw elements.
 //! Used verbatim by the TCP transport and for exact byte accounting by the
 //! in-process transport.
+//!
+//! Decoding is total: malformed bytes, unknown tags (a newer peer may
+//! speak frame kinds this build has never heard of), and control frames
+//! declaring a newer protocol version all surface as a typed
+//! [`WireError`], never a panic.
+//!
+//! **Control frames** (session churn): a dynamically attached draft server
+//! opens with [`Message::Join`] — the hello, carrying the protocol version
+//! byte — and waits for [`Message::JoinAck`] before drafting; the
+//! coordinator ends a graceful drain with [`Message::Leave`] after the
+//! client's final verdict. Statically configured clients skip the
+//! handshake, keeping the legacy frame stream byte-for-byte identical.
 
-use anyhow::{anyhow, Result};
+pub use crate::error::WireError;
+
+// (No `anyhow` in this module: the decode path is fully typed.)
+
+/// Highest wire-protocol version this build speaks. The hello
+/// ([`Message::Join`]) carries the client's version; anything newer than
+/// this decodes to [`WireError::UnsupportedVersion`].
+pub const PROTOCOL_VERSION: u8 = 1;
 
 /// Coordinator ⇄ draft-server protocol.
 #[derive(Clone, Debug, PartialEq)]
@@ -16,6 +35,41 @@ pub enum Message {
     Verdict(VerdictMsg),
     /// Orderly end of stream.
     Shutdown,
+    /// Draft server → coordinator: session hello (dynamic attach).
+    Join(JoinMsg),
+    /// Coordinator → draft server: hello accepted; start drafting.
+    JoinAck(JoinAckMsg),
+    /// Coordinator → draft server: graceful-drain complete — the final
+    /// verdict has been delivered and the session is retired.
+    Leave(LeaveMsg),
+}
+
+/// Session hello: the first frame a dynamically attached client sends.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JoinMsg {
+    pub client_id: u32,
+    /// Wire-protocol version the client speaks (see [`PROTOCOL_VERSION`]).
+    pub protocol: u8,
+}
+
+/// Hello acknowledgement: grants the session and its first allocation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JoinAckMsg {
+    pub client_id: u32,
+    /// Protocol version the coordinator speaks.
+    pub protocol: u8,
+    /// First draft allocation S_i(0) for the new session.
+    pub initial_alloc: u32,
+    /// Membership epoch the session was admitted in.
+    pub epoch: u64,
+}
+
+/// Graceful-drain completion: the session is retired.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LeaveMsg {
+    pub client_id: u32,
+    /// Membership epoch after the departure.
+    pub epoch: u64,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -65,13 +119,22 @@ pub struct VerdictMsg {
     pub shard: u32,
 }
 
-const TAG_DRAFT: u8 = 1;
-const TAG_VERDICT: u8 = 2;
-const TAG_SHUTDOWN: u8 = 3;
+/// Legacy chain draft (no topology; byte-identical to the pre-tree frame).
+pub const TAG_DRAFT: u8 = 1;
+/// Legacy chain verdict (no path).
+pub const TAG_VERDICT: u8 = 2;
+/// Orderly end of stream.
+pub const TAG_SHUTDOWN: u8 = 3;
 /// A draft carrying an explicit tree topology (non-empty `parents`).
-const TAG_DRAFT_TREE: u8 = 4;
+pub const TAG_DRAFT_TREE: u8 = 4;
 /// A verdict carrying an explicit accepted path (non-empty `path`).
-const TAG_VERDICT_TREE: u8 = 5;
+pub const TAG_VERDICT_TREE: u8 = 5;
+/// Session hello (dynamic attach); carries the protocol-version byte.
+pub const TAG_JOIN: u8 = 6;
+/// Hello acknowledgement.
+pub const TAG_JOIN_ACK: u8 = 7;
+/// Graceful-drain completion.
+pub const TAG_LEAVE: u8 = 8;
 
 struct Writer {
     buf: Vec<u8>,
@@ -113,42 +176,57 @@ struct Reader<'a> {
 }
 
 impl<'a> Reader<'a> {
-    fn u8(&mut self) -> Result<u8> {
-        let v = *self.buf.get(self.pos).ok_or_else(|| anyhow!("wire: eof"))?;
+    fn u8(&mut self) -> Result<u8, WireError> {
+        let v = *self
+            .buf
+            .get(self.pos)
+            .ok_or(WireError::Eof { want: 1, at: self.pos })?;
         self.pos += 1;
         Ok(v)
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         if self.pos + n > self.buf.len() {
-            return Err(anyhow!("wire: eof (want {n} at {})", self.pos));
+            return Err(WireError::Eof { want: n, at: self.pos });
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
     }
 
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
     }
 
-    fn bytes(&mut self) -> Result<Vec<u8>> {
+    fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
         let n = self.u32()? as usize;
         Ok(self.take(n)?.to_vec())
     }
 
-    fn f32s(&mut self) -> Result<Vec<f32>> {
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+            .collect())
     }
 
     fn done(&self) -> bool {
         self.pos == self.buf.len()
+    }
+}
+
+/// Reject a control frame claiming a newer protocol than we speak.
+fn check_version(got: u8) -> Result<u8, WireError> {
+    if got > PROTOCOL_VERSION {
+        Err(WireError::UnsupportedVersion { got, supported: PROTOCOL_VERSION })
+    } else {
+        Ok(got)
     }
 }
 
@@ -187,6 +265,23 @@ impl Message {
                 w.u32(v.shard);
             }
             Message::Shutdown => w.u8(TAG_SHUTDOWN),
+            Message::Join(j) => {
+                w.u8(TAG_JOIN);
+                w.u32(j.client_id);
+                w.u8(j.protocol);
+            }
+            Message::JoinAck(a) => {
+                w.u8(TAG_JOIN_ACK);
+                w.u32(a.client_id);
+                w.u8(a.protocol);
+                w.u32(a.initial_alloc);
+                w.u64(a.epoch);
+            }
+            Message::Leave(l) => {
+                w.u8(TAG_LEAVE);
+                w.u32(l.client_id);
+                w.u64(l.epoch);
+            }
         }
         let total = (w.buf.len() - 4) as u32;
         w.buf[..4].copy_from_slice(&total.to_le_bytes());
@@ -194,7 +289,8 @@ impl Message {
     }
 
     /// Decode the payload of one frame (without the 4-byte length prefix).
-    pub fn decode(payload: &[u8]) -> Result<Message> {
+    /// Total: every failure mode is a typed [`WireError`].
+    pub fn decode(payload: &[u8]) -> Result<Message, WireError> {
         let mut r = Reader { buf: payload, pos: 0 };
         let msg = match r.u8()? {
             tag @ (TAG_DRAFT | TAG_DRAFT_TREE) => {
@@ -205,11 +301,11 @@ impl Message {
                 let draft = r.bytes()?;
                 let parents = if tag == TAG_DRAFT_TREE { r.bytes()? } else { Vec::new() };
                 if tag == TAG_DRAFT_TREE && parents.len() != draft.len() {
-                    return Err(anyhow!(
-                        "wire: tree draft with {} parents for {} nodes",
+                    return Err(WireError::Malformed(format!(
+                        "tree draft with {} parents for {} nodes",
                         parents.len(),
                         draft.len()
-                    ));
+                    )));
                 }
                 Message::Draft(DraftMsg {
                     client_id,
@@ -239,10 +335,26 @@ impl Message {
                 })
             }
             TAG_SHUTDOWN => Message::Shutdown,
-            t => return Err(anyhow!("wire: unknown tag {t}")),
+            TAG_JOIN => {
+                let client_id = r.u32()?;
+                let protocol = check_version(r.u8()?)?;
+                Message::Join(JoinMsg { client_id, protocol })
+            }
+            TAG_JOIN_ACK => {
+                let client_id = r.u32()?;
+                let protocol = check_version(r.u8()?)?;
+                Message::JoinAck(JoinAckMsg {
+                    client_id,
+                    protocol,
+                    initial_alloc: r.u32()?,
+                    epoch: r.u64()?,
+                })
+            }
+            TAG_LEAVE => Message::Leave(LeaveMsg { client_id: r.u32()?, epoch: r.u64()? }),
+            t => return Err(WireError::UnknownTag(t)),
         };
         if !r.done() {
-            return Err(anyhow!("wire: trailing bytes"));
+            return Err(WireError::TrailingBytes(r.buf.len() - r.pos));
         }
         Ok(msg)
     }
@@ -261,6 +373,9 @@ impl Message {
                 4 + 1 + 4 + 8 + 4 + path + 1 + 4 + 4
             }
             Message::Shutdown => 4 + 1,
+            Message::Join(_) => 4 + 1 + 4 + 1,
+            Message::JoinAck(_) => 4 + 1 + 4 + 1 + 4 + 8,
+            Message::Leave(_) => 4 + 1 + 4 + 8,
         }
     }
 }
@@ -428,6 +543,86 @@ mod tests {
         d.q_probs.truncate(16);
         let frame = Message::Draft(d).encode();
         assert!(Message::decode(&frame[4..]).is_err());
+    }
+
+    /// Control frames (hello / ack / leave) round-trip, including their
+    /// exact `wire_bytes` accounting.
+    #[test]
+    fn prop_control_frame_roundtrip() {
+        proptest::check("wire_control_roundtrip", proptest::default_cases(), |rng| {
+            let msgs = [
+                Message::Join(JoinMsg {
+                    client_id: rng.below(1024) as u32,
+                    protocol: PROTOCOL_VERSION,
+                }),
+                Message::JoinAck(JoinAckMsg {
+                    client_id: rng.below(1024) as u32,
+                    protocol: PROTOCOL_VERSION,
+                    initial_alloc: rng.below(33) as u32,
+                    epoch: rng.next_u64() % 10_000,
+                }),
+                Message::Leave(LeaveMsg {
+                    client_id: rng.below(1024) as u32,
+                    epoch: rng.next_u64() % 10_000,
+                }),
+            ];
+            for m in msgs {
+                roundtrip(&m);
+            }
+        });
+    }
+
+    /// Forward compatibility: frames from a newer peer — an unknown tag or
+    /// a newer protocol version — decode to a typed error, never a panic.
+    #[test]
+    fn unknown_tag_and_newer_version_are_typed_errors() {
+        // Unknown tag: every undefined tag byte (arbitrary payload after).
+        for tag in 9u8..=255 {
+            let payload = [tag, 1, 2, 3, 4];
+            match Message::decode(&payload) {
+                Err(WireError::UnknownTag(t)) => assert_eq!(t, tag),
+                other => panic!("tag {tag}: expected UnknownTag, got {other:?}"),
+            }
+        }
+        // Tag 0 was never assigned either.
+        assert_eq!(Message::decode(&[0]), Err(WireError::UnknownTag(0)));
+        // Newer protocol version in the hello: encode a valid Join, then
+        // bump its version byte past ours.
+        let join = Message::Join(JoinMsg { client_id: 3, protocol: PROTOCOL_VERSION });
+        let mut payload = join.encode()[4..].to_vec();
+        let vpos = payload.len() - 1; // protocol is the last byte
+        payload[vpos] = PROTOCOL_VERSION + 1;
+        match Message::decode(&payload) {
+            Err(WireError::UnsupportedVersion { got, supported }) => {
+                assert_eq!(got, PROTOCOL_VERSION + 1);
+                assert_eq!(supported, PROTOCOL_VERSION);
+            }
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+        // Same for the ack (version sits mid-frame there).
+        let ack = Message::JoinAck(JoinAckMsg {
+            client_id: 1,
+            protocol: PROTOCOL_VERSION,
+            initial_alloc: 4,
+            epoch: 9,
+        });
+        let mut payload = ack.encode()[4..].to_vec();
+        payload[5] = PROTOCOL_VERSION + 7; // tag(1) + client_id(4), then version
+        assert!(matches!(
+            Message::decode(&payload),
+            Err(WireError::UnsupportedVersion { .. })
+        ));
+    }
+
+    /// Random byte soup never panics the decoder — it returns some typed
+    /// error (or, rarely, a valid frame).
+    #[test]
+    fn prop_decode_is_total_on_garbage() {
+        proptest::check("wire_decode_total", proptest::default_cases(), |rng| {
+            let len = rng.below(64) as usize;
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = Message::decode(&payload); // must not panic
+        });
     }
 
     #[test]

@@ -89,6 +89,32 @@ impl Estimators {
         }
     }
 
+    /// Population prior over a member subset: the mean α̂ and X^β of the
+    /// currently serving clients, falling back to the global prior
+    /// `(0.5, 1.0)` when the set is empty. A newcomer seeded with this
+    /// starts from what the cluster has already learned about its
+    /// population instead of the cold-start prior.
+    pub fn population_prior(&self, members: &[usize]) -> (f64, f64) {
+        if members.is_empty() {
+            return (0.5, 1.0);
+        }
+        let n = members.len() as f64;
+        let a = members.iter().map(|&i| self.alpha_hat[i]).sum::<f64>() / n;
+        let x = members.iter().map(|&i| self.x_beta[i]).sum::<f64>() / n;
+        (a, x)
+    }
+
+    /// Initialize a joining client's estimates from the population prior
+    /// of `members` (see [`Estimators::population_prior`]) with a fresh
+    /// observation clock — a decay schedule starts at η(1) for the
+    /// newcomer while its *level* starts at the population mean.
+    pub fn seed_from_population(&mut self, i: usize, members: &[usize]) {
+        let (a, x) = self.population_prior(members);
+        self.alpha_hat[i] = a.clamp(ALPHA_MIN, ALPHA_MAX);
+        self.x_beta[i] = x.max(1e-9);
+        self.t_client[i] = 0;
+    }
+
     /// Per-client observation count — the decay-schedule clock. A sharded
     /// pool hands this off on client migration so `Smoothing::Decay`
     /// continues from the client's real history instead of restarting at
@@ -180,6 +206,23 @@ mod tests {
         let mut other = fixed(2, 0.25, 0.5);
         other.set_observations(0, e.observations(0));
         assert_eq!(other.observations(0), 2);
+    }
+
+    #[test]
+    fn population_prior_and_seeding() {
+        let mut e = fixed(4, 0.5, 0.5);
+        e.update_round(&[Some((0.9, 5.0)), Some((0.5, 3.0)), None, None]);
+        let (a, x) = e.population_prior(&[0, 1]);
+        assert!((a - (e.alpha_hat[0] + e.alpha_hat[1]) / 2.0).abs() < 1e-12);
+        assert!((x - (e.x_beta[0] + e.x_beta[1]) / 2.0).abs() < 1e-12);
+        // Empty population falls back to the cold-start prior.
+        assert_eq!(e.population_prior(&[]), (0.5, 1.0));
+        // Seeding a newcomer adopts the level with a fresh decay clock.
+        e.set_observations(3, 7);
+        e.seed_from_population(3, &[0, 1]);
+        assert!((e.alpha_hat[3] - a).abs() < 1e-12);
+        assert!((e.x_beta[3] - x).abs() < 1e-12);
+        assert_eq!(e.observations(3), 0);
     }
 
     #[test]

@@ -21,8 +21,11 @@
 //! split — the analytic counterpart of
 //! [`run_pool`](crate::coordinator::run_pool).
 
-use crate::configsys::{CoordMode, Policy, Scenario, SpecShape};
+use crate::configsys::{
+    ChurnEvent, ChurnKind, ClientSpec, CoordMode, Policy, Scenario, SpecShape,
+};
 use crate::coordinator::{RoundCore, WaveObs};
+use crate::metrics::recorder::MembershipEvent;
 use crate::metrics::recorder::Recorder;
 use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
 use crate::sched::baselines::Allocator;
@@ -138,6 +141,15 @@ pub struct AnalyticSim {
     /// Clients this simulator instance drives (all of them outside sharded
     /// mode; one shard's subset under [`run_sharded`]). Always ascending.
     members: Vec<usize>,
+    /// Scheduled churn (sorted by wave) and the application cursor — the
+    /// same events the live cluster applies at the same wave boundaries.
+    schedule: Vec<ChurnEvent>,
+    schedule_cursor: usize,
+    /// Slot the next scheduled join admits into (the live cluster's
+    /// first-empty-slot discipline: initial clients, then join order).
+    next_join_slot: usize,
+    /// Membership epoch (bumps on every join/retire, like the live side).
+    epoch: u64,
     round: u64,
     /// Per-client round-trip time (uplink with q payload + verdict
     /// downlink), from the scenario's links.
@@ -149,26 +161,47 @@ pub struct AnalyticSim {
 }
 
 impl AnalyticSim {
+    /// Build a [`SimClient`] from an admission spec.
+    fn sim_client(spec: &ClientSpec, scenario: &Scenario) -> SimClient {
+        let d = DOMAINS.iter().find(|x| **x == spec.domain).copied().expect("domain");
+        SimClient {
+            primary_domain: d,
+            current_domain: d,
+            quality: model_quality(&spec.model),
+            stickiness: scenario.domain_stickiness,
+            remaining: scenario.max_new_tokens,
+            max_new_tokens: scenario.max_new_tokens,
+        }
+    }
+
+    /// A simulator for the scenario, including its churn schedule: slots
+    /// for every scheduled join are pre-built (the same slot-id discipline
+    /// as the live cluster), and [`AnalyticSim::run`] applies the events
+    /// at the same wave boundaries.
     pub fn from_scenario(scenario: &Scenario, policy: Policy) -> AnalyticSim {
         let cfg = SimConfig::from_scenario(scenario);
-        let clients = (0..scenario.num_clients)
+        let mut clients: Vec<SimClient> = (0..scenario.num_clients)
             .map(|i| {
-                let d = DOMAINS
-                    .iter()
-                    .find(|x| **x == scenario.domain(i))
-                    .copied()
-                    .expect("domain");
-                SimClient {
-                    primary_domain: d,
-                    current_domain: d,
-                    quality: model_quality(scenario.draft_model(i)),
-                    stickiness: scenario.domain_stickiness,
-                    remaining: scenario.max_new_tokens,
-                    max_new_tokens: scenario.max_new_tokens,
-                }
+                Self::sim_client(
+                    &ClientSpec {
+                        model: scenario.draft_model(i).to_string(),
+                        domain: scenario.domain(i).to_string(),
+                        link: scenario.link(i),
+                    },
+                    scenario,
+                )
             })
             .collect();
-        Self::new(cfg, clients, scenario, policy)
+        let mut links: Vec<crate::configsys::LinkConfig> =
+            (0..scenario.num_clients).map(|i| scenario.link(i)).collect();
+        let schedule = scenario.churn.sorted();
+        for ev in &schedule {
+            if let ChurnKind::Join(spec) = &ev.kind {
+                clients.push(Self::sim_client(spec, scenario));
+                links.push(spec.link.clone());
+            }
+        }
+        Self::with_links(cfg, clients, links, scenario, policy, schedule)
     }
 
     pub fn new(
@@ -177,10 +210,25 @@ impl AnalyticSim {
         scenario: &Scenario,
         policy: Policy,
     ) -> AnalyticSim {
-        let n = clients.len();
+        let links = (0..clients.len()).map(|i| scenario.link(i)).collect();
+        Self::with_links(cfg, clients, links, scenario, policy, Vec::new())
+    }
+
+    fn with_links(
+        cfg: SimConfig,
+        clients: Vec<SimClient>,
+        links: Vec<crate::configsys::LinkConfig>,
+        scenario: &Scenario,
+        policy: Policy,
+        schedule: Vec<ChurnEvent>,
+    ) -> AnalyticSim {
+        // Slot universe = initial clients + one slot per scheduled join;
+        // only the initial clients start as members.
+        let slots = clients.len();
+        let n = scenario.num_clients.min(slots);
         let initial = (cfg.capacity / n.max(1)).min(cfg.max_draft);
-        let core = RoundCore::new(
-            n,
+        let mut core = RoundCore::new(
+            slots,
             scenario.eta,
             scenario.beta,
             policy,
@@ -188,24 +236,33 @@ impl AnalyticSim {
             cfg.capacity,
             initial,
         );
-        // RTT from the scenario links: uplink carries the q payload (the
+        for i in n..slots {
+            core.set_member(i, false);
+            core.set_outstanding(i, 0);
+        }
+        // RTT from the per-slot links: uplink carries the q payload (the
         // dominant term), downlink the tiny verdict.
         let up_bytes = draft_msg_bytes(64, cfg.max_draft, 256);
-        let rtt_s: Vec<f64> = (0..n)
-            .map(|i| {
-                let l = Link::new(scenario.link(i));
+        let rtt_s: Vec<f64> = links
+            .iter()
+            .map(|link| {
+                let l = Link::new(link.clone());
                 l.mean_delay(up_bytes).as_secs_f64()
                     + l.mean_delay(verdict_msg_bytes()).as_secs_f64()
             })
             .collect();
-        let ready_at: Vec<f64> = (0..n)
+        let ready_at: Vec<f64> = (0..slots)
             .map(|i| rtt_s[i] + cfg.draft_token_s * initial as f64)
             .collect();
         AnalyticSim {
             rng: Rng::new(cfg.seed ^ 0xAAA),
-            alloc: vec![initial; n],
+            alloc: vec![initial; slots],
             core,
             members: (0..n).collect(),
+            schedule,
+            schedule_cursor: 0,
+            next_join_slot: n,
+            epoch: 0,
             clients,
             cfg,
             round: 0,
@@ -218,6 +275,11 @@ impl AnalyticSim {
     /// Virtual seconds elapsed (both modes advance it).
     pub fn virtual_time(&self) -> f64 {
         self.clock
+    }
+
+    /// Membership epoch (0 until the first churn event applies).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Per-client RTTs the wave model uses (test/inspection hook).
@@ -457,20 +519,99 @@ impl AnalyticSim {
         obs.iter().map(|o| (o.client_id, o.goodput)).collect()
     }
 
+    /// Apply churn events due at the current wave boundary — the same
+    /// admit/drain rules the live cluster runs ([`RoundCore::admit_member`]
+    /// + population-prior estimator seeding; drains grant 0 and retire
+    /// after their final wave). With an empty membership, pending events
+    /// fire immediately (no waves can pass to reach them otherwise).
+    fn churn_boundary(&mut self) {
+        loop {
+            let due = self.schedule_cursor < self.schedule.len()
+                && (self.schedule[self.schedule_cursor].at_wave <= self.round
+                    || self.members.is_empty());
+            if !due {
+                break;
+            }
+            let ev = self.schedule[self.schedule_cursor].clone();
+            self.schedule_cursor += 1;
+            match ev.kind {
+                ChurnKind::Join(_) => {
+                    // Slot ids follow the join order: initial clients,
+                    // then one slot per join event (pre-built).
+                    let slot = self.next_join_slot;
+                    self.next_join_slot += 1;
+                    self.core.estimators.seed_from_population(slot, &self.members);
+                    let grant = self.core.admit_member(slot, self.cfg.max_draft);
+                    self.alloc[slot] = grant;
+                    self.ready_at[slot] = self.clock
+                        + self.rtt_s[slot]
+                        + self.cfg.draft_token_s * grant as f64;
+                    self.members.push(slot);
+                    self.members.sort_unstable();
+                    self.epoch += 1;
+                    self.core.recorder.note_membership(MembershipEvent {
+                        wave: self.round,
+                        epoch: self.epoch,
+                        joined: vec![(slot, grant)],
+                        left: vec![],
+                        members: self.members.clone(),
+                    });
+                }
+                ChurnKind::Leave(id) => {
+                    if self.members.contains(&id) {
+                        self.core.set_draining(id, true);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Retire any draining participants of the wave that just ran (their
+    /// final verdict has been delivered — the live drain semantics).
+    fn retire_drained(&mut self, participants: &[usize]) {
+        for &id in participants {
+            if self.core.is_draining(id) {
+                self.core.retire_member(id);
+                self.members.retain(|&m| m != id);
+                self.epoch += 1;
+                self.core.recorder.note_membership(MembershipEvent {
+                    wave: self.round,
+                    epoch: self.epoch,
+                    joined: vec![],
+                    left: vec![id],
+                    members: self.members.clone(),
+                });
+            }
+        }
+    }
+
     /// Run the configured workload: `rounds` barrier rounds in sync mode,
-    /// or waves until the same total verification budget
-    /// (`rounds × |members|` client-rounds) is consumed in async mode.
+    /// or waves until the same total verification budget (`rounds ×
+    /// |initial members|` client-rounds) is consumed in async mode.
+    /// Scheduled churn is applied at wave boundaries either way.
     pub fn run(&mut self) {
         match self.cfg.mode {
             CoordMode::Sync => {
                 for _ in 0..self.cfg.rounds {
+                    self.churn_boundary();
+                    if self.members.is_empty() {
+                        break;
+                    }
+                    let members = self.members.clone();
                     self.step();
+                    self.retire_drained(&members);
                 }
             }
             CoordMode::Async => {
                 let budget = self.cfg.rounds * self.members.len() as u64;
                 while self.recorder().participation().iter().sum::<u64>() < budget {
-                    self.step_wave();
+                    self.churn_boundary();
+                    if self.members.is_empty() {
+                        break;
+                    }
+                    let wave: Vec<usize> =
+                        self.step_wave().into_iter().map(|(id, _)| id).collect();
+                    self.retire_drained(&wave);
                 }
             }
         }
@@ -802,6 +943,71 @@ mod tests {
         ch.run();
         assert!(
             ad.recorder().goodput_per_verdict() >= ch.recorder().goodput_per_verdict() * 0.98
+        );
+    }
+
+    /// Churn model: the `churn` preset's join and leave apply at their
+    /// wave boundaries, the joiner converges to a fair share, and the
+    /// reservation invariant Σ outstanding ≤ C survives every membership
+    /// change.
+    #[test]
+    fn churn_schedule_applies_at_wave_boundaries() {
+        let s = Scenario::preset("churn").unwrap();
+        let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        sim.run();
+        // Epochs: one join (wave 80) + one departure (wave 160).
+        assert_eq!(sim.epoch(), 2);
+        let events = &sim.recorder().membership;
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].joined.len(), 1);
+        assert_eq!(events[0].joined[0].0, 4, "joiner takes the first fresh slot");
+        assert_eq!(events[0].wave, 80);
+        assert_eq!(events[1].left, vec![1]);
+        // The departed client participates up to (and including) its
+        // drain wave, never after.
+        let part = sim.recorder().participation().to_vec();
+        assert!(part[1] > 0 && part[1] <= 162, "{part:?}");
+        // The joiner serves the back two-thirds of the run.
+        assert!(part[4] > 100, "{part:?}");
+        // Node budget respected on every wave, through both changes.
+        for r in &sim.recorder().rounds {
+            let used: usize = r.clients.iter().map(|c| c.s_used).sum();
+            assert!(used <= 24, "{used}");
+        }
+        // Fairness: the joiner's per-wave goodput lands near the
+        // survivors' (log-utility equalization).
+        let avg = sim.recorder().avg_goodput();
+        let survivors = [0usize, 2, 3];
+        let mean: f64 =
+            survivors.iter().map(|&i| avg[i]).sum::<f64>() / survivors.len() as f64;
+        assert!(
+            (avg[4] - mean).abs() <= 0.35 * mean,
+            "joiner {:.2} vs survivors {:.2}",
+            avg[4],
+            mean
+        );
+    }
+
+    /// The joiner's estimators start from the population prior, not the
+    /// cold-start prior.
+    #[test]
+    fn joiner_seeds_from_population_prior() {
+        let mut s = Scenario::preset("churn").unwrap();
+        s.rounds = 81; // stop right after the join applies
+        let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        sim.run();
+        let est = sim.estimators();
+        // After 80 waves the resident population has moved well off 0.5;
+        // a cold-start joiner would sit exactly at 0.5 before its first
+        // wave — population seeding pulls it toward the residents.
+        let resident_mean: f64 =
+            [0usize, 1, 2, 3].iter().map(|&i| est.alpha_hat[i]).sum::<f64>() / 4.0;
+        assert!((resident_mean - 0.5).abs() > 0.05, "residents must have learned");
+        assert!(
+            (est.alpha_hat[4] - resident_mean).abs() < 0.2,
+            "joiner α̂ {:.3} should start near the population {:.3}",
+            est.alpha_hat[4],
+            resident_mean
         );
     }
 

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use goodspeed::configsys::{CoordMode, Policy, Scenario, Smoothing};
-use goodspeed::coordinator::{run_serving, RunConfig, Transport};
+use goodspeed::coordinator::{Cluster, Transport};
 use goodspeed::runtime::{EngineFactory, MockEngineFactory, MockWorld};
 use goodspeed::sched::utility::LogUtility;
 
@@ -23,8 +23,15 @@ fn scenario(clients: usize, rounds: u64, capacity: usize) -> Scenario {
 }
 
 fn run(s: Scenario, policy: Policy, transport: Transport, network: bool) -> goodspeed::coordinator::RunOutcome {
-    let cfg = RunConfig { scenario: s, policy, transport, simulate_network: network };
-    run_serving(&cfg, factory(64, 256)).expect("run")
+    Cluster::builder(s)
+        .policy(policy)
+        .transport(transport)
+        .simulate_network(network)
+        .engine(factory(64, 256))
+        .start()
+        .expect("start")
+        .wait()
+        .expect("run")
 }
 
 #[test]
@@ -106,13 +113,14 @@ fn tiny_context_models_complete_requests() {
     // max_seq 64 forces frequent request turnover + context clamping.
     let mut s = scenario(2, 50, 8);
     s.max_new_tokens = 10;
-    let cfg = RunConfig {
-        scenario: s,
-        policy: Policy::GoodSpeed,
-        transport: Transport::Channel,
-        simulate_network: false,
-    };
-    let out = run_serving(&cfg, factory(64, 64)).expect("run");
+    let out = Cluster::builder(s)
+        .policy(Policy::GoodSpeed)
+        .transport(Transport::Channel)
+        .engine(factory(64, 64))
+        .start()
+        .expect("start")
+        .wait()
+        .expect("run");
     let total: u64 = out.draft_stats.iter().map(|d| d.requests_completed).sum();
     assert!(total >= 4, "requests must cycle: {total}");
     // Allocation must respect the shrunken context room every round.

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use goodspeed::configsys::{Policy, Scenario};
-use goodspeed::coordinator::{run_serving, RunConfig, Transport};
+use goodspeed::coordinator::{Cluster, Transport};
 use goodspeed::experiments::quickstart::run_quickstart;
 use goodspeed::runtime::{default_artifacts_dir, EngineFactory, Manifest, XlaEngineFactory};
 
@@ -23,13 +23,14 @@ fn full_serving_run_on_trained_models() {
     let Some(f) = factory() else { return };
     let mut s = Scenario::preset("smoke").unwrap();
     s.rounds = 12;
-    let cfg = RunConfig {
-        scenario: s,
-        policy: Policy::GoodSpeed,
-        transport: Transport::Channel,
-        simulate_network: false,
-    };
-    let out = run_serving(&cfg, f).expect("run");
+    let out = Cluster::builder(s)
+        .policy(Policy::GoodSpeed)
+        .transport(Transport::Channel)
+        .engine(f)
+        .start()
+        .expect("start")
+        .wait()
+        .expect("run");
     assert_eq!(out.summary.rounds, 12);
     assert!(out.summary.total_tokens >= 24.0); // ≥ 1 token/client/round
     // Distilled drafts must show real acceptance (α̂ well above 0.2)…
@@ -153,12 +154,13 @@ fn llama_family_serves_too() {
     s.rounds = 6;
     s.capacity = 8;
     s.links = Scenario::default_links(2, s.seed);
-    let cfg = RunConfig {
-        scenario: s,
-        policy: Policy::FixedS,
-        transport: Transport::Channel,
-        simulate_network: false,
-    };
-    let out = run_serving(&cfg, f).expect("llama run");
+    let out = Cluster::builder(s)
+        .policy(Policy::FixedS)
+        .transport(Transport::Channel)
+        .engine(f)
+        .start()
+        .expect("start")
+        .wait()
+        .expect("llama run");
     assert_eq!(out.summary.rounds, 6);
 }
