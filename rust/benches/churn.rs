@@ -21,6 +21,8 @@ use goodspeed::metrics::recorder::Recorder;
 use goodspeed::simulate::analytic::AnalyticSim;
 use goodspeed::util::stats::jain_index;
 
+mod common;
+
 /// The churn shape scaled to `rounds`: join at rounds/3, leave client 1 at
 /// 2·rounds/3 (the preset's schedule, re-timed).
 fn scenario(rounds: u64) -> Scenario {
@@ -79,8 +81,7 @@ fn window_jain(rec: &Recorder, lo: u64, hi: u64, clients: &[usize]) -> f64 {
 
 fn main() {
     goodspeed::util::logger::init();
-    let quick = std::env::args().any(|a| a == "--quick");
-    let rounds = if quick { 90 } else { 240 };
+    let rounds = common::rounds(90, 240);
     let s = scenario(rounds);
     let joiner = s.num_clients; // first fresh slot
     println!(

@@ -1,0 +1,15 @@
+//! Shared bench-harness preamble.
+//!
+//! Every bench accepts `-- --quick` (the CI smoke shape: fewer rounds,
+//! same comparisons and assertions). This helper is the one copy of that
+//! argv convention; bench binaries include it with `mod common;`.
+
+/// Run length for this invocation: `quick` rounds when `--quick` is on
+/// the command line (the CI smoke), `full` otherwise.
+pub fn rounds(quick: u64, full: u64) -> u64 {
+    if std::env::args().any(|a| a == "--quick") {
+        quick
+    } else {
+        full
+    }
+}

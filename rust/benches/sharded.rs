@@ -12,6 +12,8 @@ use goodspeed::coordinator::{RunOutcome, Transport};
 use goodspeed::experiments::{mock_engine, serve_once};
 use goodspeed::util::stats::jain_index;
 
+mod common;
+
 fn run(m: usize, rounds: u64) -> RunOutcome {
     let mut s = Scenario::preset("sharded").expect("preset");
     s.num_verifiers = m;
@@ -35,8 +37,7 @@ fn report(out: &RunOutcome, m: usize) -> (f64, f64) {
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let rounds = if quick { 15 } else { 50 };
+    let rounds = common::rounds(15, 50);
     println!("== sharded bench: 8 clients / C = 32, {rounds} rounds/client budget ==");
     let mut results = Vec::new();
     for m in [1usize, 2, 4] {

@@ -13,6 +13,8 @@ use goodspeed::coordinator::{RunOutcome, Transport};
 use goodspeed::experiments::{mock_engine, serve_once};
 use goodspeed::util::stats::jain_index;
 
+mod common;
+
 fn run(mode: CoordMode, rounds: u64) -> RunOutcome {
     let mut s = Scenario::preset("straggler").expect("preset");
     s.rounds = rounds;
@@ -40,9 +42,7 @@ fn report(label: &str, out: &RunOutcome) -> (f64, f64) {
 }
 
 fn main() {
-    // `--quick` = the CI smoke shape (fewer rounds, same comparison).
-    let quick = std::env::args().any(|a| a == "--quick");
-    let rounds = if quick { 15 } else { 80 };
+    let rounds = common::rounds(15, 80);
     println!("== straggler bench: client 0 on a 10× slower uplink ({rounds} rounds/client budget) ==");
     let sync = run(CoordMode::Sync, rounds);
     let (sync_rate, sync_jain) = report("sync", &sync);

@@ -16,6 +16,8 @@ use goodspeed::experiments::{mock_engine, serve_once};
 use goodspeed::metrics::recorder::Recorder;
 use goodspeed::simulate::analytic::AnalyticSim;
 
+mod common;
+
 fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         0.0
@@ -61,9 +63,7 @@ fn report(label: &str, rec: &Recorder) -> f64 {
 }
 
 fn main() {
-    // `--quick` = the CI smoke shape (fewer rounds, same comparison).
-    let quick = std::env::args().any(|a| a == "--quick");
-    let rounds = if quick { 40 } else { 200 };
+    let rounds = common::rounds(40, 200);
     let tree_shape = SpecShape::Tree { arity: 2, depth: 8 };
     println!("== tree bench: binary profile vs chain at equal node budget ({rounds} rounds) ==");
 

@@ -5,6 +5,6 @@ pub mod scenario;
 
 pub use json::Value;
 pub use scenario::{
-    ChurnEvent, ChurnKind, ChurnSchedule, ClientSpec, CoordMode, LinkConfig, Policy, Scenario,
-    Smoothing, SpecShape,
+    ArrivalProcess, ChurnEvent, ChurnKind, ChurnSchedule, ClientSpec, CoordMode, LinkConfig,
+    Policy, Scenario, Smoothing, SpecShape, TraceConfig,
 };

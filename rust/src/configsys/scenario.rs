@@ -13,7 +13,8 @@ use super::json::Value;
 use crate::error::ConfigError;
 use crate::workload::domains::DOMAINS;
 
-/// Scheduling policy under test (§IV-B2 baselines).
+/// Scheduling policy under test (§IV-B2 baselines, plus the SLO-aware
+/// closed-loop controller).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     /// The paper's gradient scheduling algorithm (GOODSPEED-SCHED).
@@ -22,6 +23,15 @@ pub enum Policy {
     FixedS,
     /// Random split of the budget across clients.
     RandomS,
+    /// The gradient allocator under the TurboSpec-style closed-loop
+    /// speculation controller (`sched::controller::TurboController`):
+    /// per-client speculation caps shrink when a client is ahead of its
+    /// deadline while the verifier is congested, and grow while accept
+    /// rates are high — optimizing *SLO-goodput* instead of raw goodput.
+    /// Meaningful with a request trace (`Scenario::trace`); without one
+    /// every client reads as deadline-free and the caps stay open, so
+    /// turbo degrades to the plain gradient policy.
+    Turbo,
 }
 
 impl FromStr for Policy {
@@ -32,10 +42,11 @@ impl FromStr for Policy {
             "goodspeed" | "gs" => Ok(Policy::GoodSpeed),
             "fixed" | "fixed-s" | "fixeds" => Ok(Policy::FixedS),
             "random" | "random-s" | "randoms" => Ok(Policy::RandomS),
+            "turbo" | "turbo-spec" | "turbospec" => Ok(Policy::Turbo),
             _ => Err(ConfigError::InvalidChoice {
                 field: "policy",
                 given: s.to_string(),
-                expected: &["goodspeed", "fixed-s", "random-s"],
+                expected: &["goodspeed", "fixed-s", "random-s", "turbo"],
             }),
         }
     }
@@ -47,9 +58,13 @@ impl Policy {
             Policy::GoodSpeed => "goodspeed",
             Policy::FixedS => "fixed-s",
             Policy::RandomS => "random-s",
+            Policy::Turbo => "turbo",
         }
     }
 
+    /// The paper's three policies (Fig 3/4 and Table I sweep these; the
+    /// SLO-aware [`Policy::Turbo`] is benchmarked separately against
+    /// GoodSpeed in `benches/slo.rs`).
     pub fn all() -> [Policy; 3] {
         [Policy::GoodSpeed, Policy::FixedS, Policy::RandomS]
     }
@@ -263,6 +278,99 @@ impl ChurnSchedule {
     }
 }
 
+/// Per-client request arrival process of a trace-driven run (the
+/// open-loop side of `serve/`: requests *arrive*, queue, decode, and
+/// finish, instead of the default closed loop that always has the next
+/// prompt ready). All generators are deterministic from the scenario
+/// seed; arrival times are in *waves* — the same virtual clock
+/// [`ChurnEvent::at_wave`] uses, shared by the live cluster and the
+/// analytic simulator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Open-loop Poisson arrivals: i.i.d. exponential inter-arrival gaps
+    /// with the given mean, in waves.
+    Poisson { mean_gap: f64 },
+    /// Bursty arrivals: Poisson-spaced bursts (mean gap in waves) of
+    /// `burst` back-to-back requests each.
+    Bursty { mean_gap: f64, burst: usize },
+    /// Explicit per-client arrival schedule loaded from a JSON trace file
+    /// (see `serve::trace::RequestTrace::from_file` for the format).
+    File(String),
+}
+
+impl FromStr for ArrivalProcess {
+    type Err = ConfigError;
+
+    /// Parse `poisson:<mean_gap>` or `bursty:<mean_gap>x<burst>` (waves).
+    /// File traces are selected with `goodspeed run --trace <path>`, not
+    /// through this parser.
+    fn from_str(s: &str) -> Result<ArrivalProcess, ConfigError> {
+        let reject = || ConfigError::InvalidChoice {
+            field: "arrival process",
+            given: s.to_string(),
+            expected: &["poisson:<mean_gap>", "bursty:<mean_gap>x<burst>"],
+        };
+        let lower = s.to_ascii_lowercase();
+        if let Some(gap) = lower.strip_prefix("poisson:") {
+            return Ok(ArrivalProcess::Poisson { mean_gap: gap.parse().map_err(|_| reject())? });
+        }
+        let spec = lower.strip_prefix("bursty:").ok_or_else(reject)?;
+        let (gap, burst) = spec.split_once('x').ok_or_else(reject)?;
+        Ok(ArrivalProcess::Bursty {
+            mean_gap: gap.parse().map_err(|_| reject())?,
+            burst: burst.parse().map_err(|_| reject())?,
+        })
+    }
+}
+
+impl ArrivalProcess {
+    /// Canonical string form (generators round-trip through [`FromStr`]).
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalProcess::Poisson { mean_gap } => format!("poisson:{mean_gap}"),
+            ArrivalProcess::Bursty { mean_gap, burst } => format!("bursty:{mean_gap}x{burst}"),
+            ArrivalProcess::File(path) => format!("file:{path}"),
+        }
+    }
+}
+
+/// Request-level serving configuration: when present, the run is
+/// *trace-driven* — discrete requests arrive per client, idle clients'
+/// budget water-fills over busy ones, and per-request TTFT/TPOT/E2E and
+/// SLO attainment are accounted end to end (see `serve/`). `None` keeps
+/// the endless-stream behavior (and output) of the pre-trace stack
+/// bit for bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// How requests arrive at each client.
+    pub arrival: ArrivalProcess,
+    /// Per-request deadline, in waves from arrival (the SLO). A request
+    /// completing within `slo_waves` of its arrival counts toward
+    /// SLO-goodput; one that misses keeps its raw-goodput tokens but
+    /// contributes nothing to the SLO series.
+    pub slo_waves: u64,
+    /// Target output tokens per generated request (file traces carry
+    /// their own per-request lengths).
+    pub output_tokens: usize,
+    /// Open-loop requests generated per client (ignored for file traces).
+    pub requests_per_client: usize,
+}
+
+impl TraceConfig {
+    /// A Poisson trace with the standard smoke-scale knobs (24-token
+    /// requests, six per client) — the single source of the defaults the
+    /// `trace` preset and the `goodspeed run --arrival/--slo` flags
+    /// share.
+    pub fn poisson(mean_gap: f64, slo_waves: u64) -> TraceConfig {
+        TraceConfig {
+            arrival: ArrivalProcess::Poisson { mean_gap },
+            slo_waves,
+            output_tokens: 24,
+            requests_per_client: 6,
+        }
+    }
+}
+
 /// Smoothing-parameter schedule (Assumption 3 allows decaying steps).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Smoothing {
@@ -332,6 +440,10 @@ pub struct Scenario {
     /// Scheduled client arrivals/departures (empty = static membership,
     /// which reproduces the pre-churn stack bit-for-bit).
     pub churn: ChurnSchedule,
+    /// Request-level serving: per-client arrival processes, deadlines,
+    /// and SLO accounting (`None` = the classic endless-stream run,
+    /// bit-identical to the pre-trace stack).
+    pub trace: Option<TraceConfig>,
 }
 
 impl Scenario {
@@ -396,6 +508,49 @@ impl Scenario {
         }
         if self.num_verifiers > self.num_clients {
             return err("num_verifiers must be <= num_clients".into());
+        }
+        // Trace-driven runs: the request tracker's virtual clock is the
+        // single coordinator's wave counter; per-shard wave clocks make
+        // per-request attribution ambiguous, so the pool is rejected up
+        // front (the same style of guard pooled scenarios used to get
+        // from the single-verifier runner).
+        if let Some(trace) = &self.trace {
+            if self.num_verifiers > 1 {
+                return err(format!(
+                    "trace-driven serving requires num_verifiers = 1 (got {}); \
+                     request SLO accounting needs one coordinator wave clock",
+                    self.num_verifiers
+                ));
+            }
+            if trace.slo_waves == 0 {
+                return err("trace: slo_waves must be > 0".into());
+            }
+            match trace.arrival {
+                ArrivalProcess::Poisson { mean_gap } => {
+                    let ok = mean_gap.is_finite() && mean_gap > 0.0;
+                    if !ok {
+                        return err("trace: poisson mean_gap must be > 0".into());
+                    }
+                }
+                ArrivalProcess::Bursty { mean_gap, burst } => {
+                    let ok = mean_gap.is_finite() && mean_gap > 0.0;
+                    if !ok {
+                        return err("trace: bursty mean_gap must be > 0".into());
+                    }
+                    if burst == 0 {
+                        return err("trace: bursty burst must be ≥ 1".into());
+                    }
+                }
+                ArrivalProcess::File(_) => {}
+            }
+            if !matches!(trace.arrival, ArrivalProcess::File(_)) {
+                if trace.output_tokens == 0 {
+                    return err("trace: output_tokens must be > 0".into());
+                }
+                if trace.requests_per_client == 0 {
+                    return err("trace: requests_per_client must be > 0".into());
+                }
+            }
         }
         // Churn schedule: joins must name known domains, leaves must name
         // client ids that exist by the time the event fires (ids are
@@ -478,6 +633,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
+                trace: None,
             },
             // Table I row 2: Qwen3-14B / 0.6B+1.7B, C ∈ {16,20}, 8 clients, 150 tok
             "qwen-8c-150" => Scenario {
@@ -502,6 +658,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
+                trace: None,
             },
             // Table I row 3: Llama-70B / 1B+3B, C ∈ {16,20}, 8 clients, 150 tok
             "llama-8c-150" => Scenario {
@@ -526,6 +683,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
+                trace: None,
             },
             // Fast preset for tests and smoke runs.
             "smoke" => Scenario {
@@ -550,6 +708,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
+                trace: None,
             },
             // Straggler study: one client with a 10× slower uplink. In sync
             // mode every round stalls on that link; async mode lets the
@@ -582,6 +741,7 @@ impl Scenario {
                     shard_rebalance_every: 0,
                     spec_shape: SpecShape::Chain,
                     churn: ChurnSchedule::default(),
+                    trace: None,
                 }
             }
             // Sharded-pool scale-up study: 8 heterogeneous clients whose
@@ -620,6 +780,7 @@ impl Scenario {
                     shard_rebalance_every: 16,
                     spec_shape: SpecShape::Chain,
                     churn: ChurnSchedule::default(),
+                    trace: None,
                 }
             }
             // Tree-speculation study: four clients drafting with the weak
@@ -649,6 +810,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Tree { arity: 2, depth: 8 },
                 churn: ChurnSchedule::default(),
+                trace: None,
             },
             // Dynamic-membership study: four resident clients, one extra
             // client joining a third of the way through the run, and one
@@ -678,6 +840,7 @@ impl Scenario {
                     shard_rebalance_every: 0,
                     spec_shape: SpecShape::Chain,
                     churn: ChurnSchedule::default(),
+                    trace: None,
                 };
                 s.churn = ChurnSchedule {
                     events: vec![
@@ -690,6 +853,39 @@ impl Scenario {
                 };
                 s
             }
+            // Request-level serving study: four clients with heterogeneous
+            // acceptance rates (alpaca is easy for the draft, hle is the
+            // long tail), open-loop Poisson arrivals, and a per-request
+            // deadline. The run answers "how many of these users finish
+            // within their SLO" — raw goodput alone cannot (see serve/).
+            "trace" => Scenario {
+                id: id.into(),
+                family: "qwen".into(),
+                num_clients: 4,
+                capacity: 16,
+                max_new_tokens: 40,
+                draft_models: vec!["qwen-draft-06b".into()],
+                domains: vec!["alpaca".into(), "cnn".into(), "gsm8k".into(), "hle".into()],
+                domain_stickiness: 0.95,
+                eta: Smoothing::Fixed(0.3),
+                beta: Smoothing::Fixed(0.5),
+                max_draft: 16,
+                rounds: 240,
+                seed,
+                links: Scenario::default_links(4, seed),
+                coord_mode: CoordMode::Sync,
+                batch_window_us: 500,
+                min_wave_fill: 0,
+                num_verifiers: 1,
+                shard_rebalance_every: 0,
+                spec_shape: SpecShape::Chain,
+                churn: ChurnSchedule::default(),
+                // Mean inter-arrival 28 waves vs ≈ 12–19-wave service
+                // times: moderate utilization, so deadlines are met by
+                // scheduling rather than luck, and all six requests per
+                // client land well inside the 240-wave run.
+                trace: Some(TraceConfig::poisson(28.0, 48)),
+            },
             _ => return None,
         };
         s.validate().expect("preset must validate");
@@ -699,7 +895,7 @@ impl Scenario {
         Some(s)
     }
 
-    pub fn preset_ids() -> [&'static str; 8] {
+    pub fn preset_ids() -> [&'static str; 9] {
         [
             "qwen-4c-50",
             "qwen-8c-150",
@@ -709,6 +905,7 @@ impl Scenario {
             "sharded",
             "tree",
             "churn",
+            "trace",
         ]
     }
 
@@ -734,6 +931,18 @@ impl Scenario {
             ("shard_rebalance_every", Value::Num(self.shard_rebalance_every as f64)),
             ("spec_shape", Value::Str(self.spec_shape.label())),
             ("churn_events", Value::Num(self.churn.events.len() as f64)),
+            (
+                "trace",
+                match &self.trace {
+                    None => Value::Null,
+                    Some(t) => Value::from_pairs(vec![
+                        ("arrival", Value::Str(t.arrival.label())),
+                        ("slo_waves", Value::Num(t.slo_waves as f64)),
+                        ("output_tokens", Value::Num(t.output_tokens as f64)),
+                        ("requests_per_client", Value::Num(t.requests_per_client as f64)),
+                    ]),
+                },
+            ),
         ])
     }
 }
@@ -974,6 +1183,74 @@ mod tests {
         bad.churn.events.push(ChurnEvent { at_wave: 2, kind: ChurnKind::Leave(0) });
         let err = bad.validate().unwrap_err().to_string();
         assert!(err.contains("departs twice"), "{err}");
+    }
+
+    #[test]
+    fn trace_preset_and_validation() {
+        let t = Scenario::preset("trace").unwrap();
+        let trace = t.trace.clone().expect("trace preset carries a trace config");
+        assert_eq!(trace.arrival, ArrivalProcess::Poisson { mean_gap: 28.0 });
+        assert_eq!(trace.slo_waves, 48);
+        // Every other preset stays request-free so existing experiments
+        // reproduce bit-for-bit.
+        for id in Scenario::preset_ids() {
+            let p = Scenario::preset(id).unwrap();
+            if id != "trace" {
+                assert!(p.trace.is_none(), "{id}");
+            }
+        }
+        // The pool has no single wave clock: trace + shards is rejected.
+        let mut bad = Scenario::preset("trace").unwrap();
+        bad.num_verifiers = 2;
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("num_verifiers = 1"), "{err}");
+        // Degenerate knobs are rejected.
+        let mut bad = Scenario::preset("trace").unwrap();
+        bad.trace.as_mut().unwrap().slo_waves = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = Scenario::preset("trace").unwrap();
+        bad.trace.as_mut().unwrap().arrival = ArrivalProcess::Poisson { mean_gap: 0.0 };
+        assert!(bad.validate().is_err());
+        let mut bad = Scenario::preset("trace").unwrap();
+        bad.trace.as_mut().unwrap().arrival = ArrivalProcess::Bursty { mean_gap: 4.0, burst: 0 };
+        assert!(bad.validate().is_err());
+        let mut bad = Scenario::preset("trace").unwrap();
+        bad.trace.as_mut().unwrap().output_tokens = 0;
+        assert!(bad.validate().is_err());
+        // File traces skip the generator-knob checks.
+        let mut ok = Scenario::preset("trace").unwrap();
+        let t = ok.trace.as_mut().unwrap();
+        t.arrival = ArrivalProcess::File("trace.json".into());
+        t.output_tokens = 0;
+        t.requests_per_client = 0;
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn arrival_process_parse_label_roundtrip() {
+        assert_eq!("poisson:12.5".parse(), Ok(ArrivalProcess::Poisson { mean_gap: 12.5 }));
+        assert_eq!("Bursty:8x3".parse(), Ok(ArrivalProcess::Bursty { mean_gap: 8.0, burst: 3 }));
+        assert!("poisson".parse::<ArrivalProcess>().is_err());
+        assert!("bursty:8".parse::<ArrivalProcess>().is_err());
+        let err = "closed".parse::<ArrivalProcess>().unwrap_err().to_string();
+        assert!(err.contains("poisson:<mean_gap>"), "{err}");
+        for a in [
+            ArrivalProcess::Poisson { mean_gap: 20.0 },
+            ArrivalProcess::Bursty { mean_gap: 6.0, burst: 4 },
+        ] {
+            assert_eq!(a.label().parse(), Ok(a));
+        }
+    }
+
+    #[test]
+    fn turbo_policy_parse_and_name() {
+        assert_eq!("turbo".parse(), Ok(Policy::Turbo));
+        assert_eq!("TurboSpec".parse(), Ok(Policy::Turbo));
+        assert_eq!(Policy::Turbo.name(), "turbo");
+        // The paper sweep stays the paper's three policies.
+        assert!(!Policy::all().contains(&Policy::Turbo));
+        let err = "zzz".parse::<Policy>().unwrap_err().to_string();
+        assert!(err.contains("turbo"), "typo help must list turbo: {err}");
     }
 
     #[test]

@@ -43,10 +43,11 @@
 //!
 //! **Static parity.** A cluster whose scenario has no churn schedule (and
 //! no external attach/detach) executes the exact call sequence of the
-//! pre-redesign `run_serving` path: same transport setup, same per-client
-//! RNG forks, same wave order, same RNG streams, same records. The
-//! deprecated [`run_serving`](super::run_serving) shim is nothing but
-//! `builder → start → wait`.
+//! pre-redesign `run_serving` batch runner: same transport setup, same
+//! per-client RNG forks, same wave order, same RNG streams, same records.
+//! (That deprecated shim — literally `builder → start → wait` — was
+//! removed once every caller migrated; the parity pin lives in
+//! `tests/churn_cluster.rs`.)
 //!
 //! `num_verifiers > 1` scenarios run the sharded pool
 //! ([`super::pool`]) under the same handle; a joining client is routed to
@@ -67,6 +68,7 @@ use crate::metrics::recorder::{MembershipEvent, Recorder};
 use crate::net::transport::{channel_transport, ClientPort, ServerSide, TcpTransport};
 use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, PROTOCOL_VERSION};
 use crate::runtime::EngineFactory;
+use crate::serve::{RequestTrace, RequestTracker};
 use crate::util::{Rng, Stopwatch};
 use crate::workload::DomainStream;
 
@@ -330,7 +332,7 @@ impl ServingHandle {
     }
 
     /// Wait for the scenario's budget to complete and collect the run
-    /// (the deprecated `run_serving` shim is `start()` + `wait()`).
+    /// (a classic one-shot batch run is `start()` + `wait()`).
     pub fn wait(mut self) -> Result<RunOutcome> {
         self.join_thread()
     }
@@ -386,6 +388,12 @@ struct ClusterEngine {
     expected_round: Vec<u64>,
     handles: Vec<Option<JoinHandle<Result<DraftStats>>>>,
     latency: LatencyTracker,
+    /// Request-level serving overlay (`Scenario::trace`): per-client
+    /// arrival queues, idle masking, and TTFT/TPOT/E2E + SLO accounting.
+    /// `None` keeps the classic endless-stream run untouched.
+    tracker: Option<RequestTracker>,
+    /// Wave counter at loop exit (the tracker's book-closing clock).
+    final_wave: u64,
     /// Root RNG the per-client domain streams fork from, in slot order —
     /// the same stream discipline the batch runner used.
     root_rng: Rng,
@@ -431,6 +439,12 @@ impl ClusterEngine {
             leader.core.set_outstanding(i, 0);
         }
 
+        let tracker = if scenario.trace.is_some() {
+            let trace = RequestTrace::from_scenario(&scenario, slots)?;
+            Some(RequestTracker::new(trace, slots))
+        } else {
+            None
+        };
         let mut engine = ClusterEngine {
             simulate_network: cfg.simulate_network,
             factory,
@@ -441,6 +455,8 @@ impl ClusterEngine {
             expected_round: vec![0; slots],
             handles: (0..slots).map(|_| None).collect(),
             latency: LatencyTracker::new(slots),
+            tracker,
+            final_wave: 0,
             root_rng: Rng::new(scenario.seed),
             ctl_rx,
             schedule: scenario.churn.sorted(),
@@ -585,8 +601,13 @@ impl ClusterEngine {
     }
 
     /// Complete a drain after the client's final verdict: send the Leave
-    /// frame, retire the membership, archive the stats.
+    /// frame, retire the membership, archive the stats. Any trace
+    /// requests still queued for the departed session are censored — a
+    /// gone user's unserved arrivals are not scheduler misses.
     fn retire(&mut self, id: ClientId, wave: u64) {
+        if let Some(tracker) = &mut self.tracker {
+            tracker.untrack(id, wave);
+        }
         self.epoch += 1;
         let _ = (self.server.txs[id])(&Message::Leave(LeaveMsg {
             client_id: id as u32,
@@ -727,6 +748,17 @@ impl ClusterEngine {
         loop_result?;
         let wall = run_start.elapsed().as_secs_f64();
 
+        // Close the request books: expired requests become recorded
+        // misses, still-pending ones are censored, and the per-request
+        // records + per-client SLO-goodput move into the recorder.
+        if let Some(mut tracker) = self.tracker.take() {
+            tracker.finish(self.final_wave);
+            let (requests, slo_goodput, censored) = tracker.into_report();
+            self.leader.core.recorder.requests = requests;
+            self.leader.core.recorder.slo_goodput = slo_goodput;
+            self.leader.core.recorder.requests_censored = censored;
+        }
+
         let mut draft_stats: Vec<DraftStats> = Vec::with_capacity(self.handles.len());
         for (i, slot) in self.handles.iter_mut().enumerate() {
             match slot.take() {
@@ -761,6 +793,12 @@ impl ClusterEngine {
                 }
                 std::thread::sleep(CTL_TICK);
                 continue;
+            }
+            // Request boundary: promote due arrivals, refresh the idle
+            // mask (idle members are granted 0 this wave), and publish
+            // SLO headroom to the turbo controller when one is running.
+            if let Some(tracker) = &mut self.tracker {
+                tracker.sync_wave_start(&mut self.leader.core, wave, &members);
             }
             let mut sw = Stopwatch::new();
             // 1. Receive: FIFO until every *current* member's batch for
@@ -835,6 +873,15 @@ impl ClusterEngine {
             self.leader.note_send_ns(sw.lap().as_nanos() as u64);
             self.delivered += verdicts.len() as u64;
 
+            // Attribute the wave's realized goodput to active requests.
+            if let Some(tracker) = &mut self.tracker {
+                let outcomes: Vec<(usize, usize)> = verdicts
+                    .iter()
+                    .map(|vd| (vd.client_id as usize, vd.accepted as usize + 1))
+                    .collect();
+                tracker.sync_wave_end(wave, &outcomes);
+            }
+
             // 4. Complete drains: the verdict just sent was the final one.
             let drained: Vec<usize> = verdicts
                 .iter()
@@ -846,6 +893,7 @@ impl ClusterEngine {
             }
             wave += 1;
         }
+        self.final_wave = wave;
         self.publish(wave);
         Ok(())
     }
@@ -904,6 +952,10 @@ impl ClusterEngine {
                 std::thread::sleep(CTL_TICK);
                 continue;
             }
+            // Request boundary (same rules as the sync barrier).
+            if let Some(tracker) = &mut self.tracker {
+                tracker.sync_wave_start(&mut self.leader.core, wave, &members);
+            }
             let mut sw = Stopwatch::new();
             // Phase 1 — wait for the wave's first draft.
             while pending_n == 0 {
@@ -953,6 +1005,15 @@ impl ClusterEngine {
             self.delivered += verdicts.len() as u64;
             self.leader.note_send_ns(sw.lap().as_nanos() as u64);
 
+            // Attribute the wave's realized goodput to active requests.
+            if let Some(tracker) = &mut self.tracker {
+                let outcomes: Vec<(usize, usize)> = verdicts
+                    .iter()
+                    .map(|vd| (vd.client_id as usize, vd.accepted as usize + 1))
+                    .collect();
+                tracker.sync_wave_end(wave, &outcomes);
+            }
+
             // Phase 6 — complete drains.
             let drained: Vec<usize> = verdicts
                 .iter()
@@ -964,6 +1025,7 @@ impl ClusterEngine {
             }
             wave += 1;
         }
+        self.final_wave = wave;
         self.publish(wave);
         Ok(())
     }

@@ -24,6 +24,7 @@
 use crate::configsys::{Policy, Smoothing};
 use crate::metrics::recorder::{ClientRoundMetrics, Recorder, RoundRecord};
 use crate::sched::baselines::{make_allocator, AllocCaps, Allocator};
+use crate::sched::controller::TurboController;
 use crate::sched::Estimators;
 use crate::spec::rejection::{verify_client, verify_tree, ClientVerdict, TreeVerdict};
 use crate::spec::tree::DraftTree;
@@ -76,6 +77,21 @@ pub struct RoundCore {
     /// in-flight draft is owed a verdict) but granted 0 on their final
     /// wave, so the freed budget water-fills over the survivors.
     draining: Vec<bool>,
+    /// Members with no active request right now (trace-driven runs).
+    /// Granted 0 — the drain grant rule without the retirement — so an
+    /// idle client's budget water-fills over busy ones; the flag clears
+    /// the moment its next request arrives. All-false outside trace mode.
+    idle: Vec<bool>,
+    /// Whether the client's *current in-flight draft* was granted 0
+    /// because it was idle. Set per wave from the idle mask; covers the
+    /// wake wave (idle already cleared, draft still the idle-era S = 0)
+    /// so its neutral ratio never reaches the estimators/controller.
+    /// All-false outside trace mode.
+    idle_grant: Vec<bool>,
+    /// The closed-loop speculation controller (`policy=turbo` only):
+    /// caps each client's next allocation from its SLO headroom,
+    /// observed acceptance, and verifier congestion.
+    turbo: Option<TurboController>,
     /// Shard id stamped onto emitted records (0 outside pooled mode).
     shard: usize,
     pub recorder: Recorder,
@@ -102,6 +118,11 @@ impl RoundCore {
             outstanding: vec![initial_alloc; n],
             member: vec![true; n],
             draining: vec![false; n],
+            idle: vec![false; n],
+            idle_grant: vec![false; n],
+            // Targets start fully open at C: with no deadline pressure the
+            // caps never bind and turbo is the plain gradient policy.
+            turbo: (policy == Policy::Turbo).then(|| TurboController::new(n, capacity)),
             shard: 0,
             recorder: Recorder::new(n),
         }
@@ -171,6 +192,42 @@ impl RoundCore {
         self.draining[client] = draining;
     }
 
+    /// Whether a client is idle (no active request; trace-driven runs).
+    pub fn is_idle(&self, client: usize) -> bool {
+        self.idle[client]
+    }
+
+    /// Mark a member idle/busy (the request tracker drives this at wave
+    /// boundaries). Idle members are granted 0 — the drain grant rule
+    /// without the retirement — so their budget water-fills over busy
+    /// clients until their next request arrives.
+    pub fn set_idle(&mut self, client: usize, idle: bool) {
+        self.idle[client] = idle;
+    }
+
+    /// Whether this core runs the closed-loop speculation controller
+    /// (`policy=turbo`).
+    pub fn turbo_enabled(&self) -> bool {
+        self.turbo.is_some()
+    }
+
+    /// The controller's current speculation cap for `client` (the full
+    /// budget when turbo is off — never binding).
+    pub fn turbo_cap(&self, client: usize) -> usize {
+        match &self.turbo {
+            Some(t) => t.cap(client),
+            None => self.capacity,
+        }
+    }
+
+    /// Publish a client's SLO headroom for the upcoming wave (from the
+    /// request tracker; no-op when turbo is off).
+    pub fn set_slo_headroom(&mut self, client: usize, headroom: f64) {
+        if let Some(t) = &mut self.turbo {
+            t.set_headroom(client, headroom);
+        }
+    }
+
     /// Admit a new member under the reservation invariant: the grant is
     /// the uniform share `C / (m + 1)` over the new member count, clamped
     /// to `max_draft` and to the budget not currently reserved by other
@@ -187,6 +244,8 @@ impl RoundCore {
         let grant = share.min(max_draft).min(self.capacity.saturating_sub(others));
         self.member[client] = true;
         self.draining[client] = false;
+        self.idle[client] = false;
+        self.idle_grant[client] = false;
         self.outstanding[client] = grant;
         grant
     }
@@ -197,6 +256,8 @@ impl RoundCore {
     pub fn retire_member(&mut self, client: usize) {
         self.member[client] = false;
         self.draining[client] = false;
+        self.idle[client] = false;
+        self.idle_grant[client] = false;
         self.outstanding[client] = 0;
     }
 
@@ -256,7 +317,20 @@ impl RoundCore {
         let mut max_per_client = vec![0usize; n];
         for o in obs {
             assert!(o.client_id < n, "client_id {} out of range ({n})", o.client_id);
-            dense[o.client_id] = Some((o.mean_ratio, o.goodput as f64));
+            // An idle-era zero-draft keep-alive wave is not an
+            // observation: S = 0 yields a neutral mean ratio of 1.0, and
+            // feeding that in every idle wave (including the wake wave,
+            // whose in-flight draft still carries the idle-era 0 grant)
+            // would drive α̂ toward the ceiling and X^β toward 1 while the
+            // client has no real work — corrupting both the gradient
+            // weights and turbo's headroom the moment it wakes. Idle
+            // clients' estimates stay frozen at their last busy value,
+            // like absent clients'.
+            dense[o.client_id] = if self.idle[o.client_id] || self.idle_grant[o.client_id] {
+                None
+            } else {
+                Some((o.mean_ratio, o.goodput as f64))
+            };
             in_wave[o.client_id] = true;
             // A non-member participant is a client that migrated away while
             // its draft was in flight here: its grant is reserved by the
@@ -264,14 +338,38 @@ impl RoundCore {
             // it more than that — otherwise the drained wave could exceed
             // the budget the other shard set aside for it. A draining
             // member gets 0: this wave delivers its final verdict, and its
-            // share water-fills over the surviving members.
-            max_per_client[o.client_id] = if self.draining[o.client_id] {
+            // share water-fills over the surviving members. An *idle*
+            // member (no active request; trace-driven runs) gets 0 by the
+            // same rule, but keeps its membership — the flag clears when
+            // its next request arrives.
+            let parked = self.draining[o.client_id] || self.idle[o.client_id];
+            max_per_client[o.client_id] = if parked {
                 0
             } else if self.member[o.client_id] {
                 o.max_next
             } else {
                 o.max_next.min(self.outstanding[o.client_id])
             };
+        }
+        // Closed-loop speculation control: one controller step per
+        // participant (headroom was published at the wave boundary), then
+        // the targets cap the allocation below. Congestion is the
+        // reserved-over-capacity fraction at this boundary: shedding only
+        // helps when the budget is actually scarce.
+        let congestion = self.reserved_total() as f64 / self.capacity.max(1) as f64;
+        if let Some(turbo) = &mut self.turbo {
+            for o in obs {
+                // Like the estimator skip above, an idle-era keep-alive
+                // wave is no controller signal: its neutral accept of 1.0
+                // and the idle-deflated congestion would regrow a shed cap
+                // across every idle gap. The cap freezes while idle; a
+                // tight new request reopens it via the behind branch.
+                if !self.idle[o.client_id] && !self.idle_grant[o.client_id] {
+                    turbo.observe(o.client_id, o.mean_ratio, congestion);
+                }
+                max_per_client[o.client_id] =
+                    max_per_client[o.client_id].min(turbo.cap(o.client_id));
+            }
         }
         self.estimators.update_round(&dense);
 
@@ -293,6 +391,10 @@ impl RoundCore {
         let mut next = Vec::with_capacity(obs.len());
         for o in obs {
             self.outstanding[o.client_id] = alloc[o.client_id];
+            // The grant this wave hands out is the draft the *next* wave
+            // verifies: remember whether it was an idle-masked 0 so that
+            // wave's neutral sample is skipped too (wake-wave coverage).
+            self.idle_grant[o.client_id] = self.idle[o.client_id];
             next.push(alloc[o.client_id]);
         }
         let clients = obs
@@ -504,6 +606,77 @@ mod tests {
         assert_eq!(va.accepted, vb.path.len());
         assert_eq!(va.correction, vb.correction);
         assert_eq!(va.goodput, vb.goodput);
+    }
+
+    #[test]
+    fn idle_member_granted_zero_budget_water_fills() {
+        let mut c = core(4, 16);
+        c.set_idle(1, true);
+        assert!(c.is_idle(1));
+        let wave: Vec<WaveObs> = (0..4).map(|i| obs(i, 2, 16)).collect();
+        let next = c.finish_wave(0, &wave, 0, 0);
+        assert_eq!(next[1], 0, "idle client must be granted 0: {next:?}");
+        // The idle client's share water-fills over the busy three.
+        assert_eq!(next[0] + next[2] + next[3], 16, "{next:?}");
+        // Unlike a drain, the slot stays a plain member and wakes up.
+        assert!(c.is_member(1) && !c.is_draining(1));
+        c.set_idle(1, false);
+        let next = c.finish_wave(1, &wave, 0, 0);
+        assert!(next[1] > 0, "woken client allocates again: {next:?}");
+    }
+
+    #[test]
+    fn turbo_without_deadlines_matches_goodspeed_exactly() {
+        // No headroom published ⇒ the caps never bind ⇒ turbo and the
+        // gradient policy produce identical allocation streams.
+        let mut gs = core(3, 12);
+        let mut tb = RoundCore::new(
+            3,
+            Smoothing::Fixed(0.3),
+            Smoothing::Fixed(0.5),
+            Policy::Turbo,
+            2025,
+            12,
+            4,
+        );
+        assert!(tb.turbo_enabled() && !gs.turbo_enabled());
+        assert_eq!(gs.turbo_cap(0), 12, "turbo-off cap is the full budget");
+        for wave in 0..20 {
+            let w: Vec<WaveObs> = (0..3).map(|i| obs(i, (wave as usize + i) % 3, 12)).collect();
+            let a = gs.finish_wave(wave, &w, 0, 0);
+            let b = tb.finish_wave(wave, &w, 0, 0);
+            assert_eq!(a, b, "wave {wave}");
+        }
+    }
+
+    #[test]
+    fn turbo_sheds_ahead_clients_toward_tight_ones_under_congestion() {
+        let mut c = RoundCore::new(
+            2,
+            Smoothing::Fixed(0.3),
+            Smoothing::Fixed(0.5),
+            Policy::Turbo,
+            2025,
+            8,
+            4,
+        );
+        // Client 0 far ahead of its deadline, client 1 behind; the
+        // reservation starts saturated (4 + 4 = 8 = C).
+        for wave in 0..30 {
+            c.set_slo_headroom(0, 4.0);
+            c.set_slo_headroom(1, -0.5);
+            let w: Vec<WaveObs> = (0..2).map(|i| obs(i, 2, 8)).collect();
+            let next = c.finish_wave(wave, &w, 0, 0);
+            assert!(next.iter().sum::<usize>() <= 8);
+            if wave > 20 {
+                assert!(
+                    next[1] > next[0],
+                    "wave {wave}: the tight client must out-allocate the ahead one: {next:?}"
+                );
+            }
+        }
+        assert!(c.turbo_cap(0) < 8, "ahead client's cap must have shrunk");
+        assert_eq!(c.turbo_cap(1), 8, "behind client stays fully open");
     }
 
     #[test]

@@ -24,7 +24,6 @@
 //! lifecycle", for the state machine.
 
 use std::str::FromStr;
-use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -274,43 +273,10 @@ pub struct RunOutcome {
     pub pool: Option<PoolReport>,
 }
 
-/// Full distributed run over a membership set frozen at construction.
-///
-/// Deprecated shim: the serving API is now session-oriented —
-/// [`Cluster::builder`](super::Cluster::builder) →
-/// [`ServingHandle`](super::ServingHandle). This function is exactly
-/// `builder → start → wait` (bit-identical to the historic batch runner:
-/// same transport setup, RNG streams, wave order, and records) and exists
-/// for callers that still think in one-shot runs.
-#[deprecated(
-    since = "0.2.0",
-    note = "use coordinator::Cluster::builder(scenario)…start() and drive the ServingHandle"
-)]
-pub fn run_serving(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<RunOutcome> {
-    let scenario = &cfg.scenario;
-    scenario.validate().map_err(|e| anyhow!("invalid scenario: {e}"))?;
-    if scenario.num_verifiers > 1 {
-        return Err(anyhow!(
-            "configuration error: num_verifiers = {} requires the sharded verifier \
-             pool — run it via `goodspeed run --verifiers {}` (which dispatches to \
-             coordinator::run_pool), or set num_verifiers = 1 for the single-verifier \
-             coordinator",
-            scenario.num_verifiers,
-            scenario.num_verifiers
-        ));
-    }
-    super::Cluster::builder(cfg.scenario.clone())
-        .policy(cfg.policy)
-        .transport(cfg.transport)
-        .simulate_network(cfg.simulate_network)
-        .engine(factory)
-        .start()?
-        .wait()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
     use crate::configsys::CoordMode;
     use crate::coordinator::Cluster;
     use crate::runtime::{MockEngineFactory, MockWorld};
@@ -591,57 +557,12 @@ mod tests {
         }
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn multi_verifier_scenario_is_a_configuration_error() {
-        // Satellite: the single-verifier shim must reject pooled scenarios
-        // with an actionable message, not a terse internal one.
-        let mut s = smoke_scenario(5, 4);
-        s.num_verifiers = 2;
-        let cfg = RunConfig {
-            scenario: s,
-            policy: Policy::GoodSpeed,
-            transport: Transport::Channel,
-            simulate_network: false,
-        };
-        let err = run_serving(&cfg, mock_factory()).unwrap_err().to_string();
-        assert!(err.contains("configuration error"), "{err}");
-        assert!(err.contains("goodspeed run --verifiers 2"), "{err}");
-        assert!(err.contains("num_verifiers = 2"), "{err}");
-    }
-
-    /// The acceptance pin: the deprecated `run_serving` shim and the
-    /// session API produce identical runs — same waves, same
-    /// RNG-determined fields, same draft-side accounting.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shim_matches_builder() {
-        let cfg = || RunConfig {
-            scenario: smoke_scenario(15, 2),
-            policy: Policy::GoodSpeed,
-            transport: Transport::Channel,
-            simulate_network: false,
-        };
-        let shim = run_serving(&cfg(), mock_factory()).unwrap();
-        let cluster = serve(cfg(), mock_factory()).unwrap();
-        assert!(shim.pool.is_none());
-        assert_eq!(shim.recorder.rounds.len(), cluster.recorder.rounds.len());
-        for (a, b) in shim.recorder.rounds.iter().zip(&cluster.recorder.rounds) {
-            assert_eq!(a.round, b.round);
-            for (ca, cb) in a.clients.iter().zip(&b.clients) {
-                assert_eq!(ca.client_id, cb.client_id);
-                assert_eq!(ca.s_used, cb.s_used);
-                assert_eq!(ca.accepted, cb.accepted);
-                assert_eq!(ca.goodput, cb.goodput);
-                assert_eq!(ca.next_alloc, cb.next_alloc);
-                assert!((ca.alpha_hat - cb.alpha_hat).abs() < 1e-15);
-            }
-        }
-        for (da, db) in shim.draft_stats.iter().zip(&cluster.draft_stats) {
-            assert_eq!(da.tokens_drafted, db.tokens_drafted);
-            assert_eq!(da.tokens_accepted, db.tokens_accepted);
-        }
-    }
+    // (The static-membership parity pin — independent builder runs
+    // bit-identical, including CSV bytes — lives in
+    // `tests/churn_cluster.rs::static_preset_runs_are_bit_identical_across_sessions`;
+    // `deterministic_given_seed` above covers the in-module determinism
+    // smoke. The deprecated `run_serving` shim this module used to pin
+    // against was exactly `builder → start → wait` and is gone.)
 
     #[test]
     fn tree_mode_full_run_respects_node_budget() {

@@ -10,6 +10,13 @@
 //! hierarchical proportional-fair budget split; [`cluster`] is the public
 //! session-oriented serving API (`Cluster::builder` → [`ServingHandle`])
 //! with epoch-stamped membership churn on top of either.
+//!
+//! Looking for the old one-shot entry point? The deprecated `run_serving`
+//! shim was removed once every caller migrated to the builder: a one-shot
+//! batch run is [`Cluster::builder`]`(scenario)…start()?.wait()` — the
+//! exact call sequence the shim performed, bit-identical to the historic
+//! batch runner on static-membership scenarios (pinned by the parity
+//! test in `tests/churn_cluster.rs`).
 
 pub mod batcher;
 pub mod cluster;
@@ -20,7 +27,5 @@ pub mod pool;
 pub use batcher::build_verify_request;
 pub use cluster::{ClientId, Cluster, ClusterBuilder, ClusterStats, ServingHandle};
 pub use self::core::{RoundCore, WaveObs};
-#[allow(deprecated)]
-pub use leader::run_serving;
 pub use leader::{Leader, PoolReport, RunConfig, RunOutcome, Transport};
 pub use pool::{run_pool, PoolOutcome};

@@ -777,6 +777,17 @@ pub(crate) fn run_pool_dynamic(
     if cfg.transport != Transport::Channel {
         return Err(fail("the sharded pool runs over the channel transport".into()));
     }
+    if scenario.trace.is_some() {
+        // Scenario::validate already rejects this pairing; keep the guard
+        // so a hand-built RunConfig cannot slip a trace into the pool,
+        // where per-shard wave clocks would make request attribution
+        // ambiguous.
+        return Err(fail(
+            "configuration error: trace-driven serving requires the single-verifier \
+             coordinator (num_verifiers = 1) — request SLO accounting needs one wave clock"
+                .into(),
+        ));
+    }
     let n = scenario.num_clients;
     let m = scenario.num_verifiers;
     assert!(slots >= n, "slots must cover the initial clients");

@@ -107,12 +107,15 @@ fn print_help() {
 USAGE: goodspeed <command> [options]
 
 COMMANDS
-  run        one serving run        --scenario <id> --policy <p> --rounds <n>
-                                    --transport channel|tcp --engine xla|mock
-                                    --capacity <C> --clients <n> --no-network
+  run        one serving run        --scenario|--preset <id> --policy <p>
+                                    --rounds <n> --transport channel|tcp
+                                    --engine xla|mock --capacity <C>
+                                    --clients <n> --no-network
                                     --mode sync|async --batch-window-us <µs>
                                     --min-wave-fill <n> --verifiers <m>
                                     --rebalance-every <waves> --churn
+                                    --trace <file.json> --slo <waves>
+                                    --arrival poisson:<gap>|bursty:<gap>x<burst>
   quickstart single client speculative vs autoregressive speedup
   fig2       goodput estimation fidelity (paper Fig 2)   --out results
   fig3       wall-time decomposition   (paper Fig 3)     --out results
@@ -122,6 +125,10 @@ COMMANDS
   ablation   eta/beta/C sweeps, greedy-vs-DP, buckets    --out results
 
 Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke, straggler,
-sharded, tree, churn."
+sharded, tree, churn, trace.
+
+Policies: goodspeed, fixed-s, random-s, turbo (SLO-aware closed-loop
+speculation control; pair with a trace, e.g. `run --preset trace --policy
+turbo`)."
     );
 }

@@ -10,9 +10,9 @@ use anyhow::{anyhow, Result};
 
 use super::engine_from_args;
 use crate::cli::Args;
-use crate::configsys::{ChurnSchedule, Policy, Scenario};
+use crate::configsys::{ArrivalProcess, ChurnSchedule, Policy, Scenario, TraceConfig};
 use crate::coordinator::{Cluster, Transport};
-use crate::metrics::csv::{write_membership, write_rounds};
+use crate::metrics::csv::{write_membership, write_requests, write_rounds, write_slo_summary};
 
 /// Regenerate the seeded links after a --clients/--seed override while
 /// preserving any preset-specific link (the `straggler` preset's defining
@@ -27,7 +27,12 @@ fn regen_links(s: &mut Scenario) {
 
 /// Build a scenario from CLI overrides.
 pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
-    let id = args.get_or("scenario", "qwen-8c-150");
+    // `--preset` is an alias for `--scenario` (the serving docs say
+    // "preset"); when both are given, `--scenario` wins.
+    let preset = args.get("preset").map(str::to_string);
+    let id = args.get("scenario").map(str::to_string).or(preset).unwrap_or_else(|| {
+        "qwen-8c-150".to_string()
+    });
     let mut s = Scenario::preset(&id)
         .ok_or_else(|| anyhow!("unknown scenario '{id}' ({:?})", Scenario::preset_ids()))?;
     if let Some(c) = args.get_parse::<usize>("capacity") {
@@ -79,6 +84,33 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
     if args.flag("churn") && s.churn.is_empty() {
         s.churn = ChurnSchedule::demo(&s);
     }
+    // Request-level serving knobs: `--trace <file.json>` loads an
+    // explicit schedule, `--arrival poisson:<gap>|bursty:<gap>x<burst>`
+    // selects a generator, `--slo <waves>` sets the per-request deadline.
+    // Any of them layers the trace preset's defaults onto scenarios that
+    // have no trace config of their own.
+    let trace_file = args.get("trace").map(str::to_string);
+    let arrival = args.get("arrival").map(str::to_string);
+    let slo = args.get_parse::<u64>("slo");
+    if trace_file.is_some() && (arrival.is_some() || slo.is_some()) {
+        return Err(anyhow!(
+            "--trace is mutually exclusive with --arrival/--slo (a trace file carries \
+             its own arrival schedule and per-request deadlines)"
+        ));
+    }
+    if trace_file.is_some() || arrival.is_some() || slo.is_some() {
+        let mut t = s.trace.take().unwrap_or_else(|| TraceConfig::poisson(28.0, 48));
+        if let Some(a) = arrival {
+            t.arrival = a.parse().map_err(|e| anyhow!("--arrival: {e}"))?;
+        }
+        if let Some(path) = trace_file {
+            t.arrival = ArrivalProcess::File(path);
+        }
+        if let Some(w) = slo {
+            t.slo_waves = w;
+        }
+        s.trace = Some(t);
+    }
     s.validate().map_err(|e| anyhow!("scenario: {e}"))?;
     Ok(s)
 }
@@ -98,14 +130,15 @@ pub fn main(args: &Args) -> Result<()> {
 
     log::info!(
         "run: scenario={} policy={} mode={} shape={} verifiers={} transport={transport:?} \
-         rounds={} churn-events={}",
+         rounds={} churn-events={} trace={}",
         scenario.id,
         policy.name(),
         scenario.coord_mode.name(),
         scenario.spec_shape.label(),
         scenario.num_verifiers,
         scenario.rounds,
-        scenario.churn.events.len()
+        scenario.churn.events.len(),
+        scenario.trace.as_ref().map(|t| t.arrival.label()).unwrap_or_else(|| "none".into())
     );
     let churned = !scenario.churn.is_empty();
     let handle = Cluster::builder(scenario.clone())
@@ -151,6 +184,37 @@ pub fn main(args: &Args) -> Result<()> {
             );
         }
     }
+    // Trace-driven runs: the request-level report — TTFT/TPOT/E2E
+    // percentiles, SLO attainment, and the SLO-goodput series next to
+    // the raw one.
+    if let Some(slo) = out.recorder.slo_summary() {
+        println!(
+            "  requests: {} completed, {} expired, {} censored   SLO attainment {:.1}%",
+            slo.completed,
+            slo.expired,
+            slo.censored,
+            100.0 * slo.attainment
+        );
+        println!(
+            "  ttft p50/p95/p99 {:.1}/{:.1}/{:.1}  tpot {:.2}/{:.2}/{:.2}  \
+             e2e {:.1}/{:.1}/{:.1} waves",
+            slo.ttft.0,
+            slo.ttft.1,
+            slo.ttft.2,
+            slo.tpot.0,
+            slo.tpot.1,
+            slo.tpot.2,
+            slo.e2e.0,
+            slo.e2e.1,
+            slo.e2e.2
+        );
+        let raw: f64 = out.recorder.cum_goodput().iter().sum();
+        println!(
+            "  goodput: raw {raw:.0} tokens, SLO {:.0} tokens ({:.1}% within deadline)",
+            slo.slo_goodput_total,
+            100.0 * slo.slo_goodput_total / raw.max(1e-12)
+        );
+    }
     let path = format!("{out_dir}/run_{}_{}.csv", scenario.id, policy.name());
     write_rounds(&path, &out.recorder)?;
     println!("per-round CSV -> {path}");
@@ -158,6 +222,14 @@ pub fn main(args: &Args) -> Result<()> {
         let mpath = format!("{out_dir}/run_{}_{}_membership.csv", scenario.id, policy.name());
         write_membership(&mpath, &out.recorder)?;
         println!("membership CSV -> {mpath}");
+    }
+    if out.recorder.has_requests() {
+        let rpath = format!("{out_dir}/run_{}_{}_requests.csv", scenario.id, policy.name());
+        write_requests(&rpath, &out.recorder)?;
+        println!("per-request CSV -> {rpath}");
+        let spath = format!("{out_dir}/run_{}_{}_slo.csv", scenario.id, policy.name());
+        write_slo_summary(&spath, &out.recorder)?;
+        println!("SLO summary CSV -> {spath}");
     }
     Ok(())
 }

@@ -15,7 +15,11 @@
 //!   is session-oriented ([`coordinator::Cluster::builder`] →
 //!   [`coordinator::ServingHandle`]): a long-lived cluster that edge
 //!   draft servers join and leave dynamically, with epoch-stamped
-//!   membership applied at wave boundaries.
+//!   membership applied at wave boundaries. On top, [`serve`] layers
+//!   request-level serving — trace-driven arrivals, per-request
+//!   TTFT/TPOT/E2E and SLO accounting, and the SLO-goodput series the
+//!   closed-loop speculation controller ([`sched::controller`],
+//!   `policy=turbo`) optimizes.
 //! * **Layer 2** — `python/compile/model.py`: the tiny-transformer model
 //!   zoo AOT-lowered to HLO text at build time.
 //! * **Layer 1** — `python/compile/kernels/`: Pallas flash-attention and
@@ -37,6 +41,7 @@ pub mod metrics;
 pub mod net;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod simulate;
 pub mod spec;
 pub mod tokenizer;

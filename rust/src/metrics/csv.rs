@@ -96,10 +96,69 @@ pub fn write_membership<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
     write_csv(path, &header, rows)
 }
 
+/// Per-request dump of a trace-driven run: one row per finished/expired
+/// request with its lifecycle timestamps (waves), TTFT/TPOT/E2E, and SLO
+/// outcome. Written only when the run carried a trace, so request-free
+/// runs keep producing the exact same file set.
+pub fn write_requests<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
+    let header = [
+        "client", "arrival", "first_token", "completion", "tokens", "slo", "completed", "met",
+        "ttft", "tpot", "e2e",
+    ];
+    let rows = rec.requests.iter().map(|r| {
+        vec![
+            r.client.to_string(),
+            r.arrival.to_string(),
+            r.first_token.map(|w| w.to_string()).unwrap_or_default(),
+            r.completion.to_string(),
+            r.tokens.to_string(),
+            r.slo_waves.to_string(),
+            (r.completed as u8).to_string(),
+            (r.met as u8).to_string(),
+            format!("{:.3}", r.ttft_waves()),
+            format!("{:.3}", r.tpot_waves()),
+            format!("{:.3}", r.e2e_waves()),
+        ]
+    });
+    write_csv(path, &header, rows)
+}
+
+/// One-row SLO report of a trace-driven run: request counts, attainment,
+/// the p50/p95/p99 latency columns, and both goodput series (raw and
+/// SLO) so the deadline cost is visible in one place.
+pub fn write_slo_summary<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> {
+    let header = [
+        "completed", "expired", "censored", "attainment", "ttft_p50", "ttft_p95", "ttft_p99",
+        "tpot_p50", "tpot_p95", "tpot_p99", "e2e_p50", "e2e_p95", "e2e_p99", "raw_goodput",
+        "slo_goodput",
+    ];
+    let s = rec.slo_summary().unwrap_or_default();
+    let raw: f64 = rec.cum_goodput().iter().sum();
+    let row = vec![
+        s.completed.to_string(),
+        s.expired.to_string(),
+        s.censored.to_string(),
+        format!("{:.4}", s.attainment),
+        format!("{:.3}", s.ttft.0),
+        format!("{:.3}", s.ttft.1),
+        format!("{:.3}", s.ttft.2),
+        format!("{:.3}", s.tpot.0),
+        format!("{:.3}", s.tpot.1),
+        format!("{:.3}", s.tpot.2),
+        format!("{:.3}", s.e2e.0),
+        format!("{:.3}", s.e2e.1),
+        format!("{:.3}", s.e2e.2),
+        format!("{raw:.1}"),
+        format!("{:.1}", s.slo_goodput_total),
+    ];
+    write_csv(path, &header, [row])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::metrics::recorder::{ClientRoundMetrics, MembershipEvent, RoundRecord};
+    use crate::serve::RequestRecord;
 
     #[test]
     fn escapes_fields() {
@@ -131,6 +190,57 @@ mod tests {
         assert_eq!(lines.len(), 3); // header + 2 clients
         assert!(lines[0].starts_with("round,client"));
         assert!(lines[1].starts_with("0,0,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writes_request_and_slo_csvs() {
+        let dir = std::env::temp_dir().join("goodspeed_requests_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rec = Recorder::new(1);
+        rec.requests.push(RequestRecord {
+            client: 0,
+            arrival: 2,
+            first_token: Some(2),
+            completion: 5,
+            tokens: 8,
+            slo_waves: 10,
+            completed: true,
+            met: true,
+        });
+        rec.requests.push(RequestRecord {
+            client: 0,
+            arrival: 7,
+            first_token: None,
+            completion: 9,
+            tokens: 0,
+            slo_waves: 2,
+            completed: false,
+            met: false,
+        });
+        rec.slo_goodput = vec![8.0];
+        let rpath = dir.join("requests.csv");
+        write_requests(&rpath, &rec).unwrap();
+        let text = std::fs::read_to_string(&rpath).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(
+            lines[0],
+            "client,arrival,first_token,completion,tokens,slo,completed,met,ttft,tpot,e2e"
+        );
+        assert!(lines[1].starts_with("0,2,2,5,8,10,1,1,"), "{}", lines[1]);
+        // Never-served requests leave first_token empty.
+        assert!(lines[2].starts_with("0,7,,9,0,2,0,0,"), "{}", lines[2]);
+
+        let spath = dir.join("slo.csv");
+        write_slo_summary(&spath, &rec).unwrap();
+        let text = std::fs::read_to_string(&spath).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("completed,expired,censored,attainment,ttft_p50"));
+        assert!(lines[0].ends_with("raw_goodput,slo_goodput"));
+        assert!(lines[1].starts_with("1,1,0,0.5000,"), "{}", lines[1]);
+        assert!(lines[1].ends_with(",8.0"), "{}", lines[1]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,6 +1,7 @@
 //! Per-round experiment records — everything Figs 2–4 and Table I need.
 
 use crate::sched::utility::{system_utility, Utility};
+use crate::serve::tracker::{summarize_requests, RequestRecord, SloSummary};
 use crate::util::stats::jain_index;
 
 /// One client's slice of one wave (a sync round is a wave of everyone).
@@ -85,6 +86,17 @@ pub struct Recorder {
     pub membership: Vec<MembershipEvent>,
     /// Per-request latency in rounds, as requests complete.
     pub request_latency_rounds: Vec<u64>,
+    /// Trace-driven runs: per-request lifecycle records (TTFT/TPOT/E2E,
+    /// SLO attainment) from the request tracker. Empty on request-free
+    /// runs, whose outputs stay byte-identical.
+    pub requests: Vec<RequestRecord>,
+    /// Trace-driven runs: per-client Σ tokens of deadline-met requests —
+    /// the SLO-goodput series alongside the paper's raw goodput. Empty
+    /// (not zero-filled) on request-free runs.
+    pub slo_goodput: Vec<f64>,
+    /// Requests still pending with future deadlines when the run ended
+    /// (excluded from attainment).
+    pub requests_censored: u64,
     /// Cumulative realized goodput per client (for x̄(T) and Fig 4).
     cum_goodput: Vec<f64>,
     /// Cumulative *accepted* draft tokens per client (fairness audits).
@@ -104,6 +116,9 @@ impl Recorder {
             rounds: Vec::new(),
             membership: Vec::new(),
             request_latency_rounds: Vec::new(),
+            requests: Vec::new(),
+            slo_goodput: Vec::new(),
+            requests_censored: 0,
             cum_goodput: vec![0.0; n_clients],
             cum_accepted: vec![0; n_clients],
             cum_spec_depth: vec![0; n_clients],
@@ -140,6 +155,15 @@ impl Recorder {
         }
         self.membership.extend(other.membership);
         self.request_latency_rounds.extend(other.request_latency_rounds);
+        self.requests.extend(other.requests);
+        self.requests_censored += other.requests_censored;
+        if self.slo_goodput.is_empty() {
+            self.slo_goodput = other.slo_goodput;
+        } else if !other.slo_goodput.is_empty() {
+            for (a, b) in self.slo_goodput.iter_mut().zip(&other.slo_goodput) {
+                *a += b;
+            }
+        }
     }
 
     /// Record a membership epoch change (serving clusters with churn).
@@ -230,6 +254,30 @@ impl Recorder {
     /// U(x̄(T)) — the Fig 4 curve evaluated at the current T.
     pub fn utility_of_avg(&self, u: &dyn Utility) -> f64 {
         system_utility(u, &self.avg_goodput())
+    }
+
+    /// Whether this run carried a request trace (request-level series
+    /// present).
+    pub fn has_requests(&self) -> bool {
+        !self.requests.is_empty() || !self.slo_goodput.is_empty()
+    }
+
+    /// Trace-driven runs: the p50/p95/p99 TTFT/TPOT/E2E + attainment
+    /// report row over the run's request records. `None` on request-free
+    /// runs.
+    pub fn slo_summary(&self) -> Option<SloSummary> {
+        self.has_requests().then(|| summarize_requests(&self.requests, self.requests_censored))
+    }
+
+    /// Per-client SLO-goodput per participated wave — the deadline-aware
+    /// counterpart of [`Recorder::avg_goodput`] (tokens of requests that
+    /// missed their deadline count 0). Empty on request-free runs.
+    pub fn avg_slo_goodput(&self) -> Vec<f64> {
+        self.slo_goodput
+            .iter()
+            .zip(&self.participation)
+            .map(|(&g, &t)| if t == 0 { 0.0 } else { g / t as f64 })
+            .collect()
     }
 
     pub fn summary(&self, wall_secs: f64) -> RunSummary {
@@ -461,6 +509,47 @@ mod tests {
         assert_eq!(a.participation(), &[1, 1, 2]);
         assert_eq!(a.cum_goodput(), &[4.0, 2.0, 8.0]);
         assert_eq!(a.request_latency_rounds, vec![3, 7]);
+    }
+
+    #[test]
+    fn request_series_absorb_and_summarize() {
+        let mut a = Recorder::new(2);
+        assert!(!a.has_requests() && a.slo_summary().is_none());
+        a.requests.push(RequestRecord {
+            client: 0,
+            arrival: 0,
+            first_token: Some(1),
+            completion: 3,
+            tokens: 8,
+            slo_waves: 10,
+            completed: true,
+            met: true,
+        });
+        a.slo_goodput = vec![8.0, 0.0];
+        let mut b = Recorder::new(2);
+        b.requests.push(RequestRecord {
+            client: 1,
+            arrival: 2,
+            first_token: None,
+            completion: 9,
+            tokens: 3,
+            slo_waves: 5,
+            completed: false,
+            met: false,
+        });
+        b.slo_goodput = vec![0.0, 0.0];
+        b.requests_censored = 1;
+        a.absorb(b);
+        assert_eq!(a.requests.len(), 2);
+        assert_eq!(a.slo_goodput, vec![8.0, 0.0]);
+        let s = a.slo_summary().unwrap();
+        assert_eq!((s.completed, s.expired, s.censored), (1, 1, 1));
+        assert!((s.attainment - 0.5).abs() < 1e-12);
+        assert!((s.slo_goodput_total - 8.0).abs() < 1e-12);
+        // Per-wave normalization uses participation, like avg_goodput.
+        a.push(wave(&[(0, 4), (1, 2)]));
+        a.push(wave(&[(0, 4)]));
+        assert_eq!(a.avg_slo_goodput(), vec![4.0, 0.0]);
     }
 
     #[test]

@@ -94,6 +94,53 @@ mod tests {
         }
     }
 
+    /// Satellite pin: the documented jitter envelope. The multiplicative
+    /// jitter factor is clamped to [0.25, 4] *before* it scales the
+    /// deterministic delay, so even adversarial draws (huge jitter
+    /// stddev, extreme normals in both tails) keep every delay inside
+    /// [0.25×, 4×] of the jitter-free mean — and in particular
+    /// non-negative, despite `1 + σ·N` going deeply negative.
+    #[test]
+    fn adversarial_jitter_stays_inside_the_documented_envelope() {
+        for (lat, bw, bytes) in
+            [(1e-3, 1e9, 100usize), (20e-3, 1.25e6, 50_000), (0.0, 1e6, 1), (5e-4, 1e9, 0)]
+        {
+            let base = Link::new(LinkConfig { latency_s: lat, bandwidth_bps: bw, jitter: 0.0 })
+                .mean_delay(bytes)
+                .as_secs_f64();
+            // σ = 50: |1 + σ·N| exceeds the clamp bounds almost every
+            // draw, in both directions.
+            let l =
+                Link::new(LinkConfig { latency_s: lat, bandwidth_bps: bw, jitter: 50.0 });
+            let mut rng = Rng::new(0xBAD_1);
+            let (mut lo_hits, mut hi_hits) = (0u32, 0u32);
+            // Duration rounds to whole nanoseconds: allow 2 ns of slack.
+            const NS: f64 = 2e-9;
+            for _ in 0..5_000 {
+                let d = l.delay(bytes, &mut rng).as_secs_f64();
+                assert!(d >= 0.0, "negative delay {d}");
+                assert!(
+                    d >= 0.25 * base - NS && d <= 4.0 * base + NS,
+                    "delay {d} outside [{}, {}]",
+                    0.25 * base,
+                    4.0 * base
+                );
+                if (d - 0.25 * base).abs() <= NS {
+                    lo_hits += 1;
+                }
+                if (d - 4.0 * base).abs() <= NS {
+                    hi_hits += 1;
+                }
+            }
+            // With σ = 50 the clamp binds on essentially every draw:
+            // both envelope edges must actually be exercised.
+            if base > 0.0 {
+                assert!(lo_hits > 100, "lower clamp never bound ({lo_hits})");
+                assert!(hi_hits > 100, "upper clamp never bound ({hi_hits})");
+            }
+        }
+    }
+
     #[test]
     fn q_distributions_dominate_uplink() {
         // S=20 drafts over V=256 → q payload ≈ 20 KiB ≫ tokens.

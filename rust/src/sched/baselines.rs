@@ -135,10 +135,14 @@ impl Allocator for RandomSAlloc {
     }
 }
 
-/// Build the allocator for a scenario policy.
+/// Build the allocator for a scenario policy. `Turbo` runs the same
+/// gradient allocator as GoodSpeed — the closed-loop part is the
+/// per-client speculation caps the
+/// [`TurboController`](super::controller::TurboController) applies inside
+/// [`RoundCore`](crate::coordinator::RoundCore) before each allocation.
 pub fn make_allocator(policy: Policy, seed: u64) -> Box<dyn Allocator> {
     match policy {
-        Policy::GoodSpeed => Box::new(GoodSpeedAlloc::log()),
+        Policy::GoodSpeed | Policy::Turbo => Box::new(GoodSpeedAlloc::log()),
         Policy::FixedS => Box::new(FixedSAlloc),
         Policy::RandomS => Box::new(RandomSAlloc::new(seed)),
     }

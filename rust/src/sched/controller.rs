@@ -1,0 +1,176 @@
+//! Closed-loop speculation control (`policy=turbo`).
+//!
+//! TurboSpec (Liu et al.) observes that the right speculation length is
+//! not the one maximizing raw goodput but the one maximizing *goodput
+//! under SLO*: once a request is certain to meet its deadline, further
+//! speculation for that client only burns shared verifier budget that a
+//! deadline-tight client needs. The [`TurboController`] implements that
+//! loop on top of the gradient allocator: it maintains a per-client
+//! speculation-budget target `S_i` and, each wave,
+//!
+//! * **shrinks** `S_i` (×0.8) when client *i* is comfortably ahead of its
+//!   deadline (headroom > [`TurboController::SHRINK_HEADROOM`]) while the
+//!   verifier is congested (reserved budget ≥
+//!   [`TurboController::CONGESTED`] of C) — the freed budget water-fills
+//!   over deadline-tight clients through the ordinary allocation;
+//! * **grows** `S_i` (×1.25, toward fully open) whenever the client is
+//!   behind its deadline, or when its accept rate is high
+//!   (> [`TurboController::GROW_ACCEPT`]) and the verifier has slack.
+//!
+//! The target starts fully open (the verification budget C), so with no
+//! request trace — every client deadline-free, headroom +∞ — the caps
+//! never bind and `turbo` degrades to the plain gradient policy. The
+//! controller lives inside [`RoundCore`](crate::coordinator::RoundCore)
+//! and is therefore identical in the live coordinator and the analytic
+//! simulator; SLO headroom is published per wave by the request tracker
+//! (`serve::tracker`).
+
+/// Per-client closed-loop speculation-budget controller.
+#[derive(Clone, Debug)]
+pub struct TurboController {
+    /// Per-client speculation target S_i (continuous; rounded at use).
+    target: Vec<f64>,
+    /// Per-client SLO headroom published at the last wave boundary
+    /// (+∞ = no deadline pressure; < 0 = behind schedule).
+    headroom: Vec<f64>,
+    /// Upper bound for every target (the fully-open cap).
+    open: usize,
+}
+
+impl TurboController {
+    /// Headroom above which a client counts as "comfortably ahead": its
+    /// expected rate is ≥ 2× what the deadline requires, so halving its
+    /// speculation still meets the SLO with margin.
+    pub const SHRINK_HEADROOM: f64 = 1.0;
+    /// Reserved-over-capacity fraction above which the verifier counts
+    /// as congested (shedding only helps when budget is actually scarce).
+    pub const CONGESTED: f64 = 0.95;
+    /// Accept rate above which speculation grows while there is slack.
+    pub const GROW_ACCEPT: f64 = 0.7;
+
+    /// A controller over `n` clients with all targets fully open at
+    /// `open` (the verification budget C: per-wave caps are additionally
+    /// bounded by context room and the artifact K, so "open" means
+    /// "never binding").
+    pub fn new(n: usize, open: usize) -> TurboController {
+        TurboController {
+            target: vec![open.max(1) as f64; n],
+            headroom: vec![f64::INFINITY; n],
+            open: open.max(1),
+        }
+    }
+
+    /// Publish client `i`'s SLO headroom for the upcoming wave (from the
+    /// request tracker).
+    pub fn set_headroom(&mut self, i: usize, headroom: f64) {
+        self.headroom[i] = headroom;
+    }
+
+    /// The controller's current speculation cap for client `i`.
+    pub fn cap(&self, i: usize) -> usize {
+        (self.target[i].round() as usize).clamp(1, self.open)
+    }
+
+    /// One closed-loop step for client `i` after a wave it participated
+    /// in: `accept` is the wave's mean acceptance ratio, `congestion` the
+    /// reserved-over-capacity fraction at the wave boundary.
+    pub fn observe(&mut self, i: usize, accept: f64, congestion: f64) {
+        let h = self.headroom[i];
+        let open = self.open as f64;
+        let t = &mut self.target[i];
+        if h < 0.0 {
+            // Behind schedule (or backlogged): open the throttle fast —
+            // a missed deadline zeroes the request's SLO-goodput, which
+            // no amount of saved budget repays.
+            *t = (*t * 1.25 + 0.5).min(open);
+        } else if h.is_finite() && h > Self::SHRINK_HEADROOM && congestion >= Self::CONGESTED {
+            // (+∞ headroom means "no deadline known", not "ahead": a
+            // deadline-free client is never throttled.)
+            // Comfortably ahead while the verifier is saturated: shed
+            // speculation; the freed budget water-fills over the
+            // deadline-tight clients in the very next allocation.
+            *t *= 0.8;
+        } else if accept > Self::GROW_ACCEPT && congestion < Self::CONGESTED {
+            *t = (*t * 1.1 + 0.25).min(open);
+        }
+        *t = t.clamp(1.0, open);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_fully_open_and_stays_open_without_deadlines() {
+        let mut c = TurboController::new(3, 16);
+        for i in 0..3 {
+            assert_eq!(c.cap(i), 16);
+        }
+        // Deadline-free clients (headroom +∞) never shrink, whatever the
+        // congestion — turbo degrades to the plain gradient policy.
+        for _ in 0..50 {
+            c.observe(0, 0.9, 1.0);
+            c.observe(1, 0.1, 1.0);
+        }
+        assert_eq!(c.cap(0), 16);
+        assert_eq!(c.cap(1), 16);
+    }
+
+    #[test]
+    fn sheds_when_ahead_and_congested_only() {
+        let mut c = TurboController::new(2, 16);
+        c.set_headroom(0, 3.0);
+        c.set_headroom(1, 3.0);
+        for _ in 0..10 {
+            c.observe(0, 0.5, 1.0); // congested: shed
+            c.observe(1, 0.5, 0.5); // slack: hold
+        }
+        assert!(c.cap(0) < 16, "ahead + congested must shrink: {}", c.cap(0));
+        assert!(c.cap(0) >= 1, "the floor is one node");
+        assert_eq!(c.cap(1), 16, "no congestion ⇒ nothing to shed");
+    }
+
+    #[test]
+    fn reopens_when_behind_and_grows_on_high_accept() {
+        let mut c = TurboController::new(1, 16);
+        c.set_headroom(0, 5.0);
+        for _ in 0..20 {
+            c.observe(0, 0.5, 1.0);
+        }
+        let shrunk = c.cap(0);
+        assert!(shrunk < 8, "{shrunk}");
+        // Falling behind reopens fast.
+        c.set_headroom(0, -0.5);
+        for _ in 0..10 {
+            c.observe(0, 0.5, 1.0);
+        }
+        assert_eq!(c.cap(0), 16, "behind schedule must reopen to the full cap");
+        // High accept with slack grows a shrunk target too.
+        let mut c = TurboController::new(1, 16);
+        c.set_headroom(0, 5.0);
+        for _ in 0..20 {
+            c.observe(0, 0.5, 1.0);
+        }
+        c.set_headroom(0, 0.5); // no longer far ahead
+        for _ in 0..20 {
+            c.observe(0, 0.9, 0.5);
+        }
+        assert_eq!(c.cap(0), 16);
+    }
+
+    #[test]
+    fn cap_clamps_to_sane_range() {
+        let mut c = TurboController::new(1, 4);
+        c.set_headroom(0, 100.0);
+        for _ in 0..200 {
+            c.observe(0, 0.0, 1.0);
+        }
+        assert_eq!(c.cap(0), 1);
+        c.set_headroom(0, -1.0);
+        for _ in 0..200 {
+            c.observe(0, 0.0, 1.0);
+        }
+        assert_eq!(c.cap(0), 4);
+    }
+}

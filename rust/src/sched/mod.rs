@@ -1,12 +1,15 @@
 //! GoodSpeed scheduling: utilities, smoothed estimators (eqs. 3–4), the
-//! gradient scheduler (GOODSPEED-SCHED, eq. 5), and the §IV baselines.
+//! gradient scheduler (GOODSPEED-SCHED, eq. 5), the §IV baselines, and
+//! the SLO-aware closed-loop speculation controller (`policy=turbo`).
 
 pub mod baselines;
+pub mod controller;
 pub mod estimator;
 pub mod gradient;
 pub mod utility;
 
 pub use baselines::{Allocator, FixedSAlloc, GoodSpeedAlloc, RandomSAlloc};
+pub use controller::TurboController;
 pub use estimator::Estimators;
 pub use gradient::{
     hierarchical_split, objective, solve_dp, solve_greedy, split_budget_by_members, AllocInput,

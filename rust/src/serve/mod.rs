@@ -1,0 +1,35 @@
+//! Request-level serving: trace-driven arrivals, SLO accounting, and the
+//! raw-goodput → SLO-goodput bridge.
+//!
+//! The paper measures *goodput* — accepted tokens per draft server — but
+//! real-time multi-user serving is judged per *request*: a request
+//! arrives, queues, decodes, and either meets its deadline or does not.
+//! This subsystem layers that lifecycle onto the cluster without touching
+//! the wave machinery:
+//!
+//! * [`trace`] — [`RequestTrace`]: open-loop Poisson/bursty arrival
+//!   generators (deterministic from the scenario seed) and a JSON
+//!   trace-file loader, configured by
+//!   [`Scenario::trace`](crate::configsys::Scenario) /
+//!   [`TraceConfig`](crate::configsys::TraceConfig);
+//! * [`tracker`] — [`RequestTracker`]: per-client request queues driven
+//!   at wave boundaries by both the live cluster
+//!   ([`Cluster`](crate::coordinator::Cluster)) and the analytic
+//!   simulator ([`AnalyticSim`](crate::simulate::AnalyticSim)). Idle
+//!   clients are granted 0 (their budget water-fills over busy ones, the
+//!   drain grant rule without the retirement); every request yields
+//!   TTFT / TPOT / E2E and SLO attainment, reduced to p50/p95/p99 by
+//!   [`SloSummary`].
+//!
+//! **SLO-goodput** — accepted tokens belonging to requests that met their
+//! deadline — is the series the closed-loop speculation controller
+//! ([`sched::controller`](crate::sched::controller), `policy=turbo`)
+//! optimizes: it shrinks a client's speculation when the client is ahead
+//! of its deadline while the verifier is congested, and grows it while
+//! accept rates are high. See DESIGN.md, "Request-level serving & SLOs".
+
+pub mod trace;
+pub mod tracker;
+
+pub use trace::{RequestTrace, TraceRequest};
+pub use tracker::{summarize_requests, RequestRecord, RequestTracker, SloSummary};

@@ -1,0 +1,287 @@
+//! Request traces: who asks for how much, when.
+//!
+//! A [`RequestTrace`] holds one arrival schedule per client slot — each
+//! entry a [`TraceRequest`] with an arrival wave, a target output length,
+//! and a per-request SLO. Generators (open-loop Poisson and bursty) are
+//! deterministic from the scenario seed via per-client PRNG forks, so a
+//! trace-driven run replays bit-exactly like every other experiment;
+//! explicit schedules load from a JSON trace file.
+//!
+//! Arrival times are in *waves* — the coordinator's virtual clock, the
+//! same unit [`ChurnEvent::at_wave`](crate::configsys::ChurnEvent) uses —
+//! so the live cluster and the analytic simulator consume one trace
+//! identically.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::configsys::{ArrivalProcess, Scenario, TraceConfig, Value};
+use crate::util::Rng;
+
+/// One request in a client's arrival schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceRequest {
+    /// Wave at which the request arrives (it can be served from the wave
+    /// with this index onward).
+    pub arrival: u64,
+    /// Target output length, tokens.
+    pub output_tokens: usize,
+    /// Deadline, waves from arrival: the request meets its SLO when it
+    /// completes within this many waves.
+    pub slo_waves: u64,
+}
+
+/// Per-client request arrival schedules (slot-indexed, each sorted by
+/// arrival wave).
+#[derive(Clone, Debug, Default)]
+pub struct RequestTrace {
+    pub per_client: Vec<Vec<TraceRequest>>,
+}
+
+/// Exponential inter-arrival gap with the given mean (waves).
+fn exp_gap(rng: &mut Rng, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+impl RequestTrace {
+    /// The scenario's trace, resolved: generators run one per-client
+    /// stream (forked from the scenario seed) for each of the scenario's
+    /// *initial* clients; file traces load their explicit schedules.
+    /// Slots beyond the covered set — churn joiners and reserve slots —
+    /// stay untracked in the [`RequestTracker`](super::RequestTracker)
+    /// (classic closed-loop behavior), so no requests are scheduled for
+    /// clients that may never join and nothing is recorded as a miss the
+    /// scheduler could not have served. Errors when the scenario has no
+    /// trace config or the file is unreadable/malformed.
+    pub fn from_scenario(scenario: &Scenario, slots: usize) -> Result<RequestTrace> {
+        let cfg = scenario
+            .trace
+            .as_ref()
+            .ok_or_else(|| anyhow!("scenario '{}' has no trace config", scenario.id))?;
+        match &cfg.arrival {
+            ArrivalProcess::File(path) => {
+                let t = RequestTrace::from_file(path)?;
+                // A file with more client schedules than the scenario has
+                // clients would be silently truncated — the SLO report
+                // would cover half the intended workload with no warning.
+                if t.per_client.len() > scenario.num_clients {
+                    return Err(anyhow!(
+                        "trace file '{path}' schedules {} clients but scenario '{}' has \
+                         only {} (raise --clients or trim the file)",
+                        t.per_client.len(),
+                        scenario.id,
+                        scenario.num_clients
+                    ));
+                }
+                Ok(t)
+            }
+            _ => Ok(RequestTrace::generate(cfg, scenario.seed, scenario.num_clients.min(slots))),
+        }
+    }
+
+    /// Generate `slots` open-loop schedules from `cfg`'s arrival process.
+    /// Deterministic: client `i` draws from `fork(i)` of a root stream
+    /// seeded `seed ^ 0x57ACE`, so schedules are stable regardless of
+    /// sibling consumption (the same discipline the draft servers use).
+    ///
+    /// Panics if called with [`ArrivalProcess::File`] — file traces load,
+    /// they are not generated.
+    pub fn generate(cfg: &TraceConfig, seed: u64, slots: usize) -> RequestTrace {
+        let mut root = Rng::new(seed ^ 0x57ACE);
+        let per_client = (0..slots)
+            .map(|i| {
+                let mut rng = root.fork(i as u64);
+                let mut t = 0.0f64;
+                let mut reqs: Vec<TraceRequest> = Vec::with_capacity(cfg.requests_per_client);
+                while reqs.len() < cfg.requests_per_client {
+                    let burst = match cfg.arrival {
+                        ArrivalProcess::Poisson { mean_gap } => {
+                            t += exp_gap(&mut rng, mean_gap);
+                            1
+                        }
+                        ArrivalProcess::Bursty { mean_gap, burst } => {
+                            t += exp_gap(&mut rng, mean_gap);
+                            burst
+                        }
+                        ArrivalProcess::File(_) => {
+                            unreachable!("file traces load, they are not generated")
+                        }
+                    };
+                    for _ in 0..burst {
+                        if reqs.len() >= cfg.requests_per_client {
+                            break;
+                        }
+                        reqs.push(TraceRequest {
+                            arrival: t.floor() as u64,
+                            output_tokens: cfg.output_tokens,
+                            slo_waves: cfg.slo_waves,
+                        });
+                    }
+                }
+                reqs
+            })
+            .collect();
+        RequestTrace { per_client }
+    }
+
+    /// Load an explicit trace from a JSON file:
+    ///
+    /// ```json
+    /// {"clients": [
+    ///   [{"arrival": 0, "tokens": 24, "slo": 30},
+    ///    {"arrival": 12, "tokens": 48, "slo": 60}],
+    ///   [{"arrival": 4, "tokens": 24, "slo": 30}]
+    /// ]}
+    /// ```
+    ///
+    /// Outer array index = client slot; clients beyond the file's lists
+    /// are untracked (they keep the classic closed-loop behavior). Each
+    /// client's requests are sorted by arrival on load.
+    pub fn from_file(path: &str) -> Result<RequestTrace> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read trace file {path}"))?;
+        RequestTrace::from_json(&text).with_context(|| format!("parse trace file {path}"))
+    }
+
+    /// Parse the trace-file JSON (see [`RequestTrace::from_file`]).
+    pub fn from_json(text: &str) -> Result<RequestTrace> {
+        let v = Value::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let clients = v
+            .get("clients")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("trace file needs a top-level \"clients\" array"))?;
+        let mut per_client = Vec::with_capacity(clients.len());
+        for (i, list) in clients.iter().enumerate() {
+            let list = list
+                .as_array()
+                .ok_or_else(|| anyhow!("client {i}: expected an array of requests"))?;
+            let mut reqs = Vec::with_capacity(list.len());
+            for (j, req) in list.iter().enumerate() {
+                let field = |key: &str| -> Result<f64> {
+                    req.get(key).and_then(Value::as_f64).ok_or_else(|| {
+                        anyhow!("client {i} request {j}: missing numeric field \"{key}\"")
+                    })
+                };
+                let (arrival, tokens, slo) = (field("arrival")?, field("tokens")?, field("slo")?);
+                if arrival < 0.0 || tokens < 1.0 || slo < 1.0 {
+                    return Err(anyhow!(
+                        "client {i} request {j}: arrival ≥ 0, tokens ≥ 1, slo ≥ 1 required"
+                    ));
+                }
+                reqs.push(TraceRequest {
+                    arrival: arrival as u64,
+                    output_tokens: tokens as usize,
+                    slo_waves: slo as u64,
+                });
+            }
+            reqs.sort_by_key(|r| r.arrival);
+            per_client.push(reqs);
+        }
+        Ok(RequestTrace { per_client })
+    }
+
+    /// Total requests across all clients.
+    pub fn total_requests(&self) -> usize {
+        self.per_client.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(arrival: ArrivalProcess, n: usize) -> TraceConfig {
+        TraceConfig { arrival, slo_waves: 30, output_tokens: 24, requests_per_client: n }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_per_client_independent() {
+        let c = cfg(ArrivalProcess::Poisson { mean_gap: 10.0 }, 16);
+        let a = RequestTrace::generate(&c, 7, 4);
+        let b = RequestTrace::generate(&c, 7, 4);
+        let other_seed = RequestTrace::generate(&c, 8, 4);
+        assert_eq!(a.per_client, b.per_client, "same seed ⇒ same trace");
+        assert_ne!(a.per_client, other_seed.per_client, "seed must matter");
+        assert_eq!(a.per_client.len(), 4);
+        assert_eq!(a.total_requests(), 64);
+        // Clients draw independent streams.
+        assert_ne!(a.per_client[0], a.per_client[1]);
+        // Arrivals ascend within each client.
+        for reqs in &a.per_client {
+            for w in reqs.windows(2) {
+                assert!(w[0].arrival <= w[1].arrival);
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_gaps_have_roughly_the_configured_mean() {
+        let c = cfg(ArrivalProcess::Poisson { mean_gap: 8.0 }, 4000);
+        let t = RequestTrace::generate(&c, 3, 1);
+        let last = t.per_client[0].last().unwrap().arrival as f64;
+        let mean_gap = last / 3999.0;
+        assert!((mean_gap - 8.0).abs() < 0.5, "empirical mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn bursty_arrivals_come_in_bursts() {
+        let c = cfg(ArrivalProcess::Bursty { mean_gap: 50.0, burst: 3 }, 9);
+        let t = RequestTrace::generate(&c, 5, 1);
+        let reqs = &t.per_client[0];
+        assert_eq!(reqs.len(), 9);
+        // Every burst shares one arrival wave.
+        for chunk in reqs.chunks(3) {
+            assert!(chunk.iter().all(|r| r.arrival == chunk[0].arrival), "{chunk:?}");
+        }
+        // Bursts themselves are spread out (mean gap 50 over two gaps ⇒
+        // the last burst lands after the first with overwhelming margin).
+        assert!(reqs[8].arrival > reqs[0].arrival, "{reqs:?}");
+    }
+
+    #[test]
+    fn json_trace_roundtrip_and_errors() {
+        let t = RequestTrace::from_json(
+            r#"{"clients": [
+                 [{"arrival": 12, "tokens": 48, "slo": 60},
+                  {"arrival": 0, "tokens": 24, "slo": 30}],
+                 []
+               ]}"#,
+        )
+        .unwrap();
+        assert_eq!(t.per_client.len(), 2);
+        // Sorted by arrival on load.
+        assert_eq!(
+            t.per_client[0][0],
+            TraceRequest { arrival: 0, output_tokens: 24, slo_waves: 30 }
+        );
+        assert_eq!(t.per_client[0][1].arrival, 12);
+        assert!(t.per_client[1].is_empty());
+        assert_eq!(t.total_requests(), 2);
+
+        assert!(RequestTrace::from_json("[]").is_err(), "needs a clients object");
+        assert!(
+            RequestTrace::from_json(r#"{"clients": [[{"arrival": 1}]]}"#).is_err(),
+            "missing fields must error"
+        );
+        assert!(
+            RequestTrace::from_json(r#"{"clients": [[{"arrival": 1, "tokens": 0, "slo": 5}]]}"#)
+                .is_err(),
+            "zero-token requests rejected"
+        );
+    }
+
+    #[test]
+    fn from_scenario_resolves_generators() {
+        let s = Scenario::preset("trace").unwrap();
+        let t = RequestTrace::from_scenario(&s, s.num_clients).unwrap();
+        assert_eq!(t.per_client.len(), 4);
+        assert!(t.total_requests() > 0);
+        // Slots beyond the initial clients (churn joiners, reserve
+        // headroom) get no generated schedule: they stay untracked, so
+        // no request can expire against a client that never joined.
+        let wide = RequestTrace::from_scenario(&s, 7).unwrap();
+        assert_eq!(wide.per_client.len(), 4);
+        assert_eq!(wide.per_client, t.per_client, "coverage must not shift the streams");
+        let bare = Scenario::preset("smoke").unwrap();
+        assert!(RequestTrace::from_scenario(&bare, 2).is_err());
+    }
+}

@@ -1,0 +1,609 @@
+//! Request lifecycle accounting: arrivals → queueing → decode → SLO.
+//!
+//! The [`RequestTracker`] layers discrete request lifecycles onto the
+//! wave stream. It is a pure accounting overlay over the exact same wave
+//! observations the scheduler sees, driven identically by the live
+//! cluster and the analytic simulator:
+//!
+//! 1. **Wave start** ([`RequestTracker::sync_wave_start`]) — promote due
+//!    arrivals, mark clients with no active request *idle* on the shared
+//!    [`RoundCore`] (idle members are granted 0, like a drain, so their
+//!    budget water-fills over busy clients — without retiring the
+//!    session), and publish each busy client's SLO headroom to the
+//!    closed-loop speculation controller when one is installed.
+//! 2. **Wave end** ([`RequestTracker::sync_wave_end`]) — attribute the
+//!    wave's realized goodput to the active requests: the first token
+//!    stamps TTFT, reaching the target output stamps completion, and
+//!    leftover tokens spill into the next *arrived* request (continuous
+//!    batching; tokens never spill into the future).
+//!
+//! Every finished request yields a [`RequestRecord`] carrying TTFT /
+//! TPOT / E2E (in waves — the stack's virtual time unit) and whether the
+//! deadline was met; [`RequestTracker::summary`] reduces them to the
+//! p50/p95/p99 report row and the run's *SLO-goodput*: tokens belonging
+//! to requests that met their deadline, the serving-side counterpart of
+//! the paper's raw goodput.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::RoundCore;
+use crate::spec::expected_goodput;
+use crate::util::stats::p50_p95_p99;
+
+use super::trace::{RequestTrace, TraceRequest};
+
+/// One request's completed (or expired) lifecycle.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    /// Client slot the request belongs to.
+    pub client: usize,
+    /// Arrival wave.
+    pub arrival: u64,
+    /// Wave that produced the request's first token (`None` when the
+    /// request expired before ever being served).
+    pub first_token: Option<u64>,
+    /// Wave during which the request completed (for expired requests:
+    /// the final wave of the run).
+    pub completion: u64,
+    /// Tokens attributed to the request (== the target for completed
+    /// requests; the partial count for expired ones).
+    pub tokens: usize,
+    /// The request's deadline, waves from arrival.
+    pub slo_waves: u64,
+    /// Whether the full target output was produced.
+    pub completed: bool,
+    /// Whether it completed within `slo_waves` of arrival.
+    pub met: bool,
+}
+
+impl RequestRecord {
+    /// Time to first token, waves (inclusive: a request served in its
+    /// arrival wave has TTFT 1 — one wave of service produced the token).
+    pub fn ttft_waves(&self) -> f64 {
+        match self.first_token {
+            Some(w) => (w + 1 - self.arrival) as f64,
+            None => (self.completion + 1).saturating_sub(self.arrival) as f64,
+        }
+    }
+
+    /// End-to-end latency, waves (inclusive, like TTFT).
+    pub fn e2e_waves(&self) -> f64 {
+        (self.completion + 1 - self.arrival) as f64
+    }
+
+    /// Time per output token after the first, waves.
+    pub fn tpot_waves(&self) -> f64 {
+        let first = self.first_token.unwrap_or(self.completion);
+        (self.completion - first) as f64 / self.tokens.saturating_sub(1).max(1) as f64
+    }
+}
+
+/// The p50/p95/p99 report row of a trace-driven run.
+#[derive(Clone, Debug, Default)]
+pub struct SloSummary {
+    /// Requests that produced their full target output.
+    pub completed: u64,
+    /// Requests whose deadline passed before they finished.
+    pub expired: u64,
+    /// Requests still pending (deadline in the future) when the run
+    /// ended — excluded from attainment so short runs are not penalized.
+    pub censored: u64,
+    /// `met / (completed + expired)`; 1.0 when nothing is attributable.
+    pub attainment: f64,
+    /// (p50, p95, p99) over completed requests, waves.
+    pub ttft: (f64, f64, f64),
+    pub tpot: (f64, f64, f64),
+    pub e2e: (f64, f64, f64),
+    /// Σ tokens of deadline-met requests.
+    pub slo_goodput_total: f64,
+}
+
+/// An in-service request.
+#[derive(Clone, Debug)]
+struct Active {
+    arrival: u64,
+    slo_waves: u64,
+    /// Absolute deadline wave: completing during wave `deadline − 1` (or
+    /// earlier) meets the SLO under the inclusive-latency convention.
+    deadline: u64,
+    target: usize,
+    done: usize,
+    first_token: Option<u64>,
+}
+
+impl Active {
+    fn from_trace(r: TraceRequest) -> Active {
+        Active {
+            arrival: r.arrival,
+            slo_waves: r.slo_waves,
+            deadline: r.arrival + r.slo_waves,
+            target: r.output_tokens.max(1),
+            done: 0,
+            first_token: None,
+        }
+    }
+}
+
+/// Slot-indexed request bookkeeping for one run.
+pub struct RequestTracker {
+    queues: Vec<VecDeque<TraceRequest>>,
+    active: Vec<Option<Active>>,
+    /// Slots the trace covers. Untracked slots (e.g. reserve slots beyond
+    /// a file trace's lists) keep the classic closed-loop behavior: never
+    /// idled, never attributed.
+    tracked: Vec<bool>,
+    busy: Vec<bool>,
+    records: Vec<RequestRecord>,
+    /// Per-slot Σ tokens of deadline-met requests.
+    slo_tokens: Vec<f64>,
+    censored: u64,
+}
+
+impl RequestTracker {
+    /// A tracker over `slots` client slots. Slots beyond the trace's
+    /// per-client lists are untracked.
+    pub fn new(trace: RequestTrace, slots: usize) -> RequestTracker {
+        let covered = trace.per_client.len().min(slots);
+        let mut queues: Vec<VecDeque<TraceRequest>> =
+            trace.per_client.into_iter().take(slots).map(VecDeque::from).collect();
+        queues.resize_with(slots, VecDeque::new);
+        RequestTracker {
+            queues,
+            active: (0..slots).map(|_| None).collect(),
+            tracked: (0..slots).map(|i| i < covered).collect(),
+            busy: vec![true; slots],
+            records: Vec::new(),
+            slo_tokens: vec![0.0; slots],
+            censored: 0,
+        }
+    }
+
+    /// Whether the slot has an active (or untracked ⇒ perpetual) request
+    /// as of the last [`RequestTracker::begin_wave`].
+    pub fn is_busy(&self, client: usize) -> bool {
+        self.busy[client]
+    }
+
+    /// Promote due arrivals and refresh the busy mask for wave `wave`.
+    pub fn begin_wave(&mut self, wave: u64) {
+        for i in 0..self.queues.len() {
+            if self.tracked[i] && self.active[i].is_none() && self.head_due(i, wave) {
+                let req = self.queues[i].pop_front().expect("due head");
+                self.active[i] = Some(Active::from_trace(req));
+            }
+            self.busy[i] = !self.tracked[i] || self.active[i].is_some();
+        }
+    }
+
+    /// Whether the client's next queued request has already arrived.
+    fn head_due(&self, client: usize, wave: u64) -> bool {
+        self.queues[client].front().is_some_and(|h| h.arrival <= wave)
+    }
+
+    /// Stop tracking a slot (its session retired at wave `wave`): the
+    /// in-flight request and any already-arrived backlog are censored —
+    /// a departed user's unserved arrivals are not scheduler misses —
+    /// while requests that had not yet arrived are dropped outright
+    /// (they were never part of the served workload, matching the
+    /// never-arrived rule [`RequestTracker::finish`] applies to
+    /// survivors). The slot reverts to untracked (never-idle) behavior
+    /// so a churned-out member cannot keep accruing phantom SLO
+    /// failures.
+    pub fn untrack(&mut self, client: usize, wave: u64) {
+        if !self.tracked[client] {
+            return;
+        }
+        self.tracked[client] = false;
+        self.busy[client] = true;
+        if self.active[client].take().is_some() {
+            self.censored += 1;
+        }
+        let arrived = self.queues[client].iter().filter(|r| r.arrival <= wave).count();
+        self.censored += arrived as u64;
+        self.queues[client].clear();
+    }
+
+    /// Attribute one client's realized wave goodput to its requests.
+    /// Leftover tokens spill into the next already-arrived request;
+    /// tokens with no arrived request to serve are dropped (an idle
+    /// client's correction token belongs to nobody).
+    pub fn observe(&mut self, wave: u64, client: usize, goodput: usize) {
+        if !self.tracked[client] {
+            return;
+        }
+        let mut tokens = goodput;
+        while tokens > 0 {
+            if self.active[client].is_none() {
+                if !self.head_due(client, wave) {
+                    break;
+                }
+                let req = self.queues[client].pop_front().expect("due head");
+                self.active[client] = Some(Active::from_trace(req));
+            }
+            let a = self.active[client].as_mut().expect("active request");
+            if a.first_token.is_none() {
+                a.first_token = Some(wave);
+            }
+            let take = tokens.min(a.target - a.done);
+            a.done += take;
+            tokens -= take;
+            if a.done >= a.target {
+                let a = self.active[client].take().expect("completing request");
+                // Inclusive latency: completing during wave w costs
+                // w + 1 − arrival waves.
+                let met = wave + 1 - a.arrival <= a.slo_waves;
+                if met {
+                    self.slo_tokens[client] += a.target as f64;
+                }
+                self.records.push(RequestRecord {
+                    client,
+                    arrival: a.arrival,
+                    first_token: a.first_token,
+                    completion: wave,
+                    tokens: a.target,
+                    slo_waves: a.slo_waves,
+                    completed: true,
+                    met,
+                });
+            }
+        }
+    }
+
+    /// SLO headroom of the client's work queue: how far its expected
+    /// service rate exceeds the rate its deadlines require, as a
+    /// fraction (`0` = exactly on track, `> 0` = ahead, `< 0` = behind
+    /// or past due). The constraint is EDF-style over the active request
+    /// *plus* the arrived backlog — for each work item `k`, the
+    /// cumulative tokens through `k` must land before `k`'s deadline —
+    /// and the binding (minimum) slack is reported, so a backlogged
+    /// client with tight deadlines reads behind while one queueing loose
+    /// requests can still be throttled safely. Idle (and untracked)
+    /// clients report `+∞`: no deadline pressure.
+    pub fn headroom(&self, client: usize, wave: u64, expected_rate: f64) -> f64 {
+        if !self.tracked[client] {
+            return f64::INFINITY;
+        }
+        let mut need = 0usize;
+        let mut worst = f64::INFINITY;
+        let mut constrain = |remaining: usize, deadline: u64| -> bool {
+            need += remaining;
+            let left = deadline.saturating_sub(wave);
+            if left == 0 {
+                worst = -1.0;
+                return false;
+            }
+            let required = need as f64 / left as f64;
+            worst = worst.min(expected_rate / required.max(1e-9) - 1.0);
+            true
+        };
+        if let Some(a) = &self.active[client] {
+            if !constrain(a.target - a.done, a.deadline) {
+                return -1.0;
+            }
+        }
+        for r in self.queues[client].iter().take_while(|r| r.arrival <= wave) {
+            if !constrain(r.output_tokens.max(1), r.arrival + r.slo_waves) {
+                return -1.0;
+            }
+        }
+        if worst.is_infinite() {
+            return f64::INFINITY; // nothing arrived: idle
+        }
+        worst.clamp(-1.0, 1e6)
+    }
+
+    /// Wave-boundary sync into the shared core: promote arrivals, set the
+    /// idle mask over `members`, and (when the core runs the closed-loop
+    /// controller) publish each member's SLO headroom evaluated at its
+    /// learned acceptance rate and current speculation cap.
+    pub fn sync_wave_start(&mut self, core: &mut RoundCore, wave: u64, members: &[usize]) {
+        self.begin_wave(wave);
+        for &i in members {
+            core.set_idle(i, !self.is_busy(i));
+            if core.turbo_enabled() {
+                let expected = expected_goodput(core.estimators.alpha_hat[i], core.turbo_cap(i));
+                let h = self.headroom(i, wave, expected);
+                core.set_slo_headroom(i, h);
+            }
+        }
+    }
+
+    /// Post-wave attribution of `(client, goodput)` pairs.
+    pub fn sync_wave_end(&mut self, wave: u64, outcomes: &[(usize, usize)]) {
+        for &(client, goodput) in outcomes {
+            self.observe(wave, client, goodput);
+        }
+    }
+
+    /// Close the books at the end of the run (`final_wave` = one past the
+    /// last processed wave): requests whose deadline already passed are
+    /// recorded as expired misses; pending requests whose deadline is
+    /// still in the future are censored (dropped from attainment).
+    pub fn finish(&mut self, final_wave: u64) {
+        for client in 0..self.queues.len() {
+            if let Some(a) = self.active[client].take() {
+                if a.deadline <= final_wave {
+                    self.records.push(RequestRecord {
+                        client,
+                        arrival: a.arrival,
+                        first_token: a.first_token,
+                        completion: final_wave.max(1) - 1,
+                        tokens: a.done,
+                        slo_waves: a.slo_waves,
+                        completed: false,
+                        met: false,
+                    });
+                } else {
+                    self.censored += 1;
+                }
+            }
+            while let Some(head) = self.queues[client].pop_front() {
+                if head.arrival >= final_wave {
+                    // Never arrived within the run: not attributable.
+                    continue;
+                }
+                if head.arrival + head.slo_waves <= final_wave {
+                    self.records.push(RequestRecord {
+                        client,
+                        arrival: head.arrival,
+                        first_token: None,
+                        completion: final_wave.max(1) - 1,
+                        tokens: 0,
+                        slo_waves: head.slo_waves,
+                        completed: false,
+                        met: false,
+                    });
+                } else {
+                    self.censored += 1;
+                }
+            }
+        }
+    }
+
+    /// All finished/expired request records so far, arrival order within
+    /// each client.
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// Consume the tracker, yielding its records, per-client SLO-goodput
+    /// totals, and the censored-request count (handed to the recorder).
+    pub fn into_report(self) -> (Vec<RequestRecord>, Vec<f64>, u64) {
+        (self.records, self.slo_tokens, self.censored)
+    }
+
+    /// Per-client Σ tokens of deadline-met requests.
+    pub fn slo_goodput(&self) -> &[f64] {
+        &self.slo_tokens
+    }
+
+    /// Reduce the records to the p50/p95/p99 report row. See
+    /// [`summarize_requests`] for the free-standing form recorders use.
+    pub fn summary(&self) -> SloSummary {
+        summarize_requests(&self.records, self.censored)
+    }
+}
+
+/// Reduce request records to the standard SLO report row (percentiles
+/// over completed requests; attainment over completed + expired).
+pub fn summarize_requests(records: &[RequestRecord], censored: u64) -> SloSummary {
+    let done: Vec<&RequestRecord> = records.iter().filter(|r| r.completed).collect();
+    let expired = (records.len() - done.len()) as u64;
+    let met = records.iter().filter(|r| r.met).count() as u64;
+    let attributable = done.len() as u64 + expired;
+    let ttft: Vec<f64> = done.iter().map(|r| r.ttft_waves()).collect();
+    let tpot: Vec<f64> = done.iter().map(|r| r.tpot_waves()).collect();
+    let e2e: Vec<f64> = done.iter().map(|r| r.e2e_waves()).collect();
+    SloSummary {
+        completed: done.len() as u64,
+        expired,
+        censored,
+        attainment: if attributable == 0 { 1.0 } else { met as f64 / attributable as f64 },
+        ttft: p50_p95_p99(&ttft),
+        tpot: p50_p95_p99(&tpot),
+        e2e: p50_p95_p99(&e2e),
+        slo_goodput_total: records.iter().filter(|r| r.met).map(|r| r.tokens as f64).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(reqs: Vec<Vec<(u64, usize, u64)>>) -> RequestTrace {
+        RequestTrace {
+            per_client: reqs
+                .into_iter()
+                .map(|c| {
+                    c.into_iter()
+                        .map(|(arrival, output_tokens, slo_waves)| TraceRequest {
+                            arrival,
+                            output_tokens,
+                            slo_waves,
+                        })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn lifecycle_ttft_e2e_and_slo() {
+        // One client, one request: 6 tokens arriving at wave 2, SLO 4.
+        let mut t = RequestTracker::new(trace(vec![vec![(2, 6, 4)]]), 1);
+        t.begin_wave(0);
+        assert!(!t.is_busy(0), "nothing arrived yet");
+        t.observe(0, 0, 3); // idle tokens: dropped
+        t.begin_wave(2);
+        assert!(t.is_busy(0));
+        t.observe(2, 0, 3); // first 3 tokens
+        t.observe(3, 0, 3); // completes during wave 3
+        t.finish(10);
+        let recs = t.records();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert!(r.completed && r.met);
+        assert_eq!(r.first_token, Some(2));
+        assert_eq!(r.completion, 3);
+        assert!((r.ttft_waves() - 1.0).abs() < 1e-12);
+        assert!((r.e2e_waves() - 2.0).abs() < 1e-12);
+        assert!((r.tpot_waves() - (1.0 / 5.0)).abs() < 1e-12);
+        assert_eq!(t.slo_goodput()[0], 6.0);
+        let s = t.summary();
+        assert_eq!((s.completed, s.expired, s.censored), (1, 0, 0));
+        assert!((s.attainment - 1.0).abs() < 1e-12);
+        assert!((s.slo_goodput_total - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missed_deadline_keeps_tokens_out_of_slo_goodput() {
+        // 8 tokens, SLO 2 waves, served 2 tokens/wave ⇒ completes at wave
+        // 3 (e2e 4 > 2): raw tokens flow, SLO-goodput stays 0.
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 8, 2)]]), 1);
+        for wave in 0..4 {
+            t.begin_wave(wave);
+            t.observe(wave, 0, 2);
+        }
+        t.finish(4);
+        let r = &t.records()[0];
+        assert!(r.completed && !r.met);
+        assert_eq!(r.tokens, 8);
+        assert_eq!(t.slo_goodput()[0], 0.0);
+        let s = t.summary();
+        assert!((s.attainment - 0.0).abs() < 1e-12);
+        assert!((s.slo_goodput_total - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spillover_feeds_the_next_arrived_request_only() {
+        // Two 2-token requests, the second arriving at wave 5. A 6-token
+        // wave at wave 0 completes the first but must NOT pre-serve the
+        // second; a 6-token wave at 5 completes it with spillover intact.
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 2, 10), (5, 2, 10)]]), 1);
+        t.begin_wave(0);
+        t.observe(0, 0, 6);
+        assert_eq!(t.records().len(), 1, "future requests cannot be served");
+        t.begin_wave(5);
+        t.observe(5, 0, 6);
+        assert_eq!(t.records().len(), 2);
+        assert_eq!(t.records()[1].first_token, Some(5), "spillover stamps TTFT");
+        // Back-to-back arrivals do chain within one wave.
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 2, 10), (0, 2, 10)]]), 1);
+        t.begin_wave(0);
+        t.observe(0, 0, 5);
+        assert_eq!(t.records().len(), 2, "burst chains through spillover");
+    }
+
+    #[test]
+    fn finish_separates_expired_from_censored() {
+        // Request A expired (deadline 4 < final 10); request B pending
+        // with a future deadline (censored); request C never arrived.
+        let schedule = trace(vec![vec![(0, 4, 4)], vec![(8, 4, 40)], vec![(30, 4, 5)]]);
+        let mut t = RequestTracker::new(schedule, 3);
+        t.begin_wave(8);
+        t.observe(8, 1, 1);
+        t.finish(10);
+        let s = t.summary();
+        assert_eq!((s.completed, s.expired, s.censored), (0, 1, 1));
+        assert!((s.attainment - 0.0).abs() < 1e-12);
+        let expired = &t.records()[0];
+        assert_eq!(expired.client, 0);
+        assert!(!expired.completed && expired.first_token.is_none());
+    }
+
+    #[test]
+    fn untracked_slots_stay_busy_and_unattributed() {
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 2, 5)]]), 3);
+        t.begin_wave(0);
+        assert!(t.is_busy(0));
+        assert!(t.is_busy(1) && t.is_busy(2), "untracked ⇒ closed loop ⇒ busy");
+        t.observe(0, 2, 9);
+        t.finish(5);
+        assert!(t.records().iter().all(|r| r.client == 0));
+        assert_eq!(t.headroom(2, 0, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn untrack_censors_a_retired_sessions_leftovers() {
+        // Client 0 departs at wave 5 with one request active, one
+        // arrived-but-queued, and one that would only arrive at wave 60:
+        // the first two are censored, the never-arrived one is dropped
+        // (same rule `finish` applies to survivors), and none of them
+        // may surface as scheduler misses.
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 8, 4), (2, 8, 4), (60, 8, 4)]]), 1);
+        t.begin_wave(0);
+        t.observe(0, 0, 2); // partially served
+        t.untrack(0, 5);
+        assert!(t.is_busy(0), "untracked slots revert to closed-loop busy");
+        t.begin_wave(5);
+        t.observe(5, 0, 50); // post-departure tokens: unattributed
+        t.finish(100);
+        let s = t.summary();
+        assert_eq!((s.completed, s.expired), (0, 0), "no phantom misses");
+        assert_eq!(s.censored, 2, "active + arrived backlog censored, future dropped");
+        assert!((s.attainment - 1.0).abs() < 1e-12, "nothing attributable");
+        assert!(t.records().is_empty());
+        // Idempotent.
+        t.untrack(0, 5);
+        assert_eq!(t.summary().censored, 2);
+        assert_eq!(t.headroom(0, 5, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn headroom_signs_match_the_deadline_math() {
+        // 10 tokens due in 10 waves ⇒ required rate 1.0.
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 10, 10)]]), 1);
+        t.begin_wave(0);
+        assert!((t.headroom(0, 0, 2.0) - 1.0).abs() < 1e-9, "2× the required rate");
+        assert!((t.headroom(0, 0, 0.5) - (-0.5)).abs() < 1e-9, "half the required rate");
+        // Past due: hard behind.
+        assert!((t.headroom(0, 10, 9.0) - (-1.0)).abs() < 1e-12);
+        // Idle: no pressure.
+        let t2 = RequestTracker::new(trace(vec![vec![(50, 2, 5)]]), 1);
+        assert_eq!(t2.headroom(0, 0, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn headroom_is_edf_over_the_arrived_backlog() {
+        // Active: 10 tokens due in 20 waves (loose). Queued, arrived: 10
+        // more due in 10 waves ⇒ the *cumulative* constraint 20 tokens /
+        // 10 waves = 2.0 binds, not the active request's 0.5.
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 10, 20), (0, 10, 10)]]), 1);
+        t.begin_wave(0);
+        assert!((t.headroom(0, 0, 2.0) - 0.0).abs() < 1e-9, "cumulative EDF slack");
+        // A backlog of *loose* requests leaves positive headroom (the
+        // client is safely throttleable despite being busy).
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 10, 20), (0, 10, 100)]]), 1);
+        t.begin_wave(0);
+        assert!(t.headroom(0, 0, 2.0) > 1.0, "loose backlog stays throttleable");
+        // Future requests never constrain (they have not arrived).
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 10, 20), (90, 10, 2)]]), 1);
+        t.begin_wave(0);
+        assert!(t.headroom(0, 0, 2.0) > 1.0);
+        // A past-due queued request is hard behind.
+        let mut t = RequestTracker::new(trace(vec![vec![(0, 10, 20), (0, 10, 3)]]), 1);
+        t.begin_wave(3);
+        assert!((t.headroom(0, 3, 9.0) - (-1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentiles_over_completed_requests() {
+        let mut t = RequestTracker::new(
+            trace(vec![vec![(0, 2, 40), (10, 2, 40), (20, 2, 40)]]),
+            1,
+        );
+        for (wave, g) in [(0u64, 2usize), (10, 2), (20, 2)] {
+            t.begin_wave(wave);
+            t.observe(wave, 0, g);
+        }
+        t.finish(30);
+        let s = t.summary();
+        assert_eq!(s.completed, 3);
+        // Every request completed in exactly one wave: all latencies 1.
+        assert!((s.e2e.0 - 1.0).abs() < 1e-12);
+        assert!((s.e2e.2 - 1.0).abs() < 1e-12);
+        assert!((s.ttft.1 - 1.0).abs() < 1e-12);
+        assert!((s.attainment - 1.0).abs() < 1e-12);
+        assert!((s.slo_goodput_total - 6.0).abs() < 1e-12);
+    }
+}

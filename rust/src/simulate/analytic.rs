@@ -31,6 +31,7 @@ use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
 use crate::sched::baselines::Allocator;
 use crate::sched::gradient::split_budget_by_members;
 use crate::sched::Estimators;
+use crate::serve::{RequestTrace, RequestTracker};
 use crate::spec::tree::{adaptive_profile, DraftTree};
 use crate::util::Rng;
 use crate::workload::domains::DOMAINS;
@@ -150,6 +151,11 @@ pub struct AnalyticSim {
     next_join_slot: usize,
     /// Membership epoch (bumps on every join/retire, like the live side).
     epoch: u64,
+    /// Request-level serving overlay (`Scenario::trace`) — the *same*
+    /// tracker type the live cluster drives, at the same wave
+    /// boundaries, so live and analytic SLO accounting cross-check.
+    /// [`AnalyticSim::run`] closes the books into the recorder.
+    tracker: Option<RequestTracker>,
     round: u64,
     /// Per-client round-trip time (uplink with q payload + verdict
     /// downlink), from the scenario's links.
@@ -254,6 +260,13 @@ impl AnalyticSim {
         let ready_at: Vec<f64> = (0..slots)
             .map(|i| rtt_s[i] + cfg.draft_token_s * initial as f64)
             .collect();
+        let tracker = if scenario.trace.is_some() {
+            let trace = RequestTrace::from_scenario(scenario, slots)
+                .expect("resolve the scenario's request trace");
+            Some(RequestTracker::new(trace, slots))
+        } else {
+            None
+        };
         AnalyticSim {
             rng: Rng::new(cfg.seed ^ 0xAAA),
             alloc: vec![initial; slots],
@@ -263,6 +276,7 @@ impl AnalyticSim {
             schedule_cursor: 0,
             next_join_slot: n,
             epoch: 0,
+            tracker,
             clients,
             cfg,
             round: 0,
@@ -420,6 +434,12 @@ impl AnalyticSim {
     /// pre-core simulator.
     pub fn step(&mut self) -> Vec<usize> {
         let members = self.members.clone();
+        // Request boundary: promote due arrivals, refresh the idle mask,
+        // publish SLO headroom — the same tracker call the live cluster
+        // makes at its wave boundary.
+        if let Some(tracker) = &mut self.tracker {
+            tracker.sync_wave_start(&mut self.core, self.round, &members);
+        }
         let mut obs = Vec::with_capacity(members.len());
         let mut goodputs = Vec::with_capacity(members.len());
         for &i in &members {
@@ -450,6 +470,11 @@ impl AnalyticSim {
         for (j, &i) in members.iter().enumerate() {
             self.alloc[i] = next[j];
         }
+        if let Some(tracker) = &mut self.tracker {
+            let outcomes: Vec<(usize, usize)> =
+                obs.iter().map(|o| (o.client_id, o.goodput)).collect();
+            tracker.sync_wave_end(self.round, &outcomes);
+        }
         self.clock += recv_s + self.cfg.verify_s;
         self.round += 1;
         goodputs
@@ -460,6 +485,11 @@ impl AnalyticSim {
     /// verify the ready member subset, reschedule only its members.
     /// Returns the wave's `(client_id, goodput)` pairs.
     pub fn step_wave(&mut self) -> Vec<(usize, usize)> {
+        // Request boundary (same rules as the sync step).
+        if let Some(tracker) = &mut self.tracker {
+            let members = self.members.clone();
+            tracker.sync_wave_start(&mut self.core, self.round, &members);
+        }
         let m = self.members.len();
         // `min_wave_fill` is pre-resolved by `SimConfig::from_scenario`
         // (Scenario::effective_wave_fill); clamp defensively for
@@ -514,9 +544,13 @@ impl AnalyticSim {
             self.ready_at[i] =
                 t_done + self.rtt_s[i] + self.cfg.draft_token_s * next[j] as f64;
         }
+        let outcomes: Vec<(usize, usize)> = obs.iter().map(|o| (o.client_id, o.goodput)).collect();
+        if let Some(tracker) = &mut self.tracker {
+            tracker.sync_wave_end(self.round, &outcomes);
+        }
         self.clock = t_done;
         self.round += 1;
-        obs.iter().map(|o| (o.client_id, o.goodput)).collect()
+        outcomes
     }
 
     /// Apply churn events due at the current wave boundary — the same
@@ -572,6 +606,9 @@ impl AnalyticSim {
         for &id in participants {
             if self.core.is_draining(id) {
                 self.core.retire_member(id);
+                if let Some(tracker) = &mut self.tracker {
+                    tracker.untrack(id, self.round);
+                }
                 self.members.retain(|&m| m != id);
                 self.epoch += 1;
                 self.core.recorder.note_membership(MembershipEvent {
@@ -615,6 +652,27 @@ impl AnalyticSim {
                 }
             }
         }
+        // Trace-driven runs: close the request books into the recorder
+        // (expired requests become recorded misses, pending ones are
+        // censored) — the same epilogue the live cluster runs.
+        if let Some(mut tracker) = self.tracker.take() {
+            tracker.finish(self.round);
+            let (requests, slo_goodput, censored) = tracker.into_report();
+            self.core.recorder.requests = requests;
+            self.core.recorder.slo_goodput = slo_goodput;
+            self.core.recorder.requests_censored = censored;
+        }
+    }
+
+    /// Pin client `i`'s *true* acceptance rate to `alpha` (stationary
+    /// domains): live-vs-analytic cross-checks use this to evaluate the
+    /// analytic model at a live run's *observed* acceptance rates, so
+    /// the comparison is engine-independent.
+    pub fn pin_alpha(&mut self, i: usize, alpha: f64) {
+        let c = &mut self.clients[i];
+        c.stickiness = 1.0;
+        c.current_domain = c.primary_domain;
+        c.quality = alpha.clamp(0.02, 0.98) / domain_alpha(c.primary_domain);
     }
 }
 
@@ -1009,6 +1067,74 @@ mod tests {
             est.alpha_hat[4],
             resident_mean
         );
+    }
+
+    /// Trace-driven model: requests are accounted against the same wave
+    /// stream the scheduler sees, idle clients are granted 0 (their
+    /// budget water-fills over busy ones), and the SLO series is a
+    /// filtered view of raw goodput.
+    #[test]
+    fn trace_runs_account_requests_and_idle_waves() {
+        let s = Scenario::preset("trace").unwrap();
+        let mut sim = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        sim.run();
+        let rec = sim.recorder();
+        assert!(rec.has_requests());
+        assert!(!rec.requests.is_empty());
+        let summary = rec.slo_summary().unwrap();
+        assert!(summary.completed > 0);
+        assert!((0.0..=1.0).contains(&summary.attainment));
+        for (slo, raw) in rec.slo_goodput.iter().zip(rec.cum_goodput()) {
+            assert!(slo <= raw + 1e-9);
+        }
+        // Idle masking: some wave ran one client at a zero grant while
+        // another drafted (Poisson gaps ≫ service times guarantee idle
+        // stretches).
+        let idle_wave = rec.rounds.iter().any(|r| {
+            r.clients.iter().any(|c| c.s_used == 0) && r.clients.iter().any(|c| c.s_used > 0)
+        });
+        assert!(idle_wave, "idle clients must be granted 0 while busy ones draft");
+        // Budget respected on every wave regardless of masking.
+        for r in &rec.rounds {
+            let used: usize = r.clients.iter().map(|c| c.s_used).sum();
+            assert!(used <= s.capacity, "{used}");
+        }
+        // Deterministic: the same scenario replays the same books.
+        let mut again = AnalyticSim::from_scenario(&s, Policy::GoodSpeed);
+        again.run();
+        assert_eq!(again.recorder().requests.len(), rec.requests.len());
+        assert_eq!(again.recorder().slo_goodput, rec.slo_goodput);
+    }
+
+    /// `policy=turbo` runs the same allocator under controller caps: the
+    /// budget invariant holds, requests still complete, and without any
+    /// deadline pressure it matches GoodSpeed exactly (no trace ⇒ the
+    /// caps never bind).
+    #[test]
+    fn turbo_runs_traces_and_degrades_to_goodspeed_without_one() {
+        let s = Scenario::preset("trace").unwrap();
+        let mut sim = AnalyticSim::from_scenario(&s, Policy::Turbo);
+        sim.run();
+        let summary = sim.recorder().slo_summary().unwrap();
+        assert!(summary.completed > 0, "turbo must still serve requests");
+        for r in &sim.recorder().rounds {
+            let used: usize = r.clients.iter().map(|c| c.s_used).sum();
+            assert!(used <= s.capacity, "{used}");
+        }
+        // Request-free: turbo ≡ goodspeed, wave for wave.
+        let mut bare = Scenario::preset("qwen-4c-50").unwrap();
+        bare.rounds = 80;
+        let mut gs = AnalyticSim::from_scenario(&bare, Policy::GoodSpeed);
+        gs.run();
+        let mut tb = AnalyticSim::from_scenario(&bare, Policy::Turbo);
+        tb.run();
+        for (a, b) in gs.recorder().rounds.iter().zip(tb.recorder().rounds.iter()) {
+            for (ca, cb) in a.clients.iter().zip(&b.clients) {
+                assert_eq!(ca.s_used, cb.s_used);
+                assert_eq!(ca.goodput, cb.goodput);
+                assert_eq!(ca.next_alloc, cb.next_alloc);
+            }
+        }
     }
 
     #[test]

@@ -9,5 +9,5 @@ pub mod stats;
 pub mod timer;
 
 pub use prng::Rng;
-pub use stats::{jain_index, MovingAvg, RunningStat};
+pub use stats::{jain_index, p50_p95_p99, percentile, MovingAvg, RunningStat};
 pub use timer::Stopwatch;

@@ -125,12 +125,25 @@ pub fn jain_index(xs: &[f64]) -> f64 {
 }
 
 /// Exact quantile by sorting a copy (fine for per-experiment reporting).
+/// `q ∈ [0, 1]`; see [`percentile`] for the `[0, 100]`-scaled form every
+/// report column uses.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Linear-interpolation quantile over an already-sorted slice — the one
+/// interpolation rule (the "linear"/type-7 estimator: position
+/// `q·(n−1)`, interpolate between the straddling order statistics) every
+/// percentile consumer shares.
+fn quantile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -139,6 +152,24 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
     } else {
         v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
     }
+}
+
+/// Linear-interpolation percentile, `p ∈ [0, 100]` (p50/p95/p99 report
+/// columns). Empty input yields 0 — report rows stay well-defined before
+/// the first request completes. Single-element and all-duplicate inputs
+/// return that value at every p.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    quantile(xs, p / 100.0)
+}
+
+/// The standard report triple (p50, p95, p99) of a sample.
+pub fn p50_p95_p99(xs: &[f64]) -> (f64, f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (quantile_sorted(&v, 0.50), quantile_sorted(&v, 0.95), quantile_sorted(&v, 0.99))
 }
 
 #[cfg(test)]
@@ -216,5 +247,71 @@ mod tests {
         assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
         assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Empty: well-defined 0 (reports render before any request ends).
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(p50_p95_p99(&[]), (0.0, 0.0, 0.0));
+        // Single element: that value at every p.
+        for p in [0.0, 37.0, 50.0, 99.0, 100.0] {
+            assert!((percentile(&[4.2], p) - 4.2).abs() < 1e-12, "p = {p}");
+        }
+        // Duplicates: constant samples are constant at every p.
+        let dup = [7.0; 9];
+        for p in [0.0, 25.0, 50.0, 95.0, 100.0] {
+            assert!((percentile(&dup, p) - 7.0).abs() < 1e-12, "p = {p}");
+        }
+        // Mixed duplicates interpolate between the order statistics.
+        let xs = [1.0, 1.0, 1.0, 2.0];
+        assert!((percentile(&xs, 50.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 2.0).abs() < 1e-12);
+        // Out-of-range p clamps.
+        assert!((percentile(&xs, -10.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 240.0) - 2.0).abs() < 1e-12);
+        // Unsorted input is handled (sorting is internal).
+        assert!((percentile(&[3.0, 1.0, 2.0], 50.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_triple_matches_scalar_calls() {
+        let xs = [5.0, 1.0, 9.0, 3.0, 7.0];
+        let (p50, p95, p99) = p50_p95_p99(&xs);
+        assert!((p50 - percentile(&xs, 50.0)).abs() < 1e-12);
+        assert!((p95 - percentile(&xs, 95.0)).abs() < 1e-12);
+        assert!((p99 - percentile(&xs, 99.0)).abs() < 1e-12);
+    }
+
+    /// Property: against a sorted-scan reference implementation — the
+    /// interpolated value lies between the straddling order statistics,
+    /// exact at integer positions, monotone in p, and within the sample
+    /// range everywhere.
+    #[test]
+    fn prop_percentile_matches_sorted_scan_reference() {
+        crate::util::proptest::check(
+            "percentile_reference",
+            crate::util::proptest::default_cases(),
+            |rng| {
+                let n = 1 + rng.below(40) as usize;
+                // Draws from a small integer lattice force duplicates.
+                let xs: Vec<f64> = (0..n).map(|_| rng.below(8) as f64).collect();
+                let mut sorted = xs.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let mut prev = f64::NEG_INFINITY;
+                for step in 0..=20 {
+                    let p = step as f64 * 5.0;
+                    let got = percentile(&xs, p);
+                    // Reference: scan the sorted copy at position q·(n−1).
+                    let pos = (p / 100.0) * (n - 1) as f64;
+                    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+                    let want = sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64);
+                    assert!((got - want).abs() < 1e-9, "p={p}: {got} vs {want}");
+                    assert!(got >= sorted[0] - 1e-9 && got <= sorted[n - 1] + 1e-9);
+                    assert!(got >= prev - 1e-9, "percentile must be monotone in p");
+                    prev = got;
+                }
+            },
+        );
     }
 }

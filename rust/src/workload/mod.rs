@@ -1,5 +1,15 @@
 //! Workload generation: the eight dataset analogs and non-stationary
 //! per-client prompt streams.
+//!
+//! Streams are *closed-loop*: [`DomainStream::next_request`] always has
+//! the next prompt ready, which is what the paper's goodput experiments
+//! measure. The request-level serving layer (`serve/`) turns this into
+//! an *open-loop* workload by layering a trace of discrete arrivals on
+//! top — the stream still supplies the token content, while
+//! [`serve::RequestTrace`](crate::serve::RequestTrace) decides when a
+//! client has work at all (idle clients are granted no speculation
+//! budget) and [`serve::RequestTracker`](crate::serve::RequestTracker)
+//! accounts each request's TTFT/TPOT/E2E and SLO outcome.
 
 pub mod domains;
 pub mod stream;

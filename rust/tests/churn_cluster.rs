@@ -35,27 +35,20 @@ fn serve(s: Scenario, policy: Policy) -> RunOutcome {
         .expect("run")
 }
 
-/// Static-membership parity: a preset run through the session API is
-/// bit-identical to the deprecated `run_serving` shim — same waves, same
-/// RNG-determined fields, and byte-identical CSV output once the
+/// Static-membership parity on the builder path (the deprecated
+/// `run_serving` shim — literally `builder → start → wait` — is gone):
+/// independent one-shot session runs are bit-identical — same waves,
+/// same RNG-determined fields, and byte-identical CSV output once the
 /// wall-clock timing columns (never reproducible across runs) are
 /// normalized.
 #[test]
-#[allow(deprecated)]
-fn static_preset_runs_are_bit_identical_to_run_serving() {
-    use goodspeed::coordinator::{run_serving, RunConfig};
+fn static_preset_runs_are_bit_identical_across_sessions() {
     let scenario = || {
         let mut s = Scenario::preset("smoke").unwrap();
         s.rounds = 20;
         s
     };
-    let cfg = RunConfig {
-        scenario: scenario(),
-        policy: Policy::GoodSpeed,
-        transport: Transport::Channel,
-        simulate_network: false,
-    };
-    let mut shim = run_serving(&cfg, factory()).unwrap();
+    let mut shim = serve(scenario(), Policy::GoodSpeed);
     let mut sess = serve(scenario(), Policy::GoodSpeed);
     assert!(sess.recorder.membership.is_empty(), "static runs record no epochs");
     assert_eq!(shim.recorder.rounds.len(), sess.recorder.rounds.len());
