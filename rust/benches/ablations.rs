@@ -5,12 +5,14 @@
 use goodspeed::cli::Args;
 use goodspeed::experiments::ablation;
 
+mod common;
+
 fn main() {
     goodspeed::util::logger::init();
     let args = Args::parse(vec![
         "ablation".to_string(),
         "--rounds".into(),
-        "600".into(),
+        common::rounds(60, 600).to_string(),
         "--out".into(),
         "results".into(),
     ]);

@@ -8,6 +8,8 @@ use goodspeed::configsys::{Policy, Scenario};
 use goodspeed::coordinator::Transport;
 use goodspeed::experiments::{mock_engine, serve_once};
 
+mod common;
+
 fn run(transport: Transport, clients: usize, rounds: u64, network: bool) -> (f64, f64) {
     let mut s = Scenario::preset("qwen-8c-150").unwrap();
     s.num_clients = clients;
@@ -26,10 +28,11 @@ fn main() {
         "{:<9} {:>8} {:>8} {:>12} {:>12}",
         "transport", "clients", "netsim", "ms/round", "tok/s"
     );
+    let rounds = common::rounds(15, 150);
     for (transport, name) in [(Transport::Channel, "channel"), (Transport::Tcp, "tcp")] {
         for clients in [2usize, 8] {
             for network in [false, true] {
-                let (ms, tps) = run(transport, clients, 150, network);
+                let (ms, tps) = run(transport, clients, rounds, network);
                 println!(
                     "{name:<9} {clients:>8} {:>8} {ms:>12.3} {tps:>12.0}",
                     if network { "on" } else { "off" }

@@ -8,10 +8,13 @@
 use goodspeed::cli::Args;
 use goodspeed::experiments::fig2;
 
+mod common;
+
 fn main() {
     goodspeed::util::logger::init();
-    let rounds =
-        std::env::var("GOODSPEED_BENCH_ROUNDS").ok().unwrap_or_else(|| "100".into());
+    let rounds = std::env::var("GOODSPEED_BENCH_ROUNDS")
+        .ok()
+        .unwrap_or_else(|| common::rounds(20, 100).to_string());
     let args = Args::parse(vec![
         "fig2".to_string(),
         "--rounds".into(),

@@ -5,10 +5,13 @@
 use goodspeed::cli::Args;
 use goodspeed::experiments::fig3;
 
+mod common;
+
 fn main() {
     goodspeed::util::logger::init();
-    let rounds =
-        std::env::var("GOODSPEED_BENCH_ROUNDS").ok().unwrap_or_else(|| "50".into());
+    let rounds = std::env::var("GOODSPEED_BENCH_ROUNDS")
+        .ok()
+        .unwrap_or_else(|| common::rounds(10, 50).to_string());
     let args = Args::parse(vec![
         "fig3".to_string(),
         "--rounds".into(),

@@ -6,12 +6,14 @@
 use goodspeed::cli::Args;
 use goodspeed::experiments::fig4;
 
+mod common;
+
 fn main() {
     goodspeed::util::logger::init();
     let args = Args::parse(vec![
         "fig4".to_string(),
         "--rounds".into(),
-        "600".into(),
+        common::rounds(60, 600).to_string(),
         "--out".into(),
         "results".into(),
     ]);

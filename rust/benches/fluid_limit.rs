@@ -5,12 +5,14 @@
 use goodspeed::cli::Args;
 use goodspeed::experiments::fluid_exp;
 
+mod common;
+
 fn main() {
     goodspeed::util::logger::init();
     let args = Args::parse(vec![
         "fluid".to_string(),
         "--rounds".into(),
-        "4000".into(),
+        common::rounds(400, 4000).to_string(),
         "--out".into(),
         "results".into(),
     ]);

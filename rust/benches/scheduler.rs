@@ -12,6 +12,8 @@ use goodspeed::sched::gradient::{objective, solve_dp, solve_greedy, AllocInput};
 use goodspeed::sched::Estimators;
 use goodspeed::util::Rng;
 
+mod common;
+
 fn bench<F: FnMut()>(label: &str, iters: u64, mut f: F) -> f64 {
     // warmup
     for _ in 0..iters / 10 + 1 {
@@ -28,6 +30,9 @@ fn bench<F: FnMut()>(label: &str, iters: u64, mut f: F) -> f64 {
 
 fn main() {
     println!("== scheduler microbench ==");
+    // `--quick` scales every iteration count down 10× (same sizes, same
+    // greedy-vs-DP assertions).
+    let scale = common::rounds(1, 10);
     let mut rng = Rng::new(1);
     for (n, c) in [(4usize, 24usize), (8, 20), (8, 28), (64, 256), (256, 1024), (1024, 4096)] {
         let weights: Vec<f64> = (0..n).map(|_| rng.f64() + 0.05).collect();
@@ -36,11 +41,11 @@ fn main() {
         let input =
             AllocInput { weights: &weights, alphas: &alphas, capacity: c, max_per_client: &caps };
         let mut sink = 0usize;
-        bench(&format!("greedy  N={n:<5} C={c}"), 20_000.min(2_000_000 / c as u64), || {
+        bench(&format!("greedy  N={n:<5} C={c}"), scale * 2_000.min(200_000 / c as u64), || {
             sink += solve_greedy(&input).iter().sum::<usize>();
         });
         if n <= 64 {
-            bench(&format!("dp      N={n:<5} C={c}"), 200, || {
+            bench(&format!("dp      N={n:<5} C={c}"), scale * 20, || {
                 sink += solve_dp(&input).iter().sum::<usize>();
             });
             let g = objective(&input, &solve_greedy(&input));
@@ -54,7 +59,7 @@ fn main() {
     for n in [8usize, 64, 1024] {
         let mut est = Estimators::new(n, Smoothing::Fixed(0.3), Smoothing::Fixed(0.5));
         let obs: Vec<Option<(f64, f64)>> = (0..n).map(|i| Some((0.5, i as f64))).collect();
-        bench(&format!("estimators.update_round N={n}"), 100_000, || {
+        bench(&format!("estimators.update_round N={n}"), scale * 10_000, || {
             est.update_round(&obs);
         });
     }

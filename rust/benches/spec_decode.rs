@@ -6,6 +6,8 @@ use std::time::Instant;
 use goodspeed::spec::rejection::verify_client;
 use goodspeed::util::Rng;
 
+mod common;
+
 fn bench<F: FnMut()>(label: &str, iters: u64, mut f: F) -> f64 {
     for _ in 0..iters / 10 + 1 {
         f();
@@ -21,13 +23,15 @@ fn bench<F: FnMut()>(label: &str, iters: u64, mut f: F) -> f64 {
 
 fn main() {
     println!("== speculative-decoding core microbench ==");
+    // `--quick` scales the iteration counts down 10× (same shapes).
+    let scale = common::rounds(1, 10);
     let mut rng = Rng::new(2);
     for (s, vocab) in [(4usize, 256usize), (16, 256), (32, 256)] {
         let ratios: Vec<f32> = (0..s).map(|_| rng.f32() * 0.8 + 0.1).collect();
         let resid: Vec<f32> = (0..(s + 1) * vocab).map(|_| rng.f32()).collect();
         let bonus: Vec<f32> = (0..vocab).map(|_| rng.f32()).collect();
         let mut out = 0usize;
-        bench(&format!("verify_client S={s:<3} V={vocab}"), 200_000, || {
+        bench(&format!("verify_client S={s:<3} V={vocab}"), scale * 20_000, || {
             out += verify_client(&ratios, &resid, &bonus, vocab, &mut rng).goodput;
         });
         std::hint::black_box(out);
@@ -36,7 +40,7 @@ fn main() {
     for vocab in [64usize, 256, 1024] {
         let w: Vec<f32> = (0..vocab).map(|_| rng.f32()).collect();
         let mut acc = 0usize;
-        bench(&format!("categorical V={vocab}"), 500_000, || {
+        bench(&format!("categorical V={vocab}"), scale * 50_000, || {
             acc += rng.categorical(&w);
         });
         std::hint::black_box(acc);

@@ -28,7 +28,7 @@ use crate::spec::tree::{DraftTree, NO_PARENT};
 /// Per-client view the leader keeps for the wave. Row `b` of the verify
 /// request corresponds to `views[b]`; `client_id` is the *actual* client,
 /// not the row index.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClientRound {
     pub client_id: usize,
     pub prefix_len: usize,
@@ -44,21 +44,66 @@ pub struct ClientRound {
     pub draft_wall_ns: u64,
 }
 
+/// Reusable per-wave buffers: the batched [`VerifyRequest`] plus the
+/// per-client views, recycled across waves so steady-state assembly never
+/// touches the heap.
+///
+/// * Request buffers are `clear()` + `resize()`d each wave — within the
+///   high-water capacity that is a pure memset, no allocation.
+/// * Each view slot caches its [`DraftTree`]: when a client redrafts the
+///   same shape (chain of the same length, or an identical explicit
+///   parent array — the steady state), the topology and its derived
+///   tables are reused instead of rebuilt.
+///
+/// After a failed build the arena contents are unspecified; the next
+/// successful [`build_verify_request_into`] fully rewrites them.
+#[derive(Debug, Default)]
+pub struct WaveArena {
+    /// The request assembled by the latest successful build.
+    pub req: VerifyRequest,
+    /// Row `b` of `req` maps to `views[b]` (latest successful build).
+    pub views: Vec<ClientRound>,
+}
+
+impl WaveArena {
+    pub fn new() -> WaveArena {
+        WaveArena::default()
+    }
+}
+
 /// Build the batched request for one wave. `msgs` holds one message per
 /// *participating* client in strictly increasing client-id order (any
 /// subset; a full round is simply the subset of everyone).
+///
+/// Convenience wrapper over [`build_verify_request_into`] that allocates
+/// fresh buffers; the wave hot path keeps a [`WaveArena`] instead.
 pub fn build_verify_request(
     msgs: &[DraftMsg],
     buckets: &[(usize, usize)],
     k: usize,
     vocab: usize,
 ) -> Result<(VerifyRequest, Vec<ClientRound>)> {
+    let mut arena = WaveArena::new();
+    build_verify_request_into(msgs, buckets, k, vocab, &mut arena)?;
+    Ok((arena.req, arena.views))
+}
+
+/// Assemble one wave's batched request into `arena`, reusing its buffers
+/// and cached topologies (see [`WaveArena`]). On success `arena.req` /
+/// `arena.views` describe this wave; on error their contents are
+/// unspecified.
+pub fn build_verify_request_into(
+    msgs: &[DraftMsg],
+    buckets: &[(usize, usize)],
+    k: usize,
+    vocab: usize,
+    arena: &mut WaveArena,
+) -> Result<()> {
     let n = msgs.len();
     if n == 0 {
         return Err(anyhow!("empty wave"));
     }
     let mut need_seq = 0usize;
-    let mut trees = Vec::with_capacity(n);
     for (b, m) in msgs.iter().enumerate() {
         let i = m.client_id as usize;
         if b > 0 && msgs[b - 1].client_id >= m.client_id {
@@ -77,58 +122,111 @@ pub fn build_verify_request(
         if m.prefix.is_empty() {
             return Err(anyhow!("client {i}: empty prefix"));
         }
-        let tree = if m.parents.is_empty() {
-            DraftTree::chain(m.draft.len())
-        } else {
-            if m.parents.len() != m.draft.len() {
-                return Err(anyhow!(
-                    "client {i}: {} parents for {} nodes",
-                    m.parents.len(),
-                    m.draft.len()
-                ));
+        if !m.parents.is_empty() && m.parents.len() != m.draft.len() {
+            return Err(anyhow!(
+                "client {i}: {} parents for {} nodes",
+                m.parents.len(),
+                m.draft.len()
+            ));
+        }
+        // Shape cache: reuse the slot's topology when this wave redrafts
+        // the same shape (chains only need a matching length; explicit
+        // trees need an identical parent array).
+        let reuse = match arena.views.get(b) {
+            Some(v) if m.parents.is_empty() => {
+                v.tree.is_chain() && v.tree.len() == m.draft.len()
             }
-            let t = DraftTree::from_parents(m.parents.clone())
-                .map_err(|e| anyhow!("client {i}: bad topology: {e}"))?;
+            Some(v) => v.explicit_tree && v.tree.parents() == &m.parents[..],
+            None => false,
+        };
+        let rebuilt = if reuse {
+            None
+        } else if m.parents.is_empty() {
+            Some(DraftTree::chain(m.draft.len()))
+        } else {
+            Some(
+                DraftTree::from_parents(m.parents.clone())
+                    .map_err(|e| anyhow!("client {i}: bad topology: {e}"))?,
+            )
+        };
+        if !m.parents.is_empty() {
             // Real nodes + one phantom bonus row per leaf must fit the
             // artifact's K rows (the chain's `S = K` special case instead
-            // uses the dedicated bonus output).
-            if t.rows_needed() > k {
+            // uses the dedicated bonus output). Re-checked on cache hits
+            // too: K is a parameter, not part of the cache key.
+            let rows = match &rebuilt {
+                Some(t) => t.rows_needed(),
+                None => arena.views[b].tree.rows_needed(),
+            };
+            if rows > k {
                 return Err(anyhow!(
-                    "client {i}: tree needs {} rows (nodes + leaves) > K {k}",
-                    t.rows_needed()
+                    "client {i}: tree needs {rows} rows (nodes + leaves) > K {k}"
                 ));
             }
-            t
-        };
+        }
         // Row must hold prefix + draft; the graph gathers up to
         // pos0 + S_i − 1 (bonus-trick row S_i gathers pos0 + S_i − 1).
         need_seq = need_seq.max(m.prefix.len() + m.draft.len().max(1));
-        trees.push(tree);
+        if b < arena.views.len() {
+            let v = &mut arena.views[b];
+            v.client_id = i;
+            v.prefix_len = m.prefix.len();
+            v.draft_len = m.draft.len();
+            if let Some(t) = rebuilt {
+                v.tree = t;
+            }
+            v.explicit_tree = !m.parents.is_empty();
+            v.new_request = m.new_request;
+            v.draft_wall_ns = m.draft_wall_ns;
+        } else {
+            arena.views.push(ClientRound {
+                client_id: i,
+                prefix_len: m.prefix.len(),
+                draft_len: m.draft.len(),
+                tree: rebuilt.expect("fresh slot always rebuilds its tree"),
+                explicit_tree: !m.parents.is_empty(),
+                new_request: m.new_request,
+                draft_wall_ns: m.draft_wall_ns,
+            });
+        }
     }
+    arena.views.truncate(n);
     let (bb, bs) = pick_bucket(buckets, n, need_seq);
     if n > bb || need_seq > bs {
         return Err(anyhow!("round (n={n}, seq={need_seq}) exceeds largest bucket ({bb},{bs})"));
     }
 
-    let mut tokens = vec![0i32; n * bs];
-    let mut draft_tok = vec![0i32; n * k];
+    // Disjoint borrows: request buffers get rewritten while the cached
+    // trees in `views` are read.
+    let WaveArena { req, views } = arena;
+    req.batch = n;
+    req.seq = bs;
+    req.k = k;
+    req.vocab = vocab;
+    req.tokens.clear();
+    req.tokens.resize(n * bs, 0);
+    req.draft_tok.clear();
+    req.draft_tok.resize(n * k, 0);
     // All-zero q rows by default — the variable-length/bonus trick.
-    let mut q_probs = vec![0.0f32; n * k * vocab];
-    let mut pos0 = vec![0i32; n];
-    let mut parent = vec![0i32; n * k];
-    let mut views = Vec::with_capacity(n);
+    req.q_probs.clear();
+    req.q_probs.resize(n * k * vocab, 0.0);
+    req.pos0.clear();
+    req.pos0.resize(n, 0);
+    req.parent.clear();
+    req.parent.resize(n * k, 0);
     for (b, m) in msgs.iter().enumerate() {
-        let tree = &trees[b];
+        let tree = &views[b].tree;
         let p = m.prefix.len();
         for (i, &t) in m.prefix.iter().enumerate() {
-            tokens[b * bs + i] = t as i32;
+            req.tokens[b * bs + i] = t as i32;
         }
         for (j, &t) in m.draft.iter().enumerate() {
-            tokens[b * bs + p + j] = t as i32;
-            draft_tok[b * k + j] = t as i32;
+            req.tokens[b * bs + p + j] = t as i32;
+            req.draft_tok[b * k + j] = t as i32;
         }
-        q_probs[(b * k) * vocab..(b * k + m.draft.len()) * vocab].copy_from_slice(&m.q_probs);
-        pos0[b] = p as i32;
+        req.q_probs[(b * k) * vocab..(b * k + m.draft.len()) * vocab]
+            .copy_from_slice(&m.q_probs);
+        req.pos0[b] = p as i32;
         // Parent layout: real nodes, then one phantom row per leaf
         // (parented on its leaf — all-zero q ⇒ its residual is the leaf's
         // bonus distribution), then chain-continuation padding. A chain
@@ -136,12 +234,12 @@ pub fn build_verify_request(
         // pre-tree linear contexts.
         let nodes = tree.len();
         for (j, &pp) in tree.parents().iter().enumerate() {
-            parent[b * k + j] = if pp == NO_PARENT { -1 } else { pp as i32 };
+            req.parent[b * k + j] = if pp == NO_PARENT { -1 } else { pp as i32 };
         }
         let mut row = nodes;
         if nodes == 0 {
             // The empty tree's phantom roots at the prefix (row 0).
-            parent[b * k] = -1;
+            req.parent[b * k] = -1;
             row = 1;
         } else {
             for leaf in 0..nodes {
@@ -150,28 +248,16 @@ pub fn build_verify_request(
                 // row (explicit trees always fit: rows_needed ≤ k).
                 if tree.children(leaf).is_empty() && row < k {
                     debug_assert_eq!(tree.bonus_row(leaf), row);
-                    parent[b * k + row] = leaf as i32;
+                    req.parent[b * k + row] = leaf as i32;
                     row += 1;
                 }
             }
         }
         for j in row..k {
-            parent[b * k + j] = j as i32 - 1;
+            req.parent[b * k + j] = j as i32 - 1;
         }
-        views.push(ClientRound {
-            client_id: m.client_id as usize,
-            prefix_len: p,
-            draft_len: m.draft.len(),
-            tree: tree.clone(),
-            explicit_tree: !m.parents.is_empty(),
-            new_request: m.new_request,
-            draft_wall_ns: m.draft_wall_ns,
-        });
     }
-    Ok((
-        VerifyRequest { tokens, batch: n, seq: bs, draft_tok, q_probs, pos0, parent, k, vocab },
-        views,
-    ))
+    Ok(())
 }
 
 #[cfg(test)]
@@ -306,6 +392,51 @@ mod tests {
         // overflow largest bucket
         let m = msg(0, &[1; 255], &[2; 8], v);
         assert!(build_verify_request(&[m], BUCKETS, 8, v).is_err());
+    }
+
+    #[test]
+    fn arena_rebuild_matches_fresh_build() {
+        let v = 16;
+        let mut arena = WaveArena::new();
+        // Warm the arena with a *different* wave shape so the rebuild path
+        // (slot update, tree replacement, buffer resize) is exercised.
+        let warm = vec![msg(0, &[1, 2], &[5, 6, 7], v)];
+        build_verify_request_into(&warm, BUCKETS, 8, v, &mut arena).unwrap();
+        let parents = [255u8, 255, 1];
+        let msgs = vec![
+            msg(0, &[1, 2, 3], &[10, 11], v),
+            tree_msg(2, &[4, 5], &[20, 21, 22], &parents, v),
+        ];
+        build_verify_request_into(&msgs, BUCKETS, 8, v, &mut arena).unwrap();
+        let (req, views) = build_verify_request(&msgs, BUCKETS, 8, v).unwrap();
+        assert_eq!(arena.req, req);
+        assert_eq!(arena.views, views);
+        // Shrinking wave truncates the view list.
+        let small = vec![msg(1, &[9], &[3], v)];
+        build_verify_request_into(&small, BUCKETS, 8, v, &mut arena).unwrap();
+        assert_eq!(arena.views.len(), 1);
+        assert_eq!(arena.views[0].client_id, 1);
+    }
+
+    #[test]
+    fn warm_arena_rebuild_is_allocation_free() {
+        let v = 16;
+        let parents = [255u8, 255, 1];
+        let msgs = vec![
+            msg(0, &[1, 2, 3], &[10, 11], v),
+            tree_msg(2, &[4, 5], &[20, 21, 22], &parents, v),
+        ];
+        let mut arena = WaveArena::new();
+        build_verify_request_into(&msgs, BUCKETS, 8, v, &mut arena).unwrap();
+        // Same shapes again: cached trees hit, buffers stay within
+        // capacity — steady-state assembly never touches the heap.
+        let (res, allocs) = crate::util::alloc_track::measure(|| {
+            build_verify_request_into(&msgs, BUCKETS, 8, v, &mut arena)
+        });
+        res.unwrap();
+        if crate::util::alloc_track::enabled() {
+            assert_eq!(allocs, 0, "warm wave assembly must not allocate");
+        }
     }
 
     #[test]

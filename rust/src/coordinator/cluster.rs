@@ -66,7 +66,7 @@ use crate::draft::{spawn_draft_server, DraftServerConfig, DraftStats};
 use crate::error::{ConfigError, GoodSpeedError};
 use crate::metrics::recorder::{MembershipEvent, Recorder};
 use crate::net::transport::{channel_transport, ClientPort, ServerSide, TcpTransport};
-use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, PROTOCOL_VERSION};
+use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, VerdictMsg, PROTOCOL_VERSION};
 use crate::runtime::EngineFactory;
 use crate::serve::{RequestTrace, RequestTracker};
 use crate::util::{Rng, Stopwatch};
@@ -780,6 +780,12 @@ impl ClusterEngine {
     fn run_sync(&mut self) -> Result<()> {
         let slots = self.state.len();
         let mut wave: u64 = 0;
+        // Wave-loop buffers, hoisted so steady-state waves reuse their
+        // capacity instead of reallocating every round.
+        let mut pending: Vec<Option<DraftMsg>> = vec![None; slots];
+        let mut msgs: Vec<DraftMsg> = Vec::new();
+        let mut verdicts: Vec<VerdictMsg> = Vec::new();
+        let mut awaited: Vec<usize> = Vec::new();
         while wave < self.scenario.rounds {
             self.boundary(wave);
             if self.stop {
@@ -806,14 +812,16 @@ impl ClusterEngine {
             // pass — a dead attached session retired by the liveness
             // check shrinks the barrier instead of hanging it). Retired
             // stragglers' drained drafts are discarded; hellos are acked
-            // inline.
-            let mut pending: Vec<Option<DraftMsg>> = vec![None; slots];
+            // inline. (A straggler's draft collected just before its slot
+            // retired is dropped here, exactly as the per-wave buffer
+            // used to.)
+            for slot in pending.iter_mut() {
+                *slot = None;
+            }
             loop {
-                let awaited: Vec<usize> = self
-                    .members()
-                    .into_iter()
-                    .filter(|&i| pending[i].is_none())
-                    .collect();
+                awaited.clear();
+                awaited
+                    .extend(self.members().into_iter().filter(|&i| pending[i].is_none()));
                 if awaited.is_empty() {
                     break;
                 }
@@ -852,8 +860,8 @@ impl ClusterEngine {
             if members.is_empty() {
                 continue; // every awaited session retired mid-collect
             }
-            let msgs: Vec<DraftMsg> =
-                members.iter().map(|&i| pending[i].take().expect("collected")).collect();
+            msgs.clear();
+            msgs.extend(members.iter().map(|&i| pending[i].take().expect("collected")));
             let recv_ns = sw.lap().as_nanos() as u64;
 
             for m in msgs.iter() {
@@ -862,7 +870,7 @@ impl ClusterEngine {
             }
 
             // 2. Verify + schedule (one dense wave over the members).
-            let verdicts = self.leader.process_wave(wave, &msgs, recv_ns)?;
+            self.leader.process_wave_into(wave, &msgs, recv_ns, &mut verdicts)?;
             let _ = sw.lap();
 
             // 3. Send verdicts.
@@ -938,6 +946,9 @@ impl ClusterEngine {
         let mut pending: Vec<Option<DraftMsg>> = vec![None; slots];
         let mut pending_n = 0usize;
         let mut wave: u64 = 0;
+        // Wave-loop buffers, reused across waves.
+        let mut msgs: Vec<DraftMsg> = Vec::new();
+        let mut verdicts: Vec<VerdictMsg> = Vec::new();
 
         while self.delivered < budget {
             self.boundary(wave);
@@ -987,7 +998,7 @@ impl ClusterEngine {
                 self.ingest(&mut pending, &mut pending_n, id, msg)?;
             }
             // Phase 4 — form the wave (index order ⇒ ascending client id).
-            let mut msgs: Vec<DraftMsg> = Vec::with_capacity(pending_n);
+            msgs.clear();
             for slot in pending.iter_mut() {
                 if let Some(d) = slot.take() {
                     msgs.push(d);
@@ -997,7 +1008,7 @@ impl ClusterEngine {
             let recv_ns = sw.lap().as_nanos() as u64;
 
             // Phase 5 — verify + schedule + send.
-            let verdicts = self.leader.process_wave(wave, &msgs, recv_ns)?;
+            self.leader.process_wave_into(wave, &msgs, recv_ns, &mut verdicts)?;
             let _ = sw.lap();
             for vd in &verdicts {
                 (self.server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;

@@ -94,6 +94,12 @@ pub struct RoundCore {
     turbo: Option<TurboController>,
     /// Shard id stamped onto emitted records (0 outside pooled mode).
     shard: usize,
+    /// Reusable `finish_wave` scratch: the dense estimator-update rows and
+    /// the allocator caps are recycled across waves so steady-state
+    /// scheduling stays off the heap (part of the wave-arena work; see
+    /// DESIGN.md "Performance & benchmarking").
+    dense: Vec<Option<(f64, f64)>>,
+    caps: AllocCaps,
     pub recorder: Recorder,
 }
 
@@ -124,6 +130,12 @@ impl RoundCore {
             // caps never bind and turbo is the plain gradient policy.
             turbo: (policy == Policy::Turbo).then(|| TurboController::new(n, capacity)),
             shard: 0,
+            dense: Vec::new(),
+            caps: AllocCaps {
+                capacity: 0,
+                max_per_client: Vec::new(),
+                live: Vec::new(),
+            },
             recorder: Recorder::new(n),
         }
     }
@@ -312,9 +324,14 @@ impl RoundCore {
         verify_ns: u64,
     ) -> Vec<usize> {
         let n = self.estimators.len();
-        let mut dense: Vec<Option<(f64, f64)>> = vec![None; n];
-        let mut in_wave = vec![false; n];
-        let mut max_per_client = vec![0usize; n];
+        // Per-wave scratch is recycled: clear + resize within the
+        // high-water capacity is a pure refill, no allocation.
+        self.dense.clear();
+        self.dense.resize(n, None);
+        self.caps.live.clear();
+        self.caps.live.resize(n, false);
+        self.caps.max_per_client.clear();
+        self.caps.max_per_client.resize(n, 0);
         for o in obs {
             assert!(o.client_id < n, "client_id {} out of range ({n})", o.client_id);
             // An idle-era zero-draft keep-alive wave is not an
@@ -326,12 +343,12 @@ impl RoundCore {
             // weights and turbo's headroom the moment it wakes. Idle
             // clients' estimates stay frozen at their last busy value,
             // like absent clients'.
-            dense[o.client_id] = if self.idle[o.client_id] || self.idle_grant[o.client_id] {
+            self.dense[o.client_id] = if self.idle[o.client_id] || self.idle_grant[o.client_id] {
                 None
             } else {
                 Some((o.mean_ratio, o.goodput as f64))
             };
-            in_wave[o.client_id] = true;
+            self.caps.live[o.client_id] = true;
             // A non-member participant is a client that migrated away while
             // its draft was in flight here: its grant is reserved by the
             // *new* shard at the value it had at hand-off, so never grant
@@ -343,7 +360,7 @@ impl RoundCore {
             // same rule, but keeps its membership — the flag clears when
             // its next request arrives.
             let parked = self.draining[o.client_id] || self.idle[o.client_id];
-            max_per_client[o.client_id] = if parked {
+            self.caps.max_per_client[o.client_id] = if parked {
                 0
             } else if self.member[o.client_id] {
                 o.max_next
@@ -367,26 +384,22 @@ impl RoundCore {
                 if !self.idle[o.client_id] && !self.idle_grant[o.client_id] {
                     turbo.observe(o.client_id, o.mean_ratio, congestion);
                 }
-                max_per_client[o.client_id] =
-                    max_per_client[o.client_id].min(turbo.cap(o.client_id));
+                self.caps.max_per_client[o.client_id] =
+                    self.caps.max_per_client[o.client_id].min(turbo.cap(o.client_id));
             }
         }
-        self.estimators.update_round(&dense);
+        self.estimators.update_round(&self.dense);
 
         // Absent *members* keep their in-flight grants reserved so
         // interleaved waves can never jointly exceed the budget; in a
         // dense (sync) wave the reservation is 0 and this is exactly the
         // paper's per-round allocation.
         let reserved: usize = (0..n)
-            .filter(|&i| self.member[i] && !in_wave[i])
+            .filter(|&i| self.member[i] && !self.caps.live[i])
             .map(|i| self.outstanding[i])
             .sum();
-        let caps = AllocCaps {
-            capacity: self.capacity.saturating_sub(reserved),
-            max_per_client,
-            live: in_wave,
-        };
-        let alloc = self.allocator.allocate(&self.estimators, &caps);
+        self.caps.capacity = self.capacity.saturating_sub(reserved);
+        let alloc = self.allocator.allocate(&self.estimators, &self.caps);
 
         let mut next = Vec::with_capacity(obs.len());
         for o in obs {

@@ -27,12 +27,12 @@ use std::str::FromStr;
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::build_verify_request;
+use super::batcher::{build_verify_request_into, WaveArena};
 use super::core::{RoundCore, WaveObs};
 use crate::configsys::{Policy, Scenario};
 use crate::error::ConfigError;
 use crate::net::wire::{DraftMsg, VerdictMsg};
-use crate::runtime::{EngineFactory, Verifier};
+use crate::runtime::{EngineFactory, Verifier, VerifyOutput};
 use crate::util::Stopwatch;
 
 /// Which transport carries draft batches.
@@ -76,6 +76,15 @@ pub struct Leader {
     max_seq: usize,
     verify_k: usize,
     vocab: usize,
+    /// Shape buckets, cached once from the verifier (stable per engine) so
+    /// the wave loop never re-clones them.
+    buckets: Vec<(usize, usize)>,
+    /// Reusable wave buffers: batched request + per-client views.
+    arena: WaveArena,
+    /// Reusable verification output.
+    out: VerifyOutput,
+    /// Reusable per-wave observation buffer.
+    obs: Vec<WaveObs>,
 }
 
 impl Leader {
@@ -116,6 +125,7 @@ impl Leader {
             core.set_member(i, false);
             core.set_outstanding(i, 0);
         }
+        let buckets = verifier.buckets();
         Ok(Leader {
             verifier,
             core,
@@ -123,6 +133,10 @@ impl Leader {
             max_seq: factory.max_seq(),
             verify_k: factory.verify_k(),
             vocab: factory.vocab(),
+            buckets,
+            arena: WaveArena::new(),
+            out: VerifyOutput::default(),
+            obs: Vec::new(),
         })
     }
 
@@ -140,6 +154,24 @@ impl Leader {
         msgs: &[DraftMsg],
         recv_ns: u64,
     ) -> Result<Vec<VerdictMsg>> {
+        let mut verdicts = Vec::new();
+        self.process_wave_into(wave, msgs, recv_ns, &mut verdicts)?;
+        Ok(verdicts)
+    }
+
+    /// [`Leader::process_wave`] into a caller-owned verdict buffer,
+    /// reusing its slots (including each verdict's `path` capacity). With
+    /// warm buffers the whole pipeline — wave assembly, mock
+    /// verification, chain rejection sampling — runs without heap
+    /// allocation; what remains is the per-wave record the recorder
+    /// retains and the scheduler's allocation vector.
+    pub fn process_wave_into(
+        &mut self,
+        wave: u64,
+        msgs: &[DraftMsg],
+        recv_ns: u64,
+        verdicts: &mut Vec<VerdictMsg>,
+    ) -> Result<()> {
         let mut sw = Stopwatch::new();
         let n_total = self.core.n_clients();
         for m in msgs {
@@ -150,42 +182,36 @@ impl Leader {
                 ));
             }
         }
-        let (req, views) =
-            build_verify_request(msgs, &self.verifier.buckets(), self.verify_k, self.vocab)?;
-        let out = self.verifier.verify(&req)?;
+        build_verify_request_into(msgs, &self.buckets, self.verify_k, self.vocab, &mut self.arena)?;
+        self.verifier.verify_into(&self.arena.req, &mut self.out)?;
 
         // Rejection sampling per client (paper step ④), in row order so the
         // core's verdict RNG stream is identical to the pre-core
         // coordinator for dense (sync) waves.
         let v = self.vocab;
         let k = self.verify_k;
-        let mut verdicts = Vec::with_capacity(views.len());
-        let mut obs = Vec::with_capacity(views.len());
+        let views = &self.arena.views;
+        let out = &self.out;
+        verdicts.truncate(views.len());
+        self.obs.clear();
+        self.obs.reserve(views.len());
         for (b, view) in views.iter().enumerate() {
             let s = view.draft_len;
             let ratios = &out.ratio_row(b, k)[..s];
             let resid = out.resid_rows(b, k, v);
-            let (accepted, path, correction, goodput, mean_ratio, spec_depth) =
+            let mut tree_verdict = None;
+            let (accepted, correction, goodput, mean_ratio, spec_depth) =
                 if !view.explicit_tree {
                     // Legacy chain path (bit-identical RNG stream). Bonus
                     // distribution: the real bonus output when s == K, else
                     // the residual row at j = s (all-zero q ⇒ residual ≡ p).
-                    let bonus_owned;
                     let bonus: &[f32] = if s == k {
                         out.bonus_row(b, v)
                     } else {
-                        bonus_owned = &resid[s * v..(s + 1) * v];
-                        bonus_owned
+                        &resid[s * v..(s + 1) * v]
                     };
                     let verdict = self.core.judge(ratios, resid, bonus, v);
-                    (
-                        verdict.accepted,
-                        Vec::new(),
-                        verdict.correction,
-                        verdict.goodput,
-                        verdict.mean_ratio,
-                        s,
-                    )
+                    (verdict.accepted, verdict.correction, verdict.goodput, verdict.mean_ratio, s)
                 } else {
                     // Tree path: sequential-sibling rejection over the
                     // topology, bonus from the leaf phantom rows.
@@ -197,18 +223,18 @@ impl Leader {
                         &msgs[b].q_probs,
                         v,
                     );
-                    let path: Vec<u8> = tv.path.iter().map(|&x| x as u8).collect();
-                    (
+                    let r = (
                         tv.path.len(),
-                        path,
                         tv.correction,
                         tv.goodput,
                         tv.mean_ratio,
                         view.tree.max_depth(),
-                    )
+                    );
+                    tree_verdict = Some(tv);
+                    r
                 };
             let new_prefix = view.prefix_len + accepted + 1;
-            obs.push(WaveObs {
+            self.obs.push(WaveObs {
                 client_id: view.client_id,
                 s_used: s,
                 accepted,
@@ -217,17 +243,36 @@ impl Leader {
                 spec_depth,
                 max_next: self.max_draft.min(self.max_seq.saturating_sub(new_prefix + 2)),
             });
-            verdicts.push(VerdictMsg {
-                client_id: view.client_id as u32,
+            let shard = self.core.shard_id() as u32;
+            if b < verdicts.len() {
+                // Recycle the slot (keeps the path buffer's capacity).
+                let vd = &mut verdicts[b];
+                vd.client_id = view.client_id as u32;
                 // Echo the client's own round (client-local matching; in
                 // sync mode this equals the coordinator round).
-                round: msgs[b].round,
-                accepted: accepted as u32,
-                path,
-                correction,
-                next_alloc: 0, // filled below
-                shard: self.core.shard_id() as u32,
-            });
+                vd.round = msgs[b].round;
+                vd.accepted = accepted as u32;
+                vd.path.clear();
+                if let Some(tv) = &tree_verdict {
+                    vd.path.extend(tv.path.iter().map(|&x| x as u8));
+                }
+                vd.correction = correction;
+                vd.next_alloc = 0; // filled below
+                vd.shard = shard;
+            } else {
+                verdicts.push(VerdictMsg {
+                    client_id: view.client_id as u32,
+                    round: msgs[b].round,
+                    accepted: accepted as u32,
+                    path: tree_verdict
+                        .as_ref()
+                        .map(|tv| tv.path.iter().map(|&x| x as u8).collect())
+                        .unwrap_or_default(),
+                    correction,
+                    next_alloc: 0, // filled below
+                    shard,
+                });
+            }
         }
         let verify_ns = sw.lap().as_nanos() as u64;
 
@@ -235,12 +280,12 @@ impl Leader {
         // 1 lines 14–15) — the shared core path. The scheduling time is
         // folded back into the verify phase afterwards so `verify_ns`
         // keeps its Fig 3 meaning: verification *plus* scheduling.
-        let next = self.core.finish_wave(wave, &obs, recv_ns, verify_ns);
+        let next = self.core.finish_wave(wave, &self.obs, recv_ns, verify_ns);
         self.core.note_verify_extra_ns(sw.lap().as_nanos() as u64);
         for (vd, nx) in verdicts.iter_mut().zip(&next) {
             vd.next_alloc = *nx as u32;
         }
-        Ok(verdicts)
+        Ok(())
     }
 
     /// Record the measured send-phase time on the wave just processed.

@@ -24,7 +24,7 @@ pub mod core;
 pub mod leader;
 pub mod pool;
 
-pub use batcher::build_verify_request;
+pub use batcher::{build_verify_request, build_verify_request_into, WaveArena};
 pub use cluster::{ClientId, Cluster, ClusterBuilder, ClusterStats, ServingHandle};
 pub use self::core::{RoundCore, WaveObs};
 pub use leader::{Leader, PoolReport, RunConfig, RunOutcome, Transport};

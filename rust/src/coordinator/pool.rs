@@ -53,7 +53,7 @@ use crate::metrics::RunSummary;
 use crate::net::transport::{
     sharded_channel_transport, ClientPort, ServerSide, ShardRouter,
 };
-use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, PROTOCOL_VERSION};
+use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, VerdictMsg, PROTOCOL_VERSION};
 use crate::runtime::EngineFactory;
 use crate::sched::gradient::split_budget_by_members;
 use crate::sched::utility::{LogUtility, Utility};
@@ -363,6 +363,9 @@ fn run_shard_loop(
     let mut pending: Vec<Option<DraftMsg>> = vec![None; slots];
     let mut pending_n = 0usize;
     let mut wave: u64 = 0;
+    // Wave-loop buffers, reused across waves.
+    let mut msgs: Vec<DraftMsg> = Vec::new();
+    let mut verdicts: Vec<VerdictMsg> = Vec::new();
 
     'run: while !shared.stopping() {
         let mut sw = Stopwatch::new();
@@ -400,7 +403,7 @@ fn run_shard_loop(
             }
         }
         // Phase 4 — form the wave (index order ⇒ ascending client id).
-        let mut msgs: Vec<DraftMsg> = Vec::with_capacity(pending_n);
+        msgs.clear();
         for slot in pending.iter_mut() {
             if let Some(d) = slot.take() {
                 msgs.push(d);
@@ -421,7 +424,7 @@ fn run_shard_loop(
         }
 
         // Phase 5 — verify + schedule + send.
-        let verdicts = leader.process_wave(wave, &msgs, recv_ns)?;
+        leader.process_wave_into(wave, &msgs, recv_ns, &mut verdicts)?;
         let _ = sw.lap();
         for vd in &verdicts {
             (server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;

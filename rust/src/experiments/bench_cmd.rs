@@ -1,0 +1,263 @@
+//! `goodspeed bench` — the perf harness (DESIGN.md "Performance &
+//! benchmarking").
+//!
+//! Runs quick serving benches across the standard presets (`sharded`,
+//! `tree`, `churn`, `trace`) plus a wave hot-path microbench (arena
+//! assembly + batched verify on recycled buffers), and records the result
+//! as `BENCH_<n>.json`. CI reruns the harness with `--quick --baseline
+//! <last committed recording>` and fails when any preset's wave
+//! throughput regresses by more than 10%.
+//!
+//! Built with `--features alloc_track` the recording additionally carries
+//! per-wave allocation counts from the thread-local counting allocator
+//! (0s otherwise, with `"alloc_tracking": false` so diffs don't confuse
+//! the two).
+
+use std::fs;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{mock_engine, serve_once};
+use crate::cli::Args;
+use crate::configsys::{Policy, Scenario};
+use crate::coordinator::{build_verify_request_into, Transport, WaveArena};
+use crate::net::wire::{DraftMsg, FrameView, Message};
+use crate::runtime::{EngineFactory, Verifier, VerifyOutput};
+use crate::util::alloc_track;
+use crate::util::perfjson::{self, Json};
+use crate::util::stats::percentile;
+
+/// The presets the recording covers, in emission order.
+pub const BENCH_PRESETS: &[&str] = &["sharded", "tree", "churn", "trace"];
+
+/// Default on-disk recording (PR-numbered so history accumulates in git).
+pub const DEFAULT_OUT: &str = "BENCH_6.json";
+
+/// Regression gate: fail when a preset's waves/s drops below this
+/// fraction of the baseline recording.
+const REGRESSION_FLOOR: f64 = 0.9;
+
+/// One serving bench over a preset: full closed-loop run (draft servers,
+/// coordinator, verdict fan-out) on the mock engine with network
+/// simulation off, so the measured time is the serving machinery itself.
+fn bench_preset(id: &str, quick: bool) -> Result<Json> {
+    let mut s = Scenario::preset(id)
+        .ok_or_else(|| anyhow!("unknown bench preset '{id}' ({:?})", Scenario::preset_ids()))?;
+    if quick {
+        s.rounds = s.rounds.min(40);
+    }
+    let out = serve_once(s, Policy::GoodSpeed, Transport::Channel, false, mock_engine())?;
+    let wall = out.summary.wall_secs.max(1e-12);
+    let waves = out.summary.rounds as f64;
+    let waves_per_sec = waves / wall;
+    let slo_tok = out.recorder.slo_summary().map(|sl| sl.slo_goodput_total / wall);
+    let ns: Vec<f64> = out.recorder.rounds.iter().map(|r| r.total_ns() as f64).collect();
+    let (p50, p99) = (percentile(&ns, 50.0), percentile(&ns, 99.0));
+    println!(
+        "  {id:>8}: {waves:>5} waves  {waves_per_sec:>9.1} waves/s  {:>9.1} tok/s  \
+         wave p50/p99 {:.0}/{:.0} µs",
+        out.summary.tokens_per_sec,
+        p50 / 1e3,
+        p99 / 1e3,
+    );
+    let mut o = Json::obj();
+    o.insert("rounds", Json::Num(waves));
+    o.insert("wall_secs", Json::Num(wall));
+    o.insert("waves_per_sec", Json::Num(waves_per_sec));
+    o.insert("tokens_per_sec", Json::Num(out.summary.tokens_per_sec));
+    o.insert("slo_tokens_per_sec", slo_tok.map(Json::Num).unwrap_or(Json::Null));
+    o.insert("wave_ns_p50", Json::Num(p50));
+    o.insert("wave_ns_p99", Json::Num(p99));
+    Ok(o)
+}
+
+/// The wave hot path in isolation: zero-copy frame parse, arena wave
+/// assembly, and batched verification on recycled buffers. Reports
+/// steady-state throughput and (under `alloc_track`) the per-stage
+/// allocation counts the arena work drove to zero.
+fn hot_path_bench(iters: u64) -> Result<Json> {
+    let (vocab, k, clients) = (256usize, 8usize, 4u32);
+    let factory = mock_engine();
+    let mut verifier = factory.make_verifier("qwen")?;
+    let buckets = verifier.buckets();
+    let msgs: Vec<DraftMsg> = (0..clients)
+        .map(|i| DraftMsg {
+            client_id: i,
+            round: 0,
+            prefix: vec![1, 2, 3],
+            prompt_len: 3,
+            draft: vec![10 + i as u8; 4],
+            parents: Vec::new(),
+            q_probs: vec![1.0 / vocab as f32; 4 * vocab],
+            new_request: false,
+            draft_wall_ns: 0,
+        })
+        .collect();
+    let frame = Message::Draft(msgs[0].clone()).encode();
+    let payload = &frame[4..];
+    let mut arena = WaveArena::new();
+    let mut out = VerifyOutput::default();
+    // Cold wave: grows the arenas to their steady-state high-water marks.
+    build_verify_request_into(&msgs, &buckets, k, vocab, &mut arena)?;
+    verifier.verify_into(&arena.req, &mut out)?;
+    FrameView::parse(payload).map_err(|e| anyhow!("frame parse: {e}"))?;
+
+    // Warm waves: count allocations per stage (all 0 when tracking is
+    // compiled out — the recording labels which via `alloc_tracking`).
+    let (res, assembly_allocs) =
+        alloc_track::measure(|| build_verify_request_into(&msgs, &buckets, k, vocab, &mut arena));
+    res?;
+    let (res, verify_allocs) = alloc_track::measure(|| verifier.verify_into(&arena.req, &mut out));
+    res?;
+    let (res, parse_allocs) = alloc_track::measure(|| FrameView::parse(payload));
+    res.map_err(|e| anyhow!("frame parse: {e}"))?;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        build_verify_request_into(&msgs, &buckets, k, vocab, &mut arena)?;
+        verifier.verify_into(&arena.req, &mut out)?;
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-12);
+    let waves_per_sec = iters as f64 / secs;
+    println!(
+        "  hot path: {waves_per_sec:>9.1} waves/s over {iters} warm waves  \
+         (allocs/wave: assembly {assembly_allocs}, verify {verify_allocs}, \
+         parse {parse_allocs}{})",
+        if alloc_track::enabled() { "" } else { "; tracking off" }
+    );
+    if alloc_track::enabled() && assembly_allocs + verify_allocs + parse_allocs > 0 {
+        log::warn!("warm wave hot path allocated — arena regression?");
+    }
+    let mut o = Json::obj();
+    o.insert("iters", Json::Num(iters as f64));
+    o.insert("waves_per_sec", Json::Num(waves_per_sec));
+    o.insert("assembly_allocs_per_wave", Json::Num(assembly_allocs as f64));
+    o.insert("verify_allocs_per_wave", Json::Num(verify_allocs as f64));
+    o.insert("frame_parse_allocs", Json::Num(parse_allocs as f64));
+    Ok(o)
+}
+
+/// Compare a fresh recording against the committed baseline. Prints the
+/// per-preset delta table; errors (non-zero exit) on any >10% wave-
+/// throughput regression. A missing baseline skips the diff (first run).
+pub fn diff_against_baseline(new: &Json, baseline_path: &str) -> Result<()> {
+    let text = match fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("bench: no baseline at {baseline_path}; skipping diff");
+            return Ok(());
+        }
+    };
+    let base = perfjson::parse(&text)
+        .with_context(|| format!("parse baseline {baseline_path}"))?;
+    let mut regressions: Vec<String> = Vec::new();
+    println!("bench: diff vs {baseline_path}");
+    for &id in BENCH_PRESETS {
+        let key = format!("presets.{id}.waves_per_sec");
+        let (Some(old), Some(cur)) =
+            (base.path(&key).and_then(Json::as_f64), new.path(&key).and_then(Json::as_f64))
+        else {
+            println!("  {id:>8}: not in both recordings; skipped");
+            continue;
+        };
+        let ratio = cur / old.max(1e-12);
+        println!(
+            "  {id:>8}: waves/s {old:>9.1} -> {cur:>9.1}  ({:+.1}%)",
+            100.0 * (ratio - 1.0)
+        );
+        if ratio < REGRESSION_FLOOR {
+            regressions.push(format!("{id} ({:.1}%)", 100.0 * (ratio - 1.0)));
+        }
+    }
+    if !regressions.is_empty() {
+        return Err(anyhow!(
+            "wave throughput regressed >{:.0}% on: {}",
+            100.0 * (1.0 - REGRESSION_FLOOR),
+            regressions.join(", ")
+        ));
+    }
+    Ok(())
+}
+
+pub fn main(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let out_path = args.get_or("out", DEFAULT_OUT);
+    let baseline = args.get("baseline").map(str::to_string);
+    let iters = args
+        .get_parse::<u64>("iters")
+        .unwrap_or(if quick { 2_000 } else { 20_000 });
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    println!(
+        "bench: {} presets + hot path ({}, alloc tracking {})",
+        BENCH_PRESETS.len(),
+        if quick { "quick" } else { "full" },
+        if alloc_track::enabled() { "on" } else { "off" }
+    );
+    let mut doc = Json::obj();
+    doc.insert("version", Json::Num(1.0));
+    doc.insert("quick", Json::Bool(quick));
+    doc.insert("alloc_tracking", Json::Bool(alloc_track::enabled()));
+    let mut presets = Json::obj();
+    for &id in BENCH_PRESETS {
+        presets.insert(id, bench_preset(id, quick)?);
+    }
+    doc.insert("presets", presets);
+    doc.insert("hot_path", hot_path_bench(iters)?);
+    fs::write(&out_path, doc.pretty())
+        .with_context(|| format!("write {out_path}"))?;
+    println!("bench recording -> {out_path}");
+    if let Some(b) = baseline {
+        diff_against_baseline(&doc, &b)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recording(sharded: f64, trace: f64) -> Json {
+        let mut presets = Json::obj();
+        for (id, w) in [("sharded", sharded), ("trace", trace)] {
+            let mut o = Json::obj();
+            o.insert("waves_per_sec", Json::Num(w));
+            presets.insert(id, o);
+        }
+        let mut doc = Json::obj();
+        doc.insert("version", Json::Num(1.0));
+        doc.insert("presets", presets);
+        doc
+    }
+
+    #[test]
+    fn baseline_diff_gates_on_regression() {
+        let dir = std::env::temp_dir().join("goodspeed_bench_diff_test");
+        fs::create_dir_all(&dir).unwrap();
+        let base_path = dir.join("base.json");
+        fs::write(&base_path, recording(1000.0, 500.0).pretty()).unwrap();
+        let base_path = base_path.to_str().unwrap();
+        // Within the floor: +10% and −5% both pass.
+        diff_against_baseline(&recording(1100.0, 475.0), base_path).unwrap();
+        // An 11% drop on any preset fails.
+        let err = diff_against_baseline(&recording(1000.0, 445.0), base_path).unwrap_err();
+        assert!(err.to_string().contains("trace"), "{err}");
+        // Missing baseline is not an error (first recording).
+        diff_against_baseline(&recording(1.0, 1.0), dir.join("nope.json").to_str().unwrap())
+            .unwrap();
+    }
+
+    #[test]
+    fn hot_path_bench_runs_and_reports_zero_allocs() {
+        let o = hot_path_bench(3).unwrap();
+        assert!(o.path("waves_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        if alloc_track::enabled() {
+            for key in
+                ["assembly_allocs_per_wave", "verify_allocs_per_wave", "frame_parse_allocs"]
+            {
+                assert_eq!(o.path(key).and_then(Json::as_f64), Some(0.0), "{key}");
+            }
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! prints the paper-comparable rows.
 
 pub mod ablation;
+pub mod bench_cmd;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
@@ -92,6 +93,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("table1") => table1::main(args),
         Some("fluid") => fluid_exp::main(args),
         Some("ablation") => ablation::main(args),
+        Some("bench") => bench_cmd::main(args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -123,6 +125,8 @@ COMMANDS
   table1     Table I scenario matrix                     --out results
   fluid      fluid-limit / Theorem 1 validation          --out results
   ablation   eta/beta/C sweeps, greedy-vs-DP, buckets    --out results
+  bench      perf recording (BENCH_<n>.json)             --quick --out <path>
+                                                         --baseline <path> --iters <n>
 
 Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke, straggler,
 sharded, tree, churn, trace.

@@ -31,6 +31,14 @@
 //! See `DESIGN.md` (repo root) for the system inventory, the sync/async
 //! wave lifecycle, and the experiment index.
 
+// Perf instrumentation: count heap allocations per thread so the bench
+// harness and the allocation-free-wave tests can assert on them. Only
+// bench/test builds opt in (`--features alloc_track`); the default build
+// keeps the plain system allocator.
+#[cfg(feature = "alloc_track")]
+#[global_allocator]
+static ALLOC_COUNTER: util::alloc_track::CountingAlloc = util::alloc_track::CountingAlloc;
+
 pub mod cli;
 pub mod configsys;
 pub mod coordinator;

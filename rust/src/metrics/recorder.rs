@@ -150,6 +150,9 @@ impl Recorder {
             other.cum_goodput.len(),
             "recorders must share the client universe"
         );
+        // One reservation up front: shard merges fold thousands of waves,
+        // and `push` alone would regrow `rounds` along the way.
+        self.rounds.reserve(other.rounds.len());
         for rec in other.rounds {
             self.push(rec);
         }
@@ -296,12 +299,13 @@ impl Recorder {
             verify += r.verify_ns;
             send += r.send_ns;
         }
+        let jain = jain_index(&avg);
         RunSummary {
             rounds: t as u64,
-            per_client_goodput: avg.clone(),
+            per_client_goodput: avg,
             total_tokens,
             tokens_per_sec: if wall_secs > 0.0 { total_tokens / wall_secs } else { 0.0 },
-            jain: jain_index(&avg),
+            jain,
             mean_request_latency_rounds: mean_latency,
             requests_completed: self.request_latency_rounds.len() as u64,
             recv_secs: recv as f64 * 1e-9,

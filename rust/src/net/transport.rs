@@ -256,20 +256,24 @@ fn write_frame(stream: &mut TcpStream, msg: &Message) -> Result<()> {
     Ok(())
 }
 
-fn read_frame(stream: &mut TcpStream) -> Result<Message> {
+/// Read one length-prefixed frame into `buf` (reused across calls — within
+/// its high-water capacity the refill never allocates) and decode it.
+fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Message> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf).context("tcp read len")?;
     let len = u32::from_le_bytes(len_buf) as usize;
     if len > 64 << 20 {
         return Err(anyhow!("tcp frame too large: {len}"));
     }
-    let mut payload = vec![0u8; len];
-    stream.read_exact(&mut payload).context("tcp read payload")?;
-    Ok(Message::decode(&payload)?)
+    buf.clear();
+    buf.resize(len, 0);
+    stream.read_exact(buf).context("tcp read payload")?;
+    Ok(Message::decode(buf)?)
 }
 
 struct TcpPort {
     stream: TcpStream,
+    buf: Vec<u8>,
 }
 
 impl ClientPort for TcpPort {
@@ -278,7 +282,7 @@ impl ClientPort for TcpPort {
     }
 
     fn recv(&mut self) -> Result<Message> {
-        read_frame(&mut self.stream)
+        read_frame(&mut self.stream, &mut self.buf)
     }
 }
 
@@ -314,24 +318,27 @@ impl TcpTransport {
             txs.push(Box::new(move |m: &Message| write_frame(&mut writer, m)));
             let fan = fan_tx.clone();
             let mut reader = s;
-            reader_handles.push(std::thread::spawn(move || loop {
-                match read_frame(&mut reader) {
-                    Ok(Message::Shutdown) => {
-                        let _ = fan.send((i, Message::Shutdown));
-                        break;
-                    }
-                    Ok(m) => {
-                        if fan.send((i, m)).is_err() {
+            reader_handles.push(std::thread::spawn(move || {
+                let mut buf = Vec::new();
+                loop {
+                    match read_frame(&mut reader, &mut buf) {
+                        Ok(Message::Shutdown) => {
+                            let _ = fan.send((i, Message::Shutdown));
                             break;
                         }
+                        Ok(m) => {
+                            if fan.send((i, m)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break, // peer closed
                     }
-                    Err(_) => break, // peer closed
                 }
             }));
         }
         let ports = client_streams
             .into_iter()
-            .map(|s| Box::new(TcpPort { stream: s }) as Box<dyn ClientPort>)
+            .map(|s| Box::new(TcpPort { stream: s, buf: Vec::new() }) as Box<dyn ClientPort>)
             .collect();
         Ok(TcpTransport { server: ServerSide { rx: fan_rx, txs }, ports, reader_handles })
     }

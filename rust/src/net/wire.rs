@@ -45,7 +45,7 @@ pub enum Message {
 }
 
 /// Session hello: the first frame a dynamically attached client sends.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct JoinMsg {
     pub client_id: u32,
     /// Wire-protocol version the client speaks (see [`PROTOCOL_VERSION`]).
@@ -53,7 +53,7 @@ pub struct JoinMsg {
 }
 
 /// Hello acknowledgement: grants the session and its first allocation.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct JoinAckMsg {
     pub client_id: u32,
     /// Protocol version the coordinator speaks.
@@ -65,7 +65,7 @@ pub struct JoinAckMsg {
 }
 
 /// Graceful-drain completion: the session is retired.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LeaveMsg {
     pub client_id: u32,
     /// Membership epoch after the departure.
@@ -202,23 +202,36 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
     }
 
-    fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
+    /// Borrowed length-prefixed byte vector (`u32 LE count` + raw bytes).
+    fn bytes(&mut self) -> Result<&'a [u8], WireError> {
         let n = self.u32()? as usize;
-        Ok(self.take(n)?.to_vec())
+        self.take(n)
     }
 
-    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+    /// Borrowed length-prefixed f32 vector, returned as its raw
+    /// little-endian bytes (`count * 4` long). Deferring the f32
+    /// conversion keeps the parse zero-copy: `&[u8]` has no alignment
+    /// requirement, while a `&[f32]` reinterpretation of an arbitrary
+    /// frame offset would.
+    fn f32s_le(&mut self) -> Result<&'a [u8], WireError> {
         let n = self.u32()? as usize;
-        let raw = self.take(n * 4)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
-            .collect())
+        self.take(n * 4)
     }
 
     fn done(&self) -> bool {
         self.pos == self.buf.len()
     }
+}
+
+/// Decode raw little-endian f32 bytes (as returned by
+/// [`DraftView::q_probs_le`]) into `out`, reusing its capacity. The
+/// byte-wise `from_le_bytes` loop compiles to a straight copy on
+/// little-endian targets and stays correct on big-endian ones.
+pub fn copy_f32s_le(raw: &[u8], out: &mut Vec<f32>) {
+    debug_assert_eq!(raw.len() % 4, 0);
+    out.clear();
+    out.reserve(raw.len() / 4);
+    out.extend(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
 }
 
 /// Reject a control frame claiming a newer protocol than we speak.
@@ -227,6 +240,180 @@ fn check_version(got: u8) -> Result<u8, WireError> {
         Err(WireError::UnsupportedVersion { got, supported: PROTOCOL_VERSION })
     } else {
         Ok(got)
+    }
+}
+
+/// Zero-copy draft frame: every variable-length field borrows the wire
+/// payload. The dominant field — the `[draft.len() * vocab]` proposal
+/// matrix — stays as raw little-endian bytes (`q_probs_le`) so parsing
+/// never copies it; convert with [`copy_f32s_le`] only where f32s are
+/// actually consumed (the estimator/judging boundary).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DraftView<'a> {
+    pub client_id: u32,
+    pub round: u64,
+    pub prefix: &'a [u8],
+    pub prompt_len: u32,
+    pub draft: &'a [u8],
+    /// Empty = linear chain (see [`DraftMsg::parents`]).
+    pub parents: &'a [u8],
+    /// Raw little-endian bytes of the proposal matrix
+    /// (`draft.len() * vocab * 4` long).
+    pub q_probs_le: &'a [u8],
+    pub new_request: bool,
+    pub draft_wall_ns: u64,
+}
+
+impl DraftView<'_> {
+    /// Copy into an owned [`DraftMsg`] (allocates; off the hot path).
+    pub fn to_msg(self) -> DraftMsg {
+        let mut q_probs = Vec::new();
+        copy_f32s_le(self.q_probs_le, &mut q_probs);
+        DraftMsg {
+            client_id: self.client_id,
+            round: self.round,
+            prefix: self.prefix.to_vec(),
+            prompt_len: self.prompt_len,
+            draft: self.draft.to_vec(),
+            parents: self.parents.to_vec(),
+            q_probs,
+            new_request: self.new_request,
+            draft_wall_ns: self.draft_wall_ns,
+        }
+    }
+}
+
+/// Zero-copy verdict frame (the accepted path borrows the payload).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VerdictView<'a> {
+    pub client_id: u32,
+    pub round: u64,
+    pub accepted: u32,
+    /// Empty for chain verdicts (see [`VerdictMsg::path`]).
+    pub path: &'a [u8],
+    pub correction: u8,
+    pub next_alloc: u32,
+    pub shard: u32,
+}
+
+impl VerdictView<'_> {
+    /// Copy into an owned [`VerdictMsg`].
+    pub fn to_msg(self) -> VerdictMsg {
+        VerdictMsg {
+            client_id: self.client_id,
+            round: self.round,
+            accepted: self.accepted,
+            path: self.path.to_vec(),
+            correction: self.correction,
+            next_alloc: self.next_alloc,
+            shard: self.shard,
+        }
+    }
+}
+
+/// Zero-copy decoded frame. [`FrameView::parse`] reads a frame payload
+/// without allocating: the bulk variants (`Draft`, `Verdict`) borrow
+/// every variable-length field, and the control variants carry their
+/// handful of fixed-width fields by value. [`Message::decode`] is the
+/// owned wrapper; both share the exact same read order, validation, and
+/// typed [`WireError`]s.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FrameView<'a> {
+    Draft(DraftView<'a>),
+    Verdict(VerdictView<'a>),
+    Shutdown,
+    Join(JoinMsg),
+    JoinAck(JoinAckMsg),
+    Leave(LeaveMsg),
+}
+
+impl<'a> FrameView<'a> {
+    /// Parse the payload of one frame (without the 4-byte length prefix)
+    /// without copying any variable-length field. Total: malformed input
+    /// yields a typed [`WireError`], never a panic.
+    pub fn parse(payload: &'a [u8]) -> Result<FrameView<'a>, WireError> {
+        let mut r = Reader { buf: payload, pos: 0 };
+        let view = match r.u8()? {
+            tag @ (TAG_DRAFT | TAG_DRAFT_TREE) => {
+                let client_id = r.u32()?;
+                let round = r.u64()?;
+                let prefix = r.bytes()?;
+                let prompt_len = r.u32()?;
+                let draft = r.bytes()?;
+                let parents: &[u8] =
+                    if tag == TAG_DRAFT_TREE { r.bytes()? } else { &[] };
+                if tag == TAG_DRAFT_TREE && parents.len() != draft.len() {
+                    return Err(WireError::Malformed(format!(
+                        "tree draft with {} parents for {} nodes",
+                        parents.len(),
+                        draft.len()
+                    )));
+                }
+                FrameView::Draft(DraftView {
+                    client_id,
+                    round,
+                    prefix,
+                    prompt_len,
+                    draft,
+                    parents,
+                    q_probs_le: r.f32s_le()?,
+                    new_request: r.u8()? != 0,
+                    draft_wall_ns: r.u64()?,
+                })
+            }
+            tag @ (TAG_VERDICT | TAG_VERDICT_TREE) => {
+                let client_id = r.u32()?;
+                let round = r.u64()?;
+                let accepted = r.u32()?;
+                let path: &[u8] =
+                    if tag == TAG_VERDICT_TREE { r.bytes()? } else { &[] };
+                FrameView::Verdict(VerdictView {
+                    client_id,
+                    round,
+                    accepted,
+                    path,
+                    correction: r.u8()?,
+                    next_alloc: r.u32()?,
+                    shard: r.u32()?,
+                })
+            }
+            TAG_SHUTDOWN => FrameView::Shutdown,
+            TAG_JOIN => {
+                let client_id = r.u32()?;
+                let protocol = check_version(r.u8()?)?;
+                FrameView::Join(JoinMsg { client_id, protocol })
+            }
+            TAG_JOIN_ACK => {
+                let client_id = r.u32()?;
+                let protocol = check_version(r.u8()?)?;
+                FrameView::JoinAck(JoinAckMsg {
+                    client_id,
+                    protocol,
+                    initial_alloc: r.u32()?,
+                    epoch: r.u64()?,
+                })
+            }
+            TAG_LEAVE => {
+                FrameView::Leave(LeaveMsg { client_id: r.u32()?, epoch: r.u64()? })
+            }
+            t => return Err(WireError::UnknownTag(t)),
+        };
+        if !r.done() {
+            return Err(WireError::TrailingBytes(r.buf.len() - r.pos));
+        }
+        Ok(view)
+    }
+
+    /// Copy into an owned [`Message`] (allocates for the bulk variants).
+    pub fn to_msg(self) -> Message {
+        match self {
+            FrameView::Draft(d) => Message::Draft(d.to_msg()),
+            FrameView::Verdict(v) => Message::Verdict(v.to_msg()),
+            FrameView::Shutdown => Message::Shutdown,
+            FrameView::Join(j) => Message::Join(j),
+            FrameView::JoinAck(a) => Message::JoinAck(a),
+            FrameView::Leave(l) => Message::Leave(l),
+        }
     }
 }
 
@@ -288,75 +475,14 @@ impl Message {
         w.buf
     }
 
-    /// Decode the payload of one frame (without the 4-byte length prefix).
-    /// Total: every failure mode is a typed [`WireError`].
+    /// Decode the payload of one frame (without the 4-byte length prefix)
+    /// into an owned [`Message`]. Total: every failure mode is a typed
+    /// [`WireError`]. This is the convenience wrapper over the zero-copy
+    /// [`FrameView::parse`]; hot paths that can consume borrowed payloads
+    /// should parse a [`FrameView`] instead and convert only what they
+    /// keep.
     pub fn decode(payload: &[u8]) -> Result<Message, WireError> {
-        let mut r = Reader { buf: payload, pos: 0 };
-        let msg = match r.u8()? {
-            tag @ (TAG_DRAFT | TAG_DRAFT_TREE) => {
-                let client_id = r.u32()?;
-                let round = r.u64()?;
-                let prefix = r.bytes()?;
-                let prompt_len = r.u32()?;
-                let draft = r.bytes()?;
-                let parents = if tag == TAG_DRAFT_TREE { r.bytes()? } else { Vec::new() };
-                if tag == TAG_DRAFT_TREE && parents.len() != draft.len() {
-                    return Err(WireError::Malformed(format!(
-                        "tree draft with {} parents for {} nodes",
-                        parents.len(),
-                        draft.len()
-                    )));
-                }
-                Message::Draft(DraftMsg {
-                    client_id,
-                    round,
-                    prefix,
-                    prompt_len,
-                    draft,
-                    parents,
-                    q_probs: r.f32s()?,
-                    new_request: r.u8()? != 0,
-                    draft_wall_ns: r.u64()?,
-                })
-            }
-            tag @ (TAG_VERDICT | TAG_VERDICT_TREE) => {
-                let client_id = r.u32()?;
-                let round = r.u64()?;
-                let accepted = r.u32()?;
-                let path = if tag == TAG_VERDICT_TREE { r.bytes()? } else { Vec::new() };
-                Message::Verdict(VerdictMsg {
-                    client_id,
-                    round,
-                    accepted,
-                    path,
-                    correction: r.u8()?,
-                    next_alloc: r.u32()?,
-                    shard: r.u32()?,
-                })
-            }
-            TAG_SHUTDOWN => Message::Shutdown,
-            TAG_JOIN => {
-                let client_id = r.u32()?;
-                let protocol = check_version(r.u8()?)?;
-                Message::Join(JoinMsg { client_id, protocol })
-            }
-            TAG_JOIN_ACK => {
-                let client_id = r.u32()?;
-                let protocol = check_version(r.u8()?)?;
-                Message::JoinAck(JoinAckMsg {
-                    client_id,
-                    protocol,
-                    initial_alloc: r.u32()?,
-                    epoch: r.u64()?,
-                })
-            }
-            TAG_LEAVE => Message::Leave(LeaveMsg { client_id: r.u32()?, epoch: r.u64()? }),
-            t => return Err(WireError::UnknownTag(t)),
-        };
-        if !r.done() {
-            return Err(WireError::TrailingBytes(r.buf.len() - r.pos));
-        }
-        Ok(msg)
+        FrameView::parse(payload).map(|v| v.to_msg())
     }
 
     /// Encoded size (for network-delay accounting without encoding).
@@ -649,5 +775,184 @@ mod tests {
         let mut long = frame[4..].to_vec();
         long.push(0);
         assert!(Message::decode(&long).is_err());
+    }
+
+    /// The pre-`FrameView` owned decoder, kept verbatim as the oracle for
+    /// the zero-copy rewrite: `FrameView::parse(..).map(to_msg)` must
+    /// agree with it on every input — same messages, same typed errors.
+    fn legacy_decode(payload: &[u8]) -> Result<Message, WireError> {
+        struct OwnedReader<'a> {
+            r: Reader<'a>,
+        }
+        impl OwnedReader<'_> {
+            fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
+                Ok(self.r.bytes()?.to_vec())
+            }
+            fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+                let n = self.r.u32()? as usize;
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let raw = self.r.take(4)?;
+                    out.push(f32::from_le_bytes(raw.try_into().expect("4-byte slice")));
+                }
+                Ok(out)
+            }
+        }
+        let mut o = OwnedReader { r: Reader { buf: payload, pos: 0 } };
+        let msg = match o.r.u8()? {
+            tag @ (TAG_DRAFT | TAG_DRAFT_TREE) => {
+                let client_id = o.r.u32()?;
+                let round = o.r.u64()?;
+                let prefix = o.bytes()?;
+                let prompt_len = o.r.u32()?;
+                let draft = o.bytes()?;
+                let parents = if tag == TAG_DRAFT_TREE { o.bytes()? } else { Vec::new() };
+                if tag == TAG_DRAFT_TREE && parents.len() != draft.len() {
+                    return Err(WireError::Malformed(format!(
+                        "tree draft with {} parents for {} nodes",
+                        parents.len(),
+                        draft.len()
+                    )));
+                }
+                Message::Draft(DraftMsg {
+                    client_id,
+                    round,
+                    prefix,
+                    prompt_len,
+                    draft,
+                    parents,
+                    q_probs: o.f32s()?,
+                    new_request: o.r.u8()? != 0,
+                    draft_wall_ns: o.r.u64()?,
+                })
+            }
+            tag @ (TAG_VERDICT | TAG_VERDICT_TREE) => {
+                let client_id = o.r.u32()?;
+                let round = o.r.u64()?;
+                let accepted = o.r.u32()?;
+                let path = if tag == TAG_VERDICT_TREE { o.bytes()? } else { Vec::new() };
+                Message::Verdict(VerdictMsg {
+                    client_id,
+                    round,
+                    accepted,
+                    path,
+                    correction: o.r.u8()?,
+                    next_alloc: o.r.u32()?,
+                    shard: o.r.u32()?,
+                })
+            }
+            TAG_SHUTDOWN => Message::Shutdown,
+            TAG_JOIN => {
+                let client_id = o.r.u32()?;
+                let protocol = check_version(o.r.u8()?)?;
+                Message::Join(JoinMsg { client_id, protocol })
+            }
+            TAG_JOIN_ACK => {
+                let client_id = o.r.u32()?;
+                let protocol = check_version(o.r.u8()?)?;
+                Message::JoinAck(JoinAckMsg {
+                    client_id,
+                    protocol,
+                    initial_alloc: o.r.u32()?,
+                    epoch: o.r.u64()?,
+                })
+            }
+            TAG_LEAVE => Message::Leave(LeaveMsg { client_id: o.r.u32()?, epoch: o.r.u64()? }),
+            t => return Err(WireError::UnknownTag(t)),
+        };
+        if !o.r.done() {
+            return Err(WireError::TrailingBytes(o.r.buf.len() - o.r.pos));
+        }
+        Ok(msg)
+    }
+
+    /// Zero-copy decode agrees with the legacy owned decoder on arbitrary
+    /// valid frames of every message kind.
+    #[test]
+    fn prop_frameview_agrees_with_legacy_on_valid_frames() {
+        proptest::check("wire_view_legacy_valid", proptest::default_cases(), |rng| {
+            let msgs = [
+                Message::Draft(sample_draft(rng)),
+                Message::Draft(sample_tree_draft(rng)),
+                Message::Verdict(VerdictMsg {
+                    client_id: rng.below(8) as u32,
+                    round: rng.next_u64() % 1000,
+                    accepted: rng.below(33) as u32,
+                    path: (0..rng.below(6)).map(|i| i as u8).collect(),
+                    correction: rng.below(256) as u8,
+                    next_alloc: rng.below(33) as u32,
+                    shard: rng.below(8) as u32,
+                }),
+                Message::Shutdown,
+                Message::Join(JoinMsg {
+                    client_id: rng.below(1024) as u32,
+                    protocol: PROTOCOL_VERSION,
+                }),
+                Message::JoinAck(JoinAckMsg {
+                    client_id: rng.below(1024) as u32,
+                    protocol: PROTOCOL_VERSION,
+                    initial_alloc: rng.below(33) as u32,
+                    epoch: rng.next_u64() % 10_000,
+                }),
+                Message::Leave(LeaveMsg {
+                    client_id: rng.below(1024) as u32,
+                    epoch: rng.next_u64() % 10_000,
+                }),
+            ];
+            for m in msgs {
+                let payload = &m.encode()[4..];
+                assert_eq!(Message::decode(payload), legacy_decode(payload));
+                assert_eq!(Message::decode(payload).unwrap(), m);
+            }
+        });
+    }
+
+    /// Zero-copy decode agrees with the legacy owned decoder on malformed
+    /// input too: random byte soup, truncations of valid frames, and
+    /// trailing garbage all yield the *same* typed `WireError` (and never
+    /// panic).
+    #[test]
+    fn prop_frameview_agrees_with_legacy_on_malformed_input() {
+        proptest::check("wire_view_legacy_malformed", proptest::default_cases(), |rng| {
+            // Pure garbage.
+            let len = rng.below(64) as usize;
+            let garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            assert_eq!(Message::decode(&garbage), legacy_decode(&garbage));
+            // Every truncation of a valid frame (worst case: mid-field EOFs).
+            let m = if rng.bool(0.5) {
+                Message::Draft(sample_tree_draft(rng))
+            } else {
+                Message::Draft(sample_draft(rng))
+            };
+            let payload = &m.encode()[4..];
+            let cut = rng.below(payload.len() as u64 + 1) as usize;
+            assert_eq!(Message::decode(&payload[..cut]), legacy_decode(&payload[..cut]));
+            // Trailing garbage after a complete frame.
+            let mut long = payload.to_vec();
+            long.push(rng.below(256) as u8);
+            assert_eq!(Message::decode(&long), legacy_decode(&long));
+            assert!(matches!(
+                Message::decode(&long),
+                Err(WireError::TrailingBytes(1))
+            ));
+        });
+    }
+
+    /// The zero-copy parse itself never touches the heap (only meaningful
+    /// under `--features alloc_track`; a no-op count otherwise).
+    #[test]
+    fn frameview_parse_is_allocation_free() {
+        use crate::util::alloc_track;
+        let mut rng = crate::util::Rng::new(0xF00D);
+        let m = Message::Draft(sample_tree_draft(&mut rng));
+        let frame = m.encode();
+        let payload = &frame[4..];
+        // Warm-up parse, then measure.
+        let _ = FrameView::parse(payload).unwrap();
+        let (view, allocs) = alloc_track::measure(|| FrameView::parse(payload).unwrap());
+        assert_eq!(view.to_msg(), m);
+        if alloc_track::enabled() {
+            assert_eq!(allocs, 0, "FrameView::parse must not allocate");
+        }
     }
 }

@@ -34,7 +34,7 @@ pub trait Drafter {
 
 /// One verification round over a batch of clients (the bucketed shapes are
 /// chosen by the implementation from `batch`/`seq`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct VerifyRequest {
     /// Row-major `[batch, seq]` token ids (prefix ++ draft, right-padded).
     pub tokens: Vec<i32>,
@@ -65,7 +65,7 @@ pub fn chain_parent_array(batch: usize, k: usize) -> Vec<i32> {
 }
 
 /// Verification outputs (see `python/compile/model.py::verify_graph`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct VerifyOutput {
     /// `[batch, k]` min(1, p/q) at each draft position.
     pub ratio: Vec<f32>,
@@ -92,6 +92,17 @@ impl VerifyOutput {
 /// Target-side verification engine.
 pub trait Verifier {
     fn verify(&mut self, req: &VerifyRequest) -> Result<VerifyOutput>;
+
+    /// Verify into a caller-owned output, reusing its buffer capacity —
+    /// the allocation-free form of [`Verifier::verify`] for the wave hot
+    /// path. Implementations must fill `out` with results *identical* to
+    /// what [`Verifier::verify`] returns for the same request; the
+    /// default simply delegates (allocating a fresh output per call).
+    fn verify_into(&mut self, req: &VerifyRequest, out: &mut VerifyOutput) -> Result<()> {
+        *out = self.verify(req)?;
+        Ok(())
+    }
+
     /// Available (batch, seq) shape buckets, ascending.
     fn buckets(&self) -> Vec<(usize, usize)>;
 }

@@ -51,6 +51,12 @@ impl MockWorld {
         self.dist_from_hash(self.ctx_hash(ctx), self.sharpness)
     }
 
+    /// [`MockWorld::target_dist`] into a reused buffer (the verifier hot
+    /// path calls this once per draft position; identical output).
+    pub fn target_dist_into(&self, ctx: &[u8], out: &mut Vec<f32>) {
+        self.dist_from_hash_into(self.ctx_hash(ctx), self.sharpness, out);
+    }
+
     /// Draft model distribution q(· | ctx) for a client with divergence
     /// `noise ∈ [0, 1]`: 0 = identical to target (α → 1), 1 = unrelated.
     pub fn draft_dist(&self, ctx: &[u8], noise: f32, client_tag: u64) -> Vec<f32> {
@@ -72,20 +78,31 @@ impl MockWorld {
     }
 
     fn dist_from_hash(&self, h: u64, sharpness: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.vocab);
+        self.dist_from_hash_into(h, sharpness, &mut out);
+        out
+    }
+
+    /// Same math as [`MockWorld::dist_from_hash`], computed in place in
+    /// `out` (softmax applied to the logits buffer itself — identical
+    /// float-op sequence, so the distribution is bit-for-bit the same).
+    fn dist_from_hash_into(&self, h: u64, sharpness: f32, out: &mut Vec<f32>) {
         let mut rng = crate::util::Rng::new(h);
-        let mut logits: Vec<f32> = (0..self.vocab).map(|_| rng.f32() * sharpness).collect();
+        out.clear();
+        out.extend((0..self.vocab).map(|_| rng.f32() * sharpness));
         // A few strong modes to mimic a trained LM's peaked conditionals.
         for _ in 0..3 {
             let i = rng.below(self.vocab as u64) as usize;
-            logits[i] += sharpness * 2.0;
+            out[i] += sharpness * 2.0;
         }
-        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut probs: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
-        let s: f32 = probs.iter().sum();
-        for p in probs.iter_mut() {
-            *p /= s;
+        let m = out.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for x in out.iter_mut() {
+            *x = (*x - m).exp();
         }
-        probs
+        let s: f32 = out.iter().sum();
+        for x in out.iter_mut() {
+            *x /= s;
+        }
     }
 }
 
@@ -141,15 +158,20 @@ impl Drafter for MockDrafter {
 pub struct MockVerifier {
     world: Arc<MockWorld>,
     buckets: Vec<(usize, usize)>,
+    // Scratch reused across calls so warm `verify_into` never allocates.
+    p: Vec<f32>,
+    ctx: Vec<u8>,
+    path: Vec<u8>,
 }
 
 /// Context of draft position `j` in row `row`: the prefix plus the tokens
 /// along `j`'s parent chain, truncated to the bucket length (the verify
 /// graph's row clamp). For the chain layout (`parent[j] = j − 1`) this is
-/// exactly the pre-tree linear context `tokens[..pos0 + j]`.
-fn ctx_of(req: &VerifyRequest, row: usize, j: usize) -> Vec<u8> {
+/// exactly the pre-tree linear context `tokens[..pos0 + j]`. Written into
+/// `ctx` (with `path` as parent-chain scratch), reusing both capacities.
+fn ctx_of_into(req: &VerifyRequest, row: usize, j: usize, path: &mut Vec<u8>, ctx: &mut Vec<u8>) {
     let k = req.k;
-    let mut path = Vec::new();
+    path.clear();
     let mut p = req.parent[row * k + j];
     while p >= 0 {
         path.push(req.draft_tok[row * k + p as usize] as u8);
@@ -162,15 +184,20 @@ fn ctx_of(req: &VerifyRequest, row: usize, j: usize) -> Vec<u8> {
     }
     path.reverse();
     let pos0 = (req.pos0[row] as usize).min(req.seq);
-    let mut ctx: Vec<u8> =
-        req.tokens[row * req.seq..row * req.seq + pos0].iter().map(|&t| t as u8).collect();
-    ctx.extend_from_slice(&path);
+    ctx.clear();
+    ctx.extend(req.tokens[row * req.seq..row * req.seq + pos0].iter().map(|&t| t as u8));
+    ctx.extend_from_slice(path);
     ctx.truncate(req.seq);
-    ctx
 }
 
 impl Verifier for MockVerifier {
     fn verify(&mut self, req: &VerifyRequest) -> Result<VerifyOutput> {
+        let mut out = VerifyOutput::default();
+        self.verify_into(req, &mut out)?;
+        Ok(out)
+    }
+
+    fn verify_into(&mut self, req: &VerifyRequest, out: &mut VerifyOutput) -> Result<()> {
         let v = req.vocab;
         if v != self.world.vocab {
             return Err(anyhow!("vocab mismatch: {} vs {}", v, self.world.vocab));
@@ -179,45 +206,50 @@ impl Verifier for MockVerifier {
         if req.parent.len() != b * k {
             return Err(anyhow!("parent array {} != batch*k {}", req.parent.len(), b * k));
         }
-        let mut ratio = vec![0.0f32; b * k];
-        let mut resid = vec![0.0f32; b * k * v];
-        let mut bonus = vec![0.0f32; b * v];
+        out.ratio.clear();
+        out.ratio.resize(b * k, 0.0);
+        out.resid.clear();
+        out.resid.resize(b * k * v, 0.0);
+        out.bonus.clear();
+        out.bonus.resize(b * v, 0.0);
         for row in 0..b {
             for j in 0..k {
                 // Context from the parent chain (rows past the client's
                 // true node count are ignored by the coordinator).
-                let ctx = ctx_of(req, row, j);
-                let p = self.world.target_dist(&ctx);
+                ctx_of_into(req, row, j, &mut self.path, &mut self.ctx);
+                self.world.target_dist_into(&self.ctx, &mut self.p);
+                let p = &self.p;
                 let q = &req.q_probs[(row * k + j) * v..(row * k + j + 1) * v];
                 let tok = req.draft_tok[row * k + j] as usize;
                 let pt = p[tok.min(v - 1)];
                 let qt = q[tok.min(v - 1)].max(1e-9);
-                ratio[row * k + j] = (pt / qt).min(1.0);
-                let out = &mut resid[(row * k + j) * v..(row * k + j + 1) * v];
+                out.ratio[row * k + j] = (pt / qt).min(1.0);
+                let res = &mut out.resid[(row * k + j) * v..(row * k + j + 1) * v];
                 let mut s = 0.0f32;
                 for t in 0..v {
                     let d = (p[t] - q[t]).max(0.0);
-                    out[t] = d;
+                    res[t] = d;
                     s += d;
                 }
                 if s > 1e-9 {
-                    for x in out.iter_mut() {
+                    for x in res.iter_mut() {
                         *x /= s;
                     }
                 } else {
-                    out.copy_from_slice(&p);
+                    res.copy_from_slice(p);
                 }
             }
             // Bonus output: the target after the last row's context plus
             // its own token — for the chain layout this is exactly the
             // legacy `tokens[..pos0 + k]` context. (Tree clients never use
             // this output: each leaf has its own phantom bonus row.)
-            let mut ctx = ctx_of(req, row, k - 1);
-            ctx.push(req.draft_tok[row * k + (k - 1)] as u8);
-            ctx.truncate(req.seq);
-            bonus[row * v..(row + 1) * v].copy_from_slice(&self.world.target_dist(&ctx));
+            ctx_of_into(req, row, k - 1, &mut self.path, &mut self.ctx);
+            self.ctx.push(req.draft_tok[row * k + (k - 1)] as u8);
+            self.ctx.truncate(req.seq);
+            self.world.target_dist_into(&self.ctx, &mut self.p);
+            out.bonus[row * v..(row + 1) * v].copy_from_slice(&self.p);
         }
-        Ok(VerifyOutput { ratio, resid, bonus })
+        Ok(())
     }
 
     fn buckets(&self) -> Vec<(usize, usize)> {
@@ -278,7 +310,13 @@ impl EngineFactory for MockEngineFactory {
     }
 
     fn make_verifier(&self, _family: &str) -> Result<Box<dyn Verifier>> {
-        Ok(Box::new(MockVerifier { world: self.world.clone(), buckets: self.buckets.clone() }))
+        Ok(Box::new(MockVerifier {
+            world: self.world.clone(),
+            buckets: self.buckets.clone(),
+            p: Vec::new(),
+            ctx: Vec::new(),
+            path: Vec::new(),
+        }))
     }
 
     fn make_target_stepper(&self, _family: &str) -> Result<Box<dyn Drafter>> {
@@ -455,6 +493,53 @@ mod tests {
         let p = w.target_dist(&[3, 4, 5, 9]);
         let expect = (p[11] / (1.0 / 32.0)).min(1.0);
         assert!((out.ratio[2] - expect).abs() < 1e-5, "{} vs {expect}", out.ratio[2]);
+    }
+
+    #[test]
+    fn verify_into_matches_verify_and_reuses_buffers() {
+        let f = MockEngineFactory::new(world());
+        let mut ver = f.make_verifier("fam").unwrap();
+        let (b, s, v, k) = (2usize, 16usize, 32usize, 4usize);
+        let mut rng = Rng::new(3);
+        let mut tokens = vec![0i32; b * s];
+        let mut draft_tok = vec![0i32; b * k];
+        let mut q_probs = vec![0.0f32; b * k * v];
+        for row in 0..b {
+            for i in 0..6 {
+                tokens[row * s + i] = rng.below(32) as i32;
+            }
+            for j in 0..k {
+                draft_tok[row * k + j] = rng.below(32) as i32;
+                tokens[row * s + 3 + j] = draft_tok[row * k + j];
+                for t in 0..v {
+                    q_probs[(row * k + j) * v + t] = 1.0 / v as f32;
+                }
+            }
+        }
+        let req = VerifyRequest {
+            tokens,
+            batch: b,
+            seq: s,
+            draft_tok,
+            q_probs,
+            pos0: vec![3; b],
+            parent: super::engine::chain_parent_array(b, k),
+            k,
+            vocab: v,
+        };
+        let expect = ver.verify(&req).unwrap();
+        let mut out = VerifyOutput::default();
+        ver.verify_into(&req, &mut out).unwrap();
+        assert_eq!(out, expect);
+        // Warm call: scratch and output capacities are in place, so the
+        // verifier never touches the heap (observable under alloc_track).
+        let (res, allocs) =
+            crate::util::alloc_track::measure(|| ver.verify_into(&req, &mut out));
+        res.unwrap();
+        assert_eq!(out, expect);
+        if crate::util::alloc_track::enabled() {
+            assert_eq!(allocs, 0, "warm verify_into must not allocate");
+        }
     }
 
     #[test]

@@ -1,0 +1,111 @@
+//! Thread-local heap-allocation counter for perf assertions.
+//!
+//! The bench harness (`goodspeed bench`) and the allocation-free-wave
+//! tests use this to *prove* the arena'd hot path stays off the heap,
+//! instead of eyeballing profiler output. The counting allocator is only
+//! registered as the global allocator when the crate is built with
+//! `--features alloc_track` (test/bench builds; the default build keeps
+//! the plain system allocator). The query API below compiles either way:
+//! without the feature the counters simply never move and
+//! [`enabled`] reports `false`, so callers can gate their assertions.
+//!
+//! Counters are per-thread (a `Cell<u64>`, no locks, no heap), so a
+//! measurement on the bench thread is not polluted by coordinator or
+//! draft-server threads running concurrently.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// A forwarding allocator that counts this thread's allocation calls.
+/// Registered via `#[global_allocator]` in `lib.rs` under the
+/// `alloc_track` feature.
+pub struct CountingAlloc;
+
+// SAFETY: pure forwarding to `System`; the counters are plain `Cell`s
+// with const initializers, so touching them never allocates or unwinds
+// (`try_with` covers TLS teardown).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        let _ = BYTES.try_with(|c| c.set(c.get() + layout.size() as u64));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        let _ = BYTES.try_with(|c| c.set(c.get() + new_size as u64));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Whether the counting allocator is actually registered in this build
+/// (`--features alloc_track`). When `false`, [`allocations`] is frozen at
+/// 0 and [`measure`] always reports 0 — assertions should be skipped.
+pub fn enabled() -> bool {
+    cfg!(feature = "alloc_track")
+}
+
+/// Monotone count of heap allocations performed by the current thread.
+pub fn allocations() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Monotone count of bytes requested from the allocator by this thread
+/// (alloc + realloc request sizes; frees are not subtracted).
+pub fn bytes_allocated() -> u64 {
+    BYTES.with(|c| c.get())
+}
+
+/// Run `f` and return its result plus the number of heap allocations the
+/// current thread performed inside it (always 0 when [`enabled`] is
+/// `false`).
+pub fn measure<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    let before = allocations();
+    let r = f();
+    (r, allocations() - before)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_only_with_feature() {
+        let (v, allocs) = measure(|| {
+            let mut v: Vec<u64> = Vec::with_capacity(64);
+            v.push(1);
+            v
+        });
+        assert_eq!(v, vec![1]);
+        if enabled() {
+            assert!(allocs >= 1, "a fresh Vec must hit the allocator");
+        } else {
+            assert_eq!(allocs, 0, "counters must stay frozen without the feature");
+        }
+    }
+
+    #[test]
+    fn warm_buffer_reuse_is_allocation_free() {
+        // The pattern the wave arenas rely on: clear() + extend within
+        // capacity never re-enters the allocator.
+        let mut buf: Vec<u8> = Vec::with_capacity(256);
+        let (_, allocs) = measure(|| {
+            for _ in 0..100 {
+                buf.clear();
+                buf.extend_from_slice(&[7u8; 200]);
+            }
+        });
+        if enabled() {
+            assert_eq!(allocs, 0, "clear+extend within capacity must not allocate");
+        }
+    }
+}

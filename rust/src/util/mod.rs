@@ -2,7 +2,9 @@
 //! only the `xla` closure, so PRNG, stats, logging, timing, and the property
 //! test driver are all first-class local implementations).
 
+pub mod alloc_track;
 pub mod logger;
+pub mod perfjson;
 pub mod prng;
 pub mod proptest;
 pub mod stats;
