@@ -444,6 +444,13 @@ pub struct Scenario {
     /// and SLO accounting (`None` = the classic endless-stream run,
     /// bit-identical to the pre-trace stack).
     pub trace: Option<TraceConfig>,
+    /// Streaming-aggregation metrics: recorders fold each wave into
+    /// cumulative counters + a latency reservoir and trackers fold each
+    /// finished request into a bounded sketch, instead of retaining every
+    /// record — memory stays O(clients) for soak-length runs. `false`
+    /// (default) retains everything; retained output is byte-identical
+    /// to before this mode existed.
+    pub stream_metrics: bool,
 }
 
 impl Scenario {
@@ -509,19 +516,12 @@ impl Scenario {
         if self.num_verifiers > self.num_clients {
             return err("num_verifiers must be <= num_clients".into());
         }
-        // Trace-driven runs: the request tracker's virtual clock is the
-        // single coordinator's wave counter; per-shard wave clocks make
-        // per-request attribution ambiguous, so the pool is rejected up
-        // front (the same style of guard pooled scenarios used to get
-        // from the single-verifier runner).
+        // Trace-driven runs compose with the sharded pool: each shard
+        // drives its own RequestTracker partition on its own wave clock
+        // and the per-shard reports merge in the recorder, so
+        // num_verifiers > 1 with a trace is a supported configuration
+        // (the pre-scale-out stack rejected it here).
         if let Some(trace) = &self.trace {
-            if self.num_verifiers > 1 {
-                return err(format!(
-                    "trace-driven serving requires num_verifiers = 1 (got {}); \
-                     request SLO accounting needs one coordinator wave clock",
-                    self.num_verifiers
-                ));
-            }
             if trace.slo_waves == 0 {
                 return err("trace: slo_waves must be > 0".into());
             }
@@ -634,6 +634,7 @@ impl Scenario {
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
                 trace: None,
+                stream_metrics: false,
             },
             // Table I row 2: Qwen3-14B / 0.6B+1.7B, C ∈ {16,20}, 8 clients, 150 tok
             "qwen-8c-150" => Scenario {
@@ -659,6 +660,7 @@ impl Scenario {
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
                 trace: None,
+                stream_metrics: false,
             },
             // Table I row 3: Llama-70B / 1B+3B, C ∈ {16,20}, 8 clients, 150 tok
             "llama-8c-150" => Scenario {
@@ -684,6 +686,7 @@ impl Scenario {
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
                 trace: None,
+                stream_metrics: false,
             },
             // Fast preset for tests and smoke runs.
             "smoke" => Scenario {
@@ -709,6 +712,7 @@ impl Scenario {
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
                 trace: None,
+                stream_metrics: false,
             },
             // Straggler study: one client with a 10× slower uplink. In sync
             // mode every round stalls on that link; async mode lets the
@@ -742,6 +746,7 @@ impl Scenario {
                     spec_shape: SpecShape::Chain,
                     churn: ChurnSchedule::default(),
                     trace: None,
+                    stream_metrics: false,
                 }
             }
             // Sharded-pool scale-up study: 8 heterogeneous clients whose
@@ -781,6 +786,7 @@ impl Scenario {
                     spec_shape: SpecShape::Chain,
                     churn: ChurnSchedule::default(),
                     trace: None,
+                    stream_metrics: false,
                 }
             }
             // Tree-speculation study: four clients drafting with the weak
@@ -811,6 +817,7 @@ impl Scenario {
                 spec_shape: SpecShape::Tree { arity: 2, depth: 8 },
                 churn: ChurnSchedule::default(),
                 trace: None,
+                stream_metrics: false,
             },
             // Dynamic-membership study: four resident clients, one extra
             // client joining a third of the way through the run, and one
@@ -841,6 +848,7 @@ impl Scenario {
                     spec_shape: SpecShape::Chain,
                     churn: ChurnSchedule::default(),
                     trace: None,
+                    stream_metrics: false,
                 };
                 s.churn = ChurnSchedule {
                     events: vec![
@@ -885,6 +893,39 @@ impl Scenario {
                 // scheduling rather than luck, and all six requests per
                 // client land well inside the 240-wave run.
                 trace: Some(TraceConfig::poisson(28.0, 48)),
+                stream_metrics: false,
+            },
+            // 10k-session scale-out soak: open-loop Poisson arrivals over
+            // M = 4 verification shards with streaming metrics, the shape
+            // `goodspeed bench --soak` sweeps (it overrides the session
+            // count and shard count per measurement point). Arrivals are
+            // sparse per client (mean gap 64 waves) so the aggregate load
+            // is carried by the population, not any single session, and
+            // the budget floor of one token per member stays feasible.
+            "soak" => Scenario {
+                id: id.into(),
+                family: "qwen".into(),
+                num_clients: 10_000,
+                capacity: 16_384,
+                max_new_tokens: 24,
+                draft_models: vec!["qwen-draft-06b".into()],
+                domains: base_domains,
+                domain_stickiness: 0.9,
+                eta: Smoothing::Fixed(0.3),
+                beta: Smoothing::Fixed(0.5),
+                max_draft: 8,
+                rounds: 400,
+                seed,
+                links: Vec::new(), // resized to the population below
+                coord_mode: CoordMode::Sync,
+                batch_window_us: 500,
+                min_wave_fill: 0,
+                num_verifiers: 4,
+                shard_rebalance_every: 64,
+                spec_shape: SpecShape::Chain,
+                churn: ChurnSchedule::default(),
+                trace: Some(TraceConfig::poisson(64.0, 96)),
+                stream_metrics: true,
             },
             _ => return None,
         };
@@ -895,7 +936,7 @@ impl Scenario {
         Some(s)
     }
 
-    pub fn preset_ids() -> [&'static str; 9] {
+    pub fn preset_ids() -> [&'static str; 10] {
         [
             "qwen-4c-50",
             "qwen-8c-150",
@@ -906,6 +947,7 @@ impl Scenario {
             "tree",
             "churn",
             "trace",
+            "soak",
         ]
     }
 
@@ -931,6 +973,7 @@ impl Scenario {
             ("shard_rebalance_every", Value::Num(self.shard_rebalance_every as f64)),
             ("spec_shape", Value::Str(self.spec_shape.label())),
             ("churn_events", Value::Num(self.churn.events.len() as f64)),
+            ("stream_metrics", Value::Bool(self.stream_metrics)),
             (
                 "trace",
                 match &self.trace {
@@ -1064,11 +1107,11 @@ mod tests {
         assert_eq!(s.num_clients, 8);
         assert_eq!(s.num_verifiers, 2);
         assert_eq!(s.shard_rebalance_every, 16);
-        // Every non-sharded preset stays single-verifier so existing
-        // experiments reproduce bit-for-bit.
+        // Every preset outside the sharded pair stays single-verifier so
+        // existing experiments reproduce bit-for-bit.
         for id in Scenario::preset_ids() {
             let p = Scenario::preset(id).unwrap();
-            if id != "sharded" {
+            if id != "sharded" && id != "soak" {
                 assert_eq!(p.num_verifiers, 1, "{id}");
             }
         }
@@ -1191,19 +1234,19 @@ mod tests {
         let trace = t.trace.clone().expect("trace preset carries a trace config");
         assert_eq!(trace.arrival, ArrivalProcess::Poisson { mean_gap: 28.0 });
         assert_eq!(trace.slo_waves, 48);
-        // Every other preset stays request-free so existing experiments
-        // reproduce bit-for-bit.
+        // Every preset outside the trace-driven pair stays request-free
+        // so existing experiments reproduce bit-for-bit.
         for id in Scenario::preset_ids() {
             let p = Scenario::preset(id).unwrap();
-            if id != "trace" {
+            if id != "trace" && id != "soak" {
                 assert!(p.trace.is_none(), "{id}");
             }
         }
-        // The pool has no single wave clock: trace + shards is rejected.
-        let mut bad = Scenario::preset("trace").unwrap();
-        bad.num_verifiers = 2;
-        let err = bad.validate().unwrap_err().to_string();
-        assert!(err.contains("num_verifiers = 1"), "{err}");
+        // Traces compose with the sharded pool (each shard drives its own
+        // tracker partition), so the historic M = 1 restriction is gone.
+        let mut pooled = Scenario::preset("trace").unwrap();
+        pooled.num_verifiers = 2;
+        assert!(pooled.validate().is_ok());
         // Degenerate knobs are rejected.
         let mut bad = Scenario::preset("trace").unwrap();
         bad.trace.as_mut().unwrap().slo_waves = 0;
@@ -1224,6 +1267,23 @@ mod tests {
         t.output_tokens = 0;
         t.requests_per_client = 0;
         assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn soak_preset_shape() {
+        let s = Scenario::preset("soak").unwrap();
+        assert_eq!(s.num_clients, 10_000);
+        assert_eq!(s.num_verifiers, 4);
+        assert!(s.stream_metrics, "soak runs with bounded metrics");
+        assert!(s.trace.is_some(), "soak is trace-driven");
+        assert_eq!(s.links.len(), s.num_clients);
+        // Every other preset keeps retained metrics, whose output is
+        // byte-identical to the pre-streaming stack.
+        for id in Scenario::preset_ids() {
+            if id != "soak" {
+                assert!(!Scenario::preset(id).unwrap().stream_metrics, "{id}");
+            }
+        }
     }
 
     #[test]

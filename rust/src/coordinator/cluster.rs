@@ -441,10 +441,17 @@ impl ClusterEngine {
 
         let tracker = if scenario.trace.is_some() {
             let trace = RequestTrace::from_scenario(&scenario, slots)?;
-            Some(RequestTracker::new(trace, slots))
+            let mut t = RequestTracker::new(trace, slots);
+            if scenario.stream_metrics {
+                t.stream();
+            }
+            Some(t)
         } else {
             None
         };
+        if scenario.stream_metrics {
+            leader.core.recorder.stream();
+        }
         let mut engine = ClusterEngine {
             simulate_network: cfg.simulate_network,
             factory,
@@ -753,10 +760,11 @@ impl ClusterEngine {
         // records + per-client SLO-goodput move into the recorder.
         if let Some(mut tracker) = self.tracker.take() {
             tracker.finish(self.final_wave);
-            let (requests, slo_goodput, censored) = tracker.into_report();
+            let (requests, slo_goodput, censored, sketch) = tracker.into_report();
             self.leader.core.recorder.requests = requests;
             self.leader.core.recorder.slo_goodput = slo_goodput;
             self.leader.core.recorder.requests_censored = censored;
+            self.leader.core.recorder.request_sketch = sketch;
         }
 
         let mut draft_stats: Vec<DraftStats> = Vec::with_capacity(self.handles.len());

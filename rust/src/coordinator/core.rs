@@ -94,12 +94,18 @@ pub struct RoundCore {
     turbo: Option<TurboController>,
     /// Shard id stamped onto emitted records (0 outside pooled mode).
     shard: usize,
-    /// Reusable `finish_wave` scratch: the dense estimator-update rows and
-    /// the allocator caps are recycled across waves so steady-state
-    /// scheduling stays off the heap (part of the wave-arena work; see
-    /// DESIGN.md "Performance & benchmarking").
+    /// Reusable `finish_wave` scratch: the dense estimator-update rows,
+    /// the allocator caps, and the allocation vector itself are recycled
+    /// across waves so steady-state scheduling stays off the heap (part of
+    /// the wave-arena work; see DESIGN.md "Performance & benchmarking").
     dense: Vec<Option<(f64, f64)>>,
     caps: AllocCaps,
+    alloc: Vec<usize>,
+    /// Recycled [`RoundRecord`] shell. Retained-mode recorders keep every
+    /// record, so this stays `None` there; a streaming recorder hands the
+    /// displaced record back and its `clients` vector is reused, keeping
+    /// warm waves allocation-free end to end.
+    spare: Option<RoundRecord>,
     pub recorder: Recorder,
 }
 
@@ -136,6 +142,8 @@ impl RoundCore {
                 max_per_client: Vec::new(),
                 live: Vec::new(),
             },
+            alloc: Vec::new(),
+            spare: None,
             recorder: Recorder::new(n),
         }
     }
@@ -323,6 +331,24 @@ impl RoundCore {
         recv_ns: u64,
         verify_ns: u64,
     ) -> Vec<usize> {
+        let mut next = Vec::with_capacity(obs.len());
+        self.finish_wave_into(wave, obs, recv_ns, verify_ns, &mut next);
+        next
+    }
+
+    /// Allocation-free form of [`RoundCore::finish_wave`]: the per-
+    /// participant grant vector is caller-owned and recycled across waves
+    /// (cleared and refilled), the scheduler runs through the reusable
+    /// [`Allocator::allocate_into`] path, and — with a streaming recorder
+    /// — the wave record's shell is recycled too. Bit-identical outputs.
+    pub fn finish_wave_into(
+        &mut self,
+        wave: u64,
+        obs: &[WaveObs],
+        recv_ns: u64,
+        verify_ns: u64,
+        next: &mut Vec<usize>,
+    ) {
         let n = self.estimators.len();
         // Per-wave scratch is recycled: clear + resize within the
         // high-water capacity is a pure refill, no allocation.
@@ -399,47 +425,41 @@ impl RoundCore {
             .map(|i| self.outstanding[i])
             .sum();
         self.caps.capacity = self.capacity.saturating_sub(reserved);
-        let alloc = self.allocator.allocate(&self.estimators, &self.caps);
+        self.allocator.allocate_into(&self.estimators, &self.caps, &mut self.alloc);
 
-        let mut next = Vec::with_capacity(obs.len());
+        next.clear();
         for o in obs {
-            self.outstanding[o.client_id] = alloc[o.client_id];
+            self.outstanding[o.client_id] = self.alloc[o.client_id];
             // The grant this wave hands out is the draft the *next* wave
             // verifies: remember whether it was an idle-masked 0 so that
             // wave's neutral sample is skipped too (wake-wave coverage).
             self.idle_grant[o.client_id] = self.idle[o.client_id];
-            next.push(alloc[o.client_id]);
+            next.push(self.alloc[o.client_id]);
         }
-        let clients = obs
-            .iter()
-            .map(|o| ClientRoundMetrics {
-                client_id: o.client_id,
-                s_used: o.s_used,
-                accepted: o.accepted,
-                goodput: o.goodput,
-                mean_ratio: o.mean_ratio,
-                spec_depth: o.spec_depth,
-                alpha_hat: self.estimators.alpha_hat[o.client_id],
-                x_beta: self.estimators.x_beta[o.client_id],
-                next_alloc: alloc[o.client_id],
-            })
-            .collect();
-        self.recorder.push(RoundRecord {
-            round: wave,
-            shard: self.shard,
-            recv_ns,
-            verify_ns,
-            send_ns: 0, // noted after the verdict fan-out
-            clients,
-        });
-        next
+        let mut rec = self.spare.take().unwrap_or_default();
+        rec.round = wave;
+        rec.shard = self.shard;
+        rec.recv_ns = recv_ns;
+        rec.verify_ns = verify_ns;
+        rec.send_ns = 0; // noted after the verdict fan-out
+        rec.clients.clear();
+        rec.clients.extend(obs.iter().map(|o| ClientRoundMetrics {
+            client_id: o.client_id,
+            s_used: o.s_used,
+            accepted: o.accepted,
+            goodput: o.goodput,
+            mean_ratio: o.mean_ratio,
+            spec_depth: o.spec_depth,
+            alpha_hat: self.estimators.alpha_hat[o.client_id],
+            x_beta: self.estimators.x_beta[o.client_id],
+            next_alloc: self.alloc[o.client_id],
+        }));
+        self.spare = self.recorder.push_reuse(rec);
     }
 
     /// Record the measured send-phase time on the wave just processed.
     pub fn note_send_ns(&mut self, send_ns: u64) {
-        if let Some(rec) = self.recorder.rounds.last_mut() {
-            rec.send_ns = send_ns;
-        }
+        self.recorder.note_send_ns(send_ns);
     }
 
     /// Fold extra measured time into the wave's verify phase. The live
@@ -448,9 +468,7 @@ impl RoundCore {
     /// estimator/allocation work happens after the caller's verify lap.
     /// (The simulator doesn't call it: its verify phase is virtual time.)
     pub fn note_verify_extra_ns(&mut self, extra_ns: u64) {
-        if let Some(rec) = self.recorder.rounds.last_mut() {
-            rec.verify_ns += extra_ns;
-        }
+        self.recorder.note_verify_extra_ns(extra_ns);
     }
 }
 

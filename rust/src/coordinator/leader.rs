@@ -85,6 +85,9 @@ pub struct Leader {
     out: VerifyOutput,
     /// Reusable per-wave observation buffer.
     obs: Vec<WaveObs>,
+    /// Reusable next-allocation buffer (the scheduler's output vector —
+    /// recycled so warm waves stay allocation-free through scheduling).
+    next: Vec<usize>,
 }
 
 impl Leader {
@@ -137,6 +140,7 @@ impl Leader {
             arena: WaveArena::new(),
             out: VerifyOutput::default(),
             obs: Vec::new(),
+            next: Vec::new(),
         })
     }
 
@@ -163,8 +167,10 @@ impl Leader {
     /// reusing its slots (including each verdict's `path` capacity). With
     /// warm buffers the whole pipeline — wave assembly, mock
     /// verification, chain rejection sampling — runs without heap
-    /// allocation; what remains is the per-wave record the recorder
-    /// retains and the scheduler's allocation vector.
+    /// allocation — including scheduling (the allocation vector and the
+    /// greedy heap are core/leader scratch) and, with a streaming
+    /// recorder, the wave record itself (its shell is recycled; retained
+    /// mode keeps every record by design).
     pub fn process_wave_into(
         &mut self,
         wave: u64,
@@ -280,11 +286,13 @@ impl Leader {
         // 1 lines 14–15) — the shared core path. The scheduling time is
         // folded back into the verify phase afterwards so `verify_ns`
         // keeps its Fig 3 meaning: verification *plus* scheduling.
-        let next = self.core.finish_wave(wave, &self.obs, recv_ns, verify_ns);
+        let mut next = std::mem::take(&mut self.next);
+        self.core.finish_wave_into(wave, &self.obs, recv_ns, verify_ns, &mut next);
         self.core.note_verify_extra_ns(sw.lap().as_nanos() as u64);
         for (vd, nx) in verdicts.iter_mut().zip(&next) {
             vd.next_alloc = *nx as u32;
         }
+        self.next = next;
         Ok(())
     }
 

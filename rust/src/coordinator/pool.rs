@@ -32,10 +32,22 @@
 //!
 //! The run consumes the same total verification budget as the
 //! single-verifier coordinator (`num_clients × rounds` verdicts), so
-//! pooled and unpooled runs are work-comparable. Request latency is
-//! tracked draft-side (`DraftStats::request_latency_rounds`) in pooled
-//! runs — coordinator-side latency bookkeeping assumes one server clock.
+//! pooled and unpooled runs are work-comparable.
+//!
+//! **Sharded SLO serving.** Trace-driven scenarios run on the pool too:
+//! every shard materializes the full (deterministic) request trace, then
+//! restricts its [`RequestTracker`] to its own members
+//! (`RequestTracker::retain_members`), so each request is owned by
+//! exactly one shard and driven on that shard's wave clock. Migrations
+//! carry the client's in-flight request state alongside the estimator
+//! hand-off: the donor exports it (age-rebased, nothing censored) into
+//! the controller's handoff mailbox and the adopter imports it before its
+//! next wave. The per-shard reports merge in [`Recorder::absorb`] exactly
+//! like shard verdicts; an unclaimed handoff at run end is censored, not
+//! counted as a miss.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -57,6 +69,7 @@ use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, VerdictMsg, PROT
 use crate::runtime::EngineFactory;
 use crate::sched::gradient::split_budget_by_members;
 use crate::sched::utility::{LogUtility, Utility};
+use crate::serve::{ClientRequestState, RequestTrace, RequestTracker};
 use crate::util::{Rng, Stopwatch};
 use crate::workload::DomainStream;
 
@@ -70,7 +83,17 @@ enum Migration {
     /// Adopt this client, seeding its learned state from the controller's
     /// published table (including the decay-schedule observation clock, so
     /// `Smoothing::Decay` continues from the client's real history).
-    Join { client: usize, alpha_hat: f64, x_beta: f64, outstanding: usize, t_obs: u64 },
+    /// `handoff` marks a migration (vs a fresh admission): the adopter
+    /// must also claim the client's in-flight request state from the
+    /// handoff mailbox once the donor deposits it.
+    Join {
+        client: usize,
+        alpha_hat: f64,
+        x_beta: f64,
+        outstanding: usize,
+        t_obs: u64,
+        handoff: bool,
+    },
     /// Begin a graceful drain: the client stays a member until its final
     /// verdict, which the shard answers with a Leave frame.
     Drain(usize),
@@ -106,6 +129,26 @@ struct PoolCtl {
     shard_participation: Vec<Vec<u64>>,
     attached_total: u64,
     retired_total: u64,
+    /// Per-shard member lists (ascending slot ids) — the controller-side
+    /// membership index, updated at event *creation* (admit / migrate /
+    /// retire) while each shard's core masks update at event application.
+    /// Lets every controller decision run over members instead of
+    /// scanning the whole slot universe.
+    members: Vec<Vec<usize>>,
+    /// Cached per-shard aggregate gradient pressure Σ ∇U(X^β): refreshed
+    /// exactly by each shard for its own row every wave (post_wave) and
+    /// adjusted incrementally between waves by admissions/migrations, so
+    /// shard picks are O(M), not O(slots).
+    pressure: Vec<f64>,
+    /// Free (never-yet-admitted) slots, min-first — admission pops the
+    /// lowest id, matching the historical linear Empty scan (retired
+    /// slots never become Empty again, so this heap is the exact free
+    /// set).
+    free_slots: BinaryHeap<Reverse<usize>>,
+    /// Migration handoff mailbox: the donor shard deposits a migrating
+    /// client's age-rebased request state here; the adopting shard claims
+    /// it before its next wave. Unclaimed states at run end are censored.
+    handoff: Vec<Option<ClientRequestState>>,
 }
 
 impl PoolCtl {
@@ -114,6 +157,26 @@ impl PoolCtl {
         (0..self.state.len())
             .filter(|&i| matches!(self.state[i], SlotState::Active | SlotState::Draining))
             .collect()
+    }
+
+    /// Add `client` to `shard`'s member index (keeping it sorted) and
+    /// fold its pressure into the cached aggregate.
+    fn insert_member(&mut self, shard: usize, client: usize) {
+        if let Err(pos) = self.members[shard].binary_search(&client) {
+            self.members[shard].insert(pos, client);
+        }
+        self.pressure[shard] += LogUtility.grad(self.x_beta[client]);
+    }
+
+    /// Remove `client` from `shard`'s member index and deduct its cached
+    /// pressure (floored at 0 against accumulated float residue; the
+    /// owning shard re-publishes the exact row every wave).
+    fn remove_member(&mut self, shard: usize, client: usize) {
+        if let Ok(pos) = self.members[shard].binary_search(&client) {
+            self.members[shard].remove(pos);
+            self.pressure[shard] =
+                (self.pressure[shard] - LogUtility.grad(self.x_beta[client])).max(0.0);
+        }
     }
 
     /// Per-slot lifetime goodput summed across the shards that served it.
@@ -174,14 +237,13 @@ pub struct PoolOutcome {
 }
 
 /// Recompute the hierarchical budget split from the controller's published
-/// estimates — the shared rule in `sched::gradient::split_budget_by_members`.
-fn compute_budgets(scenario: &Scenario, router: &ShardRouter, ctl: &PoolCtl) -> Vec<usize> {
-    let members: Vec<Vec<usize>> =
-        (0..router.num_shards()).map(|s| router.members_of(s)).collect();
+/// estimates — the shared rule in `sched::gradient::split_budget_by_members`,
+/// over the controller's own member index (no slot-universe scans).
+fn compute_budgets(scenario: &Scenario, ctl: &PoolCtl) -> Vec<usize> {
     split_budget_by_members(
         scenario.capacity,
         scenario.max_draft,
-        &members,
+        &ctl.members,
         &ctl.alpha_hat,
         &ctl.x_beta,
     )
@@ -190,47 +252,46 @@ fn compute_budgets(scenario: &Scenario, router: &ShardRouter, ctl: &PoolCtl) -> 
 /// Controller step: refresh the budget split, then migrate at most one
 /// client from the highest- to the lowest-pressure shard when the
 /// imbalance is material (> 1.5×) and the donor keeps ≥ 1 member.
+/// The hi/lo pick reads the cached per-shard pressure aggregates (O(M));
+/// only the donor's own member list is walked for the starvation pick.
 fn controller_step(scenario: &Scenario, router: &ShardRouter, ctl: &mut PoolCtl) {
-    ctl.budgets = compute_budgets(scenario, router, ctl);
+    ctl.budgets = compute_budgets(scenario, ctl);
     let u = LogUtility;
-    let m = router.num_shards();
+    let m = ctl.members.len();
     if m < 2 {
         return;
     }
-    let pressure: Vec<f64> = (0..m)
-        .map(|s| router.members_of(s).iter().map(|&i| u.grad(ctl.x_beta[i])).sum())
-        .collect();
     let (mut hi, mut lo) = (0usize, 0usize);
     for s in 1..m {
-        if pressure[s] > pressure[hi] {
+        if ctl.pressure[s] > ctl.pressure[hi] {
             hi = s;
         }
-        if pressure[s] < pressure[lo] {
+        if ctl.pressure[s] < ctl.pressure[lo] {
             lo = s;
         }
     }
-    if hi == lo || router.members_of(hi).len() < 2 {
+    if hi == lo || ctl.members[hi].len() < 2 {
         return;
     }
-    if pressure[hi] <= 1.5 * pressure[lo].max(1e-9) {
+    if ctl.pressure[hi] <= 1.5 * ctl.pressure[lo].max(1e-9) {
         return;
     }
     // Move the donor shard's most-starved client (largest ∇U) to the
     // underloaded shard. Draining sessions stay put — their remaining
     // lifetime is one verdict.
-    let donor: Vec<usize> = router
-        .members_of(hi)
-        .into_iter()
-        .filter(|&i| ctl.state[i] == SlotState::Active)
-        .collect();
-    let client = match donor
+    let client = match ctl
+        .members[hi]
         .iter()
-        .max_by(|&&a, &&b| u.grad(ctl.x_beta[a]).total_cmp(&u.grad(ctl.x_beta[b])))
+        .copied()
+        .filter(|&i| ctl.state[i] == SlotState::Active)
+        .max_by(|&a, &b| u.grad(ctl.x_beta[a]).total_cmp(&u.grad(ctl.x_beta[b])))
     {
-        Some(&c) => c,
+        Some(c) => c,
         None => return,
     };
     router.assign(client, lo);
+    ctl.remove_member(hi, client);
+    ctl.insert_member(lo, client);
     ctl.inbox[hi].push(Migration::Leave(client));
     ctl.inbox[lo].push(Migration::Join {
         client,
@@ -238,27 +299,87 @@ fn controller_step(scenario: &Scenario, router: &ShardRouter, ctl: &mut PoolCtl)
         x_beta: ctl.x_beta[client],
         outstanding: ctl.outstanding[client],
         t_obs: ctl.t_obs[client],
+        handoff: true,
     });
     ctl.migrations += 1;
     // Budgets follow the new membership immediately.
-    ctl.budgets = compute_budgets(scenario, router, ctl);
+    ctl.budgets = compute_budgets(scenario, ctl);
+}
+
+/// Shard-local request accounting for trace-driven pooled runs: this
+/// shard's tracker partition, the clients whose migrated request state
+/// has not yet landed in the handoff mailbox, and the shard's current
+/// wave (the tracker clock migrations re-base against).
+struct ShardTracker {
+    tracker: RequestTracker,
+    awaiting: Vec<usize>,
+    wave: u64,
 }
 
 /// Apply any pending migrations addressed to this shard: membership flips
-/// plus the full estimator hand-off (α̂, X^β, outstanding grant, and the
-/// decay-schedule observation clock).
-fn apply_inbox(shard: usize, leader: &mut Leader, ctl: &mut PoolCtl) {
+/// (core mask + the shard-local member list) plus the full estimator
+/// hand-off (α̂, X^β, outstanding grant, and the decay-schedule
+/// observation clock). Trace-driven shards also move request state: a
+/// Leave exports the client's in-flight/queued requests into the handoff
+/// mailbox (censoring nothing); a migration Join claims them — or queues
+/// the client on the awaiting list until the donor deposits.
+fn apply_inbox(
+    shard: usize,
+    leader: &mut Leader,
+    ctl: &mut PoolCtl,
+    members: &mut Vec<usize>,
+    mut serve: Option<&mut ShardTracker>,
+) {
     for mig in std::mem::take(&mut ctl.inbox[shard]) {
         match mig {
-            Migration::Leave(client) => leader.core.set_member(client, false),
-            Migration::Join { client, alpha_hat, x_beta, outstanding, t_obs } => {
+            Migration::Leave(client) => {
+                leader.core.set_member(client, false);
+                if let Ok(pos) = members.binary_search(&client) {
+                    members.remove(pos);
+                }
+                if let Some(st) = serve.as_mut() {
+                    // A client that left before its handoff state ever
+                    // arrived has nothing to export here; its state stays
+                    // in the mailbox for whichever shard owns it next.
+                    st.awaiting.retain(|&c| c != client);
+                    if let Some(state) = st.tracker.export_client(client, st.wave) {
+                        ctl.handoff[client] = Some(state);
+                    }
+                }
+            }
+            Migration::Join { client, alpha_hat, x_beta, outstanding, t_obs, handoff } => {
                 leader.core.set_member(client, true);
                 leader.core.estimators.alpha_hat[client] = alpha_hat;
                 leader.core.estimators.x_beta[client] = x_beta;
                 leader.core.estimators.set_observations(client, t_obs);
                 leader.core.set_outstanding(client, outstanding);
+                if let Err(pos) = members.binary_search(&client) {
+                    members.insert(pos, client);
+                }
+                if handoff {
+                    if let Some(st) = serve.as_mut() {
+                        match ctl.handoff[client].take() {
+                            Some(state) => st.tracker.import_client(client, state, st.wave),
+                            None => st.awaiting.push(client),
+                        }
+                    }
+                }
             }
             Migration::Drain(client) => leader.core.set_draining(client, true),
+        }
+    }
+    // Claim any handoff state deposited since its Join was applied.
+    if let Some(st) = serve {
+        if !st.awaiting.is_empty() {
+            let wave = st.wave;
+            let tracker = &mut st.tracker;
+            st.awaiting.retain(|&c| match ctl.handoff[c].take() {
+                Some(state) => {
+                    tracker.import_client(c, state, wave);
+                    false
+                }
+                None => true,
+            });
         }
     }
 }
@@ -266,35 +387,42 @@ fn apply_inbox(shard: usize, leader: &mut Leader, ctl: &mut PoolCtl) {
 /// Per-wave bookkeeping a shard performs under the pool lock: publish its
 /// members' learned state, advance the rebalance clock (running the
 /// controller on the boundary), apply inbound migrations, and adopt the
-/// current budget slice.
+/// current budget slice. Walks only this shard's member list — never the
+/// slot universe — so the per-wave coordinator cost scales with shard
+/// occupancy, not fleet size.
 fn post_wave(
     scenario: &Scenario,
     shard: usize,
     leader: &mut Leader,
     router: &ShardRouter,
     shared: &PoolShared,
+    members: &mut Vec<usize>,
+    serve: &mut Option<ShardTracker>,
 ) {
-    let slots = leader.core.n_clients();
     let mut ctl = shared.ctl.lock().expect("pool lock");
-    for i in 0..slots {
-        if leader.core.is_member(i) {
-            ctl.alpha_hat[i] = leader.core.estimators.alpha_hat[i];
-            ctl.x_beta[i] = leader.core.estimators.x_beta[i];
-            ctl.outstanding[i] = leader.core.outstanding(i);
-            ctl.t_obs[i] = leader.core.estimators.observations(i);
-        }
+    let lg = leader.core.recorder.lifetime_goodput();
+    let part = leader.core.recorder.participation();
+    for &i in members.iter() {
+        ctl.alpha_hat[i] = leader.core.estimators.alpha_hat[i];
+        ctl.x_beta[i] = leader.core.estimators.x_beta[i];
+        ctl.outstanding[i] = leader.core.outstanding(i);
+        ctl.t_obs[i] = leader.core.estimators.observations(i);
+        // Publish this shard's cumulative per-slot views (a migrated
+        // client's lifetime is the column sum across shards).
+        ctl.shard_goodput[shard][i] = lg[i];
+        ctl.shard_participation[shard][i] = part[i];
     }
-    // Publish this shard's cumulative per-slot views (a migrated
-    // client's lifetime is the column sum across shards).
-    ctl.shard_goodput[shard]
-        .copy_from_slice(leader.core.recorder.lifetime_goodput());
-    ctl.shard_participation[shard].copy_from_slice(leader.core.recorder.participation());
+    // Re-base this shard's cached pressure aggregate on the freshly
+    // published estimates (the owner overwrites the controller's
+    // incremental adjustments with an exact sum once per wave).
+    let u = LogUtility;
+    ctl.pressure[shard] = members.iter().map(|&i| u.grad(ctl.x_beta[i])).sum();
     ctl.waves += 1;
     let every = scenario.shard_rebalance_every;
     if every > 0 && ctl.waves % every == 0 {
         controller_step(scenario, router, &mut ctl);
     }
-    apply_inbox(shard, leader, &mut ctl);
+    apply_inbox(shard, leader, &mut ctl, members, serve.as_mut());
     leader.core.set_capacity(ctl.budgets[shard]);
 }
 
@@ -357,15 +485,22 @@ fn run_shard_loop(
     leader: &mut Leader,
     router: &ShardRouter,
     shared: &PoolShared,
+    serve: &mut Option<ShardTracker>,
 ) -> Result<u64> {
     let slots = router.num_clients();
     let window = Duration::from_micros(scenario.batch_window_us);
     let mut pending: Vec<Option<DraftMsg>> = vec![None; slots];
     let mut pending_n = 0usize;
     let mut wave: u64 = 0;
+    // Shard-local member list (sorted ascending), kept in sync with the
+    // core's membership mask by `apply_inbox` — the wave loop and
+    // `post_wave` walk this instead of scanning the slot universe.
+    let mut members: Vec<usize> = router.members_of(shard);
+    members.sort_unstable();
     // Wave-loop buffers, reused across waves.
     let mut msgs: Vec<DraftMsg> = Vec::new();
     let mut verdicts: Vec<VerdictMsg> = Vec::new();
+    let mut outcomes: Vec<(usize, usize)> = Vec::new();
 
     'run: while !shared.stopping() {
         let mut sw = Stopwatch::new();
@@ -384,8 +519,7 @@ fn run_shard_loop(
         }
         // Phase 2 — batching window: wait for the rest of the current
         // membership until the deadline expires.
-        let members = router.members_of(shard).len().max(1);
-        let fill = scenario.effective_wave_fill().min(members);
+        let fill = scenario.effective_wave_fill().min(members.len().max(1));
         let deadline = Instant::now() + window;
         while pending_n < fill {
             match server.recv_deadline(deadline)? {
@@ -419,8 +553,14 @@ fn run_shard_loop(
         // state — and a later drain can't stomp what this wave learns.
         {
             let mut ctl = shared.ctl.lock().expect("pool lock");
-            apply_inbox(shard, leader, &mut ctl);
+            if let Some(st) = serve.as_mut() {
+                st.wave = wave;
+            }
+            apply_inbox(shard, leader, &mut ctl, &mut members, serve.as_mut());
             leader.core.set_capacity(ctl.budgets[shard]);
+        }
+        if let Some(st) = serve.as_mut() {
+            st.tracker.sync_wave_start_tracked(&mut leader.core, wave);
         }
 
         // Phase 5 — verify + schedule + send.
@@ -430,7 +570,19 @@ fn run_shard_loop(
             (server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
         }
         leader.note_send_ns(sw.lap().as_nanos() as u64);
+        if let Some(st) = serve.as_mut() {
+            outcomes.clear();
+            outcomes.extend(
+                verdicts
+                    .iter()
+                    .map(|vd| (vd.client_id as usize, vd.accepted as usize + 1)),
+            );
+            st.tracker.sync_wave_end(wave, &outcomes);
+        }
         wave += 1;
+        if let Some(st) = serve.as_mut() {
+            st.wave = wave;
+        }
 
         let delivered = shared
             .delivered
@@ -456,6 +608,26 @@ fn run_shard_loop(
                 ctl.retired_total += 1;
                 router.set_active(id, false);
                 shared.retired[id].store(true, Ordering::Release);
+                // Publish the final-wave goodput/participation before the
+                // membership indexes drop the slot — `post_wave` walks
+                // members only and would miss the retiree's last wave.
+                ctl.shard_goodput[shard][id] = leader.core.recorder.lifetime_goodput()[id];
+                ctl.shard_participation[shard][id] =
+                    leader.core.recorder.participation()[id];
+                ctl.remove_member(shard, id);
+                if let Ok(pos) = members.binary_search(&id) {
+                    members.remove(pos);
+                }
+                if let Some(st) = serve.as_mut() {
+                    // Close the retiree's request books: claim any handoff
+                    // state still in flight toward this shard, then censor
+                    // whatever it could not finish.
+                    st.awaiting.retain(|&c| c != id);
+                    if let Some(state) = ctl.handoff[id].take() {
+                        st.tracker.import_client(id, state, wave);
+                    }
+                    st.tracker.untrack(id, wave);
+                }
                 let ev = MembershipEvent {
                     wave: ctl.waves / router.num_shards().max(1) as u64,
                     epoch: ctl.epoch,
@@ -473,7 +645,7 @@ fn run_shard_loop(
             leader.core.retire_member(id);
         }
         // Phase 7 — controller interaction (publish, rebalance, adopt).
-        post_wave(scenario, shard, leader, router, shared);
+        post_wave(scenario, shard, leader, router, shared, &mut members, serve);
     }
     Ok(wave)
 }
@@ -562,8 +734,10 @@ impl PoolDriver {
         }
         let (slot, grant) = {
             let mut ctl = self.shared.ctl.lock().expect("pool lock");
-            let slot = match ctl.state.iter().position(|s| *s == SlotState::Empty) {
-                Some(s) => s,
+            // Lowest free slot id first — identical pick order to the
+            // historical linear Empty scan, without the O(slots) walk.
+            let slot = match ctl.free_slots.pop() {
+                Some(Reverse(s)) => s,
                 None => {
                     return Err(ConfigError::invalid(
                         "no free client slots (reserve headroom with \
@@ -572,16 +746,12 @@ impl PoolDriver {
                     .into())
                 }
             };
-            // Least-pressured shard: smallest Σ ∇U(X^β) over its members;
-            // ties break to the smaller membership, then the lower index.
-            let u = LogUtility;
+            // Least-pressured shard: smallest cached Σ ∇U(X^β); ties break
+            // to the smaller membership, then the lower index — O(M).
             let mut shard = 0usize;
             let mut best = (f64::INFINITY, usize::MAX);
             for s in 0..self.router.num_shards() {
-                let members = self.router.members_of(s);
-                let pressure: f64 =
-                    members.iter().map(|&i| u.grad(ctl.x_beta[i])).sum();
-                let key = (pressure, members.len());
+                let key = (ctl.pressure[s], ctl.members[s].len());
                 if key.0 < best.0 || (key.0 == best.0 && key.1 < best.1) {
                     best = key;
                     shard = s;
@@ -589,9 +759,9 @@ impl PoolDriver {
             }
             let serving = ctl.serving();
             let (a, x) = population_mean(&ctl, &serving);
-            let members = self.router.members_of(shard);
-            let reserved: usize = members.iter().map(|&i| ctl.outstanding[i]).sum();
-            let share = ctl.budgets[shard] / (members.len() + 1).max(1);
+            let reserved: usize =
+                ctl.members[shard].iter().map(|&i| ctl.outstanding[i]).sum();
+            let share = ctl.budgets[shard] / (ctl.members[shard].len() + 1).max(1);
             let grant = share
                 .min(self.scenario.max_draft)
                 .min(ctl.budgets[shard].saturating_sub(reserved));
@@ -599,12 +769,14 @@ impl PoolDriver {
             ctl.x_beta[slot] = x;
             ctl.outstanding[slot] = grant;
             ctl.t_obs[slot] = 0;
+            ctl.insert_member(shard, slot);
             ctl.inbox[shard].push(Migration::Join {
                 client: slot,
                 alpha_hat: a,
                 x_beta: x,
                 outstanding: grant,
                 t_obs: 0,
+                handoff: false,
             });
             self.router.assign(slot, shard);
             self.router.set_active(slot, true);
@@ -780,17 +952,6 @@ pub(crate) fn run_pool_dynamic(
     if cfg.transport != Transport::Channel {
         return Err(fail("the sharded pool runs over the channel transport".into()));
     }
-    if scenario.trace.is_some() {
-        // Scenario::validate already rejects this pairing; keep the guard
-        // so a hand-built RunConfig cannot slip a trace into the pool,
-        // where per-shard wave clocks would make request attribution
-        // ambiguous.
-        return Err(fail(
-            "configuration error: trace-driven serving requires the single-verifier \
-             coordinator (num_verifiers = 1) — request SLO accounting needs one wave clock"
-                .into(),
-        ));
-    }
     let n = scenario.num_clients;
     let m = scenario.num_verifiers;
     assert!(slots >= n, "slots must cover the initial clients");
@@ -809,9 +970,18 @@ pub(crate) fn run_pool_dynamic(
         outstanding[i] = initial_alloc;
         state[i] = SlotState::Active;
     }
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for i in 0..n {
+        members[router.shard_of(i)].push(i);
+    }
+    let x_beta = vec![1.0; slots];
+    let pressure: Vec<f64> = members
+        .iter()
+        .map(|ms| ms.iter().map(|&i| LogUtility.grad(x_beta[i])).sum())
+        .collect();
     let mut ctl = PoolCtl {
         alpha_hat: vec![0.5; slots],
-        x_beta: vec![1.0; slots],
+        x_beta,
         outstanding,
         t_obs: vec![0; slots],
         budgets: vec![0; m],
@@ -825,8 +995,12 @@ pub(crate) fn run_pool_dynamic(
         shard_participation: (0..m).map(|_| vec![0u64; slots]).collect(),
         attached_total: n as u64,
         retired_total: 0,
+        members,
+        pressure,
+        free_slots: (n..slots).map(Reverse).collect(),
+        handoff: (0..slots).map(|_| None).collect(),
     };
-    ctl.budgets = compute_budgets(scenario, &router, &ctl);
+    ctl.budgets = compute_budgets(scenario, &ctl);
     let shared = Arc::new(PoolShared {
         stop: AtomicBool::new(false),
         delivered: AtomicU64::new(0),
@@ -896,10 +1070,49 @@ pub(crate) fn run_pool_dynamic(
                         .core
                         .set_member(i, router.is_active(i) && router.shard_of(i) == shard);
                 }
-                let res =
-                    run_shard_loop(&scenario, shard, &mut server, &mut leader, &router, &shared);
+                if scenario.stream_metrics {
+                    leader.core.recorder.stream();
+                }
+                // Trace-driven pool: this shard tracks only its own
+                // members' request streams; migrations carry request
+                // state through the handoff mailbox.
+                let mut serve: Option<ShardTracker> = if scenario.trace.is_some() {
+                    let trace = match RequestTrace::from_scenario(&scenario, slots) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            shared.stop.store(true, Ordering::Release);
+                            return (Err(e), None, server);
+                        }
+                    };
+                    let mut tracker = RequestTracker::new(trace, slots);
+                    tracker.retain_members(&router.members_of(shard));
+                    if scenario.stream_metrics {
+                        tracker.stream();
+                    }
+                    Some(ShardTracker { tracker, awaiting: Vec::new(), wave: 0 })
+                } else {
+                    None
+                };
+                let res = run_shard_loop(
+                    &scenario,
+                    shard,
+                    &mut server,
+                    &mut leader,
+                    &router,
+                    &shared,
+                    &mut serve,
+                );
                 if res.is_err() {
                     shared.stop.store(true, Ordering::Release);
+                }
+                if let (Ok(final_wave), Some(mut st)) = (&res, serve) {
+                    st.tracker.finish(*final_wave);
+                    let (requests, slo_goodput, censored, sketch) = st.tracker.into_report();
+                    let rec = &mut leader.core.recorder;
+                    rec.requests = requests;
+                    rec.slo_goodput = slo_goodput;
+                    rec.requests_censored = censored;
+                    rec.request_sketch = sketch;
                 }
                 (res, Some(leader.core.recorder), server)
             })
@@ -980,6 +1193,14 @@ pub(crate) fn run_pool_dynamic(
         let mut events = std::mem::take(&mut ctl.events);
         events.sort_by_key(|e| (e.wave, e.epoch));
         merged.membership = events;
+        // Handoff states still in the mailbox (the adopting shard stopped
+        // before claiming them) are in-flight requests nobody will finish:
+        // censor them, mirroring `RequestTracker::untrack`.
+        for slot in ctl.handoff.iter_mut() {
+            if let Some(state) = slot.take() {
+                merged.requests_censored += state.censorable();
+            }
+        }
     }
     driver.publish();
     let summary = merged.summary(wall);
@@ -1127,5 +1348,55 @@ mod tests {
             simulate_network: false,
         };
         assert!(run_pool(&cfg, mock_factory()).is_err());
+    }
+
+    fn run_trace(m: usize, rounds: u64, stream: bool) -> PoolOutcome {
+        let mut s = Scenario::preset("trace").unwrap();
+        s.num_verifiers = m;
+        s.rounds = rounds;
+        s.stream_metrics = stream;
+        let cfg = RunConfig {
+            scenario: s,
+            policy: Policy::GoodSpeed,
+            transport: Transport::Channel,
+            simulate_network: false,
+        };
+        run_pool(&cfg, mock_factory()).unwrap()
+    }
+
+    #[test]
+    fn sharded_trace_run_merges_request_accounting() {
+        let out = run_trace(2, 120, false);
+        let rec = &out.recorder;
+        assert!(rec.has_requests(), "sharded trace runs keep request books");
+        let s = rec.slo_summary().expect("merged request summary");
+        assert!(
+            s.completed + s.expired + s.censored > 0,
+            "no request reached an outcome: {s:?}"
+        );
+        assert!(s.completed > 0, "120 waves must complete some requests");
+        // SLO-goodput is a filtered view of raw goodput, per client.
+        assert_eq!(rec.slo_goodput.len(), 4);
+        for (i, (&slo, &raw)) in rec.slo_goodput.iter().zip(rec.cum_goodput()).enumerate() {
+            assert!(slo <= raw + 1e-9, "client {i}: slo {slo} > raw {raw}");
+        }
+        // Waves really ran on both shards.
+        let mut shards: Vec<usize> = rec.rounds.iter().map(|r| r.shard).collect();
+        shards.sort_unstable();
+        shards.dedup();
+        assert_eq!(shards, vec![0, 1]);
+    }
+
+    #[test]
+    fn streaming_sharded_trace_retains_no_per_wave_records() {
+        let out = run_trace(2, 60, true);
+        let rec = &out.recorder;
+        assert!(rec.rounds.is_empty(), "streaming mode must not retain waves");
+        assert!(rec.requests.is_empty(), "streaming mode must not retain requests");
+        assert!(rec.request_sketch.is_some());
+        let s = rec.slo_summary().expect("sketch-backed summary");
+        assert!(s.completed + s.expired + s.censored > 0);
+        // The wave counters still aggregate across shards.
+        assert!(rec.participation().iter().sum::<u64>() >= 60 * 4);
     }
 }

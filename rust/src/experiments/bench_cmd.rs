@@ -8,6 +8,12 @@
 //! <last committed recording>` and fails when any preset's wave
 //! throughput regresses by more than 10%.
 //!
+//! `--soak` switches to the scale-out soak suite instead: the `soak`
+//! preset's 10k trace-driven sessions (1k with `--quick`) direct-drive
+//! per-shard scheduling cores, tracker partitions, and streaming
+//! recorders at M ∈ {1, 4, 8} verifier shards, recording coordinator
+//! ns/wave/session, waves/s, and peak RSS (gated by `--max-rss-mb`).
+//!
 //! Built with `--features alloc_track` the recording additionally carries
 //! per-wave allocation counts from the thread-local counting allocator
 //! (0s otherwise, with `"alloc_tracking": false` so diffs don't confuse
@@ -21,9 +27,10 @@ use anyhow::{anyhow, Context, Result};
 use super::{mock_engine, serve_once};
 use crate::cli::Args;
 use crate::configsys::{Policy, Scenario};
-use crate::coordinator::{build_verify_request_into, Transport, WaveArena};
+use crate::coordinator::{build_verify_request_into, RoundCore, Transport, WaveArena, WaveObs};
 use crate::net::wire::{DraftMsg, FrameView, Message};
 use crate::runtime::{EngineFactory, Verifier, VerifyOutput};
+use crate::serve::{RequestTrace, RequestTracker};
 use crate::util::alloc_track;
 use crate::util::perfjson::{self, Json};
 use crate::util::stats::percentile;
@@ -31,8 +38,11 @@ use crate::util::stats::percentile;
 /// The presets the recording covers, in emission order.
 pub const BENCH_PRESETS: &[&str] = &["sharded", "tree", "churn", "trace"];
 
+/// Shard counts the soak suite sweeps (the issue's M ∈ {1, 4, 8}).
+pub const SOAK_SHARDS: &[usize] = &[1, 4, 8];
+
 /// Default on-disk recording (PR-numbered so history accumulates in git).
-pub const DEFAULT_OUT: &str = "BENCH_6.json";
+pub const DEFAULT_OUT: &str = "BENCH_7.json";
 
 /// Regression gate: fail when a preset's waves/s drops below this
 /// fraction of the baseline recording.
@@ -138,6 +148,180 @@ fn hot_path_bench(iters: u64) -> Result<Json> {
     Ok(o)
 }
 
+/// This process's peak resident set (`VmHWM`) in MiB, read from
+/// `/proc/self/status`. 0.0 where the procfs surface is unavailable
+/// (non-Linux hosts record no ceiling and the `--max-rss-mb` gate
+/// passes vacuously).
+fn peak_rss_mb() -> f64 {
+    let Ok(status) = fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// Deterministic synthetic acceptance for the soak drive: a cheap
+/// splitmix-style hash of (client, wave) folded into `0..=s_used`, so the
+/// drive costs nothing next to the scheduling work it measures and two
+/// runs of the same point are identical.
+fn synth_accept(client: usize, wave: u64, s_used: usize) -> usize {
+    if s_used == 0 {
+        return 0;
+    }
+    let mut h = (client as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(wave.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    h = (h ^ (h >> 31)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (h % (s_used as u64 + 1)) as usize
+}
+
+/// One soak measurement point: `scenario.num_clients` trace-driven
+/// sessions striped across `m` verifier shards, each shard owning a
+/// scheduling core with an even budget slice, a retained-member tracker
+/// partition, and a streaming recorder. The wave loop direct-drives the
+/// coordinator surface the scale-out work targets — tracker wave-start
+/// sync, GOODSPEED-SCHED over the member set, tracker attribution — with
+/// synthetic verify outcomes (no threads, no engines), so the measured
+/// time is per-wave coordinator cost and the resident set is the
+/// steady-state serving state, not model buffers.
+fn soak_point(scenario: &Scenario, m: usize, waves: u64) -> Result<Json> {
+    let n = scenario.num_clients;
+    let mut shards = Vec::with_capacity(m);
+    for shard in 0..m {
+        let members: Vec<usize> = (shard..n).step_by(m).collect();
+        let mut core = RoundCore::new(
+            n,
+            scenario.eta,
+            scenario.beta,
+            Policy::GoodSpeed,
+            scenario.seed ^ shard as u64,
+            scenario.capacity / m,
+            1,
+        );
+        core.set_shard(shard);
+        core.recorder.stream();
+        for i in 0..n {
+            if i % m != shard {
+                core.set_member(i, false);
+                core.set_outstanding(i, 0);
+            }
+        }
+        let trace = RequestTrace::from_scenario(scenario, n)?;
+        let mut tracker = RequestTracker::new(trace, n);
+        tracker.retain_members(&members);
+        tracker.stream();
+        shards.push((core, tracker, members));
+    }
+
+    let mut obs: Vec<WaveObs> = Vec::new();
+    let mut outcomes: Vec<(usize, usize)> = Vec::new();
+    let mut next: Vec<usize> = Vec::new();
+    let mut member_waves = 0u64;
+    let t0 = Instant::now();
+    for wave in 0..waves {
+        for (core, tracker, members) in shards.iter_mut() {
+            tracker.sync_wave_start_tracked(core, wave);
+            obs.clear();
+            for &i in members.iter() {
+                let s_used = core.outstanding(i);
+                let accepted = synth_accept(i, wave, s_used);
+                obs.push(WaveObs {
+                    client_id: i,
+                    s_used,
+                    accepted,
+                    goodput: accepted + 1,
+                    mean_ratio: if s_used == 0 {
+                        1.0
+                    } else {
+                        accepted as f64 / s_used as f64
+                    },
+                    spec_depth: s_used,
+                    max_next: scenario.max_draft,
+                });
+            }
+            core.finish_wave_into(wave, &obs, 0, 0, &mut next);
+            outcomes.clear();
+            outcomes.extend(obs.iter().map(|o| (o.client_id, o.goodput)));
+            tracker.sync_wave_end(wave, &outcomes);
+            member_waves += members.len() as u64;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-12);
+
+    let (mut completed, mut expired, mut censored) = (0u64, 0u64, 0u64);
+    for (_core, tracker, _members) in shards.iter_mut() {
+        tracker.finish(waves);
+        let s = tracker.summary();
+        completed += s.completed;
+        expired += s.expired;
+        censored += s.censored;
+    }
+    let waves_per_sec = (waves * m as u64) as f64 / secs;
+    let ns_per_wave_session = secs * 1e9 / member_waves.max(1) as f64;
+    let rss = peak_rss_mb();
+    println!(
+        "  soak m={m}: {n} sessions  {waves} waves/shard  \
+         {waves_per_sec:>8.1} waves/s  {ns_per_wave_session:>7.1} ns/wave/session  \
+         {completed} completed  peak rss {rss:.1} MiB"
+    );
+    let mut o = Json::obj();
+    o.insert("shards", Json::Num(m as f64));
+    o.insert("sessions", Json::Num(n as f64));
+    o.insert("waves_per_shard", Json::Num(waves as f64));
+    o.insert("wall_secs", Json::Num(secs));
+    o.insert("waves_per_sec", Json::Num(waves_per_sec));
+    o.insert("ns_per_wave_session", Json::Num(ns_per_wave_session));
+    o.insert("requests_completed", Json::Num(completed as f64));
+    o.insert("requests_expired", Json::Num(expired as f64));
+    o.insert("requests_censored", Json::Num(censored as f64));
+    o.insert("peak_rss_mb", Json::Num(rss));
+    Ok(o)
+}
+
+/// The `--soak` suite: sweep [`SOAK_SHARDS`] over the `soak` preset
+/// (10k sessions full, 1k quick) and gate the process's peak RSS against
+/// `--max-rss-mb` when given. Peak RSS is a process-wide high-water mark,
+/// so the recorded value is cumulative across points — the gate bounds
+/// the whole sweep, which is exactly the flat-memory claim under test.
+fn soak_bench(quick: bool, max_rss_mb: Option<f64>) -> Result<Json> {
+    let mut s = Scenario::preset("soak").expect("soak preset exists");
+    if quick {
+        s.num_clients = 1_000;
+        s.rounds = s.rounds.min(120);
+    }
+    // The direct drive never touches link simulation; don't carry one
+    // LinkConfig per session around the sweep.
+    s.links = Vec::new();
+    let waves = s.rounds as u64;
+    let mut o = Json::obj();
+    o.insert("sessions", Json::Num(s.num_clients as f64));
+    o.insert("waves_per_shard", Json::Num(waves as f64));
+    for &m in SOAK_SHARDS {
+        o.insert(&format!("m{m}"), soak_point(&s, m, waves)?);
+    }
+    let rss = peak_rss_mb();
+    o.insert("peak_rss_mb", Json::Num(rss));
+    if let Some(ceiling) = max_rss_mb {
+        if rss > ceiling {
+            return Err(anyhow!(
+                "soak peak RSS {rss:.1} MiB exceeds ceiling {ceiling:.1} MiB"
+            ));
+        }
+        println!("  soak peak RSS {rss:.1} MiB within ceiling {ceiling:.1} MiB");
+    }
+    Ok(o)
+}
+
 /// Compare a fresh recording against the committed baseline. Prints the
 /// per-preset delta table; errors (non-zero exit) on any >10% wave-
 /// throughput regression. A missing baseline skips the diff (first run).
@@ -182,12 +366,28 @@ pub fn diff_against_baseline(new: &Json, baseline_path: &str) -> Result<()> {
 
 pub fn main(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
+    let soak = args.flag("soak");
     let out_path = args.get_or("out", DEFAULT_OUT);
     let baseline = args.get("baseline").map(str::to_string);
+    let max_rss_mb = args.get_parse::<f64>("max-rss-mb");
     let iters = args
         .get_parse::<u64>("iters")
         .unwrap_or(if quick { 2_000 } else { 20_000 });
     args.finish().map_err(|e| anyhow!(e))?;
+
+    if soak {
+        println!(
+            "bench: soak suite (M ∈ {SOAK_SHARDS:?}, {})",
+            if quick { "quick" } else { "full" }
+        );
+        let mut doc = Json::obj();
+        doc.insert("version", Json::Num(1.0));
+        doc.insert("quick", Json::Bool(quick));
+        doc.insert("soak", soak_bench(quick, max_rss_mb)?);
+        fs::write(&out_path, doc.pretty()).with_context(|| format!("write {out_path}"))?;
+        println!("soak recording -> {out_path}");
+        return Ok(());
+    }
 
     println!(
         "bench: {} presets + hot path ({}, alloc tracking {})",
@@ -246,6 +446,60 @@ mod tests {
         // Missing baseline is not an error (first recording).
         diff_against_baseline(&recording(1.0, 1.0), dir.join("nope.json").to_str().unwrap())
             .unwrap();
+    }
+
+    #[test]
+    fn soak_point_drives_sharded_serving_books() {
+        let mut s = Scenario::preset("soak").unwrap();
+        s.num_clients = 48;
+        s.links = Vec::new();
+        let o = soak_point(&s, 4, 64).unwrap();
+        assert_eq!(o.path("shards").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(o.path("sessions").and_then(Json::as_f64), Some(48.0));
+        assert!(o.path("waves_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(o.path("ns_per_wave_session").and_then(Json::as_f64).unwrap() > 0.0);
+        let done = o.path("requests_completed").and_then(Json::as_f64).unwrap();
+        let expired = o.path("requests_expired").and_then(Json::as_f64).unwrap();
+        let censored = o.path("requests_censored").and_then(Json::as_f64).unwrap();
+        assert!(done + expired + censored > 0.0, "the trace produced no attributable work");
+    }
+
+    #[test]
+    fn peak_rss_reads_nonnegative() {
+        assert!(peak_rss_mb() >= 0.0);
+    }
+
+    /// The PR 6 allocation tail: with a streaming recorder, a *warm*
+    /// scheduler wave — estimator update, GOODSPEED-SCHED water-fill,
+    /// grant bookkeeping, and the recycled wave record — runs entirely on
+    /// reused scratch. Seven cold waves grow every internal vector (and
+    /// land the streaming reservoir inside a power-of-two capacity
+    /// window); the eighth must not touch the heap.
+    #[test]
+    fn warm_scheduler_wave_is_allocation_free_when_streaming() {
+        let s = Scenario::preset("smoke").unwrap();
+        let mut core = RoundCore::new(8, s.eta, s.beta, Policy::GoodSpeed, 7, 64, 2);
+        core.recorder.stream();
+        let obs: Vec<WaveObs> = (0..8)
+            .map(|i| WaveObs {
+                client_id: i,
+                s_used: 2,
+                accepted: 1,
+                goodput: 2,
+                mean_ratio: 0.5,
+                spec_depth: 2,
+                max_next: 8,
+            })
+            .collect();
+        let mut next = Vec::with_capacity(8);
+        for w in 0..7 {
+            core.finish_wave_into(w, &obs, 10, 20, &mut next);
+        }
+        let ((), allocs) =
+            alloc_track::measure(|| core.finish_wave_into(7, &obs, 10, 20, &mut next));
+        if alloc_track::enabled() {
+            assert_eq!(allocs, 0, "warm streaming scheduler wave allocated");
+        }
     }
 
     #[test]

@@ -127,9 +127,10 @@ COMMANDS
   ablation   eta/beta/C sweeps, greedy-vs-DP, buckets    --out results
   bench      perf recording (BENCH_<n>.json)             --quick --out <path>
                                                          --baseline <path> --iters <n>
+                                                         --soak --max-rss-mb <MiB>
 
 Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke, straggler,
-sharded, tree, churn, trace.
+sharded, tree, churn, trace, soak.
 
 Policies: goodspeed, fixed-s, random-s, turbo (SLO-aware closed-loop
 speculation control; pair with a trace, e.g. `run --preset trace --policy

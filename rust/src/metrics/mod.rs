@@ -2,6 +2,8 @@
 
 pub mod csv;
 pub mod recorder;
+pub mod sketch;
 pub mod svg;
 
 pub use recorder::{ClientRoundMetrics, MembershipEvent, Recorder, RoundRecord, RunSummary};
+pub use sketch::{RequestSketch, Reservoir};

@@ -1,8 +1,9 @@
 //! Per-round experiment records — everything Figs 2–4 and Table I need.
 
+use super::sketch::{RequestSketch, Reservoir};
 use crate::sched::utility::{system_utility, Utility};
 use crate::serve::tracker::{summarize_requests, RequestRecord, SloSummary};
-use crate::util::stats::jain_index;
+use crate::util::stats::{jain_index, p50_p95_p99};
 
 /// One client's slice of one wave (a sync round is a wave of everyone).
 #[derive(Clone, Debug, Default)]
@@ -108,6 +109,30 @@ pub struct Recorder {
     cum_nodes: Vec<u64>,
     /// Number of waves each client participated in (== rounds in sync).
     participation: Vec<u64>,
+    /// Streaming-aggregation mode: wave records are folded into the
+    /// cumulative counters and the wave-latency reservoir instead of
+    /// being retained, so a soak run's memory is O(clients) + O(sketch)
+    /// no matter how many waves it serves. Retained (default) mode keeps
+    /// `rounds` byte-identical to before this mode existed.
+    streaming: bool,
+    /// Streaming mode holds the newest wave for one step before folding
+    /// it, so the coordinator's post-fan-out patch points
+    /// ([`Recorder::note_send_ns`] / [`Recorder::note_verify_extra_ns`])
+    /// still land on it; retained mode patches `rounds.last_mut()`.
+    pending: Option<RoundRecord>,
+    /// Waves already folded (streaming mode; retained mode counts
+    /// `rounds.len()`).
+    s_waves: u64,
+    /// Folded wall-time decomposition sums (streaming mode).
+    s_recv_ns: u64,
+    s_verify_ns: u64,
+    s_send_ns: u64,
+    /// Reservoir over per-wave `total_ns` — the p50/p99 wave-latency
+    /// source once records are no longer retained.
+    wave_ns: Reservoir,
+    /// Streaming request aggregation (the bounded counterpart of
+    /// `requests`), installed by trackers running in streaming mode.
+    pub request_sketch: Option<RequestSketch>,
 }
 
 impl Recorder {
@@ -124,10 +149,50 @@ impl Recorder {
             cum_spec_depth: vec![0; n_clients],
             cum_nodes: vec![0; n_clients],
             participation: vec![0; n_clients],
+            streaming: false,
+            pending: None,
+            s_waves: 0,
+            s_recv_ns: 0,
+            s_verify_ns: 0,
+            s_send_ns: 0,
+            wave_ns: Reservoir::default(),
+            request_sketch: None,
         }
     }
 
-    pub fn push(&mut self, rec: RoundRecord) {
+    /// A streaming-aggregation recorder: O(clients) memory regardless of
+    /// run length. `rounds` stays empty — waves fold into the cumulative
+    /// counters and a wave-latency reservoir as they retire. Consumers
+    /// that iterate `rounds` (per-round CSVs, charts) see nothing; the
+    /// summary/report accessors are mode-agnostic.
+    pub fn new_streaming(n_clients: usize) -> Self {
+        let mut r = Recorder::new(n_clients);
+        r.streaming = true;
+        r
+    }
+
+    /// Whether this recorder folds waves instead of retaining them.
+    pub fn is_streaming(&self) -> bool {
+        self.streaming
+    }
+
+    /// Flip an existing recorder into streaming mode in place (the pool
+    /// path: the shard's `Leader` builds its recorder before the scenario's
+    /// metrics mode is consulted). Already-retained waves fold into the
+    /// streaming counters — their cumulative accounting happened at push
+    /// time, so only the wave-level sums and the latency reservoir move.
+    pub fn stream(&mut self) {
+        if self.streaming {
+            return;
+        }
+        self.streaming = true;
+        for rec in std::mem::take(&mut self.rounds) {
+            self.fold(&rec);
+        }
+    }
+
+    /// Cumulative per-client accounting, shared by both modes.
+    fn account(&mut self, rec: &RoundRecord) {
         for c in &rec.clients {
             let i = c.client_id;
             assert!(i < self.cum_goodput.len(), "client_id {i} out of range");
@@ -137,24 +202,126 @@ impl Recorder {
             self.cum_nodes[i] += c.s_used as u64;
             self.participation[i] += 1;
         }
-        self.rounds.push(rec);
+    }
+
+    /// Retire a held wave into the streaming counters.
+    fn fold(&mut self, rec: &RoundRecord) {
+        self.s_waves += 1;
+        self.s_recv_ns += rec.recv_ns;
+        self.s_verify_ns += rec.verify_ns;
+        self.s_send_ns += rec.send_ns;
+        self.wave_ns.push(rec.total_ns() as f64);
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        let _ = self.push_reuse(rec);
+    }
+
+    /// Record a wave. Retained mode keeps it (returns `None`); streaming
+    /// mode folds the *previous* wave into the counters and hands its
+    /// drained shell (`clients` cleared, capacity intact) back to the
+    /// caller for reuse — the allocation-free wave loop feeds each shell
+    /// back in, so warm waves allocate nothing in either mode.
+    pub fn push_reuse(&mut self, rec: RoundRecord) -> Option<RoundRecord> {
+        self.account(&rec);
+        if !self.streaming {
+            self.rounds.push(rec);
+            return None;
+        }
+        let mut shell = self.pending.take();
+        if let Some(prev) = shell.as_mut() {
+            self.fold(&*prev);
+            prev.clients.clear();
+        }
+        self.pending = Some(rec);
+        shell
+    }
+
+    /// Streaming mode: fold the held wave (no more patch points are
+    /// coming). Idempotent; retained mode is a no-op. Called at
+    /// end-of-run and before merging shard recorders.
+    pub fn flush(&mut self) {
+        if let Some(rec) = self.pending.take() {
+            self.fold(&rec);
+        }
+    }
+
+    /// Patch the send-phase time onto the most recently recorded wave —
+    /// the coordinator only knows it after the verdict fan-out.
+    pub fn note_send_ns(&mut self, send_ns: u64) {
+        if let Some(rec) = self.pending.as_mut() {
+            rec.send_ns = send_ns;
+        } else if let Some(rec) = self.rounds.last_mut() {
+            rec.send_ns = send_ns;
+        }
+    }
+
+    /// Add post-allocation scheduling time to the most recent wave's
+    /// verify phase (measured after the record was pushed).
+    pub fn note_verify_extra_ns(&mut self, extra_ns: u64) {
+        if let Some(rec) = self.pending.as_mut() {
+            rec.verify_ns += extra_ns;
+        } else if let Some(rec) = self.rounds.last_mut() {
+            rec.verify_ns += extra_ns;
+        }
+    }
+
+    /// Waves recorded so far: retained + folded + held.
+    pub fn waves(&self) -> u64 {
+        self.rounds.len() as u64 + self.s_waves + self.pending.is_some() as u64
+    }
+
+    /// (p50, p95, p99) of per-wave total latency, ns. Streaming mode
+    /// reads the reservoir (flush first for the final wave); retained
+    /// mode computes it exactly from the records.
+    pub fn wave_ns_percentiles(&self) -> (f64, f64, f64) {
+        if self.streaming {
+            self.wave_ns.triple()
+        } else {
+            let xs: Vec<f64> = self.rounds.iter().map(|r| r.total_ns() as f64).collect();
+            p50_p95_p99(&xs)
+        }
     }
 
     /// Fold another recorder (same client universe) into this one — used
-    /// to merge per-shard recorders into the pool-wide view. Waves are
-    /// re-pushed so the cumulative per-client accounting stays derived
-    /// from the records themselves.
-    pub fn absorb(&mut self, other: Recorder) {
+    /// to merge per-shard recorders into the pool-wide view. Cumulative
+    /// per-client accounting adds elementwise (each shard derived its own
+    /// from its records), retained waves concatenate, and streaming
+    /// counters/sketches merge — so retained and streaming shards can mix.
+    pub fn absorb(&mut self, mut other: Recorder) {
         assert_eq!(
             self.cum_goodput.len(),
             other.cum_goodput.len(),
             "recorders must share the client universe"
         );
-        // One reservation up front: shard merges fold thousands of waves,
-        // and `push` alone would regrow `rounds` along the way.
+        self.flush();
+        other.flush();
         self.rounds.reserve(other.rounds.len());
-        for rec in other.rounds {
-            self.push(rec);
+        self.rounds.extend(other.rounds);
+        for (a, b) in self.cum_goodput.iter_mut().zip(&other.cum_goodput) {
+            *a += b;
+        }
+        for (a, b) in self.cum_accepted.iter_mut().zip(&other.cum_accepted) {
+            *a += b;
+        }
+        for (a, b) in self.cum_spec_depth.iter_mut().zip(&other.cum_spec_depth) {
+            *a += b;
+        }
+        for (a, b) in self.cum_nodes.iter_mut().zip(&other.cum_nodes) {
+            *a += b;
+        }
+        for (a, b) in self.participation.iter_mut().zip(&other.participation) {
+            *a += b;
+        }
+        self.s_waves += other.s_waves;
+        self.s_recv_ns += other.s_recv_ns;
+        self.s_verify_ns += other.s_verify_ns;
+        self.s_send_ns += other.s_send_ns;
+        self.wave_ns.merge(&other.wave_ns);
+        match (&mut self.request_sketch, other.request_sketch) {
+            (Some(a), Some(b)) => a.merge(&b),
+            (slot @ None, Some(b)) => *slot = Some(b),
+            _ => {}
         }
         self.membership.extend(other.membership);
         self.request_latency_rounds.extend(other.request_latency_rounds);
@@ -262,13 +429,18 @@ impl Recorder {
     /// Whether this run carried a request trace (request-level series
     /// present).
     pub fn has_requests(&self) -> bool {
-        !self.requests.is_empty() || !self.slo_goodput.is_empty()
+        !self.requests.is_empty() || !self.slo_goodput.is_empty() || self.request_sketch.is_some()
     }
 
     /// Trace-driven runs: the p50/p95/p99 TTFT/TPOT/E2E + attainment
     /// report row over the run's request records. `None` on request-free
-    /// runs.
+    /// runs. Streaming runs answer from the request sketch (no retained
+    /// records); if both exist (mixed-mode shard merge), the retained
+    /// records win only when the sketch is absent.
     pub fn slo_summary(&self) -> Option<SloSummary> {
+        if let Some(sk) = &self.request_sketch {
+            return Some(sk.summary(self.requests_censored));
+        }
         self.has_requests().then(|| summarize_requests(&self.requests, self.requests_censored))
     }
 
@@ -284,7 +456,6 @@ impl Recorder {
     }
 
     pub fn summary(&self, wall_secs: f64) -> RunSummary {
-        let t = self.rounds.len();
         let avg = self.avg_goodput();
         let total_tokens: f64 = self.cum_goodput.iter().sum();
         let mean_latency = if self.request_latency_rounds.is_empty() {
@@ -293,15 +464,18 @@ impl Recorder {
             self.request_latency_rounds.iter().sum::<u64>() as f64
                 / self.request_latency_rounds.len() as f64
         };
-        let (mut recv, mut verify, mut send) = (0u64, 0u64, 0u64);
-        for r in &self.rounds {
+        // Phase sums start from the streaming-folded counters (0 in
+        // retained mode), then add retained and still-held waves.
+        let (mut recv, mut verify, mut send) =
+            (self.s_recv_ns, self.s_verify_ns, self.s_send_ns);
+        for r in self.rounds.iter().chain(self.pending.as_ref()) {
             recv += r.recv_ns;
             verify += r.verify_ns;
             send += r.send_ns;
         }
         let jain = jain_index(&avg);
         RunSummary {
-            rounds: t as u64,
+            rounds: self.waves(),
             per_client_goodput: avg,
             total_tokens,
             tokens_per_sec: if wall_secs > 0.0 { total_tokens / wall_secs } else { 0.0 },
@@ -554,6 +728,103 @@ mod tests {
         a.push(wave(&[(0, 4), (1, 2)]));
         a.push(wave(&[(0, 4)]));
         assert_eq!(a.avg_slo_goodput(), vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn streaming_mode_matches_retained_aggregates() {
+        // Drive twin recorders through the same waves (with the post-push
+        // patch points, like the coordinator does) and compare every
+        // mode-agnostic report quantity.
+        let mut ret = Recorder::new(2);
+        let mut st = Recorder::new_streaming(2);
+        for w in 0..6u64 {
+            let mut rec = round(&[2 + (w % 3) as usize, 4]);
+            rec.round = w;
+            ret.push(rec.clone());
+            st.push(rec);
+            ret.note_verify_extra_ns(5);
+            st.note_verify_extra_ns(5);
+            ret.note_send_ns(40 + w);
+            st.note_send_ns(40 + w);
+        }
+        st.flush();
+        assert!(st.is_streaming() && st.rounds.is_empty(), "streaming retains nothing");
+        assert_eq!(ret.rounds.len(), 6);
+        assert_eq!(st.waves(), 6);
+        assert_eq!(st.avg_goodput(), ret.avg_goodput());
+        assert_eq!(st.participation(), ret.participation());
+        let (a, b) = (ret.summary(2.0), st.summary(2.0));
+        assert_eq!(a.rounds, b.rounds);
+        assert!((a.total_tokens - b.total_tokens).abs() < 1e-12);
+        assert!((a.recv_secs - b.recv_secs).abs() < 1e-15);
+        assert!((a.verify_secs - b.verify_secs).abs() < 1e-15);
+        assert!((a.send_secs - b.send_secs).abs() < 1e-15);
+        assert!((a.jain - b.jain).abs() < 1e-12);
+        // Wave-latency percentiles: exact in both modes below reservoir
+        // capacity.
+        assert_eq!(ret.wave_ns_percentiles(), st.wave_ns_percentiles());
+    }
+
+    #[test]
+    fn streaming_push_reuse_hands_back_drained_shells() {
+        let mut st = Recorder::new_streaming(2);
+        // Retained mode never returns a shell.
+        let mut ret = Recorder::new(2);
+        assert!(ret.push_reuse(round(&[1, 1])).is_none());
+        // Streaming: first push holds the wave (no shell yet); the second
+        // returns the first wave's drained shell with capacity intact.
+        assert!(st.push_reuse(round(&[2, 4])).is_none());
+        assert_eq!(st.waves(), 1, "held wave counts");
+        let shell = st.push_reuse(round(&[3, 3])).expect("previous shell");
+        assert!(shell.clients.is_empty());
+        assert!(shell.clients.capacity() >= 2, "shell keeps its allocation");
+        st.flush();
+        st.flush(); // idempotent
+        assert_eq!(st.waves(), 2);
+        assert_eq!(st.avg_goodput(), vec![2.5, 3.5]);
+    }
+
+    #[test]
+    fn absorb_merges_streaming_shards() {
+        // Two streaming shard recorders over disjoint client slices merge
+        // into the same aggregates a retained merge would produce.
+        let mut a = Recorder::new_streaming(3);
+        a.push(wave(&[(0, 4), (1, 2)]));
+        a.note_send_ns(7);
+        let mut b = Recorder::new_streaming(3);
+        b.push(wave(&[(2, 5)]));
+        b.push(wave(&[(2, 3)]));
+        a.absorb(b);
+        assert_eq!(a.waves(), 3);
+        assert!(a.rounds.is_empty());
+        assert_eq!(a.participation(), &[1, 1, 2]);
+        assert_eq!(a.cum_goodput(), &[4.0, 2.0, 8.0]);
+        // The pre-absorb note_send_ns patch landed on the held wave.
+        let s = a.summary(1.0);
+        assert_eq!(s.rounds, 3);
+        assert!((s.send_secs - (7.0 + 1.0 + 1.0) * 1e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn streaming_request_sketch_feeds_the_slo_summary() {
+        let mut r = Recorder::new_streaming(1);
+        let mut sk = crate::metrics::sketch::RequestSketch::new();
+        sk.push(&RequestRecord {
+            client: 0,
+            arrival: 0,
+            first_token: Some(1),
+            completion: 3,
+            tokens: 8,
+            slo_waves: 10,
+            completed: true,
+            met: true,
+        });
+        r.request_sketch = Some(sk);
+        r.requests_censored = 2;
+        assert!(r.has_requests());
+        let s = r.slo_summary().expect("sketch-backed summary");
+        assert_eq!((s.completed, s.expired, s.censored), (1, 0, 2));
+        assert!((s.slo_goodput_total - 8.0).abs() < 1e-12);
     }
 
     #[test]

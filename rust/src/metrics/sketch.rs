@@ -1,0 +1,367 @@
+//! Bounded-memory streaming sketches for soak-scale runs.
+//!
+//! The retained recorder keeps every [`RoundRecord`] and
+//! [`RequestRecord`](crate::serve::tracker::RequestRecord) — O(waves) and
+//! O(requests) memory, which is exactly what a 10k-session soak cannot
+//! afford. This module holds the bounded replacements: a deterministic
+//! [`Reservoir`] sample (Algorithm R over a seeded [`Rng`]) for percentile
+//! estimates, and a [`RequestSketch`] that folds request lifecycles into
+//! counters plus TTFT/TPOT/E2E reservoirs so the SLO report row survives
+//! without the record vector. Both are O(1) per observation and O(cap)
+//! resident.
+//!
+//! [`RoundRecord`]: crate::metrics::recorder::RoundRecord
+
+use crate::serve::tracker::{RequestRecord, SloSummary};
+use crate::util::stats::p50_p95_p99;
+use crate::util::Rng;
+
+/// Default reservoir capacity. 4096 doubles give percentile estimates
+/// with worst-case p99 standard error well under 1% at soak scale while
+/// keeping each sketch at 32 KiB.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Uniform reservoir sample (Vitter's Algorithm R) with a deterministic
+/// seeded stream: two runs over the same observation sequence produce the
+/// same sample, so sketched percentiles are reproducible run to run.
+///
+/// While fewer than `cap` values have been seen the sample is the exact
+/// population ([`Reservoir::is_exact`]); beyond that, percentiles are
+/// unbiased estimates. [`Reservoir::merge`] is the standard approximate
+/// proportional subsample (draws with replacement weighted by each side's
+/// population size) — good enough for report rows, documentedly not an
+/// exact distributed reservoir.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    sum: f64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir::new(RESERVOIR_CAP)
+    }
+}
+
+impl Reservoir {
+    /// An empty reservoir holding at most `cap` samples. The replacement
+    /// stream is seeded by a fixed constant: determinism over entropy.
+    pub fn new(cap: usize) -> Reservoir {
+        assert!(cap > 0, "reservoir needs room for at least one sample");
+        Reservoir { cap, seen: 0, sum: 0.0, samples: Vec::new(), rng: Rng::new(0x5EE7_C0DE) }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        self.sum += x;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: the i-th value replaces a resident sample with
+            // probability cap/i, keeping the sample uniform.
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// Values observed (not retained — retained is `min(seen, cap)`).
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+
+    /// Whether the sample still *is* the population (no eviction yet).
+    pub fn is_exact(&self) -> bool {
+        self.seen <= self.cap as u64
+    }
+
+    /// Exact running mean (the sum is tracked outside the sample).
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.sum / self.seen as f64
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Percentile estimate, `p ∈ [0, 100]` (exact while
+    /// [`Reservoir::is_exact`] holds). Empty reservoir yields 0.
+    pub fn percentile(&self, p: f64) -> f64 {
+        crate::util::stats::percentile(&self.samples, p)
+    }
+
+    /// The standard report triple (p50, p95, p99).
+    pub fn triple(&self) -> (f64, f64, f64) {
+        p50_p95_p99(&self.samples)
+    }
+
+    /// Fold another reservoir in. If the union still fits, the merge is
+    /// exact; otherwise both samples are subsampled proportionally to
+    /// their population sizes (with replacement — approximate, bounded).
+    pub fn merge(&mut self, other: &Reservoir) {
+        if other.seen == 0 {
+            return;
+        }
+        let total = self.seen + other.seen;
+        self.sum += other.sum;
+        if self.is_exact() && self.samples.len() + other.samples.len() <= self.cap {
+            self.samples.extend_from_slice(&other.samples);
+            self.seen = total;
+            return;
+        }
+        let k_self = ((self.cap as u128 * self.seen as u128 / total as u128) as usize)
+            .min(self.samples.len());
+        let k_other = (self.cap - k_self).min(other.samples.len());
+        let mut merged = Vec::with_capacity(k_self + k_other);
+        for _ in 0..k_self {
+            merged.push(self.samples[self.rng.below(self.samples.len() as u64) as usize]);
+        }
+        for _ in 0..k_other {
+            merged.push(other.samples[self.rng.below(other.samples.len() as u64) as usize]);
+        }
+        self.samples = merged;
+        self.seen = total;
+    }
+}
+
+/// Streaming aggregation of request lifecycles: the counters and
+/// percentile reservoirs needed to reproduce the [`SloSummary`] report
+/// row without retaining a [`RequestRecord`] per request. Fed by the
+/// request tracker in streaming mode; merged across shards like the
+/// recorder's other per-shard state.
+#[derive(Clone, Debug)]
+pub struct RequestSketch {
+    /// Requests that produced their full target output.
+    pub completed: u64,
+    /// Requests whose deadline passed before they finished.
+    pub expired: u64,
+    /// Requests that met their deadline.
+    pub met: u64,
+    /// Σ tokens of deadline-met requests.
+    pub slo_goodput_total: f64,
+    ttft: Reservoir,
+    tpot: Reservoir,
+    e2e: Reservoir,
+}
+
+impl Default for RequestSketch {
+    fn default() -> Self {
+        RequestSketch::new()
+    }
+}
+
+impl RequestSketch {
+    pub fn new() -> RequestSketch {
+        RequestSketch {
+            completed: 0,
+            expired: 0,
+            met: 0,
+            slo_goodput_total: 0.0,
+            ttft: Reservoir::default(),
+            tpot: Reservoir::default(),
+            e2e: Reservoir::default(),
+        }
+    }
+
+    /// Fold one finished/expired request in. Mirrors
+    /// [`summarize_requests`](crate::serve::tracker::summarize_requests):
+    /// percentiles over completed requests only, attainment over
+    /// completed + expired.
+    pub fn push(&mut self, r: &RequestRecord) {
+        if r.met {
+            self.met += 1;
+            self.slo_goodput_total += r.tokens as f64;
+        }
+        if r.completed {
+            self.completed += 1;
+            self.ttft.push(r.ttft_waves());
+            self.tpot.push(r.tpot_waves());
+            self.e2e.push(r.e2e_waves());
+        } else {
+            self.expired += 1;
+        }
+    }
+
+    /// The report row. `censored` is carried by the recorder (it is a
+    /// run-level count, not a per-request observation).
+    pub fn summary(&self, censored: u64) -> SloSummary {
+        let attributable = self.completed + self.expired;
+        SloSummary {
+            completed: self.completed,
+            expired: self.expired,
+            censored,
+            attainment: if attributable == 0 {
+                1.0
+            } else {
+                self.met as f64 / attributable as f64
+            },
+            ttft: self.ttft.triple(),
+            tpot: self.tpot.triple(),
+            e2e: self.e2e.triple(),
+            slo_goodput_total: self.slo_goodput_total,
+        }
+    }
+
+    /// Fold a shard's sketch into this one (pool merge path).
+    pub fn merge(&mut self, other: &RequestSketch) {
+        self.completed += other.completed;
+        self.expired += other.expired;
+        self.met += other.met;
+        self.slo_goodput_total += other.slo_goodput_total;
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.e2e.merge(&other.e2e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_is_exact_below_capacity() {
+        let mut r = Reservoir::new(8);
+        for x in [5.0, 1.0, 9.0, 3.0] {
+            r.push(x);
+        }
+        assert!(r.is_exact());
+        assert_eq!(r.count(), 4);
+        assert!((r.mean() - 4.5).abs() < 1e-12);
+        assert!((r.percentile(50.0) - 4.0).abs() < 1e-12);
+        let (p50, _, p99) = r.triple();
+        assert!((p50 - 4.0).abs() < 1e-12);
+        assert!((p99 - crate::util::stats::percentile(&[5.0, 1.0, 9.0, 3.0], 99.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_percentiles_track_the_population_past_capacity() {
+        // 20k uniform draws through a 1k reservoir: the p50 estimate must
+        // land near the true median. Deterministic seed ⇒ no flake.
+        let mut r = Reservoir::new(1024);
+        let mut src = Rng::new(42);
+        for _ in 0..20_000 {
+            r.push(src.below(1000) as f64);
+        }
+        assert!(!r.is_exact());
+        assert_eq!(r.count(), 20_000);
+        let p50 = r.percentile(50.0);
+        assert!((p50 - 500.0).abs() < 60.0, "p50 estimate {p50} too far from 500");
+        // The mean is exact regardless of sampling.
+        assert!((r.mean() - 499.5).abs() < 5.0);
+    }
+
+    #[test]
+    fn reservoir_push_is_deterministic() {
+        let feed = |n: u64| {
+            let mut r = Reservoir::new(16);
+            let mut src = Rng::new(7);
+            for _ in 0..n {
+                r.push(src.below(100) as f64);
+            }
+            r.triple()
+        };
+        assert_eq!(feed(5000), feed(5000));
+    }
+
+    #[test]
+    fn reservoir_merge_exact_when_union_fits() {
+        let mut a = Reservoir::new(16);
+        let mut b = Reservoir::new(16);
+        for x in [1.0, 2.0, 3.0] {
+            a.push(x);
+        }
+        for x in [4.0, 5.0] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert!(a.is_exact());
+        assert!((a.mean() - 3.0).abs() < 1e-12);
+        assert!((a.percentile(100.0) - 5.0).abs() < 1e-12);
+        // Merging an empty reservoir is a no-op.
+        a.merge(&Reservoir::new(16));
+        assert_eq!(a.count(), 5);
+    }
+
+    #[test]
+    fn reservoir_merge_subsamples_proportionally() {
+        // A sees 10k values near 100, B sees 10k near 900: the merged
+        // median must land between the clusters, and counts must add.
+        let mut a = Reservoir::new(256);
+        let mut b = Reservoir::new(256);
+        let mut src = Rng::new(3);
+        for _ in 0..10_000 {
+            a.push(90.0 + src.below(20) as f64);
+            b.push(890.0 + src.below(20) as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 20_000);
+        let p50 = a.percentile(50.0);
+        assert!(p50 > 95.0 && p50 < 905.0, "merged p50 {p50} outside the clusters");
+        // Both clusters survive the subsample.
+        assert!(a.percentile(5.0) < 120.0);
+        assert!(a.percentile(95.0) > 880.0);
+    }
+
+    fn req(completed: bool, met: bool, tokens: usize) -> RequestRecord {
+        RequestRecord {
+            client: 0,
+            arrival: 0,
+            first_token: completed.then_some(1),
+            completion: 4,
+            tokens,
+            slo_waves: 10,
+            completed,
+            met,
+        }
+    }
+
+    #[test]
+    fn request_sketch_matches_summarize_requests() {
+        let records =
+            vec![req(true, true, 8), req(true, false, 8), req(false, false, 2), req(true, true, 4)];
+        let mut sk = RequestSketch::new();
+        for r in &records {
+            sk.push(r);
+        }
+        let want = crate::serve::tracker::summarize_requests(&records, 3);
+        let got = sk.summary(3);
+        assert_eq!((got.completed, got.expired, got.censored), (3, 1, 3));
+        assert!((got.attainment - want.attainment).abs() < 1e-12);
+        assert!((got.slo_goodput_total - want.slo_goodput_total).abs() < 1e-12);
+        // Exact below reservoir capacity ⇒ identical percentiles.
+        assert_eq!(got.ttft, want.ttft);
+        assert_eq!(got.tpot, want.tpot);
+        assert_eq!(got.e2e, want.e2e);
+    }
+
+    #[test]
+    fn request_sketch_merge_adds_counts() {
+        let mut a = RequestSketch::new();
+        a.push(&req(true, true, 8));
+        let mut b = RequestSketch::new();
+        b.push(&req(false, false, 1));
+        b.push(&req(true, true, 2));
+        a.merge(&b);
+        let s = a.summary(0);
+        assert_eq!((s.completed, s.expired), (2, 1));
+        assert!((s.slo_goodput_total - 10.0).abs() < 1e-12);
+        assert!((s.attainment - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_sketch_summary_is_well_defined() {
+        let s = RequestSketch::new().summary(0);
+        assert_eq!((s.completed, s.expired, s.censored), (0, 0, 0));
+        assert!((s.attainment - 1.0).abs() < 1e-12, "nothing attributable ⇒ vacuous 1.0");
+        assert_eq!(s.ttft, (0.0, 0.0, 0.0));
+    }
+}

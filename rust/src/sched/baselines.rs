@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use super::estimator::Estimators;
-use super::gradient::{solve_greedy, AllocInput};
+use super::gradient::{solve_greedy_into, AllocInput, GreedyScratch};
 use super::utility::Utility;
 use crate::configsys::Policy;
 use crate::util::Rng;
@@ -35,40 +35,63 @@ impl AllocCaps {
 /// A per-round draft-length allocator. Implementations must be
 /// deterministic given their own state (Random-S carries its PRNG).
 pub trait Allocator: Send {
-    fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize>;
+    fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.allocate_into(est, caps, &mut out);
+        out
+    }
+
+    /// Allocation-free form: the output vector is caller-owned and reused
+    /// across waves (cleared and refilled every call). The hot wave loop
+    /// (`RoundCore::finish_wave`) calls this; the result must be
+    /// bit-identical to [`Allocator::allocate`].
+    fn allocate_into(&mut self, est: &Estimators, caps: &AllocCaps, out: &mut Vec<usize>);
+
     fn name(&self) -> &'static str;
 }
 
 /// The paper's gradient scheduling algorithm (Algorithm 1, line 15).
+/// Carries its solver scratch (gradient weights, live-masked caps, and the
+/// greedy heap) so warm-wave allocations stay at zero.
 pub struct GoodSpeedAlloc {
     pub utility: Arc<dyn Utility>,
+    weights: Vec<f64>,
+    capped: Vec<usize>,
+    scratch: GreedyScratch,
 }
 
 impl GoodSpeedAlloc {
     pub fn log() -> Self {
-        GoodSpeedAlloc { utility: Arc::new(super::utility::LogUtility) }
+        GoodSpeedAlloc {
+            utility: Arc::new(super::utility::LogUtility),
+            weights: Vec::new(),
+            capped: Vec::new(),
+            scratch: GreedyScratch::default(),
+        }
     }
 }
 
 impl Allocator for GoodSpeedAlloc {
-    fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
-        let weights: Vec<f64> = est.x_beta.iter().map(|&x| self.utility.grad(x)).collect();
+    fn allocate_into(&mut self, est: &Estimators, caps: &AllocCaps, out: &mut Vec<usize>) {
+        self.weights.clear();
+        self.weights.extend(est.x_beta.iter().map(|&x| self.utility.grad(x)));
         // Enforce the live mask here (not only at call sites): absent
         // clients must never receive budget — their in-flight grant is
         // already reserved by the coordinator.
-        let capped: Vec<usize> = caps
-            .max_per_client
-            .iter()
-            .zip(&caps.live)
-            .map(|(&m, &live)| if live { m } else { 0 })
-            .collect();
+        self.capped.clear();
+        self.capped.extend(
+            caps.max_per_client
+                .iter()
+                .zip(&caps.live)
+                .map(|(&m, &live)| if live { m } else { 0 }),
+        );
         let input = AllocInput {
-            weights: &weights,
+            weights: &self.weights,
             alphas: &est.alpha_hat,
             capacity: caps.capacity,
-            max_per_client: &capped,
+            max_per_client: &self.capped,
         };
-        solve_greedy(&input)
+        solve_greedy_into(&input, &mut self.scratch, out);
     }
 
     fn name(&self) -> &'static str {
@@ -80,13 +103,15 @@ impl Allocator for GoodSpeedAlloc {
 pub struct FixedSAlloc;
 
 impl Allocator for FixedSAlloc {
-    fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
+    fn allocate_into(&mut self, est: &Estimators, caps: &AllocCaps, out: &mut Vec<usize>) {
         // Uniform split over the *live* clients (== C / N in sync mode).
         let live_n = caps.live.iter().filter(|&&l| l).count().max(1);
         let share = caps.capacity / live_n;
-        (0..est.len())
-            .map(|i| if caps.live[i] { share.min(caps.max_per_client[i]) } else { 0 })
-            .collect()
+        out.clear();
+        out.extend(
+            (0..est.len())
+                .map(|i| if caps.live[i] { share.min(caps.max_per_client[i]) } else { 0 }),
+        );
     }
 
     fn name(&self) -> &'static str {
@@ -98,36 +123,38 @@ impl Allocator for FixedSAlloc {
 /// remaining room, so Σ S_i ≤ C always holds (paper's constraint).
 pub struct RandomSAlloc {
     pub rng: Rng,
+    live_idx: Vec<usize>,
 }
 
 impl RandomSAlloc {
     pub fn new(seed: u64) -> Self {
-        RandomSAlloc { rng: Rng::new(seed) }
+        RandomSAlloc { rng: Rng::new(seed), live_idx: Vec::new() }
     }
 }
 
 impl Allocator for RandomSAlloc {
-    fn allocate(&mut self, est: &Estimators, caps: &AllocCaps) -> Vec<usize> {
+    fn allocate_into(&mut self, est: &Estimators, caps: &AllocCaps, out: &mut Vec<usize>) {
         let n = est.len();
-        let mut alloc = vec![0usize; n];
+        out.clear();
+        out.resize(n, 0);
         // Darts land only on live clients (identical RNG stream to the
         // pre-wave allocator in sync mode, where everyone is live).
-        let live_idx: Vec<usize> = (0..n).filter(|&i| caps.live[i]).collect();
-        if live_idx.is_empty() {
-            return alloc;
+        self.live_idx.clear();
+        self.live_idx.extend((0..n).filter(|&i| caps.live[i]));
+        if self.live_idx.is_empty() {
+            return;
         }
         for _ in 0..caps.capacity {
             // Rejection-sample a client with room (bounded retries keep the
             // loop O(C) in expectation even when most clients are full).
             for _ in 0..8 {
-                let i = live_idx[self.rng.below(live_idx.len() as u64) as usize];
-                if alloc[i] < caps.max_per_client[i] {
-                    alloc[i] += 1;
+                let i = self.live_idx[self.rng.below(self.live_idx.len() as u64) as usize];
+                if out[i] < caps.max_per_client[i] {
+                    out[i] += 1;
                     break;
                 }
             }
         }
-        alloc
     }
 
     fn name(&self) -> &'static str {
@@ -228,6 +255,29 @@ mod tests {
         let mut gs = GoodSpeedAlloc::log();
         let alloc = gs.allocate(&e, &caps(2, 10));
         assert!(alloc[0] > alloc[1], "starved client must get more: {alloc:?}");
+    }
+
+    #[test]
+    fn allocate_into_matches_allocate_with_reused_buffer() {
+        // The into-form reuses one output vector across waves; it must
+        // stay bit-identical to the allocating form for every policy
+        // (Random-S needs twin PRNGs so both sides see the same stream).
+        let e = est(4);
+        let cap = caps(4, 14);
+        let mut out = vec![99usize; 32]; // stale garbage must be cleared
+        let mut a = GoodSpeedAlloc::log();
+        let mut b = GoodSpeedAlloc::log();
+        a.allocate_into(&e, &cap, &mut out);
+        assert_eq!(out, b.allocate(&e, &cap));
+        let mut a = FixedSAlloc;
+        a.allocate_into(&e, &cap, &mut out);
+        assert_eq!(out, FixedSAlloc.allocate(&e, &cap));
+        let mut a = RandomSAlloc::new(5);
+        let mut b = RandomSAlloc::new(5);
+        for _ in 0..10 {
+            a.allocate_into(&e, &cap, &mut out);
+            assert_eq!(out, b.allocate(&e, &cap));
+        }
     }
 
     #[test]

@@ -21,6 +21,20 @@
 //!   TTFT / TPOT / E2E and SLO attainment, reduced to p50/p95/p99 by
 //!   [`SloSummary`].
 //!
+//! Traces pair with any shard count (`--verifiers <m>` — the historic
+//! M = 1 restriction is gone): each shard builds the full trace and
+//! restricts its tracker to its own members
+//! ([`RequestTracker::retain_members`]), so every request is owned by
+//! exactly one shard; migrations hand the in-flight request state across
+//! shards ([`RequestTracker::export_client`] /
+//! [`RequestTracker::import_client`], re-based onto the destination
+//! shard's wave clock) and the recorder merge
+//! ([`Recorder::absorb`](crate::metrics::Recorder::absorb)) folds the
+//! per-shard books into one run-level report. For soak-length runs,
+//! [`RequestTracker::stream`] swaps record retention for a bounded
+//! [`RequestSketch`](crate::metrics::RequestSketch) so memory stays
+//! O(clients).
+//!
 //! **SLO-goodput** — accepted tokens belonging to requests that met their
 //! deadline — is the series the closed-loop speculation controller
 //! ([`sched::controller`](crate::sched::controller), `policy=turbo`)
@@ -32,4 +46,7 @@ pub mod trace;
 pub mod tracker;
 
 pub use trace::{RequestTrace, TraceRequest};
-pub use tracker::{summarize_requests, RequestRecord, RequestTracker, SloSummary};
+pub use tracker::{
+    summarize_requests, ActiveExport, ClientRequestState, QueuedExport, RequestRecord,
+    RequestTracker, SloSummary,
+};

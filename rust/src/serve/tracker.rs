@@ -27,6 +27,7 @@
 use std::collections::VecDeque;
 
 use crate::coordinator::RoundCore;
+use crate::metrics::sketch::RequestSketch;
 use crate::spec::expected_goodput;
 use crate::util::stats::p50_p95_p99;
 
@@ -124,6 +125,53 @@ impl Active {
     }
 }
 
+/// A suspended in-service request, expressed in slot-relative *ages* so
+/// it can be re-based onto another shard's wave clock (shard clocks tick
+/// independently; absolute wave numbers do not transfer).
+#[derive(Clone, Debug)]
+pub struct ActiveExport {
+    /// Waves since the request arrived.
+    pub age: u64,
+    /// Deadline, waves from arrival.
+    pub slo_waves: u64,
+    /// Target output tokens.
+    pub target: usize,
+    /// Tokens already produced.
+    pub done: usize,
+    /// Waves since the first token, when one was produced.
+    pub first_token_age: Option<u64>,
+}
+
+/// A queued request in handoff form: `arrival_in` waves from "now"
+/// (0 ⇒ already arrived and waiting).
+#[derive(Clone, Debug)]
+pub struct QueuedExport {
+    pub arrival_in: u64,
+    pub output_tokens: usize,
+    pub slo_waves: u64,
+}
+
+/// One client's portable request state, produced by
+/// [`RequestTracker::export_client`] when a session migrates between
+/// shards and consumed by [`RequestTracker::import_client`] on arrival.
+/// Unlike [`RequestTracker::untrack`], an export censors nothing — the
+/// requests stay live, they just change wave clocks.
+#[derive(Clone, Debug, Default)]
+pub struct ClientRequestState {
+    pub active: Option<ActiveExport>,
+    pub queue: Vec<QueuedExport>,
+}
+
+impl ClientRequestState {
+    /// Work items an *unclaimed* handoff abandons at run end: the
+    /// in-flight request plus already-arrived backlog — the same set
+    /// [`RequestTracker::untrack`] censors.
+    pub fn censorable(&self) -> u64 {
+        self.active.is_some() as u64
+            + self.queue.iter().filter(|q| q.arrival_in == 0).count() as u64
+    }
+}
+
 /// Slot-indexed request bookkeeping for one run.
 pub struct RequestTracker {
     queues: Vec<VecDeque<TraceRequest>>,
@@ -132,8 +180,16 @@ pub struct RequestTracker {
     /// a file trace's lists) keep the classic closed-loop behavior: never
     /// idled, never attributed.
     tracked: Vec<bool>,
+    /// Ascending index of tracked slots — the wave-boundary promotion
+    /// loop walks this instead of scanning every slot, so per-wave cost
+    /// is O(tracked members), not O(slots). Ascending order keeps record
+    /// emission order (and thus CSV bytes) identical to the full scan.
+    tracked_ids: Vec<usize>,
     busy: Vec<bool>,
     records: Vec<RequestRecord>,
+    /// Streaming mode: finished requests fold into this bounded sketch
+    /// instead of accruing `records`. `None` ⇒ retained mode (default).
+    sketch: Option<RequestSketch>,
     /// Per-slot Σ tokens of deadline-met requests.
     slo_tokens: Vec<f64>,
     censored: u64,
@@ -151,11 +207,112 @@ impl RequestTracker {
             queues,
             active: (0..slots).map(|_| None).collect(),
             tracked: (0..slots).map(|i| i < covered).collect(),
+            tracked_ids: (0..covered).collect(),
             busy: vec![true; slots],
             records: Vec::new(),
+            sketch: None,
             slo_tokens: vec![0.0; slots],
             censored: 0,
         }
+    }
+
+    /// Switch to streaming aggregation: finished requests fold into a
+    /// bounded [`RequestSketch`] (any already-retained records are folded
+    /// in first) so soak-length runs hold O(clients) tracker memory.
+    /// Retained mode keeps every [`RequestRecord`] and stays the default
+    /// — its CSV output is byte-identical to prior releases.
+    pub fn stream(&mut self) {
+        let mut sk = self.sketch.take().unwrap_or_default();
+        for r in &self.records {
+            sk.push(r);
+        }
+        self.records.clear();
+        self.sketch = Some(sk);
+    }
+
+    /// Restrict tracking to `members` (ascending slot ids): slots the
+    /// tracker covers but this shard does not serve revert to untracked
+    /// — *without* censoring, because their requests belong to another
+    /// shard's tracker partition, not to an ended session. Each shard of
+    /// a sharded run builds the full trace and then retains only its own
+    /// members, so every request is owned by exactly one shard.
+    pub fn retain_members(&mut self, members: &[usize]) {
+        let old = std::mem::take(&mut self.tracked_ids);
+        for id in old {
+            if members.binary_search(&id).is_ok() {
+                self.tracked_ids.push(id);
+            } else {
+                self.tracked[id] = false;
+                self.busy[id] = true;
+                self.active[id] = None;
+                self.queues[id].clear();
+            }
+        }
+    }
+
+    /// Suspend a migrating client's request state for transfer to
+    /// another shard's tracker. Ages are relative to `now` (this shard's
+    /// current wave) so [`RequestTracker::import_client`] can re-base
+    /// them onto the destination clock. Returns `None` for untracked
+    /// slots. Nothing is censored — the requests stay live in the
+    /// returned state.
+    pub fn export_client(&mut self, client: usize, now: u64) -> Option<ClientRequestState> {
+        if !self.tracked[client] {
+            return None;
+        }
+        self.tracked[client] = false;
+        self.busy[client] = true;
+        if let Ok(pos) = self.tracked_ids.binary_search(&client) {
+            self.tracked_ids.remove(pos);
+        }
+        let active = self.active[client].take().map(|a| ActiveExport {
+            age: now.saturating_sub(a.arrival),
+            slo_waves: a.slo_waves,
+            target: a.target,
+            done: a.done,
+            first_token_age: a.first_token.map(|w| now.saturating_sub(w)),
+        });
+        let queue = self.queues[client]
+            .drain(..)
+            .map(|r| QueuedExport {
+                arrival_in: r.arrival.saturating_sub(now),
+                output_tokens: r.output_tokens,
+                slo_waves: r.slo_waves,
+            })
+            .collect();
+        Some(ClientRequestState { active, queue })
+    }
+
+    /// Adopt a migrated client's request state, re-basing its ages onto
+    /// this tracker's clock (`now`). Arrival waves older than `now` clamp
+    /// to 0 — a young destination clock cannot represent a request older
+    /// than itself, which only ever *loosens* an already-blown deadline.
+    pub fn import_client(&mut self, client: usize, state: ClientRequestState, now: u64) {
+        self.tracked[client] = true;
+        self.busy[client] = true; // refreshed at the next begin_wave
+        if let Err(pos) = self.tracked_ids.binary_search(&client) {
+            self.tracked_ids.insert(pos, client);
+        }
+        self.active[client] = state.active.map(|a| {
+            let arrival = now.saturating_sub(a.age);
+            Active {
+                arrival,
+                slo_waves: a.slo_waves,
+                deadline: arrival + a.slo_waves,
+                target: a.target.max(1),
+                done: a.done,
+                first_token: a.first_token_age.map(|ft| now.saturating_sub(ft)),
+            }
+        });
+        self.queues[client] = state
+            .queue
+            .into_iter()
+            .map(|q| TraceRequest {
+                arrival: now + q.arrival_in,
+                output_tokens: q.output_tokens,
+                slo_waves: q.slo_waves,
+            })
+            .collect();
     }
 
     /// Whether the slot has an active (or untracked ⇒ perpetual) request
@@ -165,13 +322,18 @@ impl RequestTracker {
     }
 
     /// Promote due arrivals and refresh the busy mask for wave `wave`.
+    /// Walks only tracked slots (untracked slots are pinned busy by
+    /// construction, [`RequestTracker::untrack`], and
+    /// [`RequestTracker::retain_members`]), so the per-wave cost is
+    /// O(tracked members) regardless of the slot-universe size.
     pub fn begin_wave(&mut self, wave: u64) {
-        for i in 0..self.queues.len() {
-            if self.tracked[i] && self.active[i].is_none() && self.head_due(i, wave) {
+        for idx in 0..self.tracked_ids.len() {
+            let i = self.tracked_ids[idx];
+            if self.active[i].is_none() && self.head_due(i, wave) {
                 let req = self.queues[i].pop_front().expect("due head");
                 self.active[i] = Some(Active::from_trace(req));
             }
-            self.busy[i] = !self.tracked[i] || self.active[i].is_some();
+            self.busy[i] = self.active[i].is_some();
         }
     }
 
@@ -195,6 +357,9 @@ impl RequestTracker {
         }
         self.tracked[client] = false;
         self.busy[client] = true;
+        if let Ok(pos) = self.tracked_ids.binary_search(&client) {
+            self.tracked_ids.remove(pos);
+        }
         if self.active[client].take().is_some() {
             self.censored += 1;
         }
@@ -235,7 +400,7 @@ impl RequestTracker {
                 if met {
                     self.slo_tokens[client] += a.target as f64;
                 }
-                self.records.push(RequestRecord {
+                self.record(RequestRecord {
                     client,
                     arrival: a.arrival,
                     first_token: a.first_token,
@@ -299,12 +464,31 @@ impl RequestTracker {
     pub fn sync_wave_start(&mut self, core: &mut RoundCore, wave: u64, members: &[usize]) {
         self.begin_wave(wave);
         for &i in members {
-            core.set_idle(i, !self.is_busy(i));
-            if core.turbo_enabled() {
-                let expected = expected_goodput(core.estimators.alpha_hat[i], core.turbo_cap(i));
-                let h = self.headroom(i, wave, expected);
-                core.set_slo_headroom(i, h);
-            }
+            self.publish_member(core, wave, i);
+        }
+    }
+
+    /// [`RequestTracker::sync_wave_start`] over the tracker's own tracked
+    /// set — the natural drive for a shard whose tracker was already
+    /// restricted with [`RequestTracker::retain_members`]: the member
+    /// list and the tracked set coincide, so no caller-side member vector
+    /// is needed and the cost is O(tracked members).
+    pub fn sync_wave_start_tracked(&mut self, core: &mut RoundCore, wave: u64) {
+        self.begin_wave(wave);
+        for idx in 0..self.tracked_ids.len() {
+            let i = self.tracked_ids[idx];
+            self.publish_member(core, wave, i);
+        }
+    }
+
+    /// Per-member half of the wave-start sync: idle mask plus, under the
+    /// closed-loop controller, the SLO-headroom signal.
+    fn publish_member(&self, core: &mut RoundCore, wave: u64, i: usize) {
+        core.set_idle(i, !self.is_busy(i));
+        if core.turbo_enabled() {
+            let expected = expected_goodput(core.estimators.alpha_hat[i], core.turbo_cap(i));
+            let h = self.headroom(i, wave, expected);
+            core.set_slo_headroom(i, h);
         }
     }
 
@@ -323,7 +507,7 @@ impl RequestTracker {
         for client in 0..self.queues.len() {
             if let Some(a) = self.active[client].take() {
                 if a.deadline <= final_wave {
-                    self.records.push(RequestRecord {
+                    self.record(RequestRecord {
                         client,
                         arrival: a.arrival,
                         first_token: a.first_token,
@@ -343,7 +527,7 @@ impl RequestTracker {
                     continue;
                 }
                 if head.arrival + head.slo_waves <= final_wave {
-                    self.records.push(RequestRecord {
+                    self.record(RequestRecord {
                         client,
                         arrival: head.arrival,
                         first_token: None,
@@ -360,16 +544,27 @@ impl RequestTracker {
         }
     }
 
+    /// File a finished/expired request: retained mode accrues the record,
+    /// streaming mode folds it into the bounded sketch.
+    fn record(&mut self, rec: RequestRecord) {
+        match &mut self.sketch {
+            Some(sk) => sk.push(&rec),
+            None => self.records.push(rec),
+        }
+    }
+
     /// All finished/expired request records so far, arrival order within
-    /// each client.
+    /// each client. Empty in streaming mode (records are folded into the
+    /// sketch as they finish).
     pub fn records(&self) -> &[RequestRecord] {
         &self.records
     }
 
     /// Consume the tracker, yielding its records, per-client SLO-goodput
-    /// totals, and the censored-request count (handed to the recorder).
-    pub fn into_report(self) -> (Vec<RequestRecord>, Vec<f64>, u64) {
-        (self.records, self.slo_tokens, self.censored)
+    /// totals, the censored-request count, and — in streaming mode — the
+    /// bounded request sketch (all handed to the recorder).
+    pub fn into_report(self) -> (Vec<RequestRecord>, Vec<f64>, u64, Option<RequestSketch>) {
+        (self.records, self.slo_tokens, self.censored, self.sketch)
     }
 
     /// Per-client Σ tokens of deadline-met requests.
@@ -377,10 +572,14 @@ impl RequestTracker {
         &self.slo_tokens
     }
 
-    /// Reduce the records to the p50/p95/p99 report row. See
-    /// [`summarize_requests`] for the free-standing form recorders use.
+    /// Reduce the records (or, in streaming mode, the sketch) to the
+    /// p50/p95/p99 report row. See [`summarize_requests`] for the
+    /// free-standing form recorders use.
     pub fn summary(&self) -> SloSummary {
-        summarize_requests(&self.records, self.censored)
+        match &self.sketch {
+            Some(sk) => sk.summary(self.censored),
+            None => summarize_requests(&self.records, self.censored),
+        }
     }
 }
 
@@ -605,5 +804,110 @@ mod tests {
         assert!((s.ttft.1 - 1.0).abs() < 1e-12);
         assert!((s.attainment - 1.0).abs() < 1e-12);
         assert!((s.slo_goodput_total - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retain_members_partitions_without_censoring() {
+        // A 4-slot trace split across two "shards": {0, 2} and {1, 3}.
+        // Each partition serves only its own clients; nothing is
+        // censored and the union of the partitions covers every request.
+        let full = || {
+            trace(vec![
+                vec![(0, 2, 10)],
+                vec![(0, 2, 10)],
+                vec![(1, 2, 10)],
+                vec![(1, 2, 10)],
+            ])
+        };
+        let mut a = RequestTracker::new(full(), 4);
+        a.retain_members(&[0, 2]);
+        let mut b = RequestTracker::new(full(), 4);
+        b.retain_members(&[1, 3]);
+        for wave in 0..3 {
+            a.begin_wave(wave);
+            b.begin_wave(wave);
+            for c in [0usize, 2] {
+                a.observe(wave, c, 1);
+            }
+            for c in [1usize, 3] {
+                b.observe(wave, c, 1);
+            }
+        }
+        a.finish(3);
+        b.finish(3);
+        let (sa, sb) = (a.summary(), b.summary());
+        assert_eq!((sa.completed, sa.censored), (2, 0));
+        assert_eq!((sb.completed, sb.censored), (2, 0));
+        assert!(a.records().iter().all(|r| r.client % 2 == 0));
+        assert!(b.records().iter().all(|r| r.client % 2 == 1));
+        // Dropped slots revert to untracked (closed-loop busy) behavior.
+        assert!(a.is_busy(1) && a.is_busy(3));
+        assert_eq!(a.headroom(1, 0, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn export_import_rebases_a_request_across_wave_clocks() {
+        // Client 0: 6-token request arriving at wave 2, SLO 8. Serve 2
+        // tokens on the source shard (first token at wave 2), migrate at
+        // wave 4, then finish on a destination shard whose clock reads 9.
+        let mut src = RequestTracker::new(trace(vec![vec![(2, 6, 8), (20, 2, 5)]]), 1);
+        src.begin_wave(2);
+        src.observe(2, 0, 2);
+        let state = src.export_client(0, 4).expect("tracked slot exports");
+        assert_eq!(src.summary().censored, 0, "handoff censors nothing");
+        assert!(src.is_busy(0), "exported slot reverts to untracked busy");
+        let act = state.active.as_ref().expect("in-flight request travels");
+        assert_eq!((act.age, act.done, act.first_token_age), (2, 2, Some(2)));
+        assert_eq!(state.queue[0].arrival_in, 16);
+        assert_eq!(state.censorable(), 1, "active only; future backlog drops");
+
+        let mut dst = RequestTracker::new(trace(vec![vec![]]), 1);
+        dst.import_client(0, state, 9);
+        dst.begin_wave(9);
+        assert!(dst.is_busy(0));
+        dst.observe(9, 0, 4); // remaining 4 tokens
+        let r = &dst.records()[0];
+        // Re-based arrival 9 − 2 = 7; completion at 9 ⇒ e2e 3 ≤ SLO 8.
+        assert_eq!((r.arrival, r.completion), (7, 9));
+        assert_eq!(r.first_token, Some(7));
+        assert!(r.completed && r.met);
+        // The future request re-based onto the new clock: due at 9 + 16.
+        dst.begin_wave(25);
+        assert!(dst.is_busy(0), "queued request follows the migration");
+    }
+
+    #[test]
+    fn streaming_summary_matches_retained() {
+        let schedule = || {
+            trace(vec![
+                vec![(0, 2, 10), (4, 3, 2), (9, 2, 40)],
+                vec![(1, 4, 6), (50, 2, 5)],
+            ])
+        };
+        let drive = |t: &mut RequestTracker| {
+            for wave in 0..12 {
+                t.begin_wave(wave);
+                t.observe(wave, 0, 1);
+                t.observe(wave, 1, 1);
+            }
+            t.finish(12);
+        };
+        let mut retained = RequestTracker::new(schedule(), 2);
+        drive(&mut retained);
+        let mut streaming = RequestTracker::new(schedule(), 2);
+        streaming.stream();
+        drive(&mut streaming);
+        assert!(streaming.records().is_empty(), "streaming retains no records");
+        let (r, s) = (retained.summary(), streaming.summary());
+        assert_eq!((r.completed, r.expired, r.censored), (s.completed, s.expired, s.censored));
+        assert!((r.attainment - s.attainment).abs() < 1e-12);
+        assert!((r.slo_goodput_total - s.slo_goodput_total).abs() < 1e-12);
+        // Few requests ⇒ the reservoirs are exact ⇒ identical percentiles.
+        assert_eq!(r.ttft, s.ttft);
+        assert_eq!(r.tpot, s.tpot);
+        assert_eq!(r.e2e, s.e2e);
+        assert_eq!(retained.slo_goodput(), streaming.slo_goodput());
+        let (_, _, _, sketch) = streaming.into_report();
+        assert!(sketch.is_some(), "streaming report carries the sketch");
     }
 }

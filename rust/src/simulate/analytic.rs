@@ -31,7 +31,8 @@ use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
 use crate::sched::baselines::Allocator;
 use crate::sched::gradient::split_budget_by_members;
 use crate::sched::Estimators;
-use crate::serve::{RequestTrace, RequestTracker};
+use crate::metrics::sketch::RequestSketch;
+use crate::serve::{summarize_requests, RequestTrace, RequestTracker, SloSummary};
 use crate::spec::tree::{adaptive_profile, DraftTree};
 use crate::util::Rng;
 use crate::workload::domains::DOMAINS;
@@ -263,10 +264,17 @@ impl AnalyticSim {
         let tracker = if scenario.trace.is_some() {
             let trace = RequestTrace::from_scenario(scenario, slots)
                 .expect("resolve the scenario's request trace");
-            Some(RequestTracker::new(trace, slots))
+            let mut t = RequestTracker::new(trace, slots);
+            if scenario.stream_metrics {
+                t.stream();
+            }
+            Some(t)
         } else {
             None
         };
+        if scenario.stream_metrics {
+            core.recorder.stream();
+        }
         AnalyticSim {
             rng: Rng::new(cfg.seed ^ 0xAAA),
             alloc: vec![initial; slots],
@@ -325,6 +333,11 @@ impl AnalyticSim {
         let n = self.clients.len();
         for i in 0..n {
             self.core.set_member(i, members.binary_search(&i).is_ok());
+        }
+        // Trace-driven runs: this simulator accounts only its own members'
+        // request streams (the others' books live on their own shard).
+        if let Some(tracker) = &mut self.tracker {
+            tracker.retain_members(&members);
         }
         self.members = members;
     }
@@ -652,15 +665,21 @@ impl AnalyticSim {
                 }
             }
         }
-        // Trace-driven runs: close the request books into the recorder
-        // (expired requests become recorded misses, pending ones are
-        // censored) — the same epilogue the live cluster runs.
+        self.close_request_books();
+    }
+
+    /// Trace-driven runs: close the request books into the recorder
+    /// (expired requests become recorded misses, pending ones are
+    /// censored) — the same epilogue the live cluster runs. Idempotent:
+    /// the tracker is consumed on the first call.
+    pub fn close_request_books(&mut self) {
         if let Some(mut tracker) = self.tracker.take() {
             tracker.finish(self.round);
-            let (requests, slo_goodput, censored) = tracker.into_report();
+            let (requests, slo_goodput, censored, sketch) = tracker.into_report();
             self.core.recorder.requests = requests;
             self.core.recorder.slo_goodput = slo_goodput;
             self.core.recorder.requests_censored = censored;
+            self.core.recorder.request_sketch = sketch;
         }
     }
 
@@ -713,6 +732,50 @@ impl ShardedSimOutcome {
         out
     }
 
+    /// Merged per-client SLO-goodput totals (trace-driven runs): clients
+    /// are disjoint across shards after [`AnalyticSim::set_members`]
+    /// restricted each tracker, so per-slot sums are exact.
+    pub fn slo_goodput(&self) -> Vec<f64> {
+        let n = self.shards.first().map_or(0, |s| s.clients.len());
+        let mut out = vec![0.0; n];
+        for sim in &self.shards {
+            for (i, &v) in sim.recorder().slo_goodput.iter().enumerate() {
+                out[i] += v;
+            }
+        }
+        out
+    }
+
+    /// Merged request-level SLO summary across the shards' disjoint
+    /// request books (None for non-trace runs). Retained shards
+    /// concatenate records; streaming shards merge sketches — a mix
+    /// folds retained records into the merged sketch.
+    pub fn slo_summary(&self) -> Option<SloSummary> {
+        if !self.shards.iter().any(|s| s.recorder().has_requests()) {
+            return None;
+        }
+        let censored: u64 = self.shards.iter().map(|s| s.recorder().requests_censored).sum();
+        if self.shards.iter().any(|s| s.recorder().request_sketch.is_some()) {
+            let mut sk = RequestSketch::new();
+            for sim in &self.shards {
+                let r = sim.recorder();
+                if let Some(other) = &r.request_sketch {
+                    sk.merge(other);
+                }
+                for rec in &r.requests {
+                    sk.push(rec);
+                }
+            }
+            return Some(sk.summary(censored));
+        }
+        let records: Vec<_> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.recorder().requests.iter().cloned())
+            .collect();
+        Some(summarize_requests(&records, censored))
+    }
+
     /// Mean goodput per delivered verdict (steady-state tokens/verdict —
     /// the timing-free quantity that must agree with the live pool).
     pub fn goodput_per_verdict(&self) -> f64 {
@@ -760,12 +823,25 @@ fn sharded_budgets(capacity: usize, max_draft: usize, shards: &[AnalyticSim]) ->
 /// additionally rebalances membership; the steady-state scheduling and
 /// accounting are the shared-core code either way.
 pub fn run_sharded(scenario: &Scenario, policy: Policy) -> ShardedSimOutcome {
+    run_sharded_with(scenario, policy, |_| {})
+}
+
+/// [`run_sharded`] with a per-shard configuration hook applied after the
+/// member restriction and before any wave runs — live-vs-analytic
+/// cross-checks use it to pin each client's acceptance rate to the value
+/// a live run observed.
+pub fn run_sharded_with(
+    scenario: &Scenario,
+    policy: Policy,
+    mut configure: impl FnMut(&mut AnalyticSim),
+) -> ShardedSimOutcome {
     let m = scenario.num_verifiers.max(1);
     let n = scenario.num_clients;
     let mut shards: Vec<AnalyticSim> = (0..m)
         .map(|s| {
             let mut sim = AnalyticSim::from_scenario(scenario, policy);
             sim.set_members((0..n).filter(|i| i % m == s).collect());
+            configure(&mut sim);
             sim
         })
         .collect();
@@ -794,6 +870,11 @@ pub fn run_sharded(scenario: &Scenario, policy: Policy) -> ShardedSimOutcome {
                 break 'run;
             }
         }
+    }
+    // Trace-driven runs: close each shard's request books (disjoint
+    // client subsets — the merged view is exact concatenation).
+    for sim in shards.iter_mut() {
+        sim.close_request_books();
     }
     ShardedSimOutcome { shards, budgets }
 }

@@ -5,5 +5,7 @@
 pub mod analytic;
 pub mod fluid;
 
-pub use analytic::{run_sharded, AnalyticSim, ShardedSimOutcome, SimClient, SimConfig};
+pub use analytic::{
+    run_sharded, run_sharded_with, AnalyticSim, ShardedSimOutcome, SimClient, SimConfig,
+};
 pub use fluid::{optimal_allocation, FluidSim};

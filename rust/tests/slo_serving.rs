@@ -9,7 +9,7 @@ use goodspeed::configsys::{ArrivalProcess, Policy, Scenario, TraceConfig};
 use goodspeed::coordinator::{Cluster, RunOutcome, Transport};
 use goodspeed::metrics::csv::{write_requests, write_slo_summary};
 use goodspeed::runtime::{EngineFactory, MockEngineFactory, MockWorld};
-use goodspeed::simulate::analytic::AnalyticSim;
+use goodspeed::simulate::analytic::{run_sharded_with, AnalyticSim};
 
 fn factory() -> Arc<dyn EngineFactory> {
     Arc::new(MockEngineFactory::new(MockWorld {
@@ -170,6 +170,62 @@ fn live_and_analytic_slo_goodput_agree_at_observed_alpha() {
     }
     // Aggregate attainment tracks within a wide-but-binding band.
     let (ls, ss) = (live_rec.slo_summary().unwrap(), sim_rec.slo_summary().unwrap());
+    assert!(
+        (ls.attainment - ss.attainment).abs() <= 0.25,
+        "attainment drifted: live {:.3} vs analytic {:.3}",
+        ls.attainment,
+        ss.attainment
+    );
+    assert!(ls.completed > 0 && ss.completed > 0);
+}
+
+/// The scale-out counterpart of the cross-check above: at M = 4 the live
+/// pool partitions the request books across shards and merges them, the
+/// analytic model runs one restricted simulator per shard — the merged
+/// SLO-goodput must still agree client by client when the analytic side
+/// is pinned to the live run's observed acceptance rates.
+#[test]
+fn sharded_live_and_analytic_slo_goodput_agree_at_m4() {
+    let mut s = Scenario::preset("trace").unwrap();
+    s.num_verifiers = 4;
+    assert!(s.validate().is_ok(), "sharded traces are a supported pairing");
+    let live = serve(s.clone(), Policy::GoodSpeed);
+    let live_rec = &live.recorder;
+    assert!(live_rec.has_requests());
+
+    // Each client's last observed α̂ (waves interleave across shards, so
+    // scan backwards until every client has reported).
+    let mut alpha = [f64::NAN; 4];
+    for r in live_rec.rounds.iter().rev() {
+        for c in &r.clients {
+            if alpha[c.client_id].is_nan() {
+                alpha[c.client_id] = c.alpha_hat;
+            }
+        }
+        if alpha.iter().all(|a| !a.is_nan()) {
+            break;
+        }
+    }
+    let sharded = run_sharded_with(&s, Policy::GoodSpeed, |sim| {
+        for (i, &a) in alpha.iter().enumerate() {
+            if !a.is_nan() {
+                sim.pin_alpha(i, a);
+            }
+        }
+    });
+
+    let sim_slo = sharded.slo_goodput();
+    assert_eq!(sim_slo.len(), live_rec.slo_goodput.len());
+    for i in 0..4 {
+        let (a, b) = (live_rec.slo_goodput[i], sim_slo[i]);
+        let tol = (0.4 * a.max(b)).max(48.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "client {i}: live slo-goodput {a:.0} vs analytic {b:.0} (tol {tol:.0})"
+        );
+    }
+    let ls = live_rec.slo_summary().expect("merged live summary");
+    let ss = sharded.slo_summary().expect("merged analytic summary");
     assert!(
         (ls.attainment - ss.attainment).abs() <= 0.25,
         "attainment drifted: live {:.3} vs analytic {:.3}",
