@@ -451,6 +451,13 @@ pub struct Scenario {
     /// (default) retains everything; retained output is byte-identical
     /// to before this mode existed.
     pub stream_metrics: bool,
+    /// Two-stage wave pipeline: run the verification forward on a
+    /// dedicated stage thread while the coordinator overlaps fan-in
+    /// draining and next-wave assembly (`coordinator/pipeline.rs`).
+    /// `false` (default) keeps the serial loop; the pipelined path is
+    /// bit-identical on RNG streams, wire bytes, and CSV output (pinned
+    /// by `tests/pipeline_parity.rs`).
+    pub pipelined: bool,
 }
 
 impl Scenario {
@@ -635,6 +642,7 @@ impl Scenario {
                 churn: ChurnSchedule::default(),
                 trace: None,
                 stream_metrics: false,
+                pipelined: false,
             },
             // Table I row 2: Qwen3-14B / 0.6B+1.7B, C ∈ {16,20}, 8 clients, 150 tok
             "qwen-8c-150" => Scenario {
@@ -661,6 +669,7 @@ impl Scenario {
                 churn: ChurnSchedule::default(),
                 trace: None,
                 stream_metrics: false,
+                pipelined: false,
             },
             // Table I row 3: Llama-70B / 1B+3B, C ∈ {16,20}, 8 clients, 150 tok
             "llama-8c-150" => Scenario {
@@ -687,6 +696,7 @@ impl Scenario {
                 churn: ChurnSchedule::default(),
                 trace: None,
                 stream_metrics: false,
+                pipelined: false,
             },
             // Fast preset for tests and smoke runs.
             "smoke" => Scenario {
@@ -713,6 +723,7 @@ impl Scenario {
                 churn: ChurnSchedule::default(),
                 trace: None,
                 stream_metrics: false,
+                pipelined: false,
             },
             // Straggler study: one client with a 10× slower uplink. In sync
             // mode every round stalls on that link; async mode lets the
@@ -747,6 +758,7 @@ impl Scenario {
                     churn: ChurnSchedule::default(),
                     trace: None,
                     stream_metrics: false,
+                    pipelined: false,
                 }
             }
             // Sharded-pool scale-up study: 8 heterogeneous clients whose
@@ -787,6 +799,7 @@ impl Scenario {
                     churn: ChurnSchedule::default(),
                     trace: None,
                     stream_metrics: false,
+                    pipelined: false,
                 }
             }
             // Tree-speculation study: four clients drafting with the weak
@@ -818,6 +831,7 @@ impl Scenario {
                 churn: ChurnSchedule::default(),
                 trace: None,
                 stream_metrics: false,
+                pipelined: false,
             },
             // Dynamic-membership study: four resident clients, one extra
             // client joining a third of the way through the run, and one
@@ -849,6 +863,7 @@ impl Scenario {
                     churn: ChurnSchedule::default(),
                     trace: None,
                     stream_metrics: false,
+                    pipelined: false,
                 };
                 s.churn = ChurnSchedule {
                     events: vec![
@@ -894,6 +909,7 @@ impl Scenario {
                 // client land well inside the 240-wave run.
                 trace: Some(TraceConfig::poisson(28.0, 48)),
                 stream_metrics: false,
+                pipelined: false,
             },
             // 10k-session scale-out soak: open-loop Poisson arrivals over
             // M = 4 verification shards with streaming metrics, the shape
@@ -926,6 +942,7 @@ impl Scenario {
                 churn: ChurnSchedule::default(),
                 trace: Some(TraceConfig::poisson(64.0, 96)),
                 stream_metrics: true,
+                pipelined: false,
             },
             _ => return None,
         };
@@ -974,6 +991,7 @@ impl Scenario {
             ("spec_shape", Value::Str(self.spec_shape.label())),
             ("churn_events", Value::Num(self.churn.events.len() as f64)),
             ("stream_metrics", Value::Bool(self.stream_metrics)),
+            ("pipelined", Value::Bool(self.pipelined)),
             (
                 "trace",
                 match &self.trace {

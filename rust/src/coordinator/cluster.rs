@@ -53,7 +53,7 @@
 //! ([`super::pool`]) under the same handle; a joining client is routed to
 //! the least-pressured shard.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -61,6 +61,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::leader::{Leader, PoolReport, RunConfig, RunOutcome, Transport};
+use super::pipeline::{VerifyStage, OVERLAP_TICK};
 use crate::configsys::{ChurnEvent, ChurnKind, ClientSpec, CoordMode, Policy, Scenario};
 use crate::draft::{spawn_draft_server, DraftServerConfig, DraftStats};
 use crate::error::{ConfigError, GoodSpeedError};
@@ -408,6 +409,10 @@ struct ClusterEngine {
     stop: bool,
     /// True once the control channel disconnected (handle dropped).
     ctl_gone: bool,
+    /// A control message received by an idle-loop blocking wait, parked
+    /// until the next wave boundary applies it (the boundary is the only
+    /// place membership may change).
+    pending_ctl: Option<Ctl>,
     snapshot: Arc<Mutex<ClusterStats>>,
 }
 
@@ -474,6 +479,7 @@ impl ClusterEngine {
             retired_total: 0,
             stop: false,
             ctl_gone: false,
+            pending_ctl: None,
             snapshot,
             scenario,
         };
@@ -658,15 +664,14 @@ impl ClusterEngine {
                 }
             }
         }
+        // A control message caught by an idle wait is first in line — it
+        // arrived before anything try_recv can return.
+        if let Some(ctl) = self.pending_ctl.take() {
+            self.apply_ctl(ctl, wave);
+        }
         loop {
             match self.ctl_rx.try_recv() {
-                Ok(Ctl::Attach { spec, reply }) => {
-                    let _ = reply.send(self.admit(spec, wave));
-                }
-                Ok(Ctl::Detach { id, reply }) => {
-                    let _ = reply.send(self.begin_detach(id));
-                }
-                Ok(Ctl::Stop) => self.stop = true,
+                Ok(ctl) => self.apply_ctl(ctl, wave),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     self.ctl_gone = true;
@@ -675,6 +680,36 @@ impl ClusterEngine {
             }
         }
         self.publish(wave);
+    }
+
+    fn apply_ctl(&mut self, ctl: Ctl, wave: u64) {
+        match ctl {
+            Ctl::Attach { spec, reply } => {
+                let _ = reply.send(self.admit(spec, wave));
+            }
+            Ctl::Detach { id, reply } => {
+                let _ = reply.send(self.begin_detach(id));
+            }
+            Ctl::Stop => self.stop = true,
+        }
+    }
+
+    /// Idle wait with an empty membership: block on the control channel
+    /// for up to one [`CTL_TICK`] instead of sleeping blind — an attach
+    /// lands at the next boundary immediately rather than a tick later.
+    /// Once the channel is gone a blocking receive would return
+    /// `Disconnected` instantly (a busy loop), so that terminal case
+    /// keeps the plain sleep.
+    fn idle_wait_ctl(&mut self) {
+        if self.ctl_gone {
+            std::thread::sleep(CTL_TICK);
+            return;
+        }
+        match self.ctl_rx.recv_timeout(CTL_TICK) {
+            Ok(ctl) => self.pending_ctl = Some(ctl),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => self.ctl_gone = true,
+        }
     }
 
     fn publish(&self, wave: u64) {
@@ -787,6 +822,18 @@ impl ClusterEngine {
     /// dense wave over the *current* members per round.
     fn run_sync(&mut self) -> Result<()> {
         let slots = self.state.len();
+        // The pipelined verify stage (opt-in) owns a second engine on its
+        // own thread; serial stays the default. Held as a local so the
+        // overlap loop can keep borrowing `self` for fan-in ingest.
+        let mut stage: Option<VerifyStage> = if self.scenario.pipelined {
+            Some(VerifyStage::spawn(
+                self.factory.clone(),
+                &self.scenario.family,
+                "goodspeed-verify-stage",
+            )?)
+        } else {
+            None
+        };
         let mut wave: u64 = 0;
         // Wave-loop buffers, hoisted so steady-state waves reuse their
         // capacity instead of reallocating every round.
@@ -805,7 +852,7 @@ impl ClusterEngine {
                 if self.ctl_gone && self.schedule_cursor >= self.schedule.len() {
                     break;
                 }
-                std::thread::sleep(CTL_TICK);
+                self.idle_wait_ctl();
                 continue;
             }
             // Request boundary: promote due arrivals, refresh the idle
@@ -877,8 +924,30 @@ impl ClusterEngine {
                     .observe(&mut self.leader.core.recorder, m.client_id as usize, m);
             }
 
-            // 2. Verify + schedule (one dense wave over the members).
-            self.leader.process_wave_into(wave, &msgs, recv_ns, &mut verdicts)?;
+            // 2. Verify + schedule (one dense wave over the members). The
+            // pipelined stage runs the forward on its thread; under the
+            // sync barrier every member is awaiting its verdict, so no
+            // drafts can arrive mid-verify — block until it completes.
+            // Scheduling and verdict emission run here either way, in the
+            // exact serial order.
+            match stage.as_mut() {
+                Some(stage) => {
+                    let mut vsw = Stopwatch::new();
+                    let (mut arena, out) = self.leader.take_wave_buffers();
+                    if let Err(e) = self.leader.assemble_wave_into(&msgs, &mut arena) {
+                        self.leader.put_wave_buffers(arena, out);
+                        return Err(e);
+                    }
+                    stage.submit(arena, out);
+                    let (arena, out, res) = stage.wait_done().expect("wave in flight");
+                    self.leader.put_wave_buffers(arena, out);
+                    res?;
+                    self.leader.conclude_wave_into(wave, &msgs, recv_ns, &mut vsw, &mut verdicts);
+                }
+                None => {
+                    self.leader.process_wave_into(wave, &msgs, recv_ns, &mut verdicts)?
+                }
+            }
             let _ = sw.lap();
 
             // 3. Send verdicts.
@@ -948,6 +1017,17 @@ impl ClusterEngine {
     /// (`num_clients × rounds` verdicts over the initial membership).
     fn run_async(&mut self) -> Result<()> {
         let slots = self.state.len();
+        // Opt-in pipelined verify stage (see `run_sync`); in async mode
+        // the coordinator overlaps fan-in draining with the forward.
+        let mut stage: Option<VerifyStage> = if self.scenario.pipelined {
+            Some(VerifyStage::spawn(
+                self.factory.clone(),
+                &self.scenario.family,
+                "goodspeed-verify-stage",
+            )?)
+        } else {
+            None
+        };
         let window = Duration::from_micros(self.scenario.batch_window_us);
         let budget: u64 =
             self.scenario.rounds.saturating_mul(self.scenario.num_clients as u64);
@@ -968,7 +1048,7 @@ impl ClusterEngine {
                 if self.ctl_gone && self.schedule_cursor >= self.schedule.len() {
                     break;
                 }
-                std::thread::sleep(CTL_TICK);
+                self.idle_wait_ctl();
                 continue;
             }
             // Request boundary (same rules as the sync barrier).
@@ -1015,8 +1095,35 @@ impl ClusterEngine {
             pending_n = 0;
             let recv_ns = sw.lap().as_nanos() as u64;
 
-            // Phase 5 — verify + schedule + send.
-            self.leader.process_wave_into(wave, &msgs, recv_ns, &mut verdicts)?;
+            // Phase 5 — verify + schedule + send. With the stage engaged,
+            // the coordinator keeps draining fan-in for the next wave
+            // while the forward runs; scheduling and verdict emission
+            // stay here, in the exact serial order.
+            match stage.as_mut() {
+                Some(stage) => {
+                    let mut vsw = Stopwatch::new();
+                    let (mut arena, out) = self.leader.take_wave_buffers();
+                    if let Err(e) = self.leader.assemble_wave_into(&msgs, &mut arena) {
+                        self.leader.put_wave_buffers(arena, out);
+                        return Err(e);
+                    }
+                    stage.submit(arena, out);
+                    let (arena, out, res) = loop {
+                        for (id, msg) in self.server.try_drain()? {
+                            self.ingest(&mut pending, &mut pending_n, id, msg)?;
+                        }
+                        if let Some(done) = stage.take_done_timeout(OVERLAP_TICK) {
+                            break done;
+                        }
+                    };
+                    self.leader.put_wave_buffers(arena, out);
+                    res?;
+                    self.leader.conclude_wave_into(wave, &msgs, recv_ns, &mut vsw, &mut verdicts);
+                }
+                None => {
+                    self.leader.process_wave_into(wave, &msgs, recv_ns, &mut verdicts)?
+                }
+            }
             let _ = sw.lap();
             for vd in &verdicts {
                 (self.server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;

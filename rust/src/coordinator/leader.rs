@@ -179,6 +179,21 @@ impl Leader {
         verdicts: &mut Vec<VerdictMsg>,
     ) -> Result<()> {
         let mut sw = Stopwatch::new();
+        let mut arena = std::mem::take(&mut self.arena);
+        let assembled = self.assemble_wave_into(msgs, &mut arena);
+        self.arena = arena;
+        assembled?;
+        self.verifier.verify_into(&self.arena.req, &mut self.out)?;
+        self.conclude_wave_into(wave, msgs, recv_ns, &mut sw, verdicts);
+        Ok(())
+    }
+
+    /// Stage 1 of the wave: validate the participant ids and assemble the
+    /// batched request into `arena`. Takes `&self` — assembly touches no
+    /// RNG, estimator, or scheduler state, which is what lets the
+    /// pipelined loop run it against caller-owned buffers while the
+    /// verify stage owns the leader's spares.
+    pub fn assemble_wave_into(&self, msgs: &[DraftMsg], arena: &mut WaveArena) -> Result<()> {
         let n_total = self.core.n_clients();
         for m in msgs {
             if m.client_id as usize >= n_total {
@@ -188,9 +203,40 @@ impl Leader {
                 ));
             }
         }
-        build_verify_request_into(msgs, &self.buckets, self.verify_k, self.vocab, &mut self.arena)?;
-        self.verifier.verify_into(&self.arena.req, &mut self.out)?;
+        build_verify_request_into(msgs, &self.buckets, self.verify_k, self.vocab, arena)
+    }
 
+    /// Hand out the leader's wave buffers for a pipelined round trip
+    /// through a [`VerifyStage`](super::pipeline::VerifyStage); the
+    /// leader is left with empty (allocation-free) defaults until
+    /// [`Leader::put_wave_buffers`] restores them. The pipelined loop is
+    /// `take → assemble → submit → (overlap) → collect → put → conclude`.
+    pub fn take_wave_buffers(&mut self) -> (WaveArena, VerifyOutput) {
+        (std::mem::take(&mut self.arena), std::mem::take(&mut self.out))
+    }
+
+    /// Restore the buffers taken by [`Leader::take_wave_buffers`] (with
+    /// the stage's verify results in `out`), ready for
+    /// [`Leader::conclude_wave_into`].
+    pub fn put_wave_buffers(&mut self, arena: WaveArena, out: VerifyOutput) {
+        self.arena = arena;
+        self.out = out;
+    }
+
+    /// Stage 2 of the wave, over the assembled arena and verify output
+    /// currently held by the leader: rejection sampling, estimator
+    /// updates, GOODSPEED-SCHED, record emission, and verdict fill —
+    /// everything whose *order* the bit-identical discipline pins. `sw`
+    /// must have been started when the wave's verify phase began, so the
+    /// recorded `verify_ns` keeps covering assembly + verify + judging.
+    pub fn conclude_wave_into(
+        &mut self,
+        wave: u64,
+        msgs: &[DraftMsg],
+        recv_ns: u64,
+        sw: &mut Stopwatch,
+        verdicts: &mut Vec<VerdictMsg>,
+    ) {
         // Rejection sampling per client (paper step ④), in row order so the
         // core's verdict RNG stream is identical to the pre-core
         // coordinator for dense (sync) waves.
@@ -293,7 +339,6 @@ impl Leader {
             vd.next_alloc = *nx as u32;
         }
         self.next = next;
-        Ok(())
     }
 
     /// Record the measured send-phase time on the wave just processed.

@@ -22,10 +22,12 @@ pub mod batcher;
 pub mod cluster;
 pub mod core;
 pub mod leader;
+pub mod pipeline;
 pub mod pool;
 
 pub use batcher::{build_verify_request, build_verify_request_into, WaveArena};
 pub use cluster::{ClientId, Cluster, ClusterBuilder, ClusterStats, ServingHandle};
 pub use self::core::{RoundCore, WaveObs};
 pub use leader::{Leader, PoolReport, RunConfig, RunOutcome, Transport};
+pub use pipeline::VerifyStage;
 pub use pool::{run_pool, PoolOutcome};

@@ -1,0 +1,346 @@
+//! The verify stage of the pipelined wave loop.
+//!
+//! Engines are not `Send` (PJRT handles live on the thread that built
+//! them), so the serial loop's `Box<dyn Verifier>` cannot migrate to a
+//! worker. Instead [`VerifyStage::spawn`] gives the stage thread its
+//! *own* verifier, built from the shared [`EngineFactory`] with the same
+//! family string — for the deterministic engines this repo ships, a
+//! second instance is bit-identical to the first, so the pipelined path
+//! produces the exact verify outputs of the serial path (pinned by
+//! `tests/pipeline_parity.rs`).
+//!
+//! Division of labor: the coordinator thread keeps *everything* that
+//! touches RNG streams, estimators, scheduling, and verdict emission —
+//! only the pure `verify_into(&req, &mut out)` call crosses to the stage
+//! thread. While it runs, the coordinator overlaps fan-in draining and
+//! frame ingest for the next wave (see `pool::run_shard_loop` /
+//! `cluster::run_*`), then blocks on [`VerifyStage::take_done_timeout`]
+//! at the safe point.
+//!
+//! Handoff is a single-slot condvar exchange ([`HandoffSlot`]), not an
+//! mpsc channel: channel sends heap-allocate a node per message, which
+//! would show up in the `alloc_track` warm-wave assertions. The slot is
+//! allocation-free in steady state, and the [`WaveArena`]/[`VerifyOutput`]
+//! buffers shuttle back and forth by move, so their capacity is reused
+//! wave over wave on both sides.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::WaveArena;
+use crate::runtime::{EngineFactory, VerifyOutput};
+
+/// How long an overlap loop parks on [`VerifyStage::take_done_timeout`]
+/// between fan-in drains: long enough that the coordinator isn't spinning,
+/// short enough that a draft landing mid-verify is picked up well before
+/// the verdict fan-out.
+pub const OVERLAP_TICK: Duration = Duration::from_micros(200);
+
+/// A one-deep exchange slot: `put` blocks while full, `take` blocks while
+/// empty. Steady-state traffic allocates nothing.
+struct HandoffSlot<T> {
+    slot: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+impl<T> HandoffSlot<T> {
+    fn new() -> HandoffSlot<T> {
+        HandoffSlot { slot: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn put(&self, value: T) {
+        let mut guard = self.slot.lock().expect("handoff lock");
+        while guard.is_some() {
+            guard = self.cv.wait(guard).expect("handoff lock");
+        }
+        *guard = Some(value);
+        drop(guard);
+        self.cv.notify_all();
+    }
+
+    fn take(&self) -> T {
+        let mut guard = self.slot.lock().expect("handoff lock");
+        loop {
+            if let Some(value) = guard.take() {
+                drop(guard);
+                self.cv.notify_all();
+                return value;
+            }
+            guard = self.cv.wait(guard).expect("handoff lock");
+        }
+    }
+
+    /// Take if a value arrives within `dur`; `None` on timeout. (A
+    /// spurious early return is indistinguishable from a timeout — the
+    /// caller's overlap loop simply comes back around.)
+    fn take_timeout(&self, dur: Duration) -> Option<T> {
+        let guard = self.slot.lock().expect("handoff lock");
+        let (mut guard, _timed_out) = self
+            .cv
+            .wait_timeout_while(guard, dur, |slot| slot.is_none())
+            .expect("handoff lock");
+        let value = guard.take();
+        if value.is_some() {
+            drop(guard);
+            self.cv.notify_all();
+        }
+        value
+    }
+}
+
+enum Job {
+    Verify { arena: WaveArena, out: VerifyOutput },
+    Stop,
+}
+
+struct Done {
+    arena: WaveArena,
+    out: VerifyOutput,
+    result: Result<()>,
+}
+
+/// A dedicated verifier thread executing `verify_into` for one shard.
+/// At most one wave is in flight; buffers move through by value and come
+/// back with the result, so their capacity is never dropped.
+pub struct VerifyStage {
+    job: Arc<HandoffSlot<Job>>,
+    done: Arc<HandoffSlot<Done>>,
+    handle: Option<JoinHandle<()>>,
+    in_flight: bool,
+}
+
+impl VerifyStage {
+    /// Spawn the stage thread and build its verifier inside it (engines
+    /// are not `Send`). Blocks until the engine is constructed; a
+    /// factory failure is returned here, not deferred to the first wave.
+    pub fn spawn(
+        factory: Arc<dyn EngineFactory>,
+        family: &str,
+        thread_name: &str,
+    ) -> Result<VerifyStage> {
+        let job = Arc::new(HandoffSlot::new());
+        let done = Arc::new(HandoffSlot::new());
+        let (job2, done2) = (Arc::clone(&job), Arc::clone(&done));
+        let family = family.to_string();
+        let handle = std::thread::Builder::new()
+            .name(thread_name.to_string())
+            .spawn(move || {
+                // Ready handshake: the first Done carries the engine
+                // construction result (and seeds the buffer defaults).
+                let mut verifier = match factory.make_verifier(&family) {
+                    Ok(v) => {
+                        done2.put(Done {
+                            arena: WaveArena::default(),
+                            out: VerifyOutput::default(),
+                            result: Ok(()),
+                        });
+                        v
+                    }
+                    Err(e) => {
+                        done2.put(Done {
+                            arena: WaveArena::default(),
+                            out: VerifyOutput::default(),
+                            result: Err(e),
+                        });
+                        return;
+                    }
+                };
+                loop {
+                    match job2.take() {
+                        Job::Verify { arena, mut out } => {
+                            let result = verifier.verify_into(&arena.req, &mut out);
+                            done2.put(Done { arena, out, result });
+                        }
+                        Job::Stop => break,
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawn verify stage '{thread_name}': {e}"))?;
+        let ready = done.take();
+        if let Err(e) = ready.result {
+            let _ = handle.join();
+            return Err(e.context(format!("verify stage '{thread_name}' engine build")));
+        }
+        Ok(VerifyStage { job, done, handle: Some(handle), in_flight: false })
+    }
+
+    /// Hand an assembled wave to the stage. The arena's `req` is
+    /// verified into `out`; both come back through
+    /// [`VerifyStage::take_done_timeout`] / [`VerifyStage::wait_done`].
+    ///
+    /// # Panics
+    /// If a wave is already in flight (the loop is strictly one-deep).
+    pub fn submit(&mut self, arena: WaveArena, out: VerifyOutput) {
+        assert!(!self.in_flight, "verify stage already has a wave in flight");
+        self.job.put(Job::Verify { arena, out });
+        self.in_flight = true;
+    }
+
+    /// Collect the in-flight wave if it completes within `dur`. `None`
+    /// means still running (or nothing submitted) — overlap loops call
+    /// this with a short timeout between fan-in drains.
+    pub fn take_done_timeout(
+        &mut self,
+        dur: Duration,
+    ) -> Option<(WaveArena, VerifyOutput, Result<()>)> {
+        if !self.in_flight {
+            return None;
+        }
+        let d = self.done.take_timeout(dur)?;
+        self.in_flight = false;
+        Some((d.arena, d.out, d.result))
+    }
+
+    /// Block until the in-flight wave completes; `None` if nothing was
+    /// submitted.
+    pub fn wait_done(&mut self) -> Option<(WaveArena, VerifyOutput, Result<()>)> {
+        if !self.in_flight {
+            return None;
+        }
+        let d = self.done.take();
+        self.in_flight = false;
+        Some((d.arena, d.out, d.result))
+    }
+}
+
+impl Drop for VerifyStage {
+    fn drop(&mut self) {
+        // Drain any in-flight result first so the worker is parked on the
+        // job slot, then stop it and reap the thread.
+        if self.in_flight {
+            let _ = self.done.take();
+            self.in_flight = false;
+        }
+        self.job.put(Job::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::build_verify_request_into;
+    use crate::net::wire::DraftMsg;
+    use crate::runtime::{EngineFactory, MockEngineFactory, MockWorld};
+
+    fn factory() -> Arc<dyn EngineFactory> {
+        Arc::new(MockEngineFactory::new(MockWorld {
+            vocab: 32,
+            max_seq: 128,
+            sharpness: 3.0,
+            seed: 9,
+        }))
+    }
+
+    fn draft(id: u32, len: usize, vocab: usize) -> DraftMsg {
+        DraftMsg {
+            client_id: id,
+            round: 0,
+            prefix: vec![1, 2, 3, (id % 7) as u8],
+            prompt_len: 3,
+            draft: (0..len).map(|i| ((5 + id as usize + i) % vocab) as u8).collect(),
+            parents: Vec::new(),
+            q_probs: vec![1.0 / vocab as f32; len * vocab],
+            new_request: false,
+            draft_wall_ns: 0,
+        }
+    }
+
+    /// The stage's own verifier instance produces bit-identical output to
+    /// a verifier built on the calling thread — the property the
+    /// pipelined path's correctness rests on.
+    #[test]
+    fn stage_output_matches_local_verifier_and_recycles_buffers() {
+        let f = factory();
+        let (vocab, k) = (f.vocab(), f.verify_k());
+        let buckets = f.make_verifier("fam").expect("verifier").buckets();
+
+        let mut stage = VerifyStage::spawn(Arc::clone(&f), "fam", "test-verify-stage")
+            .expect("spawn stage");
+        let mut local = f.make_verifier("fam").expect("verifier");
+
+        let mut arena = WaveArena::new();
+        let mut out = VerifyOutput::default();
+        let mut expect = VerifyOutput::default();
+        for wave in 0..4u32 {
+            let msgs: Vec<DraftMsg> =
+                (0..3).map(|c| draft(c, 2 + ((wave + c) % 3) as usize, vocab)).collect();
+            build_verify_request_into(&msgs, &buckets, k, vocab, &mut arena)
+                .expect("assemble");
+            local.verify_into(&arena.req, &mut expect).expect("local verify");
+
+            stage.submit(std::mem::take(&mut arena), std::mem::take(&mut out));
+            let (a, o, res) = stage.wait_done().expect("in flight");
+            res.expect("stage verify");
+            assert_eq!(o, expect, "wave {wave}: stage output diverged");
+            arena = a;
+            out = o;
+        }
+    }
+
+    #[test]
+    fn take_done_timeout_returns_none_until_submit() {
+        let mut stage = VerifyStage::spawn(factory(), "fam", "test-verify-idle")
+            .expect("spawn stage");
+        assert!(stage.take_done_timeout(Duration::from_millis(1)).is_none());
+        assert!(stage.wait_done().is_none());
+    }
+
+    #[test]
+    fn engine_build_failure_surfaces_at_spawn() {
+        struct FailingFactory;
+        impl EngineFactory for FailingFactory {
+            fn make_drafter(
+                &self,
+                _model: &str,
+            ) -> anyhow::Result<Box<dyn crate::runtime::engine::Drafter>> {
+                Err(anyhow!("no drafter"))
+            }
+            fn make_verifier(
+                &self,
+                _family: &str,
+            ) -> anyhow::Result<Box<dyn crate::runtime::engine::Verifier>> {
+                Err(anyhow!("model not in manifest"))
+            }
+            fn make_target_stepper(
+                &self,
+                _family: &str,
+            ) -> anyhow::Result<Box<dyn crate::runtime::engine::Drafter>> {
+                Err(anyhow!("no stepper"))
+            }
+            fn vocab(&self) -> usize {
+                0
+            }
+            fn max_seq(&self) -> usize {
+                0
+            }
+            fn verify_k(&self) -> usize {
+                0
+            }
+        }
+        let err = VerifyStage::spawn(Arc::new(FailingFactory), "fam", "test-verify-fail")
+            .expect_err("must fail");
+        assert!(format!("{err:#}").contains("model not in manifest"));
+    }
+
+    #[test]
+    fn handoff_slot_exchanges_in_order() {
+        let slot = Arc::new(HandoffSlot::<u32>::new());
+        let s2 = Arc::clone(&slot);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                s2.put(i);
+            }
+        });
+        for i in 0..100 {
+            assert_eq!(slot.take(), i);
+        }
+        producer.join().expect("producer");
+        assert!(slot.take_timeout(Duration::from_millis(1)).is_none());
+    }
+}

@@ -57,6 +57,7 @@ use anyhow::{anyhow, Result};
 
 use super::cluster::{ClientId, ClusterStats, Ctl, SlotState};
 use super::leader::{Leader, RunConfig, Transport};
+use super::pipeline::{VerifyStage, OVERLAP_TICK};
 use crate::configsys::{ChurnEvent, ChurnKind, ClientSpec, Scenario};
 use crate::draft::{spawn_draft_server, DraftServerConfig, DraftStats};
 use crate::error::{ConfigError, GoodSpeedError};
@@ -70,7 +71,7 @@ use crate::runtime::EngineFactory;
 use crate::sched::gradient::split_budget_by_members;
 use crate::sched::utility::{LogUtility, Utility};
 use crate::serve::{ClientRequestState, RequestTrace, RequestTracker};
-use crate::util::{Rng, Stopwatch};
+use crate::util::{Rng, Stopwatch, Wakeup};
 use crate::workload::DomainStream;
 
 /// How often an idle shard wakes up to check the global stop flag.
@@ -211,6 +212,10 @@ struct PoolShared {
     /// Retired sessions whose drained stragglers shards must discard.
     retired: Vec<AtomicBool>,
     ctl: Mutex<PoolCtl>,
+    /// Progress signal: shards notify after every `post_wave` publish and
+    /// whenever the stop flag latches, so the driver's idle wait parks on
+    /// a condvar instead of polling a 2 ms sleep tick.
+    wakeup: Wakeup,
 }
 
 impl PoolShared {
@@ -424,6 +429,10 @@ fn post_wave(
     }
     apply_inbox(shard, leader, &mut ctl, members, serve.as_mut());
     leader.core.set_capacity(ctl.budgets[shard]);
+    drop(ctl);
+    // Wave published: wake the driver so schedule/stop decisions react
+    // now, not at the next poll tick.
+    shared.wakeup.notify();
 }
 
 /// Answer a session hello with the granted S_i(0) and current epoch (the
@@ -478,6 +487,12 @@ fn ingest(
 
 /// One shard's serving loop: the event-driven wave pipeline over the
 /// clients currently routed here. Returns the number of waves processed.
+///
+/// With `stage` present (`scenario.pipelined`), the verification forward
+/// runs on the stage thread while this thread keeps draining fan-in for
+/// the next wave; everything that touches RNG, estimators, or scheduling
+/// stays here, at the same points in the same order as the serial path.
+#[allow(clippy::too_many_arguments)]
 fn run_shard_loop(
     scenario: &Scenario,
     shard: usize,
@@ -486,6 +501,7 @@ fn run_shard_loop(
     router: &ShardRouter,
     shared: &PoolShared,
     serve: &mut Option<ShardTracker>,
+    mut stage: Option<VerifyStage>,
 ) -> Result<u64> {
     let slots = router.num_clients();
     let window = Duration::from_micros(scenario.batch_window_us);
@@ -563,8 +579,37 @@ fn run_shard_loop(
             st.tracker.sync_wave_start_tracked(&mut leader.core, wave);
         }
 
-        // Phase 5 — verify + schedule + send.
-        leader.process_wave_into(wave, &msgs, recv_ns, &mut verdicts)?;
+        // Phase 5 — verify + schedule + send. Pipelined shards hand the
+        // assembled wave to the stage thread and keep draining fan-in
+        // while it verifies; scheduling and verdict emission run here
+        // either way, in the exact serial order.
+        match stage.as_mut() {
+            Some(stage) => {
+                let mut vsw = Stopwatch::new();
+                let (mut arena, out) = leader.take_wave_buffers();
+                if let Err(e) = leader.assemble_wave_into(&msgs, &mut arena) {
+                    leader.put_wave_buffers(arena, out);
+                    return Err(e);
+                }
+                stage.submit(arena, out);
+                let (arena, out, res) = loop {
+                    for (id, msg) in server.try_drain()? {
+                        if let Message::Join(j) = msg {
+                            answer_hello(server, shared, id, j.protocol)?;
+                        } else {
+                            ingest(&mut pending, &mut pending_n, shared, id, msg)?;
+                        }
+                    }
+                    if let Some(done) = stage.take_done_timeout(OVERLAP_TICK) {
+                        break done;
+                    }
+                };
+                leader.put_wave_buffers(arena, out);
+                res?;
+                leader.conclude_wave_into(wave, &msgs, recv_ns, &mut vsw, &mut verdicts);
+            }
+            None => leader.process_wave_into(wave, &msgs, recv_ns, &mut verdicts)?,
+        }
         let _ = sw.lap();
         for vd in &verdicts {
             (server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
@@ -590,6 +635,7 @@ fn run_shard_loop(
             + verdicts.len() as u64;
         if delivered >= shared.budget_total {
             shared.stop.store(true, Ordering::Release);
+            shared.wakeup.notify();
         }
         // Phase 6 — complete graceful drains: the verdict just sent was
         // the final one for any draining participant. Retire it under the
@@ -887,6 +933,11 @@ impl PoolDriver {
                 Some(Err(RecvTimeoutError::Timeout)) => {}
                 Some(Err(RecvTimeoutError::Disconnected)) => ctl_rx = None,
                 None => {
+                    // Snapshot the wakeup clock *before* reading the
+                    // controller state: a shard wave that lands between
+                    // the read and the wait bumps the sequence and the
+                    // wait returns immediately (no lost wakeups).
+                    let seen = self.shared.wakeup.seq();
                     if cursor >= schedule.len() {
                         // Nothing left to drive. If the membership fully
                         // drained (and no drain is still in flight),
@@ -902,13 +953,14 @@ impl PoolDriver {
                         };
                         if serving_empty {
                             self.shared.stop.store(true, Ordering::Release);
+                            self.shared.wakeup.notify();
                             break;
                         }
                         if !draining {
                             break;
                         }
                     }
-                    std::thread::sleep(IDLE_TICK);
+                    self.shared.wakeup.wait_timeout(seen, IDLE_TICK);
                 }
             }
         }
@@ -1007,6 +1059,7 @@ pub(crate) fn run_pool_dynamic(
         budget_total: scenario.rounds.saturating_mul(n as u64),
         retired: (0..slots).map(|_| AtomicBool::new(false)).collect(),
         ctl: Mutex::new(ctl),
+        wakeup: Wakeup::new(),
     });
 
     // Draft servers (same client-side protocol as the single leader; the
@@ -1057,9 +1110,29 @@ pub(crate) fn run_pool_dynamic(
                             // the budget never completes, and the pool
                             // would hang.
                             shared.stop.store(true, Ordering::Release);
+                            shared.wakeup.notify();
                             return (Err(e), None, server);
                         }
                     };
+                // The pipelined verify stage owns a second engine built on
+                // its own thread (engines are not `Send`); serial remains
+                // the default when `scenario.pipelined` is off.
+                let stage: Option<VerifyStage> = if scenario.pipelined {
+                    match VerifyStage::spawn(
+                        factory.clone(),
+                        &scenario.family,
+                        &format!("verify-stage-{shard}"),
+                    ) {
+                        Ok(s) => Some(s),
+                        Err(e) => {
+                            shared.stop.store(true, Ordering::Release);
+                            shared.wakeup.notify();
+                            return (Err(e), None, server);
+                        }
+                    }
+                } else {
+                    None
+                };
                 leader.core.set_shard(shard);
                 {
                     let ctl = shared.ctl.lock().expect("pool lock");
@@ -1081,6 +1154,7 @@ pub(crate) fn run_pool_dynamic(
                         Ok(t) => t,
                         Err(e) => {
                             shared.stop.store(true, Ordering::Release);
+                            shared.wakeup.notify();
                             return (Err(e), None, server);
                         }
                     };
@@ -1101,9 +1175,11 @@ pub(crate) fn run_pool_dynamic(
                     &router,
                     &shared,
                     &mut serve,
+                    stage,
                 );
                 if res.is_err() {
                     shared.stop.store(true, Ordering::Release);
+                    shared.wakeup.notify();
                 }
                 if let (Ok(final_wave), Some(mut st)) = (&res, serve) {
                     st.tracker.finish(*final_wave);

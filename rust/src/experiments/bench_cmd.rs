@@ -27,7 +27,9 @@ use anyhow::{anyhow, Context, Result};
 use super::{mock_engine, serve_once};
 use crate::cli::Args;
 use crate::configsys::{Policy, Scenario};
-use crate::coordinator::{build_verify_request_into, RoundCore, Transport, WaveArena, WaveObs};
+use crate::coordinator::{
+    build_verify_request_into, RoundCore, Transport, VerifyStage, WaveArena, WaveObs,
+};
 use crate::net::wire::{DraftMsg, FrameView, Message};
 use crate::runtime::{EngineFactory, Verifier, VerifyOutput};
 use crate::serve::{RequestTrace, RequestTracker};
@@ -42,7 +44,11 @@ pub const BENCH_PRESETS: &[&str] = &["sharded", "tree", "churn", "trace"];
 pub const SOAK_SHARDS: &[usize] = &[1, 4, 8];
 
 /// Default on-disk recording (PR-numbered so history accumulates in git).
-pub const DEFAULT_OUT: &str = "BENCH_7.json";
+pub const DEFAULT_OUT: &str = "BENCH_8.json";
+
+/// Fixed anchor for the cumulative (print-only) delta: how far the stack
+/// has come since this recording, independent of the rolling baseline.
+const CUMULATIVE_ANCHOR: &str = "BENCH_6.json";
 
 /// Regression gate: fail when a preset's waves/s drops below this
 /// fraction of the baseline recording.
@@ -139,13 +145,73 @@ fn hot_path_bench(iters: u64) -> Result<Json> {
     if alloc_track::enabled() && assembly_allocs + verify_allocs + parse_allocs > 0 {
         log::warn!("warm wave hot path allocated — arena regression?");
     }
+    let (pipe_wps, pipe_allocs) = pipelined_hot_path(&msgs, &buckets, k, vocab, iters)?;
+    println!(
+        "  pipelined : {pipe_wps:>9.1} waves/s over {iters} warm waves  \
+         (allocs/wave: coordinator {pipe_allocs}{})",
+        if alloc_track::enabled() { "" } else { "; tracking off" }
+    );
+    if alloc_track::enabled() && pipe_allocs > 0 {
+        log::warn!("warm pipelined wave allocated on the coordinator side — regression?");
+    }
+
     let mut o = Json::obj();
     o.insert("iters", Json::Num(iters as f64));
     o.insert("waves_per_sec", Json::Num(waves_per_sec));
     o.insert("assembly_allocs_per_wave", Json::Num(assembly_allocs as f64));
     o.insert("verify_allocs_per_wave", Json::Num(verify_allocs as f64));
     o.insert("frame_parse_allocs", Json::Num(parse_allocs as f64));
+    o.insert("pipelined_waves_per_sec", Json::Num(pipe_wps));
+    o.insert("pipelined_allocs_per_wave", Json::Num(pipe_allocs as f64));
     Ok(o)
+}
+
+/// The two-stage software pipeline in isolation: while the
+/// [`VerifyStage`] runs wave i's forward on its own thread (and its own
+/// verifier instance), the bench thread assembles wave i+1 into the
+/// second arena, then swaps buffers at the handoff. Returns steady-state
+/// waves/s and the coordinator-side allocations of one warm wave
+/// (assemble + handoff round-trip; the stage thread's counter is its
+/// own and the forward is arena'd regardless).
+fn pipelined_hot_path(
+    msgs: &[DraftMsg],
+    buckets: &[(usize, usize)],
+    k: usize,
+    vocab: usize,
+    iters: u64,
+) -> Result<(f64, u64)> {
+    let mut stage = VerifyStage::spawn(mock_engine(), "qwen", "bench-verify-stage")?;
+    // Double-buffered arenas: one pair in flight on the stage, one
+    // assembling here. Cold waves grow both to steady state.
+    let mut arena = WaveArena::new();
+    let mut out = VerifyOutput::default();
+    let mut back = WaveArena::new();
+    build_verify_request_into(msgs, buckets, k, vocab, &mut arena)?;
+    build_verify_request_into(msgs, buckets, k, vocab, &mut back)?;
+    stage.submit(back, VerifyOutput::default());
+
+    // One warm pipelined wave under the counting allocator: next-wave
+    // assembly plus the wait/submit buffer swap must not touch the heap.
+    let (res, allocs) = alloc_track::measure(|| -> Result<()> {
+        build_verify_request_into(msgs, buckets, k, vocab, &mut arena)?;
+        let (a, o, r) = stage.wait_done().expect("wave in flight");
+        r?;
+        stage.submit(std::mem::replace(&mut arena, a), std::mem::replace(&mut out, o));
+        Ok(())
+    });
+    res?;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        build_verify_request_into(msgs, buckets, k, vocab, &mut arena)?;
+        let (a, o, r) = stage.wait_done().expect("wave in flight");
+        r?;
+        stage.submit(std::mem::replace(&mut arena, a), std::mem::replace(&mut out, o));
+    }
+    let (_, _, r) = stage.wait_done().expect("wave in flight");
+    r?;
+    let secs = t0.elapsed().as_secs_f64().max(1e-12);
+    Ok((iters as f64 / secs, allocs))
 }
 
 /// This process's peak resident set (`VmHWM`) in MiB, read from
@@ -354,6 +420,31 @@ pub fn diff_against_baseline(new: &Json, baseline_path: &str) -> Result<()> {
             regressions.push(format!("{id} ({:.1}%)", 100.0 * (ratio - 1.0)));
         }
     }
+    // Cumulative view: the same table against the fixed PR 6 anchor in
+    // the baseline's directory (print-only — the gate above is always
+    // against the rolling baseline). Silently skipped when the anchor is
+    // absent or is itself the baseline.
+    let anchor = std::path::Path::new(baseline_path).with_file_name(CUMULATIVE_ANCHOR);
+    if anchor != std::path::Path::new(baseline_path) {
+        if let Some(old_doc) =
+            fs::read_to_string(&anchor).ok().and_then(|t| perfjson::parse(&t).ok())
+        {
+            println!("bench: cumulative delta vs {}", anchor.display());
+            for &id in BENCH_PRESETS {
+                let key = format!("presets.{id}.waves_per_sec");
+                let (Some(old), Some(cur)) = (
+                    old_doc.path(&key).and_then(Json::as_f64),
+                    new.path(&key).and_then(Json::as_f64),
+                ) else {
+                    continue;
+                };
+                println!(
+                    "  {id:>8}: waves/s {old:>9.1} -> {cur:>9.1}  ({:+.1}% cumulative)",
+                    100.0 * (cur / old.max(1e-12) - 1.0)
+                );
+            }
+        }
+    }
     if !regressions.is_empty() {
         return Err(anyhow!(
             "wave throughput regressed >{:.0}% on: {}",
@@ -506,12 +597,45 @@ mod tests {
     fn hot_path_bench_runs_and_reports_zero_allocs() {
         let o = hot_path_bench(3).unwrap();
         assert!(o.path("waves_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(o.path("pipelined_waves_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
         if alloc_track::enabled() {
-            for key in
-                ["assembly_allocs_per_wave", "verify_allocs_per_wave", "frame_parse_allocs"]
-            {
+            for key in [
+                "assembly_allocs_per_wave",
+                "verify_allocs_per_wave",
+                "frame_parse_allocs",
+                "pipelined_allocs_per_wave",
+            ] {
                 assert_eq!(o.path(key).and_then(Json::as_f64), Some(0.0), "{key}");
             }
+        }
+    }
+
+    /// The tentpole's hot-path claim in isolation: a *warm* pipelined
+    /// wave — next-wave assembly plus the stage handoff round-trip — is
+    /// allocation-free on the coordinator thread, arena capacity
+    /// shuttling between the two sides by move.
+    #[test]
+    fn warm_pipelined_wave_is_allocation_free() {
+        let (vocab, k) = (256usize, 8usize);
+        let factory = mock_engine();
+        let buckets = factory.make_verifier("qwen").unwrap().buckets();
+        let msgs: Vec<DraftMsg> = (0..4u32)
+            .map(|i| DraftMsg {
+                client_id: i,
+                round: 0,
+                prefix: vec![1, 2, 3],
+                prompt_len: 3,
+                draft: vec![10 + i as u8; 4],
+                parents: Vec::new(),
+                q_probs: vec![1.0 / vocab as f32; 4 * vocab],
+                new_request: false,
+                draft_wall_ns: 0,
+            })
+            .collect();
+        let (wps, allocs) = pipelined_hot_path(&msgs, &buckets, k, vocab, 8).unwrap();
+        assert!(wps > 0.0);
+        if alloc_track::enabled() {
+            assert_eq!(allocs, 0, "warm pipelined wave allocated");
         }
     }
 }

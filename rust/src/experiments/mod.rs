@@ -118,6 +118,8 @@ COMMANDS
                                     --rebalance-every <waves> --churn
                                     --trace <file.json> --slo <waves>
                                     --arrival poisson:<gap>|bursty:<gap>x<burst>
+                                    --pipelined (overlap assembly with verify;
+                                    bit-identical output, off by default)
   quickstart single client speculative vs autoregressive speedup
   fig2       goodput estimation fidelity (paper Fig 2)   --out results
   fig3       wall-time decomposition   (paper Fig 3)     --out results

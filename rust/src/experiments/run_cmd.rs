@@ -79,6 +79,9 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
     if let Some(shape) = args.get("spec-shape") {
         s.spec_shape = shape.parse().map_err(|e| anyhow!("--spec-shape: {e}"))?;
     }
+    if args.flag("pipelined") {
+        s.pipelined = true;
+    }
     // `--churn` layers the standard demo schedule (one join at rounds/3,
     // one departure at 2·rounds/3) onto whatever scenario was selected.
     if args.flag("churn") && s.churn.is_empty() {

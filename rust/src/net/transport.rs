@@ -250,10 +250,69 @@ pub fn sharded_channel_transport(
 
 // -------------------------------------------------------------------- tcp
 
-fn write_frame(stream: &mut TcpStream, msg: &Message) -> Result<()> {
-    let frame = msg.encode();
-    stream.write_all(&frame).context("tcp write")?;
+/// Encode `msg` into the recycled `wbuf` and flush with a single
+/// `write_all`. Every sender (verdict tx closures, the client port) owns
+/// a persistent `wbuf`, so steady-state sends never allocate and each
+/// frame hits the socket in one syscall instead of one per `encode`'d
+/// vector.
+fn write_frame(stream: &mut TcpStream, msg: &Message, wbuf: &mut Vec<u8>) -> Result<()> {
+    wbuf.clear();
+    msg.encode_into(wbuf);
+    stream.write_all(wbuf).context("tcp write")?;
     Ok(())
+}
+
+/// Reassembles length-prefixed frames from arbitrary read chunks — the
+/// receive half of the coalescing discipline. A reader thread feeds it
+/// whatever one `read` returned (which may split a frame mid-length-
+/// prefix or mid-payload, or carry many coalesced frames) and drains
+/// every complete frame before reading again, preserving the stream's
+/// FIFO order.
+#[derive(Debug, Default)]
+pub struct FrameAccumulator {
+    buf: Vec<u8>,
+    /// Start of unconsumed bytes within `buf`.
+    pos: usize,
+}
+
+impl FrameAccumulator {
+    pub fn new() -> FrameAccumulator {
+        FrameAccumulator::default()
+    }
+
+    /// Append one read's bytes. The consumed prefix is compacted away
+    /// first, so the buffer's high-water capacity tracks the largest
+    /// burst of in-flight bytes, not the whole stream.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, in arrival order. `Ok(None)` means
+    /// more bytes are needed; a malformed or oversized frame is an error
+    /// (the connection is beyond recovery — framing is lost).
+    pub fn next_frame(&mut self) -> Result<Option<Message>> {
+        let avail = self.buf.len() - self.pos;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(
+            self.buf[self.pos..self.pos + 4].try_into().expect("4-byte slice"),
+        ) as usize;
+        if len > 64 << 20 {
+            return Err(anyhow!("tcp frame too large: {len}"));
+        }
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let payload = &self.buf[self.pos + 4..self.pos + 4 + len];
+        let msg = Message::decode(payload)?;
+        self.pos += 4 + len;
+        Ok(Some(msg))
+    }
 }
 
 /// Read one length-prefixed frame into `buf` (reused across calls — within
@@ -274,11 +333,12 @@ fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Message> {
 struct TcpPort {
     stream: TcpStream,
     buf: Vec<u8>,
+    wbuf: Vec<u8>,
 }
 
 impl ClientPort for TcpPort {
     fn send(&mut self, msg: &Message) -> Result<()> {
-        write_frame(&mut self.stream, msg)
+        write_frame(&mut self.stream, msg, &mut self.wbuf)
     }
 
     fn recv(&mut self) -> Result<Message> {
@@ -315,30 +375,47 @@ impl TcpTransport {
         let mut reader_handles = Vec::new();
         for (i, s) in server_streams.into_iter().enumerate() {
             let mut writer = s.try_clone().context("clone stream")?;
-            txs.push(Box::new(move |m: &Message| write_frame(&mut writer, m)));
+            let mut wbuf = Vec::new();
+            txs.push(Box::new(move |m: &Message| write_frame(&mut writer, m, &mut wbuf)));
             let fan = fan_tx.clone();
             let mut reader = s;
             reader_handles.push(std::thread::spawn(move || {
-                let mut buf = Vec::new();
-                loop {
-                    match read_frame(&mut reader, &mut buf) {
-                        Ok(Message::Shutdown) => {
-                            let _ = fan.send((i, Message::Shutdown));
-                            break;
-                        }
-                        Ok(m) => {
-                            if fan.send((i, m)).is_err() {
-                                break;
+                // Batch-drain: one read may carry many coalesced frames;
+                // forward them all before touching the socket again (a
+                // client's frames stay in FIFO order — one stream, one
+                // accumulator).
+                let mut acc = FrameAccumulator::new();
+                let mut chunk = [0u8; 16 * 1024];
+                'conn: loop {
+                    let n = match reader.read(&mut chunk) {
+                        Ok(0) | Err(_) => break, // peer closed
+                        Ok(n) => n,
+                    };
+                    acc.feed(&chunk[..n]);
+                    loop {
+                        match acc.next_frame() {
+                            Ok(Some(Message::Shutdown)) => {
+                                let _ = fan.send((i, Message::Shutdown));
+                                break 'conn;
                             }
+                            Ok(Some(m)) => {
+                                if fan.send((i, m)).is_err() {
+                                    break 'conn;
+                                }
+                            }
+                            Ok(None) => break, // need more bytes
+                            Err(_) => break 'conn, // framing lost
                         }
-                        Err(_) => break, // peer closed
                     }
                 }
             }));
         }
         let ports = client_streams
             .into_iter()
-            .map(|s| Box::new(TcpPort { stream: s, buf: Vec::new() }) as Box<dyn ClientPort>)
+            .map(|s| {
+                Box::new(TcpPort { stream: s, buf: Vec::new(), wbuf: Vec::new() })
+                    as Box<dyn ClientPort>
+            })
             .collect();
         Ok(TcpTransport { server: ServerSide { rx: fan_rx, txs }, ports, reader_handles })
     }
@@ -620,6 +697,79 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(counts, vec![per_client; n]);
+    }
+
+    #[test]
+    fn frame_accumulator_handles_byte_at_a_time_feeds() {
+        // Worst-case short reads: one byte per feed, frames completing
+        // only at their exact final byte (including mid-length-prefix
+        // splits).
+        let msgs =
+            [draft(0, 0), Message::Shutdown, draft(0, 1), draft(0, 2), Message::Shutdown];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            m.encode_into(&mut wire);
+        }
+        let mut acc = FrameAccumulator::new();
+        let mut got = Vec::new();
+        for &b in &wire {
+            acc.feed(&[b]);
+            while let Some(m) = acc.next_frame().unwrap() {
+                got.push(m);
+            }
+        }
+        assert_eq!(got.as_slice(), msgs.as_slice());
+        assert!(acc.next_frame().unwrap().is_none(), "stream fully consumed");
+    }
+
+    #[test]
+    fn frame_accumulator_batch_drains_one_feed() {
+        // The batch-drain shape: many frames arrive in a single read and
+        // must all come out, in order, before the next feed.
+        let msgs: Vec<Message> = (0..10).map(|r| draft(3, r)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            m.encode_into(&mut wire);
+        }
+        let mut acc = FrameAccumulator::new();
+        acc.feed(&wire);
+        let mut got = Vec::new();
+        while let Some(m) = acc.next_frame().unwrap() {
+            got.push(m);
+        }
+        assert_eq!(got, msgs);
+    }
+
+    #[test]
+    fn frame_accumulator_rejects_oversized_and_malformed_frames() {
+        // Oversized length prefix: framing is beyond recovery.
+        let mut acc = FrameAccumulator::new();
+        acc.feed(&((64u32 << 20) + 1).to_le_bytes());
+        assert!(acc.next_frame().is_err());
+        // Malformed payload under a valid length prefix.
+        let mut acc = FrameAccumulator::new();
+        acc.feed(&2u32.to_le_bytes());
+        acc.feed(&[99, 99]); // unknown tag + trailing byte
+        assert!(acc.next_frame().is_err());
+    }
+
+    #[test]
+    fn tcp_batch_drain_preserves_per_client_order() {
+        // A burst of frames from one client — likely coalesced into few
+        // reads on the loopback socket — arrives in round order.
+        let mut t = TcpTransport::new(1).unwrap();
+        let rounds = 50u64;
+        for r in 0..rounds {
+            t.ports[0].send(&draft(0, r)).unwrap();
+        }
+        for expect in 0..rounds {
+            let (id, msg) = t.server.rx.recv().unwrap();
+            assert_eq!(id, 0);
+            match msg {
+                Message::Draft(d) => assert_eq!(d.round, expect, "reordered"),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
     }
 
     #[test]

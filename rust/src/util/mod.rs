@@ -9,7 +9,9 @@ pub mod prng;
 pub mod proptest;
 pub mod stats;
 pub mod timer;
+pub mod wakeup;
 
 pub use prng::Rng;
 pub use stats::{jain_index, p50_p95_p99, percentile, MovingAvg, RunningStat};
 pub use timer::Stopwatch;
+pub use wakeup::Wakeup;

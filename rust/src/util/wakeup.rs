@@ -1,0 +1,119 @@
+//! Condvar-backed wakeup for idle coordinator loops.
+//!
+//! The pool driver and the shard loops used to poll with a fixed 2ms
+//! sleep tick: an arrival landing just after a shard went idle waited out
+//! the rest of the tick before anyone looked. [`Wakeup`] replaces that
+//! with a sequence-stamped condvar so a notified waiter unparks in
+//! microseconds, while keeping the timeout as a liveness backstop (a
+//! waiter still wakes on its own to re-check stop flags and publish
+//! freshness).
+//!
+//! The sequence counter makes the primitive lost-wakeup-free without any
+//! allocation: a waiter snapshots [`Wakeup::seq`] *before* re-checking
+//! the state it sleeps on, then parks in [`Wakeup::wait_timeout`] with
+//! that snapshot — a notification racing the state check bumps the
+//! counter, so the wait returns immediately instead of sleeping through
+//! the event.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// A lost-wakeup-free notification counter (see module docs).
+#[derive(Debug, Default)]
+pub struct Wakeup {
+    seq: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Wakeup {
+    pub fn new() -> Wakeup {
+        Wakeup::default()
+    }
+
+    /// Wake every current and future waiter whose snapshot predates this
+    /// call.
+    pub fn notify(&self) {
+        let mut seq = self.seq.lock().expect("wakeup lock");
+        *seq = seq.wrapping_add(1);
+        drop(seq);
+        self.cv.notify_all();
+    }
+
+    /// Snapshot the notification counter. Take this *before* checking the
+    /// condition you are about to sleep on.
+    pub fn seq(&self) -> u64 {
+        *self.seq.lock().expect("wakeup lock")
+    }
+
+    /// Park until the counter moves past `last_seen` or `dur` elapses,
+    /// whichever comes first. Returns the counter at wake (pass it back
+    /// as the next `last_seen` to wait for the *next* notification).
+    pub fn wait_timeout(&self, last_seen: u64, dur: Duration) -> u64 {
+        let guard = self.seq.lock().expect("wakeup lock");
+        let (guard, _timed_out) = self
+            .cv
+            .wait_timeout_while(guard, dur, |seq| *seq == last_seen)
+            .expect("wakeup lock");
+        *guard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn notify_advances_seq_and_unblocks_stale_snapshot() {
+        let w = Wakeup::new();
+        let s0 = w.seq();
+        w.notify();
+        assert_eq!(w.seq(), s0 + 1);
+        // A snapshot taken before the notify returns without sleeping.
+        let t0 = Instant::now();
+        let s1 = w.wait_timeout(s0, Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        assert_eq!(s1, s0 + 1);
+    }
+
+    #[test]
+    fn wait_times_out_without_notification() {
+        let w = Wakeup::new();
+        let seen = w.seq();
+        let t0 = Instant::now();
+        let after = w.wait_timeout(seen, Duration::from_millis(5));
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert_eq!(after, seen);
+    }
+
+    /// The point of the primitive: an idle waiter observes a notification
+    /// in well under one former 2ms sleep tick. Measured notify→wake on a
+    /// parked thread, min over repeated trials (min, not mean, so a noisy
+    /// CI runner preempting one trial cannot fail the assertion — the
+    /// claim is about the primitive's latency, not the scheduler's).
+    #[test]
+    fn parked_waiter_wakes_well_under_former_tick() {
+        const TRIALS: usize = 20;
+        let mut best = Duration::MAX;
+        for _ in 0..TRIALS {
+            let w = Arc::new(Wakeup::new());
+            let w2 = w.clone();
+            let seen = w.seq();
+            let waiter = std::thread::spawn(move || {
+                w2.wait_timeout(seen, Duration::from_secs(5));
+                Instant::now()
+            });
+            // Give the waiter time to park before notifying.
+            std::thread::sleep(Duration::from_millis(1));
+            let t0 = Instant::now();
+            w.notify();
+            let woke = waiter.join().expect("waiter");
+            best = best.min(woke.saturating_duration_since(t0));
+        }
+        assert!(
+            best < Duration::from_micros(500),
+            "best notify→wake latency {best:?} not well under the former 2ms tick"
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! Pipelined-execution parity: `--pipelined` overlaps next-wave assembly
+//! with verification on a stage thread, but every observable output must
+//! stay bit-identical to the serial wave loop — same RNG-determined
+//! per-client fields, same draft-side accounting, same request records,
+//! and byte-identical CSVs once the (never replayable) wall-clock timing
+//! columns are zeroed. The matrix covers sync/async, M ∈ {1, 4}, chain
+//! and tree speculation, and trace-driven request arrivals.
+//!
+//! Parity configurations pin wave composition: `min_wave_fill = 0` (full
+//! membership per wave) with a generous batching window, and shard
+//! rebalancing off for the pool cases — wave *content* must not depend on
+//! arrival timing, or serial-vs-pipelined differences in drain timing
+//! would show up as (legitimate) composition drift rather than a bug.
+
+use std::sync::Arc;
+
+use goodspeed::configsys::{CoordMode, Policy, Scenario, SpecShape};
+use goodspeed::coordinator::{Cluster, RunOutcome, Transport};
+use goodspeed::metrics::csv::write_rounds;
+use goodspeed::runtime::{EngineFactory, MockEngineFactory, MockWorld};
+use goodspeed::util::proptest;
+
+fn factory() -> Arc<dyn EngineFactory> {
+    Arc::new(MockEngineFactory::new(MockWorld {
+        vocab: 32,
+        max_seq: 256,
+        sharpness: 3.0,
+        seed: 17,
+    }))
+}
+
+fn serve(s: Scenario) -> RunOutcome {
+    Cluster::builder(s)
+        .policy(Policy::GoodSpeed)
+        .transport(Transport::Channel)
+        .engine(factory())
+        .start()
+        .expect("start")
+        .wait()
+        .expect("run")
+}
+
+/// Run `base` serially and pipelined, then assert bit-identity on every
+/// deterministic output surface.
+fn assert_pipelined_parity(label: &str, base: Scenario) {
+    let mut serial = serve(base.clone());
+    let piped = {
+        let mut s = base;
+        s.pipelined = true;
+        s
+    };
+    let mut piped = serve(piped);
+
+    assert_eq!(serial.recorder.rounds.len(), piped.recorder.rounds.len(), "{label}: wave count");
+    for (a, b) in serial.recorder.rounds.iter().zip(&piped.recorder.rounds) {
+        assert_eq!(a.round, b.round, "{label}");
+        assert_eq!(a.shard, b.shard, "{label}");
+        assert_eq!(a.clients.len(), b.clients.len(), "{label}: wave {}", a.round);
+        for (ca, cb) in a.clients.iter().zip(&b.clients) {
+            assert_eq!(ca.client_id, cb.client_id, "{label}: wave {}", a.round);
+            assert_eq!(ca.s_used, cb.s_used, "{label}: wave {}", a.round);
+            assert_eq!(ca.accepted, cb.accepted, "{label}: wave {}", a.round);
+            assert_eq!(ca.goodput, cb.goodput, "{label}: wave {}", a.round);
+            assert_eq!(ca.spec_depth, cb.spec_depth, "{label}: wave {}", a.round);
+            assert_eq!(ca.next_alloc, cb.next_alloc, "{label}: wave {}", a.round);
+            assert_eq!(ca.mean_ratio.to_bits(), cb.mean_ratio.to_bits(), "{label}");
+            assert_eq!(ca.alpha_hat.to_bits(), cb.alpha_hat.to_bits(), "{label}");
+            assert_eq!(ca.x_beta.to_bits(), cb.x_beta.to_bits(), "{label}");
+        }
+    }
+    // Draft-side accounting: every client drafted and accepted the same
+    // token stream (the verdict RNG draws are part of the wave discipline).
+    assert_eq!(serial.draft_stats.len(), piped.draft_stats.len(), "{label}");
+    for (da, db) in serial.draft_stats.iter().zip(&piped.draft_stats) {
+        assert_eq!(da.rounds, db.rounds, "{label}");
+        assert_eq!(da.tokens_drafted, db.tokens_drafted, "{label}");
+        assert_eq!(da.tokens_accepted, db.tokens_accepted, "{label}");
+        assert_eq!(da.requests_completed, db.requests_completed, "{label}");
+    }
+    // Trace-driven runs: per-request lifecycle records must match too.
+    assert_eq!(serial.recorder.requests.len(), piped.recorder.requests.len(), "{label}");
+    for (ra, rb) in serial.recorder.requests.iter().zip(&piped.recorder.requests) {
+        assert_eq!(ra.client, rb.client, "{label}");
+        assert_eq!(ra.arrival, rb.arrival, "{label}");
+        assert_eq!(ra.first_token, rb.first_token, "{label}");
+        assert_eq!(ra.completion, rb.completion, "{label}");
+        assert_eq!(ra.tokens, rb.tokens, "{label}");
+        assert_eq!(ra.slo_waves, rb.slo_waves, "{label}");
+        assert_eq!(ra.completed, rb.completed, "{label}");
+        assert_eq!(ra.met, rb.met, "{label}");
+    }
+    // CSV bytes (timing columns zeroed — wall clocks are not replayable,
+    // and under the pipeline `verify_ns` measures overlap wall time).
+    let zero_ns = |out: &mut RunOutcome| {
+        for r in out.recorder.rounds.iter_mut() {
+            r.recv_ns = 0;
+            r.verify_ns = 0;
+            r.send_ns = 0;
+        }
+    };
+    zero_ns(&mut serial);
+    zero_ns(&mut piped);
+    let dir = std::env::temp_dir().join(format!("goodspeed_pipeparity_{label}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pa = dir.join("serial.csv");
+    let pb = dir.join("pipelined.csv");
+    write_rounds(&pa, &serial.recorder).unwrap();
+    write_rounds(&pb, &piped.recorder).unwrap();
+    assert_eq!(
+        std::fs::read(&pa).unwrap(),
+        std::fs::read(&pb).unwrap(),
+        "{label}: CSV bytes must be identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Deterministic-composition scenario for the parity matrix: full-fill
+/// waves, generous window, rebalancing off.
+fn parity_scenario(preset: &str, mode: CoordMode, m: usize, rounds: u64) -> Scenario {
+    let mut s = Scenario::preset(preset).unwrap();
+    s.rounds = rounds;
+    s.coord_mode = mode;
+    s.num_verifiers = m;
+    s.min_wave_fill = 0;
+    s.batch_window_us = 20_000;
+    s.shard_rebalance_every = 0;
+    s.validate().expect("parity scenario must validate");
+    s
+}
+
+/// Property: serial and pipelined single-verifier runs are bit-identical
+/// across random seeds, run lengths, and both speculation shapes.
+#[test]
+fn prop_pipelined_serial_parity_single_verifier() {
+    for mode in [CoordMode::Sync, CoordMode::Async] {
+        proptest::check(&format!("pipeline_parity_m1_{}", mode.name()), 4, |rng| {
+            let mut s = parity_scenario("smoke", mode, 1, 12 + rng.below(10));
+            s.seed = rng.next_u64();
+            s.links = Scenario::default_links(s.num_clients, s.seed);
+            if rng.bool(0.5) {
+                s.spec_shape = SpecShape::Tree { arity: 2, depth: 4 };
+            }
+            s.validate().expect("randomized parity scenario must validate");
+            assert_pipelined_parity(&format!("m1_{}", mode.name()), s);
+        });
+    }
+}
+
+#[test]
+fn pipelined_parity_sharded_pool_sync() {
+    assert_pipelined_parity("pool_sync", parity_scenario("sharded", CoordMode::Sync, 4, 16));
+}
+
+#[test]
+fn pipelined_parity_sharded_pool_async() {
+    assert_pipelined_parity("pool_async", parity_scenario("sharded", CoordMode::Async, 4, 16));
+}
+
+#[test]
+fn pipelined_parity_tree_preset() {
+    assert_pipelined_parity("tree", parity_scenario("tree", CoordMode::Sync, 1, 20));
+}
+
+#[test]
+fn pipelined_parity_trace_requests() {
+    let mut s = parity_scenario("trace", CoordMode::Sync, 1, 120);
+    assert!(s.trace.is_some(), "trace preset carries arrivals");
+    // Keep the preset's tighter batching window: request arrivals are
+    // wave-indexed, so composition stays deterministic regardless.
+    s.batch_window_us = 500;
+    assert_pipelined_parity("trace", s);
+}
