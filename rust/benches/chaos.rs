@@ -1,0 +1,198 @@
+//! Chaos benchmark: goodput-recovery envelopes under a shard crash.
+//!
+//! Runs the `chaos` preset shape — the highest verifier shard crashes a
+//! third of the way in and is re-admitted at the halfway mark — through
+//! both the live serving cluster (session API, mock engine) and the
+//! analytic simulator on the *same* fault schedule and wave clock, and
+//! checks:
+//!
+//! * the live cluster survives: the global stop never latches on the
+//!   dead shard, the crashed shard's clients migrate to the survivor and
+//!   keep serving, and the full verification budget is delivered;
+//! * both paths log the crash→recover lifecycle with the same
+//!   time-to-recover;
+//! * the analytic per-sweep token series re-enters a band around the
+//!   pre-fault steady state (goodput ≥ 75%, Jain ≥ 90%) after the crash
+//!   and again after the heal — the recovery envelope;
+//! * live and analytic steady-state goodput-per-verdict agree.
+//!
+//!     cargo bench --bench chaos [-- --quick]
+
+use goodspeed::chaos::{FaultEvent, FaultKind, FaultSchedule};
+use goodspeed::configsys::{Policy, Scenario};
+use goodspeed::coordinator::Transport;
+use goodspeed::experiments::{mock_engine, serve_once};
+use goodspeed::simulate::analytic::run_sharded;
+use goodspeed::util::stats::jain_index;
+
+mod common;
+
+/// The chaos shape scaled to `rounds`: crash shard 1 at rounds/3,
+/// re-admit at rounds/2 (the preset's schedule, re-timed; see
+/// `FaultSchedule::demo` for why recovery sits at the halfway mark).
+fn scenario(rounds: u64) -> Scenario {
+    let mut s = Scenario::preset("chaos").expect("preset");
+    s.rounds = rounds;
+    s.chaos = FaultSchedule {
+        events: vec![FaultEvent {
+            at_wave: rounds / 3,
+            kind: FaultKind::ShardCrash {
+                shard: s.num_verifiers - 1,
+                recover_wave: Some(rounds / 2),
+            },
+        }],
+    };
+    s
+}
+
+/// Mean aggregate tokens per sweep and Jain's index over per-client
+/// token totals, over the sweep window `[lo, hi)`.
+fn window_stats(series: &[Vec<u64>], lo: usize, hi: usize) -> (f64, f64) {
+    let hi = hi.min(series.len());
+    if lo >= hi {
+        return (0.0, 0.0);
+    }
+    let slots = series[0].len();
+    let mut per = vec![0.0f64; slots];
+    for row in &series[lo..hi] {
+        for (i, &g) in row.iter().enumerate() {
+            per[i] += g as f64;
+        }
+    }
+    let total: f64 = per.iter().sum();
+    (total / (hi - lo) as f64, jain_index(&per))
+}
+
+/// Sweeps after `from` until a `w`-wide window re-enters the band around
+/// the pre-fault steady state (goodput ≥ 75%, Jain ≥ 90%); `None` if the
+/// series ends first.
+fn reentry(series: &[Vec<u64>], from: usize, w: usize, g_pre: f64, j_pre: f64) -> Option<usize> {
+    let mut t = from;
+    while t + w <= series.len() {
+        let (g, j) = window_stats(series, t, t + w);
+        if g >= 0.75 * g_pre && j >= 0.90 * j_pre {
+            return Some(t - from);
+        }
+        t += 1;
+    }
+    None
+}
+
+fn main() {
+    goodspeed::util::logger::init();
+    let rounds = common::rounds(90, 180);
+    let s = scenario(rounds);
+    let (crash, recover) = (rounds / 3, rounds / 2);
+    let victim = s.num_verifiers - 1;
+    println!(
+        "== chaos bench: {} clients / {} shards, crash shard {victim} @{crash}, \
+         recover @{recover}  ({rounds} waves) ==",
+        s.num_clients, s.num_verifiers
+    );
+
+    // Live survival: the pool must absorb the crash without latching the
+    // global stop — budget delivered, every client served, lifecycle
+    // logged with the schedule's exact time-to-recover.
+    let live = serve_once(
+        s.clone(),
+        Policy::GoodSpeed,
+        Transport::Channel,
+        false,
+        mock_engine(),
+    )
+    .expect("live chaos run");
+    let part = live.recorder.participation().to_vec();
+    let delivered: u64 = part.iter().sum();
+    assert!(
+        delivered >= rounds * s.num_clients as u64,
+        "budget not delivered: {delivered} verdicts"
+    );
+    assert!(part.iter().all(|&p| p > 0), "every client must keep serving: {part:?}");
+    let kinds: Vec<&str> = live.recorder.faults.iter().map(|f| f.kind.as_str()).collect();
+    assert!(
+        kinds.contains(&"shard-crash") && kinds.contains(&"shard-recover"),
+        "live fault log must carry the crash lifecycle: {kinds:?}"
+    );
+    assert_eq!(live.recorder.time_to_recover, vec![recover - crash]);
+    let pool = live.pool.as_ref().expect("chaos preset runs the sharded pool");
+    assert!(pool.migrations >= 1, "the crash must migrate clients to the survivor");
+    for f in &live.recorder.faults {
+        println!("  wave {:>4} shard {}: {:<13} {}", f.wave, f.shard, f.kind, f.detail);
+    }
+    println!(
+        "  live: {delivered} verdicts, {} migrations, time-to-recover {:?} waves",
+        pool.migrations, live.recorder.time_to_recover
+    );
+
+    // Analytic mirror: same schedule, same pooled clock.
+    let out = run_sharded(&s, Policy::GoodSpeed);
+    let sim_kinds: Vec<String> = out.faults().iter().map(|f| f.kind.clone()).collect();
+    assert!(
+        sim_kinds.iter().any(|k| k == "shard-crash")
+            && sim_kinds.iter().any(|k| k == "shard-recover"),
+        "analytic fault log must carry the crash lifecycle: {sim_kinds:?}"
+    );
+    assert_eq!(out.time_to_recover(), vec![recover - crash]);
+
+    // Recovery envelope over the analytic per-sweep token series. Sweep
+    // indices: the pooled clock advances one wave per sweep while all M
+    // shards are live, but only (M−1)/M as fast while one is fenced, so
+    // the heal lands at crash + M·(recover − crash)/(M−1) sweeps.
+    let m = s.num_verifiers as u64;
+    let crash_sweep = crash as usize;
+    let recover_sweep = (crash + (recover - crash) * m / (m - 1)) as usize;
+    let w = ((rounds / 8) as usize).max(8);
+    let series = &out.wave_tokens;
+    assert!(
+        series.len() >= recover_sweep + w,
+        "series too short to window the heal: {} sweeps",
+        series.len()
+    );
+    let (g_pre, j_pre) = window_stats(series, crash_sweep.saturating_sub(w), crash_sweep);
+    println!(
+        "\npre-fault steady state (window {w}): goodput {g_pre:.1} tokens/sweep, \
+         jain {j_pre:.4}"
+    );
+    let after_crash = reentry(series, crash_sweep, w, g_pre, j_pre);
+    let after_heal = reentry(series, recover_sweep, w, g_pre, j_pre);
+    assert!(
+        after_crash.is_some(),
+        "goodput/fairness never re-entered the band after the crash"
+    );
+    assert!(
+        after_heal.is_some(),
+        "goodput/fairness never re-entered the band after the heal"
+    );
+    let (dc, dh) = (after_crash.unwrap(), after_heal.unwrap());
+    println!(
+        "recovery envelope: band re-entered {dc} sweeps after the crash, \
+         {dh} sweeps after the heal (bound 3W = {})",
+        3 * w
+    );
+
+    // Cross-check: steady-state tokens per verdict, live vs analytic.
+    let live_tokens: f64 = live.recorder.cum_goodput().iter().sum();
+    let live_gpv = live_tokens / delivered as f64;
+    let sim_gpv = out.goodput_per_verdict();
+    let gap = (live_gpv - sim_gpv).abs() / sim_gpv.max(1e-12);
+    println!(
+        "goodput/verdict: live {live_gpv:.3}  analytic {sim_gpv:.3}  gap {:.1}%",
+        100.0 * gap
+    );
+    assert!(gap <= 0.35, "live and analytic goodput/verdict diverged: {gap:.3}");
+
+    let envelope_ok = dc <= 3 * w && dh <= 3 * w;
+    if envelope_ok && gap <= 0.25 {
+        println!(
+            "PASS: cluster survived the crash, recovery envelope within 3W on both \
+             edges, live≈analytic within 25%"
+        );
+    } else {
+        println!(
+            "WARN: expected band re-entry within 3W={} sweeps (crash {dc}, heal {dh}) \
+             and live≈analytic within 25% (gap {:.1}%)",
+            3 * w,
+            100.0 * gap
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Chaos engineering: deterministic, seed-forked fault injection.
+//!
+//! The schedule types ([`FaultSchedule`], [`FaultEvent`], [`FaultKind`])
+//! describe *what* breaks and *when* on the shared wave clock; the
+//! survival machinery lives where the system already makes membership
+//! decisions — `coordinator/pool.rs` fences crashed shards and migrates
+//! their clients to survivors, `simulate/analytic.rs` mirrors the same
+//! schedule, and `benches/chaos.rs` asserts the goodput/fairness
+//! recovery envelopes around each fault.
+
+mod schedule;
+
+pub use schedule::{flapping_churn, FaultEvent, FaultKind, FaultOp, FaultSchedule};

@@ -1,0 +1,347 @@
+//! Deterministic fault-injection schedules.
+//!
+//! A [`FaultSchedule`] pins faults to points in virtual time — the same
+//! wave clock [`ChurnEvent::at_wave`](crate::configsys::ChurnEvent) uses
+//! (in pooled runs: global waves ÷ M) — so the live cluster and the
+//! analytic simulator inject the *same* faults at the *same* boundaries
+//! and their recovery envelopes stay comparable. Everything here is a
+//! pure description: the recovery machinery lives in
+//! `coordinator/pool.rs` (crash fencing + client migration) and
+//! `simulate/analytic.rs` (the mirrored schedule).
+//!
+//! Four fault kinds (§ DESIGN.md "Fault injection & recovery"):
+//!
+//! * [`FaultKind::ShardCrash`] — a verifier shard dies at wave T and its
+//!   clients migrate to survivors; optional re-admission at recovery.
+//! * [`FaultKind::Partition`] — a client's uplink goes dark and heals.
+//! * [`FaultKind::DropBurst`] / [`FaultKind::DuplicateBurst`] — message
+//!   loss/duplication bursts on one client's stream.
+//!
+//! Adversarial *flapping clients* are not a fault kind of their own:
+//! [`flapping_churn`] compiles them down to the existing
+//! [`ChurnSchedule`] machinery, seed-forked for determinism, so both
+//! execution paths get them through code that already exists.
+
+use crate::configsys::{ChurnEvent, ChurnKind, ChurnSchedule, ClientSpec, Scenario};
+use crate::util::Rng;
+
+/// What breaks (and, where applicable, when it heals).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Verifier shard `shard` dies at the event wave. Its clients are
+    /// migrated to surviving shards via the pool's handoff mailbox;
+    /// with `recover_wave` set the shard is re-admitted there and the
+    /// rebalancer repopulates it.
+    ShardCrash { shard: usize, recover_wave: Option<u64> },
+    /// Client `client`'s uplink is partitioned from the event wave until
+    /// `heal_wave`: the analytic model inflates its round trip over the
+    /// outage window (see `net/link.rs::Link::degraded`).
+    Partition { client: usize, heal_wave: u64 },
+    /// The next `count` draft messages from `client` are dropped.
+    /// Analytic-only: the live closed loop has no retransmit, so a
+    /// dropped draft would deadlock the client — the simulator models
+    /// the stall (skipped waves) instead.
+    DropBurst { client: usize, count: u32 },
+    /// The next `count` draft messages from `client` arrive twice. The
+    /// duplicate is detected and discarded (counted, never verified
+    /// twice) on both paths.
+    DuplicateBurst { client: usize, count: u32 },
+}
+
+/// One fault pinned to a wave boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Wave boundary at which the fault strikes (applied before the wave
+    /// with this index is formed).
+    pub at_wave: u64,
+    pub kind: FaultKind,
+}
+
+/// Fault schedule for a run. Empty = no chaos, and every consumer takes
+/// the exact pre-chaos code path (bit-identical RNG streams, wire bytes,
+/// and CSV output — pinned by the existing parity tests).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    pub events: Vec<FaultEvent>,
+}
+
+/// One boundary-applied fault action: the compiled form of a
+/// [`FaultEvent`]. Recovery/heal halves become entries of their own, so
+/// consumers walk a single sorted list against their wave clock instead
+/// of tracking in-flight windows.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    Crash { shard: usize },
+    Recover { shard: usize },
+    PartitionStart { client: usize, until: u64 },
+    PartitionHeal { client: usize },
+    Drop { client: usize, count: u32 },
+    Duplicate { client: usize, count: u32 },
+}
+
+impl FaultSchedule {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events sorted by wave (stable: ties keep schedule order).
+    pub fn sorted(&self) -> Vec<FaultEvent> {
+        let mut v = self.events.clone();
+        v.sort_by_key(|e| e.at_wave);
+        v
+    }
+
+    /// Number of scheduled shard crashes.
+    pub fn crash_count(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e.kind, FaultKind::ShardCrash { .. })).count()
+    }
+
+    /// Compile to a sorted `(wave, op)` list — crash/recover and
+    /// partition/heal pairs expanded into separate entries. Both the
+    /// pool driver and the analytic simulator consume this form, which
+    /// is what keeps the two paths on one schedule and one clock.
+    pub fn compiled(&self) -> Vec<(u64, FaultOp)> {
+        let mut ops = Vec::with_capacity(self.events.len() * 2);
+        for ev in &self.events {
+            match ev.kind {
+                FaultKind::ShardCrash { shard, recover_wave } => {
+                    ops.push((ev.at_wave, FaultOp::Crash { shard }));
+                    if let Some(r) = recover_wave {
+                        ops.push((r, FaultOp::Recover { shard }));
+                    }
+                }
+                FaultKind::Partition { client, heal_wave } => {
+                    ops.push((ev.at_wave, FaultOp::PartitionStart { client, until: heal_wave }));
+                    ops.push((heal_wave, FaultOp::PartitionHeal { client }));
+                }
+                FaultKind::DropBurst { client, count } => {
+                    ops.push((ev.at_wave, FaultOp::Drop { client, count }));
+                }
+                FaultKind::DuplicateBurst { client, count } => {
+                    ops.push((ev.at_wave, FaultOp::Duplicate { client, count }));
+                }
+            }
+        }
+        ops.sort_by_key(|&(w, _)| w);
+        ops
+    }
+
+    /// The standard demo schedule (`goodspeed run --chaos`): the highest
+    /// shard crashes a third of the way in and recovers at the halfway
+    /// mark — the crash/heal shape `benches/chaos.rs` asserts envelopes
+    /// around. (Recovery sits at rounds/2, not 2·rounds/3: with a shard
+    /// fenced the pooled schedule clock advances at (M−1)/M of its
+    /// normal rate, so a later recovery could land after the budget is
+    /// already consumed.)
+    pub fn demo(scenario: &Scenario) -> FaultSchedule {
+        let shard = scenario.num_verifiers.saturating_sub(1);
+        let at = (scenario.rounds / 3).max(1);
+        let recover = (scenario.rounds / 2).max(at + 1);
+        FaultSchedule {
+            events: vec![FaultEvent {
+                at_wave: at,
+                kind: FaultKind::ShardCrash { shard, recover_wave: Some(recover) },
+            }],
+        }
+    }
+
+    /// Structural validation against the scenario's population —
+    /// [`Scenario::validate`] maps the message into its `ConfigError`.
+    pub fn validate_for(&self, num_clients: usize, num_verifiers: usize) -> Result<(), String> {
+        for ev in &self.events {
+            match ev.kind {
+                FaultKind::ShardCrash { shard, recover_wave } => {
+                    if num_verifiers < 2 {
+                        return Err(
+                            "chaos: shard crash needs num_verifiers ≥ 2 (a survivor must \
+                             exist to absorb the crashed shard's clients)"
+                                .into(),
+                        );
+                    }
+                    if shard >= num_verifiers {
+                        return Err(format!(
+                            "chaos: crash of shard {shard} but only {num_verifiers} shards exist"
+                        ));
+                    }
+                    if let Some(r) = recover_wave {
+                        if r <= ev.at_wave {
+                            return Err(format!(
+                                "chaos: shard {shard} recovery at wave {r} must come after \
+                                 its crash at wave {}",
+                                ev.at_wave
+                            ));
+                        }
+                    }
+                }
+                FaultKind::Partition { client, heal_wave } => {
+                    if client >= num_clients {
+                        return Err(format!(
+                            "chaos: partition of client {client} but only {num_clients} exist"
+                        ));
+                    }
+                    if heal_wave <= ev.at_wave {
+                        return Err(format!(
+                            "chaos: partition heal at wave {heal_wave} must come after the \
+                             partition at wave {}",
+                            ev.at_wave
+                        ));
+                    }
+                }
+                FaultKind::DropBurst { client, count }
+                | FaultKind::DuplicateBurst { client, count } => {
+                    if client >= num_clients {
+                        return Err(format!(
+                            "chaos: burst on client {client} but only {num_clients} exist"
+                        ));
+                    }
+                    if count == 0 {
+                        return Err("chaos: burst count must be ≥ 1".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Compile a flapping-client adversary into the existing churn
+/// machinery: `flaps` join/leave pairs of one client spec (client 0's
+/// model/domain), starting at `start_wave`, with up/down intervals of
+/// mean `period` waves jittered ±25% by a PRNG forked from the scenario
+/// seed (`seed ^ 0xC4A05` — disjoint from every other stream). The
+/// result is an ordinary [`ChurnSchedule`], so the live cluster and the
+/// analytic simulator both absorb the churn through code that already
+/// handles joins and drains.
+pub fn flapping_churn(
+    scenario: &Scenario,
+    flaps: usize,
+    start_wave: u64,
+    period: u64,
+) -> ChurnSchedule {
+    let mut rng = Rng::new(scenario.seed ^ 0xC4A05);
+    let model = scenario.draft_model(0).to_string();
+    let domain = scenario.domain(0).to_string();
+    let mut jitter = move |base: u64| -> u64 {
+        let f = 0.75 + 0.5 * rng.f64();
+        ((base as f64 * f).round() as u64).max(1)
+    };
+    let mut events = Vec::with_capacity(flaps * 2);
+    let mut t = start_wave;
+    for k in 0..flaps {
+        let up = jitter(period.max(1));
+        let down = jitter(period.max(1));
+        events.push(ChurnEvent {
+            at_wave: t,
+            kind: ChurnKind::Join(ClientSpec::new(model.clone(), domain.clone())),
+        });
+        // Join ids assign in order after the initial population, so the
+        // k-th flap's joiner is exactly this slot.
+        events.push(ChurnEvent { at_wave: t + up, kind: ChurnKind::Leave(scenario.num_clients + k) });
+        t += up + down;
+    }
+    ChurnSchedule { events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_schedule_is_well_formed() {
+        let s = Scenario::preset("sharded").unwrap();
+        let f = FaultSchedule::demo(&s);
+        assert_eq!(f.crash_count(), 1);
+        assert!(f.validate_for(s.num_clients, s.num_verifiers).is_ok());
+        match f.events[0].kind {
+            FaultKind::ShardCrash { shard, recover_wave } => {
+                assert_eq!(shard, s.num_verifiers - 1);
+                assert!(recover_wave.unwrap() > f.events[0].at_wave);
+            }
+            ref other => panic!("demo must be a crash, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compiled_expands_and_sorts() {
+        let f = FaultSchedule {
+            events: vec![
+                FaultEvent {
+                    at_wave: 40,
+                    kind: FaultKind::Partition { client: 2, heal_wave: 55 },
+                },
+                FaultEvent {
+                    at_wave: 10,
+                    kind: FaultKind::ShardCrash { shard: 1, recover_wave: Some(50) },
+                },
+                FaultEvent { at_wave: 20, kind: FaultKind::DropBurst { client: 0, count: 3 } },
+            ],
+        };
+        let ops = f.compiled();
+        assert_eq!(ops.len(), 5, "crash+recover and partition+heal expand");
+        assert!(ops.windows(2).all(|w| w[0].0 <= w[1].0), "sorted by wave: {ops:?}");
+        assert_eq!(ops[0], (10, FaultOp::Crash { shard: 1 }));
+        assert_eq!(ops[4], (55, FaultOp::PartitionHeal { client: 2 }));
+    }
+
+    #[test]
+    fn validation_rejects_malformed_schedules() {
+        let crash = |shard, recover_wave| FaultSchedule {
+            events: vec![FaultEvent {
+                at_wave: 10,
+                kind: FaultKind::ShardCrash { shard, recover_wave },
+            }],
+        };
+        // Crash needs a survivor shard.
+        assert!(crash(0, None).validate_for(4, 1).is_err());
+        // Shard index must exist.
+        assert!(crash(2, None).validate_for(4, 2).is_err());
+        // Recovery must follow the crash.
+        assert!(crash(1, Some(10)).validate_for(4, 2).is_err());
+        assert!(crash(1, Some(11)).validate_for(4, 2).is_ok());
+        // Partition: client range + heal ordering.
+        let part = |client, heal_wave| FaultSchedule {
+            events: vec![FaultEvent {
+                at_wave: 10,
+                kind: FaultKind::Partition { client, heal_wave },
+            }],
+        };
+        assert!(part(4, 20).validate_for(4, 2).is_err());
+        assert!(part(1, 10).validate_for(4, 2).is_err());
+        assert!(part(1, 20).validate_for(4, 2).is_ok());
+        // Bursts: client range + non-zero count.
+        let burst = FaultSchedule {
+            events: vec![FaultEvent {
+                at_wave: 5,
+                kind: FaultKind::DuplicateBurst { client: 0, count: 0 },
+            }],
+        };
+        assert!(burst.validate_for(4, 2).is_err());
+    }
+
+    #[test]
+    fn flapping_churn_compiles_to_a_valid_schedule() {
+        let mut s = Scenario::preset("smoke").unwrap();
+        let a = flapping_churn(&s, 3, 5, 8);
+        let b = flapping_churn(&s, 3, 5, 8);
+        assert_eq!(a.events.len(), 6, "one join + one leave per flap");
+        assert_eq!(a.join_count(), 3);
+        // Deterministic from the scenario seed.
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.at_wave, y.at_wave);
+        }
+        let mut other = s.clone();
+        other.seed ^= 1;
+        let c = flapping_churn(&other, 3, 5, 8);
+        assert!(
+            a.events.iter().zip(&c.events).any(|(x, y)| x.at_wave != y.at_wave),
+            "seed must jitter the flap times"
+        );
+        // The compiled schedule passes full scenario validation (leave
+        // ids line up with join-assigned slots).
+        s.churn = a;
+        assert!(s.validate().is_ok());
+        // Flaps alternate: each join precedes its own leave.
+        let sorted = s.churn.sorted();
+        assert!(matches!(sorted[0].kind, ChurnKind::Join(_)));
+    }
+}

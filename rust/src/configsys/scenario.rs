@@ -10,6 +10,7 @@
 use std::str::FromStr;
 
 use super::json::Value;
+use crate::chaos::{FaultEvent, FaultKind, FaultSchedule};
 use crate::error::ConfigError;
 use crate::workload::domains::DOMAINS;
 
@@ -296,23 +297,58 @@ pub enum ArrivalProcess {
     /// Explicit per-client arrival schedule loaded from a JSON trace file
     /// (see `serve::trace::RequestTrace::from_file` for the format).
     File(String),
+    /// Flash crowd: baseline Poisson arrivals (mean gap in waves) whose
+    /// rate multiplies by `surge` inside the window `[at, at + width)` —
+    /// the load spike chaos scenarios recover under.
+    FlashCrowd { mean_gap: f64, surge: f64, at: u64, width: u64 },
+    /// Diurnal load: Poisson arrivals whose instantaneous rate follows
+    /// `1 + amplitude · sin(2π t / period)` around the baseline
+    /// `1/mean_gap` — the day/night cycle, compressed to waves.
+    Diurnal { mean_gap: f64, amplitude: f64, period: f64 },
 }
 
 impl FromStr for ArrivalProcess {
     type Err = ConfigError;
 
-    /// Parse `poisson:<mean_gap>` or `bursty:<mean_gap>x<burst>` (waves).
+    /// Parse `poisson:<mean_gap>`, `bursty:<mean_gap>x<burst>`,
+    /// `flash-crowd:<mean_gap>x<surge>@<at>+<width>`, or
+    /// `diurnal:<mean_gap>x<amplitude>@<period>` (all times in waves).
     /// File traces are selected with `goodspeed run --trace <path>`, not
     /// through this parser.
     fn from_str(s: &str) -> Result<ArrivalProcess, ConfigError> {
         let reject = || ConfigError::InvalidChoice {
             field: "arrival process",
             given: s.to_string(),
-            expected: &["poisson:<mean_gap>", "bursty:<mean_gap>x<burst>"],
+            expected: &[
+                "poisson:<mean_gap>",
+                "bursty:<mean_gap>x<burst>",
+                "flash-crowd:<mean_gap>x<surge>@<at>+<width>",
+                "diurnal:<mean_gap>x<amplitude>@<period>",
+            ],
         };
         let lower = s.to_ascii_lowercase();
         if let Some(gap) = lower.strip_prefix("poisson:") {
             return Ok(ArrivalProcess::Poisson { mean_gap: gap.parse().map_err(|_| reject())? });
+        }
+        if let Some(spec) = lower.strip_prefix("flash-crowd:") {
+            let (head, window) = spec.split_once('@').ok_or_else(reject)?;
+            let (gap, surge) = head.split_once('x').ok_or_else(reject)?;
+            let (at, width) = window.split_once('+').ok_or_else(reject)?;
+            return Ok(ArrivalProcess::FlashCrowd {
+                mean_gap: gap.parse().map_err(|_| reject())?,
+                surge: surge.parse().map_err(|_| reject())?,
+                at: at.parse().map_err(|_| reject())?,
+                width: width.parse().map_err(|_| reject())?,
+            });
+        }
+        if let Some(spec) = lower.strip_prefix("diurnal:") {
+            let (gap, tail) = spec.split_once('x').ok_or_else(reject)?;
+            let (amp, period) = tail.split_once('@').ok_or_else(reject)?;
+            return Ok(ArrivalProcess::Diurnal {
+                mean_gap: gap.parse().map_err(|_| reject())?,
+                amplitude: amp.parse().map_err(|_| reject())?,
+                period: period.parse().map_err(|_| reject())?,
+            });
         }
         let spec = lower.strip_prefix("bursty:").ok_or_else(reject)?;
         let (gap, burst) = spec.split_once('x').ok_or_else(reject)?;
@@ -330,6 +366,12 @@ impl ArrivalProcess {
             ArrivalProcess::Poisson { mean_gap } => format!("poisson:{mean_gap}"),
             ArrivalProcess::Bursty { mean_gap, burst } => format!("bursty:{mean_gap}x{burst}"),
             ArrivalProcess::File(path) => format!("file:{path}"),
+            ArrivalProcess::FlashCrowd { mean_gap, surge, at, width } => {
+                format!("flash-crowd:{mean_gap}x{surge}@{at}+{width}")
+            }
+            ArrivalProcess::Diurnal { mean_gap, amplitude, period } => {
+                format!("diurnal:{mean_gap}x{amplitude}@{period}")
+            }
         }
     }
 }
@@ -440,6 +482,11 @@ pub struct Scenario {
     /// Scheduled client arrivals/departures (empty = static membership,
     /// which reproduces the pre-churn stack bit-for-bit).
     pub churn: ChurnSchedule,
+    /// Scheduled faults (shard crashes, partitions, message bursts) the
+    /// run must survive, applied at wave boundaries by both the live
+    /// pool and the analytic simulator. Empty (the default) keeps every
+    /// pre-chaos code path bit-identical.
+    pub chaos: FaultSchedule,
     /// Request-level serving: per-client arrival processes, deadlines,
     /// and SLO accounting (`None` = the classic endless-stream run,
     /// bit-identical to the pre-trace stack).
@@ -549,6 +596,28 @@ impl Scenario {
                     }
                 }
                 ArrivalProcess::File(_) => {}
+                ArrivalProcess::FlashCrowd { mean_gap, surge, width, .. } => {
+                    if !(mean_gap.is_finite() && mean_gap > 0.0) {
+                        return err("trace: flash-crowd mean_gap must be > 0".into());
+                    }
+                    if !(surge.is_finite() && surge >= 1.0) {
+                        return err("trace: flash-crowd surge must be ≥ 1".into());
+                    }
+                    if width == 0 {
+                        return err("trace: flash-crowd width must be ≥ 1 wave".into());
+                    }
+                }
+                ArrivalProcess::Diurnal { mean_gap, amplitude, period } => {
+                    if !(mean_gap.is_finite() && mean_gap > 0.0) {
+                        return err("trace: diurnal mean_gap must be > 0".into());
+                    }
+                    if !(0.0..1.0).contains(&amplitude) {
+                        return err("trace: diurnal amplitude must be in [0, 1)".into());
+                    }
+                    if !(period.is_finite() && period > 0.0) {
+                        return err("trace: diurnal period must be > 0 waves".into());
+                    }
+                }
             }
             if !matches!(trace.arrival, ArrivalProcess::File(_)) {
                 if trace.output_tokens == 0 {
@@ -586,6 +655,11 @@ impl Scenario {
                     gone.push(id);
                 }
             }
+        }
+        // Fault schedule: shard/client indices must exist and every
+        // recovery/heal must follow its fault.
+        if let Err(msg) = self.chaos.validate_for(self.num_clients, self.num_verifiers) {
+            return err(msg);
         }
         Ok(())
     }
@@ -640,6 +714,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
+                chaos: FaultSchedule::default(),
                 trace: None,
                 stream_metrics: false,
                 pipelined: false,
@@ -667,6 +742,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
+                chaos: FaultSchedule::default(),
                 trace: None,
                 stream_metrics: false,
                 pipelined: false,
@@ -694,6 +770,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
+                chaos: FaultSchedule::default(),
                 trace: None,
                 stream_metrics: false,
                 pipelined: false,
@@ -721,6 +798,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
+                chaos: FaultSchedule::default(),
                 trace: None,
                 stream_metrics: false,
                 pipelined: false,
@@ -756,6 +834,7 @@ impl Scenario {
                     shard_rebalance_every: 0,
                     spec_shape: SpecShape::Chain,
                     churn: ChurnSchedule::default(),
+                    chaos: FaultSchedule::default(),
                     trace: None,
                     stream_metrics: false,
                     pipelined: false,
@@ -797,6 +876,7 @@ impl Scenario {
                     shard_rebalance_every: 16,
                     spec_shape: SpecShape::Chain,
                     churn: ChurnSchedule::default(),
+                    chaos: FaultSchedule::default(),
                     trace: None,
                     stream_metrics: false,
                     pipelined: false,
@@ -829,6 +909,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Tree { arity: 2, depth: 8 },
                 churn: ChurnSchedule::default(),
+                chaos: FaultSchedule::default(),
                 trace: None,
                 stream_metrics: false,
                 pipelined: false,
@@ -861,6 +942,7 @@ impl Scenario {
                     shard_rebalance_every: 0,
                     spec_shape: SpecShape::Chain,
                     churn: ChurnSchedule::default(),
+                    chaos: FaultSchedule::default(),
                     trace: None,
                     stream_metrics: false,
                     pipelined: false,
@@ -903,6 +985,7 @@ impl Scenario {
                 shard_rebalance_every: 0,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
+                chaos: FaultSchedule::default(),
                 // Mean inter-arrival 28 waves vs ≈ 12–19-wave service
                 // times: moderate utilization, so deadlines are met by
                 // scheduling rather than luck, and all six requests per
@@ -940,8 +1023,65 @@ impl Scenario {
                 shard_rebalance_every: 64,
                 spec_shape: SpecShape::Chain,
                 churn: ChurnSchedule::default(),
-                trace: Some(TraceConfig::poisson(64.0, 96)),
+                chaos: FaultSchedule::default(),
+                // Diurnal arrivals (mean gap 64 waves, ±50% rate swing
+                // over a 200-wave period): the population-scale load
+                // breathes the way real traffic does, exercising the
+                // water-fill under both the peak and the trough.
+                trace: Some(TraceConfig {
+                    arrival: ArrivalProcess::Diurnal {
+                        mean_gap: 64.0,
+                        amplitude: 0.5,
+                        period: 200.0,
+                    },
+                    slo_waves: 96,
+                    output_tokens: 24,
+                    requests_per_client: 6,
+                }),
                 stream_metrics: true,
+                pipelined: false,
+            },
+            // Chaos study: the sharded pool under a scheduled shard
+            // crash + recovery. Shard 1 dies a third of the way in; its
+            // clients migrate to shard 0 (estimators re-seeded from the
+            // population prior, freed budget water-filled) and the shard
+            // is re-admitted at the halfway mark (a fenced shard slows
+            // the pooled schedule clock to (M−1)/M, so a later recovery
+            // could land after the budget is spent), repopulated by the
+            // rebalancer (every 8 waves, so the recovery envelope closes
+            // within the run). `benches/chaos.rs` asserts goodput and
+            // Jain fairness re-enter a band around the pre-fault steady
+            // state after both the crash and the heal.
+            "chaos" => Scenario {
+                id: id.into(),
+                family: "qwen".into(),
+                num_clients: 8,
+                capacity: 32,
+                max_new_tokens: 40,
+                draft_models: vec!["qwen-draft-06b".into(), "qwen-draft-17b".into()],
+                domains: DOMAINS.iter().map(|d| d.to_string()).collect(),
+                domain_stickiness: 0.85,
+                eta: Smoothing::Fixed(0.3),
+                beta: Smoothing::Fixed(0.5),
+                max_draft: 16,
+                rounds: 180,
+                seed,
+                links: Scenario::default_links(8, seed),
+                coord_mode: CoordMode::Sync,
+                batch_window_us: 20_000,
+                min_wave_fill: 0,
+                num_verifiers: 2,
+                shard_rebalance_every: 8,
+                spec_shape: SpecShape::Chain,
+                churn: ChurnSchedule::default(),
+                chaos: FaultSchedule {
+                    events: vec![FaultEvent {
+                        at_wave: 60,
+                        kind: FaultKind::ShardCrash { shard: 1, recover_wave: Some(90) },
+                    }],
+                },
+                trace: None,
+                stream_metrics: false,
                 pipelined: false,
             },
             _ => return None,
@@ -953,7 +1093,7 @@ impl Scenario {
         Some(s)
     }
 
-    pub fn preset_ids() -> [&'static str; 10] {
+    pub fn preset_ids() -> [&'static str; 11] {
         [
             "qwen-4c-50",
             "qwen-8c-150",
@@ -965,6 +1105,7 @@ impl Scenario {
             "churn",
             "trace",
             "soak",
+            "chaos",
         ]
     }
 
@@ -990,6 +1131,7 @@ impl Scenario {
             ("shard_rebalance_every", Value::Num(self.shard_rebalance_every as f64)),
             ("spec_shape", Value::Str(self.spec_shape.label())),
             ("churn_events", Value::Num(self.churn.events.len() as f64)),
+            ("chaos_events", Value::Num(self.chaos.events.len() as f64)),
             ("stream_metrics", Value::Bool(self.stream_metrics)),
             ("pipelined", Value::Bool(self.pipelined)),
             (
@@ -1125,11 +1267,11 @@ mod tests {
         assert_eq!(s.num_clients, 8);
         assert_eq!(s.num_verifiers, 2);
         assert_eq!(s.shard_rebalance_every, 16);
-        // Every preset outside the sharded pair stays single-verifier so
+        // Every preset outside the sharded trio stays single-verifier so
         // existing experiments reproduce bit-for-bit.
         for id in Scenario::preset_ids() {
             let p = Scenario::preset(id).unwrap();
-            if id != "sharded" && id != "soak" {
+            if id != "sharded" && id != "soak" && id != "chaos" {
                 assert_eq!(p.num_verifiers, 1, "{id}");
             }
         }
@@ -1308,16 +1450,108 @@ mod tests {
     fn arrival_process_parse_label_roundtrip() {
         assert_eq!("poisson:12.5".parse(), Ok(ArrivalProcess::Poisson { mean_gap: 12.5 }));
         assert_eq!("Bursty:8x3".parse(), Ok(ArrivalProcess::Bursty { mean_gap: 8.0, burst: 3 }));
+        assert_eq!(
+            "flash-crowd:24x8@60+30".parse(),
+            Ok(ArrivalProcess::FlashCrowd { mean_gap: 24.0, surge: 8.0, at: 60, width: 30 })
+        );
+        assert_eq!(
+            "diurnal:64x0.5@200".parse(),
+            Ok(ArrivalProcess::Diurnal { mean_gap: 64.0, amplitude: 0.5, period: 200.0 })
+        );
         assert!("poisson".parse::<ArrivalProcess>().is_err());
         assert!("bursty:8".parse::<ArrivalProcess>().is_err());
+        assert!("flash-crowd:24x8".parse::<ArrivalProcess>().is_err(), "window is required");
+        assert!("flash-crowd:24x8@60".parse::<ArrivalProcess>().is_err(), "width is required");
+        assert!("diurnal:64x0.5".parse::<ArrivalProcess>().is_err(), "period is required");
         let err = "closed".parse::<ArrivalProcess>().unwrap_err().to_string();
         assert!(err.contains("poisson:<mean_gap>"), "{err}");
+        assert!(err.contains("flash-crowd:"), "typo help must list flash-crowd: {err}");
         for a in [
             ArrivalProcess::Poisson { mean_gap: 20.0 },
             ArrivalProcess::Bursty { mean_gap: 6.0, burst: 4 },
+            ArrivalProcess::FlashCrowd { mean_gap: 24.0, surge: 8.0, at: 60, width: 30 },
+            ArrivalProcess::Diurnal { mean_gap: 64.0, amplitude: 0.5, period: 200.0 },
         ] {
             assert_eq!(a.label().parse(), Ok(a));
         }
+    }
+
+    #[test]
+    fn flash_crowd_and_diurnal_validation() {
+        let with = |arrival: ArrivalProcess| {
+            let mut s = Scenario::preset("trace").unwrap();
+            s.trace.as_mut().unwrap().arrival = arrival;
+            s
+        };
+        let ok = ArrivalProcess::FlashCrowd { mean_gap: 24.0, surge: 8.0, at: 60, width: 30 };
+        assert!(with(ok).validate().is_ok());
+        let bad = ArrivalProcess::FlashCrowd { mean_gap: 0.0, surge: 8.0, at: 60, width: 30 };
+        assert!(with(bad).validate().is_err());
+        let bad = ArrivalProcess::FlashCrowd { mean_gap: 24.0, surge: 0.5, at: 60, width: 30 };
+        assert!(with(bad).validate().is_err(), "surge < 1 would be an anti-crowd");
+        let bad = ArrivalProcess::FlashCrowd { mean_gap: 24.0, surge: 8.0, at: 60, width: 0 };
+        assert!(with(bad).validate().is_err());
+        let ok = ArrivalProcess::Diurnal { mean_gap: 64.0, amplitude: 0.5, period: 200.0 };
+        assert!(with(ok).validate().is_ok());
+        let bad = ArrivalProcess::Diurnal { mean_gap: 64.0, amplitude: 1.0, period: 200.0 };
+        assert!(with(bad).validate().is_err(), "amplitude 1 zeroes the trough rate");
+        let bad = ArrivalProcess::Diurnal { mean_gap: 64.0, amplitude: 0.5, period: 0.0 };
+        assert!(with(bad).validate().is_err());
+        // The soak preset rides the diurnal process.
+        let soak = Scenario::preset("soak").unwrap();
+        assert!(matches!(
+            soak.trace.unwrap().arrival,
+            ArrivalProcess::Diurnal { amplitude, .. } if amplitude > 0.0
+        ));
+    }
+
+    #[test]
+    fn chaos_preset_and_schedule_validation() {
+        use crate::chaos::{FaultEvent, FaultKind};
+        let s = Scenario::preset("chaos").unwrap();
+        assert_eq!(s.num_verifiers, 2);
+        assert_eq!(s.chaos.events.len(), 1);
+        assert_eq!(s.chaos.crash_count(), 1);
+        match s.chaos.events[0].kind {
+            FaultKind::ShardCrash { shard, recover_wave } => {
+                assert_eq!(shard, 1);
+                assert_eq!(recover_wave, Some(90));
+            }
+            ref other => panic!("chaos preset must schedule a crash, got {other:?}"),
+        }
+        // Every other preset stays fault-free so existing experiments
+        // reproduce bit-for-bit.
+        for id in Scenario::preset_ids() {
+            let p = Scenario::preset(id).unwrap();
+            if id != "chaos" {
+                assert!(p.chaos.is_empty(), "{id}");
+            }
+        }
+        // Validation rejects crashes without a survivor, out-of-range
+        // shards, and inverted recovery times.
+        let mut bad = Scenario::preset("smoke").unwrap();
+        bad.chaos.events.push(FaultEvent {
+            at_wave: 5,
+            kind: FaultKind::ShardCrash { shard: 0, recover_wave: None },
+        });
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("num_verifiers"), "{err}");
+        let mut bad = Scenario::preset("chaos").unwrap();
+        bad.chaos.events[0].kind = FaultKind::ShardCrash { shard: 2, recover_wave: None };
+        assert!(bad.validate().is_err());
+        let mut bad = Scenario::preset("chaos").unwrap();
+        bad.chaos.events[0].kind = FaultKind::ShardCrash { shard: 1, recover_wave: Some(60) };
+        assert!(bad.validate().is_err());
+        let mut bad = Scenario::preset("chaos").unwrap();
+        bad.chaos.events.push(FaultEvent {
+            at_wave: 10,
+            kind: FaultKind::Partition { client: 99, heal_wave: 20 },
+        });
+        assert!(bad.validate().is_err());
+        // The demo schedule validates on the preset it is derived from.
+        let mut s = Scenario::preset("sharded").unwrap();
+        s.chaos = crate::chaos::FaultSchedule::demo(&s);
+        assert!(s.validate().is_ok());
     }
 
     #[test]

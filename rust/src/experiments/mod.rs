@@ -116,8 +116,12 @@ COMMANDS
                                     --mode sync|async --batch-window-us <µs>
                                     --min-wave-fill <n> --verifiers <m>
                                     --rebalance-every <waves> --churn
+                                    --chaos (demo fault schedule: shard crash
+                                    at rounds/3, recovery at rounds/2)
                                     --trace <file.json> --slo <waves>
                                     --arrival poisson:<gap>|bursty:<gap>x<burst>
+                                    |flash-crowd:<gap>x<surge>@<at>+<width>
+                                    |diurnal:<gap>x<amp>@<period>
                                     --pipelined (overlap assembly with verify;
                                     bit-identical output, off by default)
   quickstart single client speculative vs autoregressive speedup
@@ -132,7 +136,7 @@ COMMANDS
                                                          --soak --max-rss-mb <MiB>
 
 Scenario presets: qwen-4c-50, qwen-8c-150, llama-8c-150, smoke, straggler,
-sharded, tree, churn, trace, soak.
+sharded, tree, churn, trace, soak, chaos.
 
 Policies: goodspeed, fixed-s, random-s, turbo (SLO-aware closed-loop
 speculation control; pair with a trace, e.g. `run --preset trace --policy

@@ -9,6 +9,7 @@
 use anyhow::{anyhow, Result};
 
 use super::engine_from_args;
+use crate::chaos::FaultSchedule;
 use crate::cli::Args;
 use crate::configsys::{ArrivalProcess, ChurnSchedule, Policy, Scenario, TraceConfig};
 use crate::coordinator::{Cluster, Transport};
@@ -87,6 +88,17 @@ pub fn scenario_from_args(args: &Args) -> Result<Scenario> {
     if args.flag("churn") && s.churn.is_empty() {
         s.churn = ChurnSchedule::demo(&s);
     }
+    // `--chaos` layers the standard fault schedule (the highest shard
+    // crashes at rounds/3 and recovers at rounds/2) onto the selected
+    // scenario. A shard crash needs a survivor, so single-verifier
+    // scenarios are widened to a two-shard pool first.
+    if args.flag("chaos") && s.chaos.is_empty() {
+        if s.num_verifiers < 2 {
+            log::warn!("--chaos: widening to 2 verifier shards (a crash needs a survivor)");
+            s.num_verifiers = 2;
+        }
+        s.chaos = FaultSchedule::demo(&s);
+    }
     // Request-level serving knobs: `--trace <file.json>` loads an
     // explicit schedule, `--arrival poisson:<gap>|bursty:<gap>x<burst>`
     // selects a generator, `--slo <waves>` sets the per-request deadline.
@@ -133,7 +145,7 @@ pub fn main(args: &Args) -> Result<()> {
 
     log::info!(
         "run: scenario={} policy={} mode={} shape={} verifiers={} transport={transport:?} \
-         rounds={} churn-events={} trace={}",
+         rounds={} churn-events={} chaos-events={} trace={}",
         scenario.id,
         policy.name(),
         scenario.coord_mode.name(),
@@ -141,6 +153,7 @@ pub fn main(args: &Args) -> Result<()> {
         scenario.num_verifiers,
         scenario.rounds,
         scenario.churn.events.len(),
+        scenario.chaos.events.len(),
         scenario.trace.as_ref().map(|t| t.arrival.label()).unwrap_or_else(|| "none".into())
     );
     let churned = !scenario.churn.is_empty();
@@ -185,6 +198,22 @@ pub fn main(args: &Args) -> Result<()> {
                 joined.iter().chain(left.iter()).cloned().collect::<Vec<_>>().join(" "),
                 ev.members
             );
+        }
+    }
+    // Chaos runs: the fault/recovery event log and the waves each
+    // crashed shard took to rejoin.
+    if !out.recorder.faults.is_empty() {
+        println!("  fault events: {}", out.recorder.faults.len());
+        for f in &out.recorder.faults {
+            println!(
+                "    wave {:>5} shard {}: {:<15} {}",
+                f.wave, f.shard, f.kind, f.detail
+            );
+        }
+        if !out.recorder.time_to_recover.is_empty() {
+            let ttr: Vec<String> =
+                out.recorder.time_to_recover.iter().map(u64::to_string).collect();
+            println!("  time-to-recover (waves): {}", ttr.join(", "));
         }
     }
     // Trace-driven runs: the request-level report — TTFT/TPOT/E2E

@@ -39,6 +39,7 @@
 #[global_allocator]
 static ALLOC_COUNTER: util::alloc_track::CountingAlloc = util::alloc_track::CountingAlloc;
 
+pub mod chaos;
 pub mod cli;
 pub mod configsys;
 pub mod coordinator;

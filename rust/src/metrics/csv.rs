@@ -164,7 +164,7 @@ pub fn write_slo_summary<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> 
     let header = [
         "completed", "expired", "censored", "attainment", "ttft_p50", "ttft_p95", "ttft_p99",
         "tpot_p50", "tpot_p95", "tpot_p99", "e2e_p50", "e2e_p95", "e2e_p99", "raw_goodput",
-        "slo_goodput",
+        "slo_goodput", "lost_handoffs",
     ];
     let s = rec.slo_summary().unwrap_or_default();
     let raw: f64 = rec.cum_goodput().iter().sum();
@@ -184,6 +184,7 @@ pub fn write_slo_summary<P: AsRef<Path>>(path: P, rec: &Recorder) -> Result<()> 
         format!("{:.3}", s.e2e.2),
         format!("{raw:.1}"),
         format!("{:.1}", s.slo_goodput_total),
+        rec.handoffs_lost.to_string(),
     ];
     write_csv(path, &header, [row])
 }
@@ -272,9 +273,9 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("completed,expired,censored,attainment,ttft_p50"));
-        assert!(lines[0].ends_with("raw_goodput,slo_goodput"));
+        assert!(lines[0].ends_with("raw_goodput,slo_goodput,lost_handoffs"));
         assert!(lines[1].starts_with("1,1,0,0.5000,"), "{}", lines[1]);
-        assert!(lines[1].ends_with(",8.0"), "{}", lines[1]);
+        assert!(lines[1].ends_with(",8.0,0"), "{}", lines[1]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -5,5 +5,7 @@ pub mod recorder;
 pub mod sketch;
 pub mod svg;
 
-pub use recorder::{ClientRoundMetrics, MembershipEvent, Recorder, RoundRecord, RunSummary};
+pub use recorder::{
+    ClientRoundMetrics, FaultRecord, MembershipEvent, Recorder, RoundRecord, RunSummary,
+};
 pub use sketch::{RequestSketch, Reservoir};

@@ -79,6 +79,26 @@ pub struct MembershipEvent {
     pub members: Vec<usize>,
 }
 
+/// One fault-injection or recovery action, stamped with the schedule's
+/// wave clock (pooled runs: global waves ÷ M). Recorded by the pool
+/// driver / analytic simulator as the chaos schedule fires, plus
+/// run-end accounting events (e.g. `handoff-lost`). Chaos-free runs
+/// record nothing, keeping their outputs byte-identical.
+#[derive(Clone, Debug, Default)]
+pub struct FaultRecord {
+    /// Wave boundary (schedule clock) at which the event took effect.
+    pub wave: u64,
+    /// The shard the event concerns (crashes/recoveries), or the shard
+    /// doing the accounting for client-scoped events.
+    pub shard: usize,
+    /// Stable machine-readable tag: `shard-crash`, `shard-recover`,
+    /// `partition`, `partition-heal`, `drop-burst`, `duplicate-burst`,
+    /// `shard-abandoned`, `fault-skipped`, `handoff-lost`.
+    pub kind: String,
+    /// Human-readable context (client lists, factors, reasons).
+    pub detail: String,
+}
+
 /// Accumulates waves and derives the report quantities.
 #[derive(Debug, Default)]
 pub struct Recorder {
@@ -98,6 +118,16 @@ pub struct Recorder {
     /// Requests still pending with future deadlines when the run ended
     /// (excluded from attainment).
     pub requests_censored: u64,
+    /// Migration handoff states nobody claimed by run end (their requests
+    /// are censored, and each loss is also logged as a `handoff-lost`
+    /// fault record plus a membership event). Zero on clean runs.
+    pub handoffs_lost: u64,
+    /// Fault/recovery event log (empty without a chaos schedule).
+    pub faults: Vec<FaultRecord>,
+    /// Time-to-recover series: for each recovered shard crash, the
+    /// schedule-clock waves between the crash taking effect and the
+    /// shard's re-admission.
+    pub time_to_recover: Vec<u64>,
     /// Cumulative realized goodput per client (for x̄(T) and Fig 4).
     cum_goodput: Vec<f64>,
     /// Cumulative *accepted* draft tokens per client (fairness audits).
@@ -144,6 +174,9 @@ impl Recorder {
             requests: Vec::new(),
             slo_goodput: Vec::new(),
             requests_censored: 0,
+            handoffs_lost: 0,
+            faults: Vec::new(),
+            time_to_recover: Vec::new(),
             cum_goodput: vec![0.0; n_clients],
             cum_accepted: vec![0; n_clients],
             cum_spec_depth: vec![0; n_clients],
@@ -327,6 +360,9 @@ impl Recorder {
         self.request_latency_rounds.extend(other.request_latency_rounds);
         self.requests.extend(other.requests);
         self.requests_censored += other.requests_censored;
+        self.handoffs_lost += other.handoffs_lost;
+        self.faults.extend(other.faults);
+        self.time_to_recover.extend(other.time_to_recover);
         if self.slo_goodput.is_empty() {
             self.slo_goodput = other.slo_goodput;
         } else if !other.slo_goodput.is_empty() {
@@ -339,6 +375,11 @@ impl Recorder {
     /// Record a membership epoch change (serving clusters with churn).
     pub fn note_membership(&mut self, ev: MembershipEvent) {
         self.membership.push(ev);
+    }
+
+    /// Record a fault-injection / recovery event (chaos runs only).
+    pub fn note_fault(&mut self, ev: FaultRecord) {
+        self.faults.push(ev);
     }
 
     /// Per-client lifetime goodput: total realized tokens over the

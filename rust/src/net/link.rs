@@ -40,6 +40,24 @@ impl Link {
     pub fn config(&self) -> &LinkConfig {
         &self.cfg
     }
+
+    /// The degraded service a partitioned client sees while traffic
+    /// routes around the outage: propagation latency inflated `factor`×
+    /// and bandwidth divided by the same factor. The analytic simulator
+    /// applies this over a
+    /// [`FaultKind::Partition`](crate::chaos::FaultKind) window and
+    /// restores the original link at the heal wave; `factor ≤ 1` is the
+    /// identity (a partition never *improves* a link).
+    pub fn degraded(&self, factor: f64) -> Link {
+        if !(factor.is_finite() && factor > 1.0) {
+            return self.clone();
+        }
+        Link::new(LinkConfig {
+            latency_s: self.cfg.latency_s * factor,
+            bandwidth_bps: (self.cfg.bandwidth_bps / factor).max(1.0),
+            jitter: self.cfg.jitter,
+        })
+    }
 }
 
 /// Uplink payload size of a draft message: prefix tokens + draft tokens +
@@ -138,6 +156,25 @@ mod tests {
                 assert!(lo_hits > 100, "lower clamp never bound ({lo_hits})");
                 assert!(hi_hits > 100, "upper clamp never bound ({hi_hits})");
             }
+        }
+    }
+
+    #[test]
+    fn degraded_link_inflates_both_terms_and_clamps_below_one() {
+        let l = link(2e-3, 1e6);
+        let d = l.degraded(8.0);
+        // Latency-dominated message: delay scales ≈ 8×.
+        let small = d.mean_delay(10).as_secs_f64() / l.mean_delay(10).as_secs_f64();
+        assert!((small - 8.0).abs() < 0.1, "latency term must scale: {small}");
+        // Bandwidth-dominated message: also ≈ 8× (bandwidth divides).
+        let big = d.mean_delay(1_000_000).as_secs_f64() / l.mean_delay(1_000_000).as_secs_f64();
+        assert!((big - 8.0).abs() < 0.1, "bandwidth term must scale: {big}");
+        // A partition never improves a link: factor ≤ 1 (and NaN) are
+        // the identity.
+        for f in [1.0, 0.5, 0.0, -3.0, f64::NAN] {
+            let same = l.degraded(f);
+            assert_eq!(same.config().latency_s, l.config().latency_s, "factor {f}");
+            assert_eq!(same.config().bandwidth_bps, l.config().bandwidth_bps, "factor {f}");
         }
     }
 

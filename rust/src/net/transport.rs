@@ -754,6 +754,56 @@ mod tests {
     }
 
     #[test]
+    fn frame_accumulator_handles_every_two_chunk_split() {
+        // Adversarial chunk boundary: a two-frame stream cut at every
+        // possible offset into two reads — including cuts inside the
+        // second frame's length prefix — must decode identically.
+        let msgs = [draft(0, 1), draft(1, 2)];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            m.encode_into(&mut wire);
+        }
+        for cut in 0..=wire.len() {
+            let mut acc = FrameAccumulator::new();
+            let mut got = Vec::new();
+            acc.feed(&wire[..cut]);
+            while let Some(m) = acc.next_frame().unwrap() {
+                got.push(m);
+            }
+            acc.feed(&wire[cut..]);
+            while let Some(m) = acc.next_frame().unwrap() {
+                got.push(m);
+            }
+            assert_eq!(got.as_slice(), msgs.as_slice(), "stream split at byte {cut}");
+        }
+    }
+
+    #[test]
+    fn frame_accumulator_survives_connection_drop_mid_frame() {
+        // A peer dying mid-frame leaves a torn tail in the accumulator:
+        // the complete frame before it must already have decoded, the
+        // tail must never surface as a frame or an error, and a
+        // reconnect (fresh accumulator) re-fed from the frame boundary
+        // decodes cleanly. Exercised at every drop offset inside the
+        // second frame, including inside its length prefix.
+        let mut wire = Vec::new();
+        draft(1, 7).encode_into(&mut wire);
+        let boundary = wire.len();
+        draft(2, 8).encode_into(&mut wire);
+        for cut in boundary..wire.len() {
+            let mut acc = FrameAccumulator::new();
+            acc.feed(&wire[..cut]);
+            assert_eq!(acc.next_frame().unwrap(), Some(draft(1, 7)));
+            assert_eq!(acc.next_frame().unwrap(), None, "torn frame surfaced at cut {cut}");
+            drop(acc); // the connection drops; the partial tail dies with it
+            let mut acc = FrameAccumulator::new();
+            acc.feed(&wire[boundary..]);
+            assert_eq!(acc.next_frame().unwrap(), Some(draft(2, 8)));
+            assert_eq!(acc.next_frame().unwrap(), None);
+        }
+    }
+
+    #[test]
     fn tcp_batch_drain_preserves_per_client_order() {
         // A burst of frames from one client — likely coalesced into few
         // reads on the loopback socket — arrives in round order.

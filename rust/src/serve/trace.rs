@@ -102,6 +102,25 @@ impl RequestTrace {
                             t += exp_gap(&mut rng, mean_gap);
                             burst
                         }
+                        ArrivalProcess::FlashCrowd { mean_gap, surge, at, width } => {
+                            // Inhomogeneous Poisson, stepwise: inside the
+                            // surge window the rate multiplies by `surge`,
+                            // i.e. the mean gap divides by it.
+                            let now = t.floor() as u64;
+                            let in_surge = now >= at && now < at.saturating_add(width);
+                            let gap = if in_surge { mean_gap / surge.max(1.0) } else { mean_gap };
+                            t += exp_gap(&mut rng, gap);
+                            1
+                        }
+                        ArrivalProcess::Diurnal { mean_gap, amplitude, period } => {
+                            // Rate 1/mean_gap scaled by the sinusoid at the
+                            // current virtual time (validation keeps
+                            // amplitude < 1, so the scale stays positive).
+                            let phase = 2.0 * std::f64::consts::PI * (t / period);
+                            let scale = (1.0 + amplitude * phase.sin()).max(1e-6);
+                            t += exp_gap(&mut rng, mean_gap / scale);
+                            1
+                        }
                         ArrivalProcess::File(_) => {
                             unreachable!("file traces load, they are not generated")
                         }
@@ -235,6 +254,49 @@ mod tests {
         // Bursts themselves are spread out (mean gap 50 over two gaps ⇒
         // the last burst lands after the first with overwhelming margin).
         assert!(reqs[8].arrival > reqs[0].arrival, "{reqs:?}");
+    }
+
+    #[test]
+    fn flash_crowd_surges_inside_the_window() {
+        // Mean gap 50 outside the window, 2 inside ([100, 150)): the
+        // surge window must hold far more arrivals than the equal-width
+        // window before it.
+        let c = cfg(
+            ArrivalProcess::FlashCrowd { mean_gap: 50.0, surge: 25.0, at: 100, width: 50 },
+            40,
+        );
+        let t = RequestTrace::generate(&c, 11, 1);
+        let reqs = &t.per_client[0];
+        assert_eq!(reqs.len(), 40);
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        let before = reqs.iter().filter(|r| r.arrival >= 50 && r.arrival < 100).count();
+        let inside = reqs.iter().filter(|r| r.arrival >= 100 && r.arrival < 150).count();
+        assert!(
+            inside > 3 * before.max(1),
+            "surge window must dominate: {inside} inside vs {before} before"
+        );
+        // Determinism (the shared generator discipline).
+        let again = RequestTrace::generate(&c, 11, 1);
+        assert_eq!(t.per_client, again.per_client);
+    }
+
+    #[test]
+    fn diurnal_peak_half_outdraws_the_trough_half() {
+        // Amplitude 0.9 over a 100-wave period: rate swings 0.1–1.9×.
+        // Folding arrivals by phase, the sin-positive half-period must
+        // collect well over half of them.
+        let c = cfg(
+            ArrivalProcess::Diurnal { mean_gap: 10.0, amplitude: 0.9, period: 100.0 },
+            400,
+        );
+        let t = RequestTrace::generate(&c, 13, 1);
+        let reqs = &t.per_client[0];
+        assert_eq!(reqs.len(), 400);
+        let peak = reqs.iter().filter(|r| r.arrival % 100 < 50).count();
+        let trough = reqs.len() - peak;
+        assert!(peak > 2 * trough, "peak half {peak} vs trough half {trough}");
     }
 
     #[test]

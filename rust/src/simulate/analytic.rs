@@ -21,12 +21,12 @@
 //! split — the analytic counterpart of
 //! [`run_pool`](crate::coordinator::run_pool).
 
+use crate::chaos::FaultOp;
 use crate::configsys::{
     ChurnEvent, ChurnKind, ClientSpec, CoordMode, Policy, Scenario, SpecShape,
 };
 use crate::coordinator::{RoundCore, WaveObs};
-use crate::metrics::recorder::MembershipEvent;
-use crate::metrics::recorder::Recorder;
+use crate::metrics::recorder::{FaultRecord, MembershipEvent, Recorder};
 use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
 use crate::sched::baselines::Allocator;
 use crate::sched::gradient::split_budget_by_members;
@@ -344,6 +344,69 @@ impl AnalyticSim {
 
     pub fn members(&self) -> &[usize] {
         &self.members
+    }
+
+    /// Chaos: adopt `client` into this restricted simulator (shard-crash
+    /// migration, or the move home on recovery). With `prior = None` the
+    /// estimators re-seed from this shard's population prior — the rule
+    /// the live pool applies when a crashed shard's clients arrive;
+    /// `Some((α̂, X^β, observations))` carries migrated estimator state,
+    /// like the live rebalancer's Join handoff. Request books never
+    /// move: a migrated client's in-flight trace requests stay (and
+    /// close as censored) on the simulator that owned them, mirroring
+    /// the live pool's censored-handoff epilogue.
+    pub fn adopt_member(&mut self, client: usize, prior: Option<(f64, f64, u64)>) {
+        if self.members.contains(&client) {
+            return;
+        }
+        match prior {
+            Some((a, x, t)) => {
+                self.core.estimators.alpha_hat[client] = a;
+                self.core.estimators.x_beta[client] = x;
+                self.core.estimators.set_observations(client, t);
+            }
+            None => self.core.estimators.seed_from_population(client, &self.members),
+        }
+        let grant = self.core.admit_member(client, self.cfg.max_draft);
+        self.alloc[client] = grant;
+        self.ready_at[client] =
+            self.clock + self.rtt_s[client] + self.cfg.draft_token_s * grant as f64;
+        self.members.push(client);
+        self.members.sort_unstable();
+    }
+
+    /// Chaos: release `client` from this simulator — the inverse of
+    /// [`AnalyticSim::adopt_member`]. Frees its budget reservation
+    /// through the same retirement path churn drains use.
+    pub fn release_member(&mut self, client: usize) {
+        if !self.members.contains(&client) {
+            return;
+        }
+        self.core.retire_member(client);
+        self.members.retain(|&c| c != client);
+    }
+
+    /// Chaos: scale `client`'s round trip by `factor` — the analytic
+    /// application of [`Link::degraded`] over a partition window. An
+    /// in-flight draft is delayed by the same inflation; healing
+    /// (`factor < 1`) only restores the rate, because a draft already in
+    /// the air cannot un-delay. Power-of-two factors restore the
+    /// original RTT bit-exactly at the heal wave.
+    pub fn scale_rtt(&mut self, client: usize, factor: f64) {
+        let extra = self.rtt_s[client] * (factor - 1.0);
+        if extra > 0.0 {
+            self.ready_at[client] = self.ready_at[client].max(self.clock) + extra;
+        }
+        self.rtt_s[client] *= factor;
+    }
+
+    /// Chaos: stall `client` for `count` redraft cycles — the analytic
+    /// model of a drop burst. The live closed loop has no retransmit (a
+    /// dropped draft would wedge the client forever), so the simulator
+    /// charges the stall those drops would become.
+    pub fn stall_client(&mut self, client: usize, count: u32) {
+        let redraft = self.rtt_s[client] + self.cfg.draft_token_s * self.alloc[client] as f64;
+        self.ready_at[client] = self.ready_at[client].max(self.clock) + count as f64 * redraft;
     }
 
     /// True per-client α vector (ground truth for regret analysis).
@@ -700,6 +763,12 @@ impl AnalyticSim {
 pub struct ShardedSimOutcome {
     pub shards: Vec<AnalyticSim>,
     pub budgets: Vec<usize>,
+    /// Per-sweep (one wave attempt per live shard) per-client delivered
+    /// tokens. Recorded only when the scenario carries a fault schedule —
+    /// chaos-free runs leave it empty and take the exact pre-chaos code
+    /// path. `benches/chaos.rs` windows its goodput/fairness recovery
+    /// envelopes over this series.
+    pub wave_tokens: Vec<Vec<u64>>,
 }
 
 impl ShardedSimOutcome {
@@ -776,6 +845,20 @@ impl ShardedSimOutcome {
         Some(summarize_requests(&records, censored))
     }
 
+    /// All fault/recovery events across the shard recorders (recorded
+    /// order per shard; chaos-free runs return an empty list).
+    pub fn faults(&self) -> Vec<FaultRecord> {
+        self.shards.iter().flat_map(|s| s.recorder().faults.iter().cloned()).collect()
+    }
+
+    /// Waves-to-recover for every completed crash/recover pair.
+    pub fn time_to_recover(&self) -> Vec<u64> {
+        self.shards
+            .iter()
+            .flat_map(|s| s.recorder().time_to_recover.iter().copied())
+            .collect()
+    }
+
     /// Mean goodput per delivered verdict (steady-state tokens/verdict —
     /// the timing-free quantity that must agree with the live pool).
     pub fn goodput_per_verdict(&self) -> f64 {
@@ -814,14 +897,160 @@ fn sharded_budgets(capacity: usize, max_draft: usize, shards: &[AnalyticSim]) ->
     split_budget_by_members(capacity, max_draft, &members_per_shard, &alpha_hat, &x_beta)
 }
 
+/// RTT inflation a partitioned client sees while traffic routes around
+/// the outage — one scalar standing in for [`Link::degraded`]'s
+/// latency × bandwidth dilation. A power of two, so the heal wave
+/// restores the original RTT bit-exactly.
+const PARTITION_RTT_FACTOR: f64 = 8.0;
+
+/// Shard currently serving `client`, if any. Faults can target clients
+/// that already churned away; those ops are skipped, like the live
+/// driver's fault-skipped path.
+fn owner_of(shards: &[AnalyticSim], client: usize) -> Option<usize> {
+    shards.iter().position(|s| s.members().contains(&client))
+}
+
+/// Apply one compiled fault to the sharded analytic pool — the simulator
+/// half of the live pool driver's fault path, consuming the same
+/// [`FaultSchedule::compiled`](crate::chaos::FaultSchedule::compiled)
+/// list on the same pooled wave clock. Crash migration re-seeds movers
+/// from the adopting shard's population prior (the live crash-handoff
+/// rule); recovery returns the shard's home clients immediately,
+/// carrying their current estimates — the instantaneous stand-in for the
+/// live rebalancer's gradual one-client-per-tick repatriation (see
+/// DESIGN.md §9 for the envelope-comparison caveats).
+fn apply_sim_fault(
+    shards: &mut [AnalyticSim],
+    live: &mut [bool],
+    crashed_at: &mut [Option<u64>],
+    wave: u64,
+    op: FaultOp,
+) {
+    let m = shards.len();
+    match op {
+        FaultOp::Crash { shard } => {
+            if !live[shard] {
+                return;
+            }
+            let survivors: Vec<usize> = (0..m).filter(|&s| s != shard && live[s]).collect();
+            if survivors.is_empty() {
+                shards[shard].core.recorder.note_fault(FaultRecord {
+                    wave,
+                    shard,
+                    kind: "fault-skipped".into(),
+                    detail: "crash without a live survivor; ignored".into(),
+                });
+                return;
+            }
+            live[shard] = false;
+            crashed_at[shard] = Some(wave);
+            let movers = shards[shard].members().to_vec();
+            for (k, &c) in movers.iter().enumerate() {
+                shards[shard].release_member(c);
+                shards[survivors[k % survivors.len()]].adopt_member(c, None);
+            }
+            shards[shard].core.recorder.note_fault(FaultRecord {
+                wave,
+                shard,
+                kind: "shard-crash".into(),
+                detail: format!(
+                    "{} clients migrated to surviving shards {survivors:?}",
+                    movers.len()
+                ),
+            });
+        }
+        FaultOp::Recover { shard } => {
+            if live[shard] {
+                return;
+            }
+            let Some(at) = crashed_at[shard].take() else { return };
+            live[shard] = true;
+            let mut moved = 0usize;
+            for src in 0..m {
+                if src == shard {
+                    continue;
+                }
+                let home: Vec<usize> =
+                    shards[src].members().iter().copied().filter(|&c| c % m == shard).collect();
+                for c in home {
+                    let est = shards[src].estimators();
+                    let prior = (est.alpha_hat[c], est.x_beta[c], est.observations(c));
+                    shards[src].release_member(c);
+                    shards[shard].adopt_member(c, Some(prior));
+                    moved += 1;
+                }
+            }
+            let rec = &mut shards[shard].core.recorder;
+            rec.time_to_recover.push(wave.saturating_sub(at).max(1));
+            rec.note_fault(FaultRecord {
+                wave,
+                shard,
+                kind: "shard-recover".into(),
+                detail: format!("re-admitted; {moved} home clients returned"),
+            });
+        }
+        FaultOp::PartitionStart { client, until } => {
+            // Inflate in every simulator, so a crash migration during
+            // the outage window carries the degraded RTT with it.
+            for sim in shards.iter_mut() {
+                sim.scale_rtt(client, PARTITION_RTT_FACTOR);
+            }
+            let s = owner_of(shards, client).unwrap_or(0);
+            shards[s].core.recorder.note_fault(FaultRecord {
+                wave,
+                shard: s,
+                kind: "partition".into(),
+                detail: format!(
+                    "client {client} routed around an outage until wave {until} \
+                     (rtt ×{PARTITION_RTT_FACTOR})"
+                ),
+            });
+        }
+        FaultOp::PartitionHeal { client } => {
+            for sim in shards.iter_mut() {
+                sim.scale_rtt(client, 1.0 / PARTITION_RTT_FACTOR);
+            }
+            let s = owner_of(shards, client).unwrap_or(0);
+            shards[s].core.recorder.note_fault(FaultRecord {
+                wave,
+                shard: s,
+                kind: "partition-heal".into(),
+                detail: format!("client {client} uplink restored"),
+            });
+        }
+        FaultOp::Drop { client, count } => {
+            let Some(s) = owner_of(shards, client) else { return };
+            shards[s].stall_client(client, count);
+            shards[s].core.recorder.note_fault(FaultRecord {
+                wave,
+                shard: s,
+                kind: "drop-burst".into(),
+                detail: format!("{count} drafts dropped; client {client} stalls to redraft"),
+            });
+        }
+        FaultOp::Duplicate { client, count } => {
+            let Some(s) = owner_of(shards, client) else { return };
+            shards[s].core.recorder.note_fault(FaultRecord {
+                wave,
+                shard: s,
+                kind: "duplicate-burst".into(),
+                detail: format!("{count} duplicate drafts discarded before verification"),
+            });
+        }
+    }
+}
+
 /// Analytic counterpart of the live verifier pool: `num_verifiers`
 /// restricted simulators (client i on shard i mod M), each consuming its
 /// budget slice, with the split recomputed every
 /// `shard_rebalance_every` waves from the shards' own estimator state.
 /// Runs until the global verification budget (`rounds × num_clients`
-/// verdicts) is consumed. Client migration is not modeled — the live pool
-/// additionally rebalances membership; the steady-state scheduling and
-/// accounting are the shared-core code either way.
+/// verdicts) is consumed. Pressure-driven client rebalancing is not
+/// modeled (the steady-state scheduling and accounting are the
+/// shared-core code either way), but the scenario's fault schedule is:
+/// shard crashes migrate the victims to survivors and recovery brings
+/// them home, on the same pooled wave clock the live driver uses, so
+/// live and analytic recovery envelopes cross-check.
 pub fn run_sharded(scenario: &Scenario, policy: Policy) -> ShardedSimOutcome {
     run_sharded_with(scenario, policy, |_| {})
 }
@@ -853,12 +1082,37 @@ pub fn run_sharded_with(
     let every = scenario.shard_rebalance_every;
     let mut delivered = 0u64;
     let mut waves = 0u64;
+    // The mirrored fault schedule, on the live driver's pooled wave
+    // clock (total shard waves ÷ M). Empty schedules leave every branch
+    // below untaken — chaos-free runs are bit-identical to the
+    // pre-chaos simulator.
+    let chaos: Vec<(u64, FaultOp)> = scenario.chaos.compiled();
+    let chaos_active = !chaos.is_empty();
+    let mut chaos_cursor = 0usize;
+    let mut live = vec![true; m];
+    let mut crashed_at: Vec<Option<u64>> = vec![None; m];
+    let slots = shards.first().map_or(0, |s| s.clients.len());
+    let mut wave_tokens: Vec<Vec<u64>> = Vec::new();
     'run: loop {
+        // Fault boundary: apply every op due before this sweep forms,
+        // so the live and analytic paths see one schedule on one clock.
+        while chaos_cursor < chaos.len() && chaos[chaos_cursor].0 <= waves / m as u64 {
+            let (at, op) = chaos[chaos_cursor].clone();
+            chaos_cursor += 1;
+            apply_sim_fault(&mut shards, &mut live, &mut crashed_at, at, op);
+        }
+        let mut row = vec![0u64; if chaos_active { slots } else { 0 }];
         for s in 0..m {
-            if shards[s].members().is_empty() {
+            if !live[s] || shards[s].members().is_empty() {
                 continue;
             }
-            delivered += shards[s].step_wave().len() as u64;
+            let outcomes = shards[s].step_wave();
+            delivered += outcomes.len() as u64;
+            if chaos_active {
+                for &(c, g) in &outcomes {
+                    row[c] += g as u64;
+                }
+            }
             waves += 1;
             if every > 0 && waves % every == 0 {
                 budgets = sharded_budgets(scenario.capacity, scenario.max_draft, &shards);
@@ -867,8 +1121,14 @@ pub fn run_sharded_with(
                 }
             }
             if delivered >= total {
+                if chaos_active {
+                    wave_tokens.push(row);
+                }
                 break 'run;
             }
+        }
+        if chaos_active {
+            wave_tokens.push(row);
         }
     }
     // Trace-driven runs: close each shard's request books (disjoint
@@ -876,7 +1136,7 @@ pub fn run_sharded_with(
     for sim in shards.iter_mut() {
         sim.close_request_books();
     }
-    ShardedSimOutcome { shards, budgets }
+    ShardedSimOutcome { shards, budgets, wave_tokens }
 }
 
 #[cfg(test)]
@@ -1280,6 +1540,74 @@ mod tests {
         assert!(avg.iter().all(|&g| g >= 1.0), "{avg:?}");
         assert!(out.goodput_per_verdict() >= 1.0);
         assert!(out.aggregate_rate() > 0.0);
+    }
+
+    /// The chaos mirror: a scheduled shard crash migrates its clients to
+    /// the survivor mid-run, recovery repatriates them, the other fault
+    /// kinds land in the log, and the per-sweep token series covers the
+    /// run — while chaos-free runs keep every new surface empty.
+    #[test]
+    fn sharded_chaos_crash_migrates_and_recovers() {
+        use crate::chaos::{FaultEvent, FaultKind, FaultSchedule};
+        let mut s = Scenario::preset("sharded").unwrap();
+        s.rounds = 120;
+        s.num_verifiers = 2;
+        s.chaos = FaultSchedule {
+            events: vec![
+                FaultEvent {
+                    at_wave: 20,
+                    kind: FaultKind::ShardCrash { shard: 1, recover_wave: Some(40) },
+                },
+                FaultEvent {
+                    at_wave: 30,
+                    kind: FaultKind::Partition { client: 0, heal_wave: 45 },
+                },
+                FaultEvent { at_wave: 35, kind: FaultKind::DropBurst { client: 1, count: 2 } },
+                FaultEvent {
+                    at_wave: 35,
+                    kind: FaultKind::DuplicateBurst { client: 2, count: 3 },
+                },
+            ],
+        };
+        assert!(s.validate().is_ok());
+        let out = run_sharded(&s, Policy::GoodSpeed);
+        // The budget is consumed despite the outage window.
+        let delivered: u64 = out
+            .shards
+            .iter()
+            .map(|sh| sh.recorder().participation().iter().sum::<u64>())
+            .sum();
+        assert!(delivered >= s.rounds * s.num_clients as u64);
+        // Every client kept serving through the crash.
+        let avg = out.avg_goodput();
+        assert!(avg.iter().all(|&g| g >= 1.0), "{avg:?}");
+        // The fault log carries the full lifecycle, once each.
+        let kinds: Vec<String> = out.faults().iter().map(|f| f.kind.clone()).collect();
+        for k in [
+            "shard-crash",
+            "shard-recover",
+            "partition",
+            "partition-heal",
+            "drop-burst",
+            "duplicate-burst",
+        ] {
+            assert_eq!(kinds.iter().filter(|x| *x == k).count(), 1, "{k} in {kinds:?}");
+        }
+        let ttr = out.time_to_recover();
+        assert_eq!(ttr.len(), 1);
+        assert!(ttr[0] >= 1, "{ttr:?}");
+        // The windowed series covers the run: one row per sweep, one
+        // column per client slot, with tokens actually accumulated.
+        assert!(!out.wave_tokens.is_empty());
+        let slots = out.shards[0].clients.len();
+        assert!(out.wave_tokens.iter().all(|r| r.len() == slots));
+        let toks: u64 = out.wave_tokens.iter().flatten().sum();
+        assert!(toks >= delivered, "{toks} tokens over {delivered} verdicts");
+        // Chaos-free runs keep the new surfaces empty (pre-chaos path).
+        s.chaos = FaultSchedule::default();
+        let bare = run_sharded(&s, Policy::GoodSpeed);
+        assert!(bare.wave_tokens.is_empty());
+        assert!(bare.faults().is_empty() && bare.time_to_recover().is_empty());
     }
 
     #[test]

@@ -87,6 +87,73 @@ mod tests {
         assert_eq!(after, seen);
     }
 
+    /// Concurrent notifiers: every `notify` bumps the counter exactly
+    /// once (no lost updates under contention), and a waiter chasing the
+    /// counter with stale snapshots observes it monotonically all the
+    /// way to the final count — no notification is slept through.
+    #[test]
+    fn concurrent_notifiers_never_lose_a_count() {
+        const THREADS: u64 = 8;
+        const NOTIFIES: u64 = 200;
+        let w = Arc::new(Wakeup::new());
+        let s0 = w.seq();
+        let target = s0 + THREADS * NOTIFIES;
+        let chaser = {
+            let w = w.clone();
+            std::thread::spawn(move || {
+                let mut seen = s0;
+                let mut observed = Vec::new();
+                while seen < target {
+                    let next = w.wait_timeout(seen, Duration::from_millis(50));
+                    assert!(next >= seen, "counter went backwards: {next} < {seen}");
+                    observed.push(next);
+                    seen = next;
+                }
+                observed
+            })
+        };
+        let notifiers: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let w = w.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..NOTIFIES {
+                        w.notify();
+                    }
+                })
+            })
+            .collect();
+        for h in notifiers {
+            h.join().expect("notifier");
+        }
+        let observed = chaser.join().expect("chaser");
+        assert_eq!(w.seq(), target);
+        assert!(observed.windows(2).all(|p| p[0] <= p[1]), "non-monotonic observations");
+        assert_eq!(*observed.last().expect("progress"), target);
+    }
+
+    /// Spurious-wakeup discipline: the contract is "returns the current
+    /// counter", not "returns because of a notification" — callers
+    /// re-check their condition on every return. A stale snapshot must
+    /// therefore return immediately however many times it is retried,
+    /// while a fresh snapshot is *not* woken by past notifications.
+    #[test]
+    fn stale_snapshot_returns_immediately_on_every_retry() {
+        let w = Wakeup::new();
+        let s0 = w.seq();
+        w.notify();
+        w.notify();
+        for _ in 0..100 {
+            let t0 = Instant::now();
+            let cur = w.wait_timeout(s0, Duration::from_secs(5));
+            assert_eq!(cur, s0 + 2);
+            assert!(t0.elapsed() < Duration::from_secs(1));
+        }
+        let seen = w.seq();
+        let t0 = Instant::now();
+        assert_eq!(w.wait_timeout(seen, Duration::from_millis(5)), seen);
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
     /// The point of the primitive: an idle waiter observes a notification
     /// in well under one former 2ms sleep tick. Measured notify→wake on a
     /// parked thread, min over repeated trials (min, not mean, so a noisy
