@@ -61,13 +61,14 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::leader::{Leader, PoolReport, RunConfig, RunOutcome, Transport};
-use super::pipeline::{VerifyStage, OVERLAP_TICK};
+use super::pipeline::{StageObs, VerifyStage, OVERLAP_TICK};
 use crate::configsys::{ChurnEvent, ChurnKind, ClientSpec, CoordMode, Policy, Scenario};
 use crate::draft::{spawn_draft_server, DraftServerConfig, DraftStats};
 use crate::error::{ConfigError, GoodSpeedError};
 use crate::metrics::recorder::{MembershipEvent, Recorder};
 use crate::net::transport::{channel_transport, ClientPort, ServerSide, TcpTransport};
 use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, VerdictMsg, PROTOCOL_VERSION};
+use crate::obs::{ObsHub, ObsOptions};
 use crate::runtime::EngineFactory;
 use crate::serve::{RequestTrace, RequestTracker};
 use crate::util::{Rng, Stopwatch};
@@ -132,6 +133,13 @@ pub struct ClusterStats {
     pub attached_total: u64,
     /// Sessions retired over the cluster's lifetime.
     pub retired_total: u64,
+    /// Per-shard liveness (single-verifier runs publish one `true`;
+    /// pooled runs mirror the survivable pool's live mask).
+    pub shard_live: Vec<bool>,
+    /// Cross-shard client migrations so far (pooled runs only).
+    pub migrations: u64,
+    /// Handoffs lost to shard failures so far (pooled runs only).
+    pub handoffs_lost: u64,
 }
 
 /// Namespace for [`Cluster::builder`] — the entry point of the serving
@@ -151,6 +159,7 @@ impl Cluster {
             simulate_network: false,
             factory: None,
             extra_slots: 0,
+            obs: None,
         }
     }
 }
@@ -163,6 +172,7 @@ pub struct ClusterBuilder {
     simulate_network: bool,
     factory: Option<Arc<dyn EngineFactory>>,
     extra_slots: usize,
+    obs: Option<ObsOptions>,
 }
 
 impl ClusterBuilder {
@@ -199,6 +209,16 @@ impl ClusterBuilder {
         self
     }
 
+    /// Attach the live telemetry layer (flight recorder, metrics
+    /// registry, postmortem trigger — DESIGN.md §10). Off by default;
+    /// when off no observability code runs, and when on no RNG stream or
+    /// hot-path allocation changes, so output stays bit-identical either
+    /// way. Reach the hub via [`ServingHandle::observer`].
+    pub fn observability(mut self, opts: ObsOptions) -> Self {
+        self.obs = Some(opts);
+        self
+    }
+
     /// Validate, spawn the coordinator, admit the initial clients, and
     /// return the serving handle.
     pub fn start(self) -> Result<ServingHandle> {
@@ -209,6 +229,10 @@ impl ClusterBuilder {
             .ok_or_else(|| anyhow!("configuration error: ClusterBuilder requires an engine \
                                     factory (ClusterBuilder::engine)"))?;
         let slots = scenario.num_clients + scenario.churn.join_count() + self.extra_slots;
+        let obs = self
+            .obs
+            .as_ref()
+            .map(|opts| Arc::new(ObsHub::new(scenario.num_verifiers.max(1), slots, opts)));
         let cfg = RunConfig {
             scenario,
             policy: self.policy,
@@ -222,6 +246,7 @@ impl ClusterBuilder {
         // inside the coordinator thread; a readiness channel carries the
         // construction result back to the caller.
         let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let obs_thread = obs.clone();
         let thread = std::thread::Builder::new()
             .name("goodspeed-cluster".into())
             .spawn(move || -> Result<RunOutcome> {
@@ -233,6 +258,7 @@ impl ClusterBuilder {
                         Some(ctl_rx),
                         Some(snap),
                         Some(ready_tx),
+                        obs_thread,
                     )?;
                     return Ok(RunOutcome {
                         recorder: out.recorder,
@@ -244,7 +270,8 @@ impl ClusterBuilder {
                         }),
                     });
                 }
-                let mut engine = match ClusterEngine::new(&cfg, factory, slots, ctl_rx, snap) {
+                let built = ClusterEngine::new(&cfg, factory, slots, ctl_rx, snap, obs_thread);
+                let mut engine = match built {
                     Ok(engine) => {
                         let _ = ready_tx.send(Ok(()));
                         engine
@@ -268,7 +295,7 @@ impl ClusterBuilder {
                 };
             }
         }
-        Ok(ServingHandle { ctl: Some(ctl_tx), snapshot, thread: Some(thread) })
+        Ok(ServingHandle { ctl: Some(ctl_tx), snapshot, thread: Some(thread), obs })
     }
 }
 
@@ -279,6 +306,7 @@ pub struct ServingHandle {
     ctl: Option<Sender<Ctl>>,
     snapshot: Arc<Mutex<ClusterStats>>,
     thread: Option<JoinHandle<Result<RunOutcome>>>,
+    obs: Option<Arc<ObsHub>>,
 }
 
 impl ServingHandle {
@@ -322,6 +350,14 @@ impl ServingHandle {
     /// The latest wave boundary's cluster state.
     pub fn snapshot(&self) -> ClusterStats {
         self.snapshot.lock().expect("snapshot lock").clone()
+    }
+
+    /// The telemetry hub, when [`ClusterBuilder::observability`] was set.
+    /// Clone it *before* [`ServingHandle::wait`]/[`ServingHandle::stop`]
+    /// — both consume the handle — to export traces or serve metrics
+    /// while the cluster runs.
+    pub fn observer(&self) -> Option<Arc<ObsHub>> {
+        self.obs.clone()
     }
 
     /// Request shutdown at the next wave boundary and collect the run.
@@ -414,6 +450,8 @@ struct ClusterEngine {
     /// place membership may change).
     pending_ctl: Option<Ctl>,
     snapshot: Arc<Mutex<ClusterStats>>,
+    /// Telemetry hub (`None` = observability off; no code path changes).
+    obs: Option<Arc<ObsHub>>,
 }
 
 impl ClusterEngine {
@@ -423,6 +461,7 @@ impl ClusterEngine {
         slots: usize,
         ctl_rx: Receiver<Ctl>,
         snapshot: Arc<Mutex<ClusterStats>>,
+        obs: Option<Arc<ObsHub>>,
     ) -> Result<ClusterEngine> {
         let scenario = cfg.scenario.clone();
         let n = scenario.num_clients;
@@ -481,6 +520,7 @@ impl ClusterEngine {
             ctl_gone: false,
             pending_ctl: None,
             snapshot,
+            obs,
             scenario,
         };
 
@@ -589,6 +629,9 @@ impl ClusterEngine {
         self.expected_round[slot] = 0;
         self.attached_total += 1;
         self.epoch += 1;
+        if let Some(hub) = &self.obs {
+            hub.note_epoch(0, self.epoch);
+        }
         let ev = MembershipEvent {
             wave,
             epoch: self.epoch,
@@ -622,6 +665,9 @@ impl ClusterEngine {
             tracker.untrack(id, wave);
         }
         self.epoch += 1;
+        if let Some(hub) = &self.obs {
+            hub.note_epoch(0, self.epoch);
+        }
         let _ = (self.server.txs[id])(&Message::Leave(LeaveMsg {
             client_id: id as u32,
             epoch: self.epoch,
@@ -727,6 +773,32 @@ impl ClusterEngine {
         snap.slots = self.state.len();
         snap.attached_total = self.attached_total;
         snap.retired_total = self.retired_total;
+        snap.shard_live.clear();
+        snap.shard_live.push(true);
+        snap.migrations = 0;
+        snap.handoffs_lost = self.leader.core.recorder.handoffs_lost;
+    }
+
+    /// Post-wave telemetry: flight-ring wave span + registry refresh +
+    /// the SLO-breach streak feed. Atomics only — no allocation, no RNG,
+    /// so an observed run stays bit-identical to an unobserved one.
+    fn observe_wave(&self, wave: u64) {
+        let Some(hub) = &self.obs else { return };
+        if let Some((_, _, recv, verify, send)) = self.leader.core.recorder.last_wave_phases() {
+            hub.wave_span(0, wave, recv, verify, send);
+        }
+        let mut outstanding = 0u64;
+        for i in 0..self.state.len() {
+            outstanding += self.leader.core.outstanding(i) as u64;
+        }
+        hub.publish_wave_stats(
+            &self.leader.core.recorder,
+            outstanding,
+            self.scenario.capacity as u64,
+        );
+        if let Some(tracker) = &self.tracker {
+            hub.note_slo_expired(tracker.slo_missed());
+        }
     }
 
     /// Answer a session hello.
@@ -826,10 +898,12 @@ impl ClusterEngine {
         // own thread; serial stays the default. Held as a local so the
         // overlap loop can keep borrowing `self` for fan-in ingest.
         let mut stage: Option<VerifyStage> = if self.scenario.pipelined {
-            Some(VerifyStage::spawn(
+            let sobs = self.obs.as_ref().map(|hub| StageObs { hub: Arc::clone(hub), shard: 0 });
+            Some(VerifyStage::spawn_observed(
                 self.factory.clone(),
                 &self.scenario.family,
                 "goodspeed-verify-stage",
+                sobs,
             )?)
         } else {
             None
@@ -957,6 +1031,7 @@ impl ClusterEngine {
             }
             self.leader.note_send_ns(sw.lap().as_nanos() as u64);
             self.delivered += verdicts.len() as u64;
+            self.observe_wave(wave);
 
             // Attribute the wave's realized goodput to active requests.
             if let Some(tracker) = &mut self.tracker {
@@ -1020,10 +1095,12 @@ impl ClusterEngine {
         // Opt-in pipelined verify stage (see `run_sync`); in async mode
         // the coordinator overlaps fan-in draining with the forward.
         let mut stage: Option<VerifyStage> = if self.scenario.pipelined {
-            Some(VerifyStage::spawn(
+            let sobs = self.obs.as_ref().map(|hub| StageObs { hub: Arc::clone(hub), shard: 0 });
+            Some(VerifyStage::spawn_observed(
                 self.factory.clone(),
                 &self.scenario.family,
                 "goodspeed-verify-stage",
+                sobs,
             )?)
         } else {
             None
@@ -1130,6 +1207,7 @@ impl ClusterEngine {
             }
             self.delivered += verdicts.len() as u64;
             self.leader.note_send_ns(sw.lap().as_nanos() as u64);
+            self.observe_wave(wave);
 
             // Attribute the wave's realized goodput to active requests.
             if let Some(tracker) = &mut self.tracker {

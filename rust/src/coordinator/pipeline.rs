@@ -31,6 +31,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use super::batcher::WaveArena;
+use crate::obs::ObsHub;
 use crate::runtime::{EngineFactory, VerifyOutput};
 
 /// How long an overlap loop parks on [`VerifyStage::take_done_timeout`]
@@ -102,6 +103,15 @@ struct Done {
     result: Result<()>,
 }
 
+/// Observability hookup for a stage thread: which hub to feed and which
+/// shard's stage track to write. The stage numbers its own waves (jobs
+/// don't carry wave ids) — the track shows *stage occupancy*, which is
+/// what the overlap question needs.
+pub struct StageObs {
+    pub hub: Arc<ObsHub>,
+    pub shard: usize,
+}
+
 /// A dedicated verifier thread executing `verify_into` for one shard.
 /// At most one wave is in flight; buffers move through by value and come
 /// back with the result, so their capacity is never dropped.
@@ -120,6 +130,19 @@ impl VerifyStage {
         factory: Arc<dyn EngineFactory>,
         family: &str,
         thread_name: &str,
+    ) -> Result<VerifyStage> {
+        VerifyStage::spawn_observed(factory, family, thread_name, None)
+    }
+
+    /// [`VerifyStage::spawn`] with an optional flight-recorder hookup:
+    /// each forward is timed on the stage thread and recorded as a
+    /// stage span (atomics only — the unobserved path is untouched, the
+    /// observed path allocation-free).
+    pub fn spawn_observed(
+        factory: Arc<dyn EngineFactory>,
+        family: &str,
+        thread_name: &str,
+        obs: Option<StageObs>,
     ) -> Result<VerifyStage> {
         let job = Arc::new(HandoffSlot::new());
         let done = Arc::new(HandoffSlot::new());
@@ -148,10 +171,24 @@ impl VerifyStage {
                         return;
                     }
                 };
+                let mut stage_wave = 0u64;
                 loop {
                     match job2.take() {
                         Job::Verify { arena, mut out } => {
-                            let result = verifier.verify_into(&arena.req, &mut out);
+                            let result = match &obs {
+                                Some(o) => {
+                                    let t0 = std::time::Instant::now();
+                                    let r = verifier.verify_into(&arena.req, &mut out);
+                                    o.hub.stage_span(
+                                        o.shard,
+                                        stage_wave,
+                                        t0.elapsed().as_nanos() as u64,
+                                    );
+                                    stage_wave += 1;
+                                    r
+                                }
+                                None => verifier.verify_into(&arena.req, &mut out),
+                            };
                             done2.put(Done { arena, out, result });
                         }
                         Job::Stop => break,

@@ -57,7 +57,7 @@ use anyhow::{anyhow, Result};
 
 use super::cluster::{ClientId, ClusterStats, Ctl, SlotState};
 use super::leader::{Leader, RunConfig, Transport};
-use super::pipeline::{VerifyStage, OVERLAP_TICK};
+use super::pipeline::{StageObs, VerifyStage, OVERLAP_TICK};
 use crate::chaos::FaultOp;
 use crate::configsys::{ChurnEvent, ChurnKind, ClientSpec, Scenario};
 use crate::draft::{spawn_draft_server, DraftServerConfig, DraftStats};
@@ -68,6 +68,7 @@ use crate::net::transport::{
     sharded_channel_transport, ClientPort, ServerSide, ShardRouter,
 };
 use crate::net::wire::{DraftMsg, JoinAckMsg, LeaveMsg, Message, VerdictMsg, PROTOCOL_VERSION};
+use crate::obs::ObsHub;
 use crate::runtime::EngineFactory;
 use crate::sched::gradient::split_budget_by_members;
 use crate::sched::utility::{LogUtility, Utility};
@@ -274,7 +275,12 @@ fn compute_budgets(scenario: &Scenario, ctl: &PoolCtl) -> Vec<usize> {
 /// imbalance is material (> 1.5×) and the donor keeps ≥ 1 member.
 /// The hi/lo pick reads the cached per-shard pressure aggregates (O(M));
 /// only the donor's own member list is walked for the starvation pick.
-fn controller_step(scenario: &Scenario, router: &ShardRouter, ctl: &mut PoolCtl) {
+fn controller_step(
+    scenario: &Scenario,
+    router: &ShardRouter,
+    ctl: &mut PoolCtl,
+    obs: Option<&ObsHub>,
+) {
     ctl.budgets = compute_budgets(scenario, ctl);
     let u = LogUtility;
     let m = ctl.members.len();
@@ -327,6 +333,10 @@ fn controller_step(scenario: &Scenario, router: &ShardRouter, ctl: &mut PoolCtl)
         handoff: true,
     });
     ctl.migrations += 1;
+    if let Some(hub) = obs {
+        hub.note_migration(hi, client as u64);
+        hub.metrics.migrations_total.add(1);
+    }
     // Budgets follow the new membership immediately.
     ctl.budgets = compute_budgets(scenario, ctl);
 }
@@ -415,6 +425,7 @@ fn apply_inbox(
 /// current budget slice. Walks only this shard's member list — never the
 /// slot universe — so the per-wave coordinator cost scales with shard
 /// occupancy, not fleet size.
+#[allow(clippy::too_many_arguments)]
 fn post_wave(
     scenario: &Scenario,
     shard: usize,
@@ -423,6 +434,7 @@ fn post_wave(
     shared: &PoolShared,
     members: &mut Vec<usize>,
     serve: &mut Option<ShardTracker>,
+    obs: Option<&ObsHub>,
 ) {
     let mut ctl = shared.ctl.lock().expect("pool lock");
     let lg = leader.core.recorder.lifetime_goodput();
@@ -445,7 +457,7 @@ fn post_wave(
     ctl.waves += 1;
     let every = scenario.shard_rebalance_every;
     if every > 0 && ctl.waves % every == 0 {
-        controller_step(scenario, router, &mut ctl);
+        controller_step(scenario, router, &mut ctl, obs);
     }
     apply_inbox(shard, leader, &mut ctl, members, serve.as_mut());
     leader.core.set_capacity(ctl.budgets[shard]);
@@ -533,6 +545,7 @@ fn run_shard_loop(
     shared: &PoolShared,
     serve: &mut Option<ShardTracker>,
     mut stage: Option<VerifyStage>,
+    obs: Option<&ObsHub>,
 ) -> Result<u64> {
     let slots = router.num_clients();
     let window = Duration::from_micros(scenario.batch_window_us);
@@ -698,6 +711,12 @@ fn run_shard_loop(
             (server.txs[vd.client_id as usize])(&Message::Verdict(vd.clone()))?;
         }
         leader.note_send_ns(sw.lap().as_nanos() as u64);
+        // Flight-recorder wave span (atomics only; no RNG, no alloc).
+        if let Some(hub) = obs {
+            if let Some((_, _, recv, verify, send)) = leader.core.recorder.last_wave_phases() {
+                hub.wave_span(shard, wave, recv, verify, send);
+            }
+        }
         if let Some(st) = serve.as_mut() {
             outcomes.clear();
             outcomes.extend(
@@ -767,6 +786,9 @@ fn run_shard_loop(
                 ctl.events.push(ev);
                 ctl.epoch
             };
+            if let Some(hub) = obs {
+                hub.note_epoch(shard, epoch);
+            }
             let _ = (server.txs[id])(&Message::Leave(LeaveMsg {
                 client_id: id as u32,
                 epoch,
@@ -774,7 +796,7 @@ fn run_shard_loop(
             leader.core.retire_member(id);
         }
         // Phase 7 — controller interaction (publish, rebalance, adopt).
-        post_wave(scenario, shard, leader, router, shared, &mut members, serve);
+        post_wave(scenario, shard, leader, router, shared, &mut members, serve, obs);
     }
     if dup_drops > 0 {
         let mut ctl = shared.ctl.lock().expect("pool lock");
@@ -826,6 +848,7 @@ fn migrate_members_to_survivors(
     shard: usize,
     survivors: &[usize],
     donor_alive: bool,
+    obs: Option<&ObsHub>,
 ) -> Vec<usize> {
     let members = ctl.members[shard].clone();
     let serving = ctl.serving();
@@ -854,6 +877,10 @@ fn migrate_members_to_survivors(
             handoff: donor_alive,
         });
         ctl.migrations += 1;
+        if let Some(hub) = obs {
+            hub.note_migration(shard, client as u64);
+            hub.metrics.migrations_total.add(1);
+        }
     }
     ctl.budgets = compute_budgets(scenario, ctl);
     members
@@ -873,6 +900,7 @@ fn abandon_shard(
     shared: &PoolShared,
     shard: usize,
     why: &str,
+    obs: Option<&ObsHub>,
 ) {
     let mut ctl = shared.ctl.lock().expect("pool lock");
     let m = router.num_shards();
@@ -883,11 +911,15 @@ fn abandon_shard(
     ctl.crash_wave[shard] = None;
     if survivors.is_empty() {
         drop(ctl);
+        if let Some(hub) = obs {
+            hub.note_fault(shard, "shard-abandoned");
+        }
         shared.stop.store(true, Ordering::Release);
         shared.wakeup.notify();
         return;
     }
-    let moved = migrate_members_to_survivors(scenario, router, &mut ctl, shard, &survivors, false);
+    let moved =
+        migrate_members_to_survivors(scenario, router, &mut ctl, shard, &survivors, false, obs);
     let wave = ctl.waves / m.max(1) as u64;
     ctl.faults.push(FaultRecord {
         wave,
@@ -896,6 +928,11 @@ fn abandon_shard(
         detail: format!("{why}; clients {moved:?} rerouted to shards {survivors:?}"),
     });
     drop(ctl);
+    // A dying shard is the flight recorder's marquee trigger: the instant
+    // lands in the ring and the postmortem window dumps (latched).
+    if let Some(hub) = obs {
+        hub.note_fault(shard, "shard-abandoned");
+    }
     shared.wakeup.notify();
 }
 
@@ -952,6 +989,8 @@ struct PoolDriver {
     root_rng: Rng,
     max_rounds: u64,
     snapshot: Option<Arc<Mutex<ClusterStats>>>,
+    /// Telemetry hub (`None` = observability off; no code path changes).
+    obs: Option<Arc<ObsHub>>,
 }
 
 impl PoolDriver {
@@ -1061,6 +1100,9 @@ impl PoolDriver {
             ctl.state[slot] = SlotState::Active;
             ctl.epoch += 1;
             ctl.attached_total += 1;
+            if let Some(hub) = &self.obs {
+                hub.note_epoch(shard, ctl.epoch);
+            }
             // Event waves are on the mean per-shard scale (M = 1 ⇒ the
             // plain wave counter), matching the schedule clock.
             let ev = MembershipEvent {
@@ -1113,6 +1155,10 @@ impl PoolDriver {
                 kind: "fault-skipped".into(),
                 detail: "no live survivor shard; crash not injected".into(),
             });
+            drop(ctl);
+            if let Some(hub) = &self.obs {
+                hub.note_fault(shard, "fault-skipped");
+            }
             return;
         }
         ctl.live[shard] = false;
@@ -1124,6 +1170,7 @@ impl PoolDriver {
             shard,
             &survivors,
             true,
+            self.obs.as_deref(),
         );
         ctl.faults.push(FaultRecord {
             wave,
@@ -1132,6 +1179,9 @@ impl PoolDriver {
             detail: format!("clients {moved:?} migrated to shards {survivors:?}"),
         });
         drop(ctl);
+        if let Some(hub) = &self.obs {
+            hub.note_fault(shard, "shard-crash");
+        }
         self.shared.wakeup.notify();
     }
 
@@ -1153,6 +1203,10 @@ impl PoolDriver {
                     kind: "fault-skipped".into(),
                     detail: "shard was abandoned (dead thread); recovery ignored".into(),
                 });
+                drop(ctl);
+                if let Some(hub) = &self.obs {
+                    hub.note_fault(shard, "fault-skipped");
+                }
                 return;
             }
         };
@@ -1164,8 +1218,11 @@ impl PoolDriver {
             kind: "shard-recover".into(),
             detail: format!("re-admitted {} waves after its crash", wave - crashed_at),
         });
-        controller_step(&self.scenario, &self.router, &mut ctl);
+        controller_step(&self.scenario, &self.router, &mut ctl, self.obs.as_deref());
         drop(ctl);
+        if let Some(hub) = &self.obs {
+            hub.note_fault(shard, "shard-recover");
+        }
         self.shared.wakeup.notify();
     }
 
@@ -1178,6 +1235,10 @@ impl PoolDriver {
         let shard = self.router.shard_of(client);
         let mut ctl = self.shared.ctl.lock().expect("pool lock");
         ctl.faults.push(FaultRecord { wave, shard, kind: kind.into(), detail });
+        drop(ctl);
+        if let Some(hub) = &self.obs {
+            hub.note_fault(shard, kind);
+        }
     }
 
     /// Apply one compiled chaos op at its schedule boundary.
@@ -1213,8 +1274,11 @@ impl PoolDriver {
     }
 
     fn publish(&self) {
+        if self.snapshot.is_none() && self.obs.is_none() {
+            return;
+        }
+        let ctl = self.shared.ctl.lock().expect("pool lock");
         if let Some(snap) = &self.snapshot {
-            let ctl = self.shared.ctl.lock().expect("pool lock");
             let mut s = snap.lock().expect("snapshot lock");
             s.epoch = ctl.epoch;
             s.waves = ctl.waves;
@@ -1229,6 +1293,60 @@ impl PoolDriver {
             s.slots = ctl.state.len();
             s.attached_total = ctl.attached_total;
             s.retired_total = ctl.retired_total;
+            s.shard_live.clear();
+            s.shard_live.extend_from_slice(&ctl.live);
+            s.migrations = ctl.migrations;
+            // Handoff losses are only discovered at the end-of-run merge;
+            // mid-run the pool has lost nothing yet.
+            s.handoffs_lost = 0;
+        }
+        // Registry refresh from the controller's published tables. This
+        // runs on the driver thread (never a shard's wave loop), so the
+        // scratch vectors here cost nothing on the hot path.
+        if let Some(hub) = &self.obs {
+            let m = &hub.metrics;
+            let secs = (hub.now_ns() as f64 / 1e9).max(1e-9);
+            let good = ctl.lifetime_goodput();
+            let part = ctl.participation();
+            let total: f64 = good.iter().sum();
+            m.waves_total.set(ctl.waves);
+            m.tokens_total.set(total as u64);
+            m.waves_per_second.set(ctl.waves as f64 / secs);
+            m.tokens_per_second.set(total / secs);
+            let serving = ctl.serving();
+            let outstanding: u64 = serving.iter().map(|&i| ctl.outstanding[i] as u64).sum();
+            m.outstanding_tokens.set(outstanding as f64);
+            m.capacity_tokens.set(self.scenario.capacity as f64);
+            m.migrations_total.set(ctl.migrations);
+            let (mut sum, mut sum2, mut n) = (0.0f64, 0.0f64, 0u32);
+            for i in 0..good.len() {
+                let p = part.get(i).copied().unwrap_or(0);
+                let rate = if p > 0 { good[i] / p as f64 } else { 0.0 };
+                if let Some(g) = m.client_goodput.get(i) {
+                    g.set(rate);
+                }
+                if p > 0 {
+                    sum += rate;
+                    sum2 += rate * rate;
+                    n += 1;
+                }
+            }
+            let jain = if n > 0 && sum2 > 0.0 {
+                (sum * sum) / (n as f64 * sum2)
+            } else {
+                1.0
+            };
+            m.jain_index.set(jain);
+            for (s, live) in ctl.live.iter().enumerate() {
+                if let Some(g) = m.shard_live.get(s) {
+                    g.set(u64::from(*live));
+                }
+            }
+            for (s, p) in ctl.pressure.iter().enumerate() {
+                if let Some(g) = m.shard_pressure.get(s) {
+                    g.set(*p);
+                }
+            }
         }
     }
 
@@ -1342,13 +1460,14 @@ impl PoolDriver {
 /// path). The session API ([`Cluster`](super::Cluster)) layers churn on
 /// top via the crate-internal `run_pool_dynamic`.
 pub fn run_pool(cfg: &RunConfig, factory: Arc<dyn EngineFactory>) -> Result<PoolOutcome> {
-    run_pool_dynamic(cfg, factory, cfg.scenario.num_clients, None, None, None)
+    run_pool_dynamic(cfg, factory, cfg.scenario.num_clients, None, None, None, None)
 }
 
 /// The pool under the session API: `slots ≥ num_clients` client slots,
 /// scheduled churn from the scenario, and optional external control +
 /// snapshot publishing. With `slots == num_clients`, no schedule, and no
 /// control channel this is exactly the static [`run_pool`].
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pool_dynamic(
     cfg: &RunConfig,
     factory: Arc<dyn EngineFactory>,
@@ -1356,6 +1475,7 @@ pub(crate) fn run_pool_dynamic(
     ctl_rx: Option<Receiver<Ctl>>,
     snapshot: Option<Arc<Mutex<ClusterStats>>>,
     ready: Option<Sender<Result<()>>>,
+    obs: Option<Arc<ObsHub>>,
 ) -> Result<PoolOutcome> {
     let scenario = &cfg.scenario;
     let fail = |e: String| {
@@ -1446,6 +1566,7 @@ pub(crate) fn run_pool_dynamic(
         root_rng: Rng::new(scenario.seed),
         max_rounds: scenario.rounds.saturating_mul(n as u64) + 1,
         snapshot,
+        obs: obs.clone(),
     };
     for i in 0..n {
         let spec = ClientSpec {
@@ -1468,6 +1589,7 @@ pub(crate) fn run_pool_dynamic(
         let factory = factory.clone();
         let router = router.clone();
         let shared = shared.clone();
+        let obs = obs.clone();
         let handle = std::thread::Builder::new()
             .name(format!("verify-shard-{shard}"))
             .spawn(move || -> (Result<u64>, Option<Recorder>, ServerSide) {
@@ -1480,7 +1602,14 @@ pub(crate) fn run_pool_dynamic(
                             // keep answering drafts that raced into its
                             // fan-in. Only a survivor-less pool latches the
                             // global stop (inside `abandon_shard`).
-                            abandon_shard(&scenario, &router, &shared, shard, "engine build failed");
+                            abandon_shard(
+                                &scenario,
+                                &router,
+                                &shared,
+                                shard,
+                                "engine build failed",
+                                obs.as_deref(),
+                            );
                             zombie_drain(&mut server, &shared, shard);
                             return (Err(e), None, server);
                         }
@@ -1489,14 +1618,23 @@ pub(crate) fn run_pool_dynamic(
                 // its own thread (engines are not `Send`); serial remains
                 // the default when `scenario.pipelined` is off.
                 let stage: Option<VerifyStage> = if scenario.pipelined {
-                    match VerifyStage::spawn(
+                    let sobs = obs.as_ref().map(|hub| StageObs { hub: Arc::clone(hub), shard });
+                    match VerifyStage::spawn_observed(
                         factory.clone(),
                         &scenario.family,
                         &format!("verify-stage-{shard}"),
+                        sobs,
                     ) {
                         Ok(s) => Some(s),
                         Err(e) => {
-                            abandon_shard(&scenario, &router, &shared, shard, "stage spawn failed");
+                            abandon_shard(
+                                &scenario,
+                                &router,
+                                &shared,
+                                shard,
+                                "stage spawn failed",
+                                obs.as_deref(),
+                            );
                             zombie_drain(&mut server, &shared, shard);
                             return (Err(e), None, server);
                         }
@@ -1524,7 +1662,14 @@ pub(crate) fn run_pool_dynamic(
                     let trace = match RequestTrace::from_scenario(&scenario, slots) {
                         Ok(t) => t,
                         Err(e) => {
-                            abandon_shard(&scenario, &router, &shared, shard, "trace build failed");
+                            abandon_shard(
+                                &scenario,
+                                &router,
+                                &shared,
+                                shard,
+                                "trace build failed",
+                                obs.as_deref(),
+                            );
                             zombie_drain(&mut server, &shared, shard);
                             return (Err(e), None, server);
                         }
@@ -1547,9 +1692,17 @@ pub(crate) fn run_pool_dynamic(
                     &shared,
                     &mut serve,
                     stage,
+                    obs.as_deref(),
                 );
                 if res.is_err() {
-                    abandon_shard(&scenario, &router, &shared, shard, "shard wave loop failed");
+                    abandon_shard(
+                        &scenario,
+                        &router,
+                        &shared,
+                        shard,
+                        "shard wave loop failed",
+                        obs.as_deref(),
+                    );
                     zombie_drain(&mut server, &shared, shard);
                 }
                 if let (Ok(final_wave), Some(mut st)) = (&res, serve) {
@@ -1672,6 +1825,12 @@ pub(crate) fn run_pool_dynamic(
                     kind: "handoff-lost".into(),
                     detail: format!("client {client}'s migrated request state was never claimed"),
                 });
+                if let Some(hub) = &obs {
+                    hub.note_fault(driver.router.shard_of(client), "handoff-lost");
+                }
+            }
+            if let Some(hub) = &obs {
+                hub.metrics.handoffs_lost_total.set(merged.handoffs_lost);
             }
             ctl.epoch += 1;
             merged.membership.push(MembershipEvent {
@@ -1684,6 +1843,9 @@ pub(crate) fn run_pool_dynamic(
         }
     }
     driver.publish();
+    if let Some(snap) = &driver.snapshot {
+        snap.lock().expect("snapshot lock").handoffs_lost = merged.handoffs_lost;
+    }
     let summary = merged.summary(wall);
     let migrations = shared.ctl.lock().expect("pool lock").migrations;
     Ok(PoolOutcome { recorder: merged, summary, shard_summaries, draft_stats, migrations })

@@ -44,7 +44,7 @@ pub const BENCH_PRESETS: &[&str] = &["sharded", "tree", "churn", "trace"];
 pub const SOAK_SHARDS: &[usize] = &[1, 4, 8];
 
 /// Default on-disk recording (PR-numbered so history accumulates in git).
-pub const DEFAULT_OUT: &str = "BENCH_8.json";
+pub const DEFAULT_OUT: &str = "BENCH_10.json";
 
 /// Fixed anchor for the cumulative (print-only) delta: how far the stack
 /// has come since this recording, independent of the rolling baseline.
@@ -212,6 +212,75 @@ fn pipelined_hot_path(
     r?;
     let secs = t0.elapsed().as_secs_f64().max(1e-12);
     Ok((iters as f64 / secs, allocs))
+}
+
+/// Wave-boundary observability overhead in isolation: the warm
+/// streaming scheduler wave (estimator update + GOODSPEED-SCHED +
+/// recycled record) run plain, then with the per-wave [`ObsHub`]
+/// recording an observed cluster adds — flight-ring span + atomic
+/// registry refresh. The two rates document the tentpole's <2% overhead
+/// claim, and under `alloc_track` the observed wave must stay off the
+/// heap.
+///
+/// [`ObsHub`]: crate::obs::ObsHub
+fn observed_wave_bench(iters: u64) -> Result<Json> {
+    use crate::obs::{ObsHub, ObsOptions};
+    let s = Scenario::preset("smoke").expect("smoke preset");
+    let mut core = RoundCore::new(8, s.eta, s.beta, Policy::GoodSpeed, 7, 64, 2);
+    core.recorder.stream();
+    let obs: Vec<WaveObs> = (0..8)
+        .map(|i| WaveObs {
+            client_id: i,
+            s_used: 2,
+            accepted: 1,
+            goodput: 2,
+            mean_ratio: 0.5,
+            spec_depth: 2,
+            max_next: 8,
+        })
+        .collect();
+    let mut next = Vec::with_capacity(8);
+    // Cold waves grow every internal vector to steady state.
+    for w in 0..7 {
+        core.finish_wave_into(w, &obs, 10, 20, &mut next);
+    }
+    let t0 = Instant::now();
+    for w in 0..iters {
+        core.finish_wave_into(7 + w, &obs, 10, 20, &mut next);
+    }
+    let plain_wps = iters as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+
+    let hub = ObsHub::new(1, 8, &ObsOptions::default());
+    // One warm observed wave under the counting allocator: the span and
+    // the registry refresh must not touch the heap.
+    let ((), allocs) = alloc_track::measure(|| {
+        core.finish_wave_into(7 + iters, &obs, 10, 20, &mut next);
+        hub.wave_span(0, 7 + iters, 10, 20, 0);
+        hub.publish_wave_stats(&core.recorder, 16, 64);
+    });
+    let t0 = Instant::now();
+    for w in 0..iters {
+        let wave = 8 + iters + w;
+        core.finish_wave_into(wave, &obs, 10, 20, &mut next);
+        hub.wave_span(0, wave, 10, 20, 0);
+        hub.publish_wave_stats(&core.recorder, 16, 64);
+    }
+    let observed_wps = iters as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+    println!(
+        "  obs wave  : {plain_wps:>9.1} plain vs {observed_wps:>9.1} observed waves/s  \
+         ({:+.1}% overhead; allocs/wave {allocs}{})",
+        100.0 * (plain_wps / observed_wps.max(1e-12) - 1.0),
+        if alloc_track::enabled() { "" } else { "; tracking off" }
+    );
+    if alloc_track::enabled() && allocs > 0 {
+        log::warn!("warm observed wave allocated — obs hot-path regression?");
+    }
+    let mut o = Json::obj();
+    o.insert("iters", Json::Num(iters as f64));
+    o.insert("plain_waves_per_sec", Json::Num(plain_wps));
+    o.insert("observed_waves_per_sec", Json::Num(observed_wps));
+    o.insert("observed_allocs_per_wave", Json::Num(allocs as f64));
+    Ok(o)
 }
 
 /// This process's peak resident set (`VmHWM`) in MiB, read from
@@ -496,6 +565,7 @@ pub fn main(args: &Args) -> Result<()> {
     }
     doc.insert("presets", presets);
     doc.insert("hot_path", hot_path_bench(iters)?);
+    doc.insert("observed_wave", observed_wave_bench(iters)?);
     fs::write(&out_path, doc.pretty())
         .with_context(|| format!("write {out_path}"))?;
     println!("bench recording -> {out_path}");
@@ -607,6 +677,20 @@ mod tests {
             ] {
                 assert_eq!(o.path(key).and_then(Json::as_f64), Some(0.0), "{key}");
             }
+        }
+    }
+
+    #[test]
+    fn observed_wave_bench_runs_and_stays_allocation_free() {
+        let o = observed_wave_bench(16).unwrap();
+        assert!(o.path("plain_waves_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(o.path("observed_waves_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        if alloc_track::enabled() {
+            assert_eq!(
+                o.path("observed_allocs_per_wave").and_then(Json::as_f64),
+                Some(0.0),
+                "observed warm wave must stay off the heap"
+            );
         }
     }
 

@@ -124,6 +124,12 @@ COMMANDS
                                     |diurnal:<gap>x<amp>@<period>
                                     --pipelined (overlap assembly with verify;
                                     bit-identical output, off by default)
+                                    --trace-out <file.json> (Chrome/Perfetto
+                                    trace of wave spans + fault instants)
+                                    --metrics-addr <ip:port> (live Prometheus
+                                    endpoint) --metrics-linger-ms <ms>
+                                    --postmortem <file> (flight-recorder dump
+                                    target on shard death / SLO breach streak)
   quickstart single client speculative vs autoregressive speedup
   fig2       goodput estimation fidelity (paper Fig 2)   --out results
   fig3       wall-time decomposition   (paper Fig 3)     --out results

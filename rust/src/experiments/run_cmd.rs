@@ -14,6 +14,7 @@ use crate::cli::Args;
 use crate::configsys::{ArrivalProcess, ChurnSchedule, Policy, Scenario, TraceConfig};
 use crate::coordinator::{Cluster, Transport};
 use crate::metrics::csv::{write_membership, write_requests, write_rounds, write_slo_summary};
+use crate::obs::{write_trace, MetricsServer, ObsOptions};
 
 /// Regenerate the seeded links after a --clients/--seed override while
 /// preserving any preset-specific link (the `straggler` preset's defining
@@ -140,6 +141,12 @@ pub fn main(args: &Args) -> Result<()> {
         .map_err(|e| anyhow!("--transport: {e}"))?;
     let simulate_network = !args.flag("no-network");
     let out_dir = args.get_or("out", "results");
+    // Observability (DESIGN.md §10): any one of the three flags attaches
+    // the flight recorder; each output stays independently optional.
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let metrics_addr = args.get("metrics-addr").map(str::to_string);
+    let metrics_linger_ms = args.get_parse::<u64>("metrics-linger-ms");
+    let postmortem = args.get("postmortem").map(std::path::PathBuf::from);
     let factory = engine_from_args(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
@@ -157,13 +164,32 @@ pub fn main(args: &Args) -> Result<()> {
         scenario.trace.as_ref().map(|t| t.arrival.label()).unwrap_or_else(|| "none".into())
     );
     let churned = !scenario.churn.is_empty();
-    let handle = Cluster::builder(scenario.clone())
+    let mut builder = Cluster::builder(scenario.clone())
         .policy(policy)
         .transport(transport)
         .simulate_network(simulate_network)
-        .engine(factory)
-        .start()?;
+        .engine(factory);
+    if trace_out.is_some() || metrics_addr.is_some() || postmortem.is_some() {
+        builder = builder.observability(ObsOptions {
+            postmortem: postmortem.clone(),
+            ring_capacity: 0,
+        });
+    }
+    let handle = builder.start()?;
+    let hub = handle.observer();
+    let mut metrics_server = match (&metrics_addr, &hub) {
+        (Some(addr), Some(hub)) => {
+            let srv = MetricsServer::start(addr, std::sync::Arc::clone(hub))?;
+            println!("metrics endpoint -> http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+        _ => None,
+    };
     let out = handle.wait()?;
+    if let (Some(path), Some(hub)) = (&trace_out, &hub) {
+        write_trace(path, hub)?;
+        println!("chrome trace -> {} (load in ui.perfetto.dev)", path.display());
+    }
 
     if let Some(pool) = &out.pool {
         out.summary.print(&format!(
@@ -262,6 +288,15 @@ pub fn main(args: &Args) -> Result<()> {
         let spath = format!("{out_dir}/run_{}_{}_slo.csv", scenario.id, policy.name());
         write_slo_summary(&spath, &out.recorder)?;
         println!("SLO summary CSV -> {spath}");
+    }
+    if let Some(srv) = &mut metrics_server {
+        // Hold the endpoint open past the run's end so one final scrape
+        // (CI smoke, a lagging Prometheus cycle) reads the completed
+        // registry instead of racing the shutdown.
+        if let Some(ms) = metrics_linger_ms {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        srv.stop();
     }
     Ok(())
 }

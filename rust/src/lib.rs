@@ -48,6 +48,7 @@ pub mod error;
 pub mod experiments;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod serve;

@@ -299,6 +299,19 @@ impl Recorder {
         }
     }
 
+    /// The most recently recorded wave's identity and phase timings —
+    /// `(round, shard, recv_ns, verify_ns, send_ns)` — read from the
+    /// held wave (streaming) or the last retained record. This is the
+    /// flight recorder's wave-span source: the coordinator calls it
+    /// right after [`Recorder::note_send_ns`], when all three phases
+    /// are in place. Borrows only — no allocation, no state change.
+    pub fn last_wave_phases(&self) -> Option<(u64, usize, u64, u64, u64)> {
+        self.pending
+            .as_ref()
+            .or_else(|| self.rounds.last())
+            .map(|r| (r.round, r.shard, r.recv_ns, r.verify_ns, r.send_ns))
+    }
+
     /// Waves recorded so far: retained + folded + held.
     pub fn waves(&self) -> u64 {
         self.rounds.len() as u64 + self.s_waves + self.pending.is_some() as u64
@@ -866,6 +879,24 @@ mod tests {
         let s = r.slo_summary().expect("sketch-backed summary");
         assert_eq!((s.completed, s.expired, s.censored), (1, 0, 2));
         assert!((s.slo_goodput_total - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn last_wave_phases_reads_both_modes() {
+        let mut ret = Recorder::new(2);
+        assert_eq!(ret.last_wave_phases(), None);
+        let mut rec = round(&[2, 4]);
+        rec.round = 9;
+        rec.shard = 1;
+        ret.push(rec.clone());
+        ret.note_send_ns(77);
+        assert_eq!(ret.last_wave_phases(), Some((9, 1, 1000, 2000, 77)));
+        // Streaming mode reads the held wave, which the patch points
+        // still target.
+        let mut st = Recorder::new_streaming(2);
+        st.push(rec);
+        st.note_send_ns(88);
+        assert_eq!(st.last_wave_phases(), Some((9, 1, 1000, 2000, 88)));
     }
 
     #[test]

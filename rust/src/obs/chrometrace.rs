@@ -1,0 +1,173 @@
+//! Chrome/Perfetto `trace_event` export of the flight-recorder stream
+//! (DESIGN.md §10).
+//!
+//! `goodspeed run --trace-out trace.json` serializes the recorded spans
+//! into the Trace Event Format (load the file at `ui.perfetto.dev` or
+//! `chrome://tracing`): one track (`tid`) per verifier shard carrying
+//! the recv/verify/send wave spans, one track per pipelined
+//! [`VerifyStage`](crate::coordinator::VerifyStage) at `tid = 1000 +
+//! shard`, and instant events for faults, membership epochs, and
+//! migrations. The writer is dependency-free (hand-rolled JSON, like
+//! `util/perfjson.rs` on the parse side) — every emitted name is a
+//! static identifier, so no string escaping is needed.
+//!
+//! The analytic simulator emits the same span stream in **virtual
+//! time** (its clock, not the wall), so a live trace and an analytic
+//! trace of the same scenario can be diffed visually timeline against
+//! timeline.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::flight::{
+    fault_name, FlightEvent, KIND_EPOCH, KIND_FAULT, KIND_MIGRATION, KIND_STAGE, KIND_WAVE,
+};
+use super::ObsHub;
+
+/// Render the hub's surviving event window as a Trace Event Format
+/// document (ts/dur in microseconds, as the format specifies).
+pub fn render(hub: &ObsHub) -> String {
+    render_events(&hub.snapshot_events(), hub.shards())
+}
+
+/// Render an explicit event list (the hub snapshot is already sorted by
+/// end time; order is cosmetic — trace viewers sort on load).
+pub fn render_events(events: &[FlightEvent], shards: usize) -> String {
+    let mut o = String::with_capacity(events.len() * 160 + 1024);
+    o.push_str("{\"traceEvents\":[\n");
+    let mut first = true;
+    for s in 0..shards {
+        thread_name(&mut o, &mut first, s as u64, &format!("shard {s}"));
+        thread_name(&mut o, &mut first, 1000 + s as u64, &format!("verify-stage {s}"));
+    }
+    for e in events {
+        match e.kind {
+            KIND_WAVE => {
+                // The three phases laid back-to-back, ending at the
+                // recorded end time.
+                let mut ts = e.start_ns() as f64 / 1e3;
+                for (name, dur_ns) in
+                    [("recv", e.recv_ns), ("verify", e.verify_ns), ("send", e.send_ns)]
+                {
+                    let dur = dur_ns as f64 / 1e3;
+                    sep(&mut o, &mut first);
+                    let _ = write!(
+                        o,
+                        "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+                         \"ts\":{ts:.3},\"dur\":{dur:.3},\"args\":{{\"wave\":{}}}}}",
+                        e.shard, e.wave
+                    );
+                    ts += dur;
+                }
+            }
+            KIND_STAGE => {
+                let ts = e.end_ns.saturating_sub(e.verify_ns) as f64 / 1e3;
+                let dur = e.verify_ns as f64 / 1e3;
+                sep(&mut o, &mut first);
+                let _ = write!(
+                    o,
+                    "{{\"name\":\"stage-verify\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+                     \"ts\":{ts:.3},\"dur\":{dur:.3},\"args\":{{\"wave\":{}}}}}",
+                    1000 + e.shard,
+                    e.wave
+                );
+            }
+            KIND_FAULT => {
+                instant(&mut o, &mut first, fault_name(e.aux), e, "fault_code");
+            }
+            KIND_EPOCH => {
+                instant(&mut o, &mut first, "epoch", e, "epoch");
+            }
+            KIND_MIGRATION => {
+                instant(&mut o, &mut first, "migration", e, "client");
+            }
+            _ => {}
+        }
+    }
+    o.push_str("\n]}\n");
+    o
+}
+
+/// Write the rendered trace to `path`.
+pub fn write_trace(path: &Path, hub: &ObsHub) -> Result<()> {
+    std::fs::write(path, render(hub))
+        .with_context(|| format!("write trace {}", path.display()))
+}
+
+fn sep(out: &mut String, first: &mut bool) {
+    if !*first {
+        out.push_str(",\n");
+    }
+    *first = false;
+}
+
+fn thread_name(out: &mut String, first: &mut bool, tid: u64, name: &str) {
+    sep(out, first);
+    let _ = write!(
+        out,
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+         \"args\":{{\"name\":\"{name}\"}}}}"
+    );
+}
+
+/// A global-scoped instant event pinned at the event's end time.
+fn instant(out: &mut String, first: &mut bool, name: &str, e: &FlightEvent, aux_key: &str) {
+    sep(out, first);
+    let ts = e.end_ns as f64 / 1e3;
+    let _ = write!(
+        out,
+        "{{\"name\":\"{name}\",\"ph\":\"i\",\"s\":\"g\",\"pid\":1,\"tid\":{},\
+         \"ts\":{ts:.3},\"args\":{{\"{aux_key}\":{}}}}}",
+        e.shard, e.aux
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::flight::fault_code;
+    use crate::obs::ObsOptions;
+    use crate::util::perfjson::{self, Json};
+
+    #[test]
+    fn trace_round_trips_through_the_json_parser() {
+        let hub = ObsHub::new(2, 2, &ObsOptions::default());
+        hub.wave_span_at(0, 0, 10_000, 2_000, 5_000, 1_000);
+        hub.wave_span_at(1, 0, 12_000, 3_000, 5_000, 1_500);
+        hub.stage_span_at(0, 1, 20_000, 4_000);
+        hub.note_fault_at(1, "shard-crash", 15_000);
+        hub.note_epoch_at(0, 2, 16_000);
+        hub.note_migration_at(1, 7, 17_000);
+
+        let text = render(&hub);
+        let doc = perfjson::parse(&text).expect("trace must be valid JSON");
+        let Some(Json::Arr(evs)) = doc.path("traceEvents") else {
+            panic!("traceEvents must be an array: {text}");
+        };
+        // 2 shards × 2 metadata + 2 waves × 3 phases + 1 stage + 3 instants.
+        assert_eq!(evs.len(), 4 + 6 + 1 + 3, "{text}");
+
+        // Wave phases land back-to-back ending at end_ns.
+        assert!(text.contains("\"name\":\"recv\""), "{text}");
+        assert!(text.contains("\"name\":\"verify\""), "{text}");
+        assert!(text.contains("\"name\":\"send\""), "{text}");
+        assert!(text.contains("\"name\":\"stage-verify\""), "{text}");
+        assert!(text.contains("\"tid\":1000"), "stage track offset: {text}");
+        // Fault instants carry the chaos kind as the event name.
+        assert!(text.contains("\"name\":\"shard-crash\""), "{text}");
+        assert!(text.contains(&format!("\"fault_code\":{}", fault_code("shard-crash"))));
+        assert!(text.contains("\"name\":\"epoch\""), "{text}");
+        assert!(text.contains("\"name\":\"migration\""), "{text}");
+        assert!(text.contains("\"ph\":\"i\""), "{text}");
+    }
+
+    #[test]
+    fn empty_hub_renders_a_valid_document() {
+        let hub = ObsHub::new(1, 1, &ObsOptions::default());
+        let text = render(&hub);
+        perfjson::parse(&text).expect("empty trace parses");
+        assert!(text.contains("thread_name"));
+    }
+}

@@ -1,0 +1,356 @@
+//! Live metrics endpoint: a std-only TCP listener serving Prometheus
+//! text exposition off an atomic gauge/counter registry (DESIGN.md
+//! §10).
+//!
+//! The registry is the *only* thing the wave loops touch — updating a
+//! gauge is one relaxed atomic store (f64 bits in an `AtomicU64`), so
+//! wave-boundary refreshes are allocation-free and never contend. The
+//! listener thread renders the exposition page per request; rendering
+//! allocates, but only on the scrape path, never on a wave.
+
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::ObsHub;
+
+/// An `f64` gauge stored as bits in an `AtomicU64`. `set` is a single
+/// relaxed store — safe from any wave loop.
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+/// A monotonic `u64` counter. `set` exists because several sources are
+/// already cumulative (the recorder's wave count, the pool controller's
+/// migration tally) — the publisher stores the authoritative total
+/// rather than diffing it.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The atomic registry behind the exposition page. Sized once at hub
+/// construction (client slots × shard count); every update thereafter
+/// is an atomic store into preallocated storage.
+pub struct MetricsRegistry {
+    pub waves_per_second: Gauge,
+    pub tokens_per_second: Gauge,
+    pub jain_index: Gauge,
+    /// Σ outstanding speculative tokens across clients (vs `capacity`).
+    pub outstanding_tokens: Gauge,
+    pub capacity_tokens: Gauge,
+    pub waves_total: Counter,
+    pub tokens_total: Counter,
+    pub handoffs_lost_total: Counter,
+    pub migrations_total: Counter,
+    pub faults_total: Counter,
+    /// Per client slot: cumulative goodput per participating wave.
+    pub client_goodput: Vec<Gauge>,
+    /// Per client slot: SLO-credited goodput per participating wave.
+    pub client_slo_goodput: Vec<Gauge>,
+    /// Per shard: 1 live, 0 crashed.
+    pub shard_live: Vec<Counter>,
+    /// Per shard: scheduling pressure (Σ demand / shard budget).
+    pub shard_pressure: Vec<Gauge>,
+}
+
+impl MetricsRegistry {
+    pub fn new(clients: usize, shards: usize) -> MetricsRegistry {
+        let shard_live: Vec<Counter> = (0..shards)
+            .map(|_| {
+                let c = Counter::default();
+                c.set(1); // shards start live
+                c
+            })
+            .collect();
+        MetricsRegistry {
+            waves_per_second: Gauge::new(),
+            tokens_per_second: Gauge::new(),
+            jain_index: Gauge::new(),
+            outstanding_tokens: Gauge::new(),
+            capacity_tokens: Gauge::new(),
+            waves_total: Counter::default(),
+            tokens_total: Counter::default(),
+            handoffs_lost_total: Counter::default(),
+            migrations_total: Counter::default(),
+            faults_total: Counter::default(),
+            client_goodput: (0..clients).map(|_| Gauge::new()).collect(),
+            client_slo_goodput: (0..clients).map(|_| Gauge::new()).collect(),
+            shard_live,
+            shard_pressure: (0..shards).map(|_| Gauge::new()).collect(),
+        }
+    }
+
+    /// Render the Prometheus text-exposition page (version 0.0.4).
+    /// Scrape-path only — allocates freely.
+    pub fn render(&self) -> String {
+        let mut o = String::with_capacity(4096);
+        gauge(
+            &mut o,
+            "goodspeed_waves_per_second",
+            "Verification waves completed per second over the run",
+            self.waves_per_second.get(),
+        );
+        gauge(
+            &mut o,
+            "goodspeed_tokens_per_second",
+            "Goodput tokens (accepted + correction) per second over the run",
+            self.tokens_per_second.get(),
+        );
+        gauge(
+            &mut o,
+            "goodspeed_jain_index",
+            "Jain fairness index over per-client goodput rates",
+            self.jain_index.get(),
+        );
+        gauge(
+            &mut o,
+            "goodspeed_outstanding_tokens",
+            "Sum of outstanding speculative-token reservations",
+            self.outstanding_tokens.get(),
+        );
+        gauge(
+            &mut o,
+            "goodspeed_capacity_tokens",
+            "Verification budget C the scheduler fills",
+            self.capacity_tokens.get(),
+        );
+        counter(&mut o, "goodspeed_waves_total", "Waves completed", self.waves_total.get());
+        counter(
+            &mut o,
+            "goodspeed_tokens_total",
+            "Goodput tokens delivered",
+            self.tokens_total.get(),
+        );
+        counter(
+            &mut o,
+            "goodspeed_handoffs_lost_total",
+            "In-flight request states censored by shard loss",
+            self.handoffs_lost_total.get(),
+        );
+        counter(
+            &mut o,
+            "goodspeed_migrations_total",
+            "Client migrations between verifier shards",
+            self.migrations_total.get(),
+        );
+        counter(
+            &mut o,
+            "goodspeed_faults_total",
+            "Chaos/fault events observed",
+            self.faults_total.get(),
+        );
+        head(
+            &mut o,
+            "goodspeed_client_goodput",
+            "Per-client goodput tokens per participating wave",
+            "gauge",
+        );
+        for (i, g) in self.client_goodput.iter().enumerate() {
+            let _ = writeln!(o, "goodspeed_client_goodput{{client=\"{i}\"}} {}", g.get());
+        }
+        head(
+            &mut o,
+            "goodspeed_client_slo_goodput",
+            "Per-client SLO-credited goodput tokens per participating wave",
+            "gauge",
+        );
+        for (i, g) in self.client_slo_goodput.iter().enumerate() {
+            let _ = writeln!(o, "goodspeed_client_slo_goodput{{client=\"{i}\"}} {}", g.get());
+        }
+        head(&mut o, "goodspeed_shard_live", "Shard liveness (1 live, 0 crashed)", "gauge");
+        for (s, c) in self.shard_live.iter().enumerate() {
+            let _ = writeln!(o, "goodspeed_shard_live{{shard=\"{s}\"}} {}", c.get());
+        }
+        head(
+            &mut o,
+            "goodspeed_shard_pressure",
+            "Per-shard scheduling pressure (demand over budget)",
+            "gauge",
+        );
+        for (s, g) in self.shard_pressure.iter().enumerate() {
+            let _ = writeln!(o, "goodspeed_shard_pressure{{shard=\"{s}\"}} {}", g.get());
+        }
+        o
+    }
+}
+
+fn head(out: &mut String, name: &str, help: &str, ty: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {ty}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    head(out, name, help, "gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    head(out, name, help, "counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// The scrape endpoint: one listener thread, blocking accepts, one
+/// response per connection (any request path gets the exposition page).
+/// `stop` flips the flag and self-connects to unblock the accept, then
+/// joins the thread — also run on drop, so a `?`-propagated error path
+/// can't leak the listener.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`; port 0 picks a free port) and
+    /// serve `hub`'s registry until [`MetricsServer::stop`].
+    pub fn start(addr: &str, hub: Arc<ObsHub>) -> Result<MetricsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind metrics endpoint {addr}"))?;
+        let local = listener.local_addr().context("metrics endpoint local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = thread::Builder::new()
+            .name("goodspeed-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(mut stream) = conn else { continue };
+                    serve_one(&mut stream, &hub);
+                }
+            })
+            .context("spawn metrics listener thread")?;
+        Ok(MetricsServer { addr: local, stop, thread: Some(thread) })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t) = self.thread.take() {
+            self.stop.store(true, Ordering::Release);
+            // Unblock the accept; the flag check runs before the serve.
+            let _ = TcpStream::connect(self.addr);
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_one(stream: &mut TcpStream, hub: &ObsHub) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    // Drain (up to) the request head; the path is ignored — every
+    // request gets the exposition page, which is what curl/Prometheus
+    // need and keeps the server dependency-free.
+    let mut buf = [0u8; 1024];
+    let _ = stream.read(&mut buf);
+    let body = hub.metrics.render();
+    let resp = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let _ = stream.write_all(resp.as_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ObsOptions;
+
+    #[test]
+    fn registry_renders_every_metric_family() {
+        let reg = MetricsRegistry::new(2, 2);
+        reg.waves_per_second.set(123.5);
+        reg.waves_total.set(40);
+        reg.client_goodput[1].set(3.25);
+        reg.shard_live[1].set(0);
+        let page = reg.render();
+        for name in [
+            "goodspeed_waves_per_second",
+            "goodspeed_tokens_per_second",
+            "goodspeed_jain_index",
+            "goodspeed_outstanding_tokens",
+            "goodspeed_capacity_tokens",
+            "goodspeed_waves_total",
+            "goodspeed_tokens_total",
+            "goodspeed_handoffs_lost_total",
+            "goodspeed_migrations_total",
+            "goodspeed_faults_total",
+        ] {
+            assert!(page.contains(&format!("# TYPE {name} ")), "{name} missing:\n{page}");
+        }
+        assert!(page.contains("goodspeed_waves_per_second 123.5"));
+        assert!(page.contains("goodspeed_waves_total 40"));
+        assert!(page.contains("goodspeed_client_goodput{client=\"1\"} 3.25"));
+        assert!(page.contains("goodspeed_shard_live{shard=\"0\"} 1"));
+        assert!(page.contains("goodspeed_shard_live{shard=\"1\"} 0"));
+        assert!(page.contains("goodspeed_shard_pressure{shard=\"1\"}"));
+    }
+
+    #[test]
+    fn endpoint_serves_the_exposition_page() {
+        let hub = Arc::new(ObsHub::new(1, 2, &ObsOptions::default()));
+        hub.metrics.waves_per_second.set(77.0);
+        let mut server = MetricsServer::start("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+        let addr = server.local_addr();
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let _ = conn.shutdown(std::net::Shutdown::Write);
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("goodspeed_waves_per_second 77"), "{resp}");
+
+        server.stop();
+        // Idempotent; drop after stop is a no-op.
+        server.stop();
+    }
+}

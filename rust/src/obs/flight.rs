@@ -1,0 +1,264 @@
+//! Flight recorder: fixed-capacity, preallocated ring buffers of
+//! structured wave-lifecycle events (DESIGN.md §10).
+//!
+//! Each [`FlightRing`] is a power-of-two array of event slots written
+//! with **atomic stores only** — recording an event never allocates, so
+//! a warm wave with the recorder attached stays allocation-free under
+//! `--features alloc_track` (asserted in the obs tests). The ring is
+//! single-writer by construction (the hub assigns one ring per shard
+//! loop and one per pipelined verify stage); the head counter is
+//! published with `Release` so a cross-thread reader that `Acquire`s it
+//! sees every field of the slots *before* the head. A reader racing the
+//! writer on the *current* slot can observe a torn event — acceptable
+//! for a postmortem/export surface and documented here rather than
+//! locked away: the hot path pays eight relaxed stores and nothing
+//! else.
+//!
+//! Overwrite semantics: the ring keeps the **last `capacity` events**;
+//! older events are silently overwritten (seq numbers stay monotonic,
+//! so a decoded snapshot reports exactly which window survived).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Event kinds stored in a slot's `kind` field.
+pub const KIND_WAVE: u64 = 1;
+/// Chaos/fault instant (the fault kind is in `aux`, see [`fault_code`]).
+pub const KIND_FAULT: u64 = 2;
+/// Membership epoch bump (new epoch id in `aux`).
+pub const KIND_EPOCH: u64 = 3;
+/// Client migration between shards (client id in `aux`).
+pub const KIND_MIGRATION: u64 = 4;
+/// Pipelined verify-stage span (`verify_ns` holds the forward time).
+pub const KIND_STAGE: u64 = 5;
+
+/// Human name for an event kind (postmortem dumps).
+pub fn kind_name(kind: u64) -> &'static str {
+    match kind {
+        KIND_WAVE => "wave",
+        KIND_FAULT => "fault",
+        KIND_EPOCH => "epoch",
+        KIND_MIGRATION => "migration",
+        KIND_STAGE => "stage",
+        _ => "unknown",
+    }
+}
+
+/// The fault kinds the chaos layer emits ([`FaultRecord`]`::kind`
+/// strings), in code order. Rings store only `u64`s, so fault instants
+/// carry `fault_code(kind)` in `aux` and the exporters map back with
+/// [`fault_name`].
+///
+/// [`FaultRecord`]: crate::metrics::FaultRecord
+const FAULT_NAMES: &[&str] = &[
+    "shard-crash",
+    "shard-recover",
+    "partition",
+    "partition-heal",
+    "drop-burst",
+    "duplicate-burst",
+    "shard-abandoned",
+    "fault-skipped",
+    "handoff-lost",
+    "slo-breach-streak",
+];
+
+/// Numeric code for a fault-kind string (1-based; 0 = unknown). A plain
+/// slice scan — no hashing, no allocation — sized for a ten-entry table
+/// on a cold path.
+pub fn fault_code(kind: &str) -> u64 {
+    FAULT_NAMES
+        .iter()
+        .position(|&n| n == kind)
+        .map(|i| i as u64 + 1)
+        .unwrap_or(0)
+}
+
+/// Inverse of [`fault_code`] (unknown codes render as `"fault"`).
+pub fn fault_name(code: u64) -> &'static str {
+    code.checked_sub(1)
+        .and_then(|i| FAULT_NAMES.get(i as usize))
+        .copied()
+        .unwrap_or("fault")
+}
+
+/// One preallocated ring slot. All fields are written relaxed by the
+/// single writer; the ring head's `Release`/`Acquire` pair orders them
+/// for readers of *completed* slots.
+#[derive(Default)]
+struct Slot {
+    kind: AtomicU64,
+    shard: AtomicU64,
+    wave: AtomicU64,
+    end_ns: AtomicU64,
+    recv_ns: AtomicU64,
+    verify_ns: AtomicU64,
+    send_ns: AtomicU64,
+    aux: AtomicU64,
+}
+
+/// One decoded flight-recorder event (a plain-data copy of a slot plus
+/// its monotonic sequence number).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlightEvent {
+    /// Monotonic per-ring sequence number (never wraps with the ring).
+    pub seq: u64,
+    /// One of the `KIND_*` constants.
+    pub kind: u64,
+    pub shard: u64,
+    pub wave: u64,
+    /// Event end, in ns since the hub epoch (wall or virtual time).
+    pub end_ns: u64,
+    pub recv_ns: u64,
+    pub verify_ns: u64,
+    pub send_ns: u64,
+    /// Kind-specific payload: fault code, epoch id, or client id.
+    pub aux: u64,
+}
+
+impl FlightEvent {
+    /// Span start: the phases are laid back-to-back ending at `end_ns`.
+    pub fn start_ns(&self) -> u64 {
+        self.end_ns
+            .saturating_sub(self.recv_ns + self.verify_ns + self.send_ns)
+    }
+}
+
+/// A fixed-capacity ring of wave-lifecycle events. Capacity rounds up
+/// to a power of two so the slot index is a mask, not a division.
+pub struct FlightRing {
+    slots: Box<[Slot]>,
+    /// Events ever written; next slot = `head & (capacity - 1)`.
+    head: AtomicU64,
+}
+
+impl FlightRing {
+    pub fn new(capacity: usize) -> FlightRing {
+        let cap = capacity.max(8).next_power_of_two();
+        FlightRing {
+            slots: (0..cap).map(|_| Slot::default()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (not just the surviving window).
+    pub fn written(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Record one event: eight relaxed stores plus a release head bump.
+    /// Never allocates, never blocks.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        kind: u64,
+        shard: u64,
+        wave: u64,
+        end_ns: u64,
+        recv_ns: u64,
+        verify_ns: u64,
+        send_ns: u64,
+        aux: u64,
+    ) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h as usize) & (self.slots.len() - 1)];
+        slot.kind.store(kind, Ordering::Relaxed);
+        slot.shard.store(shard, Ordering::Relaxed);
+        slot.wave.store(wave, Ordering::Relaxed);
+        slot.end_ns.store(end_ns, Ordering::Relaxed);
+        slot.recv_ns.store(recv_ns, Ordering::Relaxed);
+        slot.verify_ns.store(verify_ns, Ordering::Relaxed);
+        slot.send_ns.store(send_ns, Ordering::Relaxed);
+        slot.aux.store(aux, Ordering::Relaxed);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Decode the surviving window, oldest first. Allocates — this is
+    /// the cold postmortem/export path, never the wave loop.
+    pub fn snapshot(&self) -> Vec<FlightEvent> {
+        let h = self.head.load(Ordering::Acquire);
+        let len = self.slots.len() as u64;
+        let start = h.saturating_sub(len);
+        (start..h)
+            .map(|seq| {
+                let s = &self.slots[(seq as usize) & (self.slots.len() - 1)];
+                FlightEvent {
+                    seq,
+                    kind: s.kind.load(Ordering::Relaxed),
+                    shard: s.shard.load(Ordering::Relaxed),
+                    wave: s.wave.load(Ordering::Relaxed),
+                    end_ns: s.end_ns.load(Ordering::Relaxed),
+                    recv_ns: s.recv_ns.load(Ordering::Relaxed),
+                    verify_ns: s.verify_ns.load(Ordering::Relaxed),
+                    send_ns: s.send_ns.load(Ordering::Relaxed),
+                    aux: s.aux.load(Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_the_last_capacity_events() {
+        let ring = FlightRing::new(8);
+        assert_eq!(ring.capacity(), 8);
+        for i in 0..20u64 {
+            ring.record(KIND_WAVE, 0, i, i * 100, 10, 20, 30, 0);
+        }
+        assert_eq!(ring.written(), 20);
+        let evs = ring.snapshot();
+        assert_eq!(evs.len(), 8);
+        // Oldest surviving event is seq 12; newest is seq 19.
+        assert_eq!(evs.first().unwrap().seq, 12);
+        assert_eq!(evs.last().unwrap().seq, 19);
+        for e in &evs {
+            assert_eq!(e.wave, e.seq, "slot content tracks the overwrite");
+            assert_eq!(e.end_ns, e.seq * 100);
+        }
+    }
+
+    #[test]
+    fn span_start_subtracts_the_phases() {
+        let e = FlightEvent {
+            seq: 0,
+            kind: KIND_WAVE,
+            shard: 0,
+            wave: 0,
+            end_ns: 1000,
+            recv_ns: 100,
+            verify_ns: 200,
+            send_ns: 300,
+            aux: 0,
+        };
+        assert_eq!(e.start_ns(), 400);
+        // Saturates instead of underflowing on a torn/garbage slot.
+        let torn = FlightEvent { recv_ns: 5000, ..e };
+        assert_eq!(torn.start_ns(), 0);
+    }
+
+    #[test]
+    fn fault_codes_round_trip() {
+        for kind in ["shard-crash", "handoff-lost", "slo-breach-streak"] {
+            let code = fault_code(kind);
+            assert!(code > 0, "{kind}");
+            assert_eq!(fault_name(code), kind);
+        }
+        assert_eq!(fault_code("no-such-fault"), 0);
+        assert_eq!(fault_name(0), "fault");
+        assert_eq!(fault_name(999), "fault");
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(FlightRing::new(0).capacity(), 8);
+        assert_eq!(FlightRing::new(100).capacity(), 128);
+        assert_eq!(FlightRing::new(256).capacity(), 256);
+    }
+}

@@ -1,0 +1,457 @@
+//! Live telemetry (DESIGN.md §10): flight recorder, Chrome-trace
+//! export, and a scrapeable Prometheus metrics endpoint.
+//!
+//! Three coordinated pieces behind one [`ObsHub`]:
+//!
+//! * [`flight`] — fixed-capacity, preallocated per-thread ring buffers
+//!   of structured wave-lifecycle events, written with atomics only
+//!   (warm waves stay allocation-free with the recorder attached) and
+//!   dumped automatically when a shard dies, an SLO breach streak is
+//!   detected, or a chaos fault fires.
+//! * [`chrometrace`] — `goodspeed run --trace-out trace.json`
+//!   serializes the recorded spans into Chrome/Perfetto `trace_event`
+//!   JSON; the analytic simulator emits the same span stream in
+//!   virtual time.
+//! * [`expo`] — `goodspeed run --metrics-addr 127.0.0.1:9100` serves
+//!   Prometheus text exposition off a std-only TCP listener reading an
+//!   atomic gauge/counter registry updated at wave boundaries.
+//!
+//! Everything is **off by default**: without an `ObsHub` no code path
+//! changes, and with one attached no RNG stream or hot-path allocation
+//! is touched — runs stay bit-identical either way (pinned by
+//! `tests/obs_parity.rs` and the `alloc_track` guards).
+
+pub mod chrometrace;
+pub mod expo;
+pub mod flight;
+
+pub use chrometrace::write_trace;
+pub use expo::{Counter, Gauge, MetricsRegistry, MetricsServer};
+pub use flight::{fault_code, fault_name, FlightEvent, FlightRing};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use flight::{KIND_EPOCH, KIND_FAULT, KIND_MIGRATION, KIND_STAGE, KIND_WAVE};
+
+use crate::metrics::Recorder;
+
+/// Default per-ring event capacity (events, power of two).
+pub const DEFAULT_RING_CAPACITY: usize = 256;
+
+/// Consecutive wave boundaries with *fresh* SLO expiries that latch a
+/// postmortem dump.
+pub const SLO_BREACH_STREAK: u64 = 3;
+
+/// How observability is switched on: pass to
+/// [`ClusterBuilder::observability`](crate::coordinator::ClusterBuilder::observability).
+#[derive(Clone, Debug, Default)]
+pub struct ObsOptions {
+    /// Postmortem dump target (`None` = stderr).
+    pub postmortem: Option<PathBuf>,
+    /// Per-ring event capacity (0 = [`DEFAULT_RING_CAPACITY`]; rounded
+    /// up to a power of two).
+    pub ring_capacity: usize,
+}
+
+/// The hub every instrumented loop holds (behind `Option<Arc<..>>`):
+/// per-shard flight rings, the atomic metrics registry, and the latched
+/// postmortem trigger. All recording methods are `&self`, atomics-only,
+/// allocation-free; the snapshot/dump/render surfaces are the cold
+/// paths that allocate.
+pub struct ObsHub {
+    /// Time zero for wall-clock spans ([`ObsHub::now_ns`]); virtual-time
+    /// emitters bypass it via the `*_at` variants.
+    epoch: Instant,
+    shards: usize,
+    /// `2 × shards` rings: `[s]` carries shard `s`'s wave spans and
+    /// instant events, `[shards + s]` its pipelined verify-stage spans —
+    /// one writer each, so recording never contends.
+    rings: Vec<FlightRing>,
+    pub metrics: MetricsRegistry,
+    postmortem: Option<PathBuf>,
+    /// Postmortem latch: the first trigger dumps, the rest are no-ops
+    /// (the interesting window is the one around the *first* fault).
+    dumped: AtomicBool,
+    /// SLO-breach streak detector state (cumulative expired count at the
+    /// last wave boundary, and the current run of increases).
+    last_expired: AtomicU64,
+    breach_streak: AtomicU64,
+}
+
+impl ObsHub {
+    /// A hub for `shards` verifier shards and `clients` client slots.
+    pub fn new(shards: usize, clients: usize, opts: &ObsOptions) -> ObsHub {
+        let shards = shards.max(1);
+        let cap = if opts.ring_capacity == 0 {
+            DEFAULT_RING_CAPACITY
+        } else {
+            opts.ring_capacity
+        };
+        ObsHub {
+            epoch: Instant::now(),
+            shards,
+            rings: (0..2 * shards).map(|_| FlightRing::new(cap)).collect(),
+            metrics: MetricsRegistry::new(clients, shards),
+            postmortem: opts.postmortem.clone(),
+            dumped: AtomicBool::new(false),
+            last_expired: AtomicU64::new(0),
+            breach_streak: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Nanoseconds since the hub was built (the trace's time zero).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn wave_ring(&self, shard: usize) -> &FlightRing {
+        &self.rings[shard.min(self.shards - 1)]
+    }
+
+    fn stage_ring(&self, shard: usize) -> &FlightRing {
+        &self.rings[self.shards + shard.min(self.shards - 1)]
+    }
+
+    /// Record one completed wave's phase decomposition, ending now.
+    pub fn wave_span(&self, shard: usize, wave: u64, recv_ns: u64, verify_ns: u64, send_ns: u64) {
+        self.wave_span_at(shard, wave, self.now_ns(), recv_ns, verify_ns, send_ns);
+    }
+
+    /// Virtual-time variant (the analytic simulator stamps its own
+    /// clock, in ns, as the span end).
+    pub fn wave_span_at(
+        &self,
+        shard: usize,
+        wave: u64,
+        end_ns: u64,
+        recv_ns: u64,
+        verify_ns: u64,
+        send_ns: u64,
+    ) {
+        self.wave_ring(shard)
+            .record(KIND_WAVE, shard as u64, wave, end_ns, recv_ns, verify_ns, send_ns, 0);
+    }
+
+    /// Record one pipelined verify-stage forward, ending now.
+    pub fn stage_span(&self, shard: usize, wave: u64, verify_ns: u64) {
+        self.stage_span_at(shard, wave, self.now_ns(), verify_ns);
+    }
+
+    pub fn stage_span_at(&self, shard: usize, wave: u64, end_ns: u64, verify_ns: u64) {
+        self.stage_ring(shard).record(KIND_STAGE, shard as u64, wave, end_ns, 0, verify_ns, 0, 0);
+    }
+
+    /// Membership epoch bump (instant event).
+    pub fn note_epoch(&self, shard: usize, epoch: u64) {
+        self.note_epoch_at(shard, epoch, self.now_ns());
+    }
+
+    pub fn note_epoch_at(&self, shard: usize, epoch: u64, end_ns: u64) {
+        self.wave_ring(shard).record(KIND_EPOCH, shard as u64, 0, end_ns, 0, 0, 0, epoch);
+    }
+
+    /// Client migration between shards (instant event on the *source*).
+    pub fn note_migration(&self, shard: usize, client: u64) {
+        self.note_migration_at(shard, client, self.now_ns());
+    }
+
+    pub fn note_migration_at(&self, shard: usize, client: u64, end_ns: u64) {
+        self.wave_ring(shard).record(KIND_MIGRATION, shard as u64, 0, end_ns, 0, 0, 0, client);
+    }
+
+    /// Chaos/fault instant (`kind` is a [`FaultRecord`] kind string,
+    /// encoded via [`fault_code`]). Bumps the fault counter and latches
+    /// the postmortem — a firing fault is one of its triggers.
+    ///
+    /// [`FaultRecord`]: crate::metrics::FaultRecord
+    pub fn note_fault(&self, shard: usize, kind: &str) {
+        self.note_fault_at(shard, kind, self.now_ns());
+    }
+
+    pub fn note_fault_at(&self, shard: usize, kind: &str, end_ns: u64) {
+        self.metrics.faults_total.add(1);
+        self.wave_ring(shard)
+            .record(KIND_FAULT, shard as u64, 0, end_ns, 0, 0, 0, fault_code(kind));
+        self.dump_postmortem(kind);
+    }
+
+    /// Feed the cumulative SLO-expired request count at a wave boundary.
+    /// [`SLO_BREACH_STREAK`] consecutive boundaries that each added new
+    /// expiries latch a postmortem. Atomics only — safe per-wave.
+    pub fn note_slo_expired(&self, total_expired: u64) {
+        let prev = self.last_expired.swap(total_expired, Ordering::Relaxed);
+        if total_expired > prev {
+            let streak = self.breach_streak.fetch_add(1, Ordering::Relaxed) + 1;
+            if streak >= SLO_BREACH_STREAK {
+                self.dump_postmortem("slo-breach-streak");
+            }
+        } else {
+            self.breach_streak.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Wave-boundary registry refresh from the recorder's cumulative
+    /// slices. Atomic stores over preallocated gauges — no allocation,
+    /// no RNG, no branching on recorded values.
+    pub fn publish_wave_stats(&self, recorder: &Recorder, outstanding: u64, capacity: u64) {
+        let m = &self.metrics;
+        let waves = recorder.waves();
+        let secs = self.epoch.elapsed().as_secs_f64().max(1e-9);
+        let good = recorder.cum_goodput();
+        let part = recorder.participation();
+        let slo = &recorder.slo_goodput;
+        let total: f64 = good.iter().sum();
+        m.waves_total.set(waves);
+        m.tokens_total.set(total as u64);
+        m.waves_per_second.set(waves as f64 / secs);
+        m.tokens_per_second.set(total / secs);
+        m.outstanding_tokens.set(outstanding as f64);
+        m.capacity_tokens.set(capacity as f64);
+        m.handoffs_lost_total.set(recorder.handoffs_lost);
+        // Per-client rates + Jain (Σx)²/(n·Σx²) over participants, inline
+        // so no scratch vector is needed.
+        let (mut sum, mut sum2, mut n) = (0.0f64, 0.0f64, 0u32);
+        for i in 0..good.len() {
+            let p = part.get(i).copied().unwrap_or(0);
+            let rate = if p > 0 { good[i] / p as f64 } else { 0.0 };
+            if let Some(g) = m.client_goodput.get(i) {
+                g.set(rate);
+            }
+            if let (Some(g), Some(&s)) = (m.client_slo_goodput.get(i), slo.get(i)) {
+                g.set(if p > 0 { s / p as f64 } else { 0.0 });
+            }
+            if p > 0 {
+                sum += rate;
+                sum2 += rate * rate;
+                n += 1;
+            }
+        }
+        let jain = if n > 0 && sum2 > 0.0 {
+            (sum * sum) / (n as f64 * sum2)
+        } else {
+            1.0
+        };
+        m.jain_index.set(jain);
+    }
+
+    /// Merged snapshot of every ring's surviving window, ordered by end
+    /// time. Cold path (allocates) — export and postmortem only.
+    pub fn snapshot_events(&self) -> Vec<FlightEvent> {
+        let mut evs: Vec<FlightEvent> = self.rings.iter().flat_map(|r| r.snapshot()).collect();
+        evs.sort_by_key(|e| (e.end_ns, e.shard, e.seq));
+        evs
+    }
+
+    /// Whether the postmortem already fired (for tests and callers that
+    /// want to force a final dump only if none happened).
+    pub fn postmortem_fired(&self) -> bool {
+        self.dumped.load(Ordering::Acquire)
+    }
+
+    /// Latched postmortem: dump the surviving event window (to the
+    /// configured path, stderr otherwise) the *first* time a trigger
+    /// fires — shard death, SLO breach streak, or a chaos fault.
+    pub fn dump_postmortem(&self, reason: &str) {
+        if self.dumped.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let evs = self.snapshot_events();
+        let mut out = String::with_capacity(evs.len() * 96 + 256);
+        use std::fmt::Write as _;
+        let _ = writeln!(
+            out,
+            "goodspeed postmortem ({reason}): last {} flight-recorder events",
+            evs.len()
+        );
+        for e in &evs {
+            let _ = match e.kind {
+                KIND_WAVE => writeln!(
+                    out,
+                    "  [{:>12} ns] shard {} wave {:>5}  recv {} / verify {} / send {} ns",
+                    e.end_ns, e.shard, e.wave, e.recv_ns, e.verify_ns, e.send_ns
+                ),
+                KIND_STAGE => writeln!(
+                    out,
+                    "  [{:>12} ns] shard {} stage wave {:>5}  verify {} ns",
+                    e.end_ns, e.shard, e.wave, e.verify_ns
+                ),
+                KIND_FAULT => writeln!(
+                    out,
+                    "  [{:>12} ns] shard {} FAULT {}",
+                    e.end_ns,
+                    e.shard,
+                    fault_name(e.aux)
+                ),
+                KIND_EPOCH => {
+                    writeln!(out, "  [{:>12} ns] shard {} epoch -> {}", e.end_ns, e.shard, e.aux)
+                }
+                KIND_MIGRATION => {
+                    writeln!(
+                        out,
+                        "  [{:>12} ns] shard {} migrated client {}",
+                        e.end_ns, e.shard, e.aux
+                    )
+                }
+                _ => writeln!(
+                    out,
+                    "  [{:>12} ns] shard {} {}",
+                    e.end_ns,
+                    e.shard,
+                    flight::kind_name(e.kind)
+                ),
+            };
+        }
+        match &self.postmortem {
+            Some(path) => match std::fs::write(path, &out) {
+                Ok(()) => eprintln!("goodspeed postmortem ({reason}) -> {}", path.display()),
+                Err(e) => {
+                    eprintln!("postmortem write {} failed: {e}", path.display());
+                    eprint!("{out}");
+                }
+            },
+            None => eprint!("{out}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{ClientRoundMetrics, RoundRecord};
+    use crate::util::alloc_track;
+
+    fn hub(shards: usize, clients: usize) -> ObsHub {
+        ObsHub::new(shards, clients, &ObsOptions::default())
+    }
+
+    #[test]
+    fn spans_and_instants_land_in_per_shard_rings() {
+        let h = hub(2, 4);
+        h.wave_span(0, 0, 10, 20, 30);
+        h.wave_span(1, 0, 10, 20, 30);
+        h.stage_span(1, 0, 15);
+        h.note_fault(0, "shard-crash");
+        h.note_epoch(0, 3);
+        h.note_migration(1, 2);
+        let evs = h.snapshot_events();
+        assert_eq!(evs.len(), 6);
+        assert_eq!(evs.iter().filter(|e| e.kind == KIND_WAVE).count(), 2);
+        assert_eq!(evs.iter().filter(|e| e.kind == KIND_STAGE).count(), 1);
+        assert_eq!(evs.iter().filter(|e| e.kind == KIND_FAULT).count(), 1);
+        assert_eq!(h.metrics.faults_total.get(), 1);
+        assert!(h.postmortem_fired(), "a chaos fault latches the postmortem");
+    }
+
+    #[test]
+    fn slo_breach_streak_latches_after_three_increases() {
+        let h = hub(1, 1);
+        h.note_slo_expired(1);
+        h.note_slo_expired(2);
+        assert!(!h.postmortem_fired());
+        // A flat boundary resets the streak.
+        h.note_slo_expired(2);
+        h.note_slo_expired(3);
+        h.note_slo_expired(4);
+        assert!(!h.postmortem_fired());
+        h.note_slo_expired(5);
+        assert!(h.postmortem_fired(), "3 consecutive increases trigger the dump");
+    }
+
+    #[test]
+    fn publish_wave_stats_fills_the_registry() {
+        let h = hub(1, 2);
+        let mut rec = Recorder::new(2);
+        rec.push(RoundRecord {
+            round: 0,
+            shard: 0,
+            recv_ns: 1,
+            verify_ns: 2,
+            send_ns: 3,
+            clients: (0..2)
+                .map(|i| ClientRoundMetrics {
+                    client_id: i,
+                    goodput: 3 + i,
+                    ..Default::default()
+                })
+                .collect(),
+        });
+        rec.slo_goodput = vec![2.0, 4.0];
+        h.publish_wave_stats(&rec, 6, 8);
+        let m = &h.metrics;
+        assert_eq!(m.waves_total.get(), 1);
+        assert_eq!(m.tokens_total.get(), 7);
+        assert_eq!(m.outstanding_tokens.get(), 6.0);
+        assert_eq!(m.capacity_tokens.get(), 8.0);
+        assert_eq!(m.client_goodput[0].get(), 3.0);
+        assert_eq!(m.client_goodput[1].get(), 4.0);
+        assert_eq!(m.client_slo_goodput[1].get(), 4.0);
+        let jain = m.jain_index.get();
+        let expect = (7.0f64 * 7.0) / (2.0 * (9.0 + 16.0));
+        assert!((jain - expect).abs() < 1e-12, "{jain} vs {expect}");
+    }
+
+    /// The tentpole's hot-path claim: recording a wave span *and*
+    /// refreshing the registry allocates nothing (meaningful under
+    /// `--features alloc_track`; vacuous otherwise, like the other
+    /// alloc guards).
+    #[test]
+    fn warm_wave_recording_is_allocation_free() {
+        let h = hub(2, 8);
+        let mut rec = Recorder::new(8);
+        for w in 0..4u64 {
+            rec.push(RoundRecord {
+                round: w,
+                shard: 0,
+                recv_ns: 10,
+                verify_ns: 20,
+                send_ns: 5,
+                clients: (0..8)
+                    .map(|i| ClientRoundMetrics { client_id: i, goodput: 2, ..Default::default() })
+                    .collect(),
+            });
+        }
+        // Warm the rings past their first lap.
+        for w in 0..300u64 {
+            h.wave_span(0, w, 10, 20, 5);
+            h.stage_span(0, w, 20);
+        }
+        let ((), allocs) = alloc_track::measure(|| {
+            h.wave_span(1, 300, 10, 20, 5);
+            h.stage_span(1, 300, 20);
+            h.note_slo_expired(0);
+            h.publish_wave_stats(&rec, 16, 64);
+        });
+        if alloc_track::enabled() {
+            assert_eq!(allocs, 0, "observability touched the heap on a warm wave");
+        }
+    }
+
+    #[test]
+    fn postmortem_writes_the_configured_file_once() {
+        let dir = std::env::temp_dir().join("goodspeed_obs_postmortem_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("postmortem.txt");
+        let _ = std::fs::remove_file(&path);
+        let h = ObsHub::new(
+            1,
+            1,
+            &ObsOptions { postmortem: Some(path.clone()), ring_capacity: 16 },
+        );
+        h.wave_span(0, 0, 1, 2, 3);
+        h.note_fault(0, "shard-abandoned");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("postmortem (shard-abandoned)"), "{text}");
+        assert!(text.contains("FAULT shard-abandoned"), "{text}");
+        assert!(text.contains("wave     0"), "{text}");
+        // Latched: a second trigger must not rewrite the file.
+        std::fs::remove_file(&path).unwrap();
+        h.note_fault(0, "shard-crash");
+        assert!(!path.exists(), "postmortem must fire once");
+    }
+}

@@ -193,6 +193,10 @@ pub struct RequestTracker {
     /// Per-slot Σ tokens of deadline-met requests.
     slo_tokens: Vec<f64>,
     censored: u64,
+    /// Cumulative deadline-missed requests filed so far (live counter —
+    /// the telemetry layer's SLO-breach streak detector reads it at wave
+    /// boundaries, so it must be maintained mid-run, not at `finish`).
+    missed: u64,
 }
 
 impl RequestTracker {
@@ -213,6 +217,7 @@ impl RequestTracker {
             sketch: None,
             slo_tokens: vec![0.0; slots],
             censored: 0,
+            missed: 0,
         }
     }
 
@@ -547,10 +552,20 @@ impl RequestTracker {
     /// File a finished/expired request: retained mode accrues the record,
     /// streaming mode folds it into the bounded sketch.
     fn record(&mut self, rec: RequestRecord) {
+        if !rec.met {
+            self.missed += 1;
+        }
         match &mut self.sketch {
             Some(sk) => sk.push(&rec),
             None => self.records.push(rec),
         }
+    }
+
+    /// Cumulative deadline-missed requests filed so far (completions
+    /// past deadline plus, after [`RequestTracker::finish`], end-of-run
+    /// expirations). Monotone — suitable for a breach-streak detector.
+    pub fn slo_missed(&self) -> u64 {
+        self.missed
     }
 
     /// All finished/expired request records so far, arrival order within

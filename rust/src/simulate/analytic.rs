@@ -28,6 +28,7 @@ use crate::configsys::{
 use crate::coordinator::{RoundCore, WaveObs};
 use crate::metrics::recorder::{FaultRecord, MembershipEvent, Recorder};
 use crate::net::link::{draft_msg_bytes, verdict_msg_bytes, Link};
+use crate::obs::ObsHub;
 use crate::sched::baselines::Allocator;
 use crate::sched::gradient::split_budget_by_members;
 use crate::sched::Estimators;
@@ -165,6 +166,13 @@ pub struct AnalyticSim {
     clock: f64,
     /// Virtual time each client's next draft arrives at the server.
     ready_at: Vec<f64>,
+    /// Optional flight recorder: wave spans and fault instants are
+    /// mirrored into the hub *on the virtual clock* (ns), so a simulated
+    /// run exports the same Chrome-trace stream a live one does. `None`
+    /// (the default) leaves every wave loop untouched.
+    observer: Option<std::sync::Arc<ObsHub>>,
+    /// Track the observer's spans land on (0 outside sharded mode).
+    obs_shard: usize,
 }
 
 impl AnalyticSim {
@@ -291,12 +299,44 @@ impl AnalyticSim {
             rtt_s,
             clock: 0.0,
             ready_at,
+            observer: None,
+            obs_shard: 0,
         }
     }
 
     /// Virtual seconds elapsed (both modes advance it).
     pub fn virtual_time(&self) -> f64 {
         self.clock
+    }
+
+    /// Attach a flight recorder: every subsequent wave lands one span on
+    /// `hub`'s `shard` track, stamped with the virtual clock in ns, and
+    /// chaos faults mirror as instants — the analytic emitter behind
+    /// `goodspeed sim --trace-out`.
+    pub fn set_observer(&mut self, hub: std::sync::Arc<ObsHub>, shard: usize) {
+        self.observer = Some(hub);
+        self.obs_shard = shard;
+    }
+
+    /// Mirror the wave that just advanced the clock into the recorder.
+    fn observe_wave(&self, recv_ns: u64, verify_ns: u64) {
+        if let Some(hub) = &self.observer {
+            hub.wave_span_at(
+                self.obs_shard,
+                self.round,
+                (self.clock * 1e9) as u64,
+                recv_ns,
+                verify_ns,
+                0,
+            );
+        }
+    }
+
+    /// Mirror a fault instant at the current virtual time.
+    fn observe_fault(&self, kind: &str) {
+        if let Some(hub) = &self.observer {
+            hub.note_fault_at(self.obs_shard, kind, (self.clock * 1e9) as u64);
+        }
     }
 
     /// Membership epoch (0 until the first churn event applies).
@@ -552,6 +592,7 @@ impl AnalyticSim {
             tracker.sync_wave_end(self.round, &outcomes);
         }
         self.clock += recv_s + self.cfg.verify_s;
+        self.observe_wave((recv_s * 1e9) as u64, (self.cfg.verify_s * 1e9) as u64);
         self.round += 1;
         goodputs
     }
@@ -608,10 +649,11 @@ impl AnalyticSim {
         // Sparse estimator update + allocation over the wave's live set
         // with absent members' in-flight grants reserved (the same core
         // invariant the real leader enforces: Σ alloc ≤ C at all times).
+        let wait_ns = (((fire_t - self.clock).max(0.0)) * 1e9) as u64;
         let next = self.core.finish_wave(
             self.round,
             &obs,
-            (((fire_t - self.clock).max(0.0)) * 1e9) as u64,
+            wait_ns,
             (self.cfg.verify_s * 1e9) as u64,
         );
         let t_done = fire_t + self.cfg.verify_s;
@@ -625,6 +667,7 @@ impl AnalyticSim {
             tracker.sync_wave_end(self.round, &outcomes);
         }
         self.clock = t_done;
+        self.observe_wave(wait_ns, (self.cfg.verify_s * 1e9) as u64);
         self.round += 1;
         outcomes
     }
@@ -940,6 +983,7 @@ fn apply_sim_fault(
                     kind: "fault-skipped".into(),
                     detail: "crash without a live survivor; ignored".into(),
                 });
+                shards[shard].observe_fault("fault-skipped");
                 return;
             }
             live[shard] = false;
@@ -958,6 +1002,7 @@ fn apply_sim_fault(
                     movers.len()
                 ),
             });
+            shards[shard].observe_fault("shard-crash");
         }
         FaultOp::Recover { shard } => {
             if live[shard] {
@@ -988,6 +1033,7 @@ fn apply_sim_fault(
                 kind: "shard-recover".into(),
                 detail: format!("re-admitted; {moved} home clients returned"),
             });
+            shards[shard].observe_fault("shard-recover");
         }
         FaultOp::PartitionStart { client, until } => {
             // Inflate in every simulator, so a crash migration during
@@ -1005,6 +1051,7 @@ fn apply_sim_fault(
                      (rtt ×{PARTITION_RTT_FACTOR})"
                 ),
             });
+            shards[s].observe_fault("partition");
         }
         FaultOp::PartitionHeal { client } => {
             for sim in shards.iter_mut() {
@@ -1017,6 +1064,7 @@ fn apply_sim_fault(
                 kind: "partition-heal".into(),
                 detail: format!("client {client} uplink restored"),
             });
+            shards[s].observe_fault("partition-heal");
         }
         FaultOp::Drop { client, count } => {
             let Some(s) = owner_of(shards, client) else { return };
@@ -1027,6 +1075,7 @@ fn apply_sim_fault(
                 kind: "drop-burst".into(),
                 detail: format!("{count} drafts dropped; client {client} stalls to redraft"),
             });
+            shards[s].observe_fault("drop-burst");
         }
         FaultOp::Duplicate { client, count } => {
             let Some(s) = owner_of(shards, client) else { return };
@@ -1036,6 +1085,7 @@ fn apply_sim_fault(
                 kind: "duplicate-burst".into(),
                 detail: format!("{count} duplicate drafts discarded before verification"),
             });
+            shards[s].observe_fault("duplicate-burst");
         }
     }
 }
@@ -1160,6 +1210,25 @@ mod tests {
             let used: usize = r.clients.iter().map(|c| c.s_used).sum();
             assert!(used <= 20);
         }
+    }
+
+    #[test]
+    fn observer_mirrors_waves_on_the_virtual_clock() {
+        use crate::obs::{flight::KIND_WAVE, ObsHub, ObsOptions};
+        use std::sync::Arc;
+        let hub = Arc::new(ObsHub::new(1, 8, &ObsOptions::default()));
+        let mut s = sim(Policy::GoodSpeed, 8, 20);
+        s.set_observer(Arc::clone(&hub), 0);
+        s.run();
+        let events = hub.snapshot_events();
+        let waves: Vec<_> = events.iter().filter(|e| e.kind == KIND_WAVE).collect();
+        assert_eq!(waves.len(), 20);
+        // Span ends ride the virtual clock, not the wall clock: monotone
+        // nondecreasing, with the last landing exactly at the final time.
+        for w in waves.windows(2) {
+            assert!(w[0].end_ns <= w[1].end_ns);
+        }
+        assert_eq!(waves.last().unwrap().end_ns, (s.virtual_time() * 1e9) as u64);
     }
 
     #[test]

@@ -2,11 +2,15 @@
 
 use log::{Level, LevelFilter, Metadata, Record};
 use std::io::Write;
-use std::sync::Once;
+use std::sync::{Once, OnceLock};
 use std::time::Instant;
 
 static INIT: Once = Once::new();
-static mut START: Option<Instant> = None;
+
+/// Time zero for the log-line timestamps, set exactly once by [`init`].
+/// `OnceLock` replaces the old `static mut` + `unsafe` pattern: same
+/// once-only write, no raw-pointer reads on the log path.
+static START: OnceLock<Instant> = OnceLock::new();
 
 struct Logger;
 
@@ -20,10 +24,7 @@ impl log::Log for Logger {
             return;
         }
         // Monotonic seconds since init; good enough for experiment traces.
-        let elapsed = unsafe {
-            let ptr = &raw const START;
-            (*ptr).map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
-        };
+        let elapsed = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
         let tag = match record.level() {
             Level::Error => "E",
             Level::Warn => "W",
@@ -40,20 +41,33 @@ impl log::Log for Logger {
 
 static LOGGER: Logger = Logger;
 
+/// Parse a `GOODSPEED_LOG` value. `Err` carries the unrecognized value
+/// so [`init`] can warn instead of silently defaulting.
+fn parse_level(value: &str) -> Result<LevelFilter, ()> {
+    match value {
+        "trace" => Ok(LevelFilter::Trace),
+        "debug" => Ok(LevelFilter::Debug),
+        "info" => Ok(LevelFilter::Info),
+        "warn" => Ok(LevelFilter::Warn),
+        "error" => Ok(LevelFilter::Error),
+        "off" => Ok(LevelFilter::Off),
+        _ => Err(()),
+    }
+}
+
 /// Install the logger (idempotent).
 pub fn init() {
     INIT.call_once(|| {
-        unsafe {
-            let ptr = &raw mut START;
-            *ptr = Some(Instant::now());
-        }
-        let level = match std::env::var("GOODSPEED_LOG").as_deref() {
-            Ok("trace") => LevelFilter::Trace,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("error") => LevelFilter::Error,
-            Ok("off") => LevelFilter::Off,
-            _ => LevelFilter::Info,
+        let _ = START.set(Instant::now());
+        let level = match std::env::var("GOODSPEED_LOG") {
+            Ok(v) => parse_level(&v).unwrap_or_else(|()| {
+                eprintln!(
+                    "goodspeed: unrecognized GOODSPEED_LOG value '{v}' \
+                     (expected trace|debug|info|warn|error|off); defaulting to info"
+                );
+                LevelFilter::Info
+            }),
+            Err(_) => LevelFilter::Info,
         };
         let _ = log::set_logger(&LOGGER);
         log::set_max_level(level);
@@ -62,10 +76,25 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logger smoke");
+        assert!(START.get().is_some(), "init must set the time zero");
+    }
+
+    #[test]
+    fn level_parsing_accepts_the_documented_values_only() {
+        assert_eq!(parse_level("trace"), Ok(LevelFilter::Trace));
+        assert_eq!(parse_level("debug"), Ok(LevelFilter::Debug));
+        assert_eq!(parse_level("info"), Ok(LevelFilter::Info));
+        assert_eq!(parse_level("warn"), Ok(LevelFilter::Warn));
+        assert_eq!(parse_level("error"), Ok(LevelFilter::Error));
+        assert_eq!(parse_level("off"), Ok(LevelFilter::Off));
+        assert_eq!(parse_level("verbose"), Err(()), "unknown values must be flagged");
+        assert_eq!(parse_level("INFO"), Err(()), "matching is exact, like before");
     }
 }

@@ -1,0 +1,232 @@
+//! Observability is free: attaching the flight recorder + metrics
+//! registry must not perturb a run — same RNG-determined fields, same
+//! CSV bytes as the unobserved twin — while the hub faithfully mirrors
+//! waves, faults, migrations, and liveness, and the serving snapshot
+//! surfaces the pool-health fields.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use goodspeed::configsys::{Policy, Scenario};
+use goodspeed::coordinator::{Cluster, RunOutcome, Transport};
+use goodspeed::metrics::csv::write_rounds;
+use goodspeed::obs::flight::{KIND_FAULT, KIND_WAVE};
+use goodspeed::obs::{fault_code, ObsHub, ObsOptions};
+use goodspeed::runtime::{EngineFactory, MockEngineFactory, MockWorld};
+
+fn factory() -> Arc<dyn EngineFactory> {
+    Arc::new(MockEngineFactory::new(MockWorld {
+        vocab: 32,
+        max_seq: 256,
+        sharpness: 3.0,
+        seed: 17,
+    }))
+}
+
+fn serve(s: Scenario, observed: bool) -> (RunOutcome, Option<Arc<ObsHub>>) {
+    let mut builder = Cluster::builder(s)
+        .policy(Policy::GoodSpeed)
+        .transport(Transport::Channel)
+        .engine(factory());
+    if observed {
+        builder = builder.observability(ObsOptions::default());
+    }
+    let handle = builder.start().expect("start");
+    let hub = handle.observer();
+    (handle.wait().expect("run"), hub)
+}
+
+/// Assert two runs are bit-identical on every RNG-determined field and
+/// byte-identical as CSV once the wall-clock columns (never replayable)
+/// are zeroed — the same surface `tests/pipeline_parity.rs` pins.
+fn assert_runs_identical(label: &str, mut a: RunOutcome, mut b: RunOutcome) {
+    assert_eq!(a.recorder.rounds.len(), b.recorder.rounds.len(), "{label}: wave count");
+    for (ra, rb) in a.recorder.rounds.iter().zip(&b.recorder.rounds) {
+        assert_eq!(ra.round, rb.round, "{label}");
+        assert_eq!(ra.shard, rb.shard, "{label}");
+        assert_eq!(ra.clients.len(), rb.clients.len(), "{label}: wave {}", ra.round);
+        for (ca, cb) in ra.clients.iter().zip(&rb.clients) {
+            assert_eq!(ca.client_id, cb.client_id, "{label}: wave {}", ra.round);
+            assert_eq!(ca.s_used, cb.s_used, "{label}: wave {}", ra.round);
+            assert_eq!(ca.accepted, cb.accepted, "{label}: wave {}", ra.round);
+            assert_eq!(ca.goodput, cb.goodput, "{label}: wave {}", ra.round);
+            assert_eq!(ca.spec_depth, cb.spec_depth, "{label}: wave {}", ra.round);
+            assert_eq!(ca.next_alloc, cb.next_alloc, "{label}: wave {}", ra.round);
+            assert_eq!(ca.mean_ratio.to_bits(), cb.mean_ratio.to_bits(), "{label}");
+            assert_eq!(ca.alpha_hat.to_bits(), cb.alpha_hat.to_bits(), "{label}");
+            assert_eq!(ca.x_beta.to_bits(), cb.x_beta.to_bits(), "{label}");
+        }
+    }
+    for (da, db) in a.draft_stats.iter().zip(&b.draft_stats) {
+        assert_eq!(da.rounds, db.rounds, "{label}");
+        assert_eq!(da.tokens_drafted, db.tokens_drafted, "{label}");
+        assert_eq!(da.tokens_accepted, db.tokens_accepted, "{label}");
+        assert_eq!(da.requests_completed, db.requests_completed, "{label}");
+    }
+    let zero_ns = |out: &mut RunOutcome| {
+        for r in out.recorder.rounds.iter_mut() {
+            r.recv_ns = 0;
+            r.verify_ns = 0;
+            r.send_ns = 0;
+        }
+    };
+    zero_ns(&mut a);
+    zero_ns(&mut b);
+    let dir = std::env::temp_dir().join(format!("goodspeed_obsparity_{label}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pa = dir.join("plain.csv");
+    let pb = dir.join("observed.csv");
+    write_rounds(&pa, &a.recorder).unwrap();
+    write_rounds(&pb, &b.recorder).unwrap();
+    assert_eq!(
+        std::fs::read(&pa).unwrap(),
+        std::fs::read(&pb).unwrap(),
+        "{label}: CSV bytes must be identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Single-verifier path: an observed run is bit-identical to the
+/// unobserved twin, and the hub saw every wave.
+#[test]
+fn observed_run_is_bit_identical_single_verifier() {
+    let scenario = || {
+        let mut s = Scenario::preset("smoke").unwrap();
+        s.rounds = 20;
+        s
+    };
+    let (plain, no_hub) = serve(scenario(), false);
+    let (observed, hub) = serve(scenario(), true);
+    assert!(no_hub.is_none(), "observability must be off by default");
+    let hub = hub.expect("observed run carries a hub");
+    let waves =
+        hub.snapshot_events().iter().filter(|e| e.kind == KIND_WAVE).count();
+    assert_eq!(waves, 20, "one wave span per wave");
+    assert_eq!(hub.metrics.waves_total.get(), 20);
+    assert!(hub.metrics.tokens_total.get() > 0);
+    assert!(!hub.postmortem_fired(), "healthy run must not dump");
+    assert_runs_identical("m1", plain, observed);
+}
+
+/// Sharded-pool path (deterministic composition: rebalancing off, full
+/// fill): observed and unobserved runs stay bit-identical, with spans
+/// on every shard track.
+#[test]
+fn observed_run_is_bit_identical_sharded_pool() {
+    let scenario = || {
+        let mut s = Scenario::preset("sharded").unwrap();
+        s.rounds = 16;
+        s.min_wave_fill = 0;
+        s.batch_window_us = 20_000;
+        s.shard_rebalance_every = 0;
+        s.validate().expect("parity scenario must validate");
+        s
+    };
+    let m = scenario().num_verifiers;
+    let (plain, _) = serve(scenario(), false);
+    let (observed, hub) = serve(scenario(), true);
+    let hub = hub.expect("observed run carries a hub");
+    let events = hub.snapshot_events();
+    for shard in 0..m {
+        assert!(
+            events.iter().any(|e| e.kind == KIND_WAVE && e.shard == shard as u64),
+            "shard {shard} must have wave spans"
+        );
+    }
+    assert_runs_identical("pool", plain, observed);
+}
+
+/// Chaos pool: the hub mirrors the recorder's fault stream as instant
+/// events, counts migrations, latches the postmortem, and the serving
+/// snapshot surfaces per-shard liveness + migration counters mid-run.
+/// The crash never recovers, so the dead-shard mask and the migration
+/// counter persist to the end — the poll below cannot race the heal.
+#[test]
+fn chaos_pool_observability_mirrors_faults_and_liveness() {
+    use goodspeed::chaos::{FaultEvent, FaultKind, FaultSchedule};
+    let mut s = Scenario::preset("chaos").unwrap();
+    s.chaos = FaultSchedule {
+        events: vec![FaultEvent {
+            at_wave: 30,
+            kind: FaultKind::ShardCrash { shard: 1, recover_wave: None },
+        }],
+    };
+    s.validate().expect("chaos scenario must validate");
+    let m = s.num_verifiers;
+    let handle = Cluster::builder(s)
+        .policy(Policy::GoodSpeed)
+        .transport(Transport::Channel)
+        .engine(factory())
+        .observability(ObsOptions::default())
+        .start()
+        .expect("start");
+    let hub = handle.observer().expect("hub");
+    // Poll the snapshot until the crash lands: the liveness mask shows
+    // the dead shard and the migration counter moves.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut saw_dead = false;
+    let mut saw_migrations = false;
+    loop {
+        let snap = handle.snapshot();
+        if snap.shard_live.len() == m {
+            saw_dead |= snap.shard_live.iter().any(|live| !live);
+            saw_migrations |= snap.migrations > 0;
+        }
+        if saw_dead && saw_migrations {
+            break;
+        }
+        assert!(Instant::now() < deadline, "crash never surfaced in the snapshot");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let out = handle.wait().expect("run");
+    let pool = out.pool.expect("chaos preset runs on the pool");
+    let events = hub.snapshot_events();
+    let fault_codes: Vec<u64> =
+        events.iter().filter(|e| e.kind == KIND_FAULT).map(|e| e.aux).collect();
+    assert!(fault_codes.contains(&fault_code("shard-crash")), "crash instant");
+    assert_eq!(
+        hub.metrics.faults_total.get(),
+        fault_codes.len() as u64,
+        "fault counter mirrors the instant stream"
+    );
+    assert!(
+        out.recorder.faults.iter().any(|f| f.kind == "shard-crash"),
+        "recorder saw the crash too"
+    );
+    assert!(hub.postmortem_fired(), "a firing fault latches the postmortem");
+    assert_eq!(hub.metrics.migrations_total.get(), pool.migrations);
+    assert!(pool.migrations > 0, "crash must migrate clients");
+    for shard in 0..m {
+        assert!(
+            events.iter().any(|e| e.kind == KIND_WAVE && e.shard == shard as u64),
+            "shard {shard} must have wave spans"
+        );
+    }
+}
+
+/// Single-verifier snapshots surface the degenerate pool-health shape:
+/// one live shard, no migrations, no lost handoffs.
+#[test]
+fn single_verifier_snapshot_reports_one_live_shard() {
+    let mut s = Scenario::preset("smoke").unwrap();
+    s.rounds = 4000; // long enough to observe a mid-run boundary
+    let handle = Cluster::builder(s)
+        .policy(Policy::GoodSpeed)
+        .transport(Transport::Channel)
+        .engine(factory())
+        .start()
+        .expect("start");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let snap = handle.snapshot();
+        if snap.waves > 0 {
+            assert_eq!(snap.shard_live, vec![true]);
+            assert_eq!(snap.migrations, 0);
+            assert_eq!(snap.handoffs_lost, 0);
+            break;
+        }
+        assert!(Instant::now() < deadline, "no wave boundary published");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    handle.stop().expect("stop");
+}
